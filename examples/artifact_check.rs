@@ -1,0 +1,84 @@
+//! Artifact checking tool: execute any HLO-text artifact with raw f32
+//! input files and compare against an expected output — the debugging
+//! harness for the AOT ⇄ PJRT interchange.
+//!
+//! ```bash
+//! cargo run --release --example artifact_check -- \
+//!     --hlo artifacts/conv__stem__winograd.hlo.txt \
+//!     --inputs artifacts/golden_in__stem.bin:4x16x16,artifacts/weights__stem.bin:8x4x3x3 \
+//!     --expect artifacts/golden_out__stem.bin
+//! ```
+
+use dynamap::runtime::{PjrtRuntime, TensorBuf};
+use dynamap::util::cli::Args;
+
+fn read_f32(path: &str) -> Vec<f32> {
+    let bytes = std::fs::read(path).unwrap_or_else(|e| panic!("read {path}: {e}"));
+    bytes
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect()
+}
+
+fn parse_shape(s: &str) -> Vec<usize> {
+    s.split('x').map(|d| d.parse().expect("bad shape")).collect()
+}
+
+fn main() {
+    let args = Args::parse_env(&[]);
+    let hlo = args.get("hlo").expect("--hlo required");
+    let inputs_arg = args.get("inputs").expect("--inputs required (file:shape,file:shape)");
+    let expect_path = args.get("expect");
+
+    let mut inputs = Vec::new();
+    for part in inputs_arg.split(',') {
+        let (file, shape) = part.split_once(':').expect("input format file:AxBxC");
+        let shape = parse_shape(shape);
+        let data = read_f32(file);
+        assert_eq!(
+            data.len(),
+            shape.iter().product::<usize>(),
+            "{file}: {} elements but shape {shape:?}",
+            data.len()
+        );
+        inputs.push(TensorBuf::new(shape, data));
+    }
+
+    let mut rt = PjrtRuntime::cpu().expect("pjrt client");
+    let refs: Vec<&TensorBuf> = inputs.iter().collect();
+    // output shape = expected file length (flat) or explicit --out-shape
+    let expect = expect_path.map(read_f32);
+    let out_len = expect
+        .as_ref()
+        .map(|e| e.len())
+        .or_else(|| args.get("out-len").and_then(|v| v.parse().ok()))
+        .expect("--expect or --out-len required");
+    let out = rt
+        .execute(std::path::Path::new(hlo), &refs, vec![out_len])
+        .expect("execute");
+    match expect {
+        Some(e) => {
+            let max_err = out
+                .data
+                .iter()
+                .zip(&e)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            // locate the first big mismatch for debugging
+            let first = out
+                .data
+                .iter()
+                .zip(&e)
+                .position(|(a, b)| (a - b).abs() > 1e-3);
+            println!("max |Δ| = {max_err:.3e} first mismatch at {first:?}");
+            if let Some(i) = first {
+                let lo = i.saturating_sub(2);
+                println!("  got[{lo}..]    = {:?}", &out.data[lo..(lo + 6).min(out.data.len())]);
+                println!("  expect[{lo}..] = {:?}", &e[lo..(lo + 6).min(e.len())]);
+                std::process::exit(1);
+            }
+            println!("OK");
+        }
+        None => println!("output ({} elems): {:?}…", out.data.len(), &out.data[..out.data.len().min(8)]),
+    }
+}

@@ -1,0 +1,81 @@
+//! END-TO-END VALIDATION DRIVER (EXPERIMENTS.md §E2E).
+//!
+//! Proves all three layers compose: the Rust coordinator loads the
+//! AOT-compiled Pallas/JAX artifacts (`make artifacts`), picks the
+//! per-layer algorithm with the DSE flow, runs real batched inference
+//! requests through PJRT, validates numerics against the Python oracle
+//! golden, and reports latency/throughput for every mapping policy.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_inference
+//! ```
+
+use dynamap::coordinator::{EnginePolicy, InferenceEngine};
+use dynamap::cost::graph_build::Policy;
+use dynamap::runtime::TensorBuf;
+use dynamap::util::rng::Rng;
+use dynamap::util::table::Table;
+
+fn main() {
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let n_requests = 64;
+
+    let mut table = Table::new(
+        "end-to-end inference — mini-inception through PJRT (64 requests)",
+        &["policy", "mapping", "golden max|Δ|", "mean µs", "p95 µs", "req/s"],
+    );
+
+    for (label, policy) in [
+        ("OPT (DYNAMAP)", EnginePolicy::Optimal),
+        ("bl3 im2col", EnginePolicy::Baseline(Policy::Im2colOnly)),
+        ("bl4 kn2row", EnginePolicy::Baseline(Policy::Kn2rowApplied)),
+        ("bl5 winograd", EnginePolicy::Baseline(Policy::WinoApplied)),
+    ] {
+        let mut engine = match InferenceEngine::new(&dir, policy) {
+            Ok(e) => e,
+            Err(e) => {
+                eprintln!("({label}) engine init failed: {e}\nrun `make artifacts` first");
+                std::process::exit(1);
+            }
+        };
+        // 1. numeric validation against the Python-side oracle
+        let max_err = engine.validate_golden().expect("golden validation");
+        assert!(max_err < 1e-3, "{label}: golden mismatch {max_err}");
+
+        // 2. serve a batch of synthetic requests
+        let (c, h1, h2) = engine.manifest.input;
+        let mut rng = Rng::new(2024);
+        let mut stats = dynamap::coordinator::LatencyStats::new();
+        // warm-up
+        let warm = random_input(&mut rng, c, h1, h2);
+        engine.infer(&warm).unwrap();
+        let t0 = std::time::Instant::now();
+        for _ in 0..n_requests {
+            let input = random_input(&mut rng, c, h1, h2);
+            let (_out, m) = engine.infer(&input).expect("inference");
+            stats.push(m.total_us);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+
+        let hist: std::collections::BTreeMap<&str, usize> =
+            engine.algo_map.values().fold(Default::default(), |mut h, a| {
+                *h.entry(a.as_str()).or_insert(0) += 1;
+                h
+            });
+        table.row(vec![
+            label.into(),
+            format!("{hist:?}"),
+            format!("{max_err:.1e}"),
+            format!("{:.0}", stats.mean()),
+            format!("{:.0}", stats.percentile(95.0)),
+            format!("{:.0}", n_requests as f64 / wall),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("all policies validated against the Python oracle ✓");
+}
+
+fn random_input(rng: &mut Rng, c: usize, h1: usize, h2: usize) -> TensorBuf {
+    let data: Vec<f32> = (0..c * h1 * h2).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+    TensorBuf::new(vec![c, h1, h2], data)
+}

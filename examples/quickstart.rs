@@ -1,0 +1,66 @@
+//! Quickstart: run the full DYNAMAP DSE flow on GoogLeNet and print the
+//! chosen architecture + per-layer algorithm mapping.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use dynamap::cost::graph_build::Policy;
+use dynamap::dse::{Dse, DseConfig};
+use dynamap::graph::zoo;
+use dynamap::util::table::Table;
+
+fn main() {
+    // 1. pick a network from the zoo (or load your own — see
+    //    examples/custom_cnn.rs)
+    let cnn = zoo::googlenet();
+    println!("{}\n", cnn.summary());
+
+    // 2. configure the target device (the paper's Alveo U200 setup)
+    let dse = Dse::new(DseConfig::alveo_u200());
+
+    // 3. run the two-step DSE: Algorithm 1 + optimal PBQP mapping
+    let t0 = std::time::Instant::now();
+    let plan = dse.run(&cnn).expect("DSE failed");
+    println!(
+        "DSE finished in {:.2?}: P_SA = {}×{}, end-to-end latency {:.3} ms, {:.0} GOP/s",
+        t0.elapsed(),
+        plan.p1,
+        plan.p2,
+        plan.total_latency_ms,
+        plan.throughput_gops
+    );
+    println!("algorithm histogram: {:?}\n", plan.algo_histogram());
+
+    // 4. compare against the single-algorithm baselines of §6.1.2
+    let mut t = Table::new("OPT vs baselines", &["mapping", "latency ms", "×"]);
+    t.row(vec!["OPT".into(), format!("{:.3}", plan.total_latency_ms), "1.00".into()]);
+    for (label, p) in [
+        ("bl3 im2col-only", Policy::Im2colOnly),
+        ("bl4 kn2row-applied", Policy::Kn2rowApplied),
+        ("bl5 wino-applied", Policy::WinoApplied),
+    ] {
+        let bl = dse.run_policy(&cnn, p).unwrap();
+        t.row(vec![
+            label.into(),
+            format!("{:.3}", bl.total_latency_ms),
+            format!("{:.2}", bl.total_latency_ms / plan.total_latency_ms),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // 5. the first few per-layer decisions
+    let mut t = Table::new(
+        "per-layer mapping (first 12 layers)",
+        &["layer", "algo", "dataflow", "μ"],
+    );
+    for l in plan.mapping.layers.iter().take(12) {
+        t.row(vec![
+            l.name.clone(),
+            l.cost.algo.name(),
+            l.cost.dataflow.name().into(),
+            format!("{:.3}", l.cost.utilization),
+        ]);
+    }
+    println!("{}", t.render());
+}

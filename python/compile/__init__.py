@@ -1,0 +1,1 @@
+"""DYNAMAP build-time compile package (never imported at runtime)."""

@@ -1,0 +1,198 @@
+"""AOT pipeline: lower every (layer, algorithm) pair of MiniInception to
+HLO *text* and emit the artifact manifest the Rust runtime consumes.
+
+HLO text — NOT ``lowered.compiler_ir("hlo")`` protos or
+``.serialize()`` — is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs under ``--out`` (default ``../artifacts``):
+
+* ``conv__<name>__<algo>.hlo.txt`` — one executable per pair; the
+  computation is ``relu(conv(x, w))`` with fixed shapes, lowered with
+  ``return_tuple=True`` (unwrap with ``to_tuple1`` on the Rust side).
+* ``weights__<name>.bin`` — float32 little-endian weight payloads.
+* ``golden_input.bin`` / ``golden_output.bin`` — a seeded input and the
+  oracle (lax.conv) forward output for end-to-end validation.
+* ``manifest.json`` — layer meta data, artifact paths, golden shapes.
+
+Python runs ONCE at build time (`make artifacts`); the Rust binary is
+self-contained afterwards.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe path).
+
+    ``print_large_constants=True`` is ESSENTIAL: the default printer
+    elides big dense literals as ``constant({...})`` and the 0.5.1 text
+    parser silently materializes those as zeros — every kernel that
+    bakes a constant table (Winograd's B/G/A matrices, closed-over
+    weights) would produce wrong numbers at runtime.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    text = comp.as_hlo_text(print_large_constants=True)
+    assert "constant({...})" not in text, "elided constants survived"
+    return text
+
+
+def safe(name: str) -> str:
+    return name.replace("/", "_")
+
+
+def lower_layer(name: str, algo: str) -> str:
+    """Lower relu(conv(x, w)) for one (layer, algo) pair to HLO text."""
+    _, c_in, c_out, (h1, h2), k, s, p = model.layer_meta(name)
+
+    def fn(x, w):
+        out = model.conv_layer(x, w, algo, s, p)
+        return (jnp.maximum(out, 0.0),)
+
+    x_spec = jax.ShapeDtypeStruct((c_in, h1, h2), jnp.float32)
+    w_spec = jax.ShapeDtypeStruct((c_out, c_in, k[0], k[1]), jnp.float32)
+    lowered = jax.jit(fn).lower(x_spec, w_spec)
+    return to_hlo_text(lowered)
+
+
+def lower_fused(algo_map) -> str:
+    """Whole-network fused artifact (one executable, XLA fuses across
+    layers) — the L2-optimization comparison point for the engine's
+    per-layer chaining."""
+    weights = model.init_weights()
+
+    def fn(x):
+        return (model.forward(x, weights, algo_map),)
+
+    x_spec = jax.ShapeDtypeStruct(model.MINI_INPUT, jnp.float32)
+    lowered = jax.jit(fn).lower(x_spec)
+    return to_hlo_text(lowered)
+
+
+def golden_pair(weights, seed=42):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(model.MINI_INPUT).astype(np.float32)
+    y = np.asarray(model.forward_ref(jnp.asarray(x), weights))
+    return x, y
+
+
+def golden_layers(weights, seed=42):
+    """Per-layer (input, expected-output) pairs along the oracle forward
+    pass — lets the Rust runtime validate every (layer, algo) artifact
+    in isolation."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(model.MINI_INPUT).astype(np.float32))
+
+    def conv(name, inp):
+        _, _, _, _, _k, s, p = model.layer_meta(name)
+        out = ref.conv2d(inp, jnp.asarray(weights[name]), s, p)
+        return jnp.maximum(out, 0.0)
+
+    ios = {}
+    stem = conv("stem", x)
+    ios["stem"] = (x, stem)
+    b1 = conv("inc/b1_1x1", stem)
+    ios["inc/b1_1x1"] = (stem, b1)
+    b2r = conv("inc/b2_reduce", stem)
+    ios["inc/b2_reduce"] = (stem, b2r)
+    b2 = conv("inc/b2_3x3", b2r)
+    ios["inc/b2_3x3"] = (b2r, b2)
+    b3r = conv("inc/b3_reduce", stem)
+    ios["inc/b3_reduce"] = (stem, b3r)
+    b3 = conv("inc/b3_5x5", b3r)
+    ios["inc/b3_5x5"] = (b3r, b3)
+    cat = jnp.concatenate([b1, b2, b3], axis=0)
+    pool = ref.maxpool2d(cat, 2, 2, 0)
+    head = conv("head", pool)
+    ios["head"] = (pool, head)
+    return {k: (np.asarray(i), np.asarray(o)) for k, (i, o) in ios.items()}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--skip-fused", action="store_true", help="skip the fused whole-net artifact")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    weights = model.init_weights()
+    layers = []
+    for name, c_in, c_out, (h1, h2), (k1, k2), s, (p1, p2) in model.MINI_LAYERS:
+        o1, o2 = ref.out_dims(h1, h2, k1, k2, s, (p1, p2))
+        algo_files = {}
+        for algo in model.algos_for(name):
+            fname = f"conv__{safe(name)}__{algo}.hlo.txt"
+            text = lower_layer(name, algo)
+            with open(os.path.join(args.out, fname), "w") as f:
+                f.write(text)
+            algo_files[algo] = fname
+            print(f"  lowered {name} [{algo}] -> {fname} ({len(text)} chars)")
+        wfile = f"weights__{safe(name)}.bin"
+        weights[name].tofile(os.path.join(args.out, wfile))
+        layers.append(
+            {
+                "name": name,
+                "c_in": c_in,
+                "c_out": c_out,
+                "h1": h1,
+                "h2": h2,
+                "k1": k1,
+                "k2": k2,
+                "s": s,
+                "p1": p1,
+                "p2": p2,
+                "o1": o1,
+                "o2": o2,
+                "algos": algo_files,
+                "weights": wfile,
+                "weight_count": int(weights[name].size),
+            }
+        )
+
+    x, y = golden_pair(weights)
+    x.tofile(os.path.join(args.out, "golden_input.bin"))
+    y.tofile(os.path.join(args.out, "golden_output.bin"))
+
+    for name, (gi, go) in golden_layers(weights).items():
+        gi.tofile(os.path.join(args.out, f"golden_in__{safe(name)}.bin"))
+        go.tofile(os.path.join(args.out, f"golden_out__{safe(name)}.bin"))
+
+    manifest = {
+        "model": "mini-inception",
+        "input": {"c": model.MINI_INPUT[0], "h1": model.MINI_INPUT[1], "h2": model.MINI_INPUT[2]},
+        "golden_input": "golden_input.bin",
+        "golden_output": "golden_output.bin",
+        "golden_output_shape": list(y.shape),
+        "layers": layers,
+    }
+
+    if not args.skip_fused:
+        fused = lower_fused({})
+        with open(os.path.join(args.out, "fused__im2col.hlo.txt"), "w") as f:
+            f.write(fused)
+        manifest["fused"] = "fused__im2col.hlo.txt"
+        print(f"  lowered fused network ({len(fused)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(layers)} layers to {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

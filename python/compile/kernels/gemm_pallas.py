@@ -1,0 +1,69 @@
+"""L1 — tiled GEMM Pallas kernel.
+
+The BlockSpec tiling mirrors the overlay's ``P_SA1 × P_SA2`` systolic
+blocking: the output is computed in ``(bm × bn)`` tiles while the
+contraction dimension streams through in ``bk`` chunks — the same
+HBM↔VMEM schedule the FPGA overlay expresses with its Input/Kernel
+buffer banks (DESIGN.md §Hardware-Adaptation). On a real TPU the
+``(bm, bn)`` tile feeds the MXU systolic array exactly like the paper's
+PE grid; here we run ``interpret=True`` so the kernel lowers to plain
+HLO the CPU PJRT client can execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """One (bm, bn) output tile; grid axis 2 streams the k dimension."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def matmul(x, y, bm=32, bk=32, bn=32):
+    """``x (m × k) @ y (k × n)`` via the Pallas tiled kernel.
+
+    Tile sizes default to MXU-friendly 32; shapes need not divide the
+    tiles (Pallas masks the fringe).
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"matmul dims {x.shape} @ {y.shape}"
+    bm = min(bm, m)
+    bk = min(bk, k)
+    bn = min(bn, n)
+    # pad every dim to a tile multiple: interpret-mode Pallas fills
+    # out-of-bounds block reads with NaN (deliberately, to surface OOB
+    # bugs), so fringe blocks must not exist. This is also what the
+    # overlay does in hardware — zero-padding the last tile (the PE
+    # utilization loss Eq. 14 measures).
+    mp = pl.cdiv(m, bm) * bm
+    kp = pl.cdiv(k, bk) * bk
+    np_ = pl.cdiv(n, bn) * bn
+    if (mp, kp) != (m, k):
+        x = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    if (kp, np_) != (k, n):
+        y = jnp.pad(y, ((0, kp - k), (0, np_ - n)))
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, y)
+    return out[:m, :n]

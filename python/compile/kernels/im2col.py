@@ -1,0 +1,35 @@
+"""im2col convolution (paper §2.1.1) on the Pallas GEMM kernel.
+
+The Toeplitz matrix is materialized with strided slices (the jnp
+analogue of the DLT module's Table-1 row-1 walk) and fed to the tiled
+GEMM — Eq. 2: ``z = W (C_out × K1K2C_in) · X (K1K2C_in × O1O2)``.
+"""
+
+import jax.numpy as jnp
+
+from . import gemm_pallas, ref
+
+
+def toeplitz(x, k1, k2, stride=1, pad=(0, 0)):
+    """(C_in·K1·K2, O1·O2) Toeplitz matrix, row = (ci·K1+ky)·K2+kx."""
+    c_in, h1, h2 = x.shape
+    o1, o2 = ref.out_dims(h1, h2, k1, k2, stride, pad)
+    xp = jnp.pad(x, ((0, 0), (pad[0], pad[0]), (pad[1], pad[1])))
+    rows = []
+    for ci in range(c_in):
+        for ky in range(k1):
+            for kx in range(k2):
+                window = xp[ci, ky : ky + o1 * stride : stride, kx : kx + o2 * stride : stride]
+                rows.append(window.reshape(-1))
+    return jnp.stack(rows)
+
+
+def conv2d(x, w, stride=1, pad=(0, 0)):
+    """im2col convolution; same contract as :func:`ref.conv2d`."""
+    c_out, c_in, k1, k2 = w.shape
+    _, h1, h2 = x.shape
+    o1, o2 = ref.out_dims(h1, h2, k1, k2, stride, pad)
+    xm = toeplitz(x, k1, k2, stride, pad)  # (C_in·K1K2, O1O2)
+    wm = w.reshape(c_out, c_in * k1 * k2)  # matching row order
+    z = gemm_pallas.matmul(wm, xm)  # (C_out, O1O2)
+    return z.reshape(c_out, o1, o2)

@@ -1,0 +1,32 @@
+"""kn2row convolution (paper §2.1.2) on the Pallas GEMM kernel.
+
+Phase 1 — "unit-CONV GEMM": ``K1·K2`` calls of
+``W_tap (C_out × C_in) · X (C_in × H1H2)`` (Eq. 3), no input
+duplication. Phase 2 — "Pad-and-Accumulate": each intermediate patch is
+shifted by its kernel-tap offset, zero-padded on the non-overlap and
+Hadamard-added (Eq. 4); stride handled by the strided gather.
+"""
+
+import jax.numpy as jnp
+
+from . import gemm_pallas, ref
+
+
+def conv2d(x, w, stride=1, pad=(0, 0)):
+    """kn2row convolution; same contract as :func:`ref.conv2d`."""
+    c_out, c_in, k1, k2 = w.shape
+    _, h1, h2 = x.shape
+    o1, o2 = ref.out_dims(h1, h2, k1, k2, stride, pad)
+    xm = x.reshape(c_in, h1 * h2)  # 3D-tensor layout — no duplication
+    acc = jnp.zeros((c_out, o1, o2), x.dtype)
+    for ky in range(k1):
+        for kx in range(k2):
+            patch = gemm_pallas.matmul(w[:, :, ky, kx], xm)  # (C_out, H1H2)
+            patch = patch.reshape(c_out, h1, h2)
+            # pad-and-accumulate: output (oy, ox) takes patch value at
+            # (oy·s + ky − p1, ox·s + kx − p2) — realized as a padded
+            # strided slice (out-of-range ⇒ the zero padding)
+            pp = jnp.pad(patch, ((0, 0), (pad[0], pad[0]), (pad[1], pad[1])))
+            shifted = pp[:, ky : ky + o1 * stride : stride, kx : kx + o2 * stride : stride]
+            acc = acc + shifted
+    return acc

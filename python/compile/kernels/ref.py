@@ -1,0 +1,71 @@
+"""Reference convolution oracle.
+
+Two independent references:
+
+* :func:`conv2d` — XLA's ``lax.conv_general_dilated``, the production
+  oracle every kernel is validated against.
+* :func:`conv2d_loops` — a hand-written jnp sliding-window sum used to
+  sanity-check the oracle itself on tiny shapes (the two references are
+  independent code paths).
+
+Tensors are CHW (no batch dim — the paper targets single-image,
+no-batch inference); weights are ``(C_out, C_in, K1, K2)``.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def conv2d(x, w, stride=1, pad=(0, 0)):
+    """Spatial convolution (Eq. 1 of the paper).
+
+    x: (C_in, H1, H2), w: (C_out, C_in, K1, K2) -> (C_out, O1, O2).
+    ``pad`` is symmetric (p1, p2).
+    """
+    x4 = x[None]  # NCHW
+    out = lax.conv_general_dilated(
+        x4,
+        w,
+        window_strides=(stride, stride),
+        padding=((pad[0], pad[0]), (pad[1], pad[1])),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return out[0]
+
+
+def conv2d_loops(x, w, stride=1, pad=(0, 0)):
+    """Independent sliding-window reference (small shapes only)."""
+    c_in, h1, h2 = x.shape
+    c_out, _, k1, k2 = w.shape
+    o1 = (h1 + 2 * pad[0] - k1) // stride + 1
+    o2 = (h2 + 2 * pad[1] - k2) // stride + 1
+    xp = jnp.pad(x, ((0, 0), (pad[0], pad[0]), (pad[1], pad[1])))
+    out = jnp.zeros((c_out, o1, o2), x.dtype)
+    for ky in range(k1):
+        for kx in range(k2):
+            window = xp[:, ky : ky + o1 * stride : stride, kx : kx + o2 * stride : stride]
+            # (C_out, C_in) x (C_in, O1, O2) summed over C_in
+            out = out + jnp.einsum("oc,chw->ohw", w[:, :, ky, kx], window)
+    return out
+
+
+def out_dims(h1, h2, k1, k2, stride, pad):
+    """(O1, O2) for the given layer meta data."""
+    return (
+        (h1 + 2 * pad[0] - k1) // stride + 1,
+        (h2 + 2 * pad[1] - k2) // stride + 1,
+    )
+
+
+def maxpool2d(x, k, stride, pad=0):
+    """MaxPool reference used by the model graph (C, H, W)."""
+    neg = jnp.finfo(x.dtype).min
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad)), constant_values=neg)
+    c, h, w = xp.shape
+    o1 = (h - k) // stride + 1
+    o2 = (w - k) // stride + 1
+    out = jnp.full((c, o1, o2), neg, x.dtype)
+    for ky in range(k):
+        for kx in range(k):
+            out = jnp.maximum(out, xp[:, ky : ky + o1 * stride : stride, kx : kx + o2 * stride : stride])
+    return out

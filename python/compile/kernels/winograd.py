@@ -1,0 +1,99 @@
+"""Winograd F(2×2, 3×3) convolution (paper §2.1.3) on the Pallas GEMM.
+
+Equation-6 form: input tiles and kernels are transformed
+(``V = BᵀdB``, ``U = GgGᵀ``), the Hadamard products become
+``(m+r−1)² = 16`` independent ``(tiles × C_in) · (C_in × C_out)``
+GEMMs — each dispatched to the Pallas tiled kernel — and the inverse
+transform ``Y = AᵀMA`` restores the spatial tiles. 3×3 kernels,
+stride 1, any symmetric padding; output dims need not be tile-aligned.
+"""
+
+import jax.numpy as jnp
+
+from . import gemm_pallas, ref
+
+BT = jnp.array(
+    [
+        [1.0, 0.0, -1.0, 0.0],
+        [0.0, 1.0, 1.0, 0.0],
+        [0.0, -1.0, 1.0, 0.0],
+        [0.0, 1.0, 0.0, -1.0],
+    ]
+)
+G = jnp.array(
+    [
+        [1.0, 0.0, 0.0],
+        [0.5, 0.5, 0.5],
+        [0.5, -0.5, 0.5],
+        [0.0, 0.0, 1.0],
+    ]
+)
+AT = jnp.array(
+    [
+        [1.0, 1.0, 1.0, 0.0],
+        [0.0, 1.0, -1.0, -1.0],
+    ]
+)
+
+M = 2
+R = 3
+A = M + R - 1  # 4
+
+
+def conv2d(x, w, stride=1, pad=(1, 1)):
+    """Winograd convolution; same contract as :func:`ref.conv2d`."""
+    assert stride == 1, "winograd kernel is stride-1"
+    c_out, c_in, k1, k2 = w.shape
+    assert k1 == 3 and k2 == 3, "the AOT'd Pallas path implements F(2,3)"
+    _, h1, h2 = x.shape
+    o1, o2 = ref.out_dims(h1, h2, 3, 3, 1, pad)
+    t1 = -(-o1 // M)
+    t2 = -(-o2 // M)
+
+    # gather overlapping 4×4 input tiles: (C_in, T1, T2, 4, 4)
+    need_h = (t1 - 1) * M + A
+    need_w = (t2 - 1) * M + A
+    xp = jnp.pad(
+        x,
+        (
+            (0, 0),
+            (pad[0], max(0, need_h - h1 - pad[0])),
+            (pad[1], max(0, need_w - h2 - pad[1])),
+        ),
+    )
+    tiles = jnp.stack(
+        [
+            jnp.stack(
+                [
+                    xp[:, ty * M : ty * M + A, tx * M : tx * M + A]
+                    for tx in range(t2)
+                ],
+                axis=1,
+            )
+            for ty in range(t1)
+        ],
+        axis=1,
+    )  # (C_in, T1, T2, 4, 4)
+
+    # V = Bᵀ d B for every tile: (C_in, T1, T2, 4, 4)
+    v = jnp.einsum("ab,ctubd,ed->ctuae", BT, tiles, BT)
+    # U = G g Gᵀ: (C_out, C_in, 4, 4)
+    u = jnp.einsum("ab,oibd,ed->oiae", G, w, G)
+
+    # 16 independent GEMMs (Eq. 6): for each point (ξ, ν):
+    #   M[:, :] = V_point (T1T2 × C_in) @ U_point (C_in × C_out)
+    nt = t1 * t2
+    m_pts = []
+    for py in range(A):
+        for px in range(A):
+            v_p = v[:, :, :, py, px].reshape(c_in, nt).T  # (tiles, C_in)
+            u_p = u[:, :, py, px].T  # (C_in, C_out)
+            m_pts.append(gemm_pallas.matmul(v_p, u_p))  # (tiles, C_out)
+    m_all = jnp.stack(m_pts).reshape(A, A, nt, c_out)
+
+    # inverse transform Y = Aᵀ M A: (tiles, C_out, 2, 2)
+    y = jnp.einsum("ab,bdtc,ed->tcae", AT, m_all, AT)
+    y = y.reshape(t1, t2, c_out, M, M)
+    # concatenate tiles → (C_out, T1·2, T2·2), crop to (O1, O2)
+    y = jnp.transpose(y, (2, 0, 3, 1, 4)).reshape(c_out, t1 * M, t2 * M)
+    return y[:, :o1, :o2]

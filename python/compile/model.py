@@ -1,0 +1,111 @@
+"""L2 — the MiniInception model: the paper's per-layer dynamic
+algorithm mapping embodied as a JAX forward graph whose every conv
+layer dispatches to one of the three L1 Pallas kernel families.
+
+Layer names and shapes MUST stay in sync with the Rust model zoo
+(``rust/src/graph/zoo/mini.rs``) — the AOT artifact manifest is keyed
+by these names and the Rust coordinator chains the per-layer
+executables according to its PBQP mapping.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from .kernels import im2col, kn2row, ref, winograd
+
+MINI_INPUT = (4, 16, 16)  # (C, H, W)
+
+# name, c_in, c_out, (h1, h2), (k1, k2), stride, (p1, p2)
+MINI_LAYERS = [
+    ("stem", 4, 8, (16, 16), (3, 3), 1, (1, 1)),
+    ("inc/b1_1x1", 8, 8, (16, 16), (1, 1), 1, (0, 0)),
+    ("inc/b2_reduce", 8, 4, (16, 16), (1, 1), 1, (0, 0)),
+    ("inc/b2_3x3", 4, 8, (16, 16), (3, 3), 1, (1, 1)),
+    ("inc/b3_reduce", 8, 4, (16, 16), (1, 1), 1, (0, 0)),
+    ("inc/b3_5x5", 4, 8, (16, 16), (5, 5), 1, (2, 2)),
+    ("head", 24, 16, (8, 8), (1, 1), 1, (0, 0)),
+]
+
+ALGOS = ("im2col", "kn2row", "winograd")
+
+
+def layer_meta(name):
+    for row in MINI_LAYERS:
+        if row[0] == name:
+            return row
+    raise KeyError(name)
+
+
+def algos_for(name):
+    """Algorithm families AOT-compiled for a layer: the Pallas Winograd
+    path implements F(2,3) for 3×3 stride-1 kernels (the Rust cost model
+    additionally decomposes 5×5 — that path is exercised in Rust tests;
+    artifacts stick to the kernels implemented at L1)."""
+    _, _, _, _, (k1, k2), s, _ = (None, *layer_meta(name)[1:])
+    if k1 == 3 and k2 == 3 and s == 1:
+        return ("im2col", "kn2row", "winograd")
+    return ("im2col", "kn2row")
+
+
+def conv_layer(x, w, algo, stride, pad):
+    """Dispatch one conv layer to the chosen L1 kernel family."""
+    if algo == "im2col":
+        return im2col.conv2d(x, w, stride, pad)
+    if algo == "kn2row":
+        return kn2row.conv2d(x, w, stride, pad)
+    if algo == "winograd":
+        return winograd.conv2d(x, w, stride, pad)
+    raise ValueError(f"unknown algo {algo}")
+
+
+def init_weights(seed=1234):
+    """Deterministic He-style weights for every layer (numpy, so the
+    bytes written to the artifact dir are reproducible)."""
+    rng = np.random.default_rng(seed)
+    weights = {}
+    for name, c_in, c_out, _hw, (k1, k2), _s, _p in MINI_LAYERS:
+        fan_in = c_in * k1 * k2
+        weights[name] = (
+            rng.standard_normal((c_out, c_in, k1, k2)) / np.sqrt(fan_in)
+        ).astype(np.float32)
+    return weights
+
+
+def forward(x, weights, algo_map=None, relu=True):
+    """Full MiniInception forward pass.
+
+    ``algo_map`` maps layer name → algorithm ("im2col" default). The
+    graph mirrors ``zoo::mini_inception``: stem → 3 branches → concat →
+    2×2 maxpool → head.
+    """
+    algo_map = algo_map or {}
+
+    def conv(name, inp):
+        _, _, _, _, k, s, p = layer_meta(name)
+        out = conv_layer(inp, jnp.asarray(weights[name]), algo_map.get(name, "im2col"), s, p)
+        return jnp.maximum(out, 0.0) if relu else out
+
+    stem = conv("stem", x)
+    b1 = conv("inc/b1_1x1", stem)
+    b2 = conv("inc/b2_3x3", conv("inc/b2_reduce", stem))
+    b3 = conv("inc/b3_5x5", conv("inc/b3_reduce", stem))
+    cat = jnp.concatenate([b1, b2, b3], axis=0)  # (24, 16, 16)
+    pool = ref.maxpool2d(cat, 2, 2, 0)  # (24, 8, 8)
+    return conv("head", pool)
+
+
+def forward_ref(x, weights, relu=True):
+    """Oracle forward pass through lax.conv only (no Pallas)."""
+
+    def conv(name, inp):
+        _, _, _, _, _k, s, p = layer_meta(name)
+        out = ref.conv2d(inp, jnp.asarray(weights[name]), s, p)
+        return jnp.maximum(out, 0.0) if relu else out
+
+    stem = conv("stem", x)
+    b1 = conv("inc/b1_1x1", stem)
+    b2 = conv("inc/b2_3x3", conv("inc/b2_reduce", stem))
+    b3 = conv("inc/b3_5x5", conv("inc/b3_reduce", stem))
+    cat = jnp.concatenate([b1, b2, b3], axis=0)
+    pool = ref.maxpool2d(cat, 2, 2, 0)
+    return conv("head", pool)

@@ -1,0 +1,65 @@
+"""AOT pipeline tests: HLO-text lowering, manifest integrity, golden
+reproducibility."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+
+from compile import aot, model
+
+
+def test_lower_layer_produces_hlo_text():
+    text = aot.lower_layer("inc/b2_reduce", "im2col")
+    assert "HloModule" in text
+    assert "f32[4,16,16]" in text  # input shape baked in
+
+
+def test_lower_all_pairs_smoke():
+    for name, *_ in model.MINI_LAYERS:
+        for algo in model.algos_for(name):
+            text = aot.lower_layer(name, algo)
+            assert "HloModule" in text, f"{name}/{algo}"
+            # return_tuple=True → tuple-rooted computation
+            assert "ROOT" in text
+
+
+def test_golden_deterministic():
+    w = model.init_weights()
+    x1, y1 = aot.golden_pair(w)
+    x2, y2 = aot.golden_pair(w)
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+    assert x1.shape == model.MINI_INPUT
+    assert y1.shape == (16, 8, 8)
+
+
+def test_manifest_matches_build(tmp_path=None):
+    # the repo-level artifacts dir is produced by `make artifacts`; if
+    # present, validate its manifest against the model table.
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    man_path = os.path.join(art, "manifest.json")
+    if not os.path.exists(man_path):
+        import pytest
+
+        pytest.skip("artifacts not built")
+    man = json.load(open(man_path))
+    assert man["model"] == "mini-inception"
+    assert len(man["layers"]) == len(model.MINI_LAYERS)
+    for layer in man["layers"]:
+        meta = model.layer_meta(layer["name"])
+        assert layer["c_in"] == meta[1]
+        assert layer["c_out"] == meta[2]
+        for algo, fname in layer["algos"].items():
+            path = os.path.join(art, fname)
+            assert os.path.exists(path), f"missing artifact {fname}"
+            assert "HloModule" in open(path).read(200)
+        wpath = os.path.join(art, layer["weights"])
+        w = np.fromfile(wpath, dtype=np.float32)
+        assert w.size == layer["weight_count"]
+
+
+def test_safe_name():
+    assert aot.safe("inc/b2_3x3") == "inc_b2_3x3"

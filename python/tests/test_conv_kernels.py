@@ -1,0 +1,79 @@
+"""L1 conv kernels (im2col / kn2row / winograd) vs the lax.conv oracle
+— hypothesis sweeps layer shapes; plus the oracle self-check."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import im2col, kn2row, ref, winograd
+
+
+def rand_case(seed, c_in, c_out, h, k1, k2):
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (c_in, h, h), jnp.float32)
+    w = jax.random.normal(kw, (c_out, c_in, k1, k2), jnp.float32)
+    return x, w
+
+
+channels = st.integers(min_value=1, max_value=5)
+heights = st.integers(min_value=7, max_value=14)
+kernels = st.sampled_from([(1, 1), (3, 3), (5, 5), (1, 7), (7, 1), (1, 3), (3, 1)])
+strides = st.integers(min_value=1, max_value=2)
+same_pad = st.booleans()
+
+
+@settings(max_examples=25, deadline=None)
+@given(ci=channels, co=channels, h=heights, k=kernels, s=strides, sp=same_pad)
+def test_im2col_matches_ref(ci, co, h, k, s, sp):
+    k1, k2 = k
+    pad = (k1 // 2, k2 // 2) if sp else (0, 0)
+    x, w = rand_case(ci * 100 + co * 10 + h, ci, co, max(h, k1, k2), k1, k2)
+    got = im2col.conv2d(x, w, s, pad)
+    want = ref.conv2d(x, w, s, pad)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(ci=channels, co=channels, h=heights, k=kernels, s=strides, sp=same_pad)
+def test_kn2row_matches_ref(ci, co, h, k, s, sp):
+    k1, k2 = k
+    pad = (k1 // 2, k2 // 2) if sp else (0, 0)
+    x, w = rand_case(ci * 99 + co * 9 + h, ci, co, max(h, k1, k2), k1, k2)
+    got = kn2row.conv2d(x, w, s, pad)
+    want = ref.conv2d(x, w, s, pad)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(ci=channels, co=channels, h=heights, sp=same_pad)
+def test_winograd_matches_ref(ci, co, h, sp):
+    pad = (1, 1) if sp else (0, 0)
+    x, w = rand_case(ci * 77 + co * 7 + h, ci, co, h, 3, 3)
+    got = winograd.conv2d(x, w, 1, pad)
+    want = ref.conv2d(x, w, 1, pad)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(ci=channels, co=channels, h=st.integers(min_value=5, max_value=9))
+def test_oracle_self_check(ci, co, h):
+    # lax.conv vs the independent loop reference
+    x, w = rand_case(h * 31 + ci, ci, co, h, 3, 3)
+    a = ref.conv2d(x, w, 1, (1, 1))
+    b = ref.conv2d_loops(x, w, 1, (1, 1))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_toeplitz_shape_and_duplication():
+    x = jnp.arange(2 * 5 * 5, dtype=jnp.float32).reshape(2, 5, 5)
+    t = im2col.toeplitz(x, 3, 3, 1, (1, 1))
+    assert t.shape == (2 * 9, 25)
+    # center row of the toeplitz equals the flat input (identity tap)
+    np.testing.assert_allclose(t[4], x[0].reshape(-1))
+
+
+def test_maxpool_reference():
+    x = jnp.arange(16, dtype=jnp.float32).reshape(1, 4, 4)
+    out = ref.maxpool2d(x, 2, 2)
+    np.testing.assert_allclose(out[0], jnp.array([[5.0, 7.0], [13.0, 15.0]]))

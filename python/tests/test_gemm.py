@@ -1,0 +1,59 @@
+"""L1 Pallas GEMM kernel vs jnp reference — hypothesis sweeps shapes,
+dtypes and tile sizes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gemm_pallas
+
+dims = st.integers(min_value=1, max_value=65)
+tile = st.sampled_from([4, 8, 16, 32])
+
+
+@settings(max_examples=30, deadline=None)
+@given(m=dims, k=dims, n=dims, bm=tile, bk=tile, bn=tile)
+def test_matmul_matches_jnp(m, k, n, bm, bk, bn):
+    kx, ky = jax.random.split(jax.random.PRNGKey(m * 1000 + k * 10 + n))
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    y = jax.random.normal(ky, (k, n), jnp.float32)
+    got = gemm_pallas.matmul(x, y, bm=bm, bk=bk, bn=bn)
+    want = x @ y
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=dims, k=dims, n=dims)
+def test_matmul_f64_via_f32_cast(m, k, n):
+    # the kernel is dtype-generic; exercise another dtype path (bf16)
+    kx, ky = jax.random.split(jax.random.PRNGKey(m + k + n))
+    x = jax.random.normal(kx, (m, k), jnp.float32).astype(jnp.bfloat16)
+    y = jax.random.normal(ky, (k, n), jnp.float32).astype(jnp.bfloat16)
+    got = gemm_pallas.matmul(x, y)
+    want = (x @ y).astype(jnp.float32)
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want, rtol=0.1, atol=0.25
+    )
+
+
+def test_identity():
+    x = jnp.eye(8, dtype=jnp.float32)
+    y = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
+    np.testing.assert_allclose(gemm_pallas.matmul(x, y), y)
+
+
+def test_non_divisible_fringe():
+    # 33×17 @ 17×9 with 8-tiles: every dimension has a fringe block
+    x = jnp.arange(33 * 17, dtype=jnp.float32).reshape(33, 17) / 100.0
+    y = jnp.arange(17 * 9, dtype=jnp.float32).reshape(17, 9) / 100.0
+    got = gemm_pallas.matmul(x, y, bm=8, bk=8, bn=8)
+    np.testing.assert_allclose(got, x @ y, rtol=1e-4, atol=1e-4)
+
+
+def test_dim_mismatch_raises():
+    x = jnp.zeros((4, 5))
+    y = jnp.zeros((6, 4))
+    with pytest.raises(AssertionError):
+        gemm_pallas.matmul(x, y)

@@ -1,0 +1,96 @@
+"""L2 model tests: shapes, algorithm-map equivalence (the functional
+core of dynamic algorithm mapping: ANY per-layer algorithm assignment
+must produce the same network output), and oracle agreement."""
+
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+
+def _input(seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(model.MINI_INPUT).astype(np.float32))
+
+
+def test_forward_shape():
+    w = model.init_weights()
+    y = model.forward(_input(), w)
+    assert y.shape == (16, 8, 8)
+
+
+def test_forward_matches_oracle():
+    w = model.init_weights()
+    x = _input(1)
+    got = model.forward(x, w)
+    want = model.forward_ref(x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+algo_choice = st.sampled_from(["im2col", "kn2row", "winograd"])
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    stem=algo_choice,
+    b2=algo_choice,
+    b1=st.sampled_from(["im2col", "kn2row"]),
+    b3=st.sampled_from(["im2col", "kn2row"]),
+)
+def test_any_algorithm_mapping_is_equivalent(stem, b2, b1, b3):
+    """The paper's premise: algorithm choice changes cost, not values."""
+    w = model.init_weights()
+    x = _input(2)
+    amap = {
+        "stem": stem,
+        "inc/b2_3x3": b2,
+        "inc/b1_1x1": b1,
+        "inc/b3_5x5": b3,
+    }
+    got = model.forward(x, w, amap)
+    want = model.forward_ref(x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_layer_meta_consistency():
+    # channel flow: concat inputs sum to head c_in
+    cat = sum(
+        model.layer_meta(n)[2]
+        for n in ("inc/b1_1x1", "inc/b2_3x3", "inc/b3_5x5")
+    )
+    assert cat == model.layer_meta("head")[1] == 24
+
+
+def test_algos_for_rules():
+    assert model.algos_for("stem") == ("im2col", "kn2row", "winograd")
+    assert model.algos_for("inc/b3_5x5") == ("im2col", "kn2row")
+    assert model.algos_for("head") == ("im2col", "kn2row")
+
+
+def test_weights_deterministic():
+    a = model.init_weights()
+    b = model.init_weights()
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+
+
+def test_unknown_algo_raises():
+    w = model.init_weights()
+    with pytest.raises(ValueError):
+        model.conv_layer(_input(), jnp.asarray(w["stem"]), "fft", 1, (1, 1))
+
+
+def test_all_single_algo_maps_agree():
+    """im2col-only vs kn2row-only vs mixed on every conv layer."""
+    w = model.init_weights()
+    x = _input(3)
+    outs = []
+    for algo in ("im2col", "kn2row"):
+        amap = {name: algo for name, *_ in model.MINI_LAYERS}
+        outs.append(model.forward(x, w, amap))
+    for a, b in itertools.combinations(outs, 2):
+        np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-3)

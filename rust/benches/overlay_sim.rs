@@ -1,0 +1,58 @@
+//! `cargo bench` target for the overlay simulator hot paths: systolic
+//! GEMM (per dataflow), DLT transforms, pad-accumulate, pooling — the
+//! L3 profiling input data for the performance pass.
+
+use dynamap::algos::tensor::{Mat, Tensor, Weights};
+use dynamap::bench::harness::Bencher;
+use dynamap::cost::gemm::Dataflow;
+use dynamap::graph::layer::{ConvSpec, PoolKind, PoolSpec};
+use dynamap::overlay::dlt::Ltu;
+use dynamap::overlay::pooling;
+use dynamap::overlay::systolic::SystolicSim;
+use dynamap::overlay::layer_sim::simulate_layer;
+use dynamap::cost::conv::Algo;
+use dynamap::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut rng = Rng::new(99);
+
+    // systolic GEMM, three dataflows
+    let x = Mat::from_fn(128, 96, |_, _| rng.i8_small() as f32);
+    let w = Mat::from_fn(96, 128, |_, _| rng.i8_small() as f32);
+    for df in Dataflow::ALL {
+        let sim = SystolicSim::new(16, 16, df, true);
+        b.bench(&format!("systolic_gemm/128x96x128/{}", df.name()), || sim.gemm(&x, &w));
+    }
+
+    // DLT transforms
+    let spec = ConvSpec::new(16, 32, 32, 32, 3, 3, 1, 1, 1);
+    let t = Tensor::random(16, 32, 32, &mut rng);
+    let ltu = Ltu::tensor3d_to_toeplitz(&spec);
+    let mut dst = vec![0.0f32; 16 * 9 * 32 * 32];
+    b.bench("dlt/tensor3d_to_toeplitz/16x32x32_3x3", || {
+        ltu.gather(&t.data, &mut dst);
+        dst[0]
+    });
+    let ltu_w = Ltu::tensor3d_to_wino(16, 32, 32, 2, 3, 1);
+    let mut dst_w = vec![0.0f32; ltu_w.len()];
+    b.bench("dlt/tensor3d_to_wino/16x32x32", || {
+        ltu_w.gather(&t.data, &mut dst_w);
+        dst_w[0]
+    });
+
+    // whole-layer simulation per algorithm
+    let lspec = ConvSpec::new(8, 8, 16, 16, 3, 3, 1, 1, 1);
+    let input = Tensor::random(8, 16, 16, &mut rng);
+    let wts = Weights::random(8, 8, 3, 3, &mut rng);
+    for algo in [Algo::Im2col, Algo::Kn2row, Algo::Winograd { m: 2, r: 3 }] {
+        b.bench(&format!("layer_sim/8x16x16_3x3/{}", algo.name()), || {
+            simulate_layer(&input, &wts, &lspec, algo, Dataflow::NS, 16, 16)
+        });
+    }
+
+    // pooling pipeline
+    let pspec = PoolSpec { kind: PoolKind::Max, c: 64, h1: 28, h2: 28, k: 3, s: 2, p: 1 };
+    let pin = Tensor::random(64, 28, 28, &mut rng);
+    b.bench("pooling/hpu_vpu/64x28x28", || pooling::simulate(&pin, &pspec, 16));
+}

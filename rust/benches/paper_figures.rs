@@ -1,0 +1,41 @@
+//! `cargo bench` driver regenerating EVERY paper table and figure:
+//! Fig. 1, Figs. 9–12, Tables 3–4, the <2 s DSE-runtime claim and the
+//! ablation suite. Timing of the DSE stages themselves is measured with
+//! the mini-criterion harness.
+
+use dynamap::bench::figures;
+use dynamap::bench::harness::Bencher;
+use dynamap::dse::{Dse, DseConfig};
+use dynamap::graph::zoo;
+
+fn main() {
+    println!("=== regenerating paper tables & figures ===\n");
+    for (tables, stem) in [
+        (figures::fig01::run(), "fig01_algo_loads"),
+        (figures::util_figs::run("inception-v4"), "fig09_util_inception_v4"),
+        (figures::util_figs::run("googlenet"), "fig10_util_googlenet"),
+        (figures::module_figs::run("inception-v4"), "fig11_modules_inception_v4"),
+        (figures::module_figs::run("googlenet"), "fig12_modules_googlenet"),
+        (figures::table3::run(), "table3_sota"),
+        (figures::table4::run(), "table4_improvement"),
+        (figures::dse_runtime::run(), "dse_runtime"),
+        (figures::ablations::run(), "ablations"),
+    ] {
+        figures::emit(&tables, Some("reports"), stem);
+    }
+
+    println!("\n=== DSE stage timings ===");
+    let mut b = Bencher::new();
+    for model in ["googlenet", "inception-v4"] {
+        let cnn = zoo::by_name(model).unwrap();
+        let dse = Dse::new(DseConfig::alveo_u200());
+        b.bench(&format!("algo1/{model}"), || dse.identify(&cnn));
+        let arch = dse.identify(&cnn);
+        b.bench(&format!("cost_graph/{model}"), || {
+            dse.build_graph(&cnn, arch.p1, arch.p2)
+        });
+        let g = dse.build_graph(&cnn, arch.p1, arch.p2);
+        b.bench(&format!("pbqp_solve/{model}"), || g.solve(&cnn));
+        b.bench(&format!("full_dse/{model}"), || dse.run(&cnn).unwrap());
+    }
+}

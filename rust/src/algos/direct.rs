@@ -1,0 +1,90 @@
+//! Direct (sliding-window) spatial convolution — the oracle (Eq. 1).
+
+use super::tensor::{Tensor, Weights};
+use crate::graph::layer::ConvSpec;
+
+/// Direct convolution of `input` (`c_in × h1 × h2`) with `weights`,
+/// stride `s` and symmetric zero padding `(p1, p2)`.
+pub fn conv2d(input: &Tensor, weights: &Weights, spec: &ConvSpec) -> Tensor {
+    assert_eq!(input.c, spec.c_in);
+    assert_eq!(input.h, spec.h1);
+    assert_eq!(input.w, spec.h2);
+    assert_eq!(weights.c_out, spec.c_out);
+    assert_eq!(weights.c_in, spec.c_in);
+    assert_eq!((weights.k1, weights.k2), (spec.k1, spec.k2));
+    let (o1, o2) = (spec.o1(), spec.o2());
+    let mut out = Tensor::zeros(spec.c_out, o1, o2);
+    for co in 0..spec.c_out {
+        for oy in 0..o1 {
+            for ox in 0..o2 {
+                let mut acc = 0.0f32;
+                for ci in 0..spec.c_in {
+                    for ky in 0..spec.k1 {
+                        for kx in 0..spec.k2 {
+                            let iy = (oy * spec.s + ky) as isize - spec.p1 as isize;
+                            let ix = (ox * spec.s + kx) as isize - spec.p2 as isize;
+                            acc += weights.get(co, ci, ky, kx) * input.get_padded(ci, iy, ix);
+                        }
+                    }
+                }
+                out.set(co, oy, ox, acc);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_kernel() {
+        // 1×1 kernel of 1.0 reproduces the input
+        let spec = ConvSpec::new(1, 1, 4, 4, 1, 1, 1, 0, 0);
+        let input = Tensor::from_fn(1, 4, 4, |_, y, x| (y * 4 + x) as f32);
+        let mut w = Weights::zeros(1, 1, 1, 1);
+        w.set(0, 0, 0, 0, 1.0);
+        let out = conv2d(&input, &w, &spec);
+        assert_eq!(out.data, input.data);
+    }
+
+    #[test]
+    fn box_filter() {
+        // 3×3 all-ones kernel on all-ones input, same padding: interior
+        // pixels see 9, corners 4, edges 6
+        let spec = ConvSpec::new(1, 1, 4, 4, 3, 3, 1, 1, 1);
+        let input = Tensor::from_fn(1, 4, 4, |_, _, _| 1.0);
+        let mut w = Weights::zeros(1, 1, 3, 3);
+        for v in &mut w.data {
+            *v = 1.0;
+        }
+        let out = conv2d(&input, &w, &spec);
+        assert_eq!(out.get(0, 1, 1), 9.0);
+        assert_eq!(out.get(0, 0, 0), 4.0);
+        assert_eq!(out.get(0, 0, 1), 6.0);
+    }
+
+    #[test]
+    fn stride_two() {
+        let spec = ConvSpec::new(1, 1, 4, 4, 1, 1, 2, 0, 0);
+        let input = Tensor::from_fn(1, 4, 4, |_, y, x| (y * 4 + x) as f32);
+        let mut w = Weights::zeros(1, 1, 1, 1);
+        w.set(0, 0, 0, 0, 1.0);
+        let out = conv2d(&input, &w, &spec);
+        assert_eq!((out.h, out.w), (2, 2));
+        assert_eq!(out.data, vec![0.0, 2.0, 8.0, 10.0]);
+    }
+
+    #[test]
+    fn channel_summation() {
+        // two input channels of constant 1 and 2, kernel weights 1 → 3
+        let spec = ConvSpec::new(2, 1, 3, 3, 1, 1, 1, 0, 0);
+        let input = Tensor::from_fn(2, 3, 3, |c, _, _| (c + 1) as f32);
+        let mut w = Weights::zeros(1, 2, 1, 1);
+        w.set(0, 0, 0, 0, 1.0);
+        w.set(0, 1, 0, 0, 1.0);
+        let out = conv2d(&input, &w, &spec);
+        assert!(out.data.iter().all(|&v| v == 3.0));
+    }
+}

@@ -1,0 +1,238 @@
+//! Frequency-domain convolution — the second §7 future-work extension
+//! ("we will explore ... frequency-domain methods").
+//!
+//! Conv-as-pointwise-product: zero-pad feature map and kernel to a
+//! common power-of-two grid, 2-D FFT both, multiply per (c_in → c_out)
+//! pair accumulating over channels in the frequency domain (the same
+//! reduce-before-inverse-transform trick Winograd uses, Eq. 6), inverse
+//! FFT once per output channel, crop with stride. Radix-2
+//! Cooley–Tukey, no external deps.
+
+use super::tensor::{Tensor, Weights};
+use crate::graph::layer::ConvSpec;
+
+/// Complex number (no external crates offline).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Cpx {
+    pub re: f32,
+    pub im: f32,
+}
+
+impl Cpx {
+    pub const ZERO: Cpx = Cpx { re: 0.0, im: 0.0 };
+
+    #[inline]
+    pub fn mul(self, o: Cpx) -> Cpx {
+        Cpx { re: self.re * o.re - self.im * o.im, im: self.re * o.im + self.im * o.re }
+    }
+
+    #[inline]
+    pub fn add(self, o: Cpx) -> Cpx {
+        Cpx { re: self.re + o.re, im: self.im + o.im }
+    }
+
+    #[inline]
+    pub fn sub(self, o: Cpx) -> Cpx {
+        Cpx { re: self.re - o.re, im: self.im - o.im }
+    }
+}
+
+/// In-place radix-2 DIT FFT. `n` must be a power of two.
+/// `inverse` applies the conjugate transform WITHOUT the 1/n scale
+/// (callers scale once at the end of the 2-D inverse).
+pub fn fft_1d(buf: &mut [Cpx], inverse: bool) {
+    let n = buf.len();
+    assert!(n.is_power_of_two(), "fft length {n} not a power of two");
+    if n <= 1 {
+        return;
+    }
+    // bit-reversal permutation
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            buf.swap(i, j);
+        }
+    }
+    let sign = if inverse { 1.0f64 } else { -1.0f64 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * std::f64::consts::PI / len as f64;
+        let wl = Cpx { re: ang.cos() as f32, im: ang.sin() as f32 };
+        for start in (0..n).step_by(len) {
+            let mut w = Cpx { re: 1.0, im: 0.0 };
+            for k in 0..len / 2 {
+                let u = buf[start + k];
+                let v = buf[start + k + len / 2].mul(w);
+                buf[start + k] = u.add(v);
+                buf[start + k + len / 2] = u.sub(v);
+                w = w.mul(wl);
+            }
+        }
+        len <<= 1;
+    }
+}
+
+/// 2-D FFT over an `n × n` row-major grid.
+pub fn fft_2d(grid: &mut [Cpx], n: usize, inverse: bool) {
+    assert_eq!(grid.len(), n * n);
+    let mut col = vec![Cpx::ZERO; n];
+    for r in 0..n {
+        fft_1d(&mut grid[r * n..(r + 1) * n], inverse);
+    }
+    for c in 0..n {
+        for r in 0..n {
+            col[r] = grid[r * n + c];
+        }
+        fft_1d(&mut col, inverse);
+        for r in 0..n {
+            grid[r * n + c] = col[r];
+        }
+    }
+    if inverse {
+        let scale = 1.0 / (n * n) as f32;
+        for v in grid.iter_mut() {
+            v.re *= scale;
+            v.im *= scale;
+        }
+    }
+}
+
+/// FFT grid side for a layer: padded input and kernel must fit with
+/// linear (non-circular) convolution intact.
+pub fn grid_side(spec: &ConvSpec) -> usize {
+    let need = (spec.h1 + 2 * spec.p1 + spec.k1 - 1)
+        .max(spec.h2 + 2 * spec.p2 + spec.k2 - 1);
+    need.next_power_of_two()
+}
+
+/// Frequency-domain convolution; same contract as `direct::conv2d`.
+pub fn conv2d(input: &Tensor, weights: &Weights, spec: &ConvSpec) -> Tensor {
+    let n = grid_side(spec);
+    let (o1, o2) = (spec.o1(), spec.o2());
+
+    // forward-FFT all input channels once (re-used by every c_out)
+    let mut x_hat = vec![vec![Cpx::ZERO; n * n]; spec.c_in];
+    for (ci, chan) in x_hat.iter_mut().enumerate() {
+        for y in 0..spec.h1 {
+            for x in 0..spec.h2 {
+                chan[(y + spec.p1) * n + (x + spec.p2)] =
+                    Cpx { re: input.get(ci, y, x), im: 0.0 };
+            }
+        }
+        fft_2d(chan, n, false);
+    }
+
+    let mut out = Tensor::zeros(spec.c_out, o1, o2);
+    let mut k_hat = vec![Cpx::ZERO; n * n];
+    let mut acc = vec![Cpx::ZERO; n * n];
+    for co in 0..spec.c_out {
+        for v in acc.iter_mut() {
+            *v = Cpx::ZERO;
+        }
+        for ci in 0..spec.c_in {
+            // CNN "convolution" is cross-correlation; circular FFT
+            // convolution of the FLIPPED kernel yields it:
+            //   y(t) = Σ_j k(j)·x(t − (K−1) + j)  ⇒ crop at t = o·s + K−1
+            for v in k_hat.iter_mut() {
+                *v = Cpx::ZERO;
+            }
+            for ky in 0..spec.k1 {
+                for kx in 0..spec.k2 {
+                    k_hat[(spec.k1 - 1 - ky) * n + (spec.k2 - 1 - kx)] =
+                        Cpx { re: weights.get(co, ci, ky, kx), im: 0.0 };
+                }
+            }
+            fft_2d(&mut k_hat, n, false);
+            // frequency-domain channel reduction (Eq. 6 analogue)
+            for i in 0..n * n {
+                acc[i] = acc[i].add(x_hat[ci][i].mul(k_hat[i]));
+            }
+        }
+        fft_2d(&mut acc, n, true);
+        // crop: output pixel (oy, ox) sits at grid
+        // (oy·s + K1 − 1, ox·s + K2 − 1) — see kernel placement above.
+        for oy in 0..o1 {
+            for ox in 0..o2 {
+                let gy = oy * spec.s + spec.k1 - 1;
+                let gx = ox * spec.s + spec.k2 - 1;
+                out.set(co, oy, ox, acc[gy * n + gx].re);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::direct;
+    use crate::util::proptest::{assert_allclose, check};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fft_roundtrip() {
+        check("fft_roundtrip", 32, |r: &mut Rng| {
+            let n = 1 << r.range(1, 5);
+            let orig: Vec<Cpx> =
+                (0..n).map(|_| Cpx { re: r.f32_range(-1.0, 1.0), im: 0.0 }).collect();
+            let mut buf = orig.clone();
+            fft_1d(&mut buf, false);
+            fft_1d(&mut buf, true);
+            for (a, b) in buf.iter().zip(&orig) {
+                if (a.re / n as f32 - b.re).abs() > 1e-4 {
+                    return Err(format!("roundtrip mismatch n={n}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn parseval_sanity() {
+        // FFT of a delta is flat ones
+        let mut buf = vec![Cpx::ZERO; 8];
+        buf[0] = Cpx { re: 1.0, im: 0.0 };
+        fft_1d(&mut buf, false);
+        for v in &buf {
+            assert!((v.re - 1.0).abs() < 1e-5 && v.im.abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn matches_direct_conv() {
+        check("fft_conv_vs_direct", 24, |r: &mut Rng| {
+            let k = *r.choose(&[1usize, 3, 5, 7]);
+            let h = r.range(k.max(4), 12);
+            let s = r.range(1, 2);
+            let spec = crate::graph::layer::ConvSpec::new(
+                r.range(1, 3),
+                r.range(1, 3),
+                h,
+                h,
+                k,
+                k,
+                s,
+                k / 2,
+                k / 2,
+            );
+            let input = Tensor::random(spec.c_in, spec.h1, spec.h2, r);
+            let w = Weights::random(spec.c_out, spec.c_in, spec.k1, spec.k2, r);
+            let a = direct::conv2d(&input, &w, &spec);
+            let b = conv2d(&input, &w, &spec);
+            assert_allclose(&b.data, &a.data, 5e-3, 5e-3)
+                .map_err(|e| format!("spec {spec:?}: {e}"))
+        });
+    }
+
+    #[test]
+    fn grid_side_covers_linear_conv() {
+        let spec = crate::graph::layer::ConvSpec::new(1, 1, 17, 17, 7, 7, 1, 3, 3);
+        assert_eq!(grid_side(&spec), 32); // 17+6+6 = 29 → 32
+    }
+}

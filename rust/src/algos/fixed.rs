@@ -1,0 +1,231 @@
+//! INT8 fixed-point arithmetic — the paper evaluates with 8-bit
+//! fixed-point data (§6), one DSP per MAC.
+//!
+//! Symmetric per-tensor quantization: `q = round(x / scale)` clamped to
+//! `[-127, 127]`, accumulation in i32 (the DSP48 accumulator), output
+//! re-quantized with the product scale. im2col and kn2row perform the
+//! same multiplies in the same ring, so their INT8 outputs are
+//! bit-identical; Winograd transforms need the wider intermediate
+//! (the hardware runs them in 16-bit shift-add, §3.1).
+
+use super::tensor::{Tensor, Weights};
+use crate::graph::layer::ConvSpec;
+
+/// A quantized tensor: i8 payload + scale.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QTensor {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub scale: f32,
+    pub data: Vec<i8>,
+}
+
+/// Quantized weights.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QWeights {
+    pub c_out: usize,
+    pub c_in: usize,
+    pub k1: usize,
+    pub k2: usize,
+    pub scale: f32,
+    pub data: Vec<i8>,
+}
+
+/// Max-abs symmetric scale.
+pub fn scale_for(xs: &[f32]) -> f32 {
+    let m = xs.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+    if m == 0.0 {
+        1.0
+    } else {
+        m / 127.0
+    }
+}
+
+pub fn quantize_tensor(t: &Tensor) -> QTensor {
+    let scale = scale_for(&t.data);
+    QTensor {
+        c: t.c,
+        h: t.h,
+        w: t.w,
+        scale,
+        data: t.data.iter().map(|&x| quant(x, scale)).collect(),
+    }
+}
+
+pub fn quantize_weights(w: &Weights) -> QWeights {
+    let scale = scale_for(&w.data);
+    QWeights {
+        c_out: w.c_out,
+        c_in: w.c_in,
+        k1: w.k1,
+        k2: w.k2,
+        scale,
+        data: w.data.iter().map(|&x| quant(x, scale)).collect(),
+    }
+}
+
+#[inline]
+fn quant(x: f32, scale: f32) -> i8 {
+    let q = (x / scale).round();
+    q.clamp(-127.0, 127.0) as i8
+}
+
+impl QTensor {
+    #[inline]
+    pub fn get_padded(&self, c: usize, y: isize, x: isize) -> i32 {
+        if y < 0 || x < 0 || y >= self.h as isize || x >= self.w as isize {
+            0
+        } else {
+            self.data[(c * self.h + y as usize) * self.w + x as usize] as i32
+        }
+    }
+
+    /// Dequantize back to f32.
+    pub fn dequant(&self) -> Tensor {
+        Tensor {
+            c: self.c,
+            h: self.h,
+            w: self.w,
+            data: self.data.iter().map(|&q| q as f32 * self.scale).collect(),
+        }
+    }
+}
+
+impl QWeights {
+    #[inline]
+    pub fn get(&self, co: usize, ci: usize, ky: usize, kx: usize) -> i32 {
+        self.data[((co * self.c_in + ci) * self.k1 + ky) * self.k2 + kx] as i32
+    }
+}
+
+/// INT8 direct convolution with i32 accumulation; output is an i32
+/// tensor with scale `in.scale · w.scale` (re-quantization is the
+/// caller's choice — the engine keeps 32-bit partials like the
+/// accumulation buffer in the overlay).
+pub fn conv2d_i32(input: &QTensor, weights: &QWeights, spec: &ConvSpec) -> Vec<i32> {
+    let (o1, o2) = (spec.o1(), spec.o2());
+    let mut out = vec![0i32; spec.c_out * o1 * o2];
+    for co in 0..spec.c_out {
+        for oy in 0..o1 {
+            for ox in 0..o2 {
+                let mut acc = 0i32;
+                for ci in 0..spec.c_in {
+                    for ky in 0..spec.k1 {
+                        for kx in 0..spec.k2 {
+                            let iy = (oy * spec.s + ky) as isize - spec.p1 as isize;
+                            let ix = (ox * spec.s + kx) as isize - spec.p2 as isize;
+                            acc += weights.get(co, ci, ky, kx) * input.get_padded(ci, iy, ix);
+                        }
+                    }
+                }
+                out[(co * o1 + oy) * o2 + ox] = acc;
+            }
+        }
+    }
+    out
+}
+
+/// INT8 kn2row: unit-conv GEMMs in i32 + pad-accumulate. Must be
+/// bit-identical to [`conv2d_i32`].
+pub fn conv2d_i32_kn2row(input: &QTensor, weights: &QWeights, spec: &ConvSpec) -> Vec<i32> {
+    let (o1, o2) = (spec.o1(), spec.o2());
+    let mut out = vec![0i32; spec.c_out * o1 * o2];
+    for ky in 0..spec.k1 {
+        for kx in 0..spec.k2 {
+            // unit conv patch: C_out × H1H2
+            let mut patch = vec![0i32; spec.c_out * spec.h1 * spec.h2];
+            for co in 0..spec.c_out {
+                for ci in 0..spec.c_in {
+                    let w = weights.get(co, ci, ky, kx);
+                    if w == 0 {
+                        continue;
+                    }
+                    for y in 0..spec.h1 {
+                        for x in 0..spec.h2 {
+                            patch[(co * spec.h1 + y) * spec.h2 + x] +=
+                                w * input.get_padded(ci, y as isize, x as isize);
+                        }
+                    }
+                }
+            }
+            // pad-accumulate
+            for co in 0..spec.c_out {
+                for oy in 0..o1 {
+                    for ox in 0..o2 {
+                        let iy = (oy * spec.s + ky) as isize - spec.p1 as isize;
+                        let ix = (ox * spec.s + kx) as isize - spec.p2 as isize;
+                        if iy < 0 || ix < 0 || iy >= spec.h1 as isize || ix >= spec.h2 as isize {
+                            continue;
+                        }
+                        out[(co * o1 + oy) * o2 + ox] +=
+                            patch[(co * spec.h1 + iy as usize) * spec.h2 + ix as usize];
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Relative quantization error of the INT8 path vs an f32 reference —
+/// used to assert the INT8 design stays within CNN-tolerable error.
+pub fn rel_error(q_out: &[i32], scale: f32, f_ref: &[f32]) -> f32 {
+    assert_eq!(q_out.len(), f_ref.len());
+    let mut num = 0.0f32;
+    let mut den = 1e-12f32;
+    for (&q, &r) in q_out.iter().zip(f_ref) {
+        let x = q as f32 * scale;
+        num += (x - r) * (x - r);
+        den += r * r;
+    }
+    (num / den).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::direct;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn quant_roundtrip_small_ints() {
+        // integers ≤127 with scale 1 survive exactly
+        let t = Tensor::from_fn(1, 2, 2, |_, y, x| (y as f32 * 2.0 + x as f32) - 1.0);
+        let q = quantize_tensor(&t);
+        let back = q.dequant();
+        for (a, b) in t.data.iter().zip(&back.data) {
+            assert!((a - b).abs() < 0.02, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn im2col_equals_kn2row_bit_exact() {
+        check("int8_kn2row_exact", 48, |r: &mut Rng| {
+            let spec = crate::algos::im2col::random_spec(r);
+            let input = quantize_tensor(&Tensor::random(spec.c_in, spec.h1, spec.h2, r));
+            let w = quantize_weights(&Weights::random(spec.c_out, spec.c_in, spec.k1, spec.k2, r));
+            let a = conv2d_i32(&input, &w, &spec);
+            let b = conv2d_i32_kn2row(&input, &w, &spec);
+            if a != b {
+                return Err(format!("INT8 direct vs kn2row mismatch for {spec:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn int8_error_is_small() {
+        let spec = ConvSpec::new(4, 4, 8, 8, 3, 3, 1, 1, 1);
+        let mut rng = Rng::new(21);
+        let fin = Tensor::random(4, 8, 8, &mut rng);
+        let fw = Weights::random(4, 4, 3, 3, &mut rng);
+        let fref = direct::conv2d(&fin, &fw, &spec);
+        let qi = quantize_tensor(&fin);
+        let qw = quantize_weights(&fw);
+        let qo = conv2d_i32(&qi, &qw, &spec);
+        let err = rel_error(&qo, qi.scale * qw.scale, &fref.data);
+        assert!(err < 0.05, "INT8 relative error {err}");
+    }
+}

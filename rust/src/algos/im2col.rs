@@ -1,0 +1,109 @@
+//! im2col convolution (§2.1.1): lower to one GEMM
+//! `W (C_out × K1K2C_in) × X (K1K2C_in × O1O2)` over the Toeplitz matrix.
+
+use super::tensor::{Mat, Tensor, Weights};
+use crate::graph::layer::ConvSpec;
+
+/// Build the Toeplitz (im2col) matrix: each column is one `K1K2·C_in`
+/// sliding window, columns ordered by output pixel (row-major o1, o2).
+/// Row index is `(ci · K1 + ky) · K2 + kx`.
+pub fn toeplitz(input: &Tensor, spec: &ConvSpec) -> Mat {
+    let (o1, o2) = (spec.o1(), spec.o2());
+    let rows = spec.k1 * spec.k2 * spec.c_in;
+    let cols = o1 * o2;
+    let mut m = Mat::zeros(rows, cols);
+    for ci in 0..spec.c_in {
+        for ky in 0..spec.k1 {
+            for kx in 0..spec.k2 {
+                let r = (ci * spec.k1 + ky) * spec.k2 + kx;
+                for oy in 0..o1 {
+                    for ox in 0..o2 {
+                        let iy = (oy * spec.s + ky) as isize - spec.p1 as isize;
+                        let ix = (ox * spec.s + kx) as isize - spec.p2 as isize;
+                        m.set(r, oy * o2 + ox, input.get_padded(ci, iy, ix));
+                    }
+                }
+            }
+        }
+    }
+    m
+}
+
+/// Flatten weights to the `C_out × K1K2C_in` kernel matrix matching
+/// [`toeplitz`] row order.
+pub fn weight_matrix(weights: &Weights) -> Mat {
+    let cols = weights.k1 * weights.k2 * weights.c_in;
+    Mat::from_fn(weights.c_out, cols, |co, j| {
+        let ci = j / (weights.k1 * weights.k2);
+        let rem = j % (weights.k1 * weights.k2);
+        let ky = rem / weights.k2;
+        let kx = rem % weights.k2;
+        weights.get(co, ci, ky, kx)
+    })
+}
+
+/// im2col convolution (Eq. 2).
+pub fn conv2d(input: &Tensor, weights: &Weights, spec: &ConvSpec) -> Tensor {
+    let x = toeplitz(input, spec);
+    let w = weight_matrix(weights);
+    let z = w.matmul(&x); // (C_out × O1O2)
+    let (o1, o2) = (spec.o1(), spec.o2());
+    Tensor { c: spec.c_out, h: o1, w: o2, data: z.data }
+}
+
+/// Random layer spec generator shared by the algorithm property tests.
+#[cfg(test)]
+pub(crate) fn random_spec(r: &mut crate::util::rng::Rng) -> ConvSpec {
+    let k1 = *r.choose(&[1usize, 3, 5, 7]);
+    let k2 = if r.bool() { k1 } else { *r.choose(&[1usize, 3, 5, 7]) };
+    let s = r.range(1, 2);
+    let h1 = r.range(k1.max(4), 10);
+    let h2 = r.range(k2.max(4), 10);
+    let c_in = r.range(1, 4);
+    let c_out = r.range(1, 4);
+    let (p1, p2) = if r.bool() { (k1 / 2, k2 / 2) } else { (0, 0) };
+    ConvSpec::new(c_in, c_out, h1, h2, k1, k2, s, p1, p2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::direct;
+    use crate::util::proptest::{assert_allclose, check};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matches_direct_small() {
+        let spec = ConvSpec::new(2, 3, 5, 5, 3, 3, 1, 1, 1);
+        let mut rng = Rng::new(1);
+        let input = Tensor::random(2, 5, 5, &mut rng);
+        let w = Weights::random(3, 2, 3, 3, &mut rng);
+        let a = direct::conv2d(&input, &w, &spec);
+        let b = conv2d(&input, &w, &spec);
+        assert_allclose(&a.data, &b.data, 1e-4, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn toeplitz_shape() {
+        let spec = ConvSpec::new(2, 1, 4, 4, 3, 3, 1, 1, 1);
+        let t = toeplitz(&Tensor::zeros(2, 4, 4), &spec);
+        assert_eq!((t.rows, t.cols), (18, 16));
+    }
+
+    #[test]
+    fn property_matches_direct() {
+        check("im2col_vs_direct", 48, |r: &mut Rng| {
+            let spec = super::random_spec(r);
+            let input = Tensor::random_i8(spec.c_in, spec.h1, spec.h2, r);
+            let w = Weights::random_i8(spec.c_out, spec.c_in, spec.k1, spec.k2, r);
+            let a = direct::conv2d(&input, &w, &spec);
+            let b = conv2d(&input, &w, &spec);
+            // integer-valued data → exact equality
+            if a.data != b.data {
+                return Err(format!("mismatch for spec {spec:?}"));
+            }
+            Ok(())
+        });
+    }
+
+}

@@ -1,0 +1,138 @@
+//! kn2row convolution (§2.1.2): `K1K2` unit (1×1) convolutions —
+//! GEMMs `W (C_out × C_in) × X (C_in × H1H2)` — whose intermediate
+//! patches are shifted by their kernel offsets, zero-padded on the
+//! non-overlap and Hadamard-added ("Pad-and-Accumulate", Eq. 4).
+
+use super::tensor::{Mat, Tensor, Weights};
+use crate::graph::layer::ConvSpec;
+
+/// The `C_in × H1H2` input matrix of the unit-convolution GEMM — the
+/// plain 3D-tensor layout, no duplication (the algorithm's selling
+/// point: low memory).
+pub fn input_matrix(input: &Tensor) -> Mat {
+    Mat { rows: input.c, cols: input.h * input.w, data: input.data.clone() }
+}
+
+/// Weight matrix of the `(k1, k2)` unit convolution: `C_out × C_in`.
+pub fn unit_weight_matrix(weights: &Weights, ky: usize, kx: usize) -> Mat {
+    Mat::from_fn(weights.c_out, weights.c_in, |co, ci| weights.get(co, ci, ky, kx))
+}
+
+/// One intermediate patch `p_{k1,k2}` (Eq. 3) as a `C_out × H1H2` GEMM
+/// output.
+pub fn unit_conv(input: &Tensor, weights: &Weights, ky: usize, kx: usize) -> Mat {
+    unit_weight_matrix(weights, ky, kx).matmul(&input_matrix(input))
+}
+
+/// Pad-and-Accumulate (Eq. 4): shift patch `(ky, kx)` by its offset
+/// relative to the kernel center and accumulate into `acc`
+/// (`C_out × O1 × O2`), honouring stride and padding.
+///
+/// For output pixel `(oy, ox)`, the unit-conv contribution of kernel tap
+/// `(ky, kx)` is the patch value at input coordinate
+/// `(oy·s + ky − p1, ox·s + kx − p2)` — i.e. the accumulation walks the
+/// patch with a per-tap offset, which is exactly the paper's
+/// "shift + pad with 0 on non-overlapping areas".
+pub fn pad_accumulate(
+    acc: &mut Tensor,
+    patch: &Mat,
+    spec: &ConvSpec,
+    ky: usize,
+    kx: usize,
+) {
+    let (o1, o2) = (spec.o1(), spec.o2());
+    debug_assert_eq!((acc.c, acc.h, acc.w), (spec.c_out, o1, o2));
+    debug_assert_eq!(patch.rows, spec.c_out);
+    debug_assert_eq!(patch.cols, spec.h1 * spec.h2);
+    for co in 0..spec.c_out {
+        for oy in 0..o1 {
+            for ox in 0..o2 {
+                let iy = (oy * spec.s + ky) as isize - spec.p1 as isize;
+                let ix = (ox * spec.s + kx) as isize - spec.p2 as isize;
+                if iy < 0 || ix < 0 || iy >= spec.h1 as isize || ix >= spec.h2 as isize {
+                    continue; // zero padding
+                }
+                let v = patch.get(co, iy as usize * spec.h2 + ix as usize);
+                let cur = acc.get(co, oy, ox);
+                acc.set(co, oy, ox, cur + v);
+            }
+        }
+    }
+}
+
+/// kn2row convolution: K1K2 unit-conv GEMMs + Pad-and-Accumulate.
+pub fn conv2d(input: &Tensor, weights: &Weights, spec: &ConvSpec) -> Tensor {
+    let mut acc = Tensor::zeros(spec.c_out, spec.o1(), spec.o2());
+    for ky in 0..spec.k1 {
+        for kx in 0..spec.k2 {
+            let patch = unit_conv(input, weights, ky, kx);
+            pad_accumulate(&mut acc, &patch, spec, ky, kx);
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::{direct, im2col};
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matches_direct_3x3() {
+        let spec = ConvSpec::new(2, 3, 6, 6, 3, 3, 1, 1, 1);
+        let mut rng = Rng::new(5);
+        let input = Tensor::random_i8(2, 6, 6, &mut rng);
+        let w = Weights::random_i8(3, 2, 3, 3, &mut rng);
+        let a = direct::conv2d(&input, &w, &spec);
+        let b = conv2d(&input, &w, &spec);
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn matches_direct_1x7() {
+        // the Inception-v4 factorized kernel shape
+        let spec = ConvSpec::new(2, 2, 9, 9, 1, 7, 1, 0, 3);
+        let mut rng = Rng::new(6);
+        let input = Tensor::random_i8(2, 9, 9, &mut rng);
+        let w = Weights::random_i8(2, 2, 1, 7, &mut rng);
+        assert_eq!(direct::conv2d(&input, &w, &spec).data, conv2d(&input, &w, &spec).data);
+    }
+
+    #[test]
+    fn unit_conv_is_gemm_of_tap() {
+        // for a 1×1 kernel, kn2row degenerates to exactly one GEMM
+        let spec = ConvSpec::new(3, 4, 5, 5, 1, 1, 1, 0, 0);
+        let mut rng = Rng::new(7);
+        let input = Tensor::random_i8(3, 5, 5, &mut rng);
+        let w = Weights::random_i8(4, 3, 1, 1, &mut rng);
+        let patch = unit_conv(&input, &w, 0, 0);
+        let out = conv2d(&input, &w, &spec);
+        assert_eq!(patch.data, out.data);
+    }
+
+    #[test]
+    fn property_matches_im2col() {
+        check("kn2row_vs_im2col", 48, |r: &mut Rng| {
+            let spec = im2col::random_spec(r);
+            let input = Tensor::random_i8(spec.c_in, spec.h1, spec.h2, r);
+            let w = Weights::random_i8(spec.c_out, spec.c_in, spec.k1, spec.k2, r);
+            let a = im2col::conv2d(&input, &w, &spec);
+            let b = conv2d(&input, &w, &spec);
+            if a.data != b.data {
+                return Err(format!("mismatch for spec {spec:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn strided_kn2row() {
+        let spec = ConvSpec::new(1, 1, 6, 6, 3, 3, 2, 1, 1);
+        let mut rng = Rng::new(8);
+        let input = Tensor::random_i8(1, 6, 6, &mut rng);
+        let w = Weights::random_i8(1, 1, 3, 3, &mut rng);
+        assert_eq!(direct::conv2d(&input, &w, &spec).data, conv2d(&input, &w, &spec).data);
+    }
+}

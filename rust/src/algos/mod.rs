@@ -1,0 +1,18 @@
+//! Functional (bit-accurate) implementations of the three GEMM-based
+//! convolution families (§2.1) in f32 and INT8 fixed point.
+//!
+//! These are the numerical ground truth the overlay simulator and the
+//! PJRT artifacts are validated against: [`direct`] is the sliding-window
+//! oracle (Eq. 1); [`im2col`], [`kn2row`] and [`winograd`] must agree
+//! with it exactly (f32 up to rounding, INT8 bit-exactly for im2col vs
+//! kn2row since both perform the same multiplies).
+
+pub mod tensor;
+pub mod direct;
+pub mod im2col;
+pub mod kn2row;
+pub mod winograd;
+pub mod fft;
+pub mod fixed;
+
+pub use tensor::{Mat, Tensor};

@@ -1,0 +1,202 @@
+//! Dense tensor / matrix containers used by the functional algorithms
+//! and the overlay simulator.
+
+use crate::util::rng::Rng;
+
+/// A `C × H × W` tensor in CHW layout.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(c: usize, h: usize, w: usize) -> Tensor {
+        Tensor { c, h, w, data: vec![0.0; c * h * w] }
+    }
+
+    pub fn from_fn(c: usize, h: usize, w: usize, mut f: impl FnMut(usize, usize, usize) -> f32) -> Tensor {
+        let mut t = Tensor::zeros(c, h, w);
+        for ci in 0..c {
+            for y in 0..h {
+                for x in 0..w {
+                    t.data[(ci * h + y) * w + x] = f(ci, y, x);
+                }
+            }
+        }
+        t
+    }
+
+    pub fn random(c: usize, h: usize, w: usize, rng: &mut Rng) -> Tensor {
+        Tensor::from_fn(c, h, w, |_, _, _| rng.f32_range(-1.0, 1.0))
+    }
+
+    /// Random small-integer tensor — exercises exact arithmetic paths.
+    pub fn random_i8(c: usize, h: usize, w: usize, rng: &mut Rng) -> Tensor {
+        Tensor::from_fn(c, h, w, |_, _, _| rng.i8_small() as f32)
+    }
+
+    #[inline]
+    pub fn get(&self, c: usize, y: usize, x: usize) -> f32 {
+        self.data[(c * self.h + y) * self.w + x]
+    }
+
+    #[inline]
+    pub fn set(&mut self, c: usize, y: usize, x: usize, v: f32) {
+        self.data[(c * self.h + y) * self.w + x] = v;
+    }
+
+    /// Zero-padded read: out-of-bounds coordinates return 0.
+    #[inline]
+    pub fn get_padded(&self, c: usize, y: isize, x: isize) -> f32 {
+        if y < 0 || x < 0 || y >= self.h as isize || x >= self.w as isize {
+            0.0
+        } else {
+            self.get(c, y as usize, x as usize)
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+/// Convolution weights: `c_out × c_in × k1 × k2`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Weights {
+    pub c_out: usize,
+    pub c_in: usize,
+    pub k1: usize,
+    pub k2: usize,
+    pub data: Vec<f32>,
+}
+
+impl Weights {
+    pub fn zeros(c_out: usize, c_in: usize, k1: usize, k2: usize) -> Weights {
+        Weights { c_out, c_in, k1, k2, data: vec![0.0; c_out * c_in * k1 * k2] }
+    }
+
+    pub fn random(c_out: usize, c_in: usize, k1: usize, k2: usize, rng: &mut Rng) -> Weights {
+        let mut w = Weights::zeros(c_out, c_in, k1, k2);
+        for v in &mut w.data {
+            *v = rng.f32_range(-0.5, 0.5);
+        }
+        w
+    }
+
+    pub fn random_i8(c_out: usize, c_in: usize, k1: usize, k2: usize, rng: &mut Rng) -> Weights {
+        let mut w = Weights::zeros(c_out, c_in, k1, k2);
+        for v in &mut w.data {
+            *v = rng.i8_small() as f32;
+        }
+        w
+    }
+
+    #[inline]
+    pub fn get(&self, co: usize, ci: usize, ky: usize, kx: usize) -> f32 {
+        self.data[((co * self.c_in + ci) * self.k1 + ky) * self.k2 + kx]
+    }
+
+    #[inline]
+    pub fn set(&mut self, co: usize, ci: usize, ky: usize, kx: usize, v: f32) {
+        self.data[((co * self.c_in + ci) * self.k1 + ky) * self.k2 + kx] = v;
+    }
+}
+
+/// A dense row-major matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m.data[i * cols + j] = f(i, j);
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Plain `self × other` matrix multiply.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul dim mismatch");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.get(i, k);
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..other.cols {
+                    out.data[i * other.cols + j] += a * other.get(k, j);
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transposed(&self) -> Mat {
+        Mat::from_fn(self.cols, self.rows, |i, j| self.get(j, i))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_indexing() {
+        let t = Tensor::from_fn(2, 3, 4, |c, y, x| (c * 100 + y * 10 + x) as f32);
+        assert_eq!(t.get(1, 2, 3), 123.0);
+        assert_eq!(t.get_padded(1, -1, 0), 0.0);
+        assert_eq!(t.get_padded(1, 2, 4), 0.0);
+        assert_eq!(t.get_padded(1, 2, 3), 123.0);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Mat::from_fn(3, 3, |i, j| if i == j { 1.0 } else { 0.0 });
+        let b = Mat::from_fn(3, 2, |i, j| (i * 2 + j) as f32);
+        assert_eq!(a.matmul(&b), b);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat { rows: 2, cols: 2, data: vec![1.0, 2.0, 3.0, 4.0] };
+        let b = Mat { rows: 2, cols: 2, data: vec![1.0, 1.0, 1.0, 1.0] };
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn weights_indexing() {
+        let mut w = Weights::zeros(2, 3, 3, 3);
+        w.set(1, 2, 0, 1, 7.0);
+        assert_eq!(w.get(1, 2, 0, 1), 7.0);
+    }
+}

@@ -1,0 +1,121 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//! stall-free PEs, dataflow switching, rectangular arrays, PBQP vs
+//! greedy, transition-aware mapping, Winograd tile size, SRAM fusion.
+
+use crate::cost::gemm::Dataflow;
+use crate::cost::graph_build::Policy;
+use crate::dse::{Dse, DseConfig};
+use crate::graph::zoo;
+use crate::util::table::{fnum, Table};
+
+fn latency(cfg: DseConfig, model: &str) -> f64 {
+    let cnn = zoo::by_name(model).unwrap();
+    Dse::new(cfg).run(&cnn).unwrap().total_latency_ms
+}
+
+pub fn run() -> Vec<Table> {
+    let mut t = Table::new(
+        "Ablations — end-to-end latency (ms) when disabling one optimization",
+        &["variant", "googlenet", "inception-v4"],
+    );
+    let base = DseConfig::alveo_u200();
+
+    fn row(t: &mut Table, label: &str, cfg: DseConfig) {
+        t.row(vec![
+            label.to_string(),
+            fnum(latency(cfg.clone(), "googlenet"), 3),
+            fnum(latency(cfg, "inception-v4"), 3),
+        ]);
+    }
+
+    row(&mut t, "full DYNAMAP (baseline)", base.clone());
+    // stall-free needs a direct CostModel toggle (not in DseConfig)
+    {
+        let cnn_g = zoo::googlenet();
+        let cnn_i = zoo::inception_v4();
+        let dse = Dse::new(base.clone());
+        let arch_g = dse.identify(&cnn_g);
+        let arch_i = dse.identify(&cnn_i);
+        let mut cm = base.cost_model();
+        cm.stall_free = false;
+        let tm = base.transition_model();
+        let g_g =
+            crate::cost::graph_build::CostGraph::build(&cnn_g, &cm, &tm, arch_g.p1, arch_g.p2, base.opts);
+        let g_i =
+            crate::cost::graph_build::CostGraph::build(&cnn_i, &cm, &tm, arch_i.p1, arch_i.p2, base.opts);
+        t.row(vec![
+            "no stall-free PEs (naive I_SA)".into(),
+            fnum(g_g.solve(&cnn_g).total_sec * 1e3, 3),
+            fnum(g_i.solve(&cnn_i).total_sec * 1e3, 3),
+        ]);
+    }
+    row(&mut t, "NS dataflow only", {
+        let mut c = base.clone();
+        c.force_dataflow = Some(Dataflow::NS);
+        c
+    });
+    row(&mut t, "no SRAM fusion (always round-trip DRAM)", {
+        let mut c = base.clone();
+        c.opts.sram_fuse = false;
+        c
+    });
+    row(&mut t, "weight load not overlapped", {
+        let mut c = base.clone();
+        c.opts.overlap_weight_load = false;
+        c
+    });
+    row(&mut t, "Winograd F(4×4, 3×3) tiles", {
+        let mut c = base.clone();
+        c.wino_m = 4;
+        c
+    });
+    row(&mut t, "strided-Winograd extension (§7)", {
+        let mut c = base.clone();
+        c.strided_winograd = true;
+        c
+    });
+
+    // greedy vs optimal mapping
+    {
+        let dse = Dse::new(base.clone());
+        let g = dse.run_policy(&zoo::googlenet(), Policy::Greedy).unwrap();
+        let i = dse.run_policy(&zoo::inception_v4(), Policy::Greedy).unwrap();
+        t.row(vec![
+            "greedy node-cost mapping (no PBQP)".into(),
+            fnum(g.total_latency_ms, 3),
+            fnum(i.total_latency_ms, 3),
+        ]);
+    }
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_optimizations_cost_latency() {
+        let base = DseConfig::alveo_u200();
+        let l_base = latency(base.clone(), "googlenet");
+        let mut ns = base.clone();
+        ns.force_dataflow = Some(Dataflow::NS);
+        let l_ns = latency(ns, "googlenet");
+        assert!(l_ns >= l_base - 1e-9, "NS-only {l_ns} vs full {l_base}");
+        let mut nf = base.clone();
+        nf.opts.sram_fuse = false;
+        let l_nf = latency(nf, "googlenet");
+        assert!(l_nf >= l_base - 1e-9, "no-fuse {l_nf} vs full {l_base}");
+    }
+
+    #[test]
+    fn strided_winograd_helps_or_ties_stem_heavy_nets() {
+        // the extension adds an option; the optimal mapping can only
+        // improve or stay equal
+        let base = DseConfig::alveo_u200();
+        let mut ext = base.clone();
+        ext.strided_winograd = true;
+        let l_base = latency(base, "inception-v4");
+        let l_ext = latency(ext, "inception-v4");
+        assert!(l_ext <= l_base + 1e-9, "extension {l_ext} vs base {l_base}");
+    }
+}

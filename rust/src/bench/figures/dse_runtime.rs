@@ -1,0 +1,104 @@
+//! §6.1.2 runtime claim — "The algorithm mapping obtained in DYNAMAP
+//! ... is obtained within 2 seconds on an AMD 3700X cpu" — plus the
+//! O(N·d²) scaling of Theorem 4.1 on synthetic chains.
+
+use crate::dse::{Dse, DseConfig};
+use crate::graph::zoo;
+use crate::pbqp::{solve_sp, Matrix, Problem};
+use crate::util::table::{fnum, Table};
+use std::time::Instant;
+
+/// Build a synthetic chain PBQP instance with `n` vertices, domain `d`.
+pub fn chain_problem(n: usize, d: usize) -> Problem {
+    let mut p = Problem::default();
+    let labels: Vec<String> = (0..d).map(|i| format!("o{i}")).collect();
+    for i in 0..n {
+        let costs = (0..d).map(|k| ((i * 7 + k * 13) % 17) as f64).collect();
+        p.add_vertex(&format!("v{i}"), costs, labels.clone());
+    }
+    for i in 0..n - 1 {
+        let m = Matrix::from_fn(d, d, |a, b| ((a * 3 + b * 5 + i) % 11) as f64);
+        p.add_edge(i, i + 1, m);
+    }
+    p
+}
+
+pub fn run() -> Vec<Table> {
+    let mut t = Table::new(
+        "DSE runtime (paper: < 2 s for the algorithm mapping)",
+        &["stage", "model", "time"],
+    );
+    for model in ["googlenet", "inception-v4"] {
+        let cnn = zoo::by_name(model).unwrap();
+        let dse = Dse::new(DseConfig::alveo_u200());
+        let t0 = Instant::now();
+        let arch = dse.identify(&cnn);
+        let algo1_t = t0.elapsed();
+        let t1 = Instant::now();
+        let g = dse.build_graph(&cnn, arch.p1, arch.p2);
+        let build_t = t1.elapsed();
+        let t2 = Instant::now();
+        let _ = g.solve(&cnn);
+        let solve_t = t2.elapsed();
+        t.row(vec!["Algorithm 1".into(), model.into(), format!("{algo1_t:.2?}")]);
+        t.row(vec!["cost graph".into(), model.into(), format!("{build_t:.2?}")]);
+        t.row(vec!["PBQP solve".into(), model.into(), format!("{solve_t:.2?}")]);
+    }
+
+    let mut scale = Table::new(
+        "PBQP solver scaling on synthetic chains (Theorem 4.1: O(N·d²))",
+        &["N", "d", "solve time µs", "µs / (N·d²)"],
+    );
+    for &(n, d) in &[(100usize, 3usize), (1000, 3), (10000, 3), (1000, 6), (1000, 12)] {
+        let p = chain_problem(n, d);
+        let t0 = Instant::now();
+        let sol = solve_sp(&p, 0, n - 1).expect("chain is SP");
+        let dt = t0.elapsed().as_secs_f64() * 1e6;
+        assert!(sol.cost.is_finite());
+        scale.row(vec![
+            n.to_string(),
+            d.to_string(),
+            fnum(dt, 1),
+            fnum(dt / (n as f64 * (d * d) as f64), 4),
+        ]);
+    }
+    vec![t, scale]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inception_mapping_under_2s() {
+        let cnn = zoo::inception_v4();
+        let dse = Dse::new(DseConfig::alveo_u200());
+        let arch = dse.identify(&cnn);
+        let t0 = Instant::now();
+        let g = dse.build_graph(&cnn, arch.p1, arch.p2);
+        let _ = g.solve(&cnn);
+        let dt = t0.elapsed();
+        assert!(
+            dt.as_secs_f64() < 2.0,
+            "PBQP mapping took {dt:.2?} (paper claims < 2 s)"
+        );
+    }
+
+    #[test]
+    fn chain_scaling_roughly_linear_in_n() {
+        // time(10·N) should be ≲ 30× time(N) — crude but catches
+        // accidental quadratic blowup in the reduction loop
+        let t_for = |n: usize| {
+            let p = chain_problem(n, 3);
+            let t0 = Instant::now();
+            solve_sp(&p, 0, n - 1).unwrap();
+            t0.elapsed().as_secs_f64()
+        };
+        let t1k = t_for(1000).max(1e-6);
+        let t4k = t_for(4000);
+        assert!(
+            t4k / t1k < 40.0,
+            "scaling looks super-linear: {t1k:.6}s → {t4k:.6}s"
+        );
+    }
+}

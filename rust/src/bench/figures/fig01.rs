@@ -1,0 +1,73 @@
+//! Figure 1 — "Computation and Memory Loads of GEMM-CONV algorithms on
+//! different layer configurations".
+//!
+//! Three representative layer configurations (an Inception-v4
+//! factorized 1×7 layer, a mid-network 3×3 layer, a deep 5×5 GoogLeNet
+//! layer) × three algorithms, reporting multiplication count and
+//! activation memory traffic normalized to im2col — the trade-off
+//! triangle that motivates dynamic algorithm mapping.
+
+use crate::cost::conv::{Algo, CostModel};
+use crate::cost::Device;
+use crate::graph::layer::ConvSpec;
+use crate::util::table::{fnum, Table};
+
+/// The three layer configurations plotted in Fig. 1.
+pub fn configs() -> Vec<(&'static str, ConvSpec)> {
+    vec![
+        // (a) memory-bound factorized kernel (Inception-B style)
+        ("a: 17×17×1024, 1×7", ConvSpec::new(1024, 256, 17, 17, 1, 7, 1, 0, 3)),
+        // (b) balanced mid-network square kernel
+        ("b: 28×28×192, 3×3", ConvSpec::new(192, 256, 28, 28, 3, 3, 1, 1, 1)),
+        // (c) compute-heavy large kernel on deep maps (GoogLeNet 5×5)
+        ("c: 7×7×832, 5×5", ConvSpec::new(832, 128, 7, 7, 5, 5, 1, 2, 2)),
+    ]
+}
+
+pub fn run() -> Vec<Table> {
+    let cm = CostModel::new(Device::alveo_u200());
+    let mut t = Table::new(
+        "Fig. 1 — computation & memory loads (normalized to im2col)",
+        &["layer config", "algorithm", "mults (G)", "mem (M elems)", "mults ×", "mem ×"],
+    );
+    for (label, spec) in configs() {
+        let (base_mult, base_mem) = cm.loads(&spec, Algo::Im2col);
+        for algo in Algo::available(&spec, 2, 3, false) {
+            let (mults, mem) = cm.loads(&spec, algo);
+            t.row(vec![
+                label.to_string(),
+                algo.name(),
+                fnum(mults as f64 / 1e9, 3),
+                fnum(mem as f64 / 1e6, 3),
+                fnum(mults as f64 / base_mult as f64, 2),
+                fnum(mem as f64 / base_mem as f64, 2),
+            ]);
+        }
+    }
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::conv::{Algo, CostModel};
+    use crate::cost::Device;
+
+    #[test]
+    fn shape_of_fig1_tradeoffs() {
+        let cm = CostModel::new(Device::alveo_u200());
+        // (a) factorized 1×7: kn2row moves less memory than im2col
+        let (_, spec_a) = &configs()[0];
+        let (_, mem_im) = cm.loads(spec_a, Algo::Im2col);
+        let (_, mem_kn) = cm.loads(spec_a, Algo::Kn2row);
+        assert!(mem_kn < mem_im, "kn2row {mem_kn} should move less than im2col {mem_im}");
+        // (b) 3×3: winograd multiplies less than both
+        let (_, spec_b) = &configs()[1];
+        let (m_im, _) = cm.loads(spec_b, Algo::Im2col);
+        let (m_wi, _) = cm.loads(spec_b, Algo::Winograd { m: 2, r: 3 });
+        assert!(m_wi < m_im);
+        // table renders with 3 configs × ≥2 algos
+        let tables = run();
+        assert!(tables[0].rows.len() >= 7);
+    }
+}

@@ -1,0 +1,70 @@
+//! Regeneration of every table and figure in the paper's evaluation
+//! (§6), plus the ablation studies DESIGN.md calls out.
+//!
+//! Each module returns [`crate::util::table::Table`]s that are printed
+//! and optionally written as CSV into a reports directory; the
+//! `cargo bench` targets under `rust/benches/` wrap these.
+
+pub mod fig01;
+pub mod util_figs;
+pub mod module_figs;
+pub mod table3;
+pub mod table4;
+pub mod dse_runtime;
+pub mod ablations;
+
+use crate::util::cli::Args;
+use crate::util::table::Table;
+
+/// Write tables to stdout and to `<dir>/<stem>.csv` when `dir` is set.
+pub fn emit(tables: &[Table], dir: Option<&str>, stem: &str) {
+    for (i, t) in tables.iter().enumerate() {
+        println!("{}", t.render());
+        if let Some(d) = dir {
+            std::fs::create_dir_all(d).ok();
+            let path = if tables.len() == 1 {
+                format!("{d}/{stem}.csv")
+            } else {
+                format!("{d}/{stem}_{i}.csv")
+            };
+            if let Err(e) = std::fs::write(&path, t.to_csv()) {
+                eprintln!("warn: write {path}: {e}");
+            }
+        }
+    }
+}
+
+/// `dynamap figures [--out reports/] [--only NAME]` — run everything.
+pub fn cli(args: &Args) -> i32 {
+    let out = args.get("out");
+    let only = args.get("only");
+    let run = |name: &str| only.is_none() || only == Some(name);
+    if run("fig01") {
+        emit(&fig01::run(), out, "fig01_algo_loads");
+    }
+    if run("fig09") {
+        emit(&util_figs::run("inception-v4"), out, "fig09_util_inception_v4");
+    }
+    if run("fig10") {
+        emit(&util_figs::run("googlenet"), out, "fig10_util_googlenet");
+    }
+    if run("fig11") {
+        emit(&module_figs::run("inception-v4"), out, "fig11_modules_inception_v4");
+    }
+    if run("fig12") {
+        emit(&module_figs::run("googlenet"), out, "fig12_modules_googlenet");
+    }
+    if run("table3") {
+        emit(&table3::run(), out, "table3_sota");
+    }
+    if run("table4") {
+        emit(&table4::run(), out, "table4_improvement");
+    }
+    if run("dse") {
+        emit(&dse_runtime::run(), out, "dse_runtime");
+    }
+    if run("ablations") {
+        emit(&ablations::run(), out, "ablations");
+    }
+    0
+}

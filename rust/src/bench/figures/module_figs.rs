@@ -1,0 +1,144 @@
+//! Figures 11/12 — per-module execution time (computation +
+//! communication) under the four mappings of §6.1.2:
+//!
+//! * `bl3` im2col-only, `bl4` kn2row-applied, `bl5` wino-applied,
+//! * `OPT` — the PBQP mapping returned by DYNAMAP.
+//!
+//! Layers are grouped into their Inception/Reduction modules by name
+//! prefix, matching the x-axis of the paper's plots.
+
+use crate::cost::graph_build::{MappingResult, Policy};
+use crate::dse::{Dse, DseConfig, Plan};
+use crate::graph::Cnn;
+use crate::graph::zoo;
+use crate::util::table::{fnum, Table};
+use std::collections::BTreeMap;
+
+/// Module key of a layer name ("inception_3a/5x5" → "inception_3a").
+fn module_of(name: &str) -> String {
+    name.split('/').next().unwrap_or(name).to_string()
+}
+
+/// Sum per-module (compute + inbound transition) seconds for a mapping.
+pub fn module_times(cnn: &Cnn, plan: &Plan) -> BTreeMap<String, f64> {
+    let mapping: &MappingResult = &plan.mapping;
+    let mut by_module: BTreeMap<String, f64> = BTreeMap::new();
+    for l in &mapping.layers {
+        *by_module.entry(module_of(&l.name)).or_insert(0.0) += l.cost.seconds;
+    }
+    // distribute transition time proportionally to module compute time
+    // (transitions belong to edges; the paper's module bars include the
+    // communication latency of the module's layers)
+    let total_compute: f64 = by_module.values().sum();
+    if total_compute > 0.0 {
+        let scale = mapping.transition_sec / total_compute;
+        for v in by_module.values_mut() {
+            *v += *v * scale;
+        }
+    }
+    let _ = cnn;
+    by_module
+}
+
+pub struct ModuleFig {
+    pub table: Table,
+    /// per-policy end-to-end latency ms: (bl3, bl4, bl5, opt)
+    pub e2e_ms: (f64, f64, f64, f64),
+}
+
+pub fn compute(model: &str) -> ModuleFig {
+    let cnn = zoo::by_name(model).expect("unknown model");
+    let dse = Dse::new(DseConfig::alveo_u200());
+    let opt = dse.run(&cnn).unwrap();
+    let bl3 = dse.run_policy(&cnn, Policy::Im2colOnly).unwrap();
+    let bl4 = dse.run_policy(&cnn, Policy::Kn2rowApplied).unwrap();
+    let bl5 = dse.run_policy(&cnn, Policy::WinoApplied).unwrap();
+
+    let m3 = module_times(&cnn, &bl3);
+    let m4 = module_times(&cnn, &bl4);
+    let m5 = module_times(&cnn, &bl5);
+    let mo = module_times(&cnn, &opt);
+
+    let mut t = Table::new(
+        &format!(
+            "Fig. {} — module execution times (ms): {model}",
+            if model.starts_with("incep") { 11 } else { 12 }
+        ),
+        &["module", "bl3 im2col", "bl4 kn2row", "bl5 wino", "OPT"],
+    );
+    for module in mo.keys() {
+        t.row(vec![
+            module.clone(),
+            fnum(m3.get(module).copied().unwrap_or(0.0) * 1e3, 4),
+            fnum(m4.get(module).copied().unwrap_or(0.0) * 1e3, 4),
+            fnum(m5.get(module).copied().unwrap_or(0.0) * 1e3, 4),
+            fnum(mo[module] * 1e3, 4),
+        ]);
+    }
+    ModuleFig {
+        table: t,
+        e2e_ms: (
+            bl3.total_latency_ms,
+            bl4.total_latency_ms,
+            bl5.total_latency_ms,
+            opt.total_latency_ms,
+        ),
+    }
+}
+
+pub fn run(model: &str) -> Vec<Table> {
+    let f = compute(model);
+    let mut sum = Table::new("end-to-end", &["mapping", "latency ms"]);
+    for (l, v) in [
+        ("bl3 im2col-only", f.e2e_ms.0),
+        ("bl4 kn2row-applied", f.e2e_ms.1),
+        ("bl5 wino-applied", f.e2e_ms.2),
+        ("OPT (DYNAMAP)", f.e2e_ms.3),
+    ] {
+        sum.row(vec![l.to_string(), fnum(v, 3)]);
+    }
+    vec![f.table, sum]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn opt_never_worse_per_network() {
+        for model in ["googlenet", "inception-v4"] {
+            let f = compute(model);
+            let (bl3, bl4, bl5, opt) = f.e2e_ms;
+            assert!(opt <= bl3 + 1e-9, "{model}: OPT {opt} vs bl3 {bl3}");
+            assert!(opt <= bl4 + 1e-9, "{model}: OPT {opt} vs bl4 {bl4}");
+            assert!(opt <= bl5 + 1e-9, "{model}: OPT {opt} vs bl5 {bl5}");
+        }
+    }
+
+    #[test]
+    fn kn2row_shines_on_inception_not_googlenet() {
+        // §6.1.2: "kn2row almost always out-performs im2col" on
+        // Inception-v4; on GoogLeNet it is "less advantageous".
+        let inc = compute("inception-v4");
+        assert!(
+            inc.e2e_ms.1 < inc.e2e_ms.0,
+            "inception: kn2row {} should beat im2col {}",
+            inc.e2e_ms.1,
+            inc.e2e_ms.0
+        );
+        let goo = compute("googlenet");
+        let kn_gain_goo = goo.e2e_ms.0 / goo.e2e_ms.1;
+        let kn_gain_inc = inc.e2e_ms.0 / inc.e2e_ms.1;
+        assert!(
+            kn_gain_inc > kn_gain_goo,
+            "kn2row advantage should be larger on inception ({kn_gain_inc:.3} vs {kn_gain_goo:.3})"
+        );
+    }
+
+    #[test]
+    fn module_grouping() {
+        assert_eq!(module_of("inception_3a/5x5"), "inception_3a");
+        assert_eq!(module_of("conv1/7x7_s2"), "conv1");
+        assert_eq!(module_of("stem"), "stem");
+    }
+}

@@ -1,0 +1,161 @@
+//! Table 3 — comparison with state-of-the-art implementations, plus the
+//! §6.2 FlexCNN projection.
+//!
+//! Our rows come from the full DSE + cost model on the U200 meta data;
+//! the competitor rows ([12] Ma'18, [27] Yu'19, [31]/[25]) are constants
+//! quoted from the paper (their bitstreams cannot be re-run). The
+//! comparison of interest is the *shape*: who wins and by what factor.
+
+use crate::dse::{Dse, DseConfig};
+use crate::graph::zoo;
+use crate::util::table::{fnum, Table};
+
+/// Published competitor rows (from the paper's Table 3).
+pub struct Published {
+    pub name: &'static str,
+    pub network: &'static str,
+    pub device: &'static str,
+    pub datatype: &'static str,
+    pub freq_mhz: f64,
+    pub throughput_gops: f64,
+    pub latency_ms: f64,
+}
+
+pub fn published() -> Vec<Published> {
+    vec![
+        Published {
+            name: "[12] Ma et al.",
+            network: "googlenet",
+            device: "Stratix 10 GX",
+            datatype: "INT16",
+            freq_mhz: 300.0,
+            throughput_gops: 557.0,
+            latency_ms: 5.7,
+        },
+        Published {
+            name: "[27] Yu et al.",
+            network: "googlenet",
+            device: "KU115",
+            datatype: "INT16",
+            freq_mhz: 250.0,
+            throughput_gops: 1630.0,
+            latency_ms: 3.8,
+        },
+        Published {
+            name: "[31] Zhang et al.",
+            network: "inception-v4",
+            device: "XCVU9P",
+            datatype: "INT8",
+            freq_mhz: 300.0,
+            throughput_gops: 3448.0,
+            latency_ms: 5.29,
+        },
+        Published {
+            name: "[25] Wei et al.",
+            network: "inception-v4",
+            device: "XCVU9P",
+            datatype: "INT8",
+            freq_mhz: 180.0,
+            throughput_gops: 1528.0,
+            latency_ms: 6.03,
+        },
+    ]
+}
+
+/// Paper-reported DYNAMAP rows (for calibration of our simulated rows).
+pub fn paper_dynamap() -> [(/*net*/ &'static str, /*lat ms*/ f64, /*gops*/ f64); 2] {
+    [("googlenet", 1.34, 3568.0), ("inception-v4", 4.39, 3650.0)]
+}
+
+/// §6.2 FlexCNN projection: L = 24.7 ms × (8³·93%)/(P1·P2·100%) × GOPs/2.9.
+pub fn flexcnn_projection(p1: usize, p2: usize, gops: f64) -> f64 {
+    24.7 * (8.0 * 8.0 * 8.0 * 0.93) / (p1 as f64 * p2 as f64) * (gops / 2.9)
+}
+
+pub fn run() -> Vec<Table> {
+    let dse = Dse::new(DseConfig::alveo_u200());
+    let mut t = Table::new(
+        "Table 3 — comparison with state-of-the-art (our rows simulated on U200 meta)",
+        &["impl", "network", "device", "dtype", "MHz", "GOP/s", "latency ms"],
+    );
+    let mut proj = Table::new(
+        "§6.2 — FlexCNN best-case projection",
+        &["network", "projected ms", "DYNAMAP (ours) ms", "paper DYNAMAP ms"],
+    );
+    for model in ["googlenet", "inception-v4"] {
+        let cnn = zoo::by_name(model).unwrap();
+        let plan = dse.run(&cnn).unwrap();
+        t.row(vec![
+            "DYNAMAP (this repro)".into(),
+            model.into(),
+            "U200 (simulated)".into(),
+            "INT8".into(),
+            fnum(dse.config.device.freq_mhz, 0),
+            fnum(plan.throughput_gops, 0),
+            fnum(plan.total_latency_ms, 2),
+        ]);
+        let (_, paper_lat, paper_gops) =
+            paper_dynamap().iter().find(|(n, _, _)| *n == model).map(|&(n, l, g)| (n, l, g)).unwrap();
+        t.row(vec![
+            "DYNAMAP (paper)".into(),
+            model.into(),
+            "Alveo U200".into(),
+            "INT8".into(),
+            "286".into(),
+            fnum(paper_gops, 0),
+            fnum(paper_lat, 2),
+        ]);
+        // FlexCNN projection uses the paper's own GOPs accounting
+        // (≈3 / ≈9 GOPs)
+        let gops_paper = if model == "googlenet" { 3.0 } else { 9.0 };
+        proj.row(vec![
+            model.into(),
+            fnum(flexcnn_projection(plan.p1, plan.p2, gops_paper), 2),
+            fnum(plan.total_latency_ms, 2),
+            fnum(paper_lat, 2),
+        ]);
+    }
+    for p in published() {
+        t.row(vec![
+            p.name.into(),
+            p.network.into(),
+            p.device.into(),
+            p.datatype.into(),
+            fnum(p.freq_mhz, 0),
+            fnum(p.throughput_gops, 0),
+            fnum(p.latency_ms, 2),
+        ]);
+    }
+    vec![t, proj]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flexcnn_formula_matches_paper_examples() {
+        // paper: L_projected-GN = 2 ms with 92×66 PEs and 3 GOPs
+        let gn = flexcnn_projection(92, 66, 3.0);
+        assert!((1.8..2.2).contains(&gn), "GN projection {gn}");
+        // L_projected-Incp4 = 6 ms with 95×64 PEs and 9 GOPs
+        let incp = flexcnn_projection(95, 64, 9.0);
+        assert!((5.5..6.5).contains(&incp), "Incp4 projection {incp}");
+    }
+
+    #[test]
+    fn our_googlenet_beats_published_fpga_latencies() {
+        // the shape claim: DYNAMAP (ours) < [12] 5.7ms and < [27] 3.8ms
+        let dse = Dse::new(DseConfig::alveo_u200());
+        let plan = dse.run(&zoo::googlenet()).unwrap();
+        for p in published().iter().filter(|p| p.network == "googlenet") {
+            assert!(
+                plan.total_latency_ms < p.latency_ms,
+                "ours {} vs {} {}",
+                plan.total_latency_ms,
+                p.name,
+                p.latency_ms
+            );
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! Figures 9/10 — per-layer effective PE utilization μ under three
+//! hardware configurations:
+//!
+//! * `bl1` "square-NS": largest square array within the DSP budget
+//!   (78×78 for 6084), NS dataflow only;
+//! * `bl2` "algo1-NS": Algorithm-1 rectangular array, NS only;
+//! * `OPT` "algo1-optimized": Algorithm-1 array + per-layer best
+//!   dataflow.
+//!
+//! All three use the framework's returned algorithm mapping, exactly as
+//! §6.1.1 describes. The summary row reproduces the paper's headline:
+//! "32% and 35% lower end-to-end latency for GoogLeNet and
+//! Inception-v4" vs bl1.
+
+use crate::cost::gemm::Dataflow;
+use crate::dse::{Dse, DseConfig};
+use crate::graph::layer::Op;
+use crate::graph::zoo;
+use crate::util::table::{fnum, Table};
+
+/// Largest square P_SA within the DSP budget (78 for 6084).
+pub fn square_side(cap: usize) -> usize {
+    let mut s = 1;
+    while (s + 1) * (s + 1) <= cap {
+        s += 1;
+    }
+    s
+}
+
+pub struct UtilFig {
+    pub layer_table: Table,
+    pub summary: Table,
+    /// (bl1, bl2, opt) end-to-end latency in ms.
+    pub latency_ms: (f64, f64, f64),
+    /// mean μ per configuration.
+    pub mean_mu: (f64, f64, f64),
+}
+
+pub fn compute(model: &str) -> UtilFig {
+    let cnn = zoo::by_name(model).expect("unknown model");
+    let cap = 6084;
+    let sq = square_side(cap);
+
+    // OPT: full framework
+    let dse = Dse::new(DseConfig::alveo_u200());
+    let opt = dse.run(&cnn).unwrap();
+
+    // NS-only config used by both baselines
+    let mut ns_cfg = DseConfig::alveo_u200();
+    ns_cfg.force_dataflow = Some(Dataflow::NS);
+    let ns_dse = Dse::new(ns_cfg);
+    let bl1 = ns_dse.run_fixed_shape(&cnn, sq, sq).unwrap();
+    let bl2 = ns_dse.run_fixed_shape(&cnn, opt.p1, opt.p2).unwrap();
+
+    let cm = dse.config.cost_model();
+    let mut ns_cm = cm.clone();
+    ns_cm.force_dataflow = Some(Dataflow::NS);
+
+    let mut t = Table::new(
+        &format!(
+            "Fig. {} — effective PE utilization μ per layer: {model}",
+            if model.starts_with("incep") { 9 } else { 10 }
+        ),
+        &["layer", "algo (OPT)", "bl1 square-NS μ", "bl2 algo1-NS μ", "OPT μ"],
+    );
+    let (mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0);
+    let mut n = 0.0;
+    for l in &opt.mapping.layers {
+        let Op::Conv(spec) = &cnn.node(l.node).op else { continue };
+        let algo = l.cost.algo;
+        let mu1 = ns_cm.best_conv_cost(spec, algo, sq, sq).utilization;
+        let mu2 = ns_cm.best_conv_cost(spec, algo, opt.p1, opt.p2).utilization;
+        let mu3 = l.cost.utilization;
+        s1 += mu1;
+        s2 += mu2;
+        s3 += mu3;
+        n += 1.0;
+        t.row(vec![
+            l.name.clone(),
+            algo.name(),
+            fnum(mu1, 3),
+            fnum(mu2, 3),
+            fnum(mu3, 3),
+        ]);
+    }
+
+    let mut sum = Table::new(
+        &format!("{model} — summary (paper: 32%/35% latency reduction vs bl1)"),
+        &["config", "array", "mean μ", "e2e latency ms", "vs bl1"],
+    );
+    for (label, plan, mu) in [
+        ("bl1 square-NS", &bl1, s1 / n),
+        ("bl2 algo1-NS", &bl2, s2 / n),
+        ("OPT (DYNAMAP)", &opt, s3 / n),
+    ] {
+        sum.row(vec![
+            label.to_string(),
+            format!("{}×{}", plan.p1, plan.p2),
+            fnum(mu, 3),
+            fnum(plan.total_latency_ms, 3),
+            format!(
+                "-{:.0}%",
+                (1.0 - plan.total_latency_ms / bl1.total_latency_ms) * 100.0
+            ),
+        ]);
+    }
+
+    UtilFig {
+        layer_table: t,
+        summary: sum,
+        latency_ms: (bl1.total_latency_ms, bl2.total_latency_ms, opt.total_latency_ms),
+        mean_mu: (s1 / n, s2 / n, s3 / n),
+    }
+}
+
+pub fn run(model: &str) -> Vec<Table> {
+    let f = compute(model);
+    vec![f.layer_table, f.summary]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn square_side_math() {
+        assert_eq!(square_side(6084), 78);
+        assert_eq!(square_side(1024), 32);
+        assert_eq!(square_side(2), 1);
+    }
+
+    #[test]
+    fn opt_improves_on_baselines_googlenet() {
+        let f = compute("googlenet");
+        let (bl1, bl2, opt) = f.latency_ms;
+        assert!(opt <= bl2 + 1e-9, "OPT {opt} should beat bl2 {bl2}");
+        assert!(opt < bl1, "OPT {opt} should beat bl1 {bl1}");
+        // paper reports 32% vs bl1; assert a material improvement and
+        // record the exact number in EXPERIMENTS.md
+        let gain = 1.0 - opt / bl1;
+        assert!(gain > 0.10, "latency gain vs square-NS = {gain:.2}");
+        // OPT mean utilization should beat NS-only on the same array
+        assert!(f.mean_mu.2 >= f.mean_mu.1 - 1e-9);
+    }
+}

@@ -1,0 +1,105 @@
+//! Mini-criterion: wall-clock measurement with warm-up, adaptive
+//! iteration counts and simple statistics. Used by the `cargo bench`
+//! targets (all registered with `harness = false`).
+
+use std::time::{Duration, Instant};
+
+/// One measured benchmark.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Measurement {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10.3?} /iter (median {:.3?}, min {:.3?}, {} iters)",
+            self.name, self.mean, self.median, self.min, self.iters
+        )
+    }
+}
+
+/// The bench runner.
+pub struct Bencher {
+    /// Target total measurement time per benchmark.
+    pub budget: Duration,
+    pub warmup: Duration,
+    pub results: Vec<Measurement>,
+}
+
+impl Bencher {
+    pub fn new() -> Bencher {
+        let fast = std::env::var("DYNAMAP_BENCH_FAST").is_ok();
+        Bencher {
+            budget: if fast { Duration::from_millis(200) } else { Duration::from_secs(2) },
+            warmup: if fast { Duration::from_millis(50) } else { Duration::from_millis(300) },
+            results: Vec::new(),
+        }
+    }
+
+    /// Measure `f`, preventing it from being optimized away via its
+    /// returned value.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &Measurement {
+        // warm-up + calibration
+        let t0 = Instant::now();
+        let mut calib_iters = 0u64;
+        while t0.elapsed() < self.warmup {
+            std::hint::black_box(f());
+            calib_iters += 1;
+        }
+        let per_iter = self.warmup.as_secs_f64() / calib_iters.max(1) as f64;
+        let target_iters =
+            ((self.budget.as_secs_f64() / per_iter.max(1e-9)) as u64).clamp(5, 10_000);
+
+        let mut samples = Vec::with_capacity(target_iters as usize);
+        for _ in 0..target_iters {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t.elapsed());
+        }
+        samples.sort();
+        let total: Duration = samples.iter().sum();
+        let m = Measurement {
+            name: name.to_string(),
+            iters: target_iters,
+            mean: total / target_iters as u32,
+            median: samples[samples.len() / 2],
+            min: samples[0],
+            max: *samples.last().unwrap(),
+        };
+        println!("{}", m.report());
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        std::env::set_var("DYNAMAP_BENCH_FAST", "1");
+        let mut b = Bencher::new();
+        let m = b.bench("spin", || {
+            let mut s = 0u64;
+            for i in 0..1000 {
+                s = s.wrapping_add(i);
+            }
+            s
+        });
+        assert!(m.mean.as_nanos() > 0);
+        assert!(m.min <= m.median && m.median <= m.max);
+    }
+}

@@ -1,0 +1,9 @@
+//! Benchmark harness + paper figure/table regeneration.
+//!
+//! [`harness`] is a minimal criterion substitute (criterion is not
+//! available in the offline build); [`figures`] regenerates every table
+//! and figure of the paper's evaluation section (§6) — each is also
+//! exposed as a `cargo bench` target under `rust/benches/`.
+
+pub mod harness;
+pub mod figures;

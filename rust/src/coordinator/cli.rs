@@ -1,0 +1,128 @@
+//! `simulate` and `infer` CLI subcommands.
+
+use crate::cost::graph_build::Policy;
+use crate::util::cli::Args;
+use crate::util::table::Table;
+
+/// `dynamap simulate --model mini-inception` — run the cycle-level
+/// overlay simulator on every conv layer of a (small) model under its
+/// DSE-chosen mapping and cross-check measured vs analytical cycles.
+pub fn simulate(args: &Args) -> i32 {
+    use crate::algos::tensor::{Tensor, Weights};
+    use crate::dse::{Dse, DseConfig};
+    use crate::graph::layer::Op;
+    use crate::graph::zoo;
+    use crate::overlay::layer_sim::simulate_layer;
+    use crate::util::rng::Rng;
+
+    let name = args.get_or("model", "mini-inception");
+    let Some(cnn) = zoo::by_name(name) else {
+        eprintln!("unknown model '{name}'");
+        return 1;
+    };
+    if cnn.total_macs() > 50_000_000 {
+        eprintln!(
+            "'{name}' is too large for functional cycle simulation; use `dse` (analytic) instead"
+        );
+        return 1;
+    }
+    // small array so per-layer GEMMs stay quick
+    let p1 = args.get_usize("p1", 16);
+    let p2 = args.get_usize("p2", 16);
+    let dse = Dse::new(DseConfig::alveo_u200());
+    let g = dse.build_graph(&cnn, p1, p2);
+    let mapping = g.solve(&cnn);
+    let mut rng = Rng::new(7);
+    let mut t = Table::new(
+        &format!("{name} — overlay simulation on {p1}×{p2} array"),
+        &["layer", "algo", "dataflow", "CU cycles", "aux cycles", "model cycles", "sim μ"],
+    );
+    let mut ok = true;
+    for l in &mapping.layers {
+        let node = cnn.node(l.node);
+        let Op::Conv(spec) = &node.op else { continue };
+        let input = Tensor::random(spec.c_in, spec.h1, spec.h2, &mut rng);
+        let w = Weights::random(spec.c_out, spec.c_in, spec.k1, spec.k2, &mut rng);
+        let sim = simulate_layer(&input, &w, spec, l.cost.algo, l.cost.dataflow, p1, p2);
+        let model_cycles = l.cost.cycles;
+        // Eq. 10–12 model the Computing-Unit GEMM cycles (+ LT for
+        // Winograd); the simulator separately exposes the aux-module
+        // cycles (Pad-and-Accumulate tail) that the paper's pipelining
+        // assumption hides for realistic layer/array sizes.
+        let close =
+            (sim.cu_cycles as f64 - model_cycles as f64).abs() / (model_cycles as f64) < 0.25;
+        ok &= close;
+        t.row(vec![
+            l.name.clone(),
+            l.cost.algo.name(),
+            l.cost.dataflow.name().into(),
+            sim.cu_cycles.to_string(),
+            sim.aux_cycles.to_string(),
+            model_cycles.to_string(),
+            format!("{:.3}", sim.utilization),
+        ]);
+    }
+    println!("{}", t.render());
+    if ok {
+        println!("simulated CU cycles agree with the Eq. 10-12 model (±25%)");
+        0
+    } else {
+        println!("WARNING: simulation diverged from the model on some layers");
+        1
+    }
+}
+
+/// `dynamap infer --artifacts artifacts --policy opt --n 20` — run the
+/// end-to-end PJRT inference engine: golden validation + latency bench.
+pub fn infer(args: &Args) -> i32 {
+    use super::engine::{EnginePolicy, InferenceEngine};
+
+    let dir = args.get_or("artifacts", "artifacts");
+    let n = args.get_usize("n", 20);
+    let policy = match args.get_or("policy", "opt") {
+        "opt" | "optimal" => EnginePolicy::Optimal,
+        "im2col" => EnginePolicy::Baseline(Policy::Im2colOnly),
+        "kn2row" => EnginePolicy::Baseline(Policy::Kn2rowApplied),
+        "wino" | "winograd" => EnginePolicy::Baseline(Policy::WinoApplied),
+        "greedy" => EnginePolicy::Baseline(Policy::Greedy),
+        other => {
+            eprintln!("unknown policy '{other}'");
+            return 2;
+        }
+    };
+    let mut engine = match InferenceEngine::new(dir, policy) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("engine init failed: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "engine ready: {} executables compiled, mapping: {:?}",
+        engine.loaded_executables(),
+        engine.algo_map
+    );
+    match engine.validate_golden() {
+        Ok(err) => {
+            println!("golden validation: max |Δ| = {err:.2e}");
+            if err > 1e-3 {
+                eprintln!("FAIL: golden mismatch");
+                return 1;
+            }
+        }
+        Err(e) => {
+            eprintln!("golden validation failed: {e}");
+            return 1;
+        }
+    }
+    match engine.bench(n) {
+        Ok(stats) => {
+            println!("latency ({n} runs): {}", stats.summary());
+            0
+        }
+        Err(e) => {
+            eprintln!("bench failed: {e}");
+            1
+        }
+    }
+}

@@ -1,0 +1,94 @@
+//! Latency accounting for the inference engine.
+
+/// Aggregated latency statistics over repeated inferences.
+#[derive(Debug, Clone)]
+pub struct LatencyStats {
+    pub samples_us: Vec<f64>,
+}
+
+impl LatencyStats {
+    pub fn new() -> LatencyStats {
+        LatencyStats { samples_us: Vec::new() }
+    }
+
+    pub fn push(&mut self, us: f64) {
+        self.samples_us.push(us);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        self.samples_us.iter().sum::<f64>() / self.samples_us.len() as f64
+    }
+
+    fn sorted(&self) -> Vec<f64> {
+        let mut v = self.samples_us.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        let v = self.sorted();
+        if v.is_empty() {
+            return 0.0;
+        }
+        let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+        v[idx.min(v.len() - 1)]
+    }
+
+    pub fn min(&self) -> f64 {
+        self.sorted().first().copied().unwrap_or(0.0)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.sorted().last().copied().unwrap_or(0.0)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.1}µs p50={:.1}µs p95={:.1}µs min={:.1}µs max={:.1}µs",
+            self.count(),
+            self.mean(),
+            self.percentile(50.0),
+            self.percentile(95.0),
+            self.min(),
+            self.max()
+        )
+    }
+}
+
+impl Default for LatencyStats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basics() {
+        let mut s = LatencyStats::new();
+        for v in [10.0, 20.0, 30.0, 40.0, 50.0] {
+            s.push(v);
+        }
+        assert_eq!(s.mean(), 30.0);
+        assert_eq!(s.percentile(50.0), 30.0);
+        assert_eq!(s.min(), 10.0);
+        assert_eq!(s.max(), 50.0);
+        assert_eq!(s.count(), 5);
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        let s = LatencyStats::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.percentile(99.0), 0.0);
+    }
+}

@@ -1,0 +1,14 @@
+//! L3 coordinator: the end-to-end inference engine.
+//!
+//! Chains per-layer PJRT executables according to the DSE-chosen
+//! algorithm mapping — the functional embodiment of dynamic algorithm
+//! mapping: each conv layer runs the AOT artifact of *its* algorithm,
+//! while pooling and concat execute natively in Rust between them.
+//! Python never runs on this path.
+
+pub mod engine;
+pub mod metrics;
+pub mod cli;
+
+pub use engine::{EnginePolicy, InferenceEngine};
+pub use metrics::LatencyStats;

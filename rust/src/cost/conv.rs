@@ -1,0 +1,333 @@
+//! Eq. 10–12 — per-layer convolution latency under each algorithm, and
+//! Eq. 14 — effective PE utilization.
+
+use super::device::Device;
+use super::gemm::{self, Dataflow};
+use crate::graph::layer::ConvSpec;
+
+/// A GEMM-based convolution algorithm (paper §2.1). `Winograd { m, r }`
+/// is the F(m×m, r×r) minimal-filtering variant; the paper evaluates
+/// F(2×2, 3×3). `WinogradStrided` is the paper's future-work extension
+/// (§7): stride-2 square kernels handled by input channel-splitting into
+/// 4 stride-1 sub-convolutions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Algo {
+    Im2col,
+    Kn2row,
+    Winograd { m: usize, r: usize },
+    WinogradStrided { m: usize, r: usize },
+}
+
+impl Algo {
+    pub fn name(&self) -> String {
+        match self {
+            Algo::Im2col => "im2col".into(),
+            Algo::Kn2row => "kn2row".into(),
+            Algo::Winograd { m, r } => format!("winograd-f{m}x{r}"),
+            Algo::WinogradStrided { m, r } => format!("winograd-strided-f{m}x{r}"),
+        }
+    }
+
+    /// Algorithm families available for a layer (the `|A_i|` entries of
+    /// the paper's cost vector). im2col and kn2row apply everywhere;
+    /// Winograd needs a square kernel ≥ r and unit stride; the strided
+    /// extension (if enabled) covers stride-2 square kernels.
+    pub fn available(spec: &ConvSpec, wino_m: usize, wino_r: usize, strided_ext: bool) -> Vec<Algo> {
+        let mut v = vec![Algo::Im2col, Algo::Kn2row];
+        if spec.winograd_applicable(wino_r) {
+            v.push(Algo::Winograd { m: wino_m, r: wino_r });
+        } else if strided_ext && spec.s == 2 && spec.k1 == spec.k2 && spec.k1 >= wino_r {
+            v.push(Algo::WinogradStrided { m: wino_m, r: wino_r });
+        }
+        v
+    }
+}
+
+/// Fully-evaluated cost of one (layer, algorithm, dataflow) triple.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ConvCost {
+    pub algo: Algo,
+    pub dataflow: Dataflow,
+    /// Total systolic-array busy cycles (compute only).
+    pub cycles: u64,
+    /// Latency in seconds at the device clock.
+    pub seconds: f64,
+    /// MACs the algorithm actually performs (Winograd performs fewer
+    /// "pixel" MACs but in transform space).
+    pub macs: u64,
+    /// Effective PE utilization μ (Eq. 14).
+    pub utilization: f64,
+    /// GEMM dims fed to the array, for reporting: (a, b, c, calls).
+    pub gemm: (usize, usize, usize, usize),
+}
+
+/// The analytic cost model: device + Winograd hyper-parameters + the
+/// stall-free-PE switch (naive mode exists for the ablation bench).
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    pub device: Device,
+    pub wino_m: usize,
+    pub wino_r: usize,
+    pub stall_free: bool,
+    /// Enable the strided-Winograd future-work extension.
+    pub strided_winograd: bool,
+    /// Restrict every layer to one dataflow (the Figs. 9/10 `bl1`/`bl2`
+    /// NS-only baselines disable the §3.2 dataflow optimization).
+    pub force_dataflow: Option<Dataflow>,
+}
+
+impl CostModel {
+    pub fn new(device: Device) -> CostModel {
+        CostModel {
+            device,
+            wino_m: 2,
+            wino_r: 3,
+            stall_free: true,
+            strided_winograd: false,
+            force_dataflow: None,
+        }
+    }
+
+    fn gemm_cycles(&self, p1: usize, p2: usize, df: Dataflow, a: usize, b: usize, c: usize) -> u64 {
+        if self.stall_free {
+            gemm::gemm_cycles(p1, p2, df, a, b, c)
+        } else {
+            gemm::gemm_cycles_naive(p1, p2, df, a, b, c)
+        }
+    }
+
+    /// GEMM dimensions `(a, b, c, calls)` a layer presents to the
+    /// systolic array under `algo`.
+    ///
+    /// * im2col (Eq. 10): one `(O1O2) × (K1K2·C_in) × C_out` GEMM.
+    /// * kn2row (Eq. 11): `K1K2` calls of `(O1O2) × C_in × C_out`.
+    /// * Winograd (Eq. 12): `(m+r−1)²·⌈K1K2/r²⌉` calls of
+    ///   `(⌈H1/m⌉·⌈H2/m⌉) × C_in × C_out` in transform space.
+    pub fn gemm_dims(&self, spec: &ConvSpec, algo: Algo) -> (usize, usize, usize, usize) {
+        let o = spec.o1() * spec.o2();
+        match algo {
+            Algo::Im2col => (o, spec.k1 * spec.k2 * spec.c_in, spec.c_out, 1),
+            Algo::Kn2row => (o, spec.c_in, spec.c_out, spec.k1 * spec.k2),
+            Algo::Winograd { m, r } => {
+                let tiles = spec.h1.div_ceil(m) * spec.h2.div_ceil(m);
+                let points = (m + r - 1) * (m + r - 1);
+                let rounds = (spec.k1 * spec.k2).div_ceil(r * r);
+                (tiles, spec.c_in, spec.c_out, points * rounds)
+            }
+            Algo::WinogradStrided { m, r } => {
+                // stride-2 decomposition: 4 stride-1 sub-convolutions on
+                // half-resolution maps with ⌈K/2⌉-sized sub-kernels.
+                let h1 = spec.h1.div_ceil(2);
+                let h2 = spec.h2.div_ceil(2);
+                let k = spec.k1.div_ceil(2).max(r);
+                let tiles = h1.div_ceil(m) * h2.div_ceil(m);
+                let points = (m + r - 1) * (m + r - 1);
+                let rounds = (k * k).div_ceil(r * r);
+                (tiles, spec.c_in, spec.c_out, 4 * points * rounds)
+            }
+        }
+    }
+
+    /// Linear-transform overhead per Winograd GEMM call (the `LT` term of
+    /// Eq. 12). The transform modules are shift-add pipelines processing
+    /// `P_SA1` tiles per cycle in parallel with array feeding, so the
+    /// exposed overhead is the pipeline fill of one tile batch:
+    /// `⌈tiles/P_SA1⌉ + (m+r−1)` cycles.
+    fn lt_cycles(&self, p1: usize, tiles: usize, m: usize, r: usize) -> u64 {
+        (tiles.div_ceil(p1) + (m + r - 1)) as u64
+    }
+
+    /// Evaluate one (layer, algorithm, dataflow): Eq. 10–12 + Eq. 14.
+    pub fn conv_cost(
+        &self,
+        spec: &ConvSpec,
+        algo: Algo,
+        df: Dataflow,
+        p1: usize,
+        p2: usize,
+    ) -> ConvCost {
+        let (a, b, c, calls) = self.gemm_dims(spec, algo);
+        let per_call = self.gemm_cycles(p1, p2, df, a, b, c);
+        let lt = match algo {
+            Algo::Winograd { m, r } | Algo::WinogradStrided { m, r } => {
+                self.lt_cycles(p1, a, m, r)
+            }
+            _ => 0,
+        };
+        let cycles = (per_call + lt) * calls as u64;
+        let macs = gemm::gemm_macs(a, b, c) * calls as u64;
+        let pes = (p1 * p2) as f64;
+        ConvCost {
+            algo,
+            dataflow: df,
+            cycles,
+            seconds: cycles as f64 * self.device.cycle_time(),
+            macs,
+            utilization: macs as f64 / (cycles as f64 * pes),
+            gemm: (a, b, c, calls),
+        }
+    }
+
+    /// Best dataflow for a (layer, algorithm) pair on a fixed array —
+    /// the inner loop of Algorithm 1 (lines 7–9). Honours
+    /// `force_dataflow` for the NS-only baselines.
+    pub fn best_conv_cost(&self, spec: &ConvSpec, algo: Algo, p1: usize, p2: usize) -> ConvCost {
+        if let Some(df) = self.force_dataflow {
+            return self.conv_cost(spec, algo, df, p1, p2);
+        }
+        Dataflow::ALL
+            .iter()
+            .map(|&df| self.conv_cost(spec, algo, df, p1, p2))
+            .min_by(|x, y| x.cycles.cmp(&y.cycles))
+            .unwrap()
+    }
+
+    /// All available algorithms with their best dataflow for a layer.
+    pub fn layer_options(&self, spec: &ConvSpec, p1: usize, p2: usize) -> Vec<ConvCost> {
+        Algo::available(spec, self.wino_m, self.wino_r, self.strided_winograd)
+            .into_iter()
+            .map(|algo| self.best_conv_cost(spec, algo, p1, p2))
+            .collect()
+    }
+
+    /// Compute-and-memory load summary used by Fig. 1: returns
+    /// `(mult_ops, memory_elems)` for a layer under an algorithm —
+    /// multiplications performed and activation elements moved
+    /// (input-format volume + output volume).
+    pub fn loads(&self, spec: &ConvSpec, algo: Algo) -> (u64, u64) {
+        let (a, b, c, calls) = self.gemm_dims(spec, algo);
+        let mults = gemm::gemm_macs(a, b, c) * calls as u64;
+        let mem = match algo {
+            Algo::Im2col => {
+                // Toeplitz input duplication + output
+                (spec.o1() * spec.o2() * spec.k1 * spec.k2 * spec.c_in
+                    + spec.output_count()) as u64
+            }
+            Algo::Kn2row => {
+                // 3D tensor in + intermediate patch accumulation + out
+                (spec.input_count() + 2 * spec.output_count()) as u64
+            }
+            Algo::Winograd { m, r } | Algo::WinogradStrided { m, r } => {
+                let tiles = spec.h1.div_ceil(m) * spec.h2.div_ceil(m);
+                let points = (m + r - 1) * (m + r - 1);
+                (tiles * points * spec.c_in + tiles * points * spec.c_out) as u64
+            }
+        };
+        (mults, mem)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> CostModel {
+        CostModel::new(Device::alveo_u200())
+    }
+
+    fn layer_3x3() -> ConvSpec {
+        // 28×28, 3×3 same, 64→128 (GoogLeNet-like)
+        ConvSpec::new(64, 128, 28, 28, 3, 3, 1, 1, 1)
+    }
+
+    #[test]
+    fn im2col_gemm_dims() {
+        let m = model();
+        let (a, b, c, calls) = m.gemm_dims(&layer_3x3(), Algo::Im2col);
+        assert_eq!((a, b, c, calls), (28 * 28, 9 * 64, 128, 1));
+    }
+
+    #[test]
+    fn kn2row_is_k2_unit_gemms() {
+        let m = model();
+        let (a, b, c, calls) = m.gemm_dims(&layer_3x3(), Algo::Kn2row);
+        assert_eq!((a, b, c, calls), (28 * 28, 64, 128, 9));
+    }
+
+    #[test]
+    fn winograd_reduces_mults() {
+        let m = model();
+        let spec = layer_3x3();
+        let (mults_wino, _) = m.loads(&spec, Algo::Winograd { m: 2, r: 3 });
+        let (mults_im2col, _) = m.loads(&spec, Algo::Im2col);
+        // F(2,3): 16 mults per 4-output tile vs 36 direct → 2.25×
+        let ratio = mults_im2col as f64 / mults_wino as f64;
+        assert!((1.8..2.6).contains(&ratio), "winograd mult reduction ratio {ratio}");
+    }
+
+    #[test]
+    fn winograd_f4_reduction_matches_paper() {
+        // paper §2.1.3: F(4×4, 3×3) needs 36 mults/tile vs 144 spatial —
+        // exactly 4×. Check the asymptotic ratio on a large layer where
+        // the ceil() effects vanish.
+        let mut m = model();
+        m.wino_m = 4;
+        let spec = ConvSpec::new(64, 64, 256, 256, 3, 3, 1, 1, 1);
+        let (w, _) = m.loads(&spec, Algo::Winograd { m: 4, r: 3 });
+        let (d, _) = m.loads(&spec, Algo::Im2col);
+        let ratio = d as f64 / w as f64;
+        assert!((3.5..4.1).contains(&ratio), "F(4,3) reduction {ratio} ≈ 4");
+    }
+
+    #[test]
+    fn kn2row_never_more_mults_than_im2col() {
+        let m = model();
+        for spec in [
+            layer_3x3(),
+            ConvSpec::new(32, 64, 17, 17, 1, 7, 1, 0, 3),
+            ConvSpec::new(16, 32, 56, 56, 5, 5, 1, 2, 2),
+        ] {
+            let (ki, _) = m.loads(&spec, Algo::Kn2row);
+            let (ii, _) = m.loads(&spec, Algo::Im2col);
+            // same multiplication count for stride 1 (O1O2 == H1H2)
+            assert_eq!(ki, ii);
+        }
+    }
+
+    #[test]
+    fn best_dataflow_beats_or_ties_ns() {
+        let m = model();
+        let spec = ConvSpec::new(48, 64, 35, 35, 7, 1, 1, 3, 0);
+        for algo in Algo::available(&spec, 2, 3, false) {
+            let best = m.best_conv_cost(&spec, algo, 92, 66);
+            let ns = m.conv_cost(&spec, algo, Dataflow::NS, 92, 66);
+            assert!(best.cycles <= ns.cycles);
+            assert!(best.utilization >= ns.utilization - 1e-12);
+        }
+    }
+
+    #[test]
+    fn utilization_in_unit_interval() {
+        let m = model();
+        let spec = layer_3x3();
+        for algo in Algo::available(&spec, 2, 3, false) {
+            for df in Dataflow::ALL {
+                let c = m.conv_cost(&spec, algo, df, 92, 66);
+                assert!(c.utilization > 0.0 && c.utilization <= 1.0, "{:?}", c);
+            }
+        }
+    }
+
+    #[test]
+    fn availability_rules() {
+        // 1×7 kernel: no winograd
+        let spec = ConvSpec::new(8, 8, 17, 17, 1, 7, 1, 0, 3);
+        assert_eq!(Algo::available(&spec, 2, 3, false).len(), 2);
+        // 3×3 stride 1: all three
+        assert_eq!(Algo::available(&layer_3x3(), 2, 3, false).len(), 3);
+        // 3×3 stride 2: strided extension only when enabled
+        let s2 = ConvSpec::new(8, 8, 16, 16, 3, 3, 2, 1, 1);
+        assert_eq!(Algo::available(&s2, 2, 3, false).len(), 2);
+        assert_eq!(Algo::available(&s2, 2, 3, true).len(), 3);
+    }
+
+    #[test]
+    fn seconds_scale_with_frequency() {
+        let mut m = model();
+        let c1 = m.best_conv_cost(&layer_3x3(), Algo::Im2col, 64, 64);
+        m.device.freq_mhz *= 2.0;
+        let c2 = m.best_conv_cost(&layer_3x3(), Algo::Im2col, 64, 64);
+        assert_eq!(c1.cycles, c2.cycles);
+        assert!((c1.seconds / c2.seconds - 2.0).abs() < 1e-9);
+    }
+}

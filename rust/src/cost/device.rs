@@ -1,0 +1,95 @@
+//! Target device meta data — the third input of the DYNAMAP flow
+//! (paper §1: "FPGA device meta data (DSP resources, on-chip memory size
+//! and external bandwidth)").
+
+/// FPGA device description. All bandwidth numbers are for the INT8
+/// datapath the paper evaluates (1 byte / element).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Device {
+    pub name: String,
+    /// PE budget for the systolic array. The paper caps DSP consumption
+    /// at 6084 for fairness; with INT8 one PE maps to one DSP.
+    pub dsp_cap: usize,
+    /// Accelerator clock in MHz (paper achieves 286 MHz on the U200).
+    pub freq_mhz: f64,
+    /// Peak usable external (DDR) bandwidth in GB/s.
+    pub ddr_gbps: f64,
+    /// DDR burst length in elements (BL in Eq. 13).
+    pub burst_len: usize,
+    /// On-chip SRAM capacity in bytes (BRAM+URAM usable for buffers);
+    /// used by DSE step 5 to fuse consecutive layers on chip.
+    pub sram_bytes: usize,
+    /// Parallel pooling units (§3.4 "array of PUs").
+    pub pool_units: usize,
+}
+
+impl Device {
+    /// Xilinx Alveo U200 as configured in the paper's evaluation:
+    /// 6084-DSP systolic-array budget, 286 MHz, 4× DDR4-2400 channels
+    /// (77 GB/s peak; we default to a usable 64 GB/s), 64-byte bursts.
+    /// `sram_bytes` is the *fusion slack*: the paper's designs consume
+    /// 93–97% of BRAM for the working Input/Kernel/Output buffers
+    /// (Table 3), leaving ~2 MiB for DSE step 5's consecutive-layer
+    /// on-chip hand-offs.
+    pub fn alveo_u200() -> Device {
+        Device {
+            name: "alveo-u200".into(),
+            dsp_cap: 6084,
+            freq_mhz: 286.0,
+            ddr_gbps: 64.0,
+            burst_len: 64,
+            sram_bytes: 2 << 20,
+            pool_units: 64,
+        }
+    }
+
+    /// A small edge-class device, used in tests and the custom-CNN
+    /// example to show DSE adapting to a different resource budget.
+    pub fn small_edge() -> Device {
+        Device {
+            name: "small-edge".into(),
+            dsp_cap: 1024,
+            freq_mhz: 200.0,
+            ddr_gbps: 12.8,
+            burst_len: 32,
+            sram_bytes: 2 << 20,
+            pool_units: 16,
+        }
+    }
+
+    /// Seconds per clock cycle.
+    pub fn cycle_time(&self) -> f64 {
+        1.0 / (self.freq_mhz * 1e6)
+    }
+
+    /// DDR bandwidth in elements (bytes) per second.
+    pub fn bw_elems_per_sec(&self) -> f64 {
+        self.ddr_gbps * 1e9
+    }
+
+    /// Transfer latency in seconds for `elems` INT8 elements at full
+    /// bandwidth.
+    pub fn xfer_sec(&self, elems: f64) -> f64 {
+        elems / self.bw_elems_per_sec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u200_preset() {
+        let d = Device::alveo_u200();
+        assert_eq!(d.dsp_cap, 6084);
+        assert!((d.cycle_time() - 1.0 / 286e6).abs() < 1e-18);
+    }
+
+    #[test]
+    fn xfer_scaling() {
+        let d = Device::alveo_u200();
+        // 64 GB/s → 64e9 elements/s → 64e9 elems in 1 s
+        assert!((d.xfer_sec(64e9) - 1.0).abs() < 1e-9);
+        assert!(d.xfer_sec(1.0) > 0.0);
+    }
+}

@@ -1,0 +1,511 @@
+//! §5.1 — Cost graph construction.
+//!
+//! Builds a PBQP instance from a CNN graph: one compute vertex `V_c` per
+//! layer whose domain is the layer's available algorithm-dataflow pairs
+//! (non-conv layers get a singleton "passthrough" domain), plus a store
+//! vertex `V_s` for every fan-out layer capturing the single format its
+//! output is stored in (the paper: "Layer i connected to multiple
+//! downstream layers can store the output in only one format").
+//!
+//! Node costs are Eq. 10–12 latencies (overlapped with the layer's
+//! weight streaming when `overlap_weight_load` is set); edge matrices
+//! are the Table-2 store+load transition latencies.
+
+use std::collections::BTreeMap;
+
+use super::conv::{Algo, ConvCost, CostModel};
+use super::transition::{input_format, output_format, EdgeDims, Format, TransitionModel};
+use crate::graph::layer::{Op, PoolKind};
+use crate::graph::{Cnn, NodeId};
+use crate::pbqp::{solve_brute, solve_sp, Matrix, Problem, Solution};
+use crate::pbqp::brute::search_space;
+
+/// One entry of a PBQP vertex domain.
+#[derive(Debug, Clone)]
+pub enum Choice {
+    /// Conv layer executed with this algorithm-dataflow pair.
+    Conv { node: NodeId, cost: ConvCost },
+    /// Non-conv layer (pool/concat/add/fc/input/output).
+    Passthrough { node: NodeId, seconds: f64 },
+    /// `V_s` store vertex: store output in the input format of
+    /// algorithm-choice `choice_idx` of downstream `child`.
+    StoreAs { node: NodeId, child: NodeId, fmt: Format, dims: EdgeDims, volume: u64 },
+}
+
+impl Choice {
+    /// Storage format family this choice's output occupies in DRAM.
+    pub fn out_format(&self) -> Format {
+        match self {
+            Choice::Conv { cost, .. } => output_format(cost.algo),
+            Choice::Passthrough { .. } => Format::Tensor3D,
+            Choice::StoreAs { fmt, .. } => *fmt,
+        }
+    }
+
+    /// Input format this choice's vertex consumes.
+    pub fn in_format(&self) -> Format {
+        match self {
+            Choice::Conv { cost, .. } => input_format(cost.algo),
+            Choice::Passthrough { .. } => Format::Tensor3D,
+            Choice::StoreAs { fmt, .. } => *fmt,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Choice::Conv { cost, .. } => {
+                format!("{}/{}", cost.algo.name(), cost.dataflow.name())
+            }
+            Choice::Passthrough { .. } => "pass".into(),
+            Choice::StoreAs { child, fmt, .. } => format!("store[{}]:{}", child, fmt.name()),
+        }
+    }
+}
+
+/// The constructed cost graph: PBQP problem + bookkeeping to map the
+/// solution back onto CNN layers.
+pub struct CostGraph {
+    pub problem: Problem,
+    /// Domain metadata parallel to `problem.costs`.
+    pub choices: Vec<Vec<Choice>>,
+    /// `V_c` vertex of each CNN node.
+    pub vc: BTreeMap<NodeId, usize>,
+    /// `V_s` vertex of fan-out CNN nodes.
+    pub vs: BTreeMap<NodeId, usize>,
+    pub source: usize,
+    pub sink: usize,
+}
+
+/// The chosen mapping for one conv layer.
+#[derive(Debug, Clone)]
+pub struct LayerAssignment {
+    pub node: NodeId,
+    pub name: String,
+    pub cost: ConvCost,
+}
+
+/// A solved algorithm mapping with its latency breakdown.
+#[derive(Debug, Clone)]
+pub struct MappingResult {
+    pub assignment: Vec<usize>,
+    /// Total objective (seconds): compute + transitions.
+    pub total_sec: f64,
+    /// Σ node costs of the chosen assignment.
+    pub compute_sec: f64,
+    /// Σ edge (store+load) costs.
+    pub transition_sec: f64,
+    pub layers: Vec<LayerAssignment>,
+}
+
+/// Fixed single-algorithm policies — the paper's baselines `bl_3..bl_5`
+/// (§6.1.2) plus the greedy node-cost policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// bl3: im2col on every layer.
+    Im2colOnly,
+    /// bl4: kn2row wherever available (i.e. everywhere), im2col else.
+    Kn2rowApplied,
+    /// bl5: Winograd where applicable, im2col everywhere else.
+    WinoApplied,
+    /// greedy: per-layer argmin of node cost (ignores transitions).
+    Greedy,
+}
+
+/// Cost-graph construction options.
+#[derive(Debug, Clone, Copy)]
+pub struct BuildOpts {
+    /// Overlap weight streaming with compute (double-buffered weights):
+    /// node cost = max(compute, weight transfer) instead of the sum.
+    pub overlap_weight_load: bool,
+    /// DSE step 5: keep consecutive-layer hand-offs on chip when both
+    /// buffers fit in SRAM, skipping the DRAM round-trip.
+    pub sram_fuse: bool,
+}
+
+impl Default for BuildOpts {
+    fn default() -> BuildOpts {
+        BuildOpts { overlap_weight_load: true, sram_fuse: true }
+    }
+}
+
+impl CostGraph {
+    /// Build the cost graph for a CNN on a fixed `P_SA1 × P_SA2` array.
+    pub fn build(
+        cnn: &Cnn,
+        cm: &CostModel,
+        tm: &TransitionModel,
+        p1: usize,
+        p2: usize,
+        opts: BuildOpts,
+    ) -> CostGraph {
+        let overlap_weight_load = opts.overlap_weight_load;
+        let mut problem = Problem::default();
+        let mut choices: Vec<Vec<Choice>> = Vec::new();
+        let mut vc = BTreeMap::new();
+        let mut vs = BTreeMap::new();
+
+        // --- V_c vertices ------------------------------------------------
+        for node in &cnn.nodes {
+            let (dom, costs): (Vec<Choice>, Vec<f64>) = match &node.op {
+                Op::Conv(spec) => {
+                    let opts = cm.layer_options(spec, p1, p2);
+                    let weight_sec = |algo: Algo| -> f64 {
+                        let elems = match algo {
+                            Algo::Im2col | Algo::Kn2row => spec.weight_count() as f64,
+                            Algo::Winograd { m, r } | Algo::WinogradStrided { m, r } => {
+                                let pts = ((m + r - 1) * (m + r - 1)) as f64;
+                                let rounds = ((spec.k1 * spec.k2).div_ceil(r * r)) as f64;
+                                pts * rounds * (spec.c_in * spec.c_out) as f64
+                            }
+                        };
+                        tm.device.xfer_sec(elems)
+                    };
+                    let mut dom = Vec::new();
+                    let mut cv = Vec::new();
+                    for c in opts {
+                        let sec = if overlap_weight_load {
+                            c.seconds.max(weight_sec(c.algo))
+                        } else {
+                            c.seconds + weight_sec(c.algo)
+                        };
+                        dom.push(Choice::Conv { node: node.id, cost: c });
+                        cv.push(sec);
+                    }
+                    (dom, cv)
+                }
+                Op::Pool(p) => {
+                    // §3.4 — HPU/VPU pipeline, P_pool parallel units: one
+                    // intermediate result per cycle per unit; the HPU
+                    // touches every input pixel once and the VPU overlaps.
+                    // AvgPool runs on the same PU array with the adder
+                    // tree in place of the max comparator (the paper's
+                    // conv-lowering alternative is a *depthwise* conv —
+                    // executing it as a dense GEMM on the CU would inflate
+                    // work by C×, so the PU path is the faithful model).
+                    let _ = PoolKind::Max;
+                    let sec = (p.c * p.h1 * p.h2) as f64 / tm.device.pool_units as f64
+                        * cm.device.cycle_time();
+                    (vec![Choice::Passthrough { node: node.id, seconds: sec }], vec![sec])
+                }
+                Op::Fc { c_in, c_out } => {
+                    let (df, cy) = super::gemm::best_dataflow(p1, p2, 1, *c_in, *c_out);
+                    let _ = df;
+                    let sec = cy as f64 * cm.device.cycle_time();
+                    let w = tm.device.xfer_sec((*c_in * *c_out) as f64);
+                    let sec = if overlap_weight_load { sec.max(w) } else { sec + w };
+                    (vec![Choice::Passthrough { node: node.id, seconds: sec }], vec![sec])
+                }
+                Op::Add { c, h1, h2 } => {
+                    let sec = (*c * *h1 * *h2) as f64 / tm.device.pool_units as f64
+                        * cm.device.cycle_time();
+                    (vec![Choice::Passthrough { node: node.id, seconds: sec }], vec![sec])
+                }
+                Op::Input { .. } | Op::Concat { .. } | Op::Output => {
+                    (vec![Choice::Passthrough { node: node.id, seconds: 0.0 }], vec![0.0])
+                }
+            };
+            let labels = dom.iter().map(|c| c.label()).collect();
+            let v = problem.add_vertex(&node.name, costs, labels);
+            choices.push(dom);
+            vc.insert(node.id, v);
+        }
+
+        // input tensor dims a consumer expects on its inbound edge
+        let consumer_dims = |node: NodeId| -> EdgeDims {
+            match &cnn.node(node).op {
+                Op::Conv(spec) => EdgeDims::for_conv(spec),
+                Op::Pool(p) => EdgeDims::for_tensor(p.c, p.h1, p.h2),
+                Op::Concat { c_out, h1, h2 } => EdgeDims::for_tensor(*c_out, *h1, *h2),
+                Op::Add { c, h1, h2 } => EdgeDims::for_tensor(*c, *h1, *h2),
+                Op::Fc { c_in, .. } => EdgeDims::for_tensor(*c_in, 1, 1),
+                Op::Input { c, h1, h2 } => EdgeDims::for_tensor(*c, *h1, *h2),
+                Op::Output => EdgeDims::for_tensor(1, 1, 1),
+            }
+        };
+
+        // --- V_s vertices + edges ---------------------------------------
+        for node in &cnn.nodes {
+            let succs = cnn.successors(node.id);
+            if succs.len() <= 1 {
+                continue;
+            }
+            // domain: Σ_{b'} |A_{b'}| store choices (paper §5.1)
+            let mut dom = Vec::new();
+            for &child in &succs {
+                let d = consumer_dims(child);
+                for ch in &choices[vc[&child]] {
+                    let fmt = ch.in_format();
+                    dom.push(Choice::StoreAs {
+                        node: node.id,
+                        child,
+                        fmt,
+                        dims: d,
+                        volume: d.volume(fmt, tm.wino_m, tm.wino_r),
+                    });
+                }
+            }
+            // deduplicate identical (child, fmt) entries to keep d small
+            dom.dedup_by(|a, b| match (a, b) {
+                (
+                    Choice::StoreAs { child: c1, fmt: f1, .. },
+                    Choice::StoreAs { child: c2, fmt: f2, .. },
+                ) => c1 == c2 && f1 == f2,
+                _ => false,
+            });
+            let labels = dom.iter().map(|c| c.label()).collect();
+            let costs = vec![0.0; dom.len()]; // V_s carries no node cost
+            let v = problem.add_vertex(&format!("{}#store", node.name), costs, labels);
+            choices.push(dom);
+            vs.insert(node.id, v);
+        }
+
+        // --- edges --------------------------------------------------------
+        for &(src, dst) in &cnn.edges {
+            let d = consumer_dims(dst);
+            if cnn.out_degree(src) <= 1 {
+                // direct edge (V_c_src, V_c_dst):
+                // T(m, n) = Store(out(m) → in(n), d) + Load(in(n), d)
+                let (u, v) = (vc[&src], vc[&dst]);
+                let m = Matrix::from_fn(
+                    choices[u].len(),
+                    choices[v].len(),
+                    |i, j| {
+                        let from = choices[u][i].out_format();
+                        let to = choices[v][j].in_format();
+                        if opts.sram_fuse && tm.fits_on_chip(to, &d) {
+                            tm.edge_sec_onchip(to, &d, p1)
+                        } else {
+                            tm.store_sec(from, to, &d) + tm.load_sec(to, &d)
+                        }
+                    },
+                );
+                problem.add_edge(u, v, m);
+            } else {
+                // fan-out: edge (V_s_src, V_c_dst)
+                let (u, v) = (vs[&src], vc[&dst]);
+                let m = Matrix::from_fn(
+                    choices[u].len(),
+                    choices[v].len(),
+                    |i, j| {
+                        let needed = choices[v][j].in_format();
+                        match &choices[u][i] {
+                            Choice::StoreAs { child, fmt, volume, .. } => {
+                                if *child == dst && *fmt == needed {
+                                    tm.load_sec(needed, &d)
+                                } else {
+                                    tm.mismatch_load_sec(*fmt, *volume, needed, &d)
+                                }
+                            }
+                            _ => unreachable!("V_s domain holds StoreAs only"),
+                        }
+                    },
+                );
+                problem.add_edge(u, v, m);
+            }
+        }
+        // fan-out: edges (V_c_src, V_s_src)
+        for (&node, &sv) in &vs {
+            let u = vc[&node];
+            let m = Matrix::from_fn(choices[u].len(), choices[sv].len(), |i, j| {
+                match &choices[sv][j] {
+                    Choice::StoreAs { fmt, dims, .. } => {
+                        tm.store_sec(choices[u][i].out_format(), *fmt, dims)
+                    }
+                    _ => unreachable!(),
+                }
+            });
+            problem.add_edge(u, sv, m);
+        }
+
+        let source = vc[&cnn.input()];
+        let sink = vc[&cnn.output()];
+        CostGraph { problem, choices, vc, vs, source, sink }
+    }
+
+    /// Solve optimally: series-parallel PBQP (Thm 4.1) with brute-force
+    /// fallback for small non-SP graphs.
+    pub fn solve(&self, cnn: &Cnn) -> MappingResult {
+        let sol = match solve_sp(&self.problem, self.source, self.sink) {
+            Some(s) => s,
+            None => {
+                assert!(
+                    search_space(&self.problem) < (1 << 24),
+                    "graph is not series-parallel and too large for brute force"
+                );
+                solve_brute(&self.problem)
+            }
+        };
+        self.mapping_from(cnn, sol)
+    }
+
+    /// Evaluate a fixed baseline policy (bl3/bl4/bl5/greedy). `V_s`
+    /// store formats are chosen locally-optimally given the fixed layer
+    /// algorithms (one pass of coordinate descent — exact because each
+    /// `V_s` only neighbours fixed vertices).
+    pub fn solve_policy(&self, cnn: &Cnn, policy: Policy) -> MappingResult {
+        let n = self.problem.n();
+        let mut assignment = vec![0usize; n];
+        // conv + passthrough vertices
+        for (v, dom) in self.choices.iter().enumerate() {
+            let pick = match policy {
+                Policy::Greedy => {
+                    let c = &self.problem.costs[v];
+                    (0..c.len()).min_by(|&a, &b| c[a].partial_cmp(&c[b]).unwrap()).unwrap()
+                }
+                _ => {
+                    let mut pick = 0;
+                    for (i, ch) in dom.iter().enumerate() {
+                        if let Choice::Conv { cost, .. } = ch {
+                            let hit = match policy {
+                                Policy::Im2colOnly => cost.algo == Algo::Im2col,
+                                Policy::Kn2rowApplied => cost.algo == Algo::Kn2row,
+                                Policy::WinoApplied => {
+                                    matches!(cost.algo, Algo::Winograd { .. })
+                                }
+                                Policy::Greedy => unreachable!(),
+                            };
+                            if hit {
+                                pick = i;
+                                break;
+                            }
+                            // fallback for WinoApplied on non-wino layers
+                            if cost.algo == Algo::Im2col {
+                                pick = i;
+                            }
+                        }
+                    }
+                    pick
+                }
+            };
+            assignment[v] = pick;
+        }
+        // V_s vertices: exact local optimum given fixed neighbours
+        for (_, &sv) in &self.vs {
+            let mut best = (f64::INFINITY, 0usize);
+            for k in 0..self.choices[sv].len() {
+                let mut c = self.problem.costs[sv][k];
+                for e in &self.problem.edges {
+                    if e.u == sv {
+                        c += e.m.get(k, assignment[e.v]);
+                    } else if e.v == sv {
+                        c += e.m.get(assignment[e.u], k);
+                    }
+                }
+                if c < best.0 {
+                    best = (c, k);
+                }
+            }
+            assignment[sv] = best.1;
+        }
+        let cost = self.problem.evaluate(&assignment);
+        self.mapping_from(cnn, Solution { assignment, cost })
+    }
+
+    /// Turn a PBQP solution into a per-layer mapping with breakdown.
+    pub fn mapping_from(&self, cnn: &Cnn, sol: Solution) -> MappingResult {
+        let mut compute = 0.0;
+        for (v, &k) in sol.assignment.iter().enumerate() {
+            compute += self.problem.costs[v][k];
+        }
+        let mut layers = Vec::new();
+        for node in &cnn.nodes {
+            if !node.op.is_conv() {
+                continue;
+            }
+            let v = self.vc[&node.id];
+            if let Choice::Conv { cost, .. } = &self.choices[v][sol.assignment[v]] {
+                layers.push(LayerAssignment {
+                    node: node.id,
+                    name: node.name.clone(),
+                    cost: *cost,
+                });
+            }
+        }
+        MappingResult {
+            total_sec: sol.cost,
+            compute_sec: compute,
+            transition_sec: sol.cost - compute,
+            assignment: sol.assignment,
+            layers,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::device::Device;
+    use crate::graph::zoo;
+
+    fn models() -> (CostModel, TransitionModel) {
+        let d = Device::alveo_u200();
+        (CostModel::new(d.clone()), TransitionModel::new(d))
+    }
+
+    #[test]
+    fn builds_for_mini() {
+        let cnn = zoo::mini_inception();
+        let (cm, tm) = models();
+        let g = CostGraph::build(&cnn, &cm, &tm, 32, 32, BuildOpts::default());
+        // every CNN node has a V_c; the fan-out stem has a V_s
+        assert_eq!(g.vc.len(), cnn.nodes.len());
+        assert!(!g.vs.is_empty(), "mini-inception has a fan-out stem");
+        // conv domains have 2-3 entries
+        for id in cnn.conv_nodes() {
+            let d = g.choices[g.vc[&id]].len();
+            assert!((2..=3).contains(&d), "conv domain size {d}");
+        }
+    }
+
+    #[test]
+    fn optimal_beats_or_ties_all_policies() {
+        let cnn = zoo::mini_inception();
+        let (cm, tm) = models();
+        let g = CostGraph::build(&cnn, &cm, &tm, 32, 32, BuildOpts::default());
+        let opt = g.solve(&cnn);
+        for policy in
+            [Policy::Im2colOnly, Policy::Kn2rowApplied, Policy::WinoApplied, Policy::Greedy]
+        {
+            let base = g.solve_policy(&cnn, policy);
+            assert!(
+                opt.total_sec <= base.total_sec + 1e-12,
+                "OPT {} should ≤ {:?} {}",
+                opt.total_sec,
+                policy,
+                base.total_sec
+            );
+        }
+    }
+
+    #[test]
+    fn sp_solver_handles_googlenet_cost_graph() {
+        let cnn = zoo::googlenet();
+        let (cm, tm) = models();
+        let g = CostGraph::build(&cnn, &cm, &tm, 92, 66, BuildOpts::default());
+        let opt = g.solve(&cnn);
+        assert!(opt.total_sec > 0.0);
+        assert_eq!(opt.layers.len(), 57);
+        // breakdown sums to total
+        assert!(
+            (opt.compute_sec + opt.transition_sec - opt.total_sec).abs() < 1e-9,
+            "breakdown mismatch"
+        );
+    }
+
+    #[test]
+    fn matches_brute_force_on_mini() {
+        // mini-inception's cost graph is small enough to brute force —
+        // the real-cost analogue of the random-matrix property test.
+        let cnn = zoo::mini_inception();
+        let (cm, tm) = models();
+        let g = CostGraph::build(&cnn, &cm, &tm, 16, 16, BuildOpts::default());
+        let opt = g.solve(&cnn);
+        let brute = solve_brute(&g.problem);
+        assert!(
+            (opt.total_sec - brute.cost).abs() < 1e-12,
+            "sp {} vs brute {}",
+            opt.total_sec,
+            brute.cost
+        );
+    }
+}

@@ -1,0 +1,25 @@
+//! The DYNAMAP analytical cost model (paper §5.1).
+//!
+//! * [`device`] — FPGA device meta data (DSP budget, frequency, DDR
+//!   bandwidth/burst length, on-chip SRAM) with an Alveo U200 preset.
+//! * [`gemm`] — Eq. 9: GEMM execution cycles on a `P_SA1 × P_SA2`
+//!   systolic array under the NS / WS / IS dataflows, with and without
+//!   the stall-free PE optimization (§3.2).
+//! * [`conv`] — Eq. 10–12: per-layer convolution latency for im2col,
+//!   kn2row and Winograd(m, r), plus effective-PE-utilization (Eq. 14).
+//! * [`transition`] — Table 2 + Eq. 13: inter-layer data-layout
+//!   store/load transition latencies, including DDR burst wastage.
+//! * [`graph_build`] — §5.1 cost-graph construction: one PBQP vertex per
+//!   layer (`V_c`), plus a store vertex (`V_s`) per fan-out layer, with
+//!   cost vectors and transition matrices.
+
+pub mod device;
+pub mod gemm;
+pub mod conv;
+pub mod transition;
+pub mod graph_build;
+
+pub use conv::{Algo, ConvCost, CostModel};
+pub use device::Device;
+pub use gemm::{gemm_cycles, gemm_macs, Dataflow};
+pub use transition::Format;

@@ -1,0 +1,14 @@
+//! The DYNAMAP two-step DSE flow (paper Fig. 7).
+//!
+//! Step ① [`algo1`] — Architecture Parameter Identification: pick the
+//! systolic-array shape `(P_SA1, P_SA2)` and the best dataflow for every
+//! (layer, algorithm) pair by minimizing the empirical total node cost.
+//! Steps ②–③ — cost-graph construction + optimal PBQP algorithm mapping.
+//! Steps ④–⑥ — overlay customization and control-stream generation
+//! (continued in [`crate::emit`]).
+
+pub mod algo1;
+pub mod plan;
+
+pub use algo1::{identify_parameters, Algo1Result};
+pub use plan::{Dse, DseConfig, Plan};

@@ -1,0 +1,250 @@
+//! The end-to-end DSE pipeline (Fig. 7 steps ①–⑥) and its output
+//! [`Plan`] — everything the coordinator, the Verilog emitter and the
+//! bench harness consume.
+
+use super::algo1::{identify_parameters_bounded, Algo1Result};
+use crate::cost::conv::CostModel;
+use crate::cost::graph_build::{BuildOpts, CostGraph, MappingResult, Policy};
+use crate::cost::transition::TransitionModel;
+use crate::cost::Device;
+use crate::graph::Cnn;
+use crate::util::json::Json;
+
+/// Framework configuration: device + model hyper-parameters + search
+/// bounds.
+#[derive(Debug, Clone)]
+pub struct DseConfig {
+    pub device: Device,
+    pub wino_m: usize,
+    pub wino_r: usize,
+    /// Enable the strided-Winograd future-work extension (§7).
+    pub strided_winograd: bool,
+    /// Force a single dataflow (NS-only baselines of Figs. 9/10).
+    pub force_dataflow: Option<crate::cost::Dataflow>,
+    pub opts: BuildOpts,
+    /// `P_SA1` sweep bounds for Algorithm 1.
+    pub p1_lo: usize,
+    pub p1_hi: usize,
+}
+
+impl DseConfig {
+    /// Paper evaluation setup: Alveo U200, 6084-DSP cap, F(2×2, 3×3).
+    pub fn alveo_u200() -> DseConfig {
+        DseConfig {
+            device: Device::alveo_u200(),
+            wino_m: 2,
+            wino_r: 3,
+            strided_winograd: false,
+            force_dataflow: None,
+            opts: BuildOpts::default(),
+            p1_lo: 16,
+            p1_hi: 512,
+        }
+    }
+
+    pub fn with_device(device: Device) -> DseConfig {
+        let cap = device.dsp_cap;
+        DseConfig {
+            device,
+            wino_m: 2,
+            wino_r: 3,
+            strided_winograd: false,
+            force_dataflow: None,
+            opts: BuildOpts::default(),
+            p1_lo: 2,
+            p1_hi: cap,
+        }
+    }
+
+    pub fn cost_model(&self) -> CostModel {
+        let mut cm = CostModel::new(self.device.clone());
+        cm.wino_m = self.wino_m;
+        cm.wino_r = self.wino_r;
+        cm.strided_winograd = self.strided_winograd;
+        cm.force_dataflow = self.force_dataflow;
+        cm
+    }
+
+    pub fn transition_model(&self) -> TransitionModel {
+        let mut tm = TransitionModel::new(self.device.clone());
+        tm.wino_m = self.wino_m;
+        tm.wino_r = self.wino_r;
+        tm
+    }
+}
+
+/// The DSE driver.
+pub struct Dse {
+    pub config: DseConfig,
+}
+
+/// Full DSE output: architecture parameters + optimal algorithm mapping.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub cnn_name: String,
+    pub p1: usize,
+    pub p2: usize,
+    pub tau_sec: f64,
+    pub mapping: MappingResult,
+    pub total_latency_ms: f64,
+    /// End-to-end throughput in GOP/s (2·MACs / latency), the paper's
+    /// Table-3 metric.
+    pub throughput_gops: f64,
+}
+
+impl Dse {
+    pub fn new(config: DseConfig) -> Dse {
+        Dse { config }
+    }
+
+    /// Fig. 7 steps ①–③: Algorithm 1 → cost graph → PBQP solve.
+    pub fn run(&self, cnn: &Cnn) -> Result<Plan, String> {
+        let arch = self.identify(cnn);
+        let mapping = self.map_algorithms(cnn, arch.p1, arch.p2);
+        Ok(self.plan_from(cnn, &arch, mapping))
+    }
+
+    /// Run with a fixed baseline policy instead of the PBQP solve
+    /// (baselines bl3–bl5 and greedy of §6.1.2).
+    pub fn run_policy(&self, cnn: &Cnn, policy: Policy) -> Result<Plan, String> {
+        let arch = self.identify(cnn);
+        let g = self.build_graph(cnn, arch.p1, arch.p2);
+        let mapping = g.solve_policy(cnn, policy);
+        Ok(self.plan_from(cnn, &arch, mapping))
+    }
+
+    /// Run with a fixed systolic-array shape (used by Fig. 9/10's
+    /// square-NS baseline bl1 and by tests).
+    pub fn run_fixed_shape(&self, cnn: &Cnn, p1: usize, p2: usize) -> Result<Plan, String> {
+        let mapping = self.map_algorithms(cnn, p1, p2);
+        let arch = Algo1Result { p1, p2, tau_sec: 0.0, dataflow: Default::default() };
+        Ok(self.plan_from(cnn, &arch, mapping))
+    }
+
+    /// Algorithm 1 only.
+    pub fn identify(&self, cnn: &Cnn) -> Algo1Result {
+        identify_parameters_bounded(
+            cnn,
+            &self.config.cost_model(),
+            self.config.device.dsp_cap,
+            self.config.p1_lo,
+            self.config.p1_hi,
+        )
+    }
+
+    pub fn build_graph(&self, cnn: &Cnn, p1: usize, p2: usize) -> CostGraph {
+        CostGraph::build(
+            cnn,
+            &self.config.cost_model(),
+            &self.config.transition_model(),
+            p1,
+            p2,
+            self.config.opts,
+        )
+    }
+
+    fn map_algorithms(&self, cnn: &Cnn, p1: usize, p2: usize) -> MappingResult {
+        self.build_graph(cnn, p1, p2).solve(cnn)
+    }
+
+    fn plan_from(&self, cnn: &Cnn, arch: &Algo1Result, mapping: MappingResult) -> Plan {
+        let total_latency_ms = mapping.total_sec * 1e3;
+        let throughput_gops = cnn.total_gops() / mapping.total_sec;
+        Plan {
+            cnn_name: cnn.name.clone(),
+            p1: arch.p1,
+            p2: arch.p2,
+            tau_sec: arch.tau_sec,
+            mapping,
+            total_latency_ms,
+            throughput_gops,
+        }
+    }
+}
+
+impl Plan {
+    /// Serialize for the CLI / examples.
+    pub fn to_json(&self) -> Json {
+        let layers = self
+            .mapping
+            .layers
+            .iter()
+            .map(|l| {
+                Json::obj(vec![
+                    ("name", Json::str(l.name.clone())),
+                    ("algo", Json::str(l.cost.algo.name())),
+                    ("dataflow", Json::str(l.cost.dataflow.name())),
+                    ("cycles", Json::num(l.cost.cycles as f64)),
+                    ("utilization", Json::num(l.cost.utilization)),
+                ])
+            })
+            .collect::<Vec<_>>();
+        Json::obj(vec![
+            ("cnn", Json::str(self.cnn_name.clone())),
+            ("p_sa1", Json::num(self.p1 as f64)),
+            ("p_sa2", Json::num(self.p2 as f64)),
+            ("latency_ms", Json::num(self.total_latency_ms)),
+            ("throughput_gops", Json::num(self.throughput_gops)),
+            ("compute_ms", Json::num(self.mapping.compute_sec * 1e3)),
+            ("transition_ms", Json::num(self.mapping.transition_sec * 1e3)),
+            ("layers", Json::Arr(layers)),
+        ])
+    }
+
+    /// Histogram of chosen algorithms, for reports.
+    pub fn algo_histogram(&self) -> Vec<(String, usize)> {
+        let mut h: std::collections::BTreeMap<String, usize> = Default::default();
+        for l in &self.mapping.layers {
+            *h.entry(l.cost.algo.name()).or_insert(0) += 1;
+        }
+        h.into_iter().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::zoo;
+
+    #[test]
+    fn full_pipeline_on_mini() {
+        let dse = Dse::new(DseConfig::with_device(Device::small_edge()));
+        let plan = dse.run(&zoo::mini_inception()).unwrap();
+        assert!(plan.total_latency_ms > 0.0);
+        assert!(plan.throughput_gops > 0.0);
+        assert_eq!(plan.mapping.layers.len(), 7);
+        // JSON round-trips through the parser
+        let j = plan.to_json();
+        assert!(crate::util::json::Json::parse(&j.pretty()).is_ok());
+    }
+
+    #[test]
+    fn opt_beats_baselines_on_googlenet() {
+        let dse = Dse::new(DseConfig::alveo_u200());
+        let cnn = zoo::googlenet();
+        let opt = dse.run(&cnn).unwrap();
+        for policy in [Policy::Im2colOnly, Policy::Kn2rowApplied, Policy::WinoApplied] {
+            let bl = dse.run_policy(&cnn, policy).unwrap();
+            assert!(
+                opt.total_latency_ms <= bl.total_latency_ms + 1e-9,
+                "OPT {} > {:?} {}",
+                opt.total_latency_ms,
+                policy,
+                bl.total_latency_ms
+            );
+        }
+    }
+
+    #[test]
+    fn mapping_uses_multiple_algorithms_on_googlenet() {
+        // the paper's whole point: a single algorithm is not optimal
+        let dse = Dse::new(DseConfig::alveo_u200());
+        let plan = dse.run(&zoo::googlenet()).unwrap();
+        let hist = plan.algo_histogram();
+        assert!(
+            hist.len() >= 2,
+            "expected a mixed algorithm mapping, got {:?}",
+            hist
+        );
+    }
+}

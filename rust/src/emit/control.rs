@@ -1,0 +1,84 @@
+//! Control-signal sequence generation (DSE step ⑥): one control word
+//! per layer encoding the algorithm, dataflow, GEMM tiling, DLT
+//! configuration and module enables — what the overlay's sequencer
+//! consumes at run time.
+
+use crate::cost::conv::Algo;
+use crate::cost::transition::input_format;
+use crate::dse::Plan;
+use crate::graph::layer::Op;
+use crate::graph::Cnn;
+use crate::util::json::Json;
+
+/// Control word for one conv layer.
+pub fn layer_word(cnn: &Cnn, plan: &Plan, idx: usize) -> Json {
+    let l = &plan.mapping.layers[idx];
+    let Op::Conv(spec) = &cnn.node(l.node).op else { unreachable!() };
+    let (a, b, c, calls) = (l.cost.gemm.0, l.cost.gemm.1, l.cost.gemm.2, l.cost.gemm.3);
+    let algo_code = match l.cost.algo {
+        Algo::Im2col => 0,
+        Algo::Kn2row => 1,
+        Algo::Winograd { .. } => 2,
+        Algo::WinogradStrided { .. } => 3,
+    };
+    let df_code = match l.cost.dataflow.name() {
+        "NS" => 0,
+        "WS" => 1,
+        _ => 2,
+    };
+    Json::obj(vec![
+        ("layer", Json::str(l.name.clone())),
+        ("algo", Json::num(algo_code as f64)),
+        ("algo_name", Json::str(l.cost.algo.name())),
+        ("dataflow", Json::num(df_code as f64)),
+        ("gemm_a", Json::num(a as f64)),
+        ("gemm_b", Json::num(b as f64)),
+        ("gemm_c", Json::num(c as f64)),
+        ("gemm_calls", Json::num(calls as f64)),
+        ("dlt_in_format", Json::str(input_format(l.cost.algo).name())),
+        ("pad_accum_en", Json::Bool(matches!(l.cost.algo, Algo::Kn2row))),
+        ("lt_en", Json::Bool(matches!(l.cost.algo, Algo::Winograd { .. } | Algo::WinogradStrided { .. }))),
+        ("k1", Json::num(spec.k1 as f64)),
+        ("k2", Json::num(spec.k2 as f64)),
+        ("stride", Json::num(spec.s as f64)),
+        ("est_cycles", Json::num(l.cost.cycles as f64)),
+    ])
+}
+
+/// The full per-network control stream.
+pub fn control_stream(cnn: &Cnn, plan: &Plan) -> Json {
+    let words: Vec<Json> =
+        (0..plan.mapping.layers.len()).map(|i| layer_word(cnn, plan, i)).collect();
+    Json::obj(vec![
+        ("network", Json::str(plan.cnn_name.clone())),
+        ("p_sa1", Json::num(plan.p1 as f64)),
+        ("p_sa2", Json::num(plan.p2 as f64)),
+        ("layers", Json::Arr(words)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::{Dse, DseConfig};
+    use crate::graph::zoo;
+    use crate::util::json::Json as J;
+
+    #[test]
+    fn stream_covers_all_conv_layers() {
+        let cnn = zoo::mini_inception();
+        let dse = Dse::new(DseConfig::with_device(crate::cost::Device::small_edge()));
+        let plan = dse.run(&cnn).unwrap();
+        let s = control_stream(&cnn, &plan);
+        assert_eq!(s.get("layers").as_arr().unwrap().len(), 7);
+        // round-trips through the JSON parser
+        let back = J::parse(&s.pretty()).unwrap();
+        assert_eq!(back.get("p_sa1").as_usize(), Some(plan.p1));
+        // every word has consistent enables
+        for w in back.get("layers").as_arr().unwrap() {
+            let algo = w.get("algo").as_usize().unwrap();
+            assert_eq!(w.get("pad_accum_en").as_bool(), Some(algo == 1));
+            assert_eq!(w.get("lt_en").as_bool(), Some(algo >= 2));
+        }
+    }
+}

@@ -1,0 +1,39 @@
+//! DSE steps ④–⑥: overlay customization output.
+//!
+//! The paper's DYNAMAP emits synthesizable Verilog parameterized by
+//! `(P_SA1, P_SA2)` plus the control-signal sequences that drive the
+//! DLT / Linear-Transform / Pad-and-Accumulate modules per layer. We
+//! have no synthesis flow (DESIGN.md §Hardware-Adaptation), so this
+//! module reproduces the *artifact shape*: a parameterized Verilog
+//! top-level + PE ([`verilog`]) and the per-layer control-word stream
+//! ([`control`]) the simulated overlay interprets; timing claims come
+//! from the simulator, not from synthesis.
+
+pub mod verilog;
+pub mod control;
+
+use crate::dse::{Dse, DseConfig};
+use crate::graph::zoo;
+use crate::util::cli::Args;
+
+/// `dynamap emit --model googlenet --out build/` — run DSE and write
+/// the overlay package.
+pub fn cli(args: &Args) -> i32 {
+    let model = args.get_or("model", "googlenet");
+    let out = args.get_or("out", "build");
+    let Some(cnn) = zoo::by_name(model) else {
+        eprintln!("unknown model '{model}'");
+        return 1;
+    };
+    let dse = Dse::new(DseConfig::alveo_u200());
+    let plan = dse.run(&cnn).unwrap();
+    std::fs::create_dir_all(out).ok();
+    let v = verilog::overlay_top(&plan);
+    let c = control::control_stream(&cnn, &plan);
+    let vp = format!("{out}/dynamap_overlay_{model}.v");
+    let cp = format!("{out}/control_{model}.json");
+    std::fs::write(&vp, v).expect("write verilog");
+    std::fs::write(&cp, c.pretty()).expect("write control stream");
+    println!("wrote {vp} and {cp} (P_SA = {}×{})", plan.p1, plan.p2);
+    0
+}

@@ -1,0 +1,413 @@
+//! The CNN DAG and its builder.
+
+use super::layer::Op;
+use std::collections::BTreeMap;
+
+pub type NodeId = usize;
+
+/// One node of the network graph.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: NodeId,
+    pub name: String,
+    pub op: Op,
+}
+
+/// A CNN as a DAG of layers. Edges are `(src, dst)` pairs; the graph is
+/// validated to be acyclic, single-input/single-output and
+/// shape-consistent at build time.
+#[derive(Debug, Clone)]
+pub struct Cnn {
+    pub name: String,
+    pub nodes: Vec<Node>,
+    pub edges: Vec<(NodeId, NodeId)>,
+}
+
+impl Cnn {
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id]
+    }
+
+    pub fn successors(&self, id: NodeId) -> Vec<NodeId> {
+        self.edges.iter().filter(|(s, _)| *s == id).map(|(_, d)| *d).collect()
+    }
+
+    pub fn predecessors(&self, id: NodeId) -> Vec<NodeId> {
+        self.edges.iter().filter(|(_, d)| *d == id).map(|(s, _)| *s).collect()
+    }
+
+    pub fn out_degree(&self, id: NodeId) -> usize {
+        self.edges.iter().filter(|(s, _)| *s == id).count()
+    }
+
+    pub fn in_degree(&self, id: NodeId) -> usize {
+        self.edges.iter().filter(|(_, d)| *d == id).count()
+    }
+
+    /// All convolution layers in topological order.
+    pub fn conv_nodes(&self) -> Vec<NodeId> {
+        self.topo_order()
+            .into_iter()
+            .filter(|&id| self.nodes[id].op.is_conv())
+            .collect()
+    }
+
+    /// The unique input node.
+    pub fn input(&self) -> NodeId {
+        self.nodes
+            .iter()
+            .find(|n| matches!(n.op, Op::Input { .. }))
+            .expect("graph has no input node")
+            .id
+    }
+
+    /// The unique output node.
+    pub fn output(&self) -> NodeId {
+        self.nodes
+            .iter()
+            .find(|n| matches!(n.op, Op::Output))
+            .expect("graph has no output node")
+            .id
+    }
+
+    /// Kahn topological order; panics on cycles (graphs are validated at
+    /// build time so this is an internal invariant).
+    pub fn topo_order(&self) -> Vec<NodeId> {
+        let mut indeg = vec![0usize; self.nodes.len()];
+        for &(_, d) in &self.edges {
+            indeg[d] += 1;
+        }
+        let mut queue: Vec<NodeId> =
+            (0..self.nodes.len()).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(self.nodes.len());
+        while let Some(id) = queue.pop() {
+            order.push(id);
+            for s in self.successors(id) {
+                indeg[s] -= 1;
+                if indeg[s] == 0 {
+                    queue.push(s);
+                }
+            }
+        }
+        assert_eq!(order.len(), self.nodes.len(), "cycle in CNN graph '{}'", self.name);
+        order
+    }
+
+    /// Total MACs over all conv layers (direct convolution accounting).
+    pub fn total_macs(&self) -> u64 {
+        self.nodes.iter().filter_map(|n| n.op.conv()).map(|c| c.macs()).sum()
+    }
+
+    /// Total GOPs (2 × MACs / 1e9) — the paper quotes ~3 GOPs for
+    /// GoogLeNet and ~9 GOPs for Inception-v4.
+    pub fn total_gops(&self) -> f64 {
+        self.total_macs() as f64 * 2.0 / 1e9
+    }
+
+    pub fn conv_count(&self) -> usize {
+        self.nodes.iter().filter(|n| n.op.is_conv()).count()
+    }
+
+    /// Validate shape consistency along every edge and basic structure.
+    pub fn validate(&self) -> Result<(), String> {
+        // structural checks
+        let n_in = self.nodes.iter().filter(|n| matches!(n.op, Op::Input { .. })).count();
+        let n_out = self.nodes.iter().filter(|n| matches!(n.op, Op::Output)).count();
+        if n_in != 1 {
+            return Err(format!("expected 1 input node, found {}", n_in));
+        }
+        if n_out != 1 {
+            return Err(format!("expected 1 output node, found {}", n_out));
+        }
+        for &(s, d) in &self.edges {
+            if s >= self.nodes.len() || d >= self.nodes.len() {
+                return Err(format!("edge ({s},{d}) out of bounds"));
+            }
+        }
+        // acyclicity (topo_order panics internally; replicate as check)
+        let mut indeg = vec![0usize; self.nodes.len()];
+        for &(_, d) in &self.edges {
+            indeg[d] += 1;
+        }
+        let mut queue: Vec<NodeId> =
+            (0..self.nodes.len()).filter(|&i| indeg[i] == 0).collect();
+        let mut seen = 0;
+        while let Some(id) = queue.pop() {
+            seen += 1;
+            for s in self.successors(id) {
+                indeg[s] -= 1;
+                if indeg[s] == 0 {
+                    queue.push(s);
+                }
+            }
+        }
+        if seen != self.nodes.len() {
+            return Err("cycle detected".into());
+        }
+        // per-edge shape consistency
+        for &(s, d) in &self.edges {
+            let (cs, h1s, h2s) = self.nodes[s].op.out_shape();
+            let dst = &self.nodes[d].op;
+            let err = |what: &str| {
+                Err(format!(
+                    "edge {} -> {}: {}",
+                    self.nodes[s].name, self.nodes[d].name, what
+                ))
+            };
+            match dst {
+                Op::Conv(c) => {
+                    if (c.c_in, c.h1, c.h2) != (cs, h1s, h2s) {
+                        return err(&format!(
+                            "conv expects ({},{},{}), got ({},{},{})",
+                            c.c_in, c.h1, c.h2, cs, h1s, h2s
+                        ));
+                    }
+                }
+                Op::Pool(p) => {
+                    if (p.c, p.h1, p.h2) != (cs, h1s, h2s) {
+                        return err(&format!(
+                            "pool expects ({},{},{}), got ({},{},{})",
+                            p.c, p.h1, p.h2, cs, h1s, h2s
+                        ));
+                    }
+                }
+                Op::Concat { h1, h2, .. } => {
+                    if (*h1, *h2) != (h1s, h2s) {
+                        return err("concat spatial dims mismatch");
+                    }
+                }
+                Op::Add { c, h1, h2 } => {
+                    if (*c, *h1, *h2) != (cs, h1s, h2s) {
+                        return err("add shape mismatch");
+                    }
+                }
+                Op::Fc { c_in, .. } => {
+                    if *c_in != cs * h1s * h2s && *c_in != cs {
+                        return err(&format!(
+                            "fc expects c_in {} but got {}x{}x{}",
+                            c_in, cs, h1s, h2s
+                        ));
+                    }
+                }
+                Op::Output | Op::Input { .. } => {}
+            }
+        }
+        // concat channel sums
+        for n in &self.nodes {
+            if let Op::Concat { c_out, .. } = n.op {
+                let sum: usize = self
+                    .predecessors(n.id)
+                    .iter()
+                    .map(|&p| self.nodes[p].op.out_shape().0)
+                    .sum();
+                if sum != c_out {
+                    return Err(format!(
+                        "concat '{}' expects {} channels, inputs sum to {}",
+                        n.name, c_out, sum
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// A compact multi-line summary (used by the `zoo` CLI subcommand).
+    pub fn summary(&self) -> String {
+        let mut by_kind: BTreeMap<&str, usize> = BTreeMap::new();
+        for n in &self.nodes {
+            *by_kind.entry(n.op.kind()).or_insert(0) += 1;
+        }
+        let kinds = by_kind
+            .iter()
+            .map(|(k, v)| format!("{k}:{v}"))
+            .collect::<Vec<_>>()
+            .join(" ");
+        format!(
+            "{}: {} nodes, {} edges, {} conv layers, {:.2} GOPs [{}]",
+            self.name,
+            self.nodes.len(),
+            self.edges.len(),
+            self.conv_count(),
+            self.total_gops(),
+            kinds
+        )
+    }
+}
+
+/// Incremental builder used by the model zoo. Tracks the running
+/// `(channels, h1, h2)` shape so layers can be chained without repeating
+/// dimensions, and validates the finished graph.
+pub struct CnnBuilder {
+    name: String,
+    nodes: Vec<Node>,
+    edges: Vec<(NodeId, NodeId)>,
+}
+
+impl CnnBuilder {
+    pub fn new(name: &str) -> CnnBuilder {
+        CnnBuilder { name: name.to_string(), nodes: Vec::new(), edges: Vec::new() }
+    }
+
+    /// Add a node with explicit predecessor list; returns its id.
+    pub fn add(&mut self, name: &str, op: Op, preds: &[NodeId]) -> NodeId {
+        let id = self.nodes.len();
+        self.nodes.push(Node { id, name: name.to_string(), op });
+        for &p in preds {
+            self.edges.push((p, id));
+        }
+        id
+    }
+
+    /// Shape of a node's output — used by chaining helpers.
+    pub fn shape(&self, id: NodeId) -> (usize, usize, usize) {
+        self.nodes[id].op.out_shape()
+    }
+
+    /// Chain a conv after `prev`, inferring `c_in/h1/h2` from `prev`.
+    /// `pad` is `(p1, p2)`.
+    pub fn conv(
+        &mut self,
+        name: &str,
+        prev: NodeId,
+        c_out: usize,
+        k: (usize, usize),
+        s: usize,
+        pad: (usize, usize),
+    ) -> NodeId {
+        let (c, h1, h2) = self.shape(prev);
+        let spec = super::layer::ConvSpec::new(c, c_out, h1, h2, k.0, k.1, s, pad.0, pad.1);
+        self.add(name, Op::Conv(spec), &[prev])
+    }
+
+    /// Same-padded conv (odd kernels, stride 1).
+    pub fn conv_same(
+        &mut self,
+        name: &str,
+        prev: NodeId,
+        c_out: usize,
+        k: (usize, usize),
+    ) -> NodeId {
+        self.conv(name, prev, c_out, k, 1, (k.0 / 2, k.1 / 2))
+    }
+
+    pub fn pool(
+        &mut self,
+        name: &str,
+        prev: NodeId,
+        kind: super::layer::PoolKind,
+        k: usize,
+        s: usize,
+        p: usize,
+    ) -> NodeId {
+        let (c, h1, h2) = self.shape(prev);
+        self.add(
+            name,
+            Op::Pool(super::layer::PoolSpec { kind, c, h1, h2, k, s, p }),
+            &[prev],
+        )
+    }
+
+    pub fn concat(&mut self, name: &str, preds: &[NodeId]) -> NodeId {
+        let (_, h1, h2) = self.shape(preds[0]);
+        let c_out = preds.iter().map(|&p| self.shape(p).0).sum();
+        self.add(name, Op::Concat { c_out, h1, h2 }, preds)
+    }
+
+    pub fn finish(mut self, input_c: usize, input_h: usize) -> Cnn {
+        // if the caller forgot input/output nodes the zoo builders add
+        // them; finish() only validates.
+        let _ = (input_c, input_h);
+        // append terminal Output node connected to all sinks (nodes with
+        // no successors), unless one exists already.
+        let has_output = self.nodes.iter().any(|n| matches!(n.op, Op::Output));
+        if !has_output {
+            let sinks: Vec<NodeId> = (0..self.nodes.len())
+                .filter(|&i| !self.edges.iter().any(|(s, _)| *s == i))
+                .collect();
+            let id = self.nodes.len();
+            self.nodes.push(Node { id, name: "output".into(), op: Op::Output });
+            for s in sinks {
+                self.edges.push((s, id));
+            }
+        }
+        let cnn = Cnn { name: self.name, nodes: self.nodes, edges: self.edges };
+        if let Err(e) = cnn.validate() {
+            panic!("invalid CNN '{}': {}", cnn.name, e);
+        }
+        cnn
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::layer::{ConvSpec, PoolKind};
+
+    fn tiny() -> Cnn {
+        let mut b = CnnBuilder::new("tiny");
+        let inp = b.add("in", Op::Input { c: 3, h1: 8, h2: 8 }, &[]);
+        let c1 = b.conv_same("c1", inp, 8, (3, 3));
+        let p = b.pool("p", c1, PoolKind::Max, 2, 2, 0);
+        let c2 = b.conv_same("c2", p, 16, (1, 1));
+        let _ = c2;
+        b.finish(3, 8)
+    }
+
+    #[test]
+    fn builder_chains_shapes() {
+        let net = tiny();
+        assert_eq!(net.conv_count(), 2);
+        let convs = net.conv_nodes();
+        let c2 = net.node(convs[1]).op.conv().unwrap();
+        assert_eq!((c2.c_in, c2.h1, c2.h2), (8, 4, 4));
+        net.validate().unwrap();
+    }
+
+    #[test]
+    fn topo_order_is_valid() {
+        let net = tiny();
+        let order = net.topo_order();
+        let pos: std::collections::HashMap<_, _> =
+            order.iter().enumerate().map(|(i, &id)| (id, i)).collect();
+        for &(s, d) in &net.edges {
+            assert!(pos[&s] < pos[&d], "edge {s}->{d} violates topo order");
+        }
+    }
+
+    #[test]
+    fn validate_catches_shape_mismatch() {
+        let mut b = CnnBuilder::new("bad");
+        let inp = b.add("in", Op::Input { c: 3, h1: 8, h2: 8 }, &[]);
+        // conv expecting 4 channels after a 3-channel input
+        let spec = ConvSpec::new(4, 8, 8, 8, 3, 3, 1, 1, 1);
+        b.add("bad", Op::Conv(spec), &[inp]);
+        let nodes = b.nodes;
+        let edges = b.edges;
+        let cnn = Cnn { name: "bad".into(), nodes, edges };
+        assert!(cnn.validate().is_err());
+    }
+
+    #[test]
+    fn concat_sums_channels() {
+        let mut b = CnnBuilder::new("cat");
+        let inp = b.add("in", Op::Input { c: 8, h1: 4, h2: 4 }, &[]);
+        let a = b.conv_same("a", inp, 4, (1, 1));
+        let c = b.conv_same("c", inp, 12, (3, 3));
+        let cat = b.concat("cat", &[a, c]);
+        assert_eq!(b.shape(cat).0, 16);
+        let net = b.finish(8, 4);
+        net.validate().unwrap();
+    }
+
+    #[test]
+    fn gops_accounting() {
+        let net = tiny();
+        let manual: u64 = net
+            .nodes
+            .iter()
+            .filter_map(|n| n.op.conv())
+            .map(|c| c.macs())
+            .sum();
+        assert_eq!(net.total_macs(), manual);
+    }
+}

@@ -1,0 +1,164 @@
+//! JSON (de)serialization of CNN graphs — lets users bring their own
+//! network description (`examples/custom_cnn.rs`) instead of the zoo.
+
+use super::layer::{ConvSpec, Op, PoolKind, PoolSpec};
+use super::cnn::{Cnn, Node};
+use crate::util::json::Json;
+
+/// Serialize a CNN to JSON.
+pub fn to_json(cnn: &Cnn) -> Json {
+    let nodes = cnn
+        .nodes
+        .iter()
+        .map(|n| {
+            let mut fields = vec![
+                ("name", Json::str(n.name.clone())),
+                ("kind", Json::str(n.op.kind())),
+            ];
+            match &n.op {
+                Op::Input { c, h1, h2 } => {
+                    fields.push(("c", Json::num(*c as f64)));
+                    fields.push(("h1", Json::num(*h1 as f64)));
+                    fields.push(("h2", Json::num(*h2 as f64)));
+                }
+                Op::Conv(c) => {
+                    for (k, v) in [
+                        ("c_in", c.c_in),
+                        ("c_out", c.c_out),
+                        ("h1", c.h1),
+                        ("h2", c.h2),
+                        ("k1", c.k1),
+                        ("k2", c.k2),
+                        ("s", c.s),
+                        ("p1", c.p1),
+                        ("p2", c.p2),
+                    ] {
+                        fields.push((k, Json::num(v as f64)));
+                    }
+                }
+                Op::Pool(p) => {
+                    for (k, v) in
+                        [("c", p.c), ("h1", p.h1), ("h2", p.h2), ("k", p.k), ("s", p.s), ("p", p.p)]
+                    {
+                        fields.push((k, Json::num(v as f64)));
+                    }
+                }
+                Op::Concat { c_out, h1, h2 } => {
+                    fields.push(("c_out", Json::num(*c_out as f64)));
+                    fields.push(("h1", Json::num(*h1 as f64)));
+                    fields.push(("h2", Json::num(*h2 as f64)));
+                }
+                Op::Add { c, h1, h2 } => {
+                    fields.push(("c", Json::num(*c as f64)));
+                    fields.push(("h1", Json::num(*h1 as f64)));
+                    fields.push(("h2", Json::num(*h2 as f64)));
+                }
+                Op::Fc { c_in, c_out } => {
+                    fields.push(("c_in", Json::num(*c_in as f64)));
+                    fields.push(("c_out", Json::num(*c_out as f64)));
+                }
+                Op::Output => {}
+            }
+            Json::obj(fields)
+        })
+        .collect::<Vec<_>>();
+    let edges = cnn
+        .edges
+        .iter()
+        .map(|&(s, d)| Json::arr(vec![Json::num(s as f64), Json::num(d as f64)]))
+        .collect::<Vec<_>>();
+    Json::obj(vec![
+        ("name", Json::str(cnn.name.clone())),
+        ("nodes", Json::Arr(nodes)),
+        ("edges", Json::Arr(edges)),
+    ])
+}
+
+fn req(j: &Json, key: &str) -> Result<usize, String> {
+    j.get(key).as_usize().ok_or_else(|| format!("missing/invalid field '{key}' in {j}"))
+}
+
+/// Deserialize a CNN from JSON (inverse of [`to_json`]); validates.
+pub fn from_json(j: &Json) -> Result<Cnn, String> {
+    let name = j.get("name").as_str().unwrap_or("custom").to_string();
+    let mut nodes = Vec::new();
+    for (id, nj) in j.get("nodes").as_arr().ok_or("missing 'nodes'")?.iter().enumerate() {
+        let nname = nj.get("name").as_str().unwrap_or("").to_string();
+        let kind = nj.get("kind").as_str().ok_or("node missing 'kind'")?;
+        let op = match kind {
+            "input" => Op::Input { c: req(nj, "c")?, h1: req(nj, "h1")?, h2: req(nj, "h2")? },
+            "conv" => Op::Conv(ConvSpec::new(
+                req(nj, "c_in")?,
+                req(nj, "c_out")?,
+                req(nj, "h1")?,
+                req(nj, "h2")?,
+                req(nj, "k1")?,
+                req(nj, "k2")?,
+                req(nj, "s")?,
+                req(nj, "p1")?,
+                req(nj, "p2")?,
+            )),
+            "maxpool" | "avgpool" => Op::Pool(PoolSpec {
+                kind: if kind == "maxpool" { PoolKind::Max } else { PoolKind::Avg },
+                c: req(nj, "c")?,
+                h1: req(nj, "h1")?,
+                h2: req(nj, "h2")?,
+                k: req(nj, "k")?,
+                s: req(nj, "s")?,
+                p: req(nj, "p")?,
+            }),
+            "concat" => Op::Concat { c_out: req(nj, "c_out")?, h1: req(nj, "h1")?, h2: req(nj, "h2")? },
+            "add" => Op::Add { c: req(nj, "c")?, h1: req(nj, "h1")?, h2: req(nj, "h2")? },
+            "fc" => Op::Fc { c_in: req(nj, "c_in")?, c_out: req(nj, "c_out")? },
+            "output" => Op::Output,
+            other => return Err(format!("unknown node kind '{other}'")),
+        };
+        nodes.push(Node { id, name: nname, op });
+    }
+    let mut edges = Vec::new();
+    for ej in j.get("edges").as_arr().ok_or("missing 'edges'")? {
+        let s = ej.at(0).as_usize().ok_or("bad edge src")?;
+        let d = ej.at(1).as_usize().ok_or("bad edge dst")?;
+        edges.push((s, d));
+    }
+    let cnn = Cnn { name, nodes, edges };
+    cnn.validate()?;
+    Ok(cnn)
+}
+
+/// Load a CNN from a JSON file on disk.
+pub fn load(path: &str) -> Result<Cnn, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+    let j = Json::parse(&text).map_err(|e| e.to_string())?;
+    from_json(&j)
+}
+
+/// Save a CNN as pretty JSON.
+pub fn save(cnn: &Cnn, path: &str) -> Result<(), String> {
+    std::fs::write(path, to_json(cnn).pretty()).map_err(|e| format!("write {path}: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::zoo;
+
+    #[test]
+    fn roundtrip_all_zoo_models() {
+        for name in zoo::names() {
+            let net = zoo::by_name(name).unwrap();
+            let j = to_json(&net);
+            let back = from_json(&j).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(back.nodes.len(), net.nodes.len());
+            assert_eq!(back.edges, net.edges);
+            assert_eq!(back.total_macs(), net.total_macs());
+        }
+    }
+
+    #[test]
+    fn rejects_invalid() {
+        assert!(from_json(&Json::parse(r#"{"nodes": [], "edges": []}"#).unwrap()).is_err());
+        let bad = r#"{"name":"x","nodes":[{"name":"in","kind":"wat"}],"edges":[]}"#;
+        assert!(from_json(&Json::parse(bad).unwrap()).is_err());
+    }
+}

@@ -1,0 +1,224 @@
+//! Layer descriptors: convolution, pooling, concat, element-wise add, FC.
+
+/// Meta data of one convolution layer (paper §2.1).
+///
+/// Input feature maps are `c_in` channels of `h1 × h2`; weights are
+/// `c_in × c_out` kernels of `k1 × k2`; `s` is the stride and `(p1, p2)`
+/// the symmetric zero padding applied along each spatial dimension.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConvSpec {
+    pub c_in: usize,
+    pub c_out: usize,
+    pub h1: usize,
+    pub h2: usize,
+    pub k1: usize,
+    pub k2: usize,
+    pub s: usize,
+    pub p1: usize,
+    pub p2: usize,
+}
+
+impl ConvSpec {
+    /// Convenience constructor with "same" padding for stride-1 layers
+    /// (odd kernels) and "valid" otherwise controllable via `p`.
+    pub fn new(
+        c_in: usize,
+        c_out: usize,
+        h1: usize,
+        h2: usize,
+        k1: usize,
+        k2: usize,
+        s: usize,
+        p1: usize,
+        p2: usize,
+    ) -> ConvSpec {
+        ConvSpec { c_in, c_out, h1, h2, k1, k2, s, p1, p2 }
+    }
+
+    /// Output height `O1 = ⌊(H1 + 2·p1 − K1)/s⌋ + 1`.
+    pub fn o1(&self) -> usize {
+        (self.h1 + 2 * self.p1 - self.k1) / self.s + 1
+    }
+
+    /// Output width `O2`.
+    pub fn o2(&self) -> usize {
+        (self.h2 + 2 * self.p2 - self.k2) / self.s + 1
+    }
+
+    /// Total multiply-accumulate operations of direct convolution —
+    /// `Y_CONV` in Eq. 14 of the paper.
+    pub fn macs(&self) -> u64 {
+        self.o1() as u64
+            * self.o2() as u64
+            * self.k1 as u64
+            * self.k2 as u64
+            * self.c_in as u64
+            * self.c_out as u64
+    }
+
+    /// 2 × MACs, the usual GOP accounting.
+    pub fn ops(&self) -> u64 {
+        2 * self.macs()
+    }
+
+    /// Whether the Winograd family is applicable: square kernel of at
+    /// least `r × r` and unit stride (paper §6.1.2: "layers with
+    /// square-shaped kernels"; strided Winograd is listed as future work
+    /// and implemented separately as an extension).
+    pub fn winograd_applicable(&self, r: usize) -> bool {
+        self.k1 == self.k2 && self.k1 >= r && self.s == 1
+    }
+
+    /// Number of weights.
+    pub fn weight_count(&self) -> usize {
+        self.c_in * self.c_out * self.k1 * self.k2
+    }
+
+    /// Number of input activations (unpadded).
+    pub fn input_count(&self) -> usize {
+        self.c_in * self.h1 * self.h2
+    }
+
+    /// Number of output activations.
+    pub fn output_count(&self) -> usize {
+        self.c_out * self.o1() * self.o2()
+    }
+}
+
+/// Pooling flavor. AvgPool can be lowered to a convolution with a
+/// constant `1/(K1·K2)` kernel (paper §3.4); MaxPool uses the dedicated
+/// HPU/VPU pooling module.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolKind {
+    Max,
+    Avg,
+}
+
+/// Pooling layer meta data.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PoolSpec {
+    pub kind: PoolKind,
+    pub c: usize,
+    pub h1: usize,
+    pub h2: usize,
+    pub k: usize,
+    pub s: usize,
+    pub p: usize,
+}
+
+impl PoolSpec {
+    pub fn o1(&self) -> usize {
+        (self.h1 + 2 * self.p - self.k) / self.s + 1
+    }
+    pub fn o2(&self) -> usize {
+        (self.h2 + 2 * self.p - self.k) / self.s + 1
+    }
+    /// AvgPool expressed as an equivalent depth-preserving conv (§3.4).
+    pub fn as_conv(&self) -> ConvSpec {
+        ConvSpec::new(self.c, self.c, self.h1, self.h2, self.k, self.k, self.s, self.p, self.p)
+    }
+}
+
+/// A node in the CNN graph.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// Network input: `c` channels of `h1 × h2`.
+    Input { c: usize, h1: usize, h2: usize },
+    Conv(ConvSpec),
+    Pool(PoolSpec),
+    /// Channel-wise filter concatenation (inception join).
+    Concat { c_out: usize, h1: usize, h2: usize },
+    /// Element-wise residual addition (ResNet join).
+    Add { c: usize, h1: usize, h2: usize },
+    /// Fully-connected layer, executed as a `1 × c_in → c_out` GEMM.
+    Fc { c_in: usize, c_out: usize },
+    Output,
+}
+
+impl Op {
+    /// Output tensor shape `(channels, h1, h2)`; FC/Output flatten to
+    /// `(c, 1, 1)`.
+    pub fn out_shape(&self) -> (usize, usize, usize) {
+        match self {
+            Op::Input { c, h1, h2 } => (*c, *h1, *h2),
+            Op::Conv(c) => (c.c_out, c.o1(), c.o2()),
+            Op::Pool(p) => (p.c, p.o1(), p.o2()),
+            Op::Concat { c_out, h1, h2 } => (*c_out, *h1, *h2),
+            Op::Add { c, h1, h2 } => (*c, *h1, *h2),
+            Op::Fc { c_out, .. } => (*c_out, 1, 1),
+            Op::Output => (0, 0, 0),
+        }
+    }
+
+    pub fn is_conv(&self) -> bool {
+        matches!(self, Op::Conv(_))
+    }
+
+    pub fn conv(&self) -> Option<&ConvSpec> {
+        match self {
+            Op::Conv(c) => Some(c),
+            _ => None,
+        }
+    }
+
+    /// Human-readable op kind.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Op::Input { .. } => "input",
+            Op::Conv(_) => "conv",
+            Op::Pool(p) => {
+                if p.kind == PoolKind::Max {
+                    "maxpool"
+                } else {
+                    "avgpool"
+                }
+            }
+            Op::Concat { .. } => "concat",
+            Op::Add { .. } => "add",
+            Op::Fc { .. } => "fc",
+            Op::Output => "output",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_output_dims() {
+        // 224×224, 7×7 stride 2 pad 3 → 112×112 (GoogLeNet conv1)
+        let c = ConvSpec::new(3, 64, 224, 224, 7, 7, 2, 3, 3);
+        assert_eq!((c.o1(), c.o2()), (112, 112));
+        // same-padded 3×3 stride 1 keeps dims
+        let c = ConvSpec::new(16, 32, 28, 28, 3, 3, 1, 1, 1);
+        assert_eq!((c.o1(), c.o2()), (28, 28));
+        // valid 3×3 stride 2 on 299 → 149 (Inception-v4 stem)
+        let c = ConvSpec::new(3, 32, 299, 299, 3, 3, 2, 0, 0);
+        assert_eq!((c.o1(), c.o2()), (149, 149));
+    }
+
+    #[test]
+    fn macs_counts() {
+        let c = ConvSpec::new(2, 4, 8, 8, 3, 3, 1, 1, 1);
+        assert_eq!(c.macs(), 8 * 8 * 3 * 3 * 2 * 4);
+        assert_eq!(c.ops(), 2 * c.macs());
+    }
+
+    #[test]
+    fn winograd_applicability() {
+        assert!(ConvSpec::new(1, 1, 8, 8, 3, 3, 1, 1, 1).winograd_applicable(3));
+        assert!(ConvSpec::new(1, 1, 8, 8, 5, 5, 1, 2, 2).winograd_applicable(3));
+        assert!(!ConvSpec::new(1, 1, 8, 8, 1, 1, 1, 0, 0).winograd_applicable(3));
+        assert!(!ConvSpec::new(1, 1, 8, 8, 7, 1, 1, 3, 0).winograd_applicable(3));
+        assert!(!ConvSpec::new(1, 1, 8, 8, 3, 3, 2, 1, 1).winograd_applicable(3));
+    }
+
+    #[test]
+    fn avgpool_as_conv_preserves_dims() {
+        let p = PoolSpec { kind: PoolKind::Avg, c: 32, h1: 8, h2: 8, k: 3, s: 1, p: 1 };
+        let c = p.as_conv();
+        assert_eq!((c.o1(), c.o2()), (p.o1(), p.o2()));
+        assert_eq!(c.c_in, c.c_out);
+    }
+}

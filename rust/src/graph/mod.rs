@@ -1,0 +1,17 @@
+//! CNN graph intermediate representation.
+//!
+//! A [`Cnn`] is a DAG of layers ([`Op`]). Convolution layers carry the full
+//! meta data the paper's cost model needs (§2.1): input feature map
+//! `H1×H2`, kernels `K1×K2`, stride, padding and channel counts. The model
+//! zoo ([`zoo`]) provides the networks the paper evaluates (GoogLeNet,
+//! Inception-v4) plus the series-parallel lemma examples (VGG, AlexNet,
+//! ResNet) and the small `MiniInception` used for end-to-end functional
+//! validation through the PJRT runtime.
+
+pub mod layer;
+pub mod cnn;
+pub mod config;
+pub mod zoo;
+
+pub use cnn::{Cnn, CnnBuilder, NodeId};
+pub use layer::{ConvSpec, Op, PoolKind, PoolSpec};

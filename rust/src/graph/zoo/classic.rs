@@ -1,0 +1,121 @@
+//! Classic chain / skip-connection CNNs used by Lemma 4.3 (VGG, AlexNet,
+//! ResNet are series-parallel) and as additional DSE workloads.
+
+use crate::graph::layer::{Op, PoolKind};
+use crate::graph::{Cnn, CnnBuilder, NodeId};
+
+/// VGG-16 (configuration D) for 224×224×3 input. A pure chain.
+pub fn vgg16() -> Cnn {
+    let mut b = CnnBuilder::new("vgg16");
+    let inp = b.add("input", Op::Input { c: 3, h1: 224, h2: 224 }, &[]);
+    let blocks: &[(usize, usize)] = &[(2, 64), (2, 128), (3, 256), (3, 512), (3, 512)];
+    let mut cur = inp;
+    for (bi, &(n, c)) in blocks.iter().enumerate() {
+        for li in 0..n {
+            cur = b.conv_same(&format!("conv{}_{}", bi + 1, li + 1), cur, c, (3, 3));
+        }
+        cur = b.pool(&format!("pool{}", bi + 1), cur, PoolKind::Max, 2, 2, 0);
+    }
+    let (c, h1, h2) = b.shape(cur);
+    let f1 = b.add("fc6", Op::Fc { c_in: c * h1 * h2, c_out: 4096 }, &[cur]);
+    let f2 = b.add("fc7", Op::Fc { c_in: 4096, c_out: 4096 }, &[f1]);
+    b.add("fc8", Op::Fc { c_in: 4096, c_out: 1000 }, &[f2]);
+    b.finish(3, 224)
+}
+
+/// AlexNet (single-tower variant) for 227×227×3 input. A pure chain.
+pub fn alexnet() -> Cnn {
+    let mut b = CnnBuilder::new("alexnet");
+    let inp = b.add("input", Op::Input { c: 3, h1: 227, h2: 227 }, &[]);
+    let c1 = b.conv("conv1", inp, 96, (11, 11), 4, (0, 0));
+    let p1 = b.pool("pool1", c1, PoolKind::Max, 3, 2, 0);
+    let c2 = b.conv_same("conv2", p1, 256, (5, 5));
+    let p2 = b.pool("pool2", c2, PoolKind::Max, 3, 2, 0);
+    let c3 = b.conv_same("conv3", p2, 384, (3, 3));
+    let c4 = b.conv_same("conv4", c3, 384, (3, 3));
+    let c5 = b.conv_same("conv5", c4, 256, (3, 3));
+    let p5 = b.pool("pool5", c5, PoolKind::Max, 3, 2, 0);
+    let (c, h1, h2) = b.shape(p5);
+    let f1 = b.add("fc6", Op::Fc { c_in: c * h1 * h2, c_out: 4096 }, &[p5]);
+    let f2 = b.add("fc7", Op::Fc { c_in: 4096, c_out: 4096 }, &[f1]);
+    b.add("fc8", Op::Fc { c_in: 4096, c_out: 1000 }, &[f2]);
+    b.finish(3, 227)
+}
+
+/// One basic residual block (two 3×3 convs + skip). When `down` is set,
+/// the first conv has stride 2 and the skip is a 1×1/2 projection.
+fn basic_block(
+    b: &mut CnnBuilder,
+    prev: NodeId,
+    name: &str,
+    c_out: usize,
+    down: bool,
+) -> NodeId {
+    let s = if down { 2 } else { 1 };
+    let c1 = b.conv(&format!("{name}/conv1"), prev, c_out, (3, 3), s, (1, 1));
+    let c2 = b.conv_same(&format!("{name}/conv2"), c1, c_out, (3, 3));
+    let skip = if down || b.shape(prev).0 != c_out {
+        b.conv(&format!("{name}/proj"), prev, c_out, (1, 1), s, (0, 0))
+    } else {
+        prev
+    };
+    let (c, h1, h2) = b.shape(c2);
+    b.add(&format!("{name}/add"), Op::Add { c, h1, h2 }, &[c2, skip])
+}
+
+/// ResNet-18 for 224×224×3 input. Skip connections make this the
+/// parallel-edge case of the series-parallel reduction (Lemma 4.3).
+pub fn resnet18() -> Cnn {
+    let mut b = CnnBuilder::new("resnet18");
+    let inp = b.add("input", Op::Input { c: 3, h1: 224, h2: 224 }, &[]);
+    let c1 = b.conv("conv1", inp, 64, (7, 7), 2, (3, 3));
+    let mut cur = b.pool("pool1", c1, PoolKind::Max, 3, 2, 1);
+    let stages: &[(usize, usize, bool)] =
+        &[(64, 2, false), (128, 2, true), (256, 2, true), (512, 2, true)];
+    for (si, &(c, n, down_first)) in stages.iter().enumerate() {
+        for bi in 0..n {
+            let down = down_first && bi == 0;
+            cur = basic_block(&mut b, cur, &format!("layer{}_{}", si + 1, bi + 1), c, down);
+        }
+    }
+    let gap = b.pool("avgpool", cur, PoolKind::Avg, 7, 1, 0);
+    let (c, h1, h2) = b.shape(gap);
+    b.add("fc", Op::Fc { c_in: c * h1 * h2, c_out: 1000 }, &[gap]);
+    b.finish(3, 224)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg16_shape_chain() {
+        let g = vgg16();
+        g.validate().unwrap();
+        assert_eq!(g.conv_count(), 13);
+        // every conv node in a chain has in/out degree 1
+        for id in g.conv_nodes() {
+            assert_eq!(g.in_degree(id), 1);
+            assert_eq!(g.out_degree(id), 1);
+        }
+    }
+
+    #[test]
+    fn alexnet_dims() {
+        let g = alexnet();
+        g.validate().unwrap();
+        assert_eq!(g.conv_count(), 5);
+        let c1 = g.nodes.iter().find(|n| n.name == "conv1").unwrap();
+        assert_eq!(c1.op.out_shape(), (96, 55, 55));
+    }
+
+    #[test]
+    fn resnet18_has_skips() {
+        let g = resnet18();
+        g.validate().unwrap();
+        // 1 stem + 8 blocks × 2 convs + 3 projections = 20 convs
+        assert_eq!(g.conv_count(), 20);
+        let adds = g.nodes.iter().filter(|n| matches!(n.op, Op::Add { .. })).count();
+        assert_eq!(adds, 8);
+    }
+}

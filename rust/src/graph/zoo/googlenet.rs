@@ -1,0 +1,126 @@
+//! GoogLeNet (Inception-v1, Szegedy et al. 2015) for 224×224×3 input.
+//!
+//! 9 inception modules of 6 conv layers each, plus the 3 stem convs —
+//! 57 convolution layers total. Channel counts follow Table 1 of the
+//! GoogLeNet paper.
+
+use crate::graph::layer::{Op, PoolKind};
+use crate::graph::{Cnn, CnnBuilder, NodeId};
+
+/// One inception module: `(#1×1, #3×3 reduce, #3×3, #5×5 reduce, #5×5,
+/// pool proj)`.
+struct Inception {
+    name: &'static str,
+    b1: usize,
+    b2r: usize,
+    b2: usize,
+    b3r: usize,
+    b3: usize,
+    b4: usize,
+}
+
+fn inception(b: &mut CnnBuilder, prev: NodeId, m: &Inception) -> NodeId {
+    let n = m.name;
+    let b1 = b.conv_same(&format!("{n}/1x1"), prev, m.b1, (1, 1));
+    let b2r = b.conv_same(&format!("{n}/3x3_reduce"), prev, m.b2r, (1, 1));
+    let b2 = b.conv_same(&format!("{n}/3x3"), b2r, m.b2, (3, 3));
+    let b3r = b.conv_same(&format!("{n}/5x5_reduce"), prev, m.b3r, (1, 1));
+    let b3 = b.conv_same(&format!("{n}/5x5"), b3r, m.b3, (5, 5));
+    let p = b.pool(&format!("{n}/pool"), prev, PoolKind::Max, 3, 1, 1);
+    let b4 = b.conv_same(&format!("{n}/pool_proj"), p, m.b4, (1, 1));
+    b.concat(&format!("{n}/concat"), &[b1, b2, b3, b4])
+}
+
+/// Build the full GoogLeNet graph.
+pub fn googlenet() -> Cnn {
+    let mut b = CnnBuilder::new("googlenet");
+    let inp = b.add("input", Op::Input { c: 3, h1: 224, h2: 224 }, &[]);
+
+    // stem
+    let c1 = b.conv("conv1/7x7_s2", inp, 64, (7, 7), 2, (3, 3));
+    let p1 = b.pool("pool1/3x3_s2", c1, PoolKind::Max, 3, 2, 1);
+    let c2r = b.conv_same("conv2/3x3_reduce", p1, 64, (1, 1));
+    let c2 = b.conv_same("conv2/3x3", c2r, 192, (3, 3));
+    let p2 = b.pool("pool2/3x3_s2", c2, PoolKind::Max, 3, 2, 1);
+
+    const MODS_3: [Inception; 2] = [
+        Inception { name: "inception_3a", b1: 64, b2r: 96, b2: 128, b3r: 16, b3: 32, b4: 32 },
+        Inception { name: "inception_3b", b1: 128, b2r: 128, b2: 192, b3r: 32, b3: 96, b4: 64 },
+    ];
+    const MODS_4: [Inception; 5] = [
+        Inception { name: "inception_4a", b1: 192, b2r: 96, b2: 208, b3r: 16, b3: 48, b4: 64 },
+        Inception { name: "inception_4b", b1: 160, b2r: 112, b2: 224, b3r: 24, b3: 64, b4: 64 },
+        Inception { name: "inception_4c", b1: 128, b2r: 128, b2: 256, b3r: 24, b3: 64, b4: 64 },
+        Inception { name: "inception_4d", b1: 112, b2r: 144, b2: 288, b3r: 32, b3: 64, b4: 64 },
+        Inception { name: "inception_4e", b1: 256, b2r: 160, b2: 320, b3r: 32, b3: 128, b4: 128 },
+    ];
+    const MODS_5: [Inception; 2] = [
+        Inception { name: "inception_5a", b1: 256, b2r: 160, b2: 320, b3r: 32, b3: 128, b4: 128 },
+        Inception { name: "inception_5b", b1: 384, b2r: 192, b2: 384, b3r: 48, b3: 128, b4: 128 },
+    ];
+
+    let mut cur = p2;
+    for m in &MODS_3 {
+        cur = inception(&mut b, cur, m);
+    }
+    cur = b.pool("pool3/3x3_s2", cur, PoolKind::Max, 3, 2, 1);
+    for m in &MODS_4 {
+        cur = inception(&mut b, cur, m);
+    }
+    cur = b.pool("pool4/3x3_s2", cur, PoolKind::Max, 3, 2, 1);
+    for m in &MODS_5 {
+        cur = inception(&mut b, cur, m);
+    }
+    let gap = b.pool("pool5/7x7_s1", cur, PoolKind::Avg, 7, 1, 0);
+    let (c, h1, h2) = b.shape(gap);
+    b.add("loss3/classifier", Op::Fc { c_in: c * h1 * h2, c_out: 1000 }, &[gap]);
+    b.finish(3, 224)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn structure() {
+        let g = googlenet();
+        g.validate().unwrap();
+        assert_eq!(g.conv_count(), 57);
+        // final concat produces 1024 channels at 7×7
+        let fc = g
+            .nodes
+            .iter()
+            .find(|n| matches!(n.op, Op::Fc { .. }))
+            .unwrap();
+        if let Op::Fc { c_in, c_out } = fc.op {
+            assert_eq!(c_in, 1024);
+            assert_eq!(c_out, 1000);
+        }
+    }
+
+    #[test]
+    fn module_channel_sums() {
+        // inception_3a output = 64+128+32+32 = 256
+        let g = googlenet();
+        let cat = g
+            .nodes
+            .iter()
+            .find(|n| n.name == "inception_3a/concat")
+            .unwrap();
+        assert_eq!(cat.op.out_shape().0, 256);
+        // 3a operates at 28×28
+        assert_eq!(cat.op.out_shape().1, 28);
+    }
+
+    #[test]
+    fn spatial_pyramid() {
+        let g = googlenet();
+        let at = |name: &str| {
+            g.nodes.iter().find(|n| n.name == name).unwrap().op.out_shape()
+        };
+        assert_eq!(at("conv1/7x7_s2"), (64, 112, 112));
+        assert_eq!(at("pool2/3x3_s2").1, 28);
+        assert_eq!(at("pool3/3x3_s2").1, 14);
+        assert_eq!(at("pool4/3x3_s2").1, 7);
+    }
+}

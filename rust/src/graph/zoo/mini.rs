@@ -1,0 +1,72 @@
+//! MiniInception — the small inception-style network used for functional
+//! end-to-end validation through the PJRT runtime.
+//!
+//! Shapes are deliberately tiny (16×16 input, ≤32 channels) so the
+//! interpret-mode Pallas kernels lower and execute quickly on the CPU
+//! PJRT client, while still exercising every structural feature the
+//! DYNAMAP flow must handle: a stem conv, an inception-style branch/concat
+//! module with 1×1 / 3×3 / 5×5 kernels (so all three algorithm families
+//! are applicable somewhere), max pooling and a 1×1 head.
+//!
+//! The layer shapes here must stay in sync with
+//! `python/compile/model.py::MINI_LAYERS` — the AOT artifact manifest is
+//! keyed by the conv names below.
+
+use crate::graph::layer::{Op, PoolKind};
+use crate::graph::Cnn;
+use crate::graph::CnnBuilder;
+
+pub const MINI_INPUT_C: usize = 4;
+pub const MINI_INPUT_H: usize = 16;
+
+/// Build MiniInception. Conv names are the artifact-manifest keys.
+pub fn mini_inception() -> Cnn {
+    let mut b = CnnBuilder::new("mini-inception");
+    let inp = b.add(
+        "input",
+        Op::Input { c: MINI_INPUT_C, h1: MINI_INPUT_H, h2: MINI_INPUT_H },
+        &[],
+    );
+    // stem: 3×3 same conv, 4→8 channels @16×16
+    let stem = b.conv_same("stem", inp, 8, (3, 3));
+    // inception module @16×16, in 8
+    let b1 = b.conv_same("inc/b1_1x1", stem, 8, (1, 1));
+    let b2r = b.conv_same("inc/b2_reduce", stem, 4, (1, 1));
+    let b2 = b.conv_same("inc/b2_3x3", b2r, 8, (3, 3));
+    let b3r = b.conv_same("inc/b3_reduce", stem, 4, (1, 1));
+    let b3 = b.conv_same("inc/b3_5x5", b3r, 8, (5, 5));
+    let cat = b.concat("inc/concat", &[b1, b2, b3]);
+    // reduce: maxpool /2 → 8×8
+    let pool = b.pool("pool", cat, PoolKind::Max, 2, 2, 0);
+    // head: 1×1 conv 24→16 @8×8
+    let head = b.conv_same("head", pool, 16, (1, 1));
+    let _ = head;
+    b.finish(MINI_INPUT_C, MINI_INPUT_H)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn structure() {
+        let g = mini_inception();
+        g.validate().unwrap();
+        assert_eq!(g.conv_count(), 7);
+        let cat = g.nodes.iter().find(|n| n.name == "inc/concat").unwrap();
+        assert_eq!(cat.op.out_shape(), (24, 16, 16));
+        let head = g.nodes.iter().find(|n| n.name == "head").unwrap();
+        assert_eq!(head.op.out_shape(), (16, 8, 8));
+    }
+
+    #[test]
+    fn all_algorithms_applicable_somewhere() {
+        let g = mini_inception();
+        // at least one layer where winograd applies (3×3, stride 1)
+        assert!(g
+            .nodes
+            .iter()
+            .filter_map(|n| n.op.conv())
+            .any(|c| c.winograd_applicable(3)));
+    }
+}

@@ -1,0 +1,54 @@
+//! # DYNAMAP — Dynamic Algorithm Mapping for Low-Latency CNN Inference
+//!
+//! Reproduction of Meng et al., *DYNAMAP* (FPGA '21). The crate contains
+//! the complete software stack of the paper:
+//!
+//! * [`graph`] — CNN graph IR and the model zoo (GoogLeNet, Inception-v4, …).
+//! * [`cost`] — the analytical cost model: GEMM cycles under the three
+//!   dataflows (Eq. 9), per-algorithm conv latency (Eq. 10–12), and
+//!   inter-layer layout-transition costs (Table 2, Eq. 13).
+//! * [`sp`] — series-parallel graph recognition and reduction (Def. 1).
+//! * [`pbqp`] — Partitioned Boolean Quadratic Programming: the
+//!   polynomial-time series-parallel solver (Thm 4.1), a brute-force
+//!   verifier and a greedy baseline.
+//! * [`dse`] — the two-step design-space exploration flow (Fig. 7):
+//!   Algorithm 1 architecture-parameter identification + PBQP mapping.
+//! * [`overlay`] — a cycle-level simulator of the hardware overlay:
+//!   systolic array (NS/WS/IS dataflows, stall-free PEs), dual-parallelism
+//!   blocked banking, DLT layout-transformation FSM, pad-and-accumulate,
+//!   Winograd linear transforms, pooling units and the DDR model.
+//! * [`algos`] — functional (bit-accurate) f32/int8 implementations of
+//!   im2col, kn2row and Winograd convolution.
+//! * [`runtime`] — PJRT client wrapper that loads the AOT-compiled HLO
+//!   artifacts produced by `python/compile/aot.py` and executes them.
+//! * [`coordinator`] — the end-to-end inference engine that chains
+//!   per-layer executables according to the DSE-chosen algorithm mapping.
+//! * [`emit`] — Verilog-style RTL + control-stream emission.
+//! * [`bench`] — mini-criterion harness + figure/table regeneration.
+//! * [`util`] — in-repo substrates (JSON, CLI, RNG/property testing,
+//!   ASCII tables) replacing crates unavailable in the offline build.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use dynamap::graph::zoo;
+//! use dynamap::dse::{Dse, DseConfig};
+//!
+//! let cnn = zoo::googlenet();
+//! let dse = Dse::new(DseConfig::alveo_u200());
+//! let plan = dse.run(&cnn).unwrap();
+//! println!("latency = {:.3} ms", plan.total_latency_ms);
+//! ```
+
+pub mod util;
+pub mod graph;
+pub mod cost;
+pub mod sp;
+pub mod pbqp;
+pub mod dse;
+pub mod overlay;
+pub mod algos;
+pub mod runtime;
+pub mod coordinator;
+pub mod emit;
+pub mod bench;

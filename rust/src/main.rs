@@ -1,0 +1,143 @@
+//! DYNAMAP command-line interface.
+//!
+//! Subcommands:
+//! * `zoo` — list the built-in model zoo with stats.
+//! * `dse --model <name>` — run the full DSE flow, print the plan.
+//! * `baselines --model <name>` — compare OPT vs bl3/bl4/bl5/greedy.
+//! * `simulate --model <name>` — cycle-level overlay simulation.
+//! * `infer` — end-to-end functional inference through PJRT artifacts.
+//! * `figures --out <dir>` — regenerate every paper table/figure.
+//! * `emit --model <name> --out <dir>` — emit Verilog + control streams.
+
+use dynamap::dse::{Dse, DseConfig};
+use dynamap::graph::zoo;
+use dynamap::util::cli::Args;
+use dynamap::util::table::Table;
+
+fn main() {
+    let args = Args::parse_env(&["json", "verbose", "no-fuse"]);
+    let code = match args.subcommand.as_deref() {
+        Some("zoo") => cmd_zoo(),
+        Some("dse") => cmd_dse(&args),
+        Some("baselines") => cmd_baselines(&args),
+        Some("simulate") => dynamap::coordinator::cli::simulate(&args),
+        Some("infer") => dynamap::coordinator::cli::infer(&args),
+        Some("figures") => dynamap::bench::figures::cli(&args),
+        Some("emit") => dynamap::emit::cli(&args),
+        _ => {
+            eprintln!(
+                "usage: dynamap <zoo|dse|baselines|simulate|infer|figures|emit> [--model NAME] \
+                 [--dsp N] [--out DIR] [--json]"
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+/// Load a model by zoo name or JSON file path.
+fn load_model(args: &Args) -> Result<dynamap::graph::Cnn, String> {
+    let name = args.get_or("model", "googlenet");
+    if let Some(m) = zoo::by_name(name) {
+        return Ok(m);
+    }
+    dynamap::graph::config::load(name)
+}
+
+/// Build a DseConfig from CLI overrides.
+fn config_from(args: &Args) -> DseConfig {
+    let mut cfg = DseConfig::alveo_u200();
+    if let Some(dsp) = args.get("dsp") {
+        cfg.device.dsp_cap = dsp.parse().unwrap_or(cfg.device.dsp_cap);
+    }
+    cfg.device.ddr_gbps = args.get_f64("bw", cfg.device.ddr_gbps);
+    cfg.device.freq_mhz = args.get_f64("freq", cfg.device.freq_mhz);
+    if args.has("no-fuse") {
+        cfg.opts.sram_fuse = false;
+    }
+    cfg
+}
+
+fn cmd_zoo() -> i32 {
+    for name in zoo::names() {
+        let m = zoo::by_name(name).unwrap();
+        println!("{}", m.summary());
+    }
+    0
+}
+
+fn cmd_dse(args: &Args) -> i32 {
+    let cnn = match load_model(args) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    let dse = Dse::new(config_from(args));
+    let t0 = std::time::Instant::now();
+    let plan = dse.run(&cnn).unwrap();
+    let dt = t0.elapsed();
+    if args.has("json") {
+        println!("{}", plan.to_json().pretty());
+        return 0;
+    }
+    println!(
+        "model={} P_SA=({}, {})  latency={:.3} ms  throughput={:.0} GOP/s  (DSE took {:.2?})",
+        plan.cnn_name, plan.p1, plan.p2, plan.total_latency_ms, plan.throughput_gops, dt
+    );
+    println!(
+        "  compute {:.3} ms + transitions {:.3} ms",
+        plan.mapping.compute_sec * 1e3,
+        plan.mapping.transition_sec * 1e3
+    );
+    println!("  algorithm histogram: {:?}", plan.algo_histogram());
+    if args.has("verbose") {
+        let mut t =
+            Table::new("per-layer mapping", &["layer", "algo", "dataflow", "cycles", "util"]);
+        for l in &plan.mapping.layers {
+            t.row(vec![
+                l.name.clone(),
+                l.cost.algo.name(),
+                l.cost.dataflow.name().into(),
+                l.cost.cycles.to_string(),
+                format!("{:.3}", l.cost.utilization),
+            ]);
+        }
+        println!("{}", t.render());
+    }
+    0
+}
+
+fn cmd_baselines(args: &Args) -> i32 {
+    use dynamap::cost::graph_build::Policy;
+    let cnn = match load_model(args) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    let dse = Dse::new(config_from(args));
+    let opt = dse.run(&cnn).unwrap();
+    let mut t = Table::new(
+        &format!("{} — OPT vs baselines", cnn.name),
+        &["mapping", "latency ms", "vs OPT"],
+    );
+    t.row(vec!["OPT (DYNAMAP)".into(), format!("{:.3}", opt.total_latency_ms), "1.00×".into()]);
+    for (label, policy) in [
+        ("bl3 im2col-only", Policy::Im2colOnly),
+        ("bl4 kn2row-applied", Policy::Kn2rowApplied),
+        ("bl5 wino-applied", Policy::WinoApplied),
+        ("greedy node-cost", Policy::Greedy),
+    ] {
+        let p = dse.run_policy(&cnn, policy).unwrap();
+        t.row(vec![
+            label.into(),
+            format!("{:.3}", p.total_latency_ms),
+            format!("{:.2}×", p.total_latency_ms / opt.total_latency_ms),
+        ]);
+    }
+    println!("{}", t.render());
+    0
+}

@@ -1,0 +1,138 @@
+//! Dual-parallelism blocked data layout (§3.2, Eq. 7, Fig. 4).
+//!
+//! A matrix is partitioned into `P_SA1 × P_SA2` blocks along both
+//! systolic-array dimensions and block `(i, j)` is stored in
+//! `Bank_x = (i + j) mod N_B`, `Block_y = i` — the circular shift
+//! guarantees that reading a full block-row (NS dataflow streaming) or
+//! a full block-column (WS/IS stationary pre-load) touches `N_B`
+//! distinct banks, so both access patterns are single-cycle parallel
+//! and conflict-free without `P_SA1 × P_SA2` individual banks.
+
+/// The Eq. 7 mapping: block coordinates → (bank, slot).
+#[derive(Debug, Clone, Copy)]
+pub struct BlockedLayout {
+    /// Number of SRAM banks (= max(P_SA1, P_SA2) in the overlay).
+    pub n_banks: usize,
+}
+
+impl BlockedLayout {
+    pub fn new(n_banks: usize) -> BlockedLayout {
+        assert!(n_banks > 0);
+        BlockedLayout { n_banks }
+    }
+
+    /// Eq. 7: `(Bank_x, Block_y)` of block `(i, j)`.
+    #[inline]
+    pub fn place(&self, i: usize, j: usize) -> (usize, usize) {
+        ((i + j) % self.n_banks, i)
+    }
+
+    /// Banks touched when reading block-row `i` across `w` block-columns.
+    pub fn row_banks(&self, i: usize, w: usize) -> Vec<usize> {
+        (0..w).map(|j| self.place(i, j).0).collect()
+    }
+
+    /// Banks touched when reading block-column `j` across `h` block-rows.
+    pub fn col_banks(&self, j: usize, h: usize) -> Vec<usize> {
+        (0..h).map(|i| self.place(i, j).0).collect()
+    }
+
+    /// Count of conflicting (same-bank) pairs in one parallel access —
+    /// 0 means single-cycle conflict-free.
+    pub fn conflicts(banks: &[usize]) -> usize {
+        let mut sorted = banks.to_vec();
+        sorted.sort_unstable();
+        sorted.windows(2).filter(|w| w[0] == w[1]).count()
+    }
+}
+
+/// A banked scratchpad storing f32 words, modelling the Input/Kernel/
+/// Output buffers. Tracks per-cycle access sets to detect conflicts.
+#[derive(Debug, Clone)]
+pub struct BankedSram {
+    pub layout: BlockedLayout,
+    pub banks: Vec<Vec<f32>>,
+    /// Total accesses and conflict-stall cycles observed.
+    pub accesses: u64,
+    pub conflict_stalls: u64,
+}
+
+impl BankedSram {
+    pub fn new(n_banks: usize, bank_words: usize) -> BankedSram {
+        BankedSram {
+            layout: BlockedLayout::new(n_banks),
+            banks: vec![vec![0.0; bank_words]; n_banks],
+            accesses: 0,
+            conflict_stalls: 0,
+        }
+    }
+
+    /// Perform one parallel access to `(bank, addr)` pairs; extra cycles
+    /// are charged when multiple requests hit one bank.
+    pub fn parallel_read(&mut self, reqs: &[(usize, usize)]) -> Vec<f32> {
+        self.accesses += reqs.len() as u64;
+        let banks: Vec<usize> = reqs.iter().map(|&(b, _)| b).collect();
+        self.conflict_stalls += BlockedLayout::conflicts(&banks) as u64;
+        reqs.iter().map(|&(b, a)| self.banks[b][a]).collect()
+    }
+
+    pub fn write(&mut self, bank: usize, addr: usize, v: f32) {
+        self.banks[bank][addr] = v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{proptest, rng::Rng};
+
+    #[test]
+    fn rows_and_cols_conflict_free() {
+        proptest::check("eq7_conflict_free", 128, |r: &mut Rng| {
+            let n = r.range(1, 64);
+            let l = BlockedLayout::new(n);
+            // any row / column access across up to n blocks is conflict-free
+            let w = r.range(1, n);
+            let i = r.range(0, 2 * n);
+            let j = r.range(0, 2 * n);
+            let rb = l.row_banks(i, w);
+            let cb = l.col_banks(j, w);
+            if BlockedLayout::conflicts(&rb) != 0 {
+                return Err(format!("row conflict: n={n} i={i} banks={rb:?}"));
+            }
+            if BlockedLayout::conflicts(&cb) != 0 {
+                return Err(format!("col conflict: n={n} j={j} banks={cb:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn naive_layout_conflicts_on_columns() {
+        // contrast: storing block (i,j) in bank j (no circular shift)
+        // makes column reads hit a single bank — total serialization.
+        let n = 8;
+        let naive: Vec<usize> = (0..n).map(|_i| 3 % n).collect();
+        assert_eq!(BlockedLayout::conflicts(&naive), n - 1);
+    }
+
+    #[test]
+    fn sram_counts_conflicts() {
+        let mut s = BankedSram::new(4, 16);
+        s.write(0, 0, 1.0);
+        s.write(1, 0, 2.0);
+        let v = s.parallel_read(&[(0, 0), (1, 0)]);
+        assert_eq!(v, vec![1.0, 2.0]);
+        assert_eq!(s.conflict_stalls, 0);
+        s.parallel_read(&[(2, 0), (2, 1)]);
+        assert_eq!(s.conflict_stalls, 1);
+    }
+
+    #[test]
+    fn place_is_stable() {
+        let l = BlockedLayout::new(4);
+        assert_eq!(l.place(0, 0), (0, 0));
+        assert_eq!(l.place(1, 3), (0, 1));
+        assert_eq!(l.place(2, 3), (1, 2));
+    }
+}

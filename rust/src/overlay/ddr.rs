@@ -1,0 +1,108 @@
+//! DDR interface model: burst aggregation of a generated address
+//! stream (§3.3: "generated (DDR address, data) tuples are buffered
+//! until DDR transfer burst length (BL) is saturated").
+
+/// Burst accountant: feed it the DRAM addresses a DLT/LTU pass
+/// generates in order; it groups consecutive addresses into bursts of
+/// up to `bl` elements and counts transactions.
+#[derive(Debug, Clone)]
+pub struct BurstCounter {
+    pub bl: usize,
+    transactions: u64,
+    run_start: Option<u64>,
+    run_len: usize,
+    last: Option<u64>,
+}
+
+impl BurstCounter {
+    pub fn new(bl: usize) -> BurstCounter {
+        assert!(bl > 0);
+        BurstCounter { bl, transactions: 0, run_start: None, run_len: 0, last: None }
+    }
+
+    /// Feed one generated DDR address.
+    pub fn push(&mut self, addr: u64) {
+        match self.last {
+            Some(last) if addr == last + 1 && self.run_len < self.bl => {
+                self.run_len += 1;
+            }
+            _ => {
+                if self.run_start.is_some() {
+                    self.transactions += 1;
+                }
+                self.run_start = Some(addr);
+                self.run_len = 1;
+            }
+        }
+        self.last = Some(addr);
+    }
+
+    /// Close the stream, returning total burst transactions.
+    pub fn finish(mut self) -> u64 {
+        if self.run_start.is_some() {
+            self.transactions += 1;
+        }
+        self.transactions
+    }
+
+    /// Effective bandwidth utilization of the stream: elements moved /
+    /// (transactions × BL).
+    pub fn efficiency(elements: u64, transactions: u64, bl: usize) -> f64 {
+        if transactions == 0 {
+            return 1.0;
+        }
+        elements as f64 / (transactions as f64 * bl as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_stream_saturates_bursts() {
+        let mut b = BurstCounter::new(64);
+        for a in 0..640u64 {
+            b.push(a);
+        }
+        let tx = b.finish();
+        assert_eq!(tx, 10);
+        assert_eq!(BurstCounter::efficiency(640, tx, 64), 1.0);
+    }
+
+    #[test]
+    fn strided_stream_wastes_bandwidth() {
+        // stride-16 addresses: every element opens a new burst
+        let mut b = BurstCounter::new(64);
+        for i in 0..100u64 {
+            b.push(i * 16);
+        }
+        let tx = b.finish();
+        assert_eq!(tx, 100);
+        assert!(BurstCounter::efficiency(100, tx, 64) < 0.02);
+    }
+
+    #[test]
+    fn scattered_with_c_runs() {
+        // the Eq. 13 pattern: runs of C consecutive addresses spaced far
+        // apart — efficiency ≈ C/BL when C < BL
+        let c = 16u64;
+        let bl = 64;
+        let mut b = BurstCounter::new(bl);
+        for chunk in 0..50u64 {
+            for i in 0..c {
+                b.push(chunk * 10_000 + i);
+            }
+        }
+        let tx = b.finish();
+        assert_eq!(tx, 50);
+        let eff = BurstCounter::efficiency(50 * c, tx, bl);
+        assert!((eff - c as f64 / bl as f64).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_stream() {
+        let b = BurstCounter::new(8);
+        assert_eq!(b.finish(), 0);
+    }
+}

@@ -1,0 +1,359 @@
+//! Data Layout Transformation module (§3.3, Table 1, Fig. 5).
+//!
+//! A Layout Transformation Unit (LTU) is a nested-counter address
+//! generator: each FSM level walks a counter and advances the on-chip
+//! SRAM address `B` and the DRAM address `D` by per-level strides —
+//! exactly the `(I, step_b, step_d, I1, inc_b2, inc_d2, …)` scheme of
+//! Table 1, generalized to any nesting depth (Table 1 shows the
+//! depth-1-feature-map rows; the channel loop is one more level).
+//!
+//! Padding is handled the way the hardware does: the FSM tracks the 2-D
+//! `(y, x)` coordinate alongside the linear SRAM address and a bounds
+//! mux substitutes zero outside `[0, H1) × [0, H2)` — a purely linear
+//! address check would wrap across rows/channels.
+//!
+//! [`Ltu::tensor3d_to_toeplitz`], [`Ltu::tensor3d_to_wino`] and
+//! [`Ltu::wino_to_tensor3d`] instantiate the three Table-1 rows; tests
+//! verify each against the reference layout builders in
+//! [`crate::algos`], and the generated DRAM streams against the burst
+//! behaviour Table 2 assumes (sequential for Toeplitz stores, `C`-run
+//! scattered for Winograd-input stores — the Eq. 13 wastage).
+
+use crate::graph::layer::ConvSpec;
+
+/// One FSM nesting level: `count` iterations advancing the SRAM address
+/// by `b_stride`, the DRAM address by `d_stride`, and the 2-D bounds
+/// coordinate by `(dy, dx)` per step.
+#[derive(Debug, Clone, Copy)]
+pub struct Level {
+    pub count: usize,
+    pub b_stride: i64,
+    pub d_stride: i64,
+    pub dy: i64,
+    pub dx: i64,
+}
+
+/// A configured LTU: base addresses, bounds geometry and nesting levels
+/// (outermost first). `h1 == 0` disables the bounds mux (source layout
+/// has no spatial halo, e.g. the scattered Winograd buffers).
+#[derive(Debug, Clone)]
+pub struct Ltu {
+    pub b0: i64,
+    pub d0: i64,
+    pub y0: i64,
+    pub x0: i64,
+    pub h1: usize,
+    pub h2: usize,
+    pub levels: Vec<Level>,
+}
+
+impl Ltu {
+    /// Total tuples generated.
+    pub fn len(&self) -> usize {
+        self.levels.iter().map(|l| l.count).product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Run the FSM, invoking `f(b, d, valid)` for every generated pair.
+    ///
+    /// Addresses are maintained *incrementally* by the odometer (add the
+    /// stride on increment, subtract `count·stride` on carry) — exactly
+    /// how the hardware counters work, and ~4× faster than recomputing
+    /// the affine sum per tuple (perf pass iteration 4).
+    pub fn walk(&self, mut f: impl FnMut(i64, i64, bool)) {
+        let n = self.levels.len();
+        let mut idx = vec![0usize; n];
+        let (mut b, mut d) = (self.b0, self.d0);
+        let (mut y, mut x) = (self.y0, self.x0);
+        let bounded = self.h1 != 0;
+        loop {
+            let valid =
+                !bounded || (y >= 0 && x >= 0 && y < self.h1 as i64 && x < self.h2 as i64);
+            f(b, d, valid);
+            let mut i = n;
+            loop {
+                if i == 0 {
+                    return;
+                }
+                i -= 1;
+                idx[i] += 1;
+                let l = &self.levels[i];
+                if idx[i] < l.count {
+                    b += l.b_stride;
+                    d += l.d_stride;
+                    y += l.dy;
+                    x += l.dx;
+                    break;
+                }
+                // carry: rewind this level
+                let c = (l.count - 1) as i64;
+                idx[i] = 0;
+                b -= c * l.b_stride;
+                d -= c * l.d_stride;
+                y -= c * l.dy;
+                x -= c * l.dx;
+                if i == 0 {
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Apply as a gather: `dst[d] = src[b]`, zero when the bounds mux
+    /// fires (padding halo).
+    pub fn gather(&self, src: &[f32], dst: &mut [f32]) {
+        self.walk(|b, d, valid| {
+            let v = if valid && b >= 0 && (b as usize) < src.len() {
+                src[b as usize]
+            } else {
+                0.0
+            };
+            dst[d as usize] = v;
+        });
+    }
+
+    /// Collect the generated DRAM address stream (for burst analysis).
+    pub fn d_stream(&self) -> Vec<u64> {
+        let mut v = Vec::with_capacity(self.len());
+        self.walk(|_, d, _| v.push(d as u64));
+        v
+    }
+
+    // --- Table 1 instantiations -------------------------------------
+
+    /// Row 1 — 3D Tensor → Toeplitz for layer `spec` (all channels).
+    /// Iteration (ci, ky, kx, oy, ox); DRAM layout is the row-major
+    /// `(K1K2·C_in) × (O1·O2)` Toeplitz matrix of `algos::im2col`.
+    /// The generated D stream is fully sequential — Table 2 row 1's
+    /// "can be streamed out".
+    pub fn tensor3d_to_toeplitz(spec: &ConvSpec) -> Ltu {
+        let (o1, o2) = (spec.o1() as i64, spec.o2() as i64);
+        let (h2, s) = (spec.h2 as i64, spec.s as i64);
+        Ltu {
+            b0: -(spec.p1 as i64) * h2 - spec.p2 as i64,
+            d0: 0,
+            y0: -(spec.p1 as i64),
+            x0: -(spec.p2 as i64),
+            h1: spec.h1,
+            h2: spec.h2,
+            levels: vec![
+                Level {
+                    count: spec.c_in,
+                    b_stride: (spec.h1 * spec.h2) as i64,
+                    d_stride: (spec.k1 * spec.k2) as i64 * o1 * o2,
+                    dy: 0,
+                    dx: 0,
+                },
+                Level {
+                    count: spec.k1,
+                    b_stride: h2,
+                    d_stride: spec.k2 as i64 * o1 * o2,
+                    dy: 1,
+                    dx: 0,
+                },
+                Level { count: spec.k2, b_stride: 1, d_stride: o1 * o2, dy: 0, dx: 1 },
+                Level { count: spec.o1(), b_stride: s * h2, d_stride: o2, dy: s, dx: 0 },
+                Level { count: spec.o2(), b_stride: s, d_stride: 1, dy: 0, dx: s },
+            ],
+        }
+    }
+
+    /// Row 2 — 3D Tensor → Winograd input layout: gather each
+    /// `(m+r−1)²` tile (adjacent tiles overlap by `r−1`) into the
+    /// scattered per-point matrices. DRAM layout is channel-INNERMOST
+    /// (`[point][tile][channel]`) — §5.1.2: "in practice we access
+    /// C_out(i) altogether for each address increment", which is what
+    /// makes runs of `C < BL` waste bursts (Eq. 13). Iteration order is
+    /// the source-stream order (wy, wx, ty, tx, ci).
+    pub fn tensor3d_to_wino(c: usize, h1: usize, h2: usize, m: usize, r: usize, pad: usize) -> Ltu {
+        let t1 = h1.div_ceil(m);
+        let t2 = h2.div_ceil(m);
+        let tiles = (t1 * t2) as i64;
+        let a = m + r - 1;
+        let ci = c as i64;
+        Ltu {
+            b0: -(pad as i64) * h2 as i64 - pad as i64,
+            d0: 0,
+            y0: -(pad as i64),
+            x0: -(pad as i64),
+            h1,
+            h2,
+            // walk order (ty, tx, wy, wx, ci): the store-side LTU
+            // consumes the output buffer tile by tile, duplicating the
+            // r−1 halo, and each (tile, point) slot lands `tiles·C`
+            // apart in DRAM with only the C channel elements contiguous.
+            levels: vec![
+                Level { count: t1, b_stride: (m * h2) as i64, d_stride: t2 as i64 * ci, dy: m as i64, dx: 0 },
+                Level { count: t2, b_stride: m as i64, d_stride: ci, dy: 0, dx: m as i64 },
+                Level { count: a, b_stride: h2 as i64, d_stride: (a as i64) * tiles * ci, dy: 1, dx: 0 },
+                Level { count: a, b_stride: 1, d_stride: tiles * ci, dy: 0, dx: 1 },
+                Level { count: c, b_stride: (h1 * h2) as i64, d_stride: 1, dy: 0, dx: 0 },
+            ],
+        }
+    }
+
+    /// Row 3 — Winograd output layout → 3D Tensor: each output tile's
+    /// `m²` elements live `T1·T2` apart in the scattered source; restore
+    /// the spatial `(C, O1, O2)` tensor (store-side LTU #1 of the
+    /// double-buffered §3.3.2 scheme). Source has no halo → bounds mux
+    /// disabled.
+    pub fn wino_to_tensor3d(c: usize, o1: usize, o2: usize, m: usize) -> Ltu {
+        let t1 = o1.div_ceil(m);
+        let t2 = o2.div_ceil(m);
+        let tiles = (t1 * t2) as i64;
+        Ltu {
+            b0: 0,
+            d0: 0,
+            y0: 0,
+            x0: 0,
+            h1: 0,
+            h2: 0,
+            levels: vec![
+                Level {
+                    count: c,
+                    b_stride: (m * m) as i64 * tiles,
+                    d_stride: (o1 * o2) as i64,
+                    dy: 0,
+                    dx: 0,
+                },
+                Level { count: m, b_stride: m as i64 * tiles, d_stride: o2 as i64, dy: 0, dx: 0 },
+                Level { count: m, b_stride: tiles, d_stride: 1, dy: 0, dx: 0 },
+                Level { count: t1, b_stride: t2 as i64, d_stride: (m * o2) as i64, dy: 0, dx: 0 },
+                Level { count: t2, b_stride: 1, d_stride: m as i64, dy: 0, dx: 0 },
+            ],
+        }
+    }
+
+    /// Identity (kn2row → kn2row): one-to-one consecutive matching.
+    pub fn identity(n: usize) -> Ltu {
+        Ltu {
+            b0: 0,
+            d0: 0,
+            y0: 0,
+            x0: 0,
+            h1: 0,
+            h2: 0,
+            levels: vec![Level { count: n, b_stride: 1, d_stride: 1, dy: 0, dx: 0 }],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::im2col;
+    use crate::algos::tensor::Tensor;
+    use crate::overlay::ddr::BurstCounter;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn toeplitz_matches_reference() {
+        check("ltu_toeplitz", 32, |r: &mut Rng| {
+            let spec = im2col::random_spec(r);
+            let t = Tensor::random_i8(spec.c_in, spec.h1, spec.h2, r);
+            let reference = im2col::toeplitz(&t, &spec);
+            let ltu = Ltu::tensor3d_to_toeplitz(&spec);
+            let mut out = vec![0.0f32; reference.data.len()];
+            ltu.gather(&t.data, &mut out);
+            if out != reference.data {
+                return Err(format!("LTU toeplitz mismatch for {spec:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn toeplitz_store_stream_is_sequential() {
+        // Table 2 row 1: "can be streamed out, as consecutive DRAM
+        // addresses are accessed"
+        let spec = ConvSpec::new(4, 8, 10, 10, 3, 3, 1, 1, 1);
+        let ltu = Ltu::tensor3d_to_toeplitz(&spec);
+        let stream = ltu.d_stream();
+        let mut bc = BurstCounter::new(64);
+        for a in &stream {
+            bc.push(*a);
+        }
+        let tx = bc.finish();
+        let eff = BurstCounter::efficiency(stream.len() as u64, tx, 64);
+        assert!(eff > 0.95, "toeplitz store burst efficiency {eff}");
+    }
+
+    #[test]
+    fn wino_gather_collects_overlapping_tiles() {
+        // m=2, r=3: tiles are 4×4 with overlap 2 — verify against a
+        // direct gather (channel-innermost DRAM layout)
+        let (c, h, m, r, p) = (2usize, 8usize, 2usize, 3usize, 1usize);
+        let mut rng = Rng::new(9);
+        let t = Tensor::random_i8(c, h, h, &mut rng);
+        let ltu = Ltu::tensor3d_to_wino(c, h, h, m, r, p);
+        let t1 = h.div_ceil(m);
+        let tiles = t1 * t1;
+        let a = m + r - 1;
+        let mut out = vec![0.0f32; c * a * a * tiles];
+        ltu.gather(&t.data, &mut out);
+        for &(ci, wy, wx, ty, tx) in
+            &[(0usize, 0usize, 0usize, 0usize, 0usize), (1, 3, 2, 1, 3), (0, 1, 1, 2, 2)]
+        {
+            let d = (((wy * a + wx) * tiles) + ty * t1 + tx) * c + ci;
+            let iy = (ty * m + wy) as isize - p as isize;
+            let ix = (tx * m + wx) as isize - p as isize;
+            let expect = t.get_padded(ci, iy, ix);
+            assert_eq!(out[d], expect, "ci={ci} w=({wy},{wx}) t=({ty},{tx})");
+        }
+    }
+
+    #[test]
+    fn wino_output_restore_roundtrip() {
+        let (c, o, m) = (3usize, 8usize, 2usize);
+        let t1 = o.div_ceil(m);
+        let tiles = t1 * t1;
+        let mut rng = Rng::new(10);
+        let spatial = Tensor::random_i8(c, o, o, &mut rng);
+        let mut scattered = vec![0.0f32; c * m * m * tiles];
+        for ci in 0..c {
+            for py in 0..m {
+                for px in 0..m {
+                    for ty in 0..t1 {
+                        for tx in 0..t1 {
+                            let b = ((ci * m + py) * m + px) * tiles + ty * t1 + tx;
+                            scattered[b] = spatial.get(ci, ty * m + py, tx * m + px);
+                        }
+                    }
+                }
+            }
+        }
+        let ltu = Ltu::wino_to_tensor3d(c, o, o, m);
+        let mut restored = vec![0.0f32; c * o * o];
+        ltu.gather(&scattered, &mut restored);
+        assert_eq!(restored, spatial.data);
+    }
+
+    #[test]
+    fn wino_store_stream_has_c_runs() {
+        // Eq. 13: C-element runs spaced tile-count apart. With C=4 ≪
+        // BL=64, burst efficiency collapses to ≈ C/BL.
+        let c = 4;
+        let ltu = Ltu::tensor3d_to_wino(c, 8, 8, 2, 3, 1);
+        let stream = ltu.d_stream();
+        let mut bc = BurstCounter::new(64);
+        for a in &stream {
+            bc.push(*a);
+        }
+        let tx = bc.finish();
+        let eff = BurstCounter::efficiency(stream.len() as u64, tx, 64);
+        assert!(eff < 0.2, "wino scatter should waste bursts, eff={eff}");
+    }
+
+    #[test]
+    fn identity_is_one_to_one() {
+        let ltu = Ltu::identity(10);
+        let src: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let mut dst = vec![0.0; 10];
+        ltu.gather(&src, &mut dst);
+        assert_eq!(src, dst);
+    }
+}

@@ -1,0 +1,26 @@
+//! Cycle-level simulator of the DYNAMAP hardware overlay (paper §3).
+//!
+//! The FPGA itself is unavailable; this module is the substitution
+//! substrate (DESIGN.md §Hardware-Adaptation): it implements the
+//! overlay's microarchitectural mechanisms — the `P_SA1 × P_SA2`
+//! systolic Computing Unit with NS/WS/IS dataflows and stall-free PEs
+//! ([`systolic`]), the dual-parallelism blocked SRAM banking of Eq. 7
+//! ([`buffers`]), the DLT layout-transformation FSM of Table 1/Fig. 5
+//! ([`dlt`]), kn2row's pipelined Pad-and-Accumulate ([`pad_accum`]),
+//! the Winograd shift-add linear transforms ([`wino_xform`]), the
+//! HPU/VPU pooling pipeline ([`pooling`]) and the DDR burst model
+//! ([`ddr`]) — at pass/transaction granularity, producing both the
+//! functional result (validated against [`crate::algos`]) and the cycle
+//! counts (validated against the Eq. 9–12 analytical model).
+
+pub mod buffers;
+pub mod systolic;
+pub mod dlt;
+pub mod pad_accum;
+pub mod wino_xform;
+pub mod pooling;
+pub mod ddr;
+pub mod layer_sim;
+
+pub use layer_sim::{simulate_layer, LayerSim};
+pub use systolic::{SimStats, SystolicSim};

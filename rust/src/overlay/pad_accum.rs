@@ -1,0 +1,143 @@
+//! Pad-and-Accumulate module (§3.1, kn2row phase 2).
+//!
+//! Bank indices and address offsets are precomputed from the layer meta
+//! data; the accumulation buffer adds each shifted unit-conv patch while
+//! the Computing Unit works on the next patch — the pipelining that
+//! hides most of the phase-2 overhead (modelled by the `exposed_cycles`
+//! accounting here and assumed by Eq. 11's bare `×K1K2` factor).
+
+use crate::algos::kn2row;
+use crate::algos::tensor::{Mat, Tensor};
+use crate::graph::layer::ConvSpec;
+
+/// Precomputed accumulation descriptor for one kernel tap.
+#[derive(Debug, Clone, Copy)]
+pub struct TapPlan {
+    pub ky: usize,
+    pub kx: usize,
+    /// Number of patch elements that actually land in the output
+    /// (the rest fall on the zero-pad fringe).
+    pub live_elems: usize,
+}
+
+/// The module: accumulation buffer + per-tap plans.
+#[derive(Debug, Clone)]
+pub struct PadAccum {
+    pub spec: ConvSpec,
+    pub plans: Vec<TapPlan>,
+    pub acc: Tensor,
+    /// Accumulator write ports (elements added per cycle).
+    pub ports: usize,
+}
+
+impl PadAccum {
+    pub fn new(spec: &ConvSpec, ports: usize) -> PadAccum {
+        let (o1, o2) = (spec.o1(), spec.o2());
+        let mut plans = Vec::with_capacity(spec.k1 * spec.k2);
+        for ky in 0..spec.k1 {
+            for kx in 0..spec.k2 {
+                // count output pixels whose source lies inside the input
+                let mut live = 0usize;
+                for oy in 0..o1 {
+                    for ox in 0..o2 {
+                        let iy = (oy * spec.s + ky) as isize - spec.p1 as isize;
+                        let ix = (ox * spec.s + kx) as isize - spec.p2 as isize;
+                        if iy >= 0
+                            && ix >= 0
+                            && iy < spec.h1 as isize
+                            && ix < spec.h2 as isize
+                        {
+                            live += 1;
+                        }
+                    }
+                }
+                plans.push(TapPlan { ky, kx, live_elems: live * spec.c_out });
+            }
+        }
+        PadAccum {
+            spec: spec.clone(),
+            plans,
+            acc: Tensor::zeros(spec.c_out, o1, o2),
+            ports,
+        }
+    }
+
+    /// Accumulate one unit-conv patch (functional) and return the cycle
+    /// count of this tap's accumulation pass.
+    pub fn accumulate(&mut self, patch: &Mat, ky: usize, kx: usize) -> u64 {
+        kn2row::pad_accumulate(&mut self.acc, patch, &self.spec, ky, kx);
+        let plan = &self.plans[ky * self.spec.k2 + kx];
+        (plan.live_elems as u64).div_ceil(self.ports as u64)
+    }
+
+    /// Exposed (non-overlapped) cycles when each accumulation pass is
+    /// pipelined behind a unit-conv GEMM taking `gemm_cycles`: only the
+    /// excess of the final pass shows (§3.1: "CU starts working on the
+    /// next patch while the accumulation buffer still processes the
+    /// last").
+    pub fn exposed_cycles(&self, gemm_cycles: u64) -> u64 {
+        let per_tap: Vec<u64> = self
+            .plans
+            .iter()
+            .map(|p| (p.live_elems as u64).div_ceil(self.ports as u64))
+            .collect();
+        let hidden: u64 = per_tap.iter().rev().skip(1).map(|&c| c.saturating_sub(gemm_cycles)).sum();
+        hidden + per_tap.last().copied().unwrap_or(0)
+    }
+
+    pub fn take(self) -> Tensor {
+        self.acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::tensor::Weights;
+    use crate::algos::{direct, kn2row};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn functional_equivalence() {
+        let spec = ConvSpec::new(3, 4, 7, 7, 3, 3, 1, 1, 1);
+        let mut rng = Rng::new(31);
+        let input = Tensor::random_i8(3, 7, 7, &mut rng);
+        let w = Weights::random_i8(4, 3, 3, 3, &mut rng);
+        let mut pa = PadAccum::new(&spec, 16);
+        for ky in 0..3 {
+            for kx in 0..3 {
+                let patch = kn2row::unit_conv(&input, &w, ky, kx);
+                pa.accumulate(&patch, ky, kx);
+            }
+        }
+        let out = pa.take();
+        let reference = direct::conv2d(&input, &w, &spec);
+        assert_eq!(out.data, reference.data);
+    }
+
+    #[test]
+    fn live_elems_smaller_on_fringe_taps() {
+        // corner taps lose a row+column to padding
+        let spec = ConvSpec::new(1, 1, 8, 8, 3, 3, 1, 1, 1);
+        let pa = PadAccum::new(&spec, 1);
+        let center = pa.plans[4].live_elems; // (1,1)
+        let corner = pa.plans[0].live_elems; // (0,0)
+        assert_eq!(center, 64);
+        assert_eq!(corner, 49);
+    }
+
+    #[test]
+    fn pipelining_hides_accumulation() {
+        let spec = ConvSpec::new(8, 8, 12, 12, 3, 3, 1, 1, 1);
+        let pa = PadAccum::new(&spec, 8);
+        // when GEMM is long, only the last tap's pass is exposed
+        let long_gemm = 1_000_000;
+        let exposed = pa.exposed_cycles(long_gemm);
+        let last = (pa.plans.last().unwrap().live_elems as u64).div_ceil(8);
+        assert_eq!(exposed, last);
+        // when GEMM is tiny, nearly everything is exposed
+        let all: u64 =
+            pa.plans.iter().map(|p| (p.live_elems as u64).div_ceil(8)).sum();
+        assert!(pa.exposed_cycles(0) == all);
+    }
+}

@@ -1,0 +1,168 @@
+//! Pooling module (§3.4): Pooling Units with a Horizontal PU feeding a
+//! Vertical PU in a pipelined fashion, one result per clock each, an
+//! array of PUs parallel across feature maps.
+
+use crate::algos::tensor::Tensor;
+use crate::graph::layer::{PoolKind, PoolSpec};
+
+/// Simulation result of a pooling layer.
+#[derive(Debug, Clone)]
+pub struct PoolSim {
+    pub out: Tensor,
+    pub cycles: u64,
+}
+
+/// Run the HPU→VPU pipeline for one pooling layer on `units` parallel
+/// PUs. Functionally exact; cycles follow the pipeline model: the HPU
+/// streams every input pixel of its assigned channels once (1/cycle),
+/// the VPU overlaps after a `K` row fill.
+pub fn simulate(input: &Tensor, spec: &PoolSpec, units: usize) -> PoolSim {
+    assert_eq!(input.c, spec.c);
+    assert_eq!((input.h, input.w), (spec.h1, spec.h2));
+    let (o1, o2) = (spec.o1(), spec.o2());
+    let mut out = Tensor::zeros(spec.c, o1, o2);
+
+    for c in 0..spec.c {
+        // HPU: horizontal window reduce per input row (stride s along x)
+        // intermediate: h1 × o2
+        let mut inter = vec![0.0f32; spec.h1 * o2];
+        for y in 0..spec.h1 {
+            for ox in 0..o2 {
+                let mut m = init(spec.kind);
+                for kx in 0..spec.k {
+                    let ix = (ox * spec.s + kx) as isize - spec.p as isize;
+                    let v = input.get_padded(c, y as isize, ix);
+                    m = reduce(spec.kind, m, v, ix < 0 || ix >= spec.h2 as isize);
+                }
+                inter[y * o2 + ox] = finish(spec.kind, m, spec.k);
+            }
+        }
+        // VPU: vertical reduce over K intermediate rows
+        for oy in 0..o1 {
+            for ox in 0..o2 {
+                let mut m = init(spec.kind);
+                for ky in 0..spec.k {
+                    let iy = (oy * spec.s + ky) as isize - spec.p as isize;
+                    let v = if iy < 0 || iy >= spec.h1 as isize {
+                        0.0
+                    } else {
+                        inter[iy as usize * o2 + ox]
+                    };
+                    m = reduce(spec.kind, m, v, iy < 0 || iy >= spec.h1 as isize);
+                }
+                out.set(c, oy, ox, finish_v(spec.kind, m, spec.k));
+            }
+        }
+    }
+
+    // cycles: channels are distributed over `units` PUs; each PU streams
+    // its channel's pixels through the HPU once; VPU overlaps except the
+    // initial K-row fill.
+    let chans_per_unit = spec.c.div_ceil(units) as u64;
+    let hpu = (spec.h1 * spec.h2) as u64;
+    let fill = (spec.k * spec.h2) as u64;
+    let cycles = chans_per_unit * (hpu + fill);
+    PoolSim { out, cycles }
+}
+
+fn init(kind: PoolKind) -> f32 {
+    match kind {
+        PoolKind::Max => f32::NEG_INFINITY,
+        PoolKind::Avg => 0.0,
+    }
+}
+
+fn reduce(kind: PoolKind, acc: f32, v: f32, oob: bool) -> f32 {
+    match kind {
+        // max pooling ignores padding (−∞ identity keeps in-bounds max);
+        // out-of-bounds contributes nothing
+        PoolKind::Max => {
+            if oob {
+                acc
+            } else {
+                acc.max(v)
+            }
+        }
+        PoolKind::Avg => acc + v, // zero-padded average (count includes pad)
+    }
+}
+
+fn finish(kind: PoolKind, acc: f32, _k: usize) -> f32 {
+    match kind {
+        PoolKind::Max => acc,
+        PoolKind::Avg => acc, // horizontal stage keeps the raw sum
+    }
+}
+
+fn finish_v(kind: PoolKind, acc: f32, k: usize) -> f32 {
+    match kind {
+        PoolKind::Max => acc,
+        PoolKind::Avg => acc / (k * k) as f32,
+    }
+}
+
+/// Naive reference pooling for validation.
+pub fn reference(input: &Tensor, spec: &PoolSpec) -> Tensor {
+    let (o1, o2) = (spec.o1(), spec.o2());
+    let mut out = Tensor::zeros(spec.c, o1, o2);
+    for c in 0..spec.c {
+        for oy in 0..o1 {
+            for ox in 0..o2 {
+                let mut m = init(spec.kind);
+                for ky in 0..spec.k {
+                    for kx in 0..spec.k {
+                        let iy = (oy * spec.s + ky) as isize - spec.p as isize;
+                        let ix = (ox * spec.s + kx) as isize - spec.p as isize;
+                        let oob =
+                            iy < 0 || ix < 0 || iy >= spec.h1 as isize || ix >= spec.h2 as isize;
+                        let v = input.get_padded(c, iy, ix);
+                        m = reduce(spec.kind, m, v, oob);
+                    }
+                }
+                out.set(c, oy, ox, finish_v(spec.kind, m, spec.k));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{assert_allclose, check};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn hpu_vpu_matches_reference() {
+        check("pool_pipeline", 48, |r: &mut Rng| {
+            let k = r.range(2, 3);
+            let s = r.range(1, 2);
+            let h = r.range(k + 1, 12);
+            let kind = if r.bool() { PoolKind::Max } else { PoolKind::Avg };
+            let p = if r.bool() && kind == PoolKind::Max { r.range(0, 1) } else { 0 };
+            let spec = PoolSpec { kind, c: r.range(1, 4), h1: h, h2: h, k, s, p };
+            let input = Tensor::random(spec.c, h, h, r);
+            let sim = simulate(&input, &spec, 4);
+            let reference = reference(&input, &spec);
+            assert_allclose(&sim.out.data, &reference.data, 1e-5, 1e-5)
+                .map_err(|e| format!("{spec:?}: {e}"))
+        });
+    }
+
+    #[test]
+    fn known_maxpool() {
+        let spec = PoolSpec { kind: PoolKind::Max, c: 1, h1: 4, h2: 4, k: 2, s: 2, p: 0 };
+        let input = Tensor::from_fn(1, 4, 4, |_, y, x| (y * 4 + x) as f32);
+        let sim = simulate(&input, &spec, 1);
+        assert_eq!(sim.out.data, vec![5.0, 7.0, 13.0, 15.0]);
+    }
+
+    #[test]
+    fn cycles_scale_with_units() {
+        let spec = PoolSpec { kind: PoolKind::Max, c: 16, h1: 8, h2: 8, k: 2, s: 2, p: 0 };
+        let input = Tensor::zeros(16, 8, 8);
+        let one = simulate(&input, &spec, 1).cycles;
+        let four = simulate(&input, &spec, 4).cycles;
+        assert_eq!(one, 4 * four);
+    }
+}

@@ -1,0 +1,222 @@
+//! Winograd Linear Transform module (§3.1): shift-add implementation of
+//! the F(2×2, 3×3) transforms.
+//!
+//! The F(2,3) matrices contain only `0, ±1, ±½`, so the hardware
+//! implements them with adders and 1-bit shifts (§3.1: "can be easily
+//! implemented using shift and add operations"). This module mirrors
+//! that: fixed-point `i32` arithmetic with a fractional guard bit,
+//! counting add/shift operations, validated against the floating-point
+//! transforms of [`crate::algos::winograd`].
+
+
+/// Operation counters for one transform invocation.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct XformOps {
+    pub adds: u64,
+    pub shifts: u64,
+}
+
+/// Input transform `V = Bᵀ d B` in shift-add form. `d` is 4×4.
+/// All entries of Bᵀ are 0/±1 → pure adds.
+pub fn transform_input_shiftadd(d: &[i32; 16], ops: &mut XformOps) -> [i32; 16] {
+    // rows: Bᵀ · d   (t[r][c] = combination of d[.][c])
+    let mut t = [0i32; 16];
+    for c in 0..4 {
+        let (d0, d1, d2, d3) = (d[c], d[4 + c], d[8 + c], d[12 + c]);
+        t[c] = d0 - d2;
+        t[4 + c] = d1 + d2;
+        t[8 + c] = d2 - d1;
+        t[12 + c] = d1 - d3;
+        ops.adds += 4;
+    }
+    // cols: (Bᵀ d) · B  — same combination along rows
+    let mut v = [0i32; 16];
+    for r in 0..4 {
+        let (t0, t1, t2, t3) = (t[r * 4], t[r * 4 + 1], t[r * 4 + 2], t[r * 4 + 3]);
+        v[r * 4] = t0 - t2;
+        v[r * 4 + 1] = t1 + t2;
+        v[r * 4 + 2] = t2 - t1;
+        v[r * 4 + 3] = t1 - t3;
+        ops.adds += 4;
+    }
+    v
+}
+
+/// Kernel transform `U = G g Gᵀ` in shift-add form with one fractional
+/// guard bit: inputs are `g·2`, i.e. the caller passes kernel values
+/// pre-scaled by 2 so the ½ factors become 1-bit right shifts without
+/// precision loss; the result carries scale 4 (2 per side).
+pub fn transform_kernel_shiftadd(g2: &[i32; 9], ops: &mut XformOps) -> [i32; 16] {
+    // Stage 1: t = 2·(G·g). With pre-doubled inputs (g2 = 2g, all even)
+    // the ½ rows become exact 1-bit right shifts:
+    // row0 = g2₀ ; row1 = (g2₀+g2₁+g2₂)≫1 ; row2 = (g2₀−g2₁+g2₂)≫1 ;
+    // row3 = g2₂.
+    let mut t = [0i32; 12]; // 4×3
+    for c in 0..3 {
+        let (g0, g1, g2v) = (g2[c], g2[3 + c], g2[6 + c]);
+        t[c] = g0;
+        t[3 + c] = (g0 + g1 + g2v) >> 1;
+        t[6 + c] = (g0 - g1 + g2v) >> 1;
+        t[9 + c] = g2v;
+        ops.adds += 4;
+        ops.shifts += 2;
+    }
+    let mut u = [0i32; 16];
+    for r in 0..4 {
+        let (t0, t1, t2) = (t[r * 3], t[r * 3 + 1], t[r * 3 + 2]);
+        u[r * 4] = t0 << 1;
+        u[r * 4 + 1] = t0 + t1 + t2;
+        u[r * 4 + 2] = t0 - t1 + t2;
+        u[r * 4 + 3] = t2 << 1;
+        ops.adds += 4;
+        ops.shifts += 2;
+    }
+    u
+}
+
+/// Inverse transform `Y = Aᵀ M A` in shift-add form (Aᵀ is 0/±1).
+pub fn inverse_transform_shiftadd(m: &[i32; 16], ops: &mut XformOps) -> [i32; 4] {
+    // Aᵀ·M → 2×4
+    let mut t = [0i32; 8];
+    for c in 0..4 {
+        let (m0, m1, m2, m3) = (m[c], m[4 + c], m[8 + c], m[12 + c]);
+        t[c] = m0 + m1 + m2;
+        t[4 + c] = m1 - m2 - m3;
+        ops.adds += 4;
+    }
+    let mut y = [0i32; 4];
+    for r in 0..2 {
+        let (t0, t1, t2, t3) = (t[r * 4], t[r * 4 + 1], t[r * 4 + 2], t[r * 4 + 3]);
+        y[r * 2] = t0 + t1 + t2;
+        y[r * 2 + 1] = t1 - t2 - t3;
+        ops.adds += 4;
+    }
+    y
+}
+
+/// Cycle model of the Linear Transform module: a pipelined tree does
+/// one 4×4 tile per cycle per unit, `units` in parallel, plus the
+/// pipeline fill depth.
+pub fn lt_cycles(tiles: usize, units: usize) -> u64 {
+    (tiles.div_ceil(units) as u64) + 4
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::tensor::Mat;
+    use crate::algos::winograd;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    fn mat_from(v: &[i32]) -> Mat {
+        Mat { rows: 4, cols: 4, data: v.iter().map(|&x| x as f32).collect() }
+    }
+
+    #[test]
+    fn input_transform_matches_float() {
+        check("wino_xform_input", 64, |r: &mut Rng| {
+            let mut d = [0i32; 16];
+            for v in &mut d {
+                *v = r.i8_small() as i32;
+            }
+            let mut ops = XformOps::default();
+            let fast = transform_input_shiftadd(&d, &mut ops);
+            let float = winograd::transform_input(&mat_from(&d));
+            for i in 0..16 {
+                if (fast[i] as f32 - float.data[i]).abs() > 1e-3 {
+                    return Err(format!("V[{i}]: {} vs {}", fast[i], float.data[i]));
+                }
+            }
+            if ops.adds != 32 {
+                return Err(format!("expected 32 adds, counted {}", ops.adds));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn kernel_transform_matches_float_times_4() {
+        check("wino_xform_kernel", 64, |r: &mut Rng| {
+            let mut g = [0i32; 9];
+            for v in &mut g {
+                *v = r.i8_small() as i32;
+            }
+            // pre-scale by 2 (the guard bit)
+            let g2: [i32; 9] = std::array::from_fn(|i| g[i] * 2);
+            let mut ops = XformOps::default();
+            let fast = transform_kernel_shiftadd(&g2, &mut ops);
+            let k3 = Mat { rows: 3, cols: 3, data: g.iter().map(|&x| x as f32).collect() };
+            let float = winograd::transform_kernel(&k3);
+            for i in 0..16 {
+                // fast carries scale 4 (2 per transform side)
+                if (fast[i] as f32 - 4.0 * float.data[i]).abs() > 1e-3 {
+                    return Err(format!("U[{i}]: {} vs 4·{}", fast[i], float.data[i]));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn inverse_transform_matches_float() {
+        check("wino_xform_inverse", 64, |r: &mut Rng| {
+            let mut m = [0i32; 16];
+            for v in &mut m {
+                *v = r.i8_small() as i32 * 16;
+            }
+            let mut ops = XformOps::default();
+            let fast = inverse_transform_shiftadd(&m, &mut ops);
+            let float =
+                winograd::inverse_transform(&mat_from(&m));
+            for i in 0..4 {
+                if (fast[i] as f32 - float.data[i]).abs() > 1e-3 {
+                    return Err(format!("Y[{i}]: {} vs {}", fast[i], float.data[i]));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn end_to_end_tile_shiftadd() {
+        // full tile pipeline: transform kernel+input, hadamard in i32,
+        // inverse — compare against the float path with scale 4
+        let mut r = Rng::new(77);
+        let mut g = [0i32; 9];
+        let mut d = [0i32; 16];
+        for v in &mut g {
+            *v = r.i8_small() as i32;
+        }
+        for v in &mut d {
+            *v = r.i8_small() as i32;
+        }
+        let mut ops = XformOps::default();
+        let g2: [i32; 9] = std::array::from_fn(|i| g[i] * 2);
+        let u = transform_kernel_shiftadd(&g2, &mut ops);
+        let v = transform_input_shiftadd(&d, &mut ops);
+        let m: [i32; 16] = std::array::from_fn(|i| u[i] * v[i]);
+        let y = inverse_transform_shiftadd(&m, &mut ops);
+
+        let k3 = Mat { rows: 3, cols: 3, data: g.iter().map(|&x| x as f32).collect() };
+        let uf = winograd::transform_kernel(&k3);
+        let vf = winograd::transform_input(&mat_from(&d));
+        let mf = Mat::from_fn(4, 4, |i, j| uf.get(i, j) * vf.get(i, j));
+        let yf = winograd::inverse_transform(&mf);
+        for i in 0..4 {
+            assert!(
+                (y[i] as f32 - 4.0 * yf.data[i]).abs() < 1e-2,
+                "tile Y[{i}]: {} vs 4·{}",
+                y[i],
+                yf.data[i]
+            );
+        }
+    }
+
+    #[test]
+    fn lt_cycle_model() {
+        assert_eq!(lt_cycles(64, 16), 8);
+        assert_eq!(lt_cycles(65, 16), 9);
+        assert_eq!(lt_cycles(1, 16), 5);
+    }
+}

@@ -1,0 +1,72 @@
+//! Exponential brute-force PBQP solver — the correctness oracle for
+//! [`super::solve_sp`] in tests, and the fallback for small non-SP
+//! graphs (the paper notes general PBQP is NP-complete; CNNs in practice
+//! are series-parallel, Lemmas 4.3/4.4).
+
+use super::problem::{Problem, Solution};
+
+/// Enumerate all assignments. Panics if the search space exceeds
+/// `2^31` states — callers must check [`search_space`] first for
+/// untrusted inputs.
+pub fn solve_brute(p: &Problem) -> Solution {
+    let space = search_space(p);
+    assert!(
+        space < (1u128 << 31),
+        "brute-force space {space} too large; use solve_sp"
+    );
+    let n = p.n();
+    let mut assignment = vec![0usize; n];
+    let mut best = Solution { assignment: assignment.clone(), cost: p.evaluate(&assignment) };
+    loop {
+        // odometer increment
+        let mut i = 0;
+        loop {
+            if i == n {
+                return best;
+            }
+            assignment[i] += 1;
+            if assignment[i] < p.costs[i].len() {
+                break;
+            }
+            assignment[i] = 0;
+            i += 1;
+        }
+        let c = p.evaluate(&assignment);
+        if c < best.cost {
+            best = Solution { assignment: assignment.clone(), cost: c };
+        }
+    }
+}
+
+/// Total number of assignments (`Π |A_i|`).
+pub fn search_space(p: &Problem) -> u128 {
+    p.costs.iter().map(|c| c.len() as u128).product()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pbqp::problem::Matrix;
+
+    #[test]
+    fn finds_global_minimum() {
+        let mut p = Problem::default();
+        let l = vec!["a".to_string(), "b".to_string(), "c".to_string()];
+        let x = p.add_vertex("x", vec![3.0, 1.0, 2.0], l.clone());
+        let y = p.add_vertex("y", vec![0.0, 5.0, 5.0], l.clone());
+        p.add_edge(x, y, Matrix::from_fn(3, 3, |i, j| if i == 1 && j == 0 { 0.0 } else { 9.0 }));
+        let sol = solve_brute(&p);
+        assert_eq!(sol.assignment, vec![1, 0]);
+        assert_eq!(sol.cost, 1.0);
+    }
+
+    #[test]
+    fn search_space_counts() {
+        let mut p = Problem::default();
+        let mk = |n: usize| (0..n).map(|i| format!("o{i}")).collect::<Vec<_>>();
+        p.add_vertex("a", vec![0.0; 3], mk(3));
+        p.add_vertex("b", vec![0.0; 2], mk(2));
+        p.add_vertex("c", vec![0.0; 5], mk(5));
+        assert_eq!(search_space(&p), 30);
+    }
+}

@@ -1,0 +1,58 @@
+//! Greedy baseline: pick each vertex's cheapest node cost, ignoring
+//! transition matrices. §6.1.2 of the paper argues this is sub-optimal
+//! ("a scheme that greedily chooses the algorithm with the smallest
+//! layer node cost c would not return the optimal mapping") — the
+//! `ablation_greedy` bench quantifies the gap.
+
+use super::problem::{Problem, Solution};
+
+/// Greedy per-vertex argmin of `c_i`, evaluated under the full objective.
+pub fn solve_greedy(p: &Problem) -> Solution {
+    let assignment: Vec<usize> = p
+        .costs
+        .iter()
+        .map(|c| {
+            let mut bi = 0;
+            for (i, &x) in c.iter().enumerate() {
+                if x < c[bi] {
+                    bi = i;
+                }
+            }
+            bi
+        })
+        .collect();
+    let cost = p.evaluate(&assignment);
+    Solution { assignment, cost }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pbqp::problem::Matrix;
+    use crate::pbqp::solve_brute;
+
+    #[test]
+    fn greedy_can_be_suboptimal() {
+        // node costs prefer (1, 1) but the transition matrix punishes it
+        let mut p = Problem::default();
+        let l = vec!["x".to_string(), "y".to_string()];
+        let a = p.add_vertex("a", vec![2.0, 1.0], l.clone());
+        let b = p.add_vertex("b", vec![2.0, 1.0], l.clone());
+        p.add_edge(a, b, Matrix::from_fn(2, 2, |i, j| if i == 1 && j == 1 { 100.0 } else { 0.0 }));
+        let g = solve_greedy(&p);
+        let o = solve_brute(&p);
+        assert_eq!(g.assignment, vec![1, 1]);
+        assert!(g.cost > o.cost, "greedy {} should exceed optimal {}", g.cost, o.cost);
+    }
+
+    #[test]
+    fn greedy_optimal_without_edges() {
+        let mut p = Problem::default();
+        let l = vec!["x".to_string(), "y".to_string()];
+        p.add_vertex("a", vec![2.0, 1.0], l.clone());
+        p.add_vertex("b", vec![0.5, 1.0], l.clone());
+        let g = solve_greedy(&p);
+        assert_eq!(g.assignment, vec![1, 0]);
+        assert_eq!(g.cost, 1.5);
+    }
+}

@@ -1,0 +1,20 @@
+//! Partitioned Boolean Quadratic Programming (paper §4).
+//!
+//! The algorithm-mapping problem (Eq. 8) — pick one algorithm per layer
+//! minimizing node costs plus pairwise transition costs — is PBQP, which
+//! is NP-complete in general but solvable in `O(N·d²)` time on
+//! series-parallel graphs (Theorem 4.1) by the two reduction operations
+//! of Definition 1. [`sp_solver`] implements that algorithm with full
+//! back-substitution; [`brute`] is an exponential verifier used in tests
+//! and for non-SP fallback on small graphs; [`greedy`] is the
+//! node-cost-greedy baseline the paper argues against in §6.1.2.
+
+pub mod problem;
+pub mod sp_solver;
+pub mod brute;
+pub mod greedy;
+
+pub use problem::{Edge, Matrix, Problem, Solution};
+pub use sp_solver::solve_sp;
+pub use brute::solve_brute;
+pub use greedy::solve_greedy;

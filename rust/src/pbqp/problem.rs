@@ -1,0 +1,168 @@
+//! PBQP problem representation (Eq. 8).
+
+/// A dense `rows × cols` cost matrix for one edge.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Matrix {
+        let mut m = Matrix::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m.data[i * cols + j] = f(i, j);
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Transpose (re-orienting an edge matrix).
+    pub fn transposed(&self) -> Matrix {
+        Matrix::from_fn(self.cols, self.rows, |i, j| self.get(j, i))
+    }
+
+    /// Element-wise sum — reduction operation 2 (parallel edges).
+    pub fn add(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols), "matrix dim mismatch");
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect(),
+        }
+    }
+}
+
+/// One PBQP edge: an oriented pair `(u, v)` with a `|A_u| × |A_v|`
+/// transition matrix.
+#[derive(Debug, Clone)]
+pub struct Edge {
+    pub u: usize,
+    pub v: usize,
+    pub m: Matrix,
+}
+
+/// A PBQP instance: per-vertex cost vectors and pairwise matrices.
+#[derive(Debug, Clone, Default)]
+pub struct Problem {
+    /// Vertex display names (layer names for cost graphs).
+    pub names: Vec<String>,
+    /// Per-vertex choice labels (algorithm names).
+    pub choice_labels: Vec<Vec<String>>,
+    /// Cost vectors `c_i`.
+    pub costs: Vec<Vec<f64>>,
+    pub edges: Vec<Edge>,
+}
+
+impl Problem {
+    pub fn n(&self) -> usize {
+        self.costs.len()
+    }
+
+    /// Max domain size `d` (for the O(N·d²) bound).
+    pub fn max_domain(&self) -> usize {
+        self.costs.iter().map(|c| c.len()).max().unwrap_or(0)
+    }
+
+    pub fn add_vertex(&mut self, name: &str, costs: Vec<f64>, labels: Vec<String>) -> usize {
+        assert_eq!(costs.len(), labels.len());
+        assert!(!costs.is_empty(), "vertex '{name}' has empty domain");
+        let id = self.costs.len();
+        self.names.push(name.to_string());
+        self.costs.push(costs);
+        self.choice_labels.push(labels);
+        id
+    }
+
+    pub fn add_edge(&mut self, u: usize, v: usize, m: Matrix) {
+        assert_eq!(m.rows, self.costs[u].len(), "edge ({u},{v}) row dim");
+        assert_eq!(m.cols, self.costs[v].len(), "edge ({u},{v}) col dim");
+        assert_ne!(u, v, "self loops are not representable in PBQP");
+        self.edges.push(Edge { u, v, m });
+    }
+
+    /// Objective value of a full assignment (Eq. 8).
+    pub fn evaluate(&self, assignment: &[usize]) -> f64 {
+        assert_eq!(assignment.len(), self.n());
+        let mut total = 0.0;
+        for (i, &k) in assignment.iter().enumerate() {
+            total += self.costs[i][k];
+        }
+        for e in &self.edges {
+            total += e.m.get(assignment[e.u], assignment[e.v]);
+        }
+        total
+    }
+
+    /// Validate an assignment is within domains.
+    pub fn check_assignment(&self, assignment: &[usize]) -> Result<(), String> {
+        if assignment.len() != self.n() {
+            return Err(format!("assignment len {} != {}", assignment.len(), self.n()));
+        }
+        for (i, &k) in assignment.iter().enumerate() {
+            if k >= self.costs[i].len() {
+                return Err(format!("vertex {} choice {} out of domain {}", i, k, self.costs[i].len()));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A solved assignment with its objective value.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Solution {
+    pub assignment: Vec<usize>,
+    pub cost: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_ops() {
+        let m = Matrix::from_fn(2, 3, |i, j| (i * 10 + j) as f64);
+        assert_eq!(m.get(1, 2), 12.0);
+        let t = m.transposed();
+        assert_eq!(t.get(2, 1), 12.0);
+        let s = m.add(&m);
+        assert_eq!(s.get(1, 2), 24.0);
+    }
+
+    #[test]
+    fn evaluate_sums_nodes_and_edges() {
+        let mut p = Problem::default();
+        let a = p.add_vertex("a", vec![1.0, 5.0], vec!["x".into(), "y".into()]);
+        let b = p.add_vertex("b", vec![2.0, 0.0], vec!["x".into(), "y".into()]);
+        p.add_edge(a, b, Matrix::from_fn(2, 2, |i, j| if i == j { 0.0 } else { 10.0 }));
+        assert_eq!(p.evaluate(&[0, 0]), 3.0);
+        assert_eq!(p.evaluate(&[0, 1]), 11.0);
+        assert_eq!(p.evaluate(&[1, 1]), 5.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "row dim")]
+    fn edge_dims_checked() {
+        let mut p = Problem::default();
+        let a = p.add_vertex("a", vec![0.0], vec!["x".into()]);
+        let b = p.add_vertex("b", vec![0.0, 1.0], vec!["x".into(), "y".into()]);
+        p.add_edge(a, b, Matrix::zeros(2, 2));
+    }
+}

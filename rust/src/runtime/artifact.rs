@@ -1,0 +1,167 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust engine (`artifacts/manifest.json`).
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One conv layer's artifacts.
+#[derive(Debug, Clone)]
+pub struct LayerArtifact {
+    pub name: String,
+    pub c_in: usize,
+    pub c_out: usize,
+    pub h1: usize,
+    pub h2: usize,
+    pub k1: usize,
+    pub k2: usize,
+    pub s: usize,
+    pub p1: usize,
+    pub p2: usize,
+    pub o1: usize,
+    pub o2: usize,
+    /// algorithm name → HLO text file (relative to the artifact dir).
+    pub algos: BTreeMap<String, String>,
+    pub weights_file: String,
+    pub weight_count: usize,
+}
+
+/// Parsed manifest + artifact directory root.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: String,
+    pub input: (usize, usize, usize),
+    pub layers: Vec<LayerArtifact>,
+    pub golden_input: String,
+    pub golden_output: String,
+    pub golden_output_shape: Vec<usize>,
+    pub fused: Option<String>,
+}
+
+impl Manifest {
+    pub fn load(dir: &str) -> Result<Manifest, String> {
+        let path = Path::new(dir).join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {}: {e} (run `make artifacts` first)", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| e.to_string())?;
+        let u = |v: &Json, k: &str| -> Result<usize, String> {
+            v.get(k).as_usize().ok_or_else(|| format!("manifest: bad field '{k}'"))
+        };
+        let mut layers = Vec::new();
+        for lj in j.get("layers").as_arr().ok_or("manifest: no layers")? {
+            let mut algos = BTreeMap::new();
+            if let Some(obj) = lj.get("algos").as_obj() {
+                for (k, v) in obj {
+                    algos.insert(k.clone(), v.as_str().unwrap_or_default().to_string());
+                }
+            }
+            layers.push(LayerArtifact {
+                name: lj.get("name").as_str().unwrap_or_default().to_string(),
+                c_in: u(lj, "c_in")?,
+                c_out: u(lj, "c_out")?,
+                h1: u(lj, "h1")?,
+                h2: u(lj, "h2")?,
+                k1: u(lj, "k1")?,
+                k2: u(lj, "k2")?,
+                s: u(lj, "s")?,
+                p1: u(lj, "p1")?,
+                p2: u(lj, "p2")?,
+                o1: u(lj, "o1")?,
+                o2: u(lj, "o2")?,
+                algos,
+                weights_file: lj.get("weights").as_str().unwrap_or_default().to_string(),
+                weight_count: u(lj, "weight_count")?,
+            });
+        }
+        let inp = j.get("input");
+        Ok(Manifest {
+            dir: PathBuf::from(dir),
+            model: j.get("model").as_str().unwrap_or_default().to_string(),
+            input: (u(&inp, "c")?, u(&inp, "h1")?, u(&inp, "h2")?),
+            layers,
+            golden_input: j.get("golden_input").as_str().unwrap_or_default().to_string(),
+            golden_output: j.get("golden_output").as_str().unwrap_or_default().to_string(),
+            golden_output_shape: j
+                .get("golden_output_shape")
+                .as_arr()
+                .map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
+                .unwrap_or_default(),
+            fused: j.get("fused").as_str().map(|s| s.to_string()),
+        })
+    }
+
+    pub fn layer(&self, name: &str) -> Option<&LayerArtifact> {
+        self.layers.iter().find(|l| l.name == name)
+    }
+
+    /// Load a raw f32 little-endian binary file from the artifact dir.
+    pub fn load_f32(&self, file: &str) -> Result<Vec<f32>, String> {
+        let path = self.dir.join(file);
+        let bytes =
+            std::fs::read(&path).map_err(|e| format!("read {}: {e}", path.display()))?;
+        if bytes.len() % 4 != 0 {
+            return Err(format!("{file}: not a multiple of 4 bytes"));
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+
+    pub fn golden(&self) -> Result<(Vec<f32>, Vec<f32>), String> {
+        Ok((self.load_f32(&self.golden_input)?, self.load_f32(&self.golden_output)?))
+    }
+
+    pub fn weights(&self, layer: &LayerArtifact) -> Result<Vec<f32>, String> {
+        let w = self.load_f32(&layer.weights_file)?;
+        if w.len() != layer.weight_count {
+            return Err(format!(
+                "{}: expected {} weights, file has {}",
+                layer.name,
+                layer.weight_count,
+                w.len()
+            ));
+        }
+        Ok(w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<String> {
+        let d = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if Path::new(d).join("manifest.json").exists() {
+            Some(d.to_string())
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn loads_manifest_when_built() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model, "mini-inception");
+        assert_eq!(m.layers.len(), 7);
+        assert_eq!(m.input, (4, 16, 16));
+        // every layer's weights load with the right count
+        for l in &m.layers {
+            let w = m.weights(l).unwrap();
+            assert_eq!(w.len(), l.c_in * l.c_out * l.k1 * l.k2);
+        }
+        let (gi, go) = m.golden().unwrap();
+        assert_eq!(gi.len(), 4 * 16 * 16);
+        assert_eq!(go.len(), 16 * 8 * 8);
+    }
+
+    #[test]
+    fn missing_dir_is_error() {
+        assert!(Manifest::load("/nonexistent/path").is_err());
+    }
+}

@@ -1,0 +1,129 @@
+//! PJRT client wrapper: HLO text → compile → execute
+//! (the /opt/xla-example/load_hlo pattern, generalized with an
+//! executable cache).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A shaped f32 host tensor moving in/out of the runtime.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorBuf {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl TensorBuf {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> TensorBuf {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        TensorBuf { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> TensorBuf {
+        let n = shape.iter().product();
+        TensorBuf { shape, data: vec![0.0; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+/// The PJRT CPU runtime with a compiled-executable cache keyed by
+/// artifact path. One compiled executable per (layer, algorithm) —
+/// "one compiled executable per model variant".
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    cache: BTreeMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtRuntime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<PjrtRuntime, String> {
+        let client = xla::PjRtClient::cpu().map_err(|e| format!("PjRtClient::cpu: {e:?}"))?;
+        Ok(PjrtRuntime { client, cache: BTreeMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact (cached).
+    pub fn load(&mut self, path: &Path) -> Result<(), String> {
+        let key = path.to_string_lossy().to_string();
+        if self.cache.contains_key(&key) {
+            return Ok(());
+        }
+        let proto = xla::HloModuleProto::from_text_file(&key)
+            .map_err(|e| format!("parse HLO {key}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| format!("compile {key}: {e:?}"))?;
+        self.cache.insert(key, exe);
+        Ok(())
+    }
+
+    pub fn is_loaded(&self, path: &Path) -> bool {
+        self.cache.contains_key(path.to_string_lossy().as_ref())
+    }
+
+    pub fn loaded_count(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Execute a loaded artifact with the given inputs. The artifact was
+    /// lowered with `return_tuple=True`, so the single output is a
+    /// 1-tuple (unwrapped here). `out_shape` reshapes the flat result.
+    pub fn execute(
+        &mut self,
+        path: &Path,
+        inputs: &[&TensorBuf],
+        out_shape: Vec<usize>,
+    ) -> Result<TensorBuf, String> {
+        self.load(path)?;
+        let key = path.to_string_lossy().to_string();
+        let exe = self.cache.get(&key).unwrap();
+        let mut literals = Vec::with_capacity(inputs.len());
+        for t in inputs {
+            let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(&t.data)
+                .reshape(&dims)
+                .map_err(|e| format!("reshape input: {e:?}"))?;
+            literals.push(lit);
+        }
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| format!("execute {key}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| format!("fetch result: {e:?}"))?;
+        let out = lit.to_tuple1().map_err(|e| format!("untuple: {e:?}"))?;
+        let data = out.to_vec::<f32>().map_err(|e| format!("to_vec: {e:?}"))?;
+        Ok(TensorBuf::new(out_shape, data))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_buf_shape_checked() {
+        let t = TensorBuf::new(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.len(), 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn tensor_buf_rejects_bad_shape() {
+        TensorBuf::new(vec![2, 3], vec![0.0; 5]);
+    }
+
+    // PJRT integration tests live in rust/tests/pjrt_runtime.rs — they
+    // need the artifacts directory and a working libxla_extension.
+}

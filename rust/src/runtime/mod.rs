@@ -1,0 +1,9 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path —
+//! Python is never involved at inference time.
+
+pub mod artifact;
+pub mod client;
+
+pub use artifact::{LayerArtifact, Manifest};
+pub use client::{PjrtRuntime, TensorBuf};

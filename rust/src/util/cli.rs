@@ -1,0 +1,112 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `subcommand --flag value --switch positional` style, with
+//! `--key=value` and `--key value` both accepted.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand, named options and positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    ///
+    /// `switch_names` lists flags that take no value; everything else
+    /// starting with `--` consumes the following token as its value
+    /// unless written as `--key=value`.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I, switch_names: &[&str]) -> Args {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if switch_names.contains(&rest) {
+                    args.switches.push(rest.to_string());
+                } else if let Some(v) = it.peek() {
+                    if v.starts_with("--") {
+                        args.switches.push(rest.to_string());
+                    } else {
+                        args.options.insert(rest.to_string(), it.next().unwrap());
+                    }
+                } else {
+                    args.switches.push(rest.to_string());
+                }
+            } else if args.subcommand.is_none() && args.positional.is_empty() {
+                args.subcommand = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    pub fn parse_env(switch_names: &[&str]) -> Args {
+        Args::parse(std::env::args().skip(1), switch_names)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_options() {
+        let a = Args::parse(sv(&["dse", "--model", "googlenet", "--dsp=6084", "extra"]), &[]);
+        assert_eq!(a.subcommand.as_deref(), Some("dse"));
+        assert_eq!(a.get("model"), Some("googlenet"));
+        assert_eq!(a.get_usize("dsp", 0), 6084);
+        assert_eq!(a.positional, vec!["extra".to_string()]);
+    }
+
+    #[test]
+    fn parses_switches() {
+        let a = Args::parse(sv(&["run", "--verbose", "--out", "x.json"]), &["verbose"]);
+        assert!(a.has("verbose"));
+        assert_eq!(a.get("out"), Some("x.json"));
+    }
+
+    #[test]
+    fn trailing_flag_is_switch() {
+        let a = Args::parse(sv(&["run", "--json"]), &[]);
+        assert!(a.has("json"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(sv(&[]), &[]);
+        assert!(a.subcommand.is_none());
+        assert_eq!(a.get_or("x", "d"), "d");
+        assert_eq!(a.get_f64("bw", 19.2), 19.2);
+    }
+}

@@ -1,0 +1,8 @@
+//! In-repo substrates replacing crates that are unavailable in the
+//! offline build environment (serde, clap, proptest, criterion, prettytable).
+
+pub mod json;
+pub mod cli;
+pub mod rng;
+pub mod proptest;
+pub mod table;

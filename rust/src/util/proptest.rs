@@ -1,0 +1,92 @@
+//! Minimal property-based testing harness (proptest is unavailable
+//! offline). Runs a property over many seeded random cases and reports
+//! the failing seed so cases are reproducible.
+
+use super::rng::Rng;
+
+/// Number of cases run per property (overridable via `DYNAMAP_PROPTEST_CASES`).
+pub fn default_cases() -> u64 {
+    std::env::var("DYNAMAP_PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(128)
+}
+
+/// Run `prop` for `cases` seeds; panic with the seed on first failure.
+///
+/// The property receives a deterministic [`Rng`] it can draw its inputs
+/// from and returns `Err(message)` to fail the case.
+pub fn check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0xD1A_0000 + case;
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{}' failed on case {} (seed {:#x}): {}",
+                name, case, seed, msg
+            );
+        }
+    }
+}
+
+/// Convenience: run with the default case count.
+pub fn check_default<F>(name: &str, prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    check(name, default_cases(), prop);
+}
+
+/// Assert two f32 slices are element-wise close.
+pub fn assert_allclose(a: &[f32], b: &[f32], atol: f32, rtol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        if (x - y).abs() > tol || x.is_nan() != y.is_nan() {
+            return Err(format!(
+                "mismatch at {}: {} vs {} (|Δ|={} > tol={})",
+                i,
+                x,
+                y,
+                (x - y).abs(),
+                tol
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("trivial", 16, |rng| {
+            let x = rng.below(100);
+            if x < 100 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'failing'")]
+    fn check_reports_failures() {
+        check("failing", 4, |_| Err("always".into()));
+    }
+
+    #[test]
+    fn allclose() {
+        assert!(assert_allclose(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-5, 1e-5).is_ok());
+        assert!(assert_allclose(&[1.0], &[1.1], 1e-5, 1e-5).is_err());
+        assert!(assert_allclose(&[1.0], &[1.0, 2.0], 1e-5, 1e-5).is_err());
+    }
+}

@@ -1,0 +1,153 @@
+//! ASCII table rendering for reports, figures-as-text and benches.
+
+/// A simple column-aligned table with a header row.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row arity mismatch in table '{}'",
+            self.title
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut w = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            w[i] = w[i].max(h.chars().count());
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("== {} ==\n", self.title));
+        }
+        let line = |w: &[usize]| {
+            let mut s = String::from("+");
+            for wi in w {
+                s.push_str(&"-".repeat(wi + 2));
+                s.push('+');
+            }
+            s.push('\n');
+            s
+        };
+        let fmt_row = |cells: &[String], w: &[usize]| {
+            let mut s = String::from("|");
+            for (c, wi) in cells.iter().zip(w) {
+                s.push_str(&format!(" {:<width$} |", c, width = wi));
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&line(&w));
+        out.push_str(&fmt_row(&self.header, &w));
+        out.push_str(&line(&w));
+        for r in &self.rows {
+            out.push_str(&fmt_row(r, &w));
+        }
+        out.push_str(&line(&w));
+        out
+    }
+
+    /// Emit as CSV (for plotting outside).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        out.push_str(&self.header.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a float with fixed decimals, trimming noise.
+pub fn fnum(v: f64, decimals: usize) -> String {
+    format!("{:.*}", decimals, v)
+}
+
+/// Render a horizontal ASCII bar chart (one bar per label) — used to
+/// visualize per-layer utilization figures in the terminal.
+pub fn bar_chart(title: &str, items: &[(String, f64)], width: usize) -> String {
+    let max = items.iter().map(|(_, v)| *v).fold(f64::MIN, f64::max).max(1e-12);
+    let lw = items.iter().map(|(l, _)| l.chars().count()).max().unwrap_or(0);
+    let mut out = format!("== {} ==\n", title);
+    for (label, v) in items {
+        let n = ((v / max) * width as f64).round() as usize;
+        out.push_str(&format!(
+            "{:<lw$} | {:<width$} {:.4}\n",
+            label,
+            "#".repeat(n),
+            v,
+            lw = lw,
+            width = width
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo", &["name", "value"]);
+        t.row(vec!["alpha".into(), "1".into()]);
+        t.row(vec!["b".into(), "22.5".into()]);
+        let s = t.render();
+        assert!(s.contains("| alpha | 1     |"));
+        assert!(s.contains("| b     | 22.5  |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = Table::new("", &["a", "b"]);
+        t.row(vec!["x,y".into(), "q\"z".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+        assert!(csv.contains("\"q\"\"z\""));
+    }
+
+    #[test]
+    fn bar_chart_renders() {
+        let s = bar_chart("u", &[("l1".into(), 0.5), ("l2".into(), 1.0)], 10);
+        assert!(s.contains("##########"));
+    }
+}

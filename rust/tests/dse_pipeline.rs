@@ -1,0 +1,184 @@
+//! Integration tests across the whole DSE pipeline: zoo × devices ×
+//! policies, cost-graph structural invariants, determinism, and
+//! failure-injection on user-supplied inputs.
+
+use dynamap::cost::graph_build::{BuildOpts, CostGraph, Policy};
+use dynamap::cost::transition::TransitionModel;
+use dynamap::cost::Device;
+use dynamap::dse::{Dse, DseConfig};
+use dynamap::graph::{config, zoo};
+use dynamap::pbqp::brute::search_space;
+use dynamap::sp;
+
+#[test]
+fn every_zoo_model_maps_on_every_device() {
+    for model in zoo::names() {
+        let cnn = zoo::by_name(model).unwrap();
+        for device in [Device::alveo_u200(), Device::small_edge()] {
+            let mut cfg = DseConfig::with_device(device.clone());
+            // keep the sweep small for the big nets
+            cfg.p1_lo = 8;
+            cfg.p1_hi = 256.min(device.dsp_cap);
+            let plan = Dse::new(cfg).run(&cnn).unwrap_or_else(|e| {
+                panic!("{model} on {}: {e}", device.name)
+            });
+            assert!(plan.p1 * plan.p2 <= device.dsp_cap, "{model}: over budget");
+            assert!(plan.total_latency_ms > 0.0);
+            assert_eq!(plan.mapping.layers.len(), cnn.conv_count());
+            // every layer utilization in (0, 1]
+            for l in &plan.mapping.layers {
+                assert!(
+                    l.cost.utilization > 0.0 && l.cost.utilization <= 1.0,
+                    "{model}/{}: μ = {}",
+                    l.name,
+                    l.cost.utilization
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn optimality_ordering_holds_everywhere() {
+    // OPT ≤ greedy ≤ ... is not guaranteed for greedy, but OPT ≤ every
+    // policy must hold on every model (Theorem 4.1 optimality).
+    for model in zoo::names() {
+        let cnn = zoo::by_name(model).unwrap();
+        let mut cfg = DseConfig::alveo_u200();
+        cfg.p1_lo = 32;
+        cfg.p1_hi = 128;
+        let dse = Dse::new(cfg);
+        let opt = dse.run(&cnn).unwrap().total_latency_ms;
+        for p in
+            [Policy::Im2colOnly, Policy::Kn2rowApplied, Policy::WinoApplied, Policy::Greedy]
+        {
+            let bl = dse.run_policy(&cnn, p).unwrap().total_latency_ms;
+            assert!(
+                opt <= bl + 1e-9,
+                "{model}: OPT {opt} > {p:?} {bl}"
+            );
+        }
+    }
+}
+
+#[test]
+fn cost_graphs_remain_series_parallel() {
+    // the V_s insertion of §5.1 must preserve the SP property the
+    // solver relies on (subdivision argument in graph_build docs)
+    for model in zoo::names() {
+        let cnn = zoo::by_name(model).unwrap();
+        assert!(sp::cnn_is_series_parallel(&cnn), "{model} CNN graph not SP");
+        let cfg = DseConfig::alveo_u200();
+        let g = CostGraph::build(
+            &cnn,
+            &cfg.cost_model(),
+            &cfg.transition_model(),
+            64,
+            64,
+            BuildOpts::default(),
+        );
+        let edges: Vec<(usize, usize)> =
+            g.problem.edges.iter().map(|e| (e.u, e.v)).collect();
+        assert!(
+            sp::is_series_parallel(g.problem.n(), &edges, g.source, g.sink),
+            "{model} cost graph not SP"
+        );
+    }
+}
+
+#[test]
+fn dse_is_deterministic() {
+    let cnn = zoo::googlenet();
+    let dse = Dse::new(DseConfig::alveo_u200());
+    let a = dse.run(&cnn).unwrap();
+    let b = dse.run(&cnn).unwrap();
+    assert_eq!(a.p1, b.p1);
+    assert_eq!(a.p2, b.p2);
+    assert_eq!(a.mapping.assignment, b.mapping.assignment);
+    assert_eq!(a.total_latency_ms, b.total_latency_ms);
+}
+
+#[test]
+fn sp_solver_matches_brute_on_real_cost_graph() {
+    // mini-inception cost graph is small enough to brute force
+    let cnn = zoo::mini_inception();
+    let cfg = DseConfig::with_device(Device::small_edge());
+    let g = CostGraph::build(
+        &cnn,
+        &cfg.cost_model(),
+        &cfg.transition_model(),
+        16,
+        16,
+        BuildOpts::default(),
+    );
+    assert!(search_space(&g.problem) < (1 << 24));
+    let opt = g.solve(&cnn);
+    let brute = dynamap::pbqp::solve_brute(&g.problem);
+    assert!((opt.total_sec - brute.cost).abs() < 1e-12);
+}
+
+#[test]
+fn fusion_and_weight_overlap_only_help() {
+    let cnn = zoo::googlenet();
+    let mut on = DseConfig::alveo_u200();
+    on.p1_lo = 64;
+    on.p1_hi = 128;
+    let mut off = on.clone();
+    off.opts.sram_fuse = false;
+    off.opts.overlap_weight_load = false;
+    let l_on = Dse::new(on).run(&cnn).unwrap().total_latency_ms;
+    let l_off = Dse::new(off).run(&cnn).unwrap().total_latency_ms;
+    assert!(l_on <= l_off + 1e-9, "optimizations should not hurt: {l_on} vs {l_off}");
+}
+
+#[test]
+fn json_roundtrip_preserves_dse_result() {
+    let cnn = zoo::mini_inception();
+    let tmp = std::env::temp_dir().join("dynamap_mini.json");
+    config::save(&cnn, tmp.to_str().unwrap()).unwrap();
+    let loaded = config::load(tmp.to_str().unwrap()).unwrap();
+    let dse = Dse::new(DseConfig::with_device(Device::small_edge()));
+    let a = dse.run(&cnn).unwrap();
+    let b = dse.run(&loaded).unwrap();
+    assert_eq!(a.total_latency_ms, b.total_latency_ms);
+    assert_eq!(a.mapping.assignment, b.mapping.assignment);
+}
+
+#[test]
+fn failure_injection_bad_inputs() {
+    // malformed JSON
+    let tmp = std::env::temp_dir().join("dynamap_bad.json");
+    std::fs::write(&tmp, "{not json").unwrap();
+    assert!(config::load(tmp.to_str().unwrap()).is_err());
+    // structurally invalid CNN (dangling edge)
+    std::fs::write(
+        &tmp,
+        r#"{"name":"bad","nodes":[{"name":"in","kind":"input","c":1,"h1":4,"h2":4}],"edges":[[0,5]]}"#,
+    )
+    .unwrap();
+    assert!(config::load(tmp.to_str().unwrap()).is_err());
+    // missing artifact dir
+    assert!(dynamap::runtime::Manifest::load("/no/such/dir").is_err());
+    // zero-DSP device cannot panic the sweep
+    let mut cfg = DseConfig::with_device(Device::small_edge());
+    cfg.device.dsp_cap = 1;
+    cfg.p1_lo = 1;
+    cfg.p1_hi = 1;
+    let plan = Dse::new(cfg).run(&zoo::mini_inception()).unwrap();
+    assert_eq!((plan.p1, plan.p2), (1, 1));
+}
+
+#[test]
+fn emit_produces_consistent_package() {
+    let cnn = zoo::mini_inception();
+    let dse = Dse::new(DseConfig::with_device(Device::small_edge()));
+    let plan = dse.run(&cnn).unwrap();
+    let v = dynamap::emit::verilog::overlay_top(&plan);
+    assert!(v.contains(&format!("P_SA1 = {}", plan.p1)));
+    let c = dynamap::emit::control::control_stream(&cnn, &plan);
+    let words = c.get("layers").as_arr().unwrap();
+    assert_eq!(words.len(), plan.mapping.layers.len());
+    // control words' cycle estimates sum to the plan's compute portion
+    let sum: f64 = words.iter().map(|w| w.get("est_cycles").as_f64().unwrap()).sum();
+    assert!(sum > 0.0);
+}

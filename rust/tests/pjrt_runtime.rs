@@ -1,0 +1,96 @@
+//! PJRT integration tests: every (layer, algorithm) artifact must
+//! reproduce the Python oracle's per-layer golden outputs, and the
+//! end-to-end engine must reproduce the whole-network golden.
+//!
+//! These tests are skipped (with a note) when `make artifacts` has not
+//! been run.
+
+use dynamap::coordinator::{EnginePolicy, InferenceEngine};
+use dynamap::cost::graph_build::Policy;
+use dynamap::runtime::{Manifest, PjrtRuntime, TensorBuf};
+
+fn artifacts_dir() -> Option<String> {
+    let d = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if std::path::Path::new(d).join("manifest.json").exists() {
+        Some(d.to_string())
+    } else {
+        eprintln!("skipping PJRT test: run `make artifacts` first");
+        None
+    }
+}
+
+fn safe(name: &str) -> String {
+    name.replace('/', "_")
+}
+
+#[test]
+fn every_layer_algo_artifact_matches_oracle() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    let mut rt = PjrtRuntime::cpu().unwrap();
+    let mut checked = 0;
+    for layer in &m.layers {
+        let gi = m.load_f32(&format!("golden_in__{}.bin", safe(&layer.name))).unwrap();
+        let go = m.load_f32(&format!("golden_out__{}.bin", safe(&layer.name))).unwrap();
+        let x = TensorBuf::new(vec![layer.c_in, layer.h1, layer.h2], gi);
+        let w = TensorBuf::new(
+            vec![layer.c_out, layer.c_in, layer.k1, layer.k2],
+            m.weights(layer).unwrap(),
+        );
+        for (algo, file) in &layer.algos {
+            let out = rt
+                .execute(&m.dir.join(file), &[&x, &w], vec![layer.c_out, layer.o1, layer.o2])
+                .unwrap();
+            let max_err = out
+                .data
+                .iter()
+                .zip(&go)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(
+                max_err < 1e-3,
+                "{} [{algo}]: max |Δ| = {max_err} vs oracle",
+                layer.name
+            );
+            checked += 1;
+        }
+    }
+    assert!(checked >= 16, "expected ≥16 (layer, algo) pairs, checked {checked}");
+}
+
+#[test]
+fn engine_reproduces_golden_for_every_policy() {
+    let Some(dir) = artifacts_dir() else { return };
+    for policy in [
+        EnginePolicy::Optimal,
+        EnginePolicy::Baseline(Policy::Im2colOnly),
+        EnginePolicy::Baseline(Policy::Kn2rowApplied),
+        EnginePolicy::Baseline(Policy::WinoApplied),
+        EnginePolicy::Baseline(Policy::Greedy),
+    ] {
+        let label = format!("{policy:?}");
+        let mut engine = InferenceEngine::new(&dir, policy).unwrap();
+        let err = engine.validate_golden().unwrap();
+        assert!(err < 1e-3, "{label}: golden max |Δ| = {err}");
+    }
+}
+
+#[test]
+fn fused_artifact_matches_golden() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    let Some(fused) = m.fused.clone() else { return };
+    let (gi, go) = m.golden().unwrap();
+    let (c, h1, h2) = m.input;
+    let x = TensorBuf::new(vec![c, h1, h2], gi);
+    let mut rt = PjrtRuntime::cpu().unwrap();
+    let shape: Vec<usize> = m.golden_output_shape.clone();
+    let out = rt.execute(&m.dir.join(&fused), &[&x], shape).unwrap();
+    let max_err = out
+        .data
+        .iter()
+        .zip(&go)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_err < 1e-3, "fused: max |Δ| = {max_err}");
+}
