@@ -8,8 +8,8 @@
 //! cargo run --release --example custom_cnn -- my.json # your own JSON
 //! ```
 
+use dynamap::api::Compiler;
 use dynamap::cost::Device;
-use dynamap::dse::{Dse, DseConfig};
 use dynamap::graph::layer::{Op, PoolKind};
 use dynamap::graph::{config, Cnn, CnnBuilder};
 use dynamap::util::table::Table;
@@ -51,8 +51,8 @@ fn main() {
         &["device", "DSP cap", "P_SA", "latency ms", "GOP/s", "algo histogram"],
     );
     for device in [Device::alveo_u200(), Device::small_edge()] {
-        let dse = Dse::new(DseConfig::with_device(device.clone()));
-        let plan = dse.run(&cnn).expect("DSE");
+        let compiler = Compiler::new().device(device.clone());
+        let plan = compiler.compile(&cnn).expect("DSE").into_plan();
         t.row(vec![
             device.name.clone(),
             device.dsp_cap.to_string(),

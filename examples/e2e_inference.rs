@@ -1,17 +1,17 @@
 //! END-TO-END VALIDATION DRIVER (EXPERIMENTS.md §E2E).
 //!
-//! Proves all three layers compose: the Rust coordinator loads the
-//! AOT-compiled Pallas/JAX artifacts (`make artifacts`), picks the
-//! per-layer algorithm with the DSE flow, runs real batched inference
-//! requests through PJRT, validates numerics against the Python oracle
-//! golden, and reports latency/throughput for every mapping policy.
+//! Proves all three layers compose through the staged API: a `Session`
+//! loads the AOT-compiled Pallas/JAX artifacts (`make artifacts`),
+//! resolves the model from the manifest, compiles (and caches) the DSE
+//! plan, runs real batched inference requests through PJRT, validates
+//! numerics against the Python oracle golden, and reports
+//! latency/throughput for every mapping policy.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example e2e_inference
 //! ```
 
-use dynamap::coordinator::{EnginePolicy, InferenceEngine};
-use dynamap::cost::graph_build::Policy;
+use dynamap::api::{Policy, Session};
 use dynamap::runtime::TensorBuf;
 use dynamap::util::rng::Rng;
 use dynamap::util::table::Table;
@@ -19,46 +19,52 @@ use dynamap::util::table::Table;
 fn main() {
     let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
     let n_requests = 64;
+    // plans compiled once are reused across the baseline sweep (and
+    // across runs of this example)
+    let plan_cache = std::env::temp_dir().join("dynamap_e2e_plans");
 
     let mut table = Table::new(
-        "end-to-end inference — mini-inception through PJRT (64 requests)",
-        &["policy", "mapping", "golden max|Δ|", "mean µs", "p95 µs", "req/s"],
+        "end-to-end inference — batched requests through a PJRT Session (64 requests)",
+        &["policy", "mapping", "golden max|Δ|", "mean µs", "p95 µs", "req/s", "plan"],
     );
 
     for (label, policy) in [
-        ("OPT (DYNAMAP)", EnginePolicy::Optimal),
-        ("bl3 im2col", EnginePolicy::Baseline(Policy::Im2colOnly)),
-        ("bl4 kn2row", EnginePolicy::Baseline(Policy::Kn2rowApplied)),
-        ("bl5 winograd", EnginePolicy::Baseline(Policy::WinoApplied)),
+        ("OPT (DYNAMAP)", None),
+        ("bl3 im2col", Some(Policy::Im2colOnly)),
+        ("bl4 kn2row", Some(Policy::Kn2rowApplied)),
+        ("bl5 winograd", Some(Policy::WinoApplied)),
     ] {
-        let mut engine = match InferenceEngine::new(&dir, policy) {
-            Ok(e) => e,
+        let mut builder = Session::builder(dir.as_str()).plan_cache(&plan_cache);
+        if let Some(p) = policy {
+            builder = builder.policy(p);
+        }
+        let mut session = match builder.build() {
+            Ok(s) => s,
             Err(e) => {
-                eprintln!("({label}) engine init failed: {e}\nrun `make artifacts` first");
+                eprintln!("({label}) session init failed: {e}\nrun `make artifacts` first");
                 std::process::exit(1);
             }
         };
         // 1. numeric validation against the Python-side oracle
-        let max_err = engine.validate_golden().expect("golden validation");
+        let max_err = session.validate_golden().expect("golden validation");
         assert!(max_err < 1e-3, "{label}: golden mismatch {max_err}");
 
-        // 2. serve a batch of synthetic requests
-        let (c, h1, h2) = engine.manifest.input;
+        // 2. serve a batch of synthetic requests through infer_batch
+        let (c, h1, h2) = session.manifest().input;
         let mut rng = Rng::new(2024);
-        let mut stats = dynamap::coordinator::LatencyStats::new();
         // warm-up
         let warm = random_input(&mut rng, c, h1, h2);
-        engine.infer(&warm).unwrap();
+        session.infer(&warm).unwrap();
+        let batch: Vec<TensorBuf> =
+            (0..n_requests).map(|_| random_input(&mut rng, c, h1, h2)).collect();
         let t0 = std::time::Instant::now();
-        for _ in 0..n_requests {
-            let input = random_input(&mut rng, c, h1, h2);
-            let (_out, m) = engine.infer(&input).expect("inference");
-            stats.push(m.total_us);
-        }
+        let (outputs, metrics) = session.infer_batch(&batch).expect("batched inference");
         let wall = t0.elapsed().as_secs_f64();
+        assert_eq!(outputs.len(), n_requests);
+        assert_eq!(metrics.stats.count(), n_requests);
 
         let hist: std::collections::BTreeMap<&str, usize> =
-            engine.algo_map.values().fold(Default::default(), |mut h, a| {
+            session.algo_map().values().fold(Default::default(), |mut h, a| {
                 *h.entry(a.as_str()).or_insert(0) += 1;
                 h
             });
@@ -66,9 +72,10 @@ fn main() {
             label.into(),
             format!("{hist:?}"),
             format!("{max_err:.1e}"),
-            format!("{:.0}", stats.mean()),
-            format!("{:.0}", stats.percentile(95.0)),
+            format!("{:.0}", metrics.stats.mean()),
+            format!("{:.0}", metrics.stats.percentile(95.0)),
             format!("{:.0}", n_requests as f64 / wall),
+            if session.plan_from_cache() { "cached".into() } else { "compiled".into() },
         ]);
     }
     println!("{}", table.render());

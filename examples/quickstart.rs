@@ -1,12 +1,19 @@
-//! Quickstart: run the full DYNAMAP DSE flow on GoogLeNet and print the
-//! chosen architecture + per-layer algorithm mapping.
+//! Quickstart: the staged `Compiler → PlanArtifact → Session` pipeline.
+//!
+//! 1. *Compile* (offline, expensive): run the two-step DSE once on
+//!    GoogLeNet and get a `PlanArtifact`.
+//! 2. *Persist* the artifact and load it back — the DSE result is a
+//!    durable value keyed by `(model, device, config)`, not something to
+//!    recompute per process.
+//! 3. *Serve* (online, cheap): a `Session` would load this plan and run
+//!    inference against AOT artifacts — see `examples/e2e_inference.rs`
+//!    for that half (it needs `make artifacts`).
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
-use dynamap::cost::graph_build::Policy;
-use dynamap::dse::{Dse, DseConfig};
+use dynamap::api::{Compiler, PlanArtifact, Policy};
 use dynamap::graph::zoo;
 use dynamap::util::table::Table;
 
@@ -16,14 +23,14 @@ fn main() {
     let cnn = zoo::googlenet();
     println!("{}\n", cnn.summary());
 
-    // 2. configure the target device (the paper's Alveo U200 setup)
-    let dse = Dse::new(DseConfig::alveo_u200());
-
-    // 3. run the two-step DSE: Algorithm 1 + optimal PBQP mapping
+    // 2. configure the compiler (defaults = the paper's Alveo U200
+    //    setup) and run the two-step DSE: Algorithm 1 + PBQP mapping
+    let compiler = Compiler::new().wino(2, 3);
     let t0 = std::time::Instant::now();
-    let plan = dse.run(&cnn).expect("DSE failed");
+    let artifact = compiler.compile(&cnn).expect("DSE failed");
+    let plan = &artifact.plan;
     println!(
-        "DSE finished in {:.2?}: P_SA = {}×{}, end-to-end latency {:.3} ms, {:.0} GOP/s",
+        "compile finished in {:.2?}: P_SA = {}×{}, end-to-end latency {:.3} ms, {:.0} GOP/s",
         t0.elapsed(),
         plan.p1,
         plan.p2,
@@ -31,6 +38,18 @@ fn main() {
         plan.throughput_gops
     );
     println!("algorithm histogram: {:?}\n", plan.algo_histogram());
+
+    // 3. the artifact is versioned and fully round-trippable: save it,
+    //    load it back, and serve from it later without re-running DSE
+    let path = std::env::temp_dir().join("dynamap_quickstart_googlenet.json");
+    artifact.save(&path).expect("save plan artifact");
+    let reloaded = PlanArtifact::load(&path).expect("load plan artifact");
+    assert_eq!(reloaded.plan.mapping.assignment, plan.mapping.assignment);
+    println!(
+        "plan artifact round-tripped through {} (schema v{})\n",
+        path.display(),
+        reloaded.version
+    );
 
     // 4. compare against the single-algorithm baselines of §6.1.2
     let mut t = Table::new("OPT vs baselines", &["mapping", "latency ms", "×"]);
@@ -40,7 +59,7 @@ fn main() {
         ("bl4 kn2row-applied", Policy::Kn2rowApplied),
         ("bl5 wino-applied", Policy::WinoApplied),
     ] {
-        let bl = dse.run_policy(&cnn, p).unwrap();
+        let bl = compiler.clone().policy(p).compile(&cnn).unwrap().into_plan();
         t.row(vec![
             label.into(),
             format!("{:.3}", bl.total_latency_ms),
@@ -63,4 +82,8 @@ fn main() {
         ]);
     }
     println!("{}", t.render());
+    println!(
+        "next: `make artifacts && cargo run --release --example e2e_inference` \
+         to serve this pipeline through a PJRT Session"
+    );
 }

@@ -3,9 +3,9 @@
 //! ablation suite. Timing of the DSE stages themselves is measured with
 //! the mini-criterion harness.
 
+use dynamap::api::Compiler;
 use dynamap::bench::figures;
 use dynamap::bench::harness::Bencher;
-use dynamap::dse::{Dse, DseConfig};
 use dynamap::graph::zoo;
 
 fn main() {
@@ -28,14 +28,14 @@ fn main() {
     let mut b = Bencher::new();
     for model in ["googlenet", "inception-v4"] {
         let cnn = zoo::by_name(model).unwrap();
-        let dse = Dse::new(DseConfig::alveo_u200());
-        b.bench(&format!("algo1/{model}"), || dse.identify(&cnn));
-        let arch = dse.identify(&cnn);
+        let compiler = Compiler::new();
+        b.bench(&format!("algo1/{model}"), || compiler.identify(&cnn).unwrap());
+        let arch = compiler.identify(&cnn).unwrap();
         b.bench(&format!("cost_graph/{model}"), || {
-            dse.build_graph(&cnn, arch.p1, arch.p2)
+            compiler.build_graph(&cnn, arch.p1, arch.p2)
         });
-        let g = dse.build_graph(&cnn, arch.p1, arch.p2);
+        let g = compiler.build_graph(&cnn, arch.p1, arch.p2);
         b.bench(&format!("pbqp_solve/{model}"), || g.solve(&cnn));
-        b.bench(&format!("full_dse/{model}"), || dse.run(&cnn).unwrap());
+        b.bench(&format!("full_dse/{model}"), || compiler.compile(&cnn).unwrap());
     }
 }

@@ -1,0 +1,423 @@
+//! [`PlanArtifact`] — the cacheable boundary between offline DSE and
+//! online serving.
+//!
+//! A plan artifact is a *versioned, fully round-trippable* serialization
+//! of a [`Plan`]: `to_json ∘ from_json` preserves the architecture
+//! parameters, the latency breakdown and the complete per-layer
+//! algorithm/dataflow mapping, so DSE results are durable artifacts
+//! keyed by `(model, device, config)` instead of values recomputed on
+//! every process start. [`PlanCache`] implements that keying on disk.
+
+use std::path::{Path, PathBuf};
+
+use super::compiler::Compiler;
+use super::error::DynamapError;
+use crate::cost::conv::{Algo, ConvCost};
+use crate::cost::gemm::Dataflow;
+use crate::cost::graph_build::{LayerAssignment, MappingResult};
+use crate::dse::Plan;
+use crate::graph::Cnn;
+use crate::util::json::Json;
+
+/// A versioned, serializable DSE result.
+#[derive(Debug, Clone)]
+pub struct PlanArtifact {
+    /// Schema version the artifact was written with.
+    pub version: u64,
+    /// Model name the plan was compiled for (must match the manifest's
+    /// `model` field when handed to a session).
+    pub model: String,
+    /// Device name the plan targets.
+    pub device: String,
+    /// [`Compiler::fingerprint`] of the producing configuration.
+    pub fingerprint: String,
+    /// The full DSE output.
+    pub plan: Plan,
+}
+
+impl PlanArtifact {
+    /// Current schema version; [`PlanArtifact::from_json`] rejects
+    /// artifacts written by a newer schema.
+    pub const SCHEMA_VERSION: u64 = 1;
+    const SCHEMA_NAME: &'static str = "dynamap.plan-artifact";
+
+    pub fn new(model: String, device: String, fingerprint: String, plan: Plan) -> PlanArtifact {
+        PlanArtifact { version: Self::SCHEMA_VERSION, model, device, fingerprint, plan }
+    }
+
+    /// Unwrap into the bare [`Plan`].
+    pub fn into_plan(self) -> Plan {
+        self.plan
+    }
+
+    // -- serialization ---------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str(Self::SCHEMA_NAME)),
+            ("version", Json::num(self.version as f64)),
+            ("model", Json::str(self.model.clone())),
+            ("device", Json::str(self.device.clone())),
+            ("fingerprint", Json::str(self.fingerprint.clone())),
+            ("plan", plan_to_json(&self.plan)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<PlanArtifact, DynamapError> {
+        let schema = j.get("schema").as_str().ok_or_else(|| bad("schema"))?;
+        if schema != Self::SCHEMA_NAME {
+            return Err(DynamapError::Artifact(format!(
+                "unexpected schema '{schema}' (want '{}')",
+                Self::SCHEMA_NAME
+            )));
+        }
+        let version = j.get("version").as_u64().ok_or_else(|| bad("version"))?;
+        if version > Self::SCHEMA_VERSION {
+            return Err(DynamapError::Artifact(format!(
+                "artifact schema version {version} is newer than supported version {}",
+                Self::SCHEMA_VERSION
+            )));
+        }
+        Ok(PlanArtifact {
+            version,
+            model: req_str(j, "model")?,
+            device: req_str(j, "device")?,
+            fingerprint: req_str(j, "fingerprint")?,
+            plan: plan_from_json(j.get("plan"))?,
+        })
+    }
+
+    /// Write the artifact (pretty JSON) to `path`, creating parent
+    /// directories as needed.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<(), DynamapError> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent).map_err(|e| DynamapError::io(parent, e))?;
+            }
+        }
+        std::fs::write(path, self.to_json().pretty()).map_err(|e| DynamapError::io(path, e))
+    }
+
+    /// Load an artifact previously written with [`PlanArtifact::save`].
+    pub fn load(path: impl AsRef<Path>) -> Result<PlanArtifact, DynamapError> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path).map_err(|e| DynamapError::io(path, e))?;
+        let j = Json::parse(&text).map_err(|e| DynamapError::json_in(path, e))?;
+        PlanArtifact::from_json(&j)
+    }
+}
+
+/// On-disk plan cache keyed by `(model, device, compiler fingerprint)`.
+#[derive(Debug, Clone)]
+pub struct PlanCache {
+    pub dir: PathBuf,
+}
+
+impl PlanCache {
+    pub fn new(dir: impl Into<PathBuf>) -> PlanCache {
+        PlanCache { dir: dir.into() }
+    }
+
+    /// Path a plan for `model` compiled by `compiler` lives at.
+    pub fn path_for(&self, compiler: &Compiler, model: &str) -> PathBuf {
+        self.dir.join(compiler.cache_file_name(model))
+    }
+
+    /// Load a cached plan if one exists *and* its fingerprint matches
+    /// the compiler's current configuration.
+    pub fn load(&self, compiler: &Compiler, model: &str) -> Option<PlanArtifact> {
+        let a = PlanArtifact::load(self.path_for(compiler, model)).ok()?;
+        (a.model == model && a.fingerprint == compiler.fingerprint()).then_some(a)
+    }
+
+    /// Return the cached plan when fresh, otherwise compile and persist
+    /// it. The boolean is `true` when the plan came from the cache — on
+    /// that path no DSE runs (observable via
+    /// [`Compiler::compile_count`]).
+    pub fn load_or_compile(
+        &self,
+        compiler: &Compiler,
+        cnn: &Cnn,
+    ) -> Result<(PlanArtifact, bool), DynamapError> {
+        if let Some(a) = self.load(compiler, &cnn.name) {
+            return Ok((a, true));
+        }
+        let a = compiler.compile(cnn)?;
+        // the cache is an optimization: a compiled plan in hand must not
+        // be discarded because the cache dir is unwritable — but the
+        // caller asked for caching, so a failed write is worth a warning
+        if let Err(e) = a.save(self.path_for(compiler, &cnn.name)) {
+            eprintln!("warn: plan cache write failed: {e}");
+        }
+        Ok((a, false))
+    }
+}
+
+// -- Plan (de)serialization ----------------------------------------------
+
+fn bad(field: &str) -> DynamapError {
+    DynamapError::Artifact(format!("missing or malformed field '{field}'"))
+}
+
+fn req_str(j: &Json, key: &str) -> Result<String, DynamapError> {
+    Ok(j.get(key).as_str().ok_or_else(|| bad(key))?.to_string())
+}
+
+fn req_f64(j: &Json, key: &str) -> Result<f64, DynamapError> {
+    j.get(key).as_f64().ok_or_else(|| bad(key))
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize, DynamapError> {
+    j.get(key).as_usize().ok_or_else(|| bad(key))
+}
+
+fn req_u64(j: &Json, key: &str) -> Result<u64, DynamapError> {
+    j.get(key).as_u64().ok_or_else(|| bad(key))
+}
+
+fn algo_to_json(a: Algo) -> Json {
+    match a {
+        Algo::Im2col => Json::obj(vec![("kind", Json::str("im2col"))]),
+        Algo::Kn2row => Json::obj(vec![("kind", Json::str("kn2row"))]),
+        Algo::Winograd { m, r } => Json::obj(vec![
+            ("kind", Json::str("winograd")),
+            ("m", Json::num(m as f64)),
+            ("r", Json::num(r as f64)),
+        ]),
+        Algo::WinogradStrided { m, r } => Json::obj(vec![
+            ("kind", Json::str("winograd-strided")),
+            ("m", Json::num(m as f64)),
+            ("r", Json::num(r as f64)),
+        ]),
+    }
+}
+
+fn algo_from_json(j: &Json) -> Result<Algo, DynamapError> {
+    let kind = j.get("kind").as_str().ok_or_else(|| bad("algo.kind"))?;
+    match kind {
+        "im2col" => Ok(Algo::Im2col),
+        "kn2row" => Ok(Algo::Kn2row),
+        "winograd" | "winograd-strided" => {
+            let m = req_usize(j, "m")?;
+            let r = req_usize(j, "r")?;
+            Ok(if kind == "winograd" {
+                Algo::Winograd { m, r }
+            } else {
+                Algo::WinogradStrided { m, r }
+            })
+        }
+        other => Err(DynamapError::Artifact(format!("unknown algorithm kind '{other}'"))),
+    }
+}
+
+fn dataflow_from_str(s: &str) -> Result<Dataflow, DynamapError> {
+    match s {
+        "NS" => Ok(Dataflow::NS),
+        "WS" => Ok(Dataflow::WS),
+        "IS" => Ok(Dataflow::IS),
+        other => Err(DynamapError::Artifact(format!("unknown dataflow '{other}'"))),
+    }
+}
+
+fn cost_to_json(c: &ConvCost) -> Json {
+    let (a, b, cc, calls) = c.gemm;
+    Json::obj(vec![
+        ("algo", algo_to_json(c.algo)),
+        ("dataflow", Json::str(c.dataflow.name())),
+        ("cycles", Json::num(c.cycles as f64)),
+        ("seconds", Json::num(c.seconds)),
+        ("macs", Json::num(c.macs as f64)),
+        ("utilization", Json::num(c.utilization)),
+        (
+            "gemm",
+            Json::arr([
+                Json::num(a as f64),
+                Json::num(b as f64),
+                Json::num(cc as f64),
+                Json::num(calls as f64),
+            ]),
+        ),
+    ])
+}
+
+fn cost_from_json(j: &Json) -> Result<ConvCost, DynamapError> {
+    let g = j.get("gemm");
+    let gemm = (
+        g.at(0).as_usize().ok_or_else(|| bad("gemm[0]"))?,
+        g.at(1).as_usize().ok_or_else(|| bad("gemm[1]"))?,
+        g.at(2).as_usize().ok_or_else(|| bad("gemm[2]"))?,
+        g.at(3).as_usize().ok_or_else(|| bad("gemm[3]"))?,
+    );
+    Ok(ConvCost {
+        algo: algo_from_json(j.get("algo"))?,
+        dataflow: dataflow_from_str(
+            j.get("dataflow").as_str().ok_or_else(|| bad("dataflow"))?,
+        )?,
+        cycles: req_u64(j, "cycles")?,
+        seconds: req_f64(j, "seconds")?,
+        macs: req_u64(j, "macs")?,
+        utilization: req_f64(j, "utilization")?,
+        gemm,
+    })
+}
+
+fn mapping_to_json(m: &MappingResult) -> Json {
+    let layers = m
+        .layers
+        .iter()
+        .map(|l| {
+            Json::obj(vec![
+                ("node", Json::num(l.node as f64)),
+                ("name", Json::str(l.name.clone())),
+                ("cost", cost_to_json(&l.cost)),
+            ])
+        })
+        .collect::<Vec<_>>();
+    Json::obj(vec![
+        (
+            "assignment",
+            Json::arr(m.assignment.iter().map(|&a| Json::num(a as f64))),
+        ),
+        ("total_sec", Json::num(m.total_sec)),
+        ("compute_sec", Json::num(m.compute_sec)),
+        ("transition_sec", Json::num(m.transition_sec)),
+        ("layers", Json::Arr(layers)),
+    ])
+}
+
+fn mapping_from_json(j: &Json) -> Result<MappingResult, DynamapError> {
+    let assignment = j
+        .get("assignment")
+        .as_arr()
+        .ok_or_else(|| bad("assignment"))?
+        .iter()
+        .map(|v| v.as_usize().ok_or_else(|| bad("assignment[]")))
+        .collect::<Result<Vec<_>, _>>()?;
+    let mut layers = Vec::new();
+    for lj in j.get("layers").as_arr().ok_or_else(|| bad("layers"))? {
+        layers.push(LayerAssignment {
+            node: req_usize(lj, "node")?,
+            name: req_str(lj, "name")?,
+            cost: cost_from_json(lj.get("cost"))?,
+        });
+    }
+    Ok(MappingResult {
+        assignment,
+        total_sec: req_f64(j, "total_sec")?,
+        compute_sec: req_f64(j, "compute_sec")?,
+        transition_sec: req_f64(j, "transition_sec")?,
+        layers,
+    })
+}
+
+fn plan_to_json(p: &Plan) -> Json {
+    Json::obj(vec![
+        ("cnn", Json::str(p.cnn_name.clone())),
+        ("p1", Json::num(p.p1 as f64)),
+        ("p2", Json::num(p.p2 as f64)),
+        ("tau_sec", Json::num(p.tau_sec)),
+        ("latency_ms", Json::num(p.total_latency_ms)),
+        ("throughput_gops", Json::num(p.throughput_gops)),
+        ("mapping", mapping_to_json(&p.mapping)),
+    ])
+}
+
+fn plan_from_json(j: &Json) -> Result<Plan, DynamapError> {
+    Ok(Plan {
+        cnn_name: req_str(j, "cnn")?,
+        p1: req_usize(j, "p1")?,
+        p2: req_usize(j, "p2")?,
+        tau_sec: req_f64(j, "tau_sec")?,
+        total_latency_ms: req_f64(j, "latency_ms")?,
+        throughput_gops: req_f64(j, "throughput_gops")?,
+        mapping: mapping_from_json(j.get("mapping"))?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::Device;
+    use crate::graph::zoo;
+
+    fn compile_mini() -> PlanArtifact {
+        Compiler::new()
+            .device(Device::small_edge())
+            .compile(&zoo::mini_inception())
+            .unwrap()
+    }
+
+    #[test]
+    fn round_trip_preserves_everything() {
+        let a = compile_mini();
+        // through the string form, exactly as it hits disk
+        let text = a.to_json().pretty();
+        let b = PlanArtifact::from_json(&Json::parse(&text).unwrap()).unwrap();
+
+        assert_eq!(b.version, PlanArtifact::SCHEMA_VERSION);
+        assert_eq!(b.model, a.model);
+        assert_eq!(b.device, a.device);
+        assert_eq!(b.fingerprint, a.fingerprint);
+        // architecture + latency survive bit-exactly (f64 Display is
+        // shortest-round-trip)
+        assert_eq!((b.plan.p1, b.plan.p2), (a.plan.p1, a.plan.p2));
+        assert_eq!(b.plan.tau_sec, a.plan.tau_sec);
+        assert_eq!(b.plan.total_latency_ms, a.plan.total_latency_ms);
+        assert_eq!(b.plan.throughput_gops, a.plan.throughput_gops);
+        assert_eq!(b.plan.mapping.total_sec, a.plan.mapping.total_sec);
+        assert_eq!(b.plan.mapping.compute_sec, a.plan.mapping.compute_sec);
+        assert_eq!(b.plan.mapping.transition_sec, a.plan.mapping.transition_sec);
+        assert_eq!(b.plan.mapping.assignment, a.plan.mapping.assignment);
+        // the full per-layer algorithm/dataflow mapping
+        assert_eq!(b.plan.mapping.layers.len(), a.plan.mapping.layers.len());
+        for (x, y) in a.plan.mapping.layers.iter().zip(&b.plan.mapping.layers) {
+            assert_eq!(x.node, y.node);
+            assert_eq!(x.name, y.name);
+            assert_eq!(x.cost, y.cost);
+        }
+    }
+
+    // (on-disk save/load round-trip is covered at the crate surface in
+    // rust/tests/dse_pipeline.rs::plan_artifact_roundtrip_and_cache)
+
+    #[test]
+    fn rejects_future_schema_and_garbage() {
+        let a = compile_mini();
+        if let Json::Obj(mut m) = a.to_json() {
+            m.insert("version".into(), Json::num(999.0));
+            let e = PlanArtifact::from_json(&Json::Obj(m)).unwrap_err();
+            assert!(matches!(e, DynamapError::Artifact(_)), "{e}");
+        } else {
+            panic!("artifact json is not an object");
+        }
+        let e = PlanArtifact::from_json(&Json::parse("{}").unwrap()).unwrap_err();
+        assert!(matches!(e, DynamapError::Artifact(_)), "{e}");
+        assert!(PlanArtifact::load("/no/such/plan.json").is_err());
+    }
+
+    #[test]
+    fn cache_hit_skips_dse() {
+        let cnn = zoo::mini_inception();
+        let compiler = Compiler::new().device(Device::small_edge());
+        let dir = std::env::temp_dir().join(format!("dynamap_cache_{}", std::process::id()));
+        let cache = PlanCache::new(&dir);
+        std::fs::remove_file(cache.path_for(&compiler, &cnn.name)).ok();
+
+        let (a, cached) = cache.load_or_compile(&compiler, &cnn).unwrap();
+        assert!(!cached);
+        assert_eq!(compiler.compile_count(), 1);
+
+        // second resolution: served from disk, no CostGraph::build runs
+        let (b, cached) = cache.load_or_compile(&compiler, &cnn).unwrap();
+        assert!(cached);
+        assert_eq!(compiler.compile_count(), 1, "cached path must not re-run the DSE");
+        assert_eq!(b.plan.total_latency_ms, a.plan.total_latency_ms);
+        assert_eq!(b.plan.mapping.assignment, a.plan.mapping.assignment);
+
+        // a different configuration misses the cache
+        let other = Compiler::new().device(Device::small_edge()).wino(4, 3);
+        assert!(cache.load(&other, &cnn.name).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

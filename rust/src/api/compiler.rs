@@ -1,0 +1,391 @@
+//! [`Compiler`] — the offline stage of the staged pipeline.
+//!
+//! A fluent builder over the DYNAMAP DSE flow (Fig. 7): configure the
+//! target device, Winograd tile, mapping policy and search bounds, then
+//! [`Compiler::compile`] a CNN into a versioned [`PlanArtifact`]. The
+//! expensive work (Algorithm 1 sweep + cost-graph construction + PBQP
+//! solve) happens exactly once per `compile` call; the artifact is a
+//! cacheable value keyed by `(model, device, config)` — see
+//! [`crate::api::artifact::PlanCache`].
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use super::artifact::PlanArtifact;
+use super::error::DynamapError;
+use crate::cost::gemm::Dataflow;
+use crate::cost::graph_build::{CostGraph, Policy};
+use crate::cost::Device;
+use crate::dse::algo1::{identify_parameters_bounded, Algo1Result};
+use crate::dse::{DseConfig, Plan};
+use crate::graph::Cnn;
+
+/// The offline compiler: device + model hyper-parameters + mapping
+/// policy, evaluated once into a [`PlanArtifact`].
+#[derive(Debug, Clone)]
+pub struct Compiler {
+    config: DseConfig,
+    policy: Option<Policy>,
+    fixed_shape: Option<(usize, usize)>,
+    /// `true` once the caller has set explicit `P_SA1` bounds, so a
+    /// later [`Compiler::device`] call does not clobber them.
+    bounds_overridden: bool,
+    /// Probe: how many times this compiler (and its clones) actually ran
+    /// the DSE. Shared across clones so cache tests can assert that a
+    /// cached path performed zero compilations.
+    compiles: Arc<AtomicUsize>,
+}
+
+impl Default for Compiler {
+    fn default() -> Compiler {
+        Compiler::new()
+    }
+}
+
+impl Compiler {
+    /// A compiler targeting the paper's evaluation setup (Alveo U200,
+    /// 6084-DSP cap, F(2×2, 3×3), optimal PBQP mapping).
+    pub fn new() -> Compiler {
+        Compiler::from_config(DseConfig::alveo_u200())
+    }
+
+    /// Wrap an explicit [`DseConfig`] (optimal mapping by default).
+    pub fn from_config(config: DseConfig) -> Compiler {
+        Compiler {
+            config,
+            policy: None,
+            fixed_shape: None,
+            bounds_overridden: false,
+            compiles: Arc::new(AtomicUsize::new(0)),
+        }
+    }
+
+    /// The underlying configuration.
+    pub fn config(&self) -> &DseConfig {
+        &self.config
+    }
+
+    /// Retarget to a different device; resets the Algorithm-1 sweep
+    /// bounds to `P_SA1 ∈ [2, dsp_cap]` unless [`Compiler::p1_bounds`]
+    /// was already called on this builder.
+    pub fn device(mut self, device: Device) -> Compiler {
+        let cap = device.dsp_cap;
+        self.config.device = device;
+        if !self.bounds_overridden {
+            self.config.p1_lo = 2;
+            self.config.p1_hi = cap;
+        }
+        self
+    }
+
+    /// Winograd tile: `F(m×m, r×r)`.
+    pub fn wino(mut self, m: usize, r: usize) -> Compiler {
+        self.config.wino_m = m;
+        self.config.wino_r = r;
+        self
+    }
+
+    /// Enable the strided-Winograd future-work extension (§7).
+    pub fn strided_winograd(mut self, on: bool) -> Compiler {
+        self.config.strided_winograd = on;
+        self
+    }
+
+    /// Force a single dataflow (the NS-only baselines of Figs. 9/10).
+    pub fn force_dataflow(mut self, df: Dataflow) -> Compiler {
+        self.config.force_dataflow = Some(df);
+        self
+    }
+
+    /// `P_SA1` sweep bounds for Algorithm 1. Survives a later
+    /// [`Compiler::device`] call.
+    pub fn p1_bounds(mut self, lo: usize, hi: usize) -> Compiler {
+        self.config.p1_lo = lo;
+        self.config.p1_hi = hi;
+        self.bounds_overridden = true;
+        self
+    }
+
+    /// Toggle DSE step 5's consecutive-layer on-chip hand-offs.
+    pub fn sram_fuse(mut self, on: bool) -> Compiler {
+        self.config.opts.sram_fuse = on;
+        self
+    }
+
+    /// Toggle overlapping weight streaming with compute.
+    pub fn overlap_weight_load(mut self, on: bool) -> Compiler {
+        self.config.opts.overlap_weight_load = on;
+        self
+    }
+
+    /// Map with a fixed baseline policy (bl3–bl5/greedy of §6.1.2)
+    /// instead of the optimal PBQP solve.
+    pub fn policy(mut self, policy: Policy) -> Compiler {
+        self.policy = Some(policy);
+        self
+    }
+
+    /// Restore the default optimal PBQP mapping.
+    pub fn optimal(mut self) -> Compiler {
+        self.policy = None;
+        self
+    }
+
+    /// Skip Algorithm 1 and use a fixed systolic-array shape (the
+    /// square-NS baseline bl1 of Figs. 9/10).
+    pub fn fixed_shape(mut self, p1: usize, p2: usize) -> Compiler {
+        self.fixed_shape = Some((p1, p2));
+        self
+    }
+
+    /// How many times this compiler (including clones handed to a
+    /// session builder) ran the full DSE. Plan-cache tests use this to
+    /// assert the cached path never rebuilds the cost graph.
+    pub fn compile_count(&self) -> usize {
+        self.compiles.load(Ordering::Relaxed)
+    }
+
+    /// Stable fingerprint of everything that influences the produced
+    /// plan: device meta data, hyper-parameters, search bounds, policy
+    /// and fixed shape. Two compilers with equal fingerprints produce
+    /// identical plans for the same model, so the fingerprint keys the
+    /// on-disk plan cache.
+    pub fn fingerprint(&self) -> String {
+        let c = &self.config;
+        let d = &c.device;
+        let policy = match self.policy {
+            None => "optimal",
+            Some(Policy::Im2colOnly) => "im2col-only",
+            Some(Policy::Kn2rowApplied) => "kn2row-applied",
+            Some(Policy::WinoApplied) => "wino-applied",
+            Some(Policy::Greedy) => "greedy",
+        };
+        let df = match c.force_dataflow {
+            None => "-".to_string(),
+            Some(df) => df.name().to_string(),
+        };
+        let shape = match self.fixed_shape {
+            None => "-".to_string(),
+            Some((p1, p2)) => format!("{p1}x{p2}"),
+        };
+        let desc = format!(
+            "{}|{}|{}|{}|{}|{}|{}|{}|wino{}x{}|strided{}|df{}|owl{}|fuse{}|p1[{},{}]|{}|{}",
+            d.name,
+            d.dsp_cap,
+            d.freq_mhz,
+            d.ddr_gbps,
+            d.burst_len,
+            d.sram_bytes,
+            d.pool_units,
+            policy,
+            c.wino_m,
+            c.wino_r,
+            c.strided_winograd,
+            df,
+            c.opts.overlap_weight_load,
+            c.opts.sram_fuse,
+            c.p1_lo,
+            c.p1_hi,
+            shape,
+            PlanArtifact::SCHEMA_VERSION,
+        );
+        format!("{:016x}", fnv1a(&desc))
+    }
+
+    /// File name a cached plan for `model` is stored under.
+    pub fn cache_file_name(&self, model: &str) -> String {
+        format!(
+            "plan__{}__{}__{}.json",
+            sanitize(model),
+            sanitize(&self.config.device.name),
+            self.fingerprint()
+        )
+    }
+
+    /// Algorithm 1 only (Fig. 7 step ①).
+    pub fn identify(&self, cnn: &Cnn) -> Result<Algo1Result, DynamapError> {
+        self.check_bounds()?;
+        Ok(identify_parameters_bounded(
+            cnn,
+            &self.config.cost_model(),
+            self.config.device.dsp_cap,
+            self.config.p1_lo,
+            self.config.p1_hi,
+        ))
+    }
+
+    /// Cost-graph construction for a fixed array shape (Fig. 7 step ②).
+    pub fn build_graph(&self, cnn: &Cnn, p1: usize, p2: usize) -> CostGraph {
+        CostGraph::build(
+            cnn,
+            &self.config.cost_model(),
+            &self.config.transition_model(),
+            p1,
+            p2,
+            self.config.opts,
+        )
+    }
+
+    /// Run the staged DSE (Fig. 7 steps ①–③) and package the result as
+    /// a versioned, cacheable [`PlanArtifact`].
+    pub fn compile(&self, cnn: &Cnn) -> Result<PlanArtifact, DynamapError> {
+        cnn.validate().map_err(DynamapError::Graph)?;
+        let arch = match self.fixed_shape {
+            Some((p1, p2)) => {
+                if p1 == 0 || p2 == 0 {
+                    return Err(DynamapError::Dse(format!(
+                        "fixed shape {p1}x{p2} has a zero dimension"
+                    )));
+                }
+                Algo1Result { p1, p2, tau_sec: 0.0, dataflow: Default::default() }
+            }
+            None => self.identify(cnn)?,
+        };
+        let graph = self.build_graph(cnn, arch.p1, arch.p2);
+        let mapping = match self.policy {
+            None => graph.solve(cnn),
+            Some(p) => graph.solve_policy(cnn, p),
+        };
+        self.compiles.fetch_add(1, Ordering::Relaxed);
+
+        let total_latency_ms = mapping.total_sec * 1e3;
+        let throughput_gops = cnn.total_gops() / mapping.total_sec;
+        let plan = Plan {
+            cnn_name: cnn.name.clone(),
+            p1: arch.p1,
+            p2: arch.p2,
+            tau_sec: arch.tau_sec,
+            mapping,
+            total_latency_ms,
+            throughput_gops,
+        };
+        Ok(PlanArtifact::new(
+            cnn.name.clone(),
+            self.config.device.name.clone(),
+            self.fingerprint(),
+            plan,
+        ))
+    }
+
+    fn check_bounds(&self) -> Result<(), DynamapError> {
+        let c = &self.config;
+        if c.device.dsp_cap == 0 {
+            return Err(DynamapError::Dse("device has a zero DSP budget".into()));
+        }
+        if c.p1_lo == 0 {
+            return Err(DynamapError::Dse("P_SA1 lower bound must be >= 1".into()));
+        }
+        if c.p1_lo > c.p1_hi.min(c.device.dsp_cap) {
+            return Err(DynamapError::Dse(format!(
+                "empty P_SA sweep: lo {} > min(hi {}, dsp_cap {})",
+                c.p1_lo, c.p1_hi, c.device.dsp_cap
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Make a model/device name safe for use in a file name (shared with
+/// the emit package writer).
+pub(crate) fn sanitize(s: &str) -> String {
+    s.chars().map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '.' { c } else { '_' }).collect()
+}
+
+fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::zoo;
+
+    fn small() -> Compiler {
+        Compiler::new().device(Device::small_edge())
+    }
+
+    #[test]
+    fn compiles_mini_end_to_end() {
+        let c = small();
+        let a = c.compile(&zoo::mini_inception()).unwrap();
+        assert!(a.plan.total_latency_ms > 0.0);
+        assert!(a.plan.throughput_gops > 0.0);
+        assert_eq!(a.plan.mapping.layers.len(), 7);
+        assert_eq!(a.model, "mini-inception");
+        assert_eq!(a.device, "small-edge");
+        assert_eq!(c.compile_count(), 1);
+    }
+
+    #[test]
+    fn optimal_beats_every_policy() {
+        let cnn = zoo::mini_inception();
+        let opt = small().compile(&cnn).unwrap().plan.total_latency_ms;
+        for p in
+            [Policy::Im2colOnly, Policy::Kn2rowApplied, Policy::WinoApplied, Policy::Greedy]
+        {
+            let bl = small().policy(p).compile(&cnn).unwrap().plan.total_latency_ms;
+            assert!(opt <= bl + 1e-9, "OPT {opt} > {p:?} {bl}");
+        }
+    }
+
+    #[test]
+    fn fixed_shape_skips_algorithm1() {
+        let a = small().fixed_shape(16, 16).compile(&zoo::mini_inception()).unwrap();
+        assert_eq!((a.plan.p1, a.plan.p2), (16, 16));
+        assert_eq!(a.plan.tau_sec, 0.0);
+    }
+
+    #[test]
+    fn fingerprint_tracks_config() {
+        let base = Compiler::new();
+        assert_eq!(base.fingerprint(), Compiler::new().fingerprint());
+        assert_ne!(base.fingerprint(), Compiler::new().wino(4, 3).fingerprint());
+        assert_ne!(
+            base.fingerprint(),
+            Compiler::new().policy(Policy::Greedy).fingerprint()
+        );
+        assert_ne!(base.fingerprint(), Compiler::new().fixed_shape(78, 78).fingerprint());
+        assert_ne!(
+            base.fingerprint(),
+            Compiler::new().device(Device::small_edge()).fingerprint()
+        );
+    }
+
+    #[test]
+    fn explicit_bounds_survive_device_in_any_order() {
+        let a = Compiler::new().p1_bounds(32, 128).device(Device::small_edge());
+        let b = Compiler::new().device(Device::small_edge()).p1_bounds(32, 128);
+        assert_eq!((a.config().p1_lo, a.config().p1_hi), (32, 128));
+        assert_eq!(a.fingerprint(), b.fingerprint());
+    }
+
+    #[test]
+    fn cache_file_name_is_path_safe() {
+        let name = Compiler::new().cache_file_name("my/model v2");
+        assert!(!name.contains('/') && !name.contains(' '), "{name}");
+        assert!(name.ends_with(".json"));
+    }
+
+    #[test]
+    fn degenerate_bounds_are_typed_errors() {
+        let cnn = zoo::mini_inception();
+        let e = small().p1_bounds(0, 8).compile(&cnn).unwrap_err();
+        assert!(matches!(e, DynamapError::Dse(_)), "{e}");
+        let e = small().p1_bounds(64, 8).compile(&cnn).unwrap_err();
+        assert!(matches!(e, DynamapError::Dse(_)), "{e}");
+        let e = small().fixed_shape(0, 8).compile(&cnn).unwrap_err();
+        assert!(matches!(e, DynamapError::Dse(_)), "{e}");
+    }
+
+    #[test]
+    fn mapping_mixes_algorithms_on_googlenet() {
+        // the paper's whole point: a single algorithm is not optimal
+        let a = Compiler::new().compile(&zoo::googlenet()).unwrap();
+        assert!(a.plan.algo_histogram().len() >= 2);
+    }
+}

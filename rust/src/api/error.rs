@@ -1,0 +1,132 @@
+//! [`DynamapError`] — the crate-wide typed error.
+//!
+//! Every fallible operation on the public `Compiler → PlanArtifact →
+//! Session` pipeline (and the lower-level `dse`, `runtime`, `coordinator`
+//! and `emit` entry points it subsumes) returns `Result<_, DynamapError>`
+//! instead of the stringly-typed `Result<_, String>` of the first
+//! release. Variants are grouped by the subsystem that raised them so
+//! callers can branch on failure class without parsing messages.
+
+use crate::util::json::JsonError;
+use std::fmt;
+use std::path::PathBuf;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, DynamapError>;
+
+/// The typed error for every DYNAMAP pipeline stage.
+#[derive(Debug)]
+pub enum DynamapError {
+    /// Filesystem failure, with the path that was being touched.
+    Io { path: PathBuf, source: std::io::Error },
+    /// JSON syntax error (manifest, CNN config or plan artifact).
+    Json { path: Option<PathBuf>, source: JsonError },
+    /// The AOT artifact manifest violates its contract (missing layer,
+    /// bad field, weight-count mismatch, …).
+    Manifest(String),
+    /// PJRT runtime failure (client creation, HLO parse/compile,
+    /// execution, result transfer).
+    Runtime(String),
+    /// CNN graph construction or validation failure.
+    Graph(String),
+    /// DSE configuration or search failure (empty `P_SA` sweep,
+    /// degenerate bounds, …).
+    Dse(String),
+    /// Contradictory or invalid builder configuration.
+    Config(String),
+    /// Tensor shape mismatch on the serving path.
+    Shape { context: String, expected: usize, got: usize },
+    /// The artifact manifest names a model the zoo does not know.
+    UnknownModel(String),
+    /// A plan artifact violates the versioned schema.
+    Artifact(String),
+}
+
+impl DynamapError {
+    /// Wrap an I/O error with the path it occurred on.
+    pub fn io(path: impl Into<PathBuf>, source: std::io::Error) -> DynamapError {
+        DynamapError::Io { path: path.into(), source }
+    }
+
+    /// Wrap a JSON parse error with the file it came from.
+    pub fn json_in(path: impl Into<PathBuf>, source: JsonError) -> DynamapError {
+        DynamapError::Json { path: Some(path.into()), source }
+    }
+}
+
+impl fmt::Display for DynamapError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DynamapError::Io { path, source } => {
+                write!(f, "io error on {}: {}", path.display(), source)
+            }
+            DynamapError::Json { path: Some(p), source } => {
+                write!(f, "{}: {}", p.display(), source)
+            }
+            DynamapError::Json { path: None, source } => write!(f, "{}", source),
+            DynamapError::Manifest(m) => write!(f, "manifest error: {}", m),
+            DynamapError::Runtime(m) => write!(f, "runtime error: {}", m),
+            DynamapError::Graph(m) => write!(f, "graph error: {}", m),
+            DynamapError::Dse(m) => write!(f, "dse error: {}", m),
+            DynamapError::Config(m) => write!(f, "config error: {}", m),
+            DynamapError::Shape { context, expected, got } => {
+                write!(f, "shape error: {} expected {} elements, got {}", context, expected, got)
+            }
+            DynamapError::UnknownModel(m) => {
+                write!(f, "unknown model '{}': not in the zoo registry", m)
+            }
+            DynamapError::Artifact(m) => write!(f, "plan artifact error: {}", m),
+        }
+    }
+}
+
+impl std::error::Error for DynamapError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            DynamapError::Io { source, .. } => Some(source),
+            DynamapError::Json { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+impl From<JsonError> for DynamapError {
+    fn from(e: JsonError) -> DynamapError {
+        DynamapError::Json { path: None, source: e }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::error::Error;
+
+    fn io_err(msg: &str) -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, msg)
+    }
+
+    #[test]
+    fn display_carries_context() {
+        let e = DynamapError::io("/tmp/x.json", io_err("denied"));
+        let s = e.to_string();
+        assert!(s.contains("/tmp/x.json"), "{s}");
+        assert!(s.contains("denied"), "{s}");
+
+        let e = DynamapError::Shape { context: "input".into(), expected: 1024, got: 7 };
+        let s = e.to_string();
+        assert!(s.contains("1024") && s.contains("7"), "{s}");
+
+        let e = DynamapError::UnknownModel("resnet-99".into());
+        assert!(e.to_string().contains("resnet-99"));
+    }
+
+    #[test]
+    fn io_and_json_expose_source() {
+        let e = DynamapError::io("x", io_err("boom"));
+        assert!(e.source().is_some());
+        let e: DynamapError =
+            crate::util::json::Json::parse("{bad").unwrap_err().into();
+        assert!(e.source().is_some());
+        assert!(DynamapError::Dse("x".into()).source().is_none());
+    }
+}

@@ -1,0 +1,75 @@
+//! The DYNAMAP front door: a staged `Compiler → PlanArtifact → Session`
+//! pipeline with typed errors.
+//!
+//! DYNAMAP's value is the split between an *expensive offline* step —
+//! the DSE flow of Fig. 7 (Algorithm 1 + PBQP mapping) — and a *cheap
+//! online* step — per-layer execution on the reused overlay. This module
+//! makes that split the shape of the API:
+//!
+//! 1. [`Compiler`] — a fluent builder over the DSE. Configure device,
+//!    Winograd tile, policy and bounds; `compile(&cnn)` runs the search
+//!    exactly once.
+//! 2. [`PlanArtifact`] — the compiler's output: a versioned, fully
+//!    round-trippable serialization of the plan (`to_json`/`from_json`,
+//!    `save`/`load`), cacheable on disk via [`PlanCache`] keyed by
+//!    `(model, device, config)`.
+//! 3. [`Session`] — the serving layer: resolves the CNN from the AOT
+//!    manifest's `model` field through the zoo registry, loads (or
+//!    compiles) a plan, pre-compiles every chosen PJRT executable, and
+//!    serves [`Session::infer`] / [`Session::infer_batch`] with
+//!    per-request and aggregate [`LatencyStats`].
+//!
+//! Every fallible call returns the typed [`DynamapError`] instead of
+//! `Result<_, String>`.
+//!
+//! ```no_run
+//! use dynamap::api::{Compiler, PlanArtifact, Session};
+//! use dynamap::graph::zoo;
+//!
+//! // offline: compile once, persist the plan artifact
+//! let cnn = zoo::googlenet();
+//! let artifact = Compiler::new().wino(2, 3).compile(&cnn).unwrap();
+//! println!("latency = {:.3} ms", artifact.plan.total_latency_ms);
+//! artifact.save("plans/googlenet.json").unwrap();
+//!
+//! // ... later, possibly in another process: load without re-running DSE
+//! let artifact = PlanArtifact::load("plans/googlenet.json").unwrap();
+//!
+//! // online: serve requests against an AOT artifact directory
+//! let mut session = Session::builder("artifacts")
+//!     .plan_cache("plans")
+//!     .build()
+//!     .unwrap();
+//! let input = dynamap::runtime::TensorBuf::zeros(vec![4, 16, 16]);
+//! let (outputs, metrics) = session.infer_batch(&[input]).unwrap();
+//! println!("{} outputs, {}", outputs.len(), metrics.stats.summary());
+//! ```
+//!
+//! ## Migrating from the 0.1 API
+//!
+//! The old entry points remain as thin deprecated shims for one
+//! release. The shims preserve the call shape, not the exact types:
+//! their error type is now [`DynamapError`] (the stringly-typed
+//! `Result<_, String>` is gone everywhere), and `InferenceEngine`'s
+//! former public fields are accessor methods:
+//!
+//! * `dse::Dse::{run, run_policy, run_fixed_shape}` →
+//!   [`Compiler::compile`] (with [`Compiler::policy`] /
+//!   [`Compiler::fixed_shape`]).
+//! * `coordinator::InferenceEngine` / `EnginePolicy` →
+//!   [`Session::builder`] (with [`SessionBuilder::policy`] /
+//!   [`SessionBuilder::algo_map`]).
+
+pub mod artifact;
+pub mod compiler;
+pub mod error;
+pub mod session;
+
+pub use artifact::{PlanArtifact, PlanCache};
+pub use compiler::Compiler;
+pub use error::{DynamapError, Result};
+pub use session::{BatchMetrics, InferMetrics, Session, SessionBuilder};
+
+pub use crate::coordinator::metrics::LatencyStats;
+pub use crate::cost::graph_build::Policy;
+pub use crate::cost::Device;

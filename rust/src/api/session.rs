@@ -1,0 +1,419 @@
+//! [`Session`] — the online serving stage of the staged pipeline.
+//!
+//! A session owns everything the request path needs: the parsed AOT
+//! manifest, the CNN resolved from the manifest's `model` field via the
+//! zoo registry, a [`PlanArtifact`] (explicitly provided, loaded from a
+//! [`PlanCache`], or compiled on first construction), the PJRT runtime
+//! with every chosen executable pre-compiled, and pre-loaded weights.
+//! Inference never re-runs the DSE: the plan is resolved once at build
+//! time, mirroring the paper's split between the offline mapping flow
+//! and the reused overlay.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use super::artifact::{PlanArtifact, PlanCache};
+use super::compiler::Compiler;
+use super::error::DynamapError;
+use crate::algos::tensor::Tensor;
+use crate::coordinator::metrics::LatencyStats;
+use crate::cost::conv::Algo;
+use crate::cost::graph_build::Policy;
+use crate::graph::layer::Op;
+use crate::graph::{zoo, Cnn};
+use crate::overlay::pooling;
+use crate::runtime::{Manifest, PjrtRuntime, TensorBuf};
+
+/// Per-inference metrics.
+#[derive(Debug, Clone)]
+pub struct InferMetrics {
+    pub total_us: f64,
+    /// (layer name, algorithm, microseconds) per conv layer.
+    pub per_layer_us: Vec<(String, String, f64)>,
+}
+
+/// Metrics for one [`Session::infer_batch`] call.
+#[derive(Debug, Clone)]
+pub struct BatchMetrics {
+    /// Per-request metrics, in input order.
+    pub per_request: Vec<InferMetrics>,
+    /// Aggregate latency statistics over the batch.
+    pub stats: LatencyStats,
+}
+
+/// Builder for [`Session`].
+pub struct SessionBuilder {
+    artifacts_dir: String,
+    compiler: Compiler,
+    custom_map: Option<BTreeMap<String, String>>,
+    plan: Option<PlanArtifact>,
+    cache_dir: Option<PathBuf>,
+}
+
+impl SessionBuilder {
+    /// Use a pre-configured compiler for the (non-cached) compile path.
+    pub fn compiler(mut self, compiler: Compiler) -> SessionBuilder {
+        self.compiler = compiler;
+        self
+    }
+
+    /// Map with a fixed baseline policy instead of the optimal PBQP
+    /// solve (shorthand for configuring the compiler).
+    pub fn policy(mut self, policy: Policy) -> SessionBuilder {
+        self.compiler = self.compiler.policy(policy);
+        self
+    }
+
+    /// Skip the DSE entirely and use an explicit per-layer
+    /// `layer name → algorithm name` map.
+    pub fn algo_map(mut self, map: BTreeMap<String, String>) -> SessionBuilder {
+        self.custom_map = Some(map);
+        self
+    }
+
+    /// Serve from an explicit, previously saved plan artifact.
+    pub fn plan(mut self, artifact: PlanArtifact) -> SessionBuilder {
+        self.plan = Some(artifact);
+        self
+    }
+
+    /// Cache compiled plans under `dir`, keyed by
+    /// `(model, device, compiler fingerprint)`; later sessions with the
+    /// same key skip the DSE.
+    pub fn plan_cache(mut self, dir: impl AsRef<Path>) -> SessionBuilder {
+        self.cache_dir = Some(dir.as_ref().to_path_buf());
+        self
+    }
+
+    /// Resolve the plan, pre-compile every chosen executable and
+    /// pre-load weights.
+    pub fn build(self) -> Result<Session, DynamapError> {
+        let SessionBuilder { artifacts_dir, compiler, custom_map, plan, cache_dir } = self;
+        if custom_map.is_some() && (plan.is_some() || cache_dir.is_some()) {
+            return Err(DynamapError::Config(
+                "SessionBuilder: .algo_map bypasses the DSE and cannot be combined with \
+                 .plan or .plan_cache"
+                    .into(),
+            ));
+        }
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let cnn = zoo::by_name(&manifest.model)
+            .ok_or_else(|| DynamapError::UnknownModel(manifest.model.clone()))?;
+
+        // resolve the plan: explicit artifact > custom map > cache > compile
+        let (artifact, from_cache) = match (plan, &custom_map) {
+            (Some(a), _) => {
+                if a.model != cnn.name {
+                    return Err(DynamapError::Artifact(format!(
+                        "plan artifact targets model '{}' but the manifest serves '{}'",
+                        a.model, cnn.name
+                    )));
+                }
+                (Some(a), true)
+            }
+            (None, Some(_)) => (None, false),
+            (None, None) => match &cache_dir {
+                Some(dir) => {
+                    let (a, cached) =
+                        PlanCache::new(dir.clone()).load_or_compile(&compiler, &cnn)?;
+                    (Some(a), cached)
+                }
+                None => (Some(compiler.compile(&cnn)?), false),
+            },
+        };
+
+        let algo_map: BTreeMap<String, String> = match (&artifact, custom_map) {
+            (_, Some(m)) => m,
+            (Some(a), None) => a
+                .plan
+                .mapping
+                .layers
+                .iter()
+                .map(|l| {
+                    let algo = match l.cost.algo {
+                        Algo::Im2col => "im2col",
+                        Algo::Kn2row => "kn2row",
+                        Algo::Winograd { .. } | Algo::WinogradStrided { .. } => "winograd",
+                    };
+                    (l.name.clone(), algo.to_string())
+                })
+                .collect(),
+            (None, None) => unreachable!("plan or custom map is always resolved"),
+        };
+
+        // clamp to AOT'd algorithms, pre-compile executables, load weights
+        let mut runtime = PjrtRuntime::cpu()?;
+        let mut clamped = BTreeMap::new();
+        let mut weights = BTreeMap::new();
+        for layer in &manifest.layers {
+            let want = algo_map.get(&layer.name).map(|s| s.as_str()).unwrap_or("im2col");
+            let algo = if layer.algos.contains_key(want) { want } else { "im2col" };
+            let art = layer.algos.get(algo).ok_or_else(|| {
+                DynamapError::Manifest(format!("{}: no artifact for {algo}", layer.name))
+            })?;
+            runtime.load(&manifest.dir.join(art))?;
+            clamped.insert(layer.name.clone(), algo.to_string());
+            let w = manifest.weights(layer)?;
+            weights.insert(
+                layer.name.clone(),
+                TensorBuf::new(vec![layer.c_out, layer.c_in, layer.k1, layer.k2], w),
+            );
+        }
+        // every conv layer of the resolved model must be backed by the
+        // manifest, otherwise the serving loop would hit a missing
+        // weights/executable entry mid-inference
+        for id in cnn.conv_nodes() {
+            let name = &cnn.node(id).name;
+            if !clamped.contains_key(name) {
+                return Err(DynamapError::Manifest(format!(
+                    "manifest for model '{}' is missing conv layer '{}'",
+                    cnn.name, name
+                )));
+            }
+        }
+        Ok(Session {
+            manifest,
+            cnn,
+            artifact,
+            from_cache,
+            algo_map: clamped,
+            runtime,
+            weights,
+            aggregate: LatencyStats::new(),
+        })
+    }
+}
+
+/// The serving session: plan + runtime + weights, ready for requests.
+pub struct Session {
+    manifest: Manifest,
+    cnn: Cnn,
+    artifact: Option<PlanArtifact>,
+    from_cache: bool,
+    algo_map: BTreeMap<String, String>,
+    runtime: PjrtRuntime,
+    weights: BTreeMap<String, TensorBuf>,
+    aggregate: LatencyStats,
+}
+
+impl Session {
+    /// Start building a session over an AOT artifact directory.
+    pub fn builder(artifacts_dir: impl Into<String>) -> SessionBuilder {
+        SessionBuilder {
+            artifacts_dir: artifacts_dir.into(),
+            compiler: Compiler::new(),
+            custom_map: None,
+            plan: None,
+            cache_dir: None,
+        }
+    }
+
+    /// Build with all defaults (optimal mapping, fresh compile).
+    pub fn open(artifacts_dir: &str) -> Result<Session, DynamapError> {
+        Session::builder(artifacts_dir).build()
+    }
+
+    // -- introspection ---------------------------------------------------
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn cnn(&self) -> &Cnn {
+        &self.cnn
+    }
+
+    /// Model name served by this session.
+    pub fn model(&self) -> &str {
+        &self.cnn.name
+    }
+
+    /// The resolved plan (absent when an explicit algorithm map was
+    /// supplied).
+    pub fn plan(&self) -> Option<&PlanArtifact> {
+        self.artifact.as_ref()
+    }
+
+    /// `true` when the plan was served from a cache or supplied
+    /// explicitly — i.e. no DSE ran during session construction.
+    pub fn plan_from_cache(&self) -> bool {
+        self.from_cache
+    }
+
+    /// Clamped `layer → algorithm` map actually being served.
+    pub fn algo_map(&self) -> &BTreeMap<String, String> {
+        &self.algo_map
+    }
+
+    /// Executables currently compiled in the PJRT cache.
+    pub fn loaded_executables(&self) -> usize {
+        self.runtime.loaded_count()
+    }
+
+    /// Aggregate latency statistics across every request this session
+    /// has served.
+    pub fn stats(&self) -> &LatencyStats {
+        &self.aggregate
+    }
+
+    /// Expected input element count `(C · H1 · H2)`.
+    pub fn input_len(&self) -> usize {
+        let (c, h1, h2) = self.manifest.input;
+        c * h1 * h2
+    }
+
+    fn artifact_path(&self, layer: &str) -> Result<PathBuf, DynamapError> {
+        let algo = self.algo_map.get(layer).ok_or_else(|| {
+            DynamapError::Manifest(format!("no algorithm chosen for layer '{layer}'"))
+        })?;
+        let la = self.manifest.layer(layer).ok_or_else(|| {
+            DynamapError::Manifest(format!("manifest has no layer '{layer}'"))
+        })?;
+        let file = la.algos.get(algo).ok_or_else(|| {
+            DynamapError::Manifest(format!("layer '{layer}': no artifact for '{algo}'"))
+        })?;
+        Ok(self.manifest.dir.join(file))
+    }
+
+    // -- serving ---------------------------------------------------------
+
+    /// Run one inference. Input is `(C, H, W)` flattened f32.
+    pub fn infer(
+        &mut self,
+        input: &TensorBuf,
+    ) -> Result<(TensorBuf, InferMetrics), DynamapError> {
+        let t_total = Instant::now();
+        let mut per_layer = Vec::new();
+        let mut values: BTreeMap<usize, TensorBuf> = BTreeMap::new();
+        let order = self.cnn.topo_order();
+        let mut final_out = None;
+        for id in order {
+            let node = self.cnn.node(id).clone();
+            let preds = self.cnn.predecessors(id);
+            let out = match &node.op {
+                Op::Input { c, h1, h2 } => {
+                    if input.len() != c * h1 * h2 {
+                        return Err(DynamapError::Shape {
+                            context: "input".into(),
+                            expected: c * h1 * h2,
+                            got: input.len(),
+                        });
+                    }
+                    TensorBuf::new(vec![*c, *h1, *h2], input.data.clone())
+                }
+                Op::Conv(spec) => {
+                    let x = &values[&preds[0]];
+                    // disjoint field borrows: weights stay borrowed while
+                    // the runtime executes — no per-request weight copy
+                    let w = &self.weights[&node.name];
+                    let path = self.artifact_path(&node.name)?;
+                    let t0 = Instant::now();
+                    let out = self.runtime.execute(
+                        &path,
+                        &[x, w],
+                        vec![spec.c_out, spec.o1(), spec.o2()],
+                    )?;
+                    per_layer.push((
+                        node.name.clone(),
+                        self.algo_map[&node.name].clone(),
+                        t0.elapsed().as_secs_f64() * 1e6,
+                    ));
+                    out
+                }
+                Op::Pool(p) => {
+                    let x = &values[&preds[0]];
+                    let t = Tensor { c: p.c, h: p.h1, w: p.h2, data: x.data.clone() };
+                    let out = pooling::reference(&t, p);
+                    TensorBuf::new(vec![out.c, out.h, out.w], out.data)
+                }
+                Op::Concat { c_out, h1, h2 } => {
+                    let mut data = Vec::with_capacity(c_out * h1 * h2);
+                    for &p in &preds {
+                        data.extend_from_slice(&values[&p].data);
+                    }
+                    TensorBuf::new(vec![*c_out, *h1, *h2], data)
+                }
+                Op::Add { c, h1, h2 } => {
+                    let a = &values[&preds[0]];
+                    let b = &values[&preds[1]];
+                    let data = a.data.iter().zip(&b.data).map(|(x, y)| x + y).collect();
+                    TensorBuf::new(vec![*c, *h1, *h2], data)
+                }
+                Op::Fc { .. } => {
+                    return Err(DynamapError::Runtime(
+                        "FC layers are not part of the artifact set".into(),
+                    ))
+                }
+                Op::Output => {
+                    final_out = Some(values[&preds[0]].clone());
+                    continue;
+                }
+            };
+            values.insert(id, out);
+        }
+        let out = final_out
+            .ok_or_else(|| DynamapError::Graph("no output node reached".into()))?;
+        let m = InferMetrics {
+            total_us: t_total.elapsed().as_secs_f64() * 1e6,
+            per_layer_us: per_layer,
+        };
+        self.aggregate.push(m.total_us);
+        Ok((out, m))
+    }
+
+    /// Run a batch of requests sequentially on the shared overlay (the
+    /// paper's single-sample low-latency regime), collecting per-request
+    /// and aggregate latency statistics.
+    pub fn infer_batch(
+        &mut self,
+        inputs: &[TensorBuf],
+    ) -> Result<(Vec<TensorBuf>, BatchMetrics), DynamapError> {
+        let mut outputs = Vec::with_capacity(inputs.len());
+        let mut per_request = Vec::with_capacity(inputs.len());
+        let mut stats = LatencyStats::new();
+        for input in inputs {
+            let (out, m) = self.infer(input)?;
+            stats.push(m.total_us);
+            outputs.push(out);
+            per_request.push(m);
+        }
+        Ok((outputs, BatchMetrics { per_request, stats }))
+    }
+
+    /// Validate against the Python-side golden pair; returns the max
+    /// absolute error.
+    pub fn validate_golden(&mut self) -> Result<f32, DynamapError> {
+        let (gi, go) = self.manifest.golden()?;
+        let (c, h1, h2) = self.manifest.input;
+        let input = TensorBuf::new(vec![c, h1, h2], gi);
+        let (out, _) = self.infer(&input)?;
+        if out.data.len() != go.len() {
+            return Err(DynamapError::Shape {
+                context: "golden output".into(),
+                expected: go.len(),
+                got: out.data.len(),
+            });
+        }
+        let mut max_err = 0.0f32;
+        for (a, b) in out.data.iter().zip(&go) {
+            max_err = max_err.max((a - b).abs());
+        }
+        Ok(max_err)
+    }
+
+    /// Latency benchmark: `n` sequential inferences on the golden input
+    /// (first call warms the executable cache).
+    pub fn bench(&mut self, n: usize) -> Result<LatencyStats, DynamapError> {
+        let (gi, _) = self.manifest.golden()?;
+        let (c, h1, h2) = self.manifest.input;
+        let input = TensorBuf::new(vec![c, h1, h2], gi);
+        let mut stats = LatencyStats::new();
+        self.infer(&input)?; // warm-up
+        for _ in 0..n {
+            let (_, m) = self.infer(&input)?;
+            stats.push(m.total_us);
+        }
+        Ok(stats)
+    }
+}

@@ -2,15 +2,16 @@
 //! stall-free PEs, dataflow switching, rectangular arrays, PBQP vs
 //! greedy, transition-aware mapping, Winograd tile size, SRAM fusion.
 
+use crate::api::Compiler;
 use crate::cost::gemm::Dataflow;
 use crate::cost::graph_build::Policy;
-use crate::dse::{Dse, DseConfig};
+use crate::dse::DseConfig;
 use crate::graph::zoo;
 use crate::util::table::{fnum, Table};
 
 fn latency(cfg: DseConfig, model: &str) -> f64 {
     let cnn = zoo::by_name(model).unwrap();
-    Dse::new(cfg).run(&cnn).unwrap().total_latency_ms
+    Compiler::from_config(cfg).compile(&cnn).unwrap().plan.total_latency_ms
 }
 
 pub fn run() -> Vec<Table> {
@@ -33,9 +34,9 @@ pub fn run() -> Vec<Table> {
     {
         let cnn_g = zoo::googlenet();
         let cnn_i = zoo::inception_v4();
-        let dse = Dse::new(base.clone());
-        let arch_g = dse.identify(&cnn_g);
-        let arch_i = dse.identify(&cnn_i);
+        let compiler = Compiler::from_config(base.clone());
+        let arch_g = compiler.identify(&cnn_g).unwrap();
+        let arch_i = compiler.identify(&cnn_i).unwrap();
         let mut cm = base.cost_model();
         cm.stall_free = false;
         let tm = base.transition_model();
@@ -77,9 +78,9 @@ pub fn run() -> Vec<Table> {
 
     // greedy vs optimal mapping
     {
-        let dse = Dse::new(base.clone());
-        let g = dse.run_policy(&zoo::googlenet(), Policy::Greedy).unwrap();
-        let i = dse.run_policy(&zoo::inception_v4(), Policy::Greedy).unwrap();
+        let greedy = Compiler::from_config(base.clone()).policy(Policy::Greedy);
+        let g = greedy.compile(&zoo::googlenet()).unwrap().plan;
+        let i = greedy.compile(&zoo::inception_v4()).unwrap().plan;
         t.row(vec![
             "greedy node-cost mapping (no PBQP)".into(),
             fnum(g.total_latency_ms, 3),

@@ -2,7 +2,7 @@
 //! ... is obtained within 2 seconds on an AMD 3700X cpu" — plus the
 //! O(N·d²) scaling of Theorem 4.1 on synthetic chains.
 
-use crate::dse::{Dse, DseConfig};
+use crate::api::Compiler;
 use crate::graph::zoo;
 use crate::pbqp::{solve_sp, Matrix, Problem};
 use crate::util::table::{fnum, Table};
@@ -30,12 +30,12 @@ pub fn run() -> Vec<Table> {
     );
     for model in ["googlenet", "inception-v4"] {
         let cnn = zoo::by_name(model).unwrap();
-        let dse = Dse::new(DseConfig::alveo_u200());
+        let compiler = Compiler::new();
         let t0 = Instant::now();
-        let arch = dse.identify(&cnn);
+        let arch = compiler.identify(&cnn).unwrap();
         let algo1_t = t0.elapsed();
         let t1 = Instant::now();
-        let g = dse.build_graph(&cnn, arch.p1, arch.p2);
+        let g = compiler.build_graph(&cnn, arch.p1, arch.p2);
         let build_t = t1.elapsed();
         let t2 = Instant::now();
         let _ = g.solve(&cnn);
@@ -72,10 +72,10 @@ mod tests {
     #[test]
     fn inception_mapping_under_2s() {
         let cnn = zoo::inception_v4();
-        let dse = Dse::new(DseConfig::alveo_u200());
-        let arch = dse.identify(&cnn);
+        let compiler = Compiler::new();
+        let arch = compiler.identify(&cnn).unwrap();
         let t0 = Instant::now();
-        let g = dse.build_graph(&cnn, arch.p1, arch.p2);
+        let g = compiler.build_graph(&cnn, arch.p1, arch.p2);
         let _ = g.solve(&cnn);
         let dt = t0.elapsed();
         assert!(

@@ -7,8 +7,9 @@
 //! Layers are grouped into their Inception/Reduction modules by name
 //! prefix, matching the x-axis of the paper's plots.
 
+use crate::api::Compiler;
 use crate::cost::graph_build::{MappingResult, Policy};
-use crate::dse::{Dse, DseConfig, Plan};
+use crate::dse::Plan;
 use crate::graph::Cnn;
 use crate::graph::zoo;
 use crate::util::table::{fnum, Table};
@@ -48,11 +49,12 @@ pub struct ModuleFig {
 
 pub fn compute(model: &str) -> ModuleFig {
     let cnn = zoo::by_name(model).expect("unknown model");
-    let dse = Dse::new(DseConfig::alveo_u200());
-    let opt = dse.run(&cnn).unwrap();
-    let bl3 = dse.run_policy(&cnn, Policy::Im2colOnly).unwrap();
-    let bl4 = dse.run_policy(&cnn, Policy::Kn2rowApplied).unwrap();
-    let bl5 = dse.run_policy(&cnn, Policy::WinoApplied).unwrap();
+    let compiler = Compiler::new();
+    let run = |c: Compiler| c.compile(&cnn).unwrap().into_plan();
+    let opt = run(compiler.clone());
+    let bl3 = run(compiler.clone().policy(Policy::Im2colOnly));
+    let bl4 = run(compiler.clone().policy(Policy::Kn2rowApplied));
+    let bl5 = run(compiler.clone().policy(Policy::WinoApplied));
 
     let m3 = module_times(&cnn, &bl3);
     let m4 = module_times(&cnn, &bl4);

@@ -6,7 +6,7 @@
 //! quoted from the paper (their bitstreams cannot be re-run). The
 //! comparison of interest is the *shape*: who wins and by what factor.
 
-use crate::dse::{Dse, DseConfig};
+use crate::api::Compiler;
 use crate::graph::zoo;
 use crate::util::table::{fnum, Table};
 
@@ -73,7 +73,7 @@ pub fn flexcnn_projection(p1: usize, p2: usize, gops: f64) -> f64 {
 }
 
 pub fn run() -> Vec<Table> {
-    let dse = Dse::new(DseConfig::alveo_u200());
+    let compiler = Compiler::new();
     let mut t = Table::new(
         "Table 3 — comparison with state-of-the-art (our rows simulated on U200 meta)",
         &["impl", "network", "device", "dtype", "MHz", "GOP/s", "latency ms"],
@@ -84,13 +84,13 @@ pub fn run() -> Vec<Table> {
     );
     for model in ["googlenet", "inception-v4"] {
         let cnn = zoo::by_name(model).unwrap();
-        let plan = dse.run(&cnn).unwrap();
+        let plan = compiler.compile(&cnn).unwrap().into_plan();
         t.row(vec![
             "DYNAMAP (this repro)".into(),
             model.into(),
             "U200 (simulated)".into(),
             "INT8".into(),
-            fnum(dse.config.device.freq_mhz, 0),
+            fnum(compiler.config().device.freq_mhz, 0),
             fnum(plan.throughput_gops, 0),
             fnum(plan.total_latency_ms, 2),
         ]);
@@ -146,8 +146,7 @@ mod tests {
     #[test]
     fn our_googlenet_beats_published_fpga_latencies() {
         // the shape claim: DYNAMAP (ours) < [12] 5.7ms and < [27] 3.8ms
-        let dse = Dse::new(DseConfig::alveo_u200());
-        let plan = dse.run(&zoo::googlenet()).unwrap();
+        let plan = Compiler::new().compile(&zoo::googlenet()).unwrap().into_plan();
         for p in published().iter().filter(|p| p.network == "googlenet") {
             assert!(
                 plan.total_latency_ms < p.latency_ms,

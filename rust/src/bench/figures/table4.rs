@@ -3,8 +3,8 @@
 //! bl3/bl4/bl5 single-algorithm baselines, for both networks, plus the
 //! paper's reported numbers for comparison.
 
+use crate::api::Compiler;
 use crate::cost::graph_build::Policy;
-use crate::dse::{Dse, DseConfig};
 use crate::graph::zoo;
 use crate::util::table::{fnum, Table};
 
@@ -19,10 +19,10 @@ pub fn paper_values(model: &str) -> (f64, f64, f64) {
 /// Our measured improvement (%) of OPT vs the three baselines.
 pub fn compute(model: &str) -> (f64, f64, f64) {
     let cnn = zoo::by_name(model).unwrap();
-    let dse = Dse::new(DseConfig::alveo_u200());
-    let opt = dse.run(&cnn).unwrap().total_latency_ms;
+    let compiler = Compiler::new();
+    let opt = compiler.compile(&cnn).unwrap().plan.total_latency_ms;
     let pct = |p: Policy| {
-        let b = dse.run_policy(&cnn, p).unwrap().total_latency_ms;
+        let b = compiler.clone().policy(p).compile(&cnn).unwrap().plan.total_latency_ms;
         (1.0 - opt / b) * 100.0
     };
     (pct(Policy::Im2colOnly), pct(Policy::Kn2rowApplied), pct(Policy::WinoApplied))

@@ -12,8 +12,8 @@
 //! "32% and 35% lower end-to-end latency for GoogLeNet and
 //! Inception-v4" vs bl1.
 
+use crate::api::Compiler;
 use crate::cost::gemm::Dataflow;
-use crate::dse::{Dse, DseConfig};
 use crate::graph::layer::Op;
 use crate::graph::zoo;
 use crate::util::table::{fnum, Table};
@@ -42,17 +42,15 @@ pub fn compute(model: &str) -> UtilFig {
     let sq = square_side(cap);
 
     // OPT: full framework
-    let dse = Dse::new(DseConfig::alveo_u200());
-    let opt = dse.run(&cnn).unwrap();
+    let compiler = Compiler::new();
+    let opt = compiler.compile(&cnn).unwrap().into_plan();
 
     // NS-only config used by both baselines
-    let mut ns_cfg = DseConfig::alveo_u200();
-    ns_cfg.force_dataflow = Some(Dataflow::NS);
-    let ns_dse = Dse::new(ns_cfg);
-    let bl1 = ns_dse.run_fixed_shape(&cnn, sq, sq).unwrap();
-    let bl2 = ns_dse.run_fixed_shape(&cnn, opt.p1, opt.p2).unwrap();
+    let ns = Compiler::new().force_dataflow(Dataflow::NS);
+    let bl1 = ns.clone().fixed_shape(sq, sq).compile(&cnn).unwrap().into_plan();
+    let bl2 = ns.clone().fixed_shape(opt.p1, opt.p2).compile(&cnn).unwrap().into_plan();
 
-    let cm = dse.config.cost_model();
+    let cm = compiler.config().cost_model();
     let mut ns_cm = cm.clone();
     ns_cm.force_dataflow = Some(Dataflow::NS);
 

@@ -1,5 +1,6 @@
 //! `simulate` and `infer` CLI subcommands.
 
+use crate::api::{Compiler, Session};
 use crate::cost::graph_build::Policy;
 use crate::util::cli::Args;
 use crate::util::table::Table;
@@ -9,7 +10,6 @@ use crate::util::table::Table;
 /// DSE-chosen mapping and cross-check measured vs analytical cycles.
 pub fn simulate(args: &Args) -> i32 {
     use crate::algos::tensor::{Tensor, Weights};
-    use crate::dse::{Dse, DseConfig};
     use crate::graph::layer::Op;
     use crate::graph::zoo;
     use crate::overlay::layer_sim::simulate_layer;
@@ -29,8 +29,8 @@ pub fn simulate(args: &Args) -> i32 {
     // small array so per-layer GEMMs stay quick
     let p1 = args.get_usize("p1", 16);
     let p2 = args.get_usize("p2", 16);
-    let dse = Dse::new(DseConfig::alveo_u200());
-    let g = dse.build_graph(&cnn, p1, p2);
+    let compiler = Compiler::new();
+    let g = compiler.build_graph(&cnn, p1, p2);
     let mapping = g.solve(&cnn);
     let mut rng = Rng::new(7);
     let mut t = Table::new(
@@ -72,37 +72,43 @@ pub fn simulate(args: &Args) -> i32 {
     }
 }
 
-/// `dynamap infer --artifacts artifacts --policy opt --n 20` — run the
-/// end-to-end PJRT inference engine: golden validation + latency bench.
+/// `dynamap infer --artifacts artifacts --policy opt --n 20
+/// [--plan-cache plans]` — run the end-to-end PJRT serving session:
+/// golden validation + latency bench. With `--plan-cache`, the DSE plan
+/// is persisted and reused across invocations.
 pub fn infer(args: &Args) -> i32 {
-    use super::engine::{EnginePolicy, InferenceEngine};
-
     let dir = args.get_or("artifacts", "artifacts");
     let n = args.get_usize("n", 20);
-    let policy = match args.get_or("policy", "opt") {
-        "opt" | "optimal" => EnginePolicy::Optimal,
-        "im2col" => EnginePolicy::Baseline(Policy::Im2colOnly),
-        "kn2row" => EnginePolicy::Baseline(Policy::Kn2rowApplied),
-        "wino" | "winograd" => EnginePolicy::Baseline(Policy::WinoApplied),
-        "greedy" => EnginePolicy::Baseline(Policy::Greedy),
+    let mut builder = Session::builder(dir);
+    match args.get_or("policy", "opt") {
+        "opt" | "optimal" => {}
+        "im2col" => builder = builder.policy(Policy::Im2colOnly),
+        "kn2row" => builder = builder.policy(Policy::Kn2rowApplied),
+        "wino" | "winograd" => builder = builder.policy(Policy::WinoApplied),
+        "greedy" => builder = builder.policy(Policy::Greedy),
         other => {
             eprintln!("unknown policy '{other}'");
             return 2;
         }
-    };
-    let mut engine = match InferenceEngine::new(dir, policy) {
-        Ok(e) => e,
+    }
+    if let Some(cache) = args.get("plan-cache") {
+        builder = builder.plan_cache(cache);
+    }
+    let mut session = match builder.build() {
+        Ok(s) => s,
         Err(e) => {
-            eprintln!("engine init failed: {e}");
+            eprintln!("session init failed: {e} (run `make artifacts` first)");
             return 1;
         }
     };
     println!(
-        "engine ready: {} executables compiled, mapping: {:?}",
-        engine.loaded_executables(),
-        engine.algo_map
+        "session ready: model={}, {} executables compiled, plan {}, mapping: {:?}",
+        session.model(),
+        session.loaded_executables(),
+        if session.plan_from_cache() { "loaded from cache" } else { "freshly compiled" },
+        session.algo_map()
     );
-    match engine.validate_golden() {
+    match session.validate_golden() {
         Ok(err) => {
             println!("golden validation: max |Δ| = {err:.2e}");
             if err > 1e-3 {
@@ -115,7 +121,7 @@ pub fn infer(args: &Args) -> i32 {
             return 1;
         }
     }
-    match engine.bench(n) {
+    match session.bench(n) {
         Ok(stats) => {
             println!("latency ({n} runs): {}", stats.summary());
             0

@@ -1,21 +1,28 @@
-//! The inference engine: DSE plan → per-layer PJRT executables →
-//! topological execution with native pooling/concat.
+//! Deprecated shim over [`crate::api::Session`].
+//!
+//! The inference engine of the first release constructed the whole
+//! pipeline — manifest load, DSE, executable compilation — inside one
+//! monolithic constructor, re-running the DSE on every instantiation
+//! and only accepting the `mini-inception` manifest. The staged
+//! replacement lives in [`crate::api`]: build a
+//! [`Session`](crate::api::Session) (optionally from a cached
+//! [`PlanArtifact`](crate::api::PlanArtifact)) and serve `infer` /
+//! `infer_batch` from it.
 
 use std::collections::BTreeMap;
-use std::path::PathBuf;
-use std::time::Instant;
 
-use super::metrics::LatencyStats;
-use crate::algos::tensor::Tensor;
-use crate::cost::conv::Algo;
+use crate::api::{DynamapError, Session};
+use crate::coordinator::metrics::LatencyStats;
 use crate::cost::graph_build::Policy;
-use crate::dse::{Dse, DseConfig};
-use crate::graph::layer::Op;
-use crate::graph::{zoo, Cnn};
-use crate::overlay::pooling;
-use crate::runtime::{Manifest, PjrtRuntime, TensorBuf};
+use crate::runtime::{Manifest, TensorBuf};
+
+pub use crate::api::session::InferMetrics;
 
 /// How the engine picks each layer's algorithm.
+#[deprecated(
+    since = "0.2.0",
+    note = "use dynamap::api::Session::builder with .policy(..) or .algo_map(..)"
+)]
 #[derive(Debug, Clone)]
 pub enum EnginePolicy {
     /// DYNAMAP's optimal PBQP mapping (clamped to AOT'd algorithms).
@@ -26,196 +33,65 @@ pub enum EnginePolicy {
     Custom(BTreeMap<String, String>),
 }
 
-/// Per-inference metrics.
-#[derive(Debug, Clone)]
-pub struct InferMetrics {
-    pub total_us: f64,
-    /// (layer name, algorithm, microseconds) per conv layer.
-    pub per_layer_us: Vec<(String, String, f64)>,
-}
-
-/// The end-to-end engine.
+/// The end-to-end engine, now a thin wrapper around
+/// [`crate::api::Session`].
+#[deprecated(since = "0.2.0", note = "use dynamap::api::Session")]
 pub struct InferenceEngine {
-    pub manifest: Manifest,
-    pub cnn: Cnn,
-    /// conv layer name → chosen algorithm name.
-    pub algo_map: BTreeMap<String, String>,
-    runtime: PjrtRuntime,
-    weights: BTreeMap<String, TensorBuf>,
+    session: Session,
 }
 
+#[allow(deprecated)]
 impl InferenceEngine {
-    /// Build the engine: load the manifest, run the DSE flow to choose
-    /// the algorithm mapping, pre-compile every chosen executable and
-    /// pre-load weights.
-    pub fn new(artifacts_dir: &str, policy: EnginePolicy) -> Result<InferenceEngine, String> {
-        let manifest = Manifest::load(artifacts_dir)?;
-        if manifest.model != "mini-inception" {
-            return Err(format!("unsupported artifact model '{}'", manifest.model));
-        }
-        let cnn = zoo::mini_inception();
-
-        // choose algorithms
-        let algo_map: BTreeMap<String, String> = match policy {
-            EnginePolicy::Custom(m) => m,
-            EnginePolicy::Optimal | EnginePolicy::Baseline(_) => {
-                let dse = Dse::new(DseConfig::alveo_u200());
-                let plan = match policy {
-                    EnginePolicy::Optimal => dse.run(&cnn)?,
-                    EnginePolicy::Baseline(p) => dse.run_policy(&cnn, p)?,
-                    EnginePolicy::Custom(_) => unreachable!(),
-                };
-                plan.mapping
-                    .layers
-                    .iter()
-                    .map(|l| {
-                        let a = match l.cost.algo {
-                            Algo::Im2col => "im2col",
-                            Algo::Kn2row => "kn2row",
-                            Algo::Winograd { .. } | Algo::WinogradStrided { .. } => "winograd",
-                        };
-                        (l.name.clone(), a.to_string())
-                    })
-                    .collect()
-            }
+    /// Build the engine: resolves the model from the manifest, runs (or
+    /// loads) the plan and pre-compiles every chosen executable.
+    pub fn new(
+        artifacts_dir: &str,
+        policy: EnginePolicy,
+    ) -> Result<InferenceEngine, DynamapError> {
+        let mut builder = Session::builder(artifacts_dir);
+        builder = match policy {
+            EnginePolicy::Optimal => builder,
+            EnginePolicy::Baseline(p) => builder.policy(p),
+            EnginePolicy::Custom(m) => builder.algo_map(m),
         };
-
-        // clamp to AOT'd algorithms & pre-compile
-        let mut runtime = PjrtRuntime::cpu()?;
-        let mut clamped = BTreeMap::new();
-        let mut weights = BTreeMap::new();
-        for layer in &manifest.layers {
-            let want = algo_map.get(&layer.name).map(|s| s.as_str()).unwrap_or("im2col");
-            let algo = if layer.algos.contains_key(want) { want } else { "im2col" };
-            let art = layer
-                .algos
-                .get(algo)
-                .ok_or_else(|| format!("{}: no artifact for {algo}", layer.name))?;
-            runtime.load(&manifest.dir.join(art))?;
-            clamped.insert(layer.name.clone(), algo.to_string());
-            let w = manifest.weights(layer)?;
-            weights.insert(
-                layer.name.clone(),
-                TensorBuf::new(vec![layer.c_out, layer.c_in, layer.k1, layer.k2], w),
-            );
-        }
-        Ok(InferenceEngine { manifest, cnn, algo_map: clamped, runtime, weights })
+        Ok(InferenceEngine { session: builder.build()? })
     }
 
-    fn artifact_path(&self, layer: &str) -> PathBuf {
-        let a = &self.algo_map[layer];
-        let file = &self.manifest.layer(layer).unwrap().algos[a];
-        self.manifest.dir.join(file)
+    /// The wrapped session.
+    pub fn session(&mut self) -> &mut Session {
+        &mut self.session
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        self.session.manifest()
+    }
+
+    /// conv layer name → chosen algorithm name.
+    pub fn algo_map(&self) -> &BTreeMap<String, String> {
+        self.session.algo_map()
     }
 
     /// Run one inference. Input is `(C, H, W)` flattened f32.
-    pub fn infer(&mut self, input: &TensorBuf) -> Result<(TensorBuf, InferMetrics), String> {
-        let t_total = Instant::now();
-        let mut per_layer = Vec::new();
-        let mut values: BTreeMap<usize, TensorBuf> = BTreeMap::new();
-        let order = self.cnn.topo_order();
-        let mut final_out = None;
-        for id in order {
-            let node = self.cnn.node(id).clone();
-            let preds = self.cnn.predecessors(id);
-            let out = match &node.op {
-                Op::Input { c, h1, h2 } => {
-                    if input.len() != c * h1 * h2 {
-                        return Err(format!(
-                            "input len {} != expected {}",
-                            input.len(),
-                            c * h1 * h2
-                        ));
-                    }
-                    TensorBuf::new(vec![*c, *h1, *h2], input.data.clone())
-                }
-                Op::Conv(spec) => {
-                    let x = &values[&preds[0]];
-                    let w = self.weights[&node.name].clone();
-                    let path = self.artifact_path(&node.name);
-                    let t0 = Instant::now();
-                    let out = self.runtime.execute(
-                        &path,
-                        &[x, &w],
-                        vec![spec.c_out, spec.o1(), spec.o2()],
-                    )?;
-                    per_layer.push((
-                        node.name.clone(),
-                        self.algo_map[&node.name].clone(),
-                        t0.elapsed().as_secs_f64() * 1e6,
-                    ));
-                    out
-                }
-                Op::Pool(p) => {
-                    let x = &values[&preds[0]];
-                    let t = Tensor { c: p.c, h: p.h1, w: p.h2, data: x.data.clone() };
-                    let out = pooling::reference(&t, p);
-                    TensorBuf::new(vec![out.c, out.h, out.w], out.data)
-                }
-                Op::Concat { c_out, h1, h2 } => {
-                    let mut data = Vec::with_capacity(c_out * h1 * h2);
-                    for &p in &preds {
-                        data.extend_from_slice(&values[&p].data);
-                    }
-                    TensorBuf::new(vec![*c_out, *h1, *h2], data)
-                }
-                Op::Add { c, h1, h2 } => {
-                    let a = &values[&preds[0]];
-                    let b = &values[&preds[1]];
-                    let data = a.data.iter().zip(&b.data).map(|(x, y)| x + y).collect();
-                    TensorBuf::new(vec![*c, *h1, *h2], data)
-                }
-                Op::Fc { .. } => {
-                    return Err("FC layers are not part of the artifact set".into())
-                }
-                Op::Output => {
-                    final_out = Some(values[&preds[0]].clone());
-                    continue;
-                }
-            };
-            values.insert(id, out);
-        }
-        let out = final_out.ok_or("no output node reached")?;
-        Ok((
-            out,
-            InferMetrics { total_us: t_total.elapsed().as_secs_f64() * 1e6, per_layer_us: per_layer },
-        ))
+    pub fn infer(
+        &mut self,
+        input: &TensorBuf,
+    ) -> Result<(TensorBuf, InferMetrics), DynamapError> {
+        self.session.infer(input)
     }
 
     /// Validate against the Python-side golden pair; returns the max
     /// absolute error.
-    pub fn validate_golden(&mut self) -> Result<f32, String> {
-        let (gi, go) = self.manifest.golden()?;
-        let (c, h1, h2) = self.manifest.input;
-        let input = TensorBuf::new(vec![c, h1, h2], gi);
-        let (out, _) = self.infer(&input)?;
-        if out.data.len() != go.len() {
-            return Err(format!("golden length {} != output {}", go.len(), out.data.len()));
-        }
-        let mut max_err = 0.0f32;
-        for (a, b) in out.data.iter().zip(&go) {
-            max_err = max_err.max((a - b).abs());
-        }
-        Ok(max_err)
+    pub fn validate_golden(&mut self) -> Result<f32, DynamapError> {
+        self.session.validate_golden()
     }
 
-    /// Latency benchmark: `n` sequential inferences on the golden input
-    /// (first call warms the executable cache).
-    pub fn bench(&mut self, n: usize) -> Result<LatencyStats, String> {
-        let (gi, _) = self.manifest.golden()?;
-        let (c, h1, h2) = self.manifest.input;
-        let input = TensorBuf::new(vec![c, h1, h2], gi);
-        let mut stats = LatencyStats::new();
-        self.infer(&input)?; // warm-up
-        for _ in 0..n {
-            let (_, m) = self.infer(&input)?;
-            stats.push(m.total_us);
-        }
-        Ok(stats)
+    /// Latency benchmark: `n` sequential inferences on the golden input.
+    pub fn bench(&mut self, n: usize) -> Result<LatencyStats, DynamapError> {
+        self.session.bench(n)
     }
 
     /// Executables currently compiled.
     pub fn loaded_executables(&self) -> usize {
-        self.runtime.loaded_count()
+        self.session.loaded_executables()
     }
 }

@@ -6,9 +6,15 @@
 //! Steps ②–③ — cost-graph construction + optimal PBQP algorithm mapping.
 //! Steps ④–⑥ — overlay customization and control-stream generation
 //! (continued in [`crate::emit`]).
+//!
+//! The flow is driven through [`crate::api::Compiler`], which produces a
+//! cacheable [`crate::api::PlanArtifact`]; the [`Dse`] driver here is a
+//! deprecated shim kept for one release.
 
 pub mod algo1;
 pub mod plan;
 
 pub use algo1::{identify_parameters, Algo1Result};
-pub use plan::{Dse, DseConfig, Plan};
+#[allow(deprecated)]
+pub use plan::Dse;
+pub use plan::{DseConfig, Plan};

@@ -1,8 +1,12 @@
-//! The end-to-end DSE pipeline (Fig. 7 steps ①–⑥) and its output
-//! [`Plan`] — everything the coordinator, the Verilog emitter and the
+//! DSE configuration + the [`Plan`] produced by the pipeline (Fig. 7
+//! steps ①–⑥) — everything the coordinator, the Verilog emitter and the
 //! bench harness consume.
+//!
+//! The pipeline itself is driven by [`crate::api::Compiler`]; the
+//! [`Dse`] struct remains as a deprecated shim for one release.
 
 use super::algo1::{identify_parameters_bounded, Algo1Result};
+use crate::api::{Compiler, DynamapError};
 use crate::cost::conv::CostModel;
 use crate::cost::graph_build::{BuildOpts, CostGraph, MappingResult, Policy};
 use crate::cost::transition::TransitionModel;
@@ -11,7 +15,9 @@ use crate::graph::Cnn;
 use crate::util::json::Json;
 
 /// Framework configuration: device + model hyper-parameters + search
-/// bounds.
+/// bounds. This is the value a [`Compiler`] builds up fluently; it can
+/// also be constructed directly and handed to
+/// [`Compiler::from_config`].
 #[derive(Debug, Clone)]
 pub struct DseConfig {
     pub device: Device,
@@ -73,7 +79,12 @@ impl DseConfig {
     }
 }
 
-/// The DSE driver.
+/// The original DSE driver, kept as a thin shim over
+/// [`Compiler`] for one release.
+#[deprecated(
+    since = "0.2.0",
+    note = "use dynamap::api::Compiler (e.g. `Compiler::from_config(config).compile(&cnn)`)"
+)]
 pub struct Dse {
     pub config: DseConfig,
 }
@@ -92,33 +103,36 @@ pub struct Plan {
     pub throughput_gops: f64,
 }
 
+#[allow(deprecated)]
 impl Dse {
     pub fn new(config: DseConfig) -> Dse {
         Dse { config }
     }
 
+    fn compiler(&self) -> Compiler {
+        Compiler::from_config(self.config.clone())
+    }
+
     /// Fig. 7 steps ①–③: Algorithm 1 → cost graph → PBQP solve.
-    pub fn run(&self, cnn: &Cnn) -> Result<Plan, String> {
-        let arch = self.identify(cnn);
-        let mapping = self.map_algorithms(cnn, arch.p1, arch.p2);
-        Ok(self.plan_from(cnn, &arch, mapping))
+    pub fn run(&self, cnn: &Cnn) -> Result<Plan, DynamapError> {
+        Ok(self.compiler().compile(cnn)?.into_plan())
     }
 
     /// Run with a fixed baseline policy instead of the PBQP solve
     /// (baselines bl3–bl5 and greedy of §6.1.2).
-    pub fn run_policy(&self, cnn: &Cnn, policy: Policy) -> Result<Plan, String> {
-        let arch = self.identify(cnn);
-        let g = self.build_graph(cnn, arch.p1, arch.p2);
-        let mapping = g.solve_policy(cnn, policy);
-        Ok(self.plan_from(cnn, &arch, mapping))
+    pub fn run_policy(&self, cnn: &Cnn, policy: Policy) -> Result<Plan, DynamapError> {
+        Ok(self.compiler().policy(policy).compile(cnn)?.into_plan())
     }
 
     /// Run with a fixed systolic-array shape (used by Fig. 9/10's
     /// square-NS baseline bl1 and by tests).
-    pub fn run_fixed_shape(&self, cnn: &Cnn, p1: usize, p2: usize) -> Result<Plan, String> {
-        let mapping = self.map_algorithms(cnn, p1, p2);
-        let arch = Algo1Result { p1, p2, tau_sec: 0.0, dataflow: Default::default() };
-        Ok(self.plan_from(cnn, &arch, mapping))
+    pub fn run_fixed_shape(
+        &self,
+        cnn: &Cnn,
+        p1: usize,
+        p2: usize,
+    ) -> Result<Plan, DynamapError> {
+        Ok(self.compiler().fixed_shape(p1, p2).compile(cnn)?.into_plan())
     }
 
     /// Algorithm 1 only.
@@ -142,28 +156,11 @@ impl Dse {
             self.config.opts,
         )
     }
-
-    fn map_algorithms(&self, cnn: &Cnn, p1: usize, p2: usize) -> MappingResult {
-        self.build_graph(cnn, p1, p2).solve(cnn)
-    }
-
-    fn plan_from(&self, cnn: &Cnn, arch: &Algo1Result, mapping: MappingResult) -> Plan {
-        let total_latency_ms = mapping.total_sec * 1e3;
-        let throughput_gops = cnn.total_gops() / mapping.total_sec;
-        Plan {
-            cnn_name: cnn.name.clone(),
-            p1: arch.p1,
-            p2: arch.p2,
-            tau_sec: arch.tau_sec,
-            mapping,
-            total_latency_ms,
-            throughput_gops,
-        }
-    }
 }
 
 impl Plan {
-    /// Serialize for the CLI / examples.
+    /// Serialize for the CLI / examples. For the full round-trippable
+    /// form use [`crate::api::PlanArtifact`].
     pub fn to_json(&self) -> Json {
         let layers = self
             .mapping
@@ -208,8 +205,8 @@ mod tests {
 
     #[test]
     fn full_pipeline_on_mini() {
-        let dse = Dse::new(DseConfig::with_device(Device::small_edge()));
-        let plan = dse.run(&zoo::mini_inception()).unwrap();
+        let compiler = Compiler::from_config(DseConfig::with_device(Device::small_edge()));
+        let plan = compiler.compile(&zoo::mini_inception()).unwrap().into_plan();
         assert!(plan.total_latency_ms > 0.0);
         assert!(plan.throughput_gops > 0.0);
         assert_eq!(plan.mapping.layers.len(), 7);
@@ -220,11 +217,11 @@ mod tests {
 
     #[test]
     fn opt_beats_baselines_on_googlenet() {
-        let dse = Dse::new(DseConfig::alveo_u200());
+        let compiler = Compiler::from_config(DseConfig::alveo_u200());
         let cnn = zoo::googlenet();
-        let opt = dse.run(&cnn).unwrap();
+        let opt = compiler.compile(&cnn).unwrap().into_plan();
         for policy in [Policy::Im2colOnly, Policy::Kn2rowApplied, Policy::WinoApplied] {
-            let bl = dse.run_policy(&cnn, policy).unwrap();
+            let bl = compiler.clone().policy(policy).compile(&cnn).unwrap().into_plan();
             assert!(
                 opt.total_latency_ms <= bl.total_latency_ms + 1e-9,
                 "OPT {} > {:?} {}",
@@ -235,16 +232,6 @@ mod tests {
         }
     }
 
-    #[test]
-    fn mapping_uses_multiple_algorithms_on_googlenet() {
-        // the paper's whole point: a single algorithm is not optimal
-        let dse = Dse::new(DseConfig::alveo_u200());
-        let plan = dse.run(&zoo::googlenet()).unwrap();
-        let hist = plan.algo_histogram();
-        assert!(
-            hist.len() >= 2,
-            "expected a mixed algorithm mapping, got {:?}",
-            hist
-        );
-    }
+    // (the deprecated Dse shim's equivalence with Compiler is covered at
+    // the crate surface in rust/tests/dse_pipeline.rs::deprecated_shims_still_work)
 }

@@ -60,15 +60,17 @@ pub fn control_stream(cnn: &Cnn, plan: &Plan) -> Json {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dse::{Dse, DseConfig};
+    use crate::api::Compiler;
+    use crate::dse::DseConfig;
     use crate::graph::zoo;
     use crate::util::json::Json as J;
 
     #[test]
     fn stream_covers_all_conv_layers() {
         let cnn = zoo::mini_inception();
-        let dse = Dse::new(DseConfig::with_device(crate::cost::Device::small_edge()));
-        let plan = dse.run(&cnn).unwrap();
+        let compiler =
+            Compiler::from_config(DseConfig::with_device(crate::cost::Device::small_edge()));
+        let plan = compiler.compile(&cnn).unwrap().into_plan();
         let s = control_stream(&cnn, &plan);
         assert_eq!(s.get("layers").as_arr().unwrap().len(), 7);
         // round-trips through the JSON parser

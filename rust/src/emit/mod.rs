@@ -12,9 +12,30 @@
 pub mod verilog;
 pub mod control;
 
-use crate::dse::{Dse, DseConfig};
-use crate::graph::zoo;
+use std::path::{Path, PathBuf};
+
+use crate::api::{Compiler, DynamapError};
+use crate::dse::Plan;
+use crate::graph::{zoo, Cnn};
 use crate::util::cli::Args;
+
+/// Write the overlay package (Verilog top-level + control stream) for a
+/// compiled plan into `out_dir`; returns the two written paths.
+pub fn emit_package(
+    cnn: &Cnn,
+    plan: &Plan,
+    out_dir: &str,
+) -> Result<(PathBuf, PathBuf), DynamapError> {
+    std::fs::create_dir_all(out_dir).map_err(|e| DynamapError::io(out_dir, e))?;
+    let v = verilog::overlay_top(plan);
+    let c = control::control_stream(cnn, plan);
+    let stem = crate::api::compiler::sanitize(&cnn.name);
+    let vp = Path::new(out_dir).join(format!("dynamap_overlay_{stem}.v"));
+    let cp = Path::new(out_dir).join(format!("control_{stem}.json"));
+    std::fs::write(&vp, v).map_err(|e| DynamapError::io(&vp, e))?;
+    std::fs::write(&cp, c.pretty()).map_err(|e| DynamapError::io(&cp, e))?;
+    Ok((vp, cp))
+}
 
 /// `dynamap emit --model googlenet --out build/` — run DSE and write
 /// the overlay package.
@@ -25,15 +46,27 @@ pub fn cli(args: &Args) -> i32 {
         eprintln!("unknown model '{model}'");
         return 1;
     };
-    let dse = Dse::new(DseConfig::alveo_u200());
-    let plan = dse.run(&cnn).unwrap();
-    std::fs::create_dir_all(out).ok();
-    let v = verilog::overlay_top(&plan);
-    let c = control::control_stream(&cnn, &plan);
-    let vp = format!("{out}/dynamap_overlay_{model}.v");
-    let cp = format!("{out}/control_{model}.json");
-    std::fs::write(&vp, v).expect("write verilog");
-    std::fs::write(&cp, c.pretty()).expect("write control stream");
-    println!("wrote {vp} and {cp} (P_SA = {}×{})", plan.p1, plan.p2);
-    0
+    let artifact = match Compiler::new().compile(&cnn) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("emit: {e}");
+            return 1;
+        }
+    };
+    match emit_package(&cnn, &artifact.plan, out) {
+        Ok((vp, cp)) => {
+            println!(
+                "wrote {} and {} (P_SA = {}×{})",
+                vp.display(),
+                cp.display(),
+                artifact.plan.p1,
+                artifact.plan.p2
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("emit: {e}");
+            1
+        }
+    }
 }

@@ -143,13 +143,15 @@ endmodule
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dse::{Dse, DseConfig};
+    use crate::api::Compiler;
+    use crate::dse::DseConfig;
     use crate::graph::zoo;
 
     #[test]
     fn emits_parameterized_top() {
-        let dse = Dse::new(DseConfig::with_device(crate::cost::Device::small_edge()));
-        let plan = dse.run(&zoo::mini_inception()).unwrap();
+        let compiler =
+            Compiler::from_config(DseConfig::with_device(crate::cost::Device::small_edge()));
+        let plan = compiler.compile(&zoo::mini_inception()).unwrap().into_plan();
         let v = overlay_top(&plan);
         assert!(v.contains("module dynamap_pe"));
         assert!(v.contains("module dynamap_overlay_top"));

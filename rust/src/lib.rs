@@ -1,8 +1,51 @@
 //! # DYNAMAP — Dynamic Algorithm Mapping for Low-Latency CNN Inference
 //!
 //! Reproduction of Meng et al., *DYNAMAP* (FPGA '21). The crate contains
-//! the complete software stack of the paper:
+//! the complete software stack of the paper behind a staged front-door
+//! API ([`api`]): an offline [`api::Compiler`] runs the DSE once and
+//! produces a versioned, cacheable [`api::PlanArtifact`]; an online
+//! [`api::Session`] serves inference requests against the reused
+//! overlay without ever re-running the search. Every fallible call
+//! returns the typed [`api::DynamapError`].
 //!
+//! ## Quickstart
+//!
+//! Offline: compile a network into a plan artifact and persist it.
+//!
+//! ```no_run
+//! use dynamap::api::Compiler;
+//! use dynamap::graph::zoo;
+//!
+//! let cnn = zoo::googlenet();
+//! let artifact = Compiler::new().compile(&cnn).unwrap();
+//! println!(
+//!     "P_SA = {}×{}, latency = {:.3} ms",
+//!     artifact.plan.p1, artifact.plan.p2, artifact.plan.total_latency_ms
+//! );
+//! artifact.save("plans/googlenet.json").unwrap();
+//! ```
+//!
+//! Online: open a serving session over an AOT artifact directory
+//! (`make artifacts`); with a plan cache, later sessions skip the DSE.
+//!
+//! ```no_run
+//! use dynamap::api::Session;
+//! use dynamap::runtime::TensorBuf;
+//!
+//! let mut session = Session::builder("artifacts").plan_cache("plans").build().unwrap();
+//! let input = TensorBuf::zeros(vec![4, 16, 16]);
+//! let (outputs, metrics) = session.infer_batch(&[input]).unwrap();
+//! println!("{} outputs, {}", outputs.len(), metrics.stats.summary());
+//! ```
+//!
+//! The 0.1 entry points (`dse::Dse`, `coordinator::InferenceEngine`)
+//! remain as deprecated shims for one release — see the [`api`] module
+//! docs for the migration table.
+//!
+//! ## Layers
+//!
+//! * [`api`] — the staged `Compiler → PlanArtifact → Session` front
+//!   door with typed errors and plan caching.
 //! * [`graph`] — CNN graph IR and the model zoo (GoogLeNet, Inception-v4, …).
 //! * [`cost`] — the analytical cost model: GEMM cycles under the three
 //!   dataflows (Eq. 9), per-algorithm conv latency (Eq. 10–12), and
@@ -21,24 +64,12 @@
 //!   im2col, kn2row and Winograd convolution.
 //! * [`runtime`] — PJRT client wrapper that loads the AOT-compiled HLO
 //!   artifacts produced by `python/compile/aot.py` and executes them.
-//! * [`coordinator`] — the end-to-end inference engine that chains
-//!   per-layer executables according to the DSE-chosen algorithm mapping.
+//! * [`coordinator`] — latency metrics + the deprecated engine shim
+//!   (superseded by [`api::Session`]).
 //! * [`emit`] — Verilog-style RTL + control-stream emission.
 //! * [`bench`] — mini-criterion harness + figure/table regeneration.
 //! * [`util`] — in-repo substrates (JSON, CLI, RNG/property testing,
 //!   ASCII tables) replacing crates unavailable in the offline build.
-//!
-//! ## Quickstart
-//!
-//! ```no_run
-//! use dynamap::graph::zoo;
-//! use dynamap::dse::{Dse, DseConfig};
-//!
-//! let cnn = zoo::googlenet();
-//! let dse = Dse::new(DseConfig::alveo_u200());
-//! let plan = dse.run(&cnn).unwrap();
-//! println!("latency = {:.3} ms", plan.total_latency_ms);
-//! ```
 
 pub mod util;
 pub mod graph;
@@ -46,6 +77,7 @@ pub mod cost;
 pub mod sp;
 pub mod pbqp;
 pub mod dse;
+pub mod api;
 pub mod overlay;
 pub mod algos;
 pub mod runtime;

@@ -3,13 +3,17 @@
 //! Subcommands:
 //! * `zoo` — list the built-in model zoo with stats.
 //! * `dse --model <name>` — run the full DSE flow, print the plan.
+//! * `compile --model <name> --out <dir|file.json>` — run the DSE once
+//!   and persist a versioned plan artifact for later sessions.
 //! * `baselines --model <name>` — compare OPT vs bl3/bl4/bl5/greedy.
 //! * `simulate --model <name>` — cycle-level overlay simulation.
-//! * `infer` — end-to-end functional inference through PJRT artifacts.
+//! * `infer [--plan-cache DIR]` — end-to-end functional inference
+//!   through PJRT artifacts, optionally caching the DSE plan on disk.
 //! * `figures --out <dir>` — regenerate every paper table/figure.
 //! * `emit --model <name> --out <dir>` — emit Verilog + control streams.
 
-use dynamap::dse::{Dse, DseConfig};
+use dynamap::api::{Compiler, DynamapError};
+use dynamap::dse::DseConfig;
 use dynamap::graph::zoo;
 use dynamap::util::cli::Args;
 use dynamap::util::table::Table;
@@ -19,6 +23,7 @@ fn main() {
     let code = match args.subcommand.as_deref() {
         Some("zoo") => cmd_zoo(),
         Some("dse") => cmd_dse(&args),
+        Some("compile") => cmd_compile(&args),
         Some("baselines") => cmd_baselines(&args),
         Some("simulate") => dynamap::coordinator::cli::simulate(&args),
         Some("infer") => dynamap::coordinator::cli::infer(&args),
@@ -26,8 +31,8 @@ fn main() {
         Some("emit") => dynamap::emit::cli(&args),
         _ => {
             eprintln!(
-                "usage: dynamap <zoo|dse|baselines|simulate|infer|figures|emit> [--model NAME] \
-                 [--dsp N] [--out DIR] [--json]"
+                "usage: dynamap <zoo|dse|compile|baselines|simulate|infer|figures|emit> \
+                 [--model NAME] [--dsp N] [--out DIR] [--plan-cache DIR] [--json]"
             );
             2
         }
@@ -36,16 +41,16 @@ fn main() {
 }
 
 /// Load a model by zoo name or JSON file path.
-fn load_model(args: &Args) -> Result<dynamap::graph::Cnn, String> {
+fn load_model(args: &Args) -> Result<dynamap::graph::Cnn, DynamapError> {
     let name = args.get_or("model", "googlenet");
     if let Some(m) = zoo::by_name(name) {
         return Ok(m);
     }
-    dynamap::graph::config::load(name)
+    dynamap::graph::config::load(name).map_err(DynamapError::Graph)
 }
 
-/// Build a DseConfig from CLI overrides.
-fn config_from(args: &Args) -> DseConfig {
+/// Build a Compiler from CLI overrides.
+fn compiler_from(args: &Args) -> Compiler {
     let mut cfg = DseConfig::alveo_u200();
     if let Some(dsp) = args.get("dsp") {
         cfg.device.dsp_cap = dsp.parse().unwrap_or(cfg.device.dsp_cap);
@@ -55,7 +60,7 @@ fn config_from(args: &Args) -> DseConfig {
     if args.has("no-fuse") {
         cfg.opts.sram_fuse = false;
     }
-    cfg
+    Compiler::from_config(cfg)
 }
 
 fn cmd_zoo() -> i32 {
@@ -74,9 +79,15 @@ fn cmd_dse(args: &Args) -> i32 {
             return 1;
         }
     };
-    let dse = Dse::new(config_from(args));
+    let compiler = compiler_from(args);
     let t0 = std::time::Instant::now();
-    let plan = dse.run(&cnn).unwrap();
+    let plan = match compiler.compile(&cnn) {
+        Ok(a) => a.into_plan(),
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
     let dt = t0.elapsed();
     if args.has("json") {
         println!("{}", plan.to_json().pretty());
@@ -109,6 +120,45 @@ fn cmd_dse(args: &Args) -> i32 {
     0
 }
 
+/// Run the DSE once and persist the versioned plan artifact — the
+/// offline half of the staged `Compiler → PlanArtifact → Session` flow.
+fn cmd_compile(args: &Args) -> i32 {
+    let cnn = match load_model(args) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    let compiler = compiler_from(args);
+    let artifact = match compiler.compile(&cnn) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    let out = args.get_or("out", "plans");
+    let path = if out.ends_with(".json") {
+        std::path::PathBuf::from(out)
+    } else {
+        std::path::Path::new(out).join(compiler.cache_file_name(&cnn.name))
+    };
+    if let Err(e) = artifact.save(&path) {
+        eprintln!("error: {e}");
+        return 1;
+    }
+    println!(
+        "wrote {} (model={}, P_SA = {}×{}, latency {:.3} ms)",
+        path.display(),
+        artifact.model,
+        artifact.plan.p1,
+        artifact.plan.p2,
+        artifact.plan.total_latency_ms
+    );
+    0
+}
+
 fn cmd_baselines(args: &Args) -> i32 {
     use dynamap::cost::graph_build::Policy;
     let cnn = match load_model(args) {
@@ -118,8 +168,14 @@ fn cmd_baselines(args: &Args) -> i32 {
             return 1;
         }
     };
-    let dse = Dse::new(config_from(args));
-    let opt = dse.run(&cnn).unwrap();
+    let compiler = compiler_from(args);
+    let opt = match compiler.compile(&cnn) {
+        Ok(a) => a.into_plan(),
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
     let mut t = Table::new(
         &format!("{} — OPT vs baselines", cnn.name),
         &["mapping", "latency ms", "vs OPT"],
@@ -131,7 +187,7 @@ fn cmd_baselines(args: &Args) -> i32 {
         ("bl5 wino-applied", Policy::WinoApplied),
         ("greedy node-cost", Policy::Greedy),
     ] {
-        let p = dse.run_policy(&cnn, policy).unwrap();
+        let p = compiler.clone().policy(policy).compile(&cnn).unwrap().into_plan();
         t.row(vec![
             label.into(),
             format!("{:.3}", p.total_latency_ms),

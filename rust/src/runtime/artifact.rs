@@ -1,6 +1,7 @@
 //! Artifact manifest: the contract between `python/compile/aot.py` and
 //! the Rust engine (`artifacts/manifest.json`).
 
+use crate::api::DynamapError;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -40,16 +41,22 @@ pub struct Manifest {
 }
 
 impl Manifest {
-    pub fn load(dir: &str) -> Result<Manifest, String> {
+    pub fn load(dir: &str) -> Result<Manifest, DynamapError> {
         let path = Path::new(dir).join("manifest.json");
-        let text = std::fs::read_to_string(&path)
-            .map_err(|e| format!("read {}: {e} (run `make artifacts` first)", path.display()))?;
-        let j = Json::parse(&text).map_err(|e| e.to_string())?;
-        let u = |v: &Json, k: &str| -> Result<usize, String> {
-            v.get(k).as_usize().ok_or_else(|| format!("manifest: bad field '{k}'"))
+        let text =
+            std::fs::read_to_string(&path).map_err(|e| DynamapError::io(&path, e))?;
+        let j = Json::parse(&text).map_err(|e| DynamapError::json_in(&path, e))?;
+        let u = |v: &Json, k: &str| -> Result<usize, DynamapError> {
+            v.get(k)
+                .as_usize()
+                .ok_or_else(|| DynamapError::Manifest(format!("bad field '{k}'")))
         };
         let mut layers = Vec::new();
-        for lj in j.get("layers").as_arr().ok_or("manifest: no layers")? {
+        for lj in j
+            .get("layers")
+            .as_arr()
+            .ok_or_else(|| DynamapError::Manifest("no layers".into()))?
+        {
             let mut algos = BTreeMap::new();
             if let Some(obj) = lj.get("algos").as_obj() {
                 for (k, v) in obj {
@@ -96,12 +103,13 @@ impl Manifest {
     }
 
     /// Load a raw f32 little-endian binary file from the artifact dir.
-    pub fn load_f32(&self, file: &str) -> Result<Vec<f32>, String> {
+    pub fn load_f32(&self, file: &str) -> Result<Vec<f32>, DynamapError> {
         let path = self.dir.join(file);
-        let bytes =
-            std::fs::read(&path).map_err(|e| format!("read {}: {e}", path.display()))?;
+        let bytes = std::fs::read(&path).map_err(|e| DynamapError::io(&path, e))?;
         if bytes.len() % 4 != 0 {
-            return Err(format!("{file}: not a multiple of 4 bytes"));
+            return Err(DynamapError::Manifest(format!(
+                "{file}: not a multiple of 4 bytes"
+            )));
         }
         Ok(bytes
             .chunks_exact(4)
@@ -109,19 +117,19 @@ impl Manifest {
             .collect())
     }
 
-    pub fn golden(&self) -> Result<(Vec<f32>, Vec<f32>), String> {
+    pub fn golden(&self) -> Result<(Vec<f32>, Vec<f32>), DynamapError> {
         Ok((self.load_f32(&self.golden_input)?, self.load_f32(&self.golden_output)?))
     }
 
-    pub fn weights(&self, layer: &LayerArtifact) -> Result<Vec<f32>, String> {
+    pub fn weights(&self, layer: &LayerArtifact) -> Result<Vec<f32>, DynamapError> {
         let w = self.load_f32(&layer.weights_file)?;
         if w.len() != layer.weight_count {
-            return Err(format!(
+            return Err(DynamapError::Manifest(format!(
                 "{}: expected {} weights, file has {}",
                 layer.name,
                 layer.weight_count,
                 w.len()
-            ));
+            )));
         }
         Ok(w)
     }

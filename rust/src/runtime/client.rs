@@ -2,6 +2,7 @@
 //! (the /opt/xla-example/load_hlo pattern, generalized with an
 //! executable cache).
 
+use crate::api::DynamapError;
 use std::collections::BTreeMap;
 use std::path::Path;
 
@@ -42,8 +43,9 @@ pub struct PjrtRuntime {
 
 impl PjrtRuntime {
     /// Create the CPU PJRT client.
-    pub fn cpu() -> Result<PjrtRuntime, String> {
-        let client = xla::PjRtClient::cpu().map_err(|e| format!("PjRtClient::cpu: {e:?}"))?;
+    pub fn cpu() -> Result<PjrtRuntime, DynamapError> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| DynamapError::Runtime(format!("PjRtClient::cpu: {e:?}")))?;
         Ok(PjrtRuntime { client, cache: BTreeMap::new() })
     }
 
@@ -52,18 +54,18 @@ impl PjrtRuntime {
     }
 
     /// Load + compile an HLO text artifact (cached).
-    pub fn load(&mut self, path: &Path) -> Result<(), String> {
+    pub fn load(&mut self, path: &Path) -> Result<(), DynamapError> {
         let key = path.to_string_lossy().to_string();
         if self.cache.contains_key(&key) {
             return Ok(());
         }
         let proto = xla::HloModuleProto::from_text_file(&key)
-            .map_err(|e| format!("parse HLO {key}: {e:?}"))?;
+            .map_err(|e| DynamapError::Runtime(format!("parse HLO {key}: {e:?}")))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self
             .client
             .compile(&comp)
-            .map_err(|e| format!("compile {key}: {e:?}"))?;
+            .map_err(|e| DynamapError::Runtime(format!("compile {key}: {e:?}")))?;
         self.cache.insert(key, exe);
         Ok(())
     }
@@ -84,26 +86,27 @@ impl PjrtRuntime {
         path: &Path,
         inputs: &[&TensorBuf],
         out_shape: Vec<usize>,
-    ) -> Result<TensorBuf, String> {
+    ) -> Result<TensorBuf, DynamapError> {
         self.load(path)?;
         let key = path.to_string_lossy().to_string();
         let exe = self.cache.get(&key).unwrap();
+        let rt = |m: String| DynamapError::Runtime(m);
         let mut literals = Vec::with_capacity(inputs.len());
         for t in inputs {
             let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
             let lit = xla::Literal::vec1(&t.data)
                 .reshape(&dims)
-                .map_err(|e| format!("reshape input: {e:?}"))?;
+                .map_err(|e| rt(format!("reshape input: {e:?}")))?;
             literals.push(lit);
         }
         let result = exe
             .execute::<xla::Literal>(&literals)
-            .map_err(|e| format!("execute {key}: {e:?}"))?;
+            .map_err(|e| rt(format!("execute {key}: {e:?}")))?;
         let lit = result[0][0]
             .to_literal_sync()
-            .map_err(|e| format!("fetch result: {e:?}"))?;
-        let out = lit.to_tuple1().map_err(|e| format!("untuple: {e:?}"))?;
-        let data = out.to_vec::<f32>().map_err(|e| format!("to_vec: {e:?}"))?;
+            .map_err(|e| rt(format!("fetch result: {e:?}")))?;
+        let out = lit.to_tuple1().map_err(|e| rt(format!("untuple: {e:?}")))?;
+        let data = out.to_vec::<f32>().map_err(|e| rt(format!("to_vec: {e:?}")))?;
         Ok(TensorBuf::new(out_shape, data))
     }
 }

@@ -1,11 +1,12 @@
 //! Integration tests across the whole DSE pipeline: zoo × devices ×
-//! policies, cost-graph structural invariants, determinism, and
-//! failure-injection on user-supplied inputs.
+//! policies, cost-graph structural invariants, determinism,
+//! failure-injection on user-supplied inputs, and the staged
+//! `Compiler → PlanArtifact` API with its plan cache.
 
+use dynamap::api::{Compiler, DynamapError, PlanArtifact, PlanCache};
 use dynamap::cost::graph_build::{BuildOpts, CostGraph, Policy};
-use dynamap::cost::transition::TransitionModel;
 use dynamap::cost::Device;
-use dynamap::dse::{Dse, DseConfig};
+use dynamap::dse::DseConfig;
 use dynamap::graph::{config, zoo};
 use dynamap::pbqp::brute::search_space;
 use dynamap::sp;
@@ -15,13 +16,14 @@ fn every_zoo_model_maps_on_every_device() {
     for model in zoo::names() {
         let cnn = zoo::by_name(model).unwrap();
         for device in [Device::alveo_u200(), Device::small_edge()] {
-            let mut cfg = DseConfig::with_device(device.clone());
             // keep the sweep small for the big nets
-            cfg.p1_lo = 8;
-            cfg.p1_hi = 256.min(device.dsp_cap);
-            let plan = Dse::new(cfg).run(&cnn).unwrap_or_else(|e| {
-                panic!("{model} on {}: {e}", device.name)
-            });
+            let compiler = Compiler::new()
+                .device(device.clone())
+                .p1_bounds(8, 256.min(device.dsp_cap));
+            let plan = compiler
+                .compile(&cnn)
+                .unwrap_or_else(|e| panic!("{model} on {}: {e}", device.name))
+                .into_plan();
             assert!(plan.p1 * plan.p2 <= device.dsp_cap, "{model}: over budget");
             assert!(plan.total_latency_ms > 0.0);
             assert_eq!(plan.mapping.layers.len(), cnn.conv_count());
@@ -44,19 +46,14 @@ fn optimality_ordering_holds_everywhere() {
     // policy must hold on every model (Theorem 4.1 optimality).
     for model in zoo::names() {
         let cnn = zoo::by_name(model).unwrap();
-        let mut cfg = DseConfig::alveo_u200();
-        cfg.p1_lo = 32;
-        cfg.p1_hi = 128;
-        let dse = Dse::new(cfg);
-        let opt = dse.run(&cnn).unwrap().total_latency_ms;
+        let compiler = Compiler::new().p1_bounds(32, 128);
+        let opt = compiler.compile(&cnn).unwrap().plan.total_latency_ms;
         for p in
             [Policy::Im2colOnly, Policy::Kn2rowApplied, Policy::WinoApplied, Policy::Greedy]
         {
-            let bl = dse.run_policy(&cnn, p).unwrap().total_latency_ms;
-            assert!(
-                opt <= bl + 1e-9,
-                "{model}: OPT {opt} > {p:?} {bl}"
-            );
+            let bl =
+                compiler.clone().policy(p).compile(&cnn).unwrap().plan.total_latency_ms;
+            assert!(opt <= bl + 1e-9, "{model}: OPT {opt} > {p:?} {bl}");
         }
     }
 }
@@ -89,9 +86,9 @@ fn cost_graphs_remain_series_parallel() {
 #[test]
 fn dse_is_deterministic() {
     let cnn = zoo::googlenet();
-    let dse = Dse::new(DseConfig::alveo_u200());
-    let a = dse.run(&cnn).unwrap();
-    let b = dse.run(&cnn).unwrap();
+    let compiler = Compiler::new();
+    let a = compiler.compile(&cnn).unwrap().into_plan();
+    let b = compiler.compile(&cnn).unwrap().into_plan();
     assert_eq!(a.p1, b.p1);
     assert_eq!(a.p2, b.p2);
     assert_eq!(a.mapping.assignment, b.mapping.assignment);
@@ -120,14 +117,10 @@ fn sp_solver_matches_brute_on_real_cost_graph() {
 #[test]
 fn fusion_and_weight_overlap_only_help() {
     let cnn = zoo::googlenet();
-    let mut on = DseConfig::alveo_u200();
-    on.p1_lo = 64;
-    on.p1_hi = 128;
-    let mut off = on.clone();
-    off.opts.sram_fuse = false;
-    off.opts.overlap_weight_load = false;
-    let l_on = Dse::new(on).run(&cnn).unwrap().total_latency_ms;
-    let l_off = Dse::new(off).run(&cnn).unwrap().total_latency_ms;
+    let on = Compiler::new().p1_bounds(64, 128);
+    let off = on.clone().sram_fuse(false).overlap_weight_load(false);
+    let l_on = on.compile(&cnn).unwrap().plan.total_latency_ms;
+    let l_off = off.compile(&cnn).unwrap().plan.total_latency_ms;
     assert!(l_on <= l_off + 1e-9, "optimizations should not hurt: {l_on} vs {l_off}");
 }
 
@@ -137,11 +130,43 @@ fn json_roundtrip_preserves_dse_result() {
     let tmp = std::env::temp_dir().join("dynamap_mini.json");
     config::save(&cnn, tmp.to_str().unwrap()).unwrap();
     let loaded = config::load(tmp.to_str().unwrap()).unwrap();
-    let dse = Dse::new(DseConfig::with_device(Device::small_edge()));
-    let a = dse.run(&cnn).unwrap();
-    let b = dse.run(&loaded).unwrap();
+    let compiler = Compiler::new().device(Device::small_edge());
+    let a = compiler.compile(&cnn).unwrap().into_plan();
+    let b = compiler.compile(&loaded).unwrap().into_plan();
     assert_eq!(a.total_latency_ms, b.total_latency_ms);
     assert_eq!(a.mapping.assignment, b.mapping.assignment);
+}
+
+#[test]
+fn plan_artifact_roundtrip_and_cache() {
+    let cnn = zoo::mini_inception();
+    let compiler = Compiler::new().device(Device::small_edge());
+    let artifact = compiler.compile(&cnn).unwrap();
+
+    // full value round-trip through disk
+    let path = std::env::temp_dir()
+        .join(format!("dynamap_pipeline_artifact_{}.json", std::process::id()));
+    artifact.save(&path).unwrap();
+    let back = PlanArtifact::load(&path).unwrap();
+    assert_eq!(back.model, "mini-inception");
+    assert_eq!(back.fingerprint, compiler.fingerprint());
+    assert_eq!(back.plan.mapping.assignment, artifact.plan.mapping.assignment);
+    assert_eq!(back.plan.total_latency_ms, artifact.plan.total_latency_ms);
+    std::fs::remove_file(&path).ok();
+
+    // cache: second resolution must not re-run the DSE
+    let dir = std::env::temp_dir()
+        .join(format!("dynamap_pipeline_cache_{}", std::process::id()));
+    let probe = Compiler::new().device(Device::small_edge());
+    let cache = PlanCache::new(&dir);
+    std::fs::remove_file(cache.path_for(&probe, &cnn.name)).ok();
+    let (_, cached) = cache.load_or_compile(&probe, &cnn).unwrap();
+    assert!(!cached);
+    let (hit, cached) = cache.load_or_compile(&probe, &cnn).unwrap();
+    assert!(cached, "second resolution should come from the cache");
+    assert_eq!(probe.compile_count(), 1, "cached path must not re-run the DSE");
+    assert_eq!(hit.plan.mapping.assignment, artifact.plan.mapping.assignment);
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]
@@ -157,22 +182,33 @@ fn failure_injection_bad_inputs() {
     )
     .unwrap();
     assert!(config::load(tmp.to_str().unwrap()).is_err());
-    // missing artifact dir
-    assert!(dynamap::runtime::Manifest::load("/no/such/dir").is_err());
-    // zero-DSP device cannot panic the sweep
-    let mut cfg = DseConfig::with_device(Device::small_edge());
-    cfg.device.dsp_cap = 1;
-    cfg.p1_lo = 1;
-    cfg.p1_hi = 1;
-    let plan = Dse::new(cfg).run(&zoo::mini_inception()).unwrap();
+    // missing artifact dir surfaces a typed Io error
+    let e = dynamap::runtime::Manifest::load("/no/such/dir").unwrap_err();
+    assert!(matches!(e, DynamapError::Io { .. }), "{e}");
+    // degenerate sweep bounds are typed Dse errors, not panics
+    let e = Compiler::new()
+        .device(Device::small_edge())
+        .p1_bounds(8, 2)
+        .compile(&zoo::mini_inception())
+        .unwrap_err();
+    assert!(matches!(e, DynamapError::Dse(_)), "{e}");
+    // one-PE device cannot panic the sweep
+    let mut device = Device::small_edge();
+    device.dsp_cap = 1;
+    let plan = Compiler::new()
+        .device(device)
+        .p1_bounds(1, 1)
+        .compile(&zoo::mini_inception())
+        .unwrap()
+        .into_plan();
     assert_eq!((plan.p1, plan.p2), (1, 1));
 }
 
 #[test]
 fn emit_produces_consistent_package() {
     let cnn = zoo::mini_inception();
-    let dse = Dse::new(DseConfig::with_device(Device::small_edge()));
-    let plan = dse.run(&cnn).unwrap();
+    let compiler = Compiler::new().device(Device::small_edge());
+    let plan = compiler.compile(&cnn).unwrap().into_plan();
     let v = dynamap::emit::verilog::overlay_top(&plan);
     assert!(v.contains(&format!("P_SA1 = {}", plan.p1)));
     let c = dynamap::emit::control::control_stream(&cnn, &plan);
@@ -181,4 +217,21 @@ fn emit_produces_consistent_package() {
     // control words' cycle estimates sum to the plan's compute portion
     let sum: f64 = words.iter().map(|w| w.get("est_cycles").as_f64().unwrap()).sum();
     assert!(sum > 0.0);
+}
+
+#[test]
+#[allow(deprecated)]
+fn deprecated_shims_still_work() {
+    use dynamap::dse::Dse;
+    let cnn = zoo::mini_inception();
+    let cfg = DseConfig::with_device(Device::small_edge());
+    let old = Dse::new(cfg.clone());
+    let plan = old.run(&cnn).unwrap();
+    let new = Compiler::from_config(cfg).compile(&cnn).unwrap().into_plan();
+    assert_eq!(plan.mapping.assignment, new.mapping.assignment);
+    assert_eq!(plan.total_latency_ms, new.total_latency_ms);
+    let bl = old.run_policy(&cnn, Policy::Im2colOnly).unwrap();
+    assert!(plan.total_latency_ms <= bl.total_latency_ms + 1e-9);
+    let fixed = old.run_fixed_shape(&cnn, 16, 16).unwrap();
+    assert_eq!((fixed.p1, fixed.p2), (16, 16));
 }

@@ -1,12 +1,11 @@
 //! PJRT integration tests: every (layer, algorithm) artifact must
 //! reproduce the Python oracle's per-layer golden outputs, and the
-//! end-to-end engine must reproduce the whole-network golden.
+//! end-to-end session must reproduce the whole-network golden.
 //!
 //! These tests are skipped (with a note) when `make artifacts` has not
 //! been run.
 
-use dynamap::coordinator::{EnginePolicy, InferenceEngine};
-use dynamap::cost::graph_build::Policy;
+use dynamap::api::{Compiler, Policy, Session};
 use dynamap::runtime::{Manifest, PjrtRuntime, TensorBuf};
 
 fn artifacts_dir() -> Option<String> {
@@ -59,20 +58,99 @@ fn every_layer_algo_artifact_matches_oracle() {
 }
 
 #[test]
-fn engine_reproduces_golden_for_every_policy() {
+fn session_reproduces_golden_for_every_policy() {
     let Some(dir) = artifacts_dir() else { return };
     for policy in [
-        EnginePolicy::Optimal,
-        EnginePolicy::Baseline(Policy::Im2colOnly),
-        EnginePolicy::Baseline(Policy::Kn2rowApplied),
-        EnginePolicy::Baseline(Policy::WinoApplied),
-        EnginePolicy::Baseline(Policy::Greedy),
+        None,
+        Some(Policy::Im2colOnly),
+        Some(Policy::Kn2rowApplied),
+        Some(Policy::WinoApplied),
+        Some(Policy::Greedy),
     ] {
-        let label = format!("{policy:?}");
-        let mut engine = InferenceEngine::new(&dir, policy).unwrap();
-        let err = engine.validate_golden().unwrap();
-        assert!(err < 1e-3, "{label}: golden max |Δ| = {err}");
+        let mut builder = Session::builder(dir.as_str());
+        if let Some(p) = policy {
+            builder = builder.policy(p);
+        }
+        let mut session = builder.build().unwrap();
+        assert_eq!(session.model(), "mini-inception");
+        let err = session.validate_golden().unwrap();
+        assert!(err < 1e-3, "{policy:?}: golden max |Δ| = {err}");
     }
+}
+
+#[test]
+fn session_infer_batch_matches_sequential() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut session = Session::builder(dir.as_str()).build().unwrap();
+    let (gi, _) = session.manifest().golden().unwrap();
+    let (c, h1, h2) = session.manifest().input;
+    let golden = TensorBuf::new(vec![c, h1, h2], gi);
+
+    let n = 3;
+    let batch: Vec<TensorBuf> = vec![golden.clone(); n];
+    let (outputs, metrics) = session.infer_batch(&batch).unwrap();
+    assert_eq!(outputs.len(), n);
+    assert_eq!(metrics.per_request.len(), n);
+    assert_eq!(metrics.stats.count(), n, "aggregate stats must count N requests");
+    assert_eq!(session.stats().count(), n, "session-wide stats must count N requests");
+
+    // batched outputs are bit-identical to N sequential infer calls
+    for (i, batched) in outputs.iter().enumerate() {
+        let (seq, _) = session.infer(&golden).unwrap();
+        assert_eq!(batched, &seq, "request {i}: batched != sequential");
+    }
+    assert_eq!(session.stats().count(), 2 * n);
+}
+
+#[test]
+fn session_loads_cached_plan_without_rerunning_dse() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cache_dir = std::env::temp_dir()
+        .join(format!("dynamap_session_cache_{}", std::process::id()));
+    std::fs::create_dir_all(&cache_dir).ok();
+
+    // first session: compiles the plan and persists it
+    let c1 = Compiler::new();
+    std::fs::remove_file(cache_dir.join(c1.cache_file_name("mini-inception"))).ok();
+    let s1 = Session::builder(dir.as_str())
+        .compiler(c1.clone())
+        .plan_cache(&cache_dir)
+        .build()
+        .unwrap();
+    assert!(!s1.plan_from_cache());
+    assert_eq!(c1.compile_count(), 1);
+
+    // fresh session with an equivalent compiler: plan comes from disk,
+    // the DSE (and CostGraph::build) never runs
+    let c2 = Compiler::new();
+    let mut s2 = Session::builder(dir.as_str())
+        .compiler(c2.clone())
+        .plan_cache(&cache_dir)
+        .build()
+        .unwrap();
+    assert!(s2.plan_from_cache());
+    assert_eq!(c2.compile_count(), 0, "cached session must not re-run the DSE");
+    assert_eq!(
+        s2.plan().unwrap().plan.mapping.assignment,
+        s1.plan().unwrap().plan.mapping.assignment
+    );
+    // and it still serves correctly
+    let err = s2.validate_golden().unwrap();
+    assert!(err < 1e-3, "cached-plan session golden max |Δ| = {err}");
+    std::fs::remove_dir_all(&cache_dir).ok();
+}
+
+#[test]
+fn session_serves_explicit_plan_artifact() {
+    let Some(dir) = artifacts_dir() else { return };
+    let artifact = Compiler::new()
+        .compile(&dynamap::graph::zoo::mini_inception())
+        .unwrap();
+    let mut session =
+        Session::builder(dir.as_str()).plan(artifact).build().unwrap();
+    assert!(session.plan_from_cache());
+    let err = session.validate_golden().unwrap();
+    assert!(err < 1e-3);
 }
 
 #[test]
@@ -93,4 +171,15 @@ fn fused_artifact_matches_golden() {
         .map(|(a, b)| (a - b).abs())
         .fold(0.0f32, f32::max);
     assert!(max_err < 1e-3, "fused: max |Δ| = {max_err}");
+}
+
+#[test]
+#[allow(deprecated)]
+fn deprecated_engine_shim_still_serves() {
+    use dynamap::coordinator::{EnginePolicy, InferenceEngine};
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = InferenceEngine::new(&dir, EnginePolicy::Optimal).unwrap();
+    let err = engine.validate_golden().unwrap();
+    assert!(err < 1e-3, "engine shim golden max |Δ| = {err}");
+    assert!(engine.loaded_executables() > 0);
 }
