@@ -60,6 +60,41 @@ pub fn pad_accumulate(
     }
 }
 
+/// [`pad_accumulate`] for a patch in its GEMM-native transposed
+/// `H1H2 × C_out` orientation (the systolic array and the kernel layer
+/// both produce `Xᵀ·Wᵀ` outputs) — accumulating straight from `patchᵀ`
+/// deletes the per-tap transpose the old path paid.
+pub fn pad_accumulate_t(
+    acc: &mut Tensor,
+    patch_t: &Mat,
+    spec: &ConvSpec,
+    ky: usize,
+    kx: usize,
+) {
+    let (o1, o2) = (spec.o1(), spec.o2());
+    debug_assert_eq!((acc.c, acc.h, acc.w), (spec.c_out, o1, o2));
+    debug_assert_eq!(patch_t.rows, spec.h1 * spec.h2);
+    debug_assert_eq!(patch_t.cols, spec.c_out);
+    let c_out = spec.c_out;
+    for oy in 0..o1 {
+        let iy = (oy * spec.s + ky) as isize - spec.p1 as isize;
+        if iy < 0 || iy >= spec.h1 as isize {
+            continue; // whole output row falls on the zero pad
+        }
+        for ox in 0..o2 {
+            let ix = (ox * spec.s + kx) as isize - spec.p2 as isize;
+            if ix < 0 || ix >= spec.h2 as isize {
+                continue;
+            }
+            let row = (iy as usize * spec.h2 + ix as usize) * c_out;
+            let vals = &patch_t.data[row..row + c_out];
+            for (co, &v) in vals.iter().enumerate() {
+                acc.data[(co * o1 + oy) * o2 + ox] += v;
+            }
+        }
+    }
+}
+
 /// kn2row convolution: K1K2 unit-conv GEMMs + Pad-and-Accumulate.
 pub fn conv2d(input: &Tensor, weights: &Weights, spec: &ConvSpec) -> Tensor {
     let mut acc = Tensor::zeros(spec.c_out, spec.o1(), spec.o2());
@@ -122,6 +157,28 @@ mod tests {
             let b = conv2d(&input, &w, &spec);
             if a.data != b.data {
                 return Err(format!("mismatch for spec {spec:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pad_accumulate_t_matches_untransposed() {
+        check("pad_accumulate_t", 32, |r: &mut Rng| {
+            let spec = im2col::random_spec(r);
+            let input = Tensor::random_i8(spec.c_in, spec.h1, spec.h2, r);
+            let w = Weights::random_i8(spec.c_out, spec.c_in, spec.k1, spec.k2, r);
+            let mut a = Tensor::zeros(spec.c_out, spec.o1(), spec.o2());
+            let mut b = Tensor::zeros(spec.c_out, spec.o1(), spec.o2());
+            for ky in 0..spec.k1 {
+                for kx in 0..spec.k2 {
+                    let patch = unit_conv(&input, &w, ky, kx);
+                    pad_accumulate(&mut a, &patch, &spec, ky, kx);
+                    pad_accumulate_t(&mut b, &patch.transposed(), &spec, ky, kx);
+                }
+            }
+            if a.data != b.data {
+                return Err(format!("transposed accumulate mismatch for {spec:?}"));
             }
             Ok(())
         });

@@ -142,8 +142,28 @@ impl Mat {
         self.data[i * self.cols + j] = v;
     }
 
-    /// Plain `self × other` matrix multiply.
+    /// Plain `self × other` matrix multiply. Dense inner loop with no
+    /// data-dependent branches (a zero-skip here defeats
+    /// autovectorization on dense data — see [`Mat::matmul_sparse`] for
+    /// the skip-aware variant).
     pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul dim mismatch");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.get(i, k);
+                for j in 0..other.cols {
+                    out.data[i * other.cols + j] += a * other.get(k, j);
+                }
+            }
+        }
+        out
+    }
+
+    /// `self × other` skipping zero left-hand entries — worthwhile only
+    /// when `self` is genuinely sparse (e.g. zero-padded sub-kernel
+    /// matrices); on dense data prefer [`Mat::matmul`].
+    pub fn matmul_sparse(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.rows, "matmul dim mismatch");
         let mut out = Mat::zeros(self.rows, other.cols);
         for i in 0..self.rows {
@@ -191,6 +211,17 @@ mod tests {
         let b = Mat { rows: 2, cols: 2, data: vec![1.0, 1.0, 1.0, 1.0] };
         let c = a.matmul(&b);
         assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_sparse_matches_dense() {
+        use crate::util::rng::Rng;
+        let mut r = Rng::new(9);
+        // mix of zeros and small ints: the skip path must not change
+        // results on integer-valued data
+        let a = Mat::from_fn(6, 7, |_, _| if r.bool() { 0.0 } else { r.i8_small() as f32 });
+        let b = Mat::from_fn(7, 5, |_, _| r.i8_small() as f32);
+        assert_eq!(a.matmul(&b).data, a.matmul_sparse(&b).data);
     }
 
     #[test]

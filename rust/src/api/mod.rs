@@ -15,9 +15,13 @@
 //!    `(model, device, config)`.
 //! 3. [`Session`] — the serving layer: resolves the CNN from the AOT
 //!    manifest's `model` field through the zoo registry, loads (or
-//!    compiles) a plan, pre-compiles every chosen PJRT executable, and
-//!    serves [`Session::infer`] / [`Session::infer_batch`] with
-//!    per-request and aggregate [`LatencyStats`].
+//!    compiles) a plan, lowers every layer's weights once into the
+//!    kernel layer's prepared form, pre-compiles every chosen PJRT
+//!    executable, and serves [`Session::infer`] /
+//!    [`Session::infer_batch`] with per-request and aggregate
+//!    [`LatencyStats`]. [`Backend::Native`] serves from the in-process
+//!    kernel layer (no HLO artifacts needed) and fans `infer_batch`
+//!    out across threads.
 //!
 //! Every fallible call returns the typed [`DynamapError`] instead of
 //! `Result<_, String>`.
@@ -68,7 +72,7 @@ pub mod session;
 pub use artifact::{PlanArtifact, PlanCache};
 pub use compiler::Compiler;
 pub use error::{DynamapError, Result};
-pub use session::{BatchMetrics, InferMetrics, Session, SessionBuilder};
+pub use session::{Backend, BatchMetrics, InferMetrics, Session, SessionBuilder};
 
 pub use crate::coordinator::metrics::LatencyStats;
 pub use crate::cost::graph_build::Policy;

@@ -3,11 +3,26 @@
 //! A session owns everything the request path needs: the parsed AOT
 //! manifest, the CNN resolved from the manifest's `model` field via the
 //! zoo registry, a [`PlanArtifact`] (explicitly provided, loaded from a
-//! [`PlanCache`], or compiled on first construction), the PJRT runtime
-//! with every chosen executable pre-compiled, and pre-loaded weights.
-//! Inference never re-runs the DSE: the plan is resolved once at build
-//! time, mirroring the paper's split between the offline mapping flow
-//! and the reused overlay.
+//! [`PlanCache`], or compiled on first construction), the execution
+//! backend, and that backend's weight form — on [`Backend::Native`],
+//! per-layer [`PreparedWeights`] (im2col weight matrix, kn2row per-tap
+//! unit matrices, Winograd-transformed kernels) lowered once at build
+//! time. Inference never re-runs the DSE and never re-derives a weight
+//! transform: everything request-invariant is resolved at build time,
+//! mirroring the paper's split between the offline mapping flow and the
+//! reused overlay.
+//!
+//! Two backends serve the conv layers:
+//!
+//! * [`Backend::Pjrt`] (default) executes the AOT-compiled HLO
+//!   artifacts through the PJRT runtime — the end-to-end path validated
+//!   against the Python oracle goldens.
+//! * [`Backend::Native`] executes through the in-process kernel layer
+//!   ([`crate::kernels`]) — no XLA executables needed, and because its
+//!   request state is plain `Send + Sync` data, [`Session::infer_batch`]
+//!   fans requests out across threads. (The PJRT client wraps foreign
+//!   handles that are not thread-safe, so the PJRT backend serves
+//!   batches sequentially.)
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -16,14 +31,27 @@ use std::time::Instant;
 use super::artifact::{PlanArtifact, PlanCache};
 use super::compiler::Compiler;
 use super::error::DynamapError;
-use crate::algos::tensor::Tensor;
+use crate::algos::tensor::{Tensor, Weights};
 use crate::coordinator::metrics::LatencyStats;
 use crate::cost::conv::Algo;
 use crate::cost::graph_build::Policy;
-use crate::graph::layer::Op;
+use crate::graph::layer::{ConvSpec, Op};
 use crate::graph::{zoo, Cnn};
+use crate::kernels::PreparedWeights;
 use crate::overlay::pooling;
 use crate::runtime::{Manifest, PjrtRuntime, TensorBuf};
+use crate::util::parallel::parallel_map;
+
+/// How conv layers execute on the request path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Backend {
+    /// AOT-compiled HLO artifacts through the PJRT runtime.
+    #[default]
+    Pjrt,
+    /// In-process kernel layer over the session's [`PreparedWeights`];
+    /// enables parallel batch serving.
+    Native,
+}
 
 /// Per-inference metrics.
 #[derive(Debug, Clone)]
@@ -49,6 +77,7 @@ pub struct SessionBuilder {
     custom_map: Option<BTreeMap<String, String>>,
     plan: Option<PlanArtifact>,
     cache_dir: Option<PathBuf>,
+    backend: Backend,
 }
 
 impl SessionBuilder {
@@ -86,10 +115,21 @@ impl SessionBuilder {
         self
     }
 
-    /// Resolve the plan, pre-compile every chosen executable and
-    /// pre-load weights.
+    /// Choose the conv execution backend (default: [`Backend::Pjrt`]).
+    /// [`Backend::Native`] serves from the in-process kernel layer: no
+    /// HLO artifacts or PJRT client are required — only the manifest and
+    /// weight files — and `infer_batch` parallelizes across requests.
+    pub fn backend(mut self, backend: Backend) -> SessionBuilder {
+        self.backend = backend;
+        self
+    }
+
+    /// Resolve the plan, pre-compile every chosen executable (PJRT
+    /// backend), pre-load weights and lower them into per-layer
+    /// [`PreparedWeights`].
     pub fn build(self) -> Result<Session, DynamapError> {
-        let SessionBuilder { artifacts_dir, compiler, custom_map, plan, cache_dir } = self;
+        let SessionBuilder { artifacts_dir, compiler, custom_map, plan, cache_dir, backend } =
+            self;
         if custom_map.is_some() && (plan.is_some() || cache_dir.is_some()) {
             return Err(DynamapError::Config(
                 "SessionBuilder: .algo_map bypasses the DSE and cannot be combined with \
@@ -142,23 +182,71 @@ impl SessionBuilder {
             (None, None) => unreachable!("plan or custom map is always resolved"),
         };
 
-        // clamp to AOT'd algorithms, pre-compile executables, load weights
-        let mut runtime = PjrtRuntime::cpu()?;
+        // clamp to executable algorithms, pre-compile executables (PJRT)
+        // and lower weights once into the kernel layer's prepared form
+        let mut runtime = match backend {
+            Backend::Pjrt => Some(PjrtRuntime::cpu()?),
+            Backend::Native => None,
+        };
         let mut clamped = BTreeMap::new();
         let mut weights = BTreeMap::new();
+        let mut prepared = BTreeMap::new();
         for layer in &manifest.layers {
             let want = algo_map.get(&layer.name).map(|s| s.as_str()).unwrap_or("im2col");
-            let algo = if layer.algos.contains_key(want) { want } else { "im2col" };
-            let art = layer.algos.get(algo).ok_or_else(|| {
-                DynamapError::Manifest(format!("{}: no artifact for {algo}", layer.name))
-            })?;
-            runtime.load(&manifest.dir.join(art))?;
+            let algo = match &mut runtime {
+                Some(rt) => {
+                    // PJRT: clamp to the algorithms that were AOT'd
+                    let algo = if layer.algos.contains_key(want) { want } else { "im2col" };
+                    let art = layer.algos.get(algo).ok_or_else(|| {
+                        DynamapError::Manifest(format!(
+                            "{}: no artifact for {algo}",
+                            layer.name
+                        ))
+                    })?;
+                    rt.load(&manifest.dir.join(art))?;
+                    algo
+                }
+                None => {
+                    // native: every kernel-layer algorithm is available
+                    if ["im2col", "kn2row", "winograd"].contains(&want) {
+                        want
+                    } else {
+                        "im2col"
+                    }
+                }
+            };
             clamped.insert(layer.name.clone(), algo.to_string());
-            let w = manifest.weights(layer)?;
-            weights.insert(
-                layer.name.clone(),
-                TensorBuf::new(vec![layer.c_out, layer.c_in, layer.k1, layer.k2], w),
+            let spec = ConvSpec::new(
+                layer.c_in, layer.c_out, layer.h1, layer.h2, layer.k1, layer.k2, layer.s,
+                layer.p1, layer.p2,
             );
+            let wts = Weights {
+                c_out: layer.c_out,
+                c_in: layer.c_in,
+                k1: layer.k1,
+                k2: layer.k2,
+                data: manifest.weights(layer)?,
+            };
+            // each backend keeps exactly the weight form its request
+            // path reads: native serves from the pre-lowered kernels,
+            // PJRT feeds raw tensors to its executables
+            match backend {
+                Backend::Native => {
+                    prepared.insert(
+                        layer.name.clone(),
+                        PreparedWeights::new(&wts, &spec, resolve_algo(algo, &spec)),
+                    );
+                }
+                Backend::Pjrt => {
+                    weights.insert(
+                        layer.name.clone(),
+                        TensorBuf::new(
+                            vec![layer.c_out, layer.c_in, layer.k1, layer.k2],
+                            wts.data,
+                        ),
+                    );
+                }
+            }
         }
         // every conv layer of the resolved model must be backed by the
         // manifest, otherwise the serving loop would hit a missing
@@ -178,22 +266,133 @@ impl SessionBuilder {
             artifact,
             from_cache,
             algo_map: clamped,
+            backend,
             runtime,
             weights,
+            prepared,
             aggregate: LatencyStats::new(),
         })
     }
 }
 
-/// The serving session: plan + runtime + weights, ready for requests.
+/// Kernel-layer algorithm for a clamped algorithm name, honouring the
+/// same applicability rules as the cost model (non-applicable Winograd
+/// falls back to the strided extension or im2col).
+///
+/// Deliberately re-derived from the name + spec rather than carried
+/// through from the plan's typed [`Algo`]: custom `.algo_map` sessions
+/// have no typed plan at all, and a plan compiled with non-default
+/// Winograd hyper-parameters (e.g. `F(4×4, 3×3)`) must *clamp* to the
+/// `F(2×2, 3×3)` core the kernel layer implements instead of panicking
+/// at session build.
+fn resolve_algo(name: &str, spec: &ConvSpec) -> Algo {
+    match name {
+        "kn2row" => Algo::Kn2row,
+        "winograd" => {
+            if spec.winograd_applicable(3) {
+                Algo::Winograd { m: 2, r: 3 }
+            } else if spec.s == 2 && spec.k1 == spec.k2 && spec.k1 >= 3 {
+                Algo::WinogradStrided { m: 2, r: 3 }
+            } else {
+                Algo::Im2col
+            }
+        }
+        _ => Algo::Im2col,
+    }
+}
+
+/// One request through the CNN graph with conv layers executed by the
+/// kernel layer. Free function over plain `Sync` data so a parallel
+/// batch can fan it out across threads without touching the session.
+fn infer_native(
+    cnn: &Cnn,
+    prepared: &BTreeMap<String, PreparedWeights>,
+    algo_map: &BTreeMap<String, String>,
+    input: &TensorBuf,
+) -> Result<(TensorBuf, InferMetrics), DynamapError> {
+    let t_total = Instant::now();
+    let mut per_layer = Vec::new();
+    // activations stay `Tensor` end to end — the only buffer copies are
+    // the request boundary conversions, never per layer
+    let mut values: BTreeMap<usize, Tensor> = BTreeMap::new();
+    let mut final_out = None;
+    for id in cnn.topo_order() {
+        let node = cnn.node(id);
+        let preds = cnn.predecessors(id);
+        let out = match &node.op {
+            Op::Input { c, h1, h2 } => {
+                if input.len() != c * h1 * h2 {
+                    return Err(DynamapError::Shape {
+                        context: "input".into(),
+                        expected: c * h1 * h2,
+                        got: input.len(),
+                    });
+                }
+                Tensor { c: *c, h: *h1, w: *h2, data: input.data.clone() }
+            }
+            Op::Conv(_) => {
+                let pw = prepared.get(&node.name).ok_or_else(|| {
+                    DynamapError::Manifest(format!(
+                        "no prepared weights for layer '{}'",
+                        node.name
+                    ))
+                })?;
+                let t0 = Instant::now();
+                let out = pw.conv2d(&values[&preds[0]]);
+                per_layer.push((
+                    node.name.clone(),
+                    algo_map.get(&node.name).cloned().unwrap_or_default(),
+                    t0.elapsed().as_secs_f64() * 1e6,
+                ));
+                out
+            }
+            Op::Pool(p) => pooling::reference(&values[&preds[0]], p),
+            Op::Concat { c_out, h1, h2 } => {
+                let mut data = Vec::with_capacity(c_out * h1 * h2);
+                for &p in &preds {
+                    data.extend_from_slice(&values[&p].data);
+                }
+                Tensor { c: *c_out, h: *h1, w: *h2, data }
+            }
+            Op::Add { c, h1, h2 } => {
+                let a = &values[&preds[0]];
+                let b = &values[&preds[1]];
+                let data = a.data.iter().zip(&b.data).map(|(x, y)| x + y).collect();
+                Tensor { c: *c, h: *h1, w: *h2, data }
+            }
+            Op::Fc { .. } => {
+                return Err(DynamapError::Runtime(
+                    "FC layers are not part of the serving graph".into(),
+                ))
+            }
+            Op::Output => {
+                final_out = Some(values[&preds[0]].clone());
+                continue;
+            }
+        };
+        values.insert(id, out);
+    }
+    let out =
+        final_out.ok_or_else(|| DynamapError::Graph("no output node reached".into()))?;
+    let m = InferMetrics {
+        total_us: t_total.elapsed().as_secs_f64() * 1e6,
+        per_layer_us: per_layer,
+    };
+    Ok((TensorBuf::new(vec![out.c, out.h, out.w], out.data), m))
+}
+
+/// The serving session: plan + prepared weights + backend, ready for
+/// requests.
 pub struct Session {
     manifest: Manifest,
     cnn: Cnn,
     artifact: Option<PlanArtifact>,
     from_cache: bool,
     algo_map: BTreeMap<String, String>,
-    runtime: PjrtRuntime,
+    backend: Backend,
+    runtime: Option<PjrtRuntime>,
     weights: BTreeMap<String, TensorBuf>,
+    prepared: BTreeMap<String, PreparedWeights>,
     aggregate: LatencyStats,
 }
 
@@ -206,6 +405,7 @@ impl Session {
             custom_map: None,
             plan: None,
             cache_dir: None,
+            backend: Backend::Pjrt,
         }
     }
 
@@ -229,6 +429,11 @@ impl Session {
         &self.cnn.name
     }
 
+    /// The conv execution backend.
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
     /// The resolved plan (absent when an explicit algorithm map was
     /// supplied).
     pub fn plan(&self) -> Option<&PlanArtifact> {
@@ -246,9 +451,22 @@ impl Session {
         &self.algo_map
     }
 
-    /// Executables currently compiled in the PJRT cache.
+    /// Pre-lowered weights for one layer — built once at session
+    /// construction on [`Backend::Native`] (the PJRT backend feeds raw
+    /// tensors to its executables instead and keeps no prepared form).
+    pub fn prepared(&self, layer: &str) -> Option<&PreparedWeights> {
+        self.prepared.get(layer)
+    }
+
+    /// How many layers have pre-lowered weights.
+    pub fn prepared_count(&self) -> usize {
+        self.prepared.len()
+    }
+
+    /// Executables currently compiled in the PJRT cache (0 on the
+    /// native backend).
     pub fn loaded_executables(&self) -> usize {
-        self.runtime.loaded_count()
+        self.runtime.as_ref().map_or(0, |rt| rt.loaded_count())
     }
 
     /// Aggregate latency statistics across every request this session
@@ -283,6 +501,11 @@ impl Session {
         &mut self,
         input: &TensorBuf,
     ) -> Result<(TensorBuf, InferMetrics), DynamapError> {
+        if self.backend == Backend::Native {
+            let (out, m) = infer_native(&self.cnn, &self.prepared, &self.algo_map, input)?;
+            self.aggregate.push(m.total_us);
+            return Ok((out, m));
+        }
         let t_total = Instant::now();
         let mut per_layer = Vec::new();
         let mut values: BTreeMap<usize, TensorBuf> = BTreeMap::new();
@@ -304,12 +527,13 @@ impl Session {
                 }
                 Op::Conv(spec) => {
                     let x = &values[&preds[0]];
+                    let path = self.artifact_path(&node.name)?;
                     // disjoint field borrows: weights stay borrowed while
                     // the runtime executes — no per-request weight copy
                     let w = &self.weights[&node.name];
-                    let path = self.artifact_path(&node.name)?;
+                    let rt = self.runtime.as_mut().expect("PJRT backend has a runtime");
                     let t0 = Instant::now();
-                    let out = self.runtime.execute(
+                    let out = rt.execute(
                         &path,
                         &[x, w],
                         vec![spec.c_out, spec.o1(), spec.o2()],
@@ -362,9 +586,14 @@ impl Session {
         Ok((out, m))
     }
 
-    /// Run a batch of requests sequentially on the shared overlay (the
-    /// paper's single-sample low-latency regime), collecting per-request
-    /// and aggregate latency statistics.
+    /// Run a batch of requests, collecting per-request and aggregate
+    /// latency statistics.
+    ///
+    /// On the native backend, requests fan out across threads (results
+    /// and statistics come back in input order, identical to the
+    /// sequential loop — asserted by the golden-equality tests). The
+    /// PJRT backend serves sequentially on the shared runtime, the
+    /// paper's single-sample low-latency regime.
     pub fn infer_batch(
         &mut self,
         inputs: &[TensorBuf],
@@ -372,11 +601,24 @@ impl Session {
         let mut outputs = Vec::with_capacity(inputs.len());
         let mut per_request = Vec::with_capacity(inputs.len());
         let mut stats = LatencyStats::new();
-        for input in inputs {
-            let (out, m) = self.infer(input)?;
-            stats.push(m.total_us);
-            outputs.push(out);
-            per_request.push(m);
+        if self.backend == Backend::Native {
+            let (cnn, prepared, algo_map) = (&self.cnn, &self.prepared, &self.algo_map);
+            let results =
+                parallel_map(inputs, |_, input| infer_native(cnn, prepared, algo_map, input));
+            for r in results {
+                let (out, m) = r?;
+                stats.push(m.total_us);
+                self.aggregate.push(m.total_us);
+                outputs.push(out);
+                per_request.push(m);
+            }
+        } else {
+            for input in inputs {
+                let (out, m) = self.infer(input)?;
+                stats.push(m.total_us);
+                outputs.push(out);
+                per_request.push(m);
+            }
         }
         Ok((outputs, BatchMetrics { per_request, stats }))
     }

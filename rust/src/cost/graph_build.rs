@@ -19,6 +19,7 @@ use crate::graph::layer::{Op, PoolKind};
 use crate::graph::{Cnn, NodeId};
 use crate::pbqp::{solve_brute, solve_sp, Matrix, Problem, Solution};
 use crate::pbqp::brute::search_space;
+use crate::util::parallel::parallel_map;
 
 /// One entry of a PBQP vertex domain.
 #[derive(Debug, Clone)]
@@ -145,7 +146,11 @@ impl CostGraph {
         let mut vs = BTreeMap::new();
 
         // --- V_c vertices ------------------------------------------------
-        for node in &cnn.nodes {
+        // per-layer cost tables are independent (Eq. 10–12 evaluated per
+        // node over its algorithm × dataflow domain), so the expensive
+        // half of construction fans out across layers; vertex insertion
+        // below stays sequential to keep PBQP vertex ids deterministic
+        let domains = parallel_map(&cnn.nodes, |_, node| {
             let (dom, costs): (Vec<Choice>, Vec<f64>) = match &node.op {
                 Op::Conv(spec) => {
                     let opts = cm.layer_options(spec, p1, p2);
@@ -204,6 +209,9 @@ impl CostGraph {
                     (vec![Choice::Passthrough { node: node.id, seconds: 0.0 }], vec![0.0])
                 }
             };
+            (dom, costs)
+        });
+        for (node, (dom, costs)) in cnn.nodes.iter().zip(domains) {
             let labels = dom.iter().map(|c| c.label()).collect();
             let v = problem.add_vertex(&node.name, costs, labels);
             choices.push(dom);

@@ -14,6 +14,7 @@ use crate::cost::gemm::Dataflow;
 use crate::cost::Algo;
 use crate::graph::layer::Op;
 use crate::graph::Cnn;
+use crate::util::parallel::parallel_map;
 use std::collections::BTreeMap;
 
 /// Output of Algorithm 1.
@@ -50,13 +51,16 @@ pub fn identify_parameters_bounded(
     p1_lo: usize,
     p1_hi: usize,
 ) -> Algo1Result {
+    // candidate shapes are independent: evaluate τ_emp across threads,
+    // then reduce sequentially in sweep order so ties resolve exactly
+    // as the original loop (first/lowest P_SA1 wins)
+    let candidates: Vec<(usize, usize)> = (p1_lo..=p1_hi.min(dsp_cap))
+        .map(|p1| (p1, dsp_cap / p1))
+        .take_while(|&(_, p2)| p2 > 0)
+        .collect();
+    let taus = parallel_map(&candidates, |_, &(p1, p2)| tau_emp(cnn, cm, p1, p2));
     let mut best: Option<(f64, usize, usize)> = None;
-    for p1 in p1_lo..=p1_hi.min(dsp_cap) {
-        let p2 = dsp_cap / p1;
-        if p2 == 0 {
-            break;
-        }
-        let tau = tau_emp(cnn, cm, p1, p2);
+    for (&(p1, p2), tau) in candidates.iter().zip(taus) {
         let better = match best {
             None => true,
             Some((bt, _, _)) => tau < bt,

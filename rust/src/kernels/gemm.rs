@@ -1,0 +1,217 @@
+//! Cache-blocked, transpose-free GEMM over pre-packed `Wᵀ` panels.
+//!
+//! The overlay simulator's old hot path re-transposed `W` on every call
+//! and walked per-PE scalar loops whose only purpose was cycle tallying.
+//! This kernel separates the concerns: it computes `X (a×b) · W (b×c)`
+//! as fast as the host allows, reading `W` through a [`PackedWt`] whose
+//! rows are the *columns* of `W` — so every output element is one dot
+//! product over two contiguous slices, with no per-call allocation
+//! beyond the output.
+//!
+//! Numerical contract: each output element accumulates in ascending-`k`
+//! order, exactly like [`Mat::matmul`], so results are **bit-identical**
+//! to the naive reference (asserted by the property tests below). The
+//! microkernel gains its speed from instruction-level parallelism
+//! *across output columns* (4 independent accumulators), never from
+//! reassociating a single sum.
+
+use crate::algos::tensor::Mat;
+
+/// Column-panel group kept hot across the row loop (`NC · b` floats per
+/// group — sized so a group of panels stays L2-resident for typical
+/// layer shapes).
+const NC: usize = 128;
+
+/// `Wᵀ` stored row-major: `data[j·b .. (j+1)·b]` is column `j` of the
+/// original `b × c` matrix `W`. Pack once per layer (or take a matrix
+/// that is already `c × b`, e.g. the im2col weight matrix) and reuse
+/// across every GEMM call.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedWt {
+    /// Depth (rows of `W`, i.e. the reduction dimension).
+    pub b: usize,
+    /// Columns of `W` (= panel count).
+    pub c: usize,
+    data: Vec<f32>,
+}
+
+impl PackedWt {
+    /// Pack a `b × c` matrix `W` (one transpose, paid at prepare time).
+    pub fn pack(w: &Mat) -> PackedWt {
+        let (b, c) = (w.rows, w.cols);
+        let mut data = vec![0.0f32; b * c];
+        for j in 0..c {
+            for k in 0..b {
+                data[j * b + k] = w.data[k * c + j];
+            }
+        }
+        PackedWt { b, c, data }
+    }
+
+    /// Adopt a matrix that is *already* `Wᵀ` (`c × b` row-major) without
+    /// copying — e.g. `im2col::weight_matrix` or a kn2row per-tap unit
+    /// matrix, which the algorithms naturally produce transposed.
+    pub fn from_wt(wt: Mat) -> PackedWt {
+        PackedWt { b: wt.cols, c: wt.rows, data: wt.data }
+    }
+
+    /// Column `j` of `W` as a contiguous slice.
+    #[inline]
+    pub fn col(&self, j: usize) -> &[f32] {
+        &self.data[j * self.b..(j + 1) * self.b]
+    }
+
+    /// View as the `c × b` matrix `Wᵀ`.
+    pub fn as_wt_mat(&self) -> Mat {
+        Mat { rows: self.c, cols: self.b, data: self.data.clone() }
+    }
+}
+
+/// One sequential dot product over two equal-length slices.
+#[inline]
+fn dot(x: &[f32], w: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), w.len());
+    let mut s = 0.0f32;
+    for k in 0..x.len() {
+        s += x[k] * w[k];
+    }
+    s
+}
+
+/// `X (a×b) · W (b×c)` with `W` pre-packed. Panics on a depth mismatch.
+pub fn gemm(x: &Mat, w: &PackedWt) -> Mat {
+    assert_eq!(x.cols, w.b, "kernels::gemm depth mismatch");
+    let (a, b, c) = (x.rows, x.cols, w.c);
+    let mut out = Mat::zeros(a, c);
+    // block over column panels so a group of NC panels is reused across
+    // every row of X before the next group is streamed in
+    for jc in (0..c).step_by(NC) {
+        let jc_end = (jc + NC).min(c);
+        for i in 0..a {
+            let x_row = &x.data[i * b..(i + 1) * b];
+            let out_row = &mut out.data[i * c..(i + 1) * c];
+            let mut j = jc;
+            // 4-wide microkernel: four independent accumulators share
+            // each x load; every accumulator still sums in k order
+            while j + 4 <= jc_end {
+                let w0 = w.col(j);
+                let w1 = w.col(j + 1);
+                let w2 = w.col(j + 2);
+                let w3 = w.col(j + 3);
+                let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+                for k in 0..b {
+                    let xv = x_row[k];
+                    s0 += xv * w0[k];
+                    s1 += xv * w1[k];
+                    s2 += xv * w2[k];
+                    s3 += xv * w3[k];
+                }
+                out_row[j] = s0;
+                out_row[j + 1] = s1;
+                out_row[j + 2] = s2;
+                out_row[j + 3] = s3;
+                j += 4;
+            }
+            while j < jc_end {
+                out_row[j] = dot(x_row, w.col(j));
+                j += 1;
+            }
+        }
+    }
+    out
+}
+
+/// Convenience wrapper packing `W` per call — for one-shot GEMMs where
+/// no [`PackedWt`] is cached. Prefer [`gemm`] on a prepared operand in
+/// any loop.
+pub fn gemm_xw(x: &Mat, w: &Mat) -> Mat {
+    assert_eq!(x.cols, w.rows, "kernels::gemm_xw dims");
+    gemm(x, &PackedWt::pack(w))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    fn random_mat(r: &mut Rng, rows: usize, cols: usize) -> Mat {
+        Mat::from_fn(rows, cols, |_, _| r.i8_small() as f32)
+    }
+
+    fn random_mat_f32(r: &mut Rng, rows: usize, cols: usize) -> Mat {
+        Mat::from_fn(rows, cols, |_, _| r.f32_range(-1.0, 1.0))
+    }
+
+    #[test]
+    fn pack_round_trips() {
+        let mut r = Rng::new(1);
+        let w = random_mat(&mut r, 7, 5);
+        let p = PackedWt::pack(&w);
+        assert_eq!((p.b, p.c), (7, 5));
+        for j in 0..5 {
+            for k in 0..7 {
+                assert_eq!(p.col(j)[k], w.get(k, j));
+            }
+        }
+        assert_eq!(p.as_wt_mat(), w.transposed());
+    }
+
+    #[test]
+    fn from_wt_is_zero_copy_pack() {
+        let mut r = Rng::new(2);
+        let w = random_mat(&mut r, 9, 4);
+        assert_eq!(PackedWt::from_wt(w.transposed()), PackedWt::pack(&w));
+    }
+
+    #[test]
+    fn matches_naive_matmul_bitwise_random_shapes() {
+        // includes ragged shapes not divisible by the microkernel width
+        // or the NC panel block, plus degenerate 1-dims
+        check("kernels_gemm_vs_matmul", 96, |r: &mut Rng| {
+            let (a, b, c) = (r.range(1, 40), r.range(1, 40), r.range(1, 300));
+            let x = random_mat_f32(r, a, b);
+            let w = random_mat_f32(r, b, c);
+            let fast = gemm_xw(&x, &w);
+            let naive = x.matmul(&w);
+            if fast.data != naive.data {
+                return Err(format!("bitwise mismatch for ({a},{b},{c})"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn exact_on_integer_data() {
+        check("kernels_gemm_int_exact", 48, |r: &mut Rng| {
+            let (a, b, c) = (r.range(1, 24), r.range(1, 24), r.range(1, 24));
+            let x = random_mat(r, a, b);
+            let w = random_mat(r, b, c);
+            let p = PackedWt::pack(&w);
+            let fast = gemm(&x, &p);
+            let naive = x.matmul(&w);
+            if fast != naive {
+                return Err(format!("mismatch for ({a},{b},{c})"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn identity_and_known_values() {
+        let id = Mat::from_fn(3, 3, |i, j| if i == j { 1.0 } else { 0.0 });
+        let m = Mat::from_fn(3, 3, |i, j| (i * 3 + j) as f32);
+        assert_eq!(gemm_xw(&m, &id), m);
+        let a = Mat { rows: 2, cols: 2, data: vec![1.0, 2.0, 3.0, 4.0] };
+        let b = Mat { rows: 2, cols: 2, data: vec![1.0, 1.0, 1.0, 1.0] };
+        assert_eq!(gemm_xw(&a, &b).data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "depth mismatch")]
+    fn depth_mismatch_panics() {
+        let x = Mat::zeros(2, 3);
+        let w = PackedWt::pack(&Mat::zeros(4, 2));
+        gemm(&x, &w);
+    }
+}

@@ -1,0 +1,23 @@
+//! Fast host-side kernel layer: functional compute decoupled from cycle
+//! accounting.
+//!
+//! The overlay simulator ([`crate::overlay`]) answers two questions that
+//! used to be entangled in one pass: *what is the output* and *what does
+//! it cost on the array*. This module owns the first question — a
+//! cache-blocked, transpose-free [`gemm`] over packed `Wᵀ` panels
+//! ([`PackedWt`]) and per-layer pre-lowered weights
+//! ([`PreparedWeights`]: im2col weight matrix, kn2row per-tap unit
+//! matrices, Winograd `G g Gᵀ` kernels) built once at plan time — while
+//! the cost question is answered closed-form by [`crate::cost::gemm`]
+//! (Eq. 9–14). The split makes the serving hot path pure compute and is
+//! cross-checked in two directions: kernel outputs are bit-identical to
+//! the naive references in [`crate::algos`], and the analytic cycle
+//! stats are asserted equal to the old loop-derived schedule walk
+//! (`SystolicSim::loop_stats`) in debug builds and tests.
+#![deny(clippy::correctness, clippy::suspicious)]
+
+pub mod gemm;
+pub mod prepared;
+
+pub use gemm::{gemm, gemm_xw, PackedWt};
+pub use prepared::{PreparedKernel, PreparedWeights};

@@ -1,0 +1,320 @@
+//! Pre-lowered per-layer weights: the offline half of the fast conv
+//! path.
+//!
+//! fpgaConvNet and f-CNNx both pre-lower weights into the on-device
+//! layout in the offline toolflow; DYNAMAP's analogue is per-algorithm:
+//! the im2col weight matrix, kn2row's per-tap unit matrices and the
+//! Winograd-transformed kernels `G g Gᵀ` depend only on the layer's
+//! weights and chosen algorithm — never on the request — so a serving
+//! session builds a [`PreparedWeights`] once per layer at plan time and
+//! the request path is pure compute on packed panels.
+
+use super::gemm::{gemm, PackedWt};
+use crate::algos::tensor::{Mat, Tensor, Weights};
+use crate::algos::{im2col, kn2row, winograd};
+use crate::cost::conv::Algo;
+use crate::graph::layer::ConvSpec;
+
+/// The algorithm-specific pre-lowered form.
+#[derive(Debug, Clone)]
+pub enum PreparedKernel {
+    /// im2col: the `C_out × K1K2C_in` weight matrix — already `Wᵀ` of
+    /// the `(O1O2 × K1K2C_in) · (K1K2C_in × C_out)` GEMM.
+    Im2col { wt: PackedWt },
+    /// kn2row: one `C_out × C_in` unit matrix per kernel tap, in
+    /// `(ky · K2 + kx)` order.
+    Kn2row { taps: Vec<PackedWt> },
+    /// Winograd F(m×m, r×r): per sub-kernel round (`gy · groups + gx`),
+    /// the `(m+r−1)²` transformed point matrices `Uᵀ (C_out × C_in)`.
+    Winograd { m: usize, r: usize, groups: usize, u: Vec<Vec<PackedWt>> },
+    /// Strided-Winograd extension: functional fallback through the
+    /// polyphase decomposition keeps the raw weights.
+    Direct { weights: Weights },
+}
+
+/// Weights for one conv layer, lowered once for a chosen algorithm.
+#[derive(Debug, Clone)]
+pub struct PreparedWeights {
+    pub spec: ConvSpec,
+    pub algo: Algo,
+    pub kernel: PreparedKernel,
+}
+
+impl PreparedWeights {
+    /// Lower `weights` for `algo`. This is the only place the per-layer
+    /// transforms run; everything downstream reuses the packed panels.
+    pub fn new(weights: &Weights, spec: &ConvSpec, algo: Algo) -> PreparedWeights {
+        let kernel = match algo {
+            Algo::Im2col => {
+                PreparedKernel::Im2col { wt: PackedWt::from_wt(im2col::weight_matrix(weights)) }
+            }
+            Algo::Kn2row => {
+                let mut taps = Vec::with_capacity(spec.k1 * spec.k2);
+                for ky in 0..spec.k1 {
+                    for kx in 0..spec.k2 {
+                        taps.push(PackedWt::from_wt(kn2row::unit_weight_matrix(
+                            weights, ky, kx,
+                        )));
+                    }
+                }
+                PreparedKernel::Kn2row { taps }
+            }
+            Algo::Winograd { m, r } => {
+                assert_eq!((m, r), (2, 3), "kernel layer implements F(2×2, 3×3)");
+                let a = m + r - 1;
+                let groups = spec.k1.div_ceil(r);
+                let mut u = Vec::with_capacity(groups * groups);
+                for gy in 0..groups {
+                    for gx in 0..groups {
+                        let mut mats = vec![Mat::zeros(spec.c_out, spec.c_in); a * a];
+                        for co in 0..spec.c_out {
+                            for ci in 0..spec.c_in {
+                                let k3 = Mat::from_fn(r, r, |y, x| {
+                                    let ky = gy * r + y;
+                                    let kx = gx * r + x;
+                                    if ky < spec.k1 && kx < spec.k2 {
+                                        weights.get(co, ci, ky, kx)
+                                    } else {
+                                        0.0
+                                    }
+                                });
+                                let ut = winograd::transform_kernel(&k3);
+                                for py in 0..a {
+                                    for px in 0..a {
+                                        mats[py * a + px].set(co, ci, ut.get(py, px));
+                                    }
+                                }
+                            }
+                        }
+                        u.push(mats.into_iter().map(PackedWt::from_wt).collect());
+                    }
+                }
+                PreparedKernel::Winograd { m, r, groups, u }
+            }
+            Algo::WinogradStrided { .. } => {
+                PreparedKernel::Direct { weights: weights.clone() }
+            }
+        };
+        PreparedWeights { spec: spec.clone(), algo, kernel }
+    }
+
+    /// Run the convolution on a prepared layer. Purely functional — no
+    /// weight transform, no transpose, no cycle accounting.
+    pub fn conv2d(&self, input: &Tensor) -> Tensor {
+        match &self.kernel {
+            PreparedKernel::Im2col { wt } => self.conv_im2col(input, wt),
+            PreparedKernel::Kn2row { taps } => self.conv_kn2row(input, taps),
+            PreparedKernel::Winograd { m, r, groups, u } => {
+                self.conv_winograd(input, *m, *r, *groups, u)
+            }
+            PreparedKernel::Direct { weights } => {
+                winograd::conv2d_strided(input, weights, &self.spec)
+            }
+        }
+    }
+
+    /// im2col: gather the Toeplitz matrix directly in its transposed
+    /// `(O1O2 × K1K2C_in)` orientation (each row is one window, built
+    /// contiguously) — one GEMM, no transpose anywhere.
+    fn conv_im2col(&self, input: &Tensor, wt: &PackedWt) -> Tensor {
+        let spec = &self.spec;
+        let (o1, o2) = (spec.o1(), spec.o2());
+        let cols = spec.k1 * spec.k2 * spec.c_in;
+        let mut xt = Mat::zeros(o1 * o2, cols);
+        for oy in 0..o1 {
+            for ox in 0..o2 {
+                let row = (oy * o2 + ox) * cols;
+                let iy0 = (oy * spec.s) as isize - spec.p1 as isize;
+                let ix0 = (ox * spec.s) as isize - spec.p2 as isize;
+                for ci in 0..spec.c_in {
+                    for ky in 0..spec.k1 {
+                        for kx in 0..spec.k2 {
+                            xt.data[row + (ci * spec.k1 + ky) * spec.k2 + kx] = input
+                                .get_padded(ci, iy0 + ky as isize, ix0 + kx as isize);
+                        }
+                    }
+                }
+            }
+        }
+        let z = gemm(&xt, wt); // (O1O2 × C_out)
+        Tensor::from_fn(spec.c_out, o1, o2, |c, y, x| z.get(y * o2 + x, c))
+    }
+
+    /// kn2row: the `(H1H2 × C_in)` input matrix is tap-invariant — build
+    /// it once, then one transpose-free GEMM + shifted accumulation per
+    /// tap.
+    fn conv_kn2row(&self, input: &Tensor, taps: &[PackedWt]) -> Tensor {
+        let spec = &self.spec;
+        let hw = spec.h1 * spec.h2;
+        let xm_t = Mat::from_fn(hw, spec.c_in, |rc, ci| input.data[ci * hw + rc]);
+        let mut acc = Tensor::zeros(spec.c_out, spec.o1(), spec.o2());
+        for ky in 0..spec.k1 {
+            for kx in 0..spec.k2 {
+                let patch_t = gemm(&xm_t, &taps[ky * spec.k2 + kx]); // (H1H2 × C_out)
+                kn2row::pad_accumulate_t(&mut acc, &patch_t, spec, ky, kx);
+            }
+        }
+        acc
+    }
+
+    /// Winograd: DLT-style tile gather + input transform per round, then
+    /// the `(m+r−1)²` point GEMMs against the prepared `Uᵀ` panels,
+    /// inverse transform and accumulate.
+    fn conv_winograd(
+        &self,
+        input: &Tensor,
+        m: usize,
+        r: usize,
+        groups: usize,
+        u: &[Vec<PackedWt>],
+    ) -> Tensor {
+        let spec = &self.spec;
+        let a = m + r - 1;
+        let (o1, o2) = (spec.o1(), spec.o2());
+        let t1 = o1.div_ceil(m);
+        let t2 = o2.div_ceil(m);
+        let tiles = t1 * t2;
+        let mut out = Tensor::zeros(spec.c_out, o1, o2);
+        for gy in 0..groups {
+            for gx in 0..groups {
+                // V tiles for every (channel, tile): gather + transform
+                let mut v = vec![Mat::zeros(tiles, spec.c_in); a * a];
+                for ci in 0..spec.c_in {
+                    for ty in 0..t1 {
+                        for tx in 0..t2 {
+                            let iy0 = (ty * m + gy * r) as isize - spec.p1 as isize;
+                            let ix0 = (tx * m + gx * r) as isize - spec.p2 as isize;
+                            let d = Mat::from_fn(a, a, |y, x| {
+                                input.get_padded(ci, iy0 + y as isize, ix0 + x as isize)
+                            });
+                            let vt = winograd::transform_input(&d);
+                            for py in 0..a {
+                                for px in 0..a {
+                                    v[py * a + px].set(ty * t2 + tx, ci, vt.get(py, px));
+                                }
+                            }
+                        }
+                    }
+                }
+                // (m+r−1)² independent (tiles × C_in) · (C_in × C_out)
+                let u_round = &u[gy * groups + gx];
+                let m_pts: Vec<Mat> =
+                    (0..a * a).map(|p| gemm(&v[p], &u_round[p])).collect();
+                // inverse transform + accumulate into the output
+                for co in 0..spec.c_out {
+                    for ty in 0..t1 {
+                        for tx in 0..t2 {
+                            let mm = Mat::from_fn(a, a, |py, px| {
+                                m_pts[py * a + px].get(ty * t2 + tx, co)
+                            });
+                            let y = winograd::inverse_transform(&mm);
+                            for dy in 0..m {
+                                for dx in 0..m {
+                                    let (oy, ox) = (ty * m + dy, tx * m + dx);
+                                    if oy < o1 && ox < o2 {
+                                        let cur = out.get(co, oy, ox);
+                                        out.set(co, oy, ox, cur + y.get(dy, dx));
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::direct;
+    use crate::util::proptest::{assert_allclose, check};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn im2col_prepared_exact_vs_direct() {
+        check("prepared_im2col_vs_direct", 48, |r: &mut Rng| {
+            let spec = im2col::random_spec(r);
+            let input = Tensor::random_i8(spec.c_in, spec.h1, spec.h2, r);
+            let w = Weights::random_i8(spec.c_out, spec.c_in, spec.k1, spec.k2, r);
+            let pw = PreparedWeights::new(&w, &spec, Algo::Im2col);
+            let out = pw.conv2d(&input);
+            let reference = direct::conv2d(&input, &w, &spec);
+            if out.data != reference.data {
+                return Err(format!("mismatch for spec {spec:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn kn2row_prepared_exact_vs_direct() {
+        check("prepared_kn2row_vs_direct", 48, |r: &mut Rng| {
+            let spec = im2col::random_spec(r);
+            let input = Tensor::random_i8(spec.c_in, spec.h1, spec.h2, r);
+            let w = Weights::random_i8(spec.c_out, spec.c_in, spec.k1, spec.k2, r);
+            let pw = PreparedWeights::new(&w, &spec, Algo::Kn2row);
+            let out = pw.conv2d(&input);
+            let reference = direct::conv2d(&input, &w, &spec);
+            if out.data != reference.data {
+                return Err(format!("mismatch for spec {spec:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn winograd_prepared_matches_direct() {
+        check("prepared_wino_vs_direct", 24, |r: &mut Rng| {
+            let k = *r.choose(&[3usize, 5]);
+            let h = r.range(k + 1, 11);
+            let spec = ConvSpec::new(
+                r.range(1, 3),
+                r.range(1, 3),
+                h,
+                h,
+                k,
+                k,
+                1,
+                k / 2,
+                k / 2,
+            );
+            let input = Tensor::random(spec.c_in, spec.h1, spec.h2, r);
+            let w = Weights::random(spec.c_out, spec.c_in, k, k, r);
+            let pw = PreparedWeights::new(&w, &spec, Algo::Winograd { m: 2, r: 3 });
+            let out = pw.conv2d(&input);
+            let reference = direct::conv2d(&input, &w, &spec);
+            assert_allclose(&out.data, &reference.data, 1e-2, 1e-3)
+                .map_err(|e| format!("spec {spec:?}: {e}"))
+        });
+    }
+
+    #[test]
+    fn strided_fallback_matches_direct() {
+        let spec = ConvSpec::new(2, 3, 9, 9, 3, 3, 2, 1, 1);
+        let mut r = Rng::new(21);
+        let input = Tensor::random(2, 9, 9, &mut r);
+        let w = Weights::random(3, 2, 3, 3, &mut r);
+        let pw = PreparedWeights::new(&w, &spec, Algo::WinogradStrided { m: 2, r: 3 });
+        let out = pw.conv2d(&input);
+        let reference = direct::conv2d(&input, &w, &spec);
+        assert_allclose(&out.data, &reference.data, 1e-3, 1e-3).unwrap();
+    }
+
+    #[test]
+    fn prepare_is_request_invariant() {
+        // the whole point: one prepare, many inputs
+        let spec = ConvSpec::new(3, 4, 8, 8, 3, 3, 1, 1, 1);
+        let mut r = Rng::new(22);
+        let w = Weights::random(4, 3, 3, 3, &mut r);
+        let pw = PreparedWeights::new(&w, &spec, Algo::Kn2row);
+        for _ in 0..3 {
+            let input = Tensor::random(3, 8, 8, &mut r);
+            let out = pw.conv2d(&input);
+            let reference = direct::conv2d(&input, &w, &spec);
+            assert_allclose(&out.data, &reference.data, 1e-4, 1e-4).unwrap();
+        }
+    }
+}

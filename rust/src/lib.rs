@@ -62,6 +62,10 @@
 //!   Winograd linear transforms, pooling units and the DDR model.
 //! * [`algos`] — functional (bit-accurate) f32/int8 implementations of
 //!   im2col, kn2row and Winograd convolution.
+//! * [`kernels`] — the fast host-side kernel layer: cache-blocked
+//!   transpose-free GEMM over packed `Wᵀ` panels and per-layer
+//!   [`kernels::PreparedWeights`] (pre-lowered im2col/kn2row/Winograd
+//!   weights) built once at plan time.
 //! * [`runtime`] — PJRT client wrapper that loads the AOT-compiled HLO
 //!   artifacts produced by `python/compile/aot.py` and executes them.
 //! * [`coordinator`] — latency metrics + the deprecated engine shim
@@ -80,6 +84,7 @@ pub mod dse;
 pub mod api;
 pub mod overlay;
 pub mod algos;
+pub mod kernels;
 pub mod runtime;
 pub mod coordinator;
 pub mod emit;

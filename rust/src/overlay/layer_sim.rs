@@ -1,18 +1,25 @@
 //! Whole-layer simulation: run one CONV layer through the overlay under
-//! a chosen (algorithm, dataflow) pair — DLT gather, linear transforms,
-//! the systolic Computing Unit, Pad-and-Accumulate — producing both the
-//! functional output (validated against `algos::direct`) and measured
-//! cycles/utilization (cross-checked against the Eq. 10–12 model).
+//! a chosen (algorithm, dataflow) pair, producing the functional output
+//! (validated against `algos::direct`) and the cycle accounting
+//! (cross-checked against the Eq. 10–12 model).
+//!
+//! The two halves are decoupled: the output tensor comes from the
+//! kernel layer ([`crate::kernels::PreparedWeights::conv2d`] — weight
+//! transforms pre-lowered once, transpose-free GEMMs), while the
+//! Computing-Unit cycles, pass counts and utilization are closed-form
+//! per GEMM shape ([`SystolicSim::stats`], itself debug-asserted
+//! against the old pass-schedule walk). Serving callers prepare weights
+//! once via [`prepare_layer`] and amortize the lowering over every
+//! request; [`simulate_layer`] keeps the old one-shot signature.
 
-use super::dlt::Ltu;
 use super::pad_accum::PadAccum;
 use super::systolic::SystolicSim;
 use super::wino_xform;
-use crate::algos::tensor::{Mat, Tensor, Weights};
-use crate::algos::{im2col, kn2row, winograd};
+use crate::algos::tensor::{Tensor, Weights};
 use crate::cost::conv::{Algo, CostModel};
 use crate::cost::gemm::Dataflow;
 use crate::graph::layer::ConvSpec;
+use crate::kernels::PreparedWeights;
 
 /// Measured result of simulating one layer.
 #[derive(Debug, Clone)]
@@ -28,7 +35,15 @@ pub struct LayerSim {
     pub gemm_calls: u64,
 }
 
-/// Simulate one conv layer end to end on the overlay.
+/// Pre-lower one layer's weights for `algo` — the offline half of the
+/// split. The returned [`PreparedWeights`] is request-invariant; build
+/// it once per (layer, algorithm) and reuse across the serving loop.
+pub fn prepare_layer(weights: &Weights, spec: &ConvSpec, algo: Algo) -> PreparedWeights {
+    PreparedWeights::new(weights, spec, algo)
+}
+
+/// Simulate one conv layer end to end on the overlay (one-shot: lowers
+/// the weights, then delegates to [`simulate_layer_prepared`]).
 pub fn simulate_layer(
     input: &Tensor,
     weights: &Weights,
@@ -38,28 +53,28 @@ pub fn simulate_layer(
     p1: usize,
     p2: usize,
 ) -> LayerSim {
+    simulate_layer_prepared(input, &prepare_layer(weights, spec, algo), df, p1, p2)
+}
+
+/// Simulate one conv layer with pre-lowered weights: functional output
+/// from the kernel layer, cycles from the analytic pass model.
+pub fn simulate_layer_prepared(
+    input: &Tensor,
+    pw: &PreparedWeights,
+    df: Dataflow,
+    p1: usize,
+    p2: usize,
+) -> LayerSim {
     let sim = SystolicSim::new(p1, p2, df, true);
-    match algo {
+    let spec = &pw.spec;
+    let pes = (p1 * p2) as f64;
+    match pw.algo {
         Algo::Im2col => {
-            // DLT gathers the Toeplitz matrix; one GEMM
-            let ltu = Ltu::tensor3d_to_toeplitz(spec);
-            let rows = spec.k1 * spec.k2 * spec.c_in;
-            let cols = spec.o1() * spec.o2();
-            let mut toep = vec![0.0f32; rows * cols];
-            ltu.gather(&input.data, &mut toep);
-            let x = Mat { rows, cols, data: toep };
-            let w = im2col::weight_matrix(weights);
-            // CU computes W (C_out × K²C) × X (K²C × O²): a=C_out rows?
-            // Eq. 10 uses (a,b,c) = (O1O2, K1K2C_in, C_out); feed as
-            // Xᵀ·Wᵀ to match: a=O1O2. Use x_t (O² × K²C) · w_t (K²C × C_out)
-            let x_t = x.transposed();
-            let w_t = w.transposed();
-            let (z, st) = sim.gemm(&x_t, &w_t);
-            // z: (O1O2 × C_out) → CHW tensor
-            let (o1, o2) = (spec.o1(), spec.o2());
-            let out = Tensor::from_fn(spec.c_out, o1, o2, |c, y, x_| z.get(y * o2 + x_, c));
+            // one GEMM over the Toeplitz matrix:
+            // (O1O2 × K1K2C_in) · (K1K2C_in × C_out)
+            let st = sim.stats(spec.o1() * spec.o2(), spec.k1 * spec.k2 * spec.c_in, spec.c_out);
             LayerSim {
-                out,
+                out: pw.conv2d(input),
                 cu_cycles: st.cycles,
                 aux_cycles: 0,
                 utilization: st.utilization,
@@ -67,152 +82,53 @@ pub fn simulate_layer(
             }
         }
         Algo::Kn2row => {
-            // K1K2 unit-conv GEMMs pipelined with Pad-and-Accumulate
-            let mut pa = PadAccum::new(spec, p1.max(p2));
-            let mut cu_cycles = 0u64;
-            let mut macs = 0u64;
-            let mut per_call = 0u64;
-            for ky in 0..spec.k1 {
-                for kx in 0..spec.k2 {
-                    let xm = kn2row::input_matrix(input).transposed(); // (H1H2 × C_in)
-                    let wm = kn2row::unit_weight_matrix(weights, ky, kx).transposed(); // (C_in × C_out)
-                    let (patch_t, st) = sim.gemm(&xm, &wm); // (H1H2 × C_out)
-                    cu_cycles += st.cycles;
-                    macs += st.useful_macs;
-                    per_call = st.cycles;
-                    let patch = patch_t.transposed();
-                    pa.accumulate(&patch, ky, kx);
-                }
-            }
-            let aux = pa.exposed_cycles(per_call);
-            let out = pa.take();
+            // K1K2 unit-conv GEMMs (H1H2 × C_in) · (C_in × C_out),
+            // pipelined with Pad-and-Accumulate
+            let calls = (spec.k1 * spec.k2) as u64;
+            let st = sim.stats(spec.h1 * spec.h2, spec.c_in, spec.c_out);
+            let cu_cycles = calls * st.cycles;
+            let macs = calls * st.useful_macs;
             LayerSim {
-                out,
+                out: pw.conv2d(input),
                 cu_cycles,
-                aux_cycles: aux,
-                utilization: macs as f64 / (cu_cycles as f64 * (p1 * p2) as f64),
-                gemm_calls: (spec.k1 * spec.k2) as u64,
+                aux_cycles: PadAccum::exposed_cycles_for(spec, p1.max(p2), st.cycles),
+                utilization: macs as f64 / (cu_cycles as f64 * pes),
+                gemm_calls: calls,
             }
         }
         Algo::Winograd { m, r } => {
+            // per sub-kernel round, (m+r−1)² point GEMMs of
+            // (tiles × C_in) · (C_in × C_out); LT pipeline fill exposed
+            // once per round
             assert_eq!((m, r), (2, 3), "overlay implements F(2×2, 3×3)");
-            simulate_winograd(input, weights, spec, &sim, p1, p2)
+            let t1 = spec.o1().div_ceil(m);
+            let t2 = spec.o2().div_ceil(m);
+            let tiles = t1 * t2;
+            let groups = spec.k1.div_ceil(r);
+            let points = ((m + r - 1) * (m + r - 1)) as u64;
+            let calls = points * (groups * groups) as u64;
+            let st = sim.stats(tiles, spec.c_in, spec.c_out);
+            let cu_cycles = calls * st.cycles;
+            let macs = calls * st.useful_macs;
+            LayerSim {
+                out: pw.conv2d(input),
+                cu_cycles,
+                aux_cycles: wino_xform::lt_cycles(tiles, p1) * (groups * groups) as u64,
+                utilization: macs as f64 / (cu_cycles as f64 * pes),
+                gemm_calls: calls,
+            }
         }
         Algo::WinogradStrided { .. } => {
             // functional fallback through the polyphase decomposition;
             // CU cycles modeled as 4 stride-1 sub-layers
-            let out = winograd::conv2d_strided(input, weights, spec);
-            LayerSim { out, cu_cycles: 0, aux_cycles: 0, utilization: 0.0, gemm_calls: 4 }
-        }
-    }
-}
-
-/// Winograd path: DLT scatters tiles, LT modules transform, the CU runs
-/// the 16 per-point GEMMs (per 3×3 sub-kernel round), inverse transform
-/// + restore.
-fn simulate_winograd(
-    input: &Tensor,
-    weights: &Weights,
-    spec: &ConvSpec,
-    sim: &SystolicSim,
-    p1: usize,
-    p2: usize,
-) -> LayerSim {
-    let (m, r) = (2usize, 3usize);
-    let a = m + r - 1; // 4
-    let (o1, o2) = (spec.o1(), spec.o2());
-    let t1 = o1.div_ceil(m);
-    let t2 = o2.div_ceil(m);
-    let tiles = t1 * t2;
-    let groups = spec.k1.div_ceil(r);
-    let mut out = Tensor::zeros(spec.c_out, o1, o2);
-    let mut cu_cycles = 0u64;
-    let mut macs = 0u64;
-    let mut calls = 0u64;
-
-    for gy in 0..groups {
-        for gx in 0..groups {
-            // V tiles for every (channel, tile): gathered + transformed
-            // (the DLT + LT pipeline)
-            let mut v = vec![Mat::zeros(tiles, spec.c_in); a * a];
-            for ci in 0..spec.c_in {
-                for ty in 0..t1 {
-                    for tx in 0..t2 {
-                        let iy0 = (ty * m + gy * r) as isize - spec.p1 as isize;
-                        let ix0 = (tx * m + gx * r) as isize - spec.p2 as isize;
-                        let d = Mat::from_fn(a, a, |y, x| {
-                            input.get_padded(ci, iy0 + y as isize, ix0 + x as isize)
-                        });
-                        let vt = winograd::transform_input(&d);
-                        for py in 0..a {
-                            for px in 0..a {
-                                v[py * a + px].set(ty * t2 + tx, ci, vt.get(py, px));
-                            }
-                        }
-                    }
-                }
-            }
-            // U for this sub-kernel round
-            let mut u = vec![Mat::zeros(spec.c_in, spec.c_out); a * a];
-            for co in 0..spec.c_out {
-                for ci in 0..spec.c_in {
-                    let k3 = Mat::from_fn(3, 3, |y, x| {
-                        let ky = gy * r + y;
-                        let kx = gx * r + x;
-                        if ky < spec.k1 && kx < spec.k2 {
-                            weights.get(co, ci, ky, kx)
-                        } else {
-                            0.0
-                        }
-                    });
-                    let ut = winograd::transform_kernel(&k3);
-                    for py in 0..a {
-                        for px in 0..a {
-                            u[py * a + px].set(ci, co, ut.get(py, px));
-                        }
-                    }
-                }
-            }
-            // 16 independent GEMMs (tiles × C_in) · (C_in × C_out)
-            let mut m_pts = Vec::with_capacity(a * a);
-            for p in 0..a * a {
-                let (z, st) = sim.gemm(&v[p], &u[p]);
-                cu_cycles += st.cycles;
-                macs += st.useful_macs;
-                calls += 1;
-                m_pts.push(z);
-            }
-            // inverse transform + accumulate into the output
-            for co in 0..spec.c_out {
-                for ty in 0..t1 {
-                    for tx in 0..t2 {
-                        let mm = Mat::from_fn(a, a, |py, px| {
-                            m_pts[py * a + px].get(ty * t2 + tx, co)
-                        });
-                        let y = winograd::inverse_transform(&mm);
-                        for dy in 0..m {
-                            for dx in 0..m {
-                                let (oy, ox) = (ty * m + dy, tx * m + dx);
-                                if oy < o1 && ox < o2 {
-                                    let cur = out.get(co, oy, ox);
-                                    out.set(co, oy, ox, cur + y.get(dy, dx));
-                                }
-                            }
-                        }
-                    }
-                }
+            LayerSim {
+                out: pw.conv2d(input),
+                cu_cycles: 0,
+                aux_cycles: 0,
+                utilization: 0.0,
+                gemm_calls: 4,
             }
         }
-    }
-    // exposed LT pipeline fill per round (transforms otherwise overlap
-    // with CU streaming)
-    let aux = wino_xform::lt_cycles(tiles, p1) * (groups * groups) as u64;
-    LayerSim {
-        out,
-        cu_cycles,
-        aux_cycles: aux,
-        utilization: macs as f64 / (cu_cycles as f64 * (p1 * p2) as f64),
-        gemm_calls: calls,
     }
 }
 
@@ -224,7 +140,7 @@ pub fn model_cycles(cm: &CostModel, spec: &ConvSpec, algo: Algo, df: Dataflow, p
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::algos::direct;
+    use crate::algos::{direct, im2col};
     use crate::cost::Device;
     use crate::util::proptest::{assert_allclose, check};
     use crate::util::rng::Rng;
@@ -273,6 +189,29 @@ mod tests {
             let spec = ConvSpec::new(r.range(1, 3), r.range(1, 3), h, h, k, k, 1, k / 2, k / 2);
             run_case(r, Algo::Winograd { m: 2, r: 3 }, &spec)
         });
+    }
+
+    #[test]
+    fn prepared_path_is_request_invariant() {
+        // preparing once and simulating many inputs must match the
+        // one-shot path bit-for-bit, stats included
+        let spec = ConvSpec::new(3, 5, 9, 9, 3, 3, 1, 1, 1);
+        let mut r = Rng::new(40);
+        let w = Weights::random(5, 3, 3, 3, &mut r);
+        for algo in [Algo::Im2col, Algo::Kn2row, Algo::Winograd { m: 2, r: 3 }] {
+            let pw = prepare_layer(&w, &spec, algo);
+            for _ in 0..3 {
+                let input = Tensor::random(3, 9, 9, &mut r);
+                let a = simulate_layer(&input, &w, &spec, algo, Dataflow::NS, 8, 4);
+                let b = simulate_layer_prepared(&input, &pw, Dataflow::NS, 8, 4);
+                assert_eq!(a.out.data, b.out.data, "{algo:?}");
+                assert_eq!(
+                    (a.cu_cycles, a.aux_cycles, a.gemm_calls),
+                    (b.cu_cycles, b.aux_cycles, b.gemm_calls),
+                    "{algo:?}"
+                );
+            }
+        }
     }
 
     #[test]

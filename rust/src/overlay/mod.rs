@@ -22,5 +22,5 @@ pub mod pooling;
 pub mod ddr;
 pub mod layer_sim;
 
-pub use layer_sim::{simulate_layer, LayerSim};
+pub use layer_sim::{prepare_layer, simulate_layer, simulate_layer_prepared, LayerSim};
 pub use systolic::{SimStats, SystolicSim};

@@ -30,42 +30,56 @@ pub struct PadAccum {
     pub ports: usize,
 }
 
+/// Per-tap accumulation plans for a layer. The in-bounds test separates
+/// per axis, so the live-pixel count is a product of two 1-D counts —
+/// O(O1 + O2) per tap instead of an O(O1·O2) double loop.
+pub fn tap_plans(spec: &ConvSpec) -> Vec<TapPlan> {
+    let (o1, o2) = (spec.o1(), spec.o2());
+    let live_1d = |o: usize, k: usize, p: usize, h: usize| -> usize {
+        (0..o)
+            .filter(|&v| {
+                let i = (v * spec.s + k) as isize - p as isize;
+                i >= 0 && i < h as isize
+            })
+            .count()
+    };
+    let mut plans = Vec::with_capacity(spec.k1 * spec.k2);
+    for ky in 0..spec.k1 {
+        let rows = live_1d(o1, ky, spec.p1, spec.h1);
+        for kx in 0..spec.k2 {
+            let live = rows * live_1d(o2, kx, spec.p2, spec.h2);
+            plans.push(TapPlan { ky, kx, live_elems: live * spec.c_out });
+        }
+    }
+    plans
+}
+
 impl PadAccum {
     pub fn new(spec: &ConvSpec, ports: usize) -> PadAccum {
-        let (o1, o2) = (spec.o1(), spec.o2());
-        let mut plans = Vec::with_capacity(spec.k1 * spec.k2);
-        for ky in 0..spec.k1 {
-            for kx in 0..spec.k2 {
-                // count output pixels whose source lies inside the input
-                let mut live = 0usize;
-                for oy in 0..o1 {
-                    for ox in 0..o2 {
-                        let iy = (oy * spec.s + ky) as isize - spec.p1 as isize;
-                        let ix = (ox * spec.s + kx) as isize - spec.p2 as isize;
-                        if iy >= 0
-                            && ix >= 0
-                            && iy < spec.h1 as isize
-                            && ix < spec.h2 as isize
-                        {
-                            live += 1;
-                        }
-                    }
-                }
-                plans.push(TapPlan { ky, kx, live_elems: live * spec.c_out });
-            }
-        }
         PadAccum {
+            plans: tap_plans(spec),
+            acc: Tensor::zeros(spec.c_out, spec.o1(), spec.o2()),
             spec: spec.clone(),
-            plans,
-            acc: Tensor::zeros(spec.c_out, o1, o2),
             ports,
         }
+    }
+
+    /// [`PadAccum::exposed_cycles`] without instantiating the module —
+    /// for cycle-accounting callers that never accumulate (the
+    /// accumulation buffer allocation is skipped entirely).
+    pub fn exposed_cycles_for(spec: &ConvSpec, ports: usize, gemm_cycles: u64) -> u64 {
+        exposed(&tap_plans(spec), ports, gemm_cycles)
     }
 
     /// Accumulate one unit-conv patch (functional) and return the cycle
     /// count of this tap's accumulation pass.
     pub fn accumulate(&mut self, patch: &Mat, ky: usize, kx: usize) -> u64 {
         kn2row::pad_accumulate(&mut self.acc, patch, &self.spec, ky, kx);
+        self.tap_cycles(ky, kx)
+    }
+
+    /// Cycles of one tap's accumulation pass.
+    pub fn tap_cycles(&self, ky: usize, kx: usize) -> u64 {
         let plan = &self.plans[ky * self.spec.k2 + kx];
         (plan.live_elems as u64).div_ceil(self.ports as u64)
     }
@@ -76,18 +90,20 @@ impl PadAccum {
     /// next patch while the accumulation buffer still processes the
     /// last").
     pub fn exposed_cycles(&self, gemm_cycles: u64) -> u64 {
-        let per_tap: Vec<u64> = self
-            .plans
-            .iter()
-            .map(|p| (p.live_elems as u64).div_ceil(self.ports as u64))
-            .collect();
-        let hidden: u64 = per_tap.iter().rev().skip(1).map(|&c| c.saturating_sub(gemm_cycles)).sum();
-        hidden + per_tap.last().copied().unwrap_or(0)
+        exposed(&self.plans, self.ports, gemm_cycles)
     }
 
     pub fn take(self) -> Tensor {
         self.acc
     }
+}
+
+fn exposed(plans: &[TapPlan], ports: usize, gemm_cycles: u64) -> u64 {
+    let per_tap: Vec<u64> =
+        plans.iter().map(|p| (p.live_elems as u64).div_ceil(ports as u64)).collect();
+    let hidden: u64 =
+        per_tap.iter().rev().skip(1).map(|&c| c.saturating_sub(gemm_cycles)).sum();
+    hidden + per_tap.last().copied().unwrap_or(0)
 }
 
 #[cfg(test)]
@@ -139,5 +155,9 @@ mod tests {
         let all: u64 =
             pa.plans.iter().map(|p| (p.live_elems as u64).div_ceil(8)).sum();
         assert!(pa.exposed_cycles(0) == all);
+        // the allocation-free path agrees with the instantiated module
+        for g in [0, 3, long_gemm] {
+            assert_eq!(PadAccum::exposed_cycles_for(&spec, 8, g), pa.exposed_cycles(g));
+        }
     }
 }

@@ -1,20 +1,35 @@
-//! Pass-level simulation of the `P_SA1 × P_SA2` systolic Computing Unit
-//! (§3.1/3.2).
+//! The `P_SA1 × P_SA2` systolic Computing Unit (§3.1/3.2): functional
+//! compute decoupled from cycle accounting.
 //!
-//! The simulator walks the exact tile/pass schedule of each dataflow,
-//! computing the GEMM functionally per pass (validated against plain
-//! matmul) while accounting cycles with the stall-free PE semantics:
-//! the `I_SA = max(P1, P2)` pipeline-initialization overhead is
-//! overlapped with the next pass (paid once per GEMM), and the widened
-//! drain wires remove result-congestion stalls when `b < P_SA`. The
-//! naive mode charges `I_SA` on every pass — the ablation baseline.
-//! Per-PE busy counts give the measured effective utilization μ
-//! (Eq. 14), which must agree with the analytical model — asserted in
-//! tests and used to cross-check Figs. 9/10.
+//! The old simulator walked the exact tile/pass schedule of each
+//! dataflow, producing the GEMM result from per-PE scalar loops whose
+//! only purpose was to tally cycles. The two concerns are now split:
+//! the output tensor comes from the fast kernel layer
+//! ([`crate::kernels::gemm`], transpose-free over packed `Wᵀ` panels),
+//! and the [`SimStats`] come *closed-form* from the Eq. 9 model in
+//! [`crate::cost::gemm`] — the pass counts, busy-MAC totals and the
+//! stall-free `I_SA = max(P1, P2)` once-per-GEMM initialization are all
+//! analytic in `(a, b, c, P1, P2, dataflow)`.
+//!
+//! The analytic stats are cross-checked against the old loop-derived
+//! schedule walk ([`SystolicSim::loop_stats`], kept as the accounting
+//! oracle): a `debug_assert` on every GEMM plus explicit property tests
+//! assert exact equality, so the fast path cannot silently drift from
+//! the pass-level semantics (naive mode charges `I_SA` per pass — the
+//! ablation baseline — and is covered by the same cross-check).
+//!
+//! Functional note: the output is now dataflow-independent — every
+//! element is one ascending-`k` dot, bit-identical to [`Mat::matmul`]
+//! and to the old NS walk. The old WS/IS walks summed per-`b`-tile
+//! partial dots instead, so under those dataflows results may differ
+//! from the pre-change simulator in the last ulp (all consumers
+//! compare within tolerance; the golden-serving PJRT path is
+//! untouched).
 
 use super::buffers::BlockedLayout;
 use crate::algos::tensor::Mat;
 use crate::cost::gemm::{self, Dataflow};
+use crate::kernels::{self, PackedWt};
 
 /// Outcome of a simulated GEMM.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -44,120 +59,94 @@ impl SystolicSim {
     }
 
     /// Execute `X (a×b) · W (b×c)` on the array. Returns the product and
-    /// the cycle statistics.
+    /// the cycle statistics. Packs `W` per call; inside a loop prefer
+    /// [`SystolicSim::gemm_packed`] on a prepared operand.
     pub fn gemm(&self, x: &Mat, w: &Mat) -> (Mat, SimStats) {
         assert_eq!(x.cols, w.rows, "gemm dims");
-        let (a, b, c) = (x.rows, x.cols, w.cols);
-        let (p1, p2) = (self.p1, self.p2);
-        let i_sa = p1.max(p2) as u64;
-        let mut out = Mat::zeros(a, c);
-        let mut cycles: u64 = 0;
-        let mut passes: u64 = 0;
-        let mut busy_macs: u64 = 0;
+        self.gemm_packed(x, &PackedWt::pack(w))
+    }
 
+    /// Execute `X (a×b) · W (b×c)` with `Wᵀ` pre-packed (the hot path:
+    /// no transpose, no weight-side allocation).
+    pub fn gemm_packed(&self, x: &Mat, wt: &PackedWt) -> (Mat, SimStats) {
+        assert_eq!(x.cols, wt.b, "gemm dims");
         // verify the Eq. 7 layout keeps both access directions clean for
         // this array shape (cheap sanity executed once per GEMM)
         debug_assert_eq!(
-            BlockedLayout::conflicts(&self.layout.row_banks(0, p1.min(p2))),
+            BlockedLayout::conflicts(&self.layout.row_banks(0, self.p1.min(self.p2))),
             0
         );
+        let out = kernels::gemm(x, wt);
+        let stats = self.stats(x.rows, x.cols, wt.c);
+        // the closed-form accounting must reproduce the pass-level
+        // schedule walk exactly — the decoupling's safety net
+        debug_assert_eq!(stats, self.loop_stats(x.rows, x.cols, wt.c));
+        (out, stats)
+    }
 
-        // hot path: pre-transpose W so every PE dot product walks two
-        // contiguous rows (perf pass iteration 3 — see EXPERIMENTS §Perf)
-        let wt = w.transposed();
-        match self.dataflow {
-            Dataflow::NS => {
-                // tiles: a-dim rows of P1 output rows × c-dim cols of P2
-                for ti in 0..a.div_ceil(p1) {
-                    for tj in 0..c.div_ceil(p2) {
-                        let rows = p1.min(a - ti * p1);
-                        let cols = p2.min(c - tj * p2);
-                        // each PE (r, s) accumulates out[ti·p1+r, tj·p2+s]
-                        // over the full b dimension: pass length = b
-                        for r in 0..rows {
-                            let ri = ti * p1 + r;
-                            let x_row = &x.data[ri * b..(ri + 1) * b];
-                            for s in 0..cols {
-                                let cj = tj * p2 + s;
-                                let w_col = &wt.data[cj * b..(cj + 1) * b];
-                                let acc: f32 =
-                                    x_row.iter().zip(w_col).map(|(p, q)| p * q).sum();
-                                out.set(ri, cj, acc);
-                            }
-                        }
-                        cycles += b as u64;
-                        passes += 1;
-                        busy_macs += (rows * cols) as u64 * b as u64;
-                        if !self.stall_free {
-                            cycles += i_sa;
-                        }
-                    }
-                }
-            }
-            Dataflow::WS => {
-                // stationary P1×P2 weight blocks over (b, c); inputs
-                // stream a elements per pass
-                for tb in 0..b.div_ceil(p1) {
-                    for tc in 0..c.div_ceil(p2) {
-                        let kb = p1.min(b - tb * p1);
-                        let kc = p2.min(c - tc * p2);
-                        for ri in 0..a {
-                            let x_win = &x.data[ri * b + tb * p1..ri * b + tb * p1 + kb];
-                            for s in 0..kc {
-                                let cj = tc * p2 + s;
-                                let w_win = &wt.data[cj * b + tb * p1..cj * b + tb * p1 + kb];
-                                let dot: f32 =
-                                    x_win.iter().zip(w_win).map(|(p, q)| p * q).sum();
-                                out.set(ri, cj, out.get(ri, cj) + dot);
-                            }
-                        }
-                        cycles += a as u64;
-                        passes += 1;
-                        busy_macs += (kb * kc) as u64 * a as u64;
-                        if !self.stall_free {
-                            cycles += i_sa;
-                        }
-                    }
-                }
-            }
-            Dataflow::IS => {
-                // mirror of WS: stationary P1×P2 input blocks over (b, a);
-                // weights stream c elements per pass
-                for tb in 0..b.div_ceil(p1) {
-                    for ta in 0..a.div_ceil(p2) {
-                        let kb = p1.min(b - tb * p1);
-                        let ka = p2.min(a - ta * p2);
-                        for cj in 0..c {
-                            let w_win = &wt.data[cj * b + tb * p1..cj * b + tb * p1 + kb];
-                            for s in 0..ka {
-                                let ri = ta * p2 + s;
-                                let x_win = &x.data[ri * b + tb * p1..ri * b + tb * p1 + kb];
-                                let dot: f32 =
-                                    x_win.iter().zip(w_win).map(|(p, q)| p * q).sum();
-                                out.set(ri, cj, out.get(ri, cj) + dot);
-                            }
-                        }
-                        cycles += c as u64;
-                        passes += 1;
-                        busy_macs += (kb * ka) as u64 * c as u64;
-                        if !self.stall_free {
-                            cycles += i_sa;
-                        }
-                    }
+    /// Closed-form [`SimStats`] for an `a×b×c` GEMM on this array
+    /// (Eq. 9 cycles, Eq. 14 utilization). Every pass covers the full
+    /// reduction for its tile, so the busy-MAC total telescopes to
+    /// `a·b·c` under all three dataflows.
+    pub fn stats(&self, a: usize, b: usize, c: usize) -> SimStats {
+        let (p1, p2) = (self.p1, self.p2);
+        let cycles = if self.stall_free {
+            gemm::gemm_cycles(p1, p2, self.dataflow, a, b, c)
+        } else {
+            gemm::gemm_cycles_naive(p1, p2, self.dataflow, a, b, c)
+        };
+        let busy_macs = gemm::gemm_macs(a, b, c);
+        SimStats {
+            cycles,
+            passes: gemm::gemm_passes(p1, p2, self.dataflow, a, b, c) as u64,
+            useful_macs: busy_macs,
+            utilization: busy_macs as f64 / (cycles as f64 * (p1 * p2) as f64),
+            conflict_stalls: 0,
+        }
+    }
+
+    /// The old loop-derived accounting: walk the exact tile/pass
+    /// schedule of the configured dataflow, tallying cycles, passes and
+    /// busy MACs (no numerics). Kept as the oracle the analytic
+    /// [`SystolicSim::stats`] is asserted against in debug builds and
+    /// property tests.
+    pub fn loop_stats(&self, a: usize, b: usize, c: usize) -> SimStats {
+        let (p1, p2) = (self.p1, self.p2);
+        let i_sa = p1.max(p2) as u64;
+        let mut cycles: u64 = 0;
+        let mut passes: u64 = 0;
+        let mut busy_macs: u64 = 0;
+        // (tile extents along the two partitioned dims, streamed length)
+        let (d1, d2, stream) = match self.dataflow {
+            // P1 output rows × P2 output cols; pass length b
+            Dataflow::NS => (a, c, b),
+            // stationary P1×P2 weight block over (b, c); a streams
+            Dataflow::WS => (b, c, a),
+            // stationary P1×P2 input block over (b, a); c streams
+            Dataflow::IS => (b, a, c),
+        };
+        for t1 in 0..d1.div_ceil(p1) {
+            for t2 in 0..d2.div_ceil(p2) {
+                let k1 = p1.min(d1 - t1 * p1);
+                let k2 = p2.min(d2 - t2 * p2);
+                cycles += stream as u64;
+                passes += 1;
+                busy_macs += (k1 * k2) as u64 * stream as u64;
+                if !self.stall_free {
+                    cycles += i_sa;
                 }
             }
         }
         if self.stall_free {
             cycles += i_sa; // paid once, overlapped thereafter (§3.2)
         }
-        let stats = SimStats {
+        SimStats {
             cycles,
             passes,
             useful_macs: busy_macs,
             utilization: busy_macs as f64 / (cycles as f64 * (p1 * p2) as f64),
             conflict_stalls: 0,
-        };
-        (out, stats)
+        }
     }
 }
 
@@ -183,6 +172,45 @@ mod tests {
                 let (out, _) = sim.gemm(&x, &w);
                 assert_allclose(&out.data, &reference.data, 1e-3, 1e-5)
                     .map_err(|e| format!("{df:?}: {e}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn packed_gemm_matches_unpacked() {
+        let mut r = Rng::new(17);
+        let x = random_mat(&mut r, 23, 14);
+        let w = random_mat(&mut r, 14, 9);
+        let wt = PackedWt::pack(&w);
+        for df in Dataflow::ALL {
+            let sim = SystolicSim::new(5, 3, df, true);
+            let (o1, s1) = sim.gemm(&x, &w);
+            let (o2, s2) = sim.gemm_packed(&x, &wt);
+            assert_eq!(o1.data, o2.data, "{df:?}");
+            assert_eq!(s1, s2, "{df:?}");
+        }
+    }
+
+    #[test]
+    fn analytic_stats_match_loop_derived_exactly() {
+        // the tentpole cross-check: closed-form SimStats ≡ the old
+        // schedule-walking accounting, both PE modes, ragged shapes
+        check("systolic_stats_vs_loop", 128, |r: &mut Rng| {
+            let (a, b, c) = (r.range(1, 70), r.range(1, 70), r.range(1, 70));
+            let (p1, p2) = (r.range(1, 17), r.range(1, 17));
+            for df in Dataflow::ALL {
+                for stall_free in [true, false] {
+                    let sim = SystolicSim::new(p1, p2, df, stall_free);
+                    let analytic = sim.stats(a, b, c);
+                    let walked = sim.loop_stats(a, b, c);
+                    if analytic != walked {
+                        return Err(format!(
+                            "{df:?} stall_free={stall_free} ({a},{b},{c}) on \
+                             ({p1},{p2}): analytic {analytic:?} != loop {walked:?}"
+                        ));
+                    }
+                }
             }
             Ok(())
         });

@@ -3,6 +3,7 @@
 
 pub mod json;
 pub mod cli;
+pub mod parallel;
 pub mod rng;
 pub mod proptest;
 pub mod table;

@@ -1,0 +1,127 @@
+//! Scoped-thread data parallelism (rayon is unavailable in the offline
+//! build; `std::thread::scope` provides the same fork-join guarantee
+//! with zero dependencies).
+//!
+//! [`parallel_map`] fans a slice out over a dynamic work queue: workers
+//! pull item indices from an atomic counter, so uneven per-item cost
+//! (e.g. conv layers of very different sizes) still load-balances.
+//! Results come back in input order, which keeps callers deterministic —
+//! a parallel map over inference requests returns exactly what the
+//! sequential loop would.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Worker count for `n_items` parallel tasks: `available_parallelism`,
+/// clamped to the item count and overridable via `DYNAMAP_THREADS`
+/// (`DYNAMAP_THREADS=1` forces the sequential path, useful for
+/// debugging and for apples-to-apples benchmarking).
+pub fn worker_count(n_items: usize) -> usize {
+    if n_items <= 1 {
+        return 1;
+    }
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let cap = std::env::var("DYNAMAP_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&t| t >= 1)
+        .unwrap_or(hw);
+    cap.min(n_items).max(1)
+}
+
+/// Apply `f` to every item of `items`, possibly in parallel, returning
+/// the results in input order. `f` receives `(index, &item)`.
+///
+/// Work distribution is dynamic (atomic index queue). Worker panics are
+/// re-raised on the caller thread, so a failing property test inside a
+/// parallel section still reports its seed.
+pub fn parallel_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let workers = worker_count(items.len());
+    if workers <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut out: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut local = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= items.len() {
+                            break;
+                        }
+                        local.push((i, f(i, &items[i])));
+                    }
+                    local
+                })
+            })
+            .collect();
+        for h in handles {
+            match h.join() {
+                Ok(pairs) => {
+                    for (i, r) in pairs {
+                        out[i] = Some(r);
+                    }
+                }
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+        }
+    });
+    out.into_iter().map(|o| o.expect("parallel_map: missing result slot")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_input_order() {
+        let items: Vec<usize> = (0..257).collect();
+        let out = parallel_map(&items, |i, &x| {
+            assert_eq!(i, x);
+            x * 2
+        });
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn handles_empty_and_singleton() {
+        let empty: Vec<u32> = vec![];
+        assert!(parallel_map(&empty, |_, &x| x).is_empty());
+        assert_eq!(parallel_map(&[7u32], |_, &x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn matches_sequential_map() {
+        let items: Vec<u64> = (0..1000).collect();
+        let seq: Vec<u64> = items.iter().map(|&x| x.wrapping_mul(x) ^ 0xABCD).collect();
+        let par = parallel_map(&items, |_, &x| x.wrapping_mul(x) ^ 0xABCD);
+        assert_eq!(seq, par);
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn worker_panic_propagates() {
+        let items: Vec<usize> = (0..64).collect();
+        parallel_map(&items, |_, &x| {
+            if x == 33 {
+                panic!("boom");
+            }
+            x
+        });
+    }
+
+    #[test]
+    fn worker_count_bounds() {
+        assert_eq!(worker_count(0), 1);
+        assert_eq!(worker_count(1), 1);
+        assert!(worker_count(4) <= 4);
+        assert!(worker_count(1024) >= 1);
+    }
+}

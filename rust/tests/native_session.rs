@@ -1,0 +1,168 @@
+//! Native-backend serving tests: a [`Session`] over the in-process
+//! kernel layer needs only the manifest and weight files — no PJRT
+//! client, no AOT-compiled HLO — so these tests synthesize a manifest
+//! for mini-inception and run under plain `cargo test`, covering the
+//! parallel `infer_batch` ≡ sequential `infer` golden equality that the
+//! PJRT-gated tests can only check when artifacts are built.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use dynamap::api::{Backend, Session};
+use dynamap::graph::layer::Op;
+use dynamap::graph::zoo;
+use dynamap::runtime::TensorBuf;
+use dynamap::util::rng::Rng;
+
+fn write_f32(path: &std::path::Path, data: &[f32]) {
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    std::fs::write(path, bytes).unwrap();
+}
+
+/// Write a minimal artifact manifest for mini-inception with random
+/// weights and no HLO artifacts (`algos: {}`) into a fresh temp dir.
+fn synth_manifest_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("dynamap_native_manifest_{}_{}", tag, std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let cnn = zoo::mini_inception();
+    let mut rng = Rng::new(0x5EED);
+    let mut layers = Vec::new();
+    for node in &cnn.nodes {
+        let Op::Conv(spec) = &node.op else { continue };
+        let safe = node.name.replace('/', "_");
+        let wfile = format!("w__{safe}.bin");
+        let n = spec.weight_count();
+        let w: Vec<f32> = (0..n).map(|_| rng.f32_range(-0.5, 0.5)).collect();
+        write_f32(&dir.join(&wfile), &w);
+        layers.push(format!(
+            r#"{{"name":"{}","c_in":{},"c_out":{},"h1":{},"h2":{},"k1":{},"k2":{},"s":{},"p1":{},"p2":{},"o1":{},"o2":{},"algos":{{}},"weights":"{}","weight_count":{}}}"#,
+            node.name,
+            spec.c_in,
+            spec.c_out,
+            spec.h1,
+            spec.h2,
+            spec.k1,
+            spec.k2,
+            spec.s,
+            spec.p1,
+            spec.p2,
+            spec.o1(),
+            spec.o2(),
+            wfile,
+            n
+        ));
+    }
+    let manifest = format!(
+        r#"{{"model":"mini-inception","input":{{"c":4,"h1":16,"h2":16}},"layers":[{}],"golden_input":"","golden_output":""}}"#,
+        layers.join(",")
+    );
+    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    dir
+}
+
+fn random_inputs(n: usize, seed: u64) -> Vec<TensorBuf> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            TensorBuf::new(
+                vec![4, 16, 16],
+                (0..4 * 16 * 16).map(|_| rng.f32_range(-1.0, 1.0)).collect(),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn native_session_serves_without_pjrt_artifacts() {
+    let dir = synth_manifest_dir("serve");
+    let mut session = Session::builder(dir.to_str().unwrap())
+        .backend(Backend::Native)
+        .build()
+        .unwrap();
+    assert_eq!(session.backend(), Backend::Native);
+    assert_eq!(session.model(), "mini-inception");
+    assert_eq!(session.loaded_executables(), 0, "native backend compiles no HLO");
+    assert_eq!(session.prepared_count(), 7, "weights lowered once per conv layer");
+    assert!(session.plan().is_some(), "DSE plan resolved at build time");
+
+    let inputs = random_inputs(1, 11);
+    let (out, metrics) = session.infer(&inputs[0]).unwrap();
+    assert_eq!(out.shape, vec![16, 8, 8]);
+    assert!(out.data.iter().all(|v| v.is_finite()));
+    assert_eq!(metrics.per_layer_us.len(), 7, "one metric entry per conv layer");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn parallel_infer_batch_matches_sequential_bitwise() {
+    let dir = synth_manifest_dir("batch");
+    let mut session = Session::builder(dir.to_str().unwrap())
+        .backend(Backend::Native)
+        .build()
+        .unwrap();
+    let n = 6;
+    let inputs = random_inputs(n, 22);
+    let (batched, metrics) = session.infer_batch(&inputs).unwrap();
+    assert_eq!(batched.len(), n);
+    assert_eq!(metrics.per_request.len(), n);
+    assert_eq!(metrics.stats.count(), n, "aggregate stats must count N requests");
+    assert_eq!(session.stats().count(), n, "session-wide stats must count N requests");
+
+    // the parallel fan-out must be invisible: outputs bit-identical to
+    // sequential infer calls, in input order
+    for (i, (input, batched_out)) in inputs.iter().zip(&batched).enumerate() {
+        let (seq, _) = session.infer(input).unwrap();
+        assert_eq!(batched_out, &seq, "request {i}: parallel != sequential");
+    }
+    assert_eq!(session.stats().count(), 2 * n);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn native_session_honours_explicit_algo_map() {
+    let dir = synth_manifest_dir("algomap");
+    let cnn = zoo::mini_inception();
+    // force a distinct algorithm family per kernel size
+    let mut map = BTreeMap::new();
+    for node in &cnn.nodes {
+        let Op::Conv(spec) = &node.op else { continue };
+        let algo = match spec.k1 {
+            1 => "im2col",
+            3 => "winograd",
+            _ => "kn2row",
+        };
+        map.insert(node.name.clone(), algo.to_string());
+    }
+    let mut session = Session::builder(dir.to_str().unwrap())
+        .backend(Backend::Native)
+        .algo_map(map.clone())
+        .build()
+        .unwrap();
+    assert_eq!(session.algo_map(), &map, "native backend must not clamp supported algos");
+
+    // all three families execute and agree with an all-im2col session
+    let all_im2col: BTreeMap<String, String> =
+        map.keys().map(|k| (k.clone(), "im2col".to_string())).collect();
+    let mut reference = Session::builder(dir.to_str().unwrap())
+        .backend(Backend::Native)
+        .algo_map(all_im2col)
+        .build()
+        .unwrap();
+    for input in &random_inputs(2, 33) {
+        let (a, _) = session.infer(input).unwrap();
+        let (b, _) = reference.infer(input).unwrap();
+        assert_eq!(a.shape, b.shape);
+        for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+            assert!(
+                (x - y).abs() < 1e-3,
+                "algorithm families disagree at {i}: {x} vs {y}"
+            );
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

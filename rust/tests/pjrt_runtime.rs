@@ -5,7 +5,7 @@
 //! These tests are skipped (with a note) when `make artifacts` has not
 //! been run.
 
-use dynamap::api::{Compiler, Policy, Session};
+use dynamap::api::{Backend, Compiler, Policy, Session};
 use dynamap::runtime::{Manifest, PjrtRuntime, TensorBuf};
 
 fn artifacts_dir() -> Option<String> {
@@ -100,6 +100,30 @@ fn session_infer_batch_matches_sequential() {
         assert_eq!(batched, &seq, "request {i}: batched != sequential");
     }
     assert_eq!(session.stats().count(), 2 * n);
+}
+
+#[test]
+fn native_backend_reproduces_goldens_and_parallel_batch() {
+    // the kernel-layer backend must agree with the Python oracle on the
+    // same manifest the PJRT backend serves, and its parallel batch
+    // path must be bit-identical to sequential inference
+    let Some(dir) = artifacts_dir() else { return };
+    let mut native =
+        Session::builder(dir.as_str()).backend(Backend::Native).build().unwrap();
+    assert_eq!(native.loaded_executables(), 0);
+    let err = native.validate_golden().unwrap();
+    assert!(err < 1e-3, "native kernel backend golden max |Δ| = {err}");
+
+    let (gi, _) = native.manifest().golden().unwrap();
+    let (c, h1, h2) = native.manifest().input;
+    let golden = TensorBuf::new(vec![c, h1, h2], gi);
+    let batch = vec![golden.clone(); 4];
+    let (outs, metrics) = native.infer_batch(&batch).unwrap();
+    assert_eq!(metrics.stats.count(), 4);
+    for (i, batched) in outs.iter().enumerate() {
+        let (seq, _) = native.infer(&golden).unwrap();
+        assert_eq!(batched, &seq, "request {i}: parallel batched != sequential");
+    }
 }
 
 #[test]
