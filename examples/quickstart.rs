@@ -7,7 +7,10 @@
 //!    recompute per process.
 //! 3. *Serve* (online, cheap): a `Session` would load this plan and run
 //!    inference against AOT artifacts — see `examples/e2e_inference.rs`
-//!    for that half (it needs `make artifacts`).
+//!    for that half (it needs `make artifacts`), or `dynamap serve` /
+//!    `dynamap loadgen` for the multi-model engine, which needs no
+//!    artifacts at all. The same flow as this example is doc-tested on
+//!    `Session::builder`.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
@@ -84,6 +87,8 @@ fn main() {
     println!("{}", t.render());
     println!(
         "next: `make artifacts && cargo run --release --example e2e_inference` \
-         to serve this pipeline through a PJRT Session"
+         to serve this pipeline through a PJRT Session, or \
+         `dynamap loadgen --models mini,googlenet --compare` for the \
+         multi-model batching engine (no artifacts needed)"
     );
 }

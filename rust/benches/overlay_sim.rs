@@ -64,7 +64,7 @@ fn infer_prepared(
 /// Deliberately free-standing: the baseline variant (per-request weight
 /// re-derivation) must not exist in the product API, and both variants
 /// must share one walker for a fair ratio. Keep the op semantics in
-/// sync with `infer_native` in `rust/src/api/session.rs`.
+/// sync with `NativeState::infer` in `rust/src/api/session.rs`.
 fn run_graph(
     cnn: &Cnn,
     input: &Tensor,

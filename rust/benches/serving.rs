@@ -1,0 +1,88 @@
+//! `cargo bench` target for the multi-model serving engine: the same
+//! seeded closed-loop workload (8 clients × 8 requests on
+//! mini-inception, ROADMAP §Performance methodology — fixed seed 99,
+//! release profile, `DYNAMAP_BENCH_FAST` unset for real numbers) driven
+//! through two registry configurations:
+//!
+//! * **one-at-a-time** — `max_batch = 1`: every request is its own
+//!   flush, serving strictly sequentially (the pre-engine model of one
+//!   caller per session).
+//! * **batched** — `max_batch = 8`, `max_wait = 2ms`: the dynamic
+//!   batching scheduler coalesces concurrent requests into
+//!   `infer_batch` calls that fan out over the worker pool.
+//!
+//! The run prints `serving throughput speedup: N.NNx` so ROADMAP.md
+//! §Performance has a number to append. `DYNAMAP_BENCH_ASSERT=1` turns
+//! the ≥1.3× threshold into a hard failure when the host has ≥4 cores
+//! (plain runs only report; single-core runners can't batch-win).
+
+use std::time::Duration;
+
+use dynamap::api::{Compiler, Device};
+use dynamap::bench::harness::Bencher;
+use dynamap::serve::{loadgen, BatchConfig, LoadgenConfig, ModelRegistry, RegistryConfig};
+use dynamap::util::parallel::worker_count;
+
+fn registry(root: &std::path::Path, max_batch: usize) -> ModelRegistry {
+    ModelRegistry::new(RegistryConfig {
+        artifacts_root: root.join("zoo"),
+        plan_cache: Some(root.join("plans")),
+        capacity: 2,
+        synthesize_missing: true,
+        seed: 99,
+        compiler: Compiler::new().device(Device::small_edge()),
+        batch: BatchConfig { max_batch, max_wait: Duration::from_millis(2) },
+    })
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    let root = std::env::temp_dir()
+        .join(format!("dynamap_serving_bench_{}", std::process::id()));
+    std::fs::remove_dir_all(&root).ok();
+
+    let load = LoadgenConfig {
+        models: vec!["mini-inception".to_string()],
+        clients: 8,
+        requests: 8,
+        seed: 99,
+    };
+
+    // one-at-a-time first: it also synthesizes the artifacts and fills
+    // the shared plan cache, so the batched registry builds DSE-free
+    let seq_registry = registry(&root, 1);
+    let seq = b
+        .bench("serving/mini-inception/8x8req/one-at-a-time", || {
+            loadgen::run(&seq_registry, &load).expect("sequential loadgen").requests
+        })
+        .clone();
+    let seq_snapshot = seq_registry.metrics().snapshots();
+    seq_registry.shutdown();
+
+    let batched_registry = registry(&root, 8);
+    let fast = b
+        .bench("serving/mini-inception/8x8req/batched_max8", || {
+            loadgen::run(&batched_registry, &load).expect("batched loadgen").requests
+        })
+        .clone();
+    let fast_snapshot = batched_registry.metrics().snapshots();
+    batched_registry.shutdown();
+
+    for s in seq_snapshot.iter().chain(&fast_snapshot) {
+        println!("  {}", s.summary());
+    }
+    let speedup = seq.mean.as_secs_f64() / fast.mean.as_secs_f64();
+    println!(
+        "serving throughput speedup (dynamic batching max_batch=8 vs one-at-a-time): \
+         {speedup:.2}x"
+    );
+    // enforced gate: only meaningful with real parallelism under the
+    // flush — a single-core runner degenerates both arms to sequential
+    if std::env::var("DYNAMAP_BENCH_ASSERT").is_ok() && worker_count(8) >= 4 {
+        assert!(
+            speedup >= 1.3,
+            "dynamic batching speedup regressed below the 1.3x gate: {speedup:.2}x"
+        );
+    }
+    std::fs::remove_dir_all(&root).ok();
+}

@@ -41,6 +41,7 @@ impl PlanArtifact {
     pub const SCHEMA_VERSION: u64 = 1;
     const SCHEMA_NAME: &'static str = "dynamap.plan-artifact";
 
+    /// Wrap a freshly compiled [`Plan`] at the current schema version.
     pub fn new(model: String, device: String, fingerprint: String, plan: Plan) -> PlanArtifact {
         PlanArtifact { version: Self::SCHEMA_VERSION, model, device, fingerprint, plan }
     }
@@ -52,6 +53,8 @@ impl PlanArtifact {
 
     // -- serialization ---------------------------------------------------
 
+    /// Serialize to the versioned JSON schema (the exact form
+    /// [`PlanArtifact::save`] writes to disk).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("schema", Json::str(Self::SCHEMA_NAME)),
@@ -63,6 +66,8 @@ impl PlanArtifact {
         ])
     }
 
+    /// Parse an artifact from its JSON form, rejecting unknown schemas
+    /// and versions newer than [`PlanArtifact::SCHEMA_VERSION`].
     pub fn from_json(j: &Json) -> Result<PlanArtifact, DynamapError> {
         let schema = j.get("schema").as_str().ok_or_else(|| bad("schema"))?;
         if schema != Self::SCHEMA_NAME {
@@ -111,10 +116,12 @@ impl PlanArtifact {
 /// On-disk plan cache keyed by `(model, device, compiler fingerprint)`.
 #[derive(Debug, Clone)]
 pub struct PlanCache {
+    /// Directory the cached plan artifacts live in.
     pub dir: PathBuf,
 }
 
 impl PlanCache {
+    /// A cache rooted at `dir` (created lazily on first write).
     pub fn new(dir: impl Into<PathBuf>) -> PlanCache {
         PlanCache { dir: dir.into() }
     }

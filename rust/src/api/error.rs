@@ -40,6 +40,17 @@ pub enum DynamapError {
     UnknownModel(String),
     /// A plan artifact violates the versioned schema.
     Artifact(String),
+    /// Multi-model serving failure (batch flush failure, missing
+    /// artifacts for a hosted model, …).
+    Serve(String),
+    /// A serving queue was already shut down when the request arrived —
+    /// typically a registry LRU eviction racing a submit. Retrying
+    /// against a freshly resolved host is safe and
+    /// [`crate::serve::ModelRegistry::infer`] does so transparently.
+    QueueClosed {
+        /// Model whose queue was gone.
+        model: String,
+    },
 }
 
 impl DynamapError {
@@ -76,6 +87,10 @@ impl fmt::Display for DynamapError {
                 write!(f, "unknown model '{}': not in the zoo registry", m)
             }
             DynamapError::Artifact(m) => write!(f, "plan artifact error: {}", m),
+            DynamapError::Serve(m) => write!(f, "serving error: {}", m),
+            DynamapError::QueueClosed { model } => {
+                write!(f, "serving error: queue for model '{}' is shut down", model)
+            }
         }
     }
 }

@@ -21,7 +21,9 @@
 //!    [`Session::infer_batch`] with per-request and aggregate
 //!    [`LatencyStats`]. [`Backend::Native`] serves from the in-process
 //!    kernel layer (no HLO artifacts needed) and fans `infer_batch`
-//!    out across threads.
+//!    out across threads; its request-invariant read state is the
+//!    shareable [`NativeState`] the multi-model serving engine
+//!    ([`crate::serve`]) builds on.
 //!
 //! Every fallible call returns the typed [`DynamapError`] instead of
 //! `Result<_, String>`.
@@ -64,6 +66,8 @@
 //!   [`Session::builder`] (with [`SessionBuilder::policy`] /
 //!   [`SessionBuilder::algo_map`]).
 
+#![warn(missing_docs)]
+
 pub mod artifact;
 pub mod compiler;
 pub mod error;
@@ -72,7 +76,7 @@ pub mod session;
 pub use artifact::{PlanArtifact, PlanCache};
 pub use compiler::Compiler;
 pub use error::{DynamapError, Result};
-pub use session::{Backend, BatchMetrics, InferMetrics, Session, SessionBuilder};
+pub use session::{Backend, BatchMetrics, InferMetrics, NativeState, Session, SessionBuilder};
 
 pub use crate::coordinator::metrics::LatencyStats;
 pub use crate::cost::graph_build::Policy;

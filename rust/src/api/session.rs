@@ -23,9 +23,17 @@
 //!   fans requests out across threads. (The PJRT client wraps foreign
 //!   handles that are not thread-safe, so the PJRT backend serves
 //!   batches sequentially.)
+//!
+//! On the native backend everything the request path reads is split
+//! into [`NativeState`]: an `Arc`-shared, `Send + Sync` bundle of
+//! graph + algorithm map + prepared weights. [`Session::native_state`]
+//! hands that bundle to the multi-model serving engine
+//! ([`crate::serve`]), whose batch-queue workers serve requests
+//! without locking (or even retaining) the session that built it.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 use std::time::Instant;
 
 use super::artifact::{PlanArtifact, PlanCache};
@@ -56,6 +64,7 @@ pub enum Backend {
 /// Per-inference metrics.
 #[derive(Debug, Clone)]
 pub struct InferMetrics {
+    /// End-to-end wall-clock compute time for the request, microseconds.
     pub total_us: f64,
     /// (layer name, algorithm, microseconds) per conv layer.
     pub per_layer_us: Vec<(String, String, f64)>,
@@ -260,6 +269,18 @@ impl SessionBuilder {
                 )));
             }
         }
+        // native backend: split the request-invariant read state into a
+        // shareable bundle (see `NativeState`) so batch workers and the
+        // serving engine can run requests without holding the session
+        let native = match backend {
+            Backend::Native => Some(Arc::new(NativeState {
+                cnn: cnn.clone(),
+                algo_map: clamped.clone(),
+                prepared,
+                input: manifest.input,
+            })),
+            Backend::Pjrt => None,
+        };
         Ok(Session {
             manifest,
             cnn,
@@ -269,7 +290,7 @@ impl SessionBuilder {
             backend,
             runtime,
             weights,
-            prepared,
+            native,
             aggregate: LatencyStats::new(),
         })
     }
@@ -301,84 +322,183 @@ fn resolve_algo(name: &str, spec: &ConvSpec) -> Algo {
     }
 }
 
-/// One request through the CNN graph with conv layers executed by the
-/// kernel layer. Free function over plain `Sync` data so a parallel
-/// batch can fan it out across threads without touching the session.
-fn infer_native(
-    cnn: &Cnn,
-    prepared: &BTreeMap<String, PreparedWeights>,
-    algo_map: &BTreeMap<String, String>,
-    input: &TensorBuf,
-) -> Result<(TensorBuf, InferMetrics), DynamapError> {
-    let t_total = Instant::now();
-    let mut per_layer = Vec::new();
-    // activations stay `Tensor` end to end — the only buffer copies are
-    // the request boundary conversions, never per layer
-    let mut values: BTreeMap<usize, Tensor> = BTreeMap::new();
-    let mut final_out = None;
-    for id in cnn.topo_order() {
-        let node = cnn.node(id);
-        let preds = cnn.predecessors(id);
-        let out = match &node.op {
-            Op::Input { c, h1, h2 } => {
-                if input.len() != c * h1 * h2 {
-                    return Err(DynamapError::Shape {
-                        context: "input".into(),
-                        expected: c * h1 * h2,
-                        got: input.len(),
-                    });
-                }
-                Tensor { c: *c, h: *h1, w: *h2, data: input.data.clone() }
-            }
-            Op::Conv(_) => {
-                let pw = prepared.get(&node.name).ok_or_else(|| {
-                    DynamapError::Manifest(format!(
-                        "no prepared weights for layer '{}'",
-                        node.name
-                    ))
-                })?;
-                let t0 = Instant::now();
-                let out = pw.conv2d(&values[&preds[0]]);
-                per_layer.push((
-                    node.name.clone(),
-                    algo_map.get(&node.name).cloned().unwrap_or_default(),
-                    t0.elapsed().as_secs_f64() * 1e6,
-                ));
-                out
-            }
-            Op::Pool(p) => pooling::reference(&values[&preds[0]], p),
-            Op::Concat { c_out, h1, h2 } => {
-                let mut data = Vec::with_capacity(c_out * h1 * h2);
-                for &p in &preds {
-                    data.extend_from_slice(&values[&p].data);
-                }
-                Tensor { c: *c_out, h: *h1, w: *h2, data }
-            }
-            Op::Add { c, h1, h2 } => {
-                let a = &values[&preds[0]];
-                let b = &values[&preds[1]];
-                let data = a.data.iter().zip(&b.data).map(|(x, y)| x + y).collect();
-                Tensor { c: *c, h: *h1, w: *h2, data }
-            }
-            Op::Fc { .. } => {
-                return Err(DynamapError::Runtime(
-                    "FC layers are not part of the serving graph".into(),
-                ))
-            }
-            Op::Output => {
-                final_out = Some(values[&preds[0]].clone());
-                continue;
-            }
-        };
-        values.insert(id, out);
+/// Request-invariant serving state of a native-backend session: the CNN
+/// graph, the clamped algorithm map and every layer's pre-lowered
+/// [`PreparedWeights`].
+///
+/// All fields are plain owned data, so the state is `Send + Sync` and a
+/// single `Arc<NativeState>` can serve requests from any number of
+/// threads concurrently — the multi-model engine in [`crate::serve`]
+/// hands one to each batch-queue worker. The state is built once by
+/// [`SessionBuilder::build`] and never mutated afterwards; per-session
+/// aggregate statistics stay on the [`Session`] that created it.
+#[derive(Debug, Clone)]
+pub struct NativeState {
+    cnn: Cnn,
+    algo_map: BTreeMap<String, String>,
+    prepared: BTreeMap<String, PreparedWeights>,
+    input: (usize, usize, usize),
+}
+
+impl NativeState {
+    /// Name of the model this state serves.
+    pub fn model(&self) -> &str {
+        &self.cnn.name
     }
-    let out =
-        final_out.ok_or_else(|| DynamapError::Graph("no output node reached".into()))?;
-    let m = InferMetrics {
-        total_us: t_total.elapsed().as_secs_f64() * 1e6,
-        per_layer_us: per_layer,
-    };
-    Ok((TensorBuf::new(vec![out.c, out.h, out.w], out.data), m))
+
+    /// The CNN graph being served.
+    pub fn cnn(&self) -> &Cnn {
+        &self.cnn
+    }
+
+    /// Clamped `layer → algorithm` map actually being served.
+    pub fn algo_map(&self) -> &BTreeMap<String, String> {
+        &self.algo_map
+    }
+
+    /// Pre-lowered weights for one layer, if the manifest carried it.
+    pub fn prepared(&self, layer: &str) -> Option<&PreparedWeights> {
+        self.prepared.get(layer)
+    }
+
+    /// How many layers have pre-lowered weights.
+    pub fn prepared_count(&self) -> usize {
+        self.prepared.len()
+    }
+
+    /// Input dimensions `(C, H1, H2)` from the manifest.
+    pub fn input_dims(&self) -> (usize, usize, usize) {
+        self.input
+    }
+
+    /// Expected input element count `(C · H1 · H2)`.
+    pub fn input_len(&self) -> usize {
+        let (c, h1, h2) = self.input;
+        c * h1 * h2
+    }
+
+    /// One request through the CNN graph with conv (and FC) layers
+    /// executed by the kernel layer. Takes `&self` over immutable data,
+    /// so a parallel batch can fan it out across threads.
+    pub fn infer(&self, input: &TensorBuf) -> Result<(TensorBuf, InferMetrics), DynamapError> {
+        let cnn = &self.cnn;
+        let t_total = Instant::now();
+        let mut per_layer = Vec::new();
+        // activations stay `Tensor` end to end — the only buffer copies
+        // are the request boundary conversions, never per layer
+        let mut values: BTreeMap<usize, Tensor> = BTreeMap::new();
+        let mut final_out = None;
+        for id in cnn.topo_order() {
+            let node = cnn.node(id);
+            let preds = cnn.predecessors(id);
+            let out = match &node.op {
+                Op::Input { c, h1, h2 } => {
+                    if input.len() != c * h1 * h2 {
+                        return Err(DynamapError::Shape {
+                            context: "input".into(),
+                            expected: c * h1 * h2,
+                            got: input.len(),
+                        });
+                    }
+                    Tensor { c: *c, h: *h1, w: *h2, data: input.data.clone() }
+                }
+                Op::Conv(_) => {
+                    let pw = self.prepared.get(&node.name).ok_or_else(|| {
+                        DynamapError::Manifest(format!(
+                            "no prepared weights for layer '{}'",
+                            node.name
+                        ))
+                    })?;
+                    let t0 = Instant::now();
+                    let out = pw.conv2d(&values[&preds[0]]);
+                    per_layer.push((
+                        node.name.clone(),
+                        self.algo_map.get(&node.name).cloned().unwrap_or_default(),
+                        t0.elapsed().as_secs_f64() * 1e6,
+                    ));
+                    out
+                }
+                Op::Pool(p) => pooling::reference(&values[&preds[0]], p),
+                Op::Concat { c_out, h1, h2 } => {
+                    let mut data = Vec::with_capacity(c_out * h1 * h2);
+                    for &p in &preds {
+                        data.extend_from_slice(&values[&p].data);
+                    }
+                    Tensor { c: *c_out, h: *h1, w: *h2, data }
+                }
+                Op::Add { c, h1, h2 } => {
+                    let a = &values[&preds[0]];
+                    let b = &values[&preds[1]];
+                    let data = a.data.iter().zip(&b.data).map(|(x, y)| x + y).collect();
+                    Tensor { c: *c, h: *h1, w: *h2, data }
+                }
+                Op::Fc { c_in, c_out } => {
+                    // an FC over the flattened activation is exactly a
+                    // 1×1 conv on a (c_in, 1, 1) tensor, so it serves
+                    // from the same prepared-weight form when the
+                    // manifest carries weights for it (synthetic zoo
+                    // manifests do; AOT manifests never list FC layers)
+                    let pw = self.prepared.get(&node.name).ok_or_else(|| {
+                        DynamapError::Runtime(format!(
+                            "FC layer '{}' has no weights in the manifest",
+                            node.name
+                        ))
+                    })?;
+                    let x = &values[&preds[0]];
+                    if x.data.len() != *c_in {
+                        return Err(DynamapError::Shape {
+                            context: node.name.clone(),
+                            expected: *c_in,
+                            got: x.data.len(),
+                        });
+                    }
+                    let flat = Tensor { c: *c_in, h: 1, w: 1, data: x.data.clone() };
+                    let t0 = Instant::now();
+                    let out = pw.conv2d(&flat);
+                    debug_assert_eq!(out.c, *c_out);
+                    per_layer.push((
+                        node.name.clone(),
+                        self.algo_map.get(&node.name).cloned().unwrap_or_default(),
+                        t0.elapsed().as_secs_f64() * 1e6,
+                    ));
+                    out
+                }
+                Op::Output => {
+                    final_out = Some(values[&preds[0]].clone());
+                    continue;
+                }
+            };
+            values.insert(id, out);
+        }
+        let out =
+            final_out.ok_or_else(|| DynamapError::Graph("no output node reached".into()))?;
+        let m = InferMetrics {
+            total_us: t_total.elapsed().as_secs_f64() * 1e6,
+            per_layer_us: per_layer,
+        };
+        Ok((TensorBuf::new(vec![out.c, out.h, out.w], out.data), m))
+    }
+
+    /// Run a batch of requests, fanning out across the scoped-thread
+    /// pool ([`crate::util::parallel`]). Results and statistics come
+    /// back in input order, bit-identical to a sequential [`NativeState::infer`]
+    /// loop.
+    pub fn infer_batch(
+        &self,
+        inputs: &[TensorBuf],
+    ) -> Result<(Vec<TensorBuf>, BatchMetrics), DynamapError> {
+        let results = parallel_map(inputs, |_, input| self.infer(input));
+        let mut outputs = Vec::with_capacity(inputs.len());
+        let mut per_request = Vec::with_capacity(inputs.len());
+        let mut stats = LatencyStats::new();
+        for r in results {
+            let (out, m) = r?;
+            stats.push(m.total_us);
+            outputs.push(out);
+            per_request.push(m);
+        }
+        Ok((outputs, BatchMetrics { per_request, stats }))
+    }
 }
 
 /// The serving session: plan + prepared weights + backend, ready for
@@ -392,12 +512,38 @@ pub struct Session {
     backend: Backend,
     runtime: Option<PjrtRuntime>,
     weights: BTreeMap<String, TensorBuf>,
-    prepared: BTreeMap<String, PreparedWeights>,
+    native: Option<Arc<NativeState>>,
     aggregate: LatencyStats,
 }
 
 impl Session {
     /// Start building a session over an AOT artifact directory.
+    ///
+    /// The full quickstart flow (`examples/quickstart.rs` runs the
+    /// offline half of this without artifacts):
+    ///
+    /// ```no_run
+    /// use dynamap::api::{Backend, Compiler, Session};
+    /// use dynamap::graph::zoo;
+    /// use dynamap::runtime::TensorBuf;
+    ///
+    /// // offline: run the DSE once and persist the versioned plan
+    /// let cnn = zoo::mini_inception();
+    /// let artifact = Compiler::new().compile(&cnn)?;
+    /// artifact.save("plans/mini-inception.json")?;
+    ///
+    /// // online: serve requests over an artifact directory. With a plan
+    /// // cache, later sessions skip the DSE entirely; the native backend
+    /// // needs only the manifest + weights (no PJRT executables).
+    /// let mut session = Session::builder("artifacts")
+    ///     .backend(Backend::Native)
+    ///     .plan_cache("plans")
+    ///     .build()?;
+    /// let input = TensorBuf::zeros(vec![4, 16, 16]);
+    /// let (outputs, metrics) = session.infer_batch(&[input])?;
+    /// println!("{} outputs, {}", outputs.len(), metrics.stats.summary());
+    /// # Ok::<(), dynamap::api::DynamapError>(())
+    /// ```
     pub fn builder(artifacts_dir: impl Into<String>) -> SessionBuilder {
         SessionBuilder {
             artifacts_dir: artifacts_dir.into(),
@@ -416,10 +562,12 @@ impl Session {
 
     // -- introspection ---------------------------------------------------
 
+    /// The parsed AOT artifact manifest this session serves from.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
+    /// The CNN graph resolved from the manifest's `model` field.
     pub fn cnn(&self) -> &Cnn {
         &self.cnn
     }
@@ -455,12 +603,20 @@ impl Session {
     /// construction on [`Backend::Native`] (the PJRT backend feeds raw
     /// tensors to its executables instead and keeps no prepared form).
     pub fn prepared(&self, layer: &str) -> Option<&PreparedWeights> {
-        self.prepared.get(layer)
+        self.native.as_ref().and_then(|ns| ns.prepared(layer))
     }
 
     /// How many layers have pre-lowered weights.
     pub fn prepared_count(&self) -> usize {
-        self.prepared.len()
+        self.native.as_ref().map_or(0, |ns| ns.prepared_count())
+    }
+
+    /// The shareable request-invariant serving state (native backend
+    /// only). The returned `Arc` is `Send + Sync` and independent of the
+    /// session's lifetime: the serving engine in [`crate::serve`] hands
+    /// clones to its batch-queue workers and drops the session itself.
+    pub fn native_state(&self) -> Option<Arc<NativeState>> {
+        self.native.clone()
     }
 
     /// Executables currently compiled in the PJRT cache (0 on the
@@ -501,8 +657,8 @@ impl Session {
         &mut self,
         input: &TensorBuf,
     ) -> Result<(TensorBuf, InferMetrics), DynamapError> {
-        if self.backend == Backend::Native {
-            let (out, m) = infer_native(&self.cnn, &self.prepared, &self.algo_map, input)?;
+        if let Some(ns) = &self.native {
+            let (out, m) = ns.infer(input)?;
             self.aggregate.push(m.total_us);
             return Ok((out, m));
         }
@@ -598,27 +754,21 @@ impl Session {
         &mut self,
         inputs: &[TensorBuf],
     ) -> Result<(Vec<TensorBuf>, BatchMetrics), DynamapError> {
+        if let Some(ns) = self.native.clone() {
+            let (outputs, metrics) = ns.infer_batch(inputs)?;
+            for m in &metrics.per_request {
+                self.aggregate.push(m.total_us);
+            }
+            return Ok((outputs, metrics));
+        }
         let mut outputs = Vec::with_capacity(inputs.len());
         let mut per_request = Vec::with_capacity(inputs.len());
         let mut stats = LatencyStats::new();
-        if self.backend == Backend::Native {
-            let (cnn, prepared, algo_map) = (&self.cnn, &self.prepared, &self.algo_map);
-            let results =
-                parallel_map(inputs, |_, input| infer_native(cnn, prepared, algo_map, input));
-            for r in results {
-                let (out, m) = r?;
-                stats.push(m.total_us);
-                self.aggregate.push(m.total_us);
-                outputs.push(out);
-                per_request.push(m);
-            }
-        } else {
-            for input in inputs {
-                let (out, m) = self.infer(input)?;
-                stats.push(m.total_us);
-                outputs.push(out);
-                per_request.push(m);
-            }
+        for input in inputs {
+            let (out, m) = self.infer(input)?;
+            stats.push(m.total_us);
+            outputs.push(out);
+            per_request.push(m);
         }
         Ok((outputs, BatchMetrics { per_request, stats }))
     }

@@ -1,24 +1,31 @@
-//! Latency accounting for the inference engine.
+//! Latency accounting for the serving layers ([`crate::api::Session`]
+//! per-session aggregates and the per-model end-to-end histograms in
+//! [`crate::serve::ServerMetrics`]).
 
 /// Aggregated latency statistics over repeated inferences.
 #[derive(Debug, Clone)]
 pub struct LatencyStats {
+    /// Raw samples, microseconds, in arrival order.
     pub samples_us: Vec<f64>,
 }
 
 impl LatencyStats {
+    /// Empty statistics.
     pub fn new() -> LatencyStats {
         LatencyStats { samples_us: Vec::new() }
     }
 
+    /// Record one sample (microseconds).
     pub fn push(&mut self, us: f64) {
         self.samples_us.push(us);
     }
 
+    /// Number of recorded samples.
     pub fn count(&self) -> usize {
         self.samples_us.len()
     }
 
+    /// Arithmetic mean; `0.0` when empty.
     pub fn mean(&self) -> f64 {
         if self.samples_us.is_empty() {
             return 0.0;
@@ -32,23 +39,42 @@ impl LatencyStats {
         v
     }
 
+    /// Nearest-rank percentile: `p` in `[0, 100]` maps onto the sorted
+    /// sample index `round(p/100 · (n-1))`. Degenerate inputs are
+    /// total: an empty set yields `0.0`, a single sample is every
+    /// percentile of itself, and `p` outside `[0, 100]` clamps to
+    /// min/max.
     pub fn percentile(&self, p: f64) -> f64 {
-        let v = self.sorted();
-        if v.is_empty() {
-            return 0.0;
-        }
-        let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
-        v[idx.min(v.len() - 1)]
+        self.percentiles(&[p])[0]
     }
 
+    /// Several nearest-rank percentiles resolved against a single
+    /// sorted copy of the samples — cheaper than repeated
+    /// [`LatencyStats::percentile`] calls for p50/p95/p99 reporting.
+    pub fn percentiles(&self, ps: &[f64]) -> Vec<f64> {
+        let v = self.sorted();
+        ps.iter()
+            .map(|&p| {
+                if v.is_empty() {
+                    return 0.0;
+                }
+                let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+                v[idx.min(v.len() - 1)]
+            })
+            .collect()
+    }
+
+    /// Smallest sample; `0.0` when empty.
     pub fn min(&self) -> f64 {
         self.sorted().first().copied().unwrap_or(0.0)
     }
 
+    /// Largest sample; `0.0` when empty.
     pub fn max(&self) -> f64 {
         self.sorted().last().copied().unwrap_or(0.0)
     }
 
+    /// One-line `n/mean/p50/p95/min/max` summary.
     pub fn summary(&self) -> String {
         format!(
             "n={} mean={:.1}µs p50={:.1}µs p95={:.1}µs min={:.1}µs max={:.1}µs",
@@ -90,5 +116,42 @@ mod tests {
         let s = LatencyStats::new();
         assert_eq!(s.mean(), 0.0);
         assert_eq!(s.percentile(99.0), 0.0);
+        assert_eq!(s.percentile(0.0), 0.0);
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), 0.0);
+        assert_eq!(s.count(), 0);
+    }
+
+    #[test]
+    fn single_sample_is_every_percentile() {
+        let mut s = LatencyStats::new();
+        s.push(42.0);
+        for p in [0.0, 1.0, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(s.percentile(p), 42.0, "p={p}");
+        }
+        assert_eq!(s.mean(), 42.0);
+    }
+
+    #[test]
+    fn percentile_bounds_hit_min_and_max() {
+        let mut s = LatencyStats::new();
+        // unsorted on purpose: percentile must sort internally
+        for v in [30.0, 10.0, 50.0, 20.0, 40.0] {
+            s.push(v);
+        }
+        assert_eq!(s.percentile(0.0), 10.0, "p=0 is the minimum");
+        assert_eq!(s.percentile(100.0), 50.0, "p=100 is the maximum");
+        // out-of-range p clamps instead of panicking
+        assert_eq!(s.percentile(-5.0), 10.0);
+        assert_eq!(s.percentile(250.0), 50.0);
+        // tail percentiles are monotone
+        assert!(s.percentile(95.0) <= s.percentile(99.0));
+        assert!(s.percentile(99.0) <= s.percentile(100.0));
+        // the single-sort batch form agrees with one-at-a-time calls
+        assert_eq!(
+            s.percentiles(&[0.0, 50.0, 100.0]),
+            vec![s.percentile(0.0), s.percentile(50.0), s.percentile(100.0)]
+        );
+        assert_eq!(LatencyStats::new().percentiles(&[50.0, 99.0]), vec![0.0, 0.0]);
     }
 }

@@ -1,5 +1,6 @@
 //! MiniInception — the small inception-style network used for functional
-//! end-to-end validation through the PJRT runtime.
+//! end-to-end validation through the PJRT runtime — and MiniVgg, its
+//! sequential sibling for multi-model serving tests.
 //!
 //! Shapes are deliberately tiny (16×16 input, ≤32 channels) so the
 //! interpret-mode Pallas kernels lower and execute quickly on the CPU
@@ -44,6 +45,26 @@ pub fn mini_inception() -> Cnn {
     b.finish(MINI_INPUT_C, MINI_INPUT_H)
 }
 
+/// Build MiniVgg — a tiny sequential conv→pool tower with a 10-way FC
+/// head. The cheap *second* model for multi-model serving tests and
+/// demos: distinct input shape from mini-inception (3 vs 4 channels),
+/// a global-average-pool + FC tail (so the native FC-as-1×1-conv path
+/// is exercised without a full-size network), and a few thousand MACs
+/// end to end, fast even in debug builds.
+pub fn mini_vgg() -> Cnn {
+    let mut b = CnnBuilder::new("mini-vgg");
+    let inp = b.add("input", Op::Input { c: 3, h1: 16, h2: 16 }, &[]);
+    let c1 = b.conv_same("conv1", inp, 8, (3, 3));
+    let p1 = b.pool("pool1", c1, PoolKind::Max, 2, 2, 0); // → 8×8
+    let c2 = b.conv_same("conv2", p1, 16, (3, 3));
+    let p2 = b.pool("pool2", c2, PoolKind::Max, 2, 2, 0); // → 4×4
+    let c3 = b.conv_same("conv3", p2, 16, (1, 1));
+    let gap = b.pool("gap", c3, PoolKind::Avg, 4, 1, 0); // → 1×1
+    let (c, h1, h2) = b.shape(gap);
+    b.add("fc", Op::Fc { c_in: c * h1 * h2, c_out: 10 }, &[gap]);
+    b.finish(3, 16)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -57,6 +78,17 @@ mod tests {
         assert_eq!(cat.op.out_shape(), (24, 16, 16));
         let head = g.nodes.iter().find(|n| n.name == "head").unwrap();
         assert_eq!(head.op.out_shape(), (16, 8, 8));
+    }
+
+    #[test]
+    fn mini_vgg_structure() {
+        let g = mini_vgg();
+        g.validate().unwrap();
+        assert_eq!(g.conv_count(), 3);
+        let gap = g.nodes.iter().find(|n| n.name == "gap").unwrap();
+        assert_eq!(gap.op.out_shape(), (16, 1, 1));
+        let fc = g.nodes.iter().find(|n| n.name == "fc").unwrap();
+        assert!(matches!(fc.op, Op::Fc { c_in: 16, c_out: 10 }));
     }
 
     #[test]

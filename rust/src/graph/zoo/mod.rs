@@ -1,7 +1,8 @@
 //! Model zoo: the networks the paper evaluates (GoogLeNet, Inception-v4),
 //! the series-parallel lemma examples (VGG-16, AlexNet, ResNet-18 —
-//! Lemma 4.3/4.4) and `mini_inception`, the small network used for
-//! functional end-to-end validation through the PJRT runtime.
+//! Lemma 4.3/4.4), `mini_inception`, the small network used for
+//! functional end-to-end validation through the PJRT runtime, and
+//! `mini_vgg`, its sequential sibling for multi-model serving tests.
 
 mod googlenet;
 mod inception_v4;
@@ -11,26 +12,43 @@ mod mini;
 pub use classic::{alexnet, resnet18, vgg16};
 pub use googlenet::googlenet;
 pub use inception_v4::inception_v4;
-pub use mini::{mini_inception, MINI_INPUT_C, MINI_INPUT_H};
+pub use mini::{mini_inception, mini_vgg, MINI_INPUT_C, MINI_INPUT_H};
 
 use super::Cnn;
 
-/// Look up a zoo model by name.
-pub fn by_name(name: &str) -> Option<Cnn> {
+/// Canonical zoo name for any accepted alias, without building the
+/// model — cheap enough for per-request paths (the serving registry
+/// canonicalizes every lookup through this).
+pub fn canonical_name(name: &str) -> Option<&'static str> {
     match name {
+        "googlenet" => Some("googlenet"),
+        "inception-v4" | "inception_v4" | "inceptionv4" => Some("inception-v4"),
+        "vgg16" | "vgg-16" => Some("vgg16"),
+        "alexnet" => Some("alexnet"),
+        "resnet18" | "resnet-18" => Some("resnet18"),
+        "mini" | "mini-inception" | "mini_inception" => Some("mini-inception"),
+        "mini-vgg" | "mini_vgg" | "minivgg" => Some("mini-vgg"),
+        _ => None,
+    }
+}
+
+/// Look up a zoo model by name (any alias [`canonical_name`] accepts).
+pub fn by_name(name: &str) -> Option<Cnn> {
+    match canonical_name(name)? {
         "googlenet" => Some(googlenet()),
-        "inception-v4" | "inception_v4" | "inceptionv4" => Some(inception_v4()),
-        "vgg16" | "vgg-16" => Some(vgg16()),
+        "inception-v4" => Some(inception_v4()),
+        "vgg16" => Some(vgg16()),
         "alexnet" => Some(alexnet()),
-        "resnet18" | "resnet-18" => Some(resnet18()),
-        "mini" | "mini-inception" | "mini_inception" => Some(mini_inception()),
+        "resnet18" => Some(resnet18()),
+        "mini-inception" => Some(mini_inception()),
+        "mini-vgg" => Some(mini_vgg()),
         _ => None,
     }
 }
 
 /// All zoo model names.
 pub fn names() -> &'static [&'static str] {
-    &["googlenet", "inception-v4", "vgg16", "alexnet", "resnet18", "mini-inception"]
+    &["googlenet", "inception-v4", "vgg16", "alexnet", "resnet18", "mini-inception", "mini-vgg"]
 }
 
 #[cfg(test)]
@@ -73,5 +91,17 @@ mod tests {
     #[test]
     fn unknown_name_is_none() {
         assert!(by_name("nope").is_none());
+        assert!(canonical_name("nope").is_none());
+    }
+
+    #[test]
+    fn canonical_name_agrees_with_built_model() {
+        for alias in ["mini", "mini_inception", "inception_v4", "vgg-16", "minivgg"] {
+            let canonical = canonical_name(alias).unwrap();
+            assert_eq!(by_name(alias).unwrap().name, canonical, "{alias}");
+        }
+        for name in names() {
+            assert_eq!(canonical_name(name), Some(*name), "canonical names are fixed points");
+        }
     }
 }

@@ -68,6 +68,10 @@
 //!   weights) built once at plan time.
 //! * [`runtime`] — PJRT client wrapper that loads the AOT-compiled HLO
 //!   artifacts produced by `python/compile/aot.py` and executes them.
+//! * [`serve`] — multi-model serving engine on top of [`api::Session`]:
+//!   model registry with LRU eviction and a shared plan cache, dynamic
+//!   batching queues, per-model QPS/tail-latency metrics, and the
+//!   closed-loop load generator behind `dynamap serve`/`loadgen`.
 //! * [`coordinator`] — latency metrics + the deprecated engine shim
 //!   (superseded by [`api::Session`]).
 //! * [`emit`] — Verilog-style RTL + control-stream emission.
@@ -86,6 +90,7 @@ pub mod overlay;
 pub mod algos;
 pub mod kernels;
 pub mod runtime;
+pub mod serve;
 pub mod coordinator;
 pub mod emit;
 pub mod bench;

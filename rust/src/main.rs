@@ -9,6 +9,12 @@
 //! * `simulate --model <name>` — cycle-level overlay simulation.
 //! * `infer [--plan-cache DIR]` — end-to-end functional inference
 //!   through PJRT artifacts, optionally caching the DSE plan on disk.
+//! * `serve --models <a,b,…>` — host several models behind the
+//!   multi-model engine (registry + dynamic batching) and answer stdin
+//!   commands (`infer <model> [n]`, `stats`, `models`, `quit`).
+//! * `loadgen --models <a,b,…> --clients N --requests M` — seeded
+//!   closed-loop load through the serving engine; `--compare` reruns
+//!   the identical workload unbatched and prints the speedup.
 //! * `figures --out <dir>` — regenerate every paper table/figure.
 //! * `emit --model <name> --out <dir>` — emit Verilog + control streams.
 
@@ -19,7 +25,7 @@ use dynamap::util::cli::Args;
 use dynamap::util::table::Table;
 
 fn main() {
-    let args = Args::parse_env(&["json", "verbose", "no-fuse"]);
+    let args = Args::parse_env(&["json", "verbose", "no-fuse", "no-synth", "compare"]);
     let code = match args.subcommand.as_deref() {
         Some("zoo") => cmd_zoo(),
         Some("dse") => cmd_dse(&args),
@@ -27,12 +33,15 @@ fn main() {
         Some("baselines") => cmd_baselines(&args),
         Some("simulate") => dynamap::coordinator::cli::simulate(&args),
         Some("infer") => dynamap::coordinator::cli::infer(&args),
+        Some("serve") => dynamap::serve::cli::serve(&args),
+        Some("loadgen") => dynamap::serve::cli::loadgen(&args),
         Some("figures") => dynamap::bench::figures::cli(&args),
         Some("emit") => dynamap::emit::cli(&args),
         _ => {
             eprintln!(
-                "usage: dynamap <zoo|dse|compile|baselines|simulate|infer|figures|emit> \
-                 [--model NAME] [--dsp N] [--out DIR] [--plan-cache DIR] [--json]"
+                "usage: dynamap <zoo|dse|compile|baselines|simulate|infer|serve|loadgen|\
+                 figures|emit> [--model NAME] [--models A,B] [--clients N] [--requests M] \
+                 [--dsp N] [--out DIR] [--plan-cache DIR] [--json]"
             );
             2
         }

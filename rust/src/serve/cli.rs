@@ -1,0 +1,229 @@
+//! `dynamap serve` and `dynamap loadgen` subcommands.
+//!
+//! The offline build has no network stack, so `serve` exposes the
+//! multi-model engine through a line-oriented stdin REPL (`infer
+//! <model> [n]`, `stats`, `models`, `quit`) — the transport is trivial
+//! to swap once one exists; everything behind it is the real engine.
+//! `loadgen` drives the same engine with the seeded closed-loop
+//! generator from [`crate::serve::loadgen`] and prints throughput +
+//! tail-latency tables; `--compare` reruns the identical workload with
+//! batching disabled (`max_batch = 1`) and prints the speedup.
+
+use std::io::BufRead;
+use std::time::{Duration, Instant};
+
+use crate::api::DynamapError;
+use crate::coordinator::metrics::LatencyStats;
+use crate::graph::zoo;
+use crate::runtime::TensorBuf;
+use crate::util::cli::Args;
+use crate::util::parallel::parallel_run;
+use crate::util::rng::Rng;
+
+use super::loadgen::{self, LoadgenConfig};
+use super::queue::BatchConfig;
+use super::registry::{ModelRegistry, RegistryConfig};
+
+/// Shared flags → [`RegistryConfig`] (`--root`, `--plan-cache`,
+/// `--cap`, `--max-batch`, `--max-wait-ms`, `--seed`, `--no-synth`).
+///
+/// Unless `--cap` is given explicitly, capacity grows to fit every
+/// listed model — serving a model list that LRU-thrashes by default
+/// would make warm-up meaningless; capacity pressure is something to
+/// opt into.
+fn registry_config(args: &Args, models: usize) -> RegistryConfig {
+    RegistryConfig {
+        artifacts_root: args.get_or("root", "serve-models").into(),
+        plan_cache: Some(args.get_or("plan-cache", "plans").into()),
+        capacity: match args.get("cap") {
+            Some(_) => args.get_usize("cap", 4),
+            None => models.max(4),
+        },
+        synthesize_missing: !args.has("no-synth"),
+        seed: args.get_usize("seed", 0x5EED) as u64,
+        batch: BatchConfig {
+            max_batch: args.get_usize("max-batch", 8).max(1),
+            max_wait: Duration::from_secs_f64(args.get_f64("max-wait-ms", 2.0).max(0.0) / 1e3),
+        },
+        ..RegistryConfig::default()
+    }
+}
+
+fn model_list(args: &Args, default: &str) -> Vec<String> {
+    args.get_or("models", default)
+        .split(',')
+        .map(|m| m.trim().to_string())
+        .filter(|m| !m.is_empty())
+        .collect()
+}
+
+/// `dynamap serve --models mini,googlenet [--max-batch 8]
+/// [--max-wait-ms 2] [--cap 4] [--root DIR] [--plan-cache DIR]` —
+/// host the listed models behind batch queues and answer stdin
+/// commands until EOF/`quit`.
+pub fn serve(args: &Args) -> i32 {
+    let models = model_list(args, "mini");
+    let registry = ModelRegistry::new(registry_config(args, models.len()));
+    for model in &models {
+        match registry.host(model) {
+            Ok(host) => {
+                let (c, h1, h2) = host.input_dims();
+                println!(
+                    "model ready: {} (input {}×{}×{}, {} prepared layers, plan {})",
+                    host.model(),
+                    c,
+                    h1,
+                    h2,
+                    host.state().prepared_count(),
+                    if host.plan_from_cache() { "from cache" } else { "freshly compiled" },
+                );
+            }
+            Err(e) => {
+                eprintln!("error hosting '{model}': {e}");
+                return 1;
+            }
+        }
+    }
+    println!(
+        "serving {} model(s) [max_batch={}, max_wait={:?}] — commands: \
+         infer <model> [n] | stats | models | quit",
+        models.len(),
+        registry.config().batch.max_batch,
+        registry.config().batch.max_wait,
+    );
+    let stdin = std::io::stdin();
+    let mut burst: u64 = 0;
+    for line in stdin.lock().lines() {
+        let Ok(line) = line else { break };
+        let mut parts = line.split_whitespace();
+        match parts.next() {
+            Some("infer") => {
+                let model = parts.next().unwrap_or("mini").to_string();
+                let n = parts.next().and_then(|v| v.parse().ok()).unwrap_or(1).max(1);
+                burst += 1;
+                match infer_burst(&registry, &model, n, burst) {
+                    Ok(msg) => println!("{msg}"),
+                    Err(e) => eprintln!("error: {e}"),
+                }
+            }
+            Some("stats") => println!("{}", registry.metrics().report()),
+            Some("models") => {
+                println!("resident (LRU → MRU): {:?}", registry.resident());
+                println!("zoo: {:?}", zoo::names());
+            }
+            Some("quit") | Some("exit") => break,
+            None => {}
+            Some(other) => {
+                println!("unknown command '{other}' — infer <model> [n] | stats | models | quit");
+            }
+        }
+    }
+    println!("{}", registry.metrics().report());
+    registry.shutdown();
+    0
+}
+
+/// Submitter-thread cap for the REPL's `infer <model> [n]` bursts.
+const BURST_THREADS: usize = 64;
+
+/// Submit `n` concurrent seeded-random requests to one model and
+/// summarize the burst. Concurrency is capped at [`BURST_THREADS`]
+/// submitter threads that interleave the `n` requests, and inputs are
+/// generated inside each thread — an oversized `infer mini 200000`
+/// must not pre-allocate gigabytes or exhaust OS threads and take the
+/// whole server down with it.
+fn infer_burst(
+    registry: &ModelRegistry,
+    model: &str,
+    n: usize,
+    burst: u64,
+) -> Result<String, DynamapError> {
+    let host = registry.host(model)?;
+    let (c, h1, h2) = host.input_dims();
+    let threads = n.min(BURST_THREADS);
+    let t0 = Instant::now();
+    let per_thread = parallel_run(threads, |t| {
+        let mut results = Vec::new();
+        let mut i = t;
+        while i < n {
+            let mut rng = Rng::new(0xB005 ^ (burst << 20) ^ i as u64);
+            let input = TensorBuf::new(
+                vec![c, h1, h2],
+                (0..c * h1 * h2).map(|_| rng.f32_range(-1.0, 1.0)).collect(),
+            );
+            results.push(registry.infer(model, &input));
+            i += threads;
+        }
+        results
+    });
+    let wall = t0.elapsed();
+    let mut compute = LatencyStats::new();
+    let mut shape = Vec::new();
+    for r in per_thread.into_iter().flatten() {
+        let (out, m) = r?;
+        compute.push(m.total_us);
+        shape = out.shape;
+    }
+    Ok(format!(
+        "{}: {n} request(s) in {wall:.2?} → output shape {shape:?}; compute {}",
+        host.model(),
+        compute.summary()
+    ))
+}
+
+/// `dynamap loadgen --models mini,googlenet --clients N --requests M
+/// [--seed S] [--compare]` — closed-loop synthetic load through the
+/// serving engine; `--requests` counts per client. `--compare` reruns
+/// the identical workload with batching disabled and prints the
+/// dynamic-batching speedup.
+pub fn loadgen(args: &Args) -> i32 {
+    let cfg = LoadgenConfig {
+        models: model_list(args, "mini"),
+        clients: args.get_usize("clients", 4).max(1),
+        requests: args.get_usize("requests", 32).max(1),
+        seed: args.get_usize("seed", 99) as u64,
+    };
+    let reg_cfg = registry_config(args, cfg.models.len());
+    println!(
+        "loadgen: {:?} × {} clients × {} req/client (seed {}, max_batch={}, max_wait={:?})",
+        cfg.models,
+        cfg.clients,
+        cfg.requests,
+        cfg.seed,
+        reg_cfg.batch.max_batch,
+        reg_cfg.batch.max_wait,
+    );
+    let registry = ModelRegistry::new(reg_cfg.clone());
+    let report = match loadgen::run(&registry, &cfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("loadgen failed: {e}");
+            return 1;
+        }
+    };
+    println!("batched: {}", report.summary());
+    println!("{}", registry.metrics().report());
+    registry.shutdown();
+    if args.has("compare") {
+        let mut seq_cfg = reg_cfg;
+        seq_cfg.batch.max_batch = 1;
+        let seq_registry = ModelRegistry::new(seq_cfg);
+        match loadgen::run(&seq_registry, &cfg) {
+            Ok(seq) => {
+                println!("one-at-a-time (max_batch=1): {}", seq.summary());
+                if seq.throughput_rps > 0.0 {
+                    println!(
+                        "dynamic batching speedup: {:.2}x",
+                        report.throughput_rps / seq.throughput_rps
+                    );
+                }
+            }
+            Err(e) => {
+                eprintln!("comparison run failed: {e}");
+                return 1;
+            }
+        }
+        seq_registry.shutdown();
+    }
+    0
+}

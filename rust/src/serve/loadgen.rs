@@ -1,0 +1,122 @@
+//! Closed-loop synthetic load generator.
+//!
+//! Spawns `clients` dedicated threads (via
+//! [`crate::util::parallel::parallel_run`]); each runs a closed loop of
+//! `requests` inferences against a shared [`ModelRegistry`], picking a
+//! model uniformly at random per request from a seeded
+//! [`crate::util::rng::Rng`] stream, so every run of the same
+//! configuration issues the identical request sequence. Models are
+//! warmed (hosted + plan-compiled) before the clock starts, so when the
+//! registry's capacity admits every model the report measures serving,
+//! not lazy compilation. With capacity *below* the model count the
+//! measured phase deliberately includes LRU re-hosting — that is what
+//! capacity pressure does to a serving tier, and `dynamap loadgen`
+//! only opts into it via an explicit `--cap`.
+//!
+//! This is the measurement harness behind `dynamap loadgen` and the
+//! batched-vs-sequential comparison in `benches/serving.rs`.
+
+use std::time::{Duration, Instant};
+
+use crate::api::DynamapError;
+use crate::runtime::TensorBuf;
+use crate::util::parallel::parallel_run;
+use crate::util::rng::Rng;
+
+use super::metrics::ModelSnapshot;
+use super::registry::ModelRegistry;
+
+/// Workload shape for one [`run`] call.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Zoo model names (aliases fine); each request targets one of
+    /// these, picked uniformly per request.
+    pub models: Vec<String>,
+    /// Concurrent closed-loop client threads.
+    pub clients: usize,
+    /// Requests issued per client.
+    pub requests: usize,
+    /// Seed for the request streams (client `i` derives its own stream
+    /// from `seed` and `i`, so runs are reproducible at any client
+    /// count).
+    pub seed: u64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> LoadgenConfig {
+        LoadgenConfig {
+            models: vec!["mini-inception".to_string()],
+            clients: 4,
+            requests: 32,
+            seed: 99,
+        }
+    }
+}
+
+/// Outcome of one [`run`] call.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    /// Total requests issued (`clients × requests`).
+    pub requests: usize,
+    /// Requests that returned an error.
+    pub errors: usize,
+    /// Wall-clock time of the measured (post-warm-up) phase.
+    pub wall: Duration,
+    /// `requests / wall` in requests per second.
+    pub throughput_rps: f64,
+    /// Per-model metrics snapshots taken at the end of the run.
+    pub snapshots: Vec<ModelSnapshot>,
+}
+
+impl LoadReport {
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} requests ({} errors) in {:.2?} → {:.1} req/s",
+            self.requests, self.errors, self.wall, self.throughput_rps
+        )
+    }
+}
+
+/// Drive `registry` with the closed-loop workload described by `cfg`
+/// and report throughput plus per-model telemetry.
+pub fn run(registry: &ModelRegistry, cfg: &LoadgenConfig) -> Result<LoadReport, DynamapError> {
+    if cfg.models.is_empty() {
+        return Err(DynamapError::Serve("loadgen needs at least one model".into()));
+    }
+    // warm every model (host + compile) and capture its input shape so
+    // the measured phase pays neither lazy compilation nor re-lookup
+    let mut targets = Vec::with_capacity(cfg.models.len());
+    for model in &cfg.models {
+        let host = registry.host(model)?;
+        targets.push((host.model().to_string(), host.input_dims()));
+    }
+    let t0 = Instant::now();
+    let client_errors = parallel_run(cfg.clients, |client| {
+        let stream = 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(client as u64 + 1);
+        let mut rng = Rng::new(cfg.seed ^ stream);
+        let mut errors = 0usize;
+        for _ in 0..cfg.requests {
+            let (model, (c, h1, h2)) = &targets[rng.below(targets.len() as u64) as usize];
+            let data: Vec<f32> = (0..c * h1 * h2).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+            let input = TensorBuf::new(vec![*c, *h1, *h2], data);
+            if registry.infer(model, &input).is_err() {
+                errors += 1;
+            }
+        }
+        errors
+    });
+    let wall = t0.elapsed();
+    let total = cfg.clients * cfg.requests;
+    Ok(LoadReport {
+        requests: total,
+        errors: client_errors.iter().sum(),
+        wall,
+        throughput_rps: if wall.as_secs_f64() > 0.0 {
+            total as f64 / wall.as_secs_f64()
+        } else {
+            0.0
+        },
+        snapshots: registry.metrics().snapshots(),
+    })
+}

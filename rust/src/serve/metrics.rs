@@ -1,0 +1,363 @@
+//! [`ServerMetrics`] — per-model serving telemetry.
+//!
+//! Extends the request-level [`LatencyStats`] accounting with the
+//! quantities a multi-model server is judged on: per-model QPS, queue
+//! depth (current and high-water), batch-size histograms and
+//! p50/p95/p99 end-to-end latency. Counters on the submit path are
+//! atomics; the latency samples and histogram sit behind a mutex the
+//! flush path takes a constant number of times per batch (never per
+//! request), so the accounting stays off the per-request hot path.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::coordinator::metrics::LatencyStats;
+use crate::util::table::Table;
+
+/// Mutable telemetry for one hosted model.
+///
+/// Shared (`Arc`) between the model's [`crate::serve::BatchQueue`]
+/// worker, the submit path and any reporting thread; every method takes
+/// `&self`.
+#[derive(Debug)]
+pub struct ModelMetrics {
+    model: String,
+    started: Instant,
+    depth: AtomicUsize,
+    max_depth: AtomicUsize,
+    inner: Mutex<Inner>,
+}
+
+/// Latency samples kept for percentile reporting. Metrics live for the
+/// server's whole lifetime (they survive eviction by design), so the
+/// sample buffer must not grow with traffic: once it reaches this many
+/// samples the oldest half is discarded, keeping percentiles over the
+/// most recent 32k–64k requests at a bounded ~0.5 MB per model.
+const LATENCY_WINDOW: usize = 1 << 16;
+
+#[derive(Debug, Default)]
+struct Inner {
+    requests: u64,
+    errors: u64,
+    batches: u64,
+    /// End-to-end latency per request (queue wait + batched compute),
+    /// µs — a sliding window of the most recent ≤ [`LATENCY_WINDOW`]
+    /// samples.
+    latency: LatencyStats,
+    /// Flushed batch size → number of batches of that size.
+    batch_hist: BTreeMap<usize, u64>,
+}
+
+impl ModelMetrics {
+    /// Fresh telemetry for `model`; QPS is measured from this instant.
+    pub fn new(model: impl Into<String>) -> ModelMetrics {
+        ModelMetrics {
+            model: model.into(),
+            started: Instant::now(),
+            depth: AtomicUsize::new(0),
+            max_depth: AtomicUsize::new(0),
+            inner: Mutex::new(Inner::default()),
+        }
+    }
+
+    /// Model this telemetry belongs to.
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
+    /// A request entered the queue.
+    pub fn enqueued(&self) {
+        let d = self.depth.fetch_add(1, Ordering::Relaxed) + 1;
+        self.max_depth.fetch_max(d, Ordering::Relaxed);
+    }
+
+    /// A request left the queue (picked into a batch, or submit failed).
+    pub fn dequeued(&self) {
+        self.depth.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Requests currently waiting in the queue.
+    pub fn queue_depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+
+    /// Latency samples currently held in the sliding window (bounded by
+    /// `LATENCY_WINDOW` regardless of lifetime traffic).
+    pub fn window_len(&self) -> usize {
+        self.lock().latency.count()
+    }
+
+    /// A batch of `size` requests was flushed to the backend.
+    pub fn record_batch(&self, size: usize) {
+        let mut inner = self.lock();
+        inner.batches += 1;
+        *inner.batch_hist.entry(size).or_insert(0) += 1;
+    }
+
+    /// One request completed successfully after `e2e_us` microseconds
+    /// end to end (queue wait included).
+    pub fn record_request(&self, e2e_us: f64) {
+        self.record_requests(&[e2e_us]);
+    }
+
+    /// A batch of requests completed; one end-to-end latency sample per
+    /// request, recorded under a single lock acquisition (this is what
+    /// the flush path calls, keeping the mutex off the per-request hot
+    /// path). The sample buffer slides past [`LATENCY_WINDOW`] entries;
+    /// the request counter stays exact forever.
+    pub fn record_requests(&self, e2e_us: &[f64]) {
+        let mut inner = self.lock();
+        inner.requests += e2e_us.len() as u64;
+        for &us in e2e_us {
+            inner.latency.push(us);
+        }
+        if inner.latency.samples_us.len() >= LATENCY_WINDOW {
+            inner.latency.samples_us.drain(..LATENCY_WINDOW / 2);
+        }
+    }
+
+    /// `n` requests failed (backend error or shutdown mid-flight).
+    pub fn record_errors(&self, n: usize) {
+        self.lock().errors += n as u64;
+    }
+
+    /// Point-in-time copy of every counter, with percentiles resolved
+    /// (one sort over the bounded sample window, so a `stats` report
+    /// cannot stall the flush path behind repeated clone-and-sorts).
+    pub fn snapshot(&self) -> ModelSnapshot {
+        let inner = self.lock();
+        let elapsed = self.started.elapsed().as_secs_f64();
+        let served = inner.requests;
+        let tail = inner.latency.percentiles(&[50.0, 95.0, 99.0]);
+        ModelSnapshot {
+            model: self.model.clone(),
+            requests: served,
+            errors: inner.errors,
+            batches: inner.batches,
+            qps: if elapsed > 0.0 { served as f64 / elapsed } else { 0.0 },
+            mean_batch: if inner.batches > 0 {
+                let total: u64 =
+                    inner.batch_hist.iter().map(|(size, n)| *size as u64 * n).sum();
+                total as f64 / inner.batches as f64
+            } else {
+                0.0
+            },
+            mean_us: inner.latency.mean(),
+            p50_us: tail[0],
+            p95_us: tail[1],
+            p99_us: tail[2],
+            queue_depth: self.queue_depth(),
+            max_queue_depth: self.max_depth.load(Ordering::Relaxed),
+            batch_hist: inner.batch_hist.clone(),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+}
+
+/// Immutable point-in-time view of one model's [`ModelMetrics`].
+#[derive(Debug, Clone)]
+pub struct ModelSnapshot {
+    /// Model name.
+    pub model: String,
+    /// Successfully served requests.
+    pub requests: u64,
+    /// Failed requests.
+    pub errors: u64,
+    /// Batches flushed to the backend.
+    pub batches: u64,
+    /// Served requests per second since the metrics were created.
+    pub qps: f64,
+    /// Mean flushed batch size.
+    pub mean_batch: f64,
+    /// Mean end-to-end latency, µs, over the sliding sample window.
+    pub mean_us: f64,
+    /// Median end-to-end latency, µs (sliding window of the most
+    /// recent requests — see `LATENCY_WINDOW`).
+    pub p50_us: f64,
+    /// 95th-percentile end-to-end latency, µs (sliding window).
+    pub p95_us: f64,
+    /// 99th-percentile end-to-end latency, µs (sliding window).
+    pub p99_us: f64,
+    /// Requests waiting in the queue at snapshot time.
+    pub queue_depth: usize,
+    /// High-water queue depth since the metrics were created.
+    pub max_queue_depth: usize,
+    /// Flushed batch size → number of batches of that size.
+    pub batch_hist: BTreeMap<usize, u64>,
+}
+
+impl ModelSnapshot {
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{}: {} req ({} err) {:.1} qps  e2e mean={:.0}µs p50={:.0}µs p95={:.0}µs \
+             p99={:.0}µs  {} batches (mean {:.2}, hist {})  max depth {}",
+            self.model,
+            self.requests,
+            self.errors,
+            self.qps,
+            self.mean_us,
+            self.p50_us,
+            self.p95_us,
+            self.p99_us,
+            self.batches,
+            self.mean_batch,
+            self.hist_summary(),
+            self.max_queue_depth
+        )
+    }
+
+    /// Compact `size×count` rendering of the batch-size histogram.
+    pub fn hist_summary(&self) -> String {
+        if self.batch_hist.is_empty() {
+            return "-".into();
+        }
+        self.batch_hist
+            .iter()
+            .map(|(size, n)| format!("{size}×{n}"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+/// Registry-wide telemetry: one [`ModelMetrics`] per hosted model,
+/// created on first touch and kept across LRU evictions so the report
+/// covers the server's whole lifetime.
+#[derive(Debug, Default)]
+pub struct ServerMetrics {
+    models: Mutex<BTreeMap<String, Arc<ModelMetrics>>>,
+}
+
+impl ServerMetrics {
+    /// Empty metrics set.
+    pub fn new() -> ServerMetrics {
+        ServerMetrics::default()
+    }
+
+    /// Telemetry handle for `model`, created on first use.
+    pub fn model(&self, model: &str) -> Arc<ModelMetrics> {
+        let mut models = self.models.lock().unwrap_or_else(|p| p.into_inner());
+        models
+            .entry(model.to_string())
+            .or_insert_with(|| Arc::new(ModelMetrics::new(model)))
+            .clone()
+    }
+
+    /// Snapshots of every model, sorted by model name.
+    pub fn snapshots(&self) -> Vec<ModelSnapshot> {
+        let models = self.models.lock().unwrap_or_else(|p| p.into_inner());
+        models.values().map(|m| m.snapshot()).collect()
+    }
+
+    /// ASCII table over all models: QPS, tail latency, batching and
+    /// queue-depth columns.
+    pub fn report(&self) -> String {
+        let mut t = Table::new(
+            "serving metrics",
+            &[
+                "model", "req", "err", "qps", "mean µs", "p50 µs", "p95 µs", "p99 µs",
+                "batches", "mean b", "depth max", "batch hist",
+            ],
+        );
+        for s in self.snapshots() {
+            t.row(vec![
+                s.model.clone(),
+                s.requests.to_string(),
+                s.errors.to_string(),
+                format!("{:.1}", s.qps),
+                format!("{:.0}", s.mean_us),
+                format!("{:.0}", s.p50_us),
+                format!("{:.0}", s.p95_us),
+                format!("{:.0}", s.p99_us),
+                s.batches.to_string(),
+                format!("{:.2}", s.mean_batch),
+                s.max_queue_depth.to_string(),
+                s.hist_summary(),
+            ]);
+        }
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_percentiles() {
+        let m = ModelMetrics::new("mini");
+        for _ in 0..3 {
+            m.enqueued();
+        }
+        assert_eq!(m.queue_depth(), 3);
+        for _ in 0..3 {
+            m.dequeued();
+        }
+        m.record_batch(3);
+        for us in [100.0, 200.0, 300.0] {
+            m.record_request(us);
+        }
+        m.record_errors(1);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 3);
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.queue_depth, 0);
+        assert_eq!(s.max_queue_depth, 3);
+        assert_eq!(s.mean_batch, 3.0);
+        assert_eq!(s.p50_us, 200.0);
+        assert!(s.p99_us >= s.p50_us);
+        assert!(s.qps > 0.0);
+        assert_eq!(s.batch_hist.get(&3), Some(&1));
+        assert!(s.summary().contains("mini"));
+    }
+
+    #[test]
+    fn histogram_accumulates_per_size() {
+        let m = ModelMetrics::new("m");
+        for size in [1, 4, 4, 8] {
+            m.record_batch(size);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.batches, 4);
+        assert_eq!(s.batch_hist.get(&4), Some(&2));
+        assert_eq!(s.hist_summary(), "1×1 4×2 8×1");
+        // mean batch = (1 + 4 + 4 + 8) / 4
+        assert!((s.mean_batch - 4.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_window_stays_bounded() {
+        let m = ModelMetrics::new("w");
+        let chunk: Vec<f64> = (0..4096).map(|i| i as f64).collect();
+        for _ in 0..40 {
+            m.record_requests(&chunk);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.requests, 40 * 4096, "exact request count survives the window");
+        assert!(
+            m.window_len() < LATENCY_WINDOW,
+            "sample buffer must not grow with lifetime traffic"
+        );
+        assert!(m.window_len() >= LATENCY_WINDOW / 2, "recent samples are retained");
+        assert!(s.p99_us >= s.p50_us);
+    }
+
+    #[test]
+    fn server_metrics_shares_handles() {
+        let sm = ServerMetrics::new();
+        let a = sm.model("x");
+        let b = sm.model("x");
+        a.record_request(10.0);
+        assert_eq!(b.snapshot().requests, 1, "same Arc behind the same name");
+        sm.model("y").record_request(5.0);
+        let snaps = sm.snapshots();
+        assert_eq!(snaps.len(), 2);
+        assert!(sm.report().contains('x') && sm.report().contains('y'));
+    }
+}

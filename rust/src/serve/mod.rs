@@ -1,0 +1,53 @@
+//! Multi-model serving engine: registry + dynamic batching + metrics,
+//! layered on top of [`crate::api::Session`].
+//!
+//! DYNAMAP's staged pipeline ends with a session that serves one model
+//! to one caller at a time. This module opens the many-users,
+//! many-models deployment the ROADMAP asks for (the multi-CNN scenario
+//! of f-CNNx, arxiv 1805.10174, with the tail-latency accounting
+//! surveyed in arxiv 2505.13461), without an async runtime — std
+//! channels and threads only:
+//!
+//! * [`ModelRegistry`] hosts named sessions for any zoo model: lazy
+//!   compilation on first request, one shared on-disk
+//!   [`crate::api::PlanCache`] across all models, LRU eviction beyond a
+//!   configurable capacity, and synthetic artifact generation
+//!   ([`synthesize_artifacts`]) when a model has no AOT output yet.
+//! * [`BatchQueue`] converts concurrent single-request callers into
+//!   batched [`crate::api::NativeState::infer_batch`] calls: flush at
+//!   `max_batch` requests or after `max_wait`, whichever comes first.
+//!   The flush fans compute out over the scoped-thread pool in
+//!   [`crate::util::parallel`], and batching is invisible to callers —
+//!   outputs are bitwise-identical to sequential
+//!   [`crate::api::Session::infer`].
+//! * [`ServerMetrics`] extends [`crate::api::LatencyStats`] with
+//!   per-model QPS, queue depth, batch-size histograms and
+//!   p50/p95/p99 end-to-end latency.
+//! * [`loadgen`] is the seeded closed-loop measurement harness behind
+//!   `dynamap loadgen` and `benches/serving.rs`.
+//!
+//! ```no_run
+//! use dynamap::serve::{ModelRegistry, RegistryConfig};
+//!
+//! let registry = ModelRegistry::new(RegistryConfig::default());
+//! let host = registry.host("mini")?; // lazily compiled + queued
+//! let (c, h1, h2) = host.input_dims();
+//! let input = dynamap::runtime::TensorBuf::zeros(vec![c, h1, h2]);
+//! let (output, metrics) = registry.infer("mini", &input)?;
+//! println!("{:?} in {:.0}µs", output.shape, metrics.total_us);
+//! println!("{}", registry.metrics().report());
+//! # Ok::<(), dynamap::api::DynamapError>(())
+//! ```
+#![warn(missing_docs)]
+#![deny(clippy::correctness, clippy::suspicious)]
+
+pub mod cli;
+pub mod loadgen;
+pub mod metrics;
+pub mod queue;
+pub mod registry;
+
+pub use loadgen::{LoadReport, LoadgenConfig};
+pub use metrics::{ModelMetrics, ModelSnapshot, ServerMetrics};
+pub use queue::{BatchConfig, BatchQueue};
+pub use registry::{synthesize_artifacts, ModelHost, ModelRegistry, RegistryConfig};

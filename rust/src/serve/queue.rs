@@ -1,0 +1,260 @@
+//! [`BatchQueue`] — the dynamic batching scheduler.
+//!
+//! Turns many concurrent single-request callers into few large
+//! [`NativeState::infer_batch`] calls. A dedicated scheduler thread owns
+//! the receive side of an mpsc channel; callers block on a per-request
+//! reply channel. The scheduler accumulates requests until either
+//! `max_batch` are queued or the oldest request has waited `max_wait`,
+//! then flushes the whole batch through the shared [`NativeState`],
+//! whose `infer_batch` fans the compute out over the scoped-thread pool
+//! in [`crate::util::parallel`]. No async runtime is involved — the
+//! offline build has no tokio, and std channels + threads cover the
+//! closed-loop serving model exactly.
+//!
+//! Ordering guarantee: a flush preserves submission order within the
+//! batch and `infer_batch` returns results in input order, so every
+//! caller gets the bitwise-identical output a sequential
+//! [`crate::api::Session::infer`] would have produced (asserted by the
+//! soak test in `rust/tests/serving.rs`).
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::api::session::NativeState;
+use crate::api::{DynamapError, InferMetrics};
+use crate::runtime::TensorBuf;
+
+use super::metrics::ModelMetrics;
+
+/// A request hit a queue whose scheduler has shut down (e.g. the model
+/// was evicted from the registry between lookup and submit) — the
+/// typed, retry-safe [`DynamapError::QueueClosed`].
+fn closed_error(model: &str) -> DynamapError {
+    DynamapError::QueueClosed { model: model.to_string() }
+}
+
+/// When a [`BatchQueue`] flushes its pending requests.
+#[derive(Debug, Clone)]
+pub struct BatchConfig {
+    /// Flush as soon as this many requests are queued (≥ 1; `1`
+    /// disables batching and serves strictly one request at a time —
+    /// the baseline arm of `benches/serving.rs`).
+    pub max_batch: usize,
+    /// Flush when the oldest queued request has waited this long since
+    /// it was enqueued (not since the scheduler picked it up), even if
+    /// the batch is not full. Bounds the latency cost of batching.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchConfig {
+    fn default() -> BatchConfig {
+        BatchConfig { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+struct Request {
+    input: TensorBuf,
+    enqueued: Instant,
+    reply: mpsc::Sender<Result<(TensorBuf, InferMetrics), DynamapError>>,
+}
+
+/// A per-model request queue with a dedicated scheduler thread.
+///
+/// Submit with [`BatchQueue::infer`] from any number of threads; shut
+/// down explicitly with [`BatchQueue::shutdown`] (also runs on drop).
+/// In-flight requests are always answered: on shutdown the scheduler
+/// drains everything already submitted before exiting.
+pub struct BatchQueue {
+    model: String,
+    input_len: usize,
+    tx: Mutex<Option<mpsc::Sender<Request>>>,
+    worker: Mutex<Option<thread::JoinHandle<()>>>,
+    metrics: Arc<ModelMetrics>,
+}
+
+impl BatchQueue {
+    /// Spawn the scheduler thread for `state`'s model.
+    pub fn new(
+        state: Arc<NativeState>,
+        config: BatchConfig,
+        metrics: Arc<ModelMetrics>,
+    ) -> BatchQueue {
+        let model = state.model().to_string();
+        let input_len = state.input_len();
+        let config = BatchConfig { max_batch: config.max_batch.max(1), ..config };
+        let (tx, rx) = mpsc::channel::<Request>();
+        let worker_metrics = metrics.clone();
+        let worker = thread::Builder::new()
+            .name(format!("dynamap-batch-{model}"))
+            .spawn(move || scheduler_loop(rx, state, config, worker_metrics))
+            .expect("spawn batch scheduler thread");
+        BatchQueue {
+            model,
+            input_len,
+            tx: Mutex::new(Some(tx)),
+            worker: Mutex::new(Some(worker)),
+            metrics,
+        }
+    }
+
+    /// Model served by this queue.
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
+    /// Telemetry handle shared with the scheduler.
+    pub fn metrics(&self) -> &Arc<ModelMetrics> {
+        &self.metrics
+    }
+
+    /// `true` until [`BatchQueue::shutdown`] has run.
+    pub fn is_open(&self) -> bool {
+        self.tx.lock().unwrap_or_else(|p| p.into_inner()).is_some()
+    }
+
+    /// Submit one request and block until its batch is served.
+    ///
+    /// Returns the output plus the request's compute-side
+    /// [`InferMetrics`]; queue-side latency lands in the shared
+    /// [`ModelMetrics`]. A wrong-sized input is rejected here, before
+    /// it can enter (and poison) a batch shared with other callers —
+    /// typed as [`DynamapError::Shape`]. Fails with
+    /// [`DynamapError::QueueClosed`] when the queue is shut down.
+    pub fn infer(
+        &self,
+        input: TensorBuf,
+    ) -> Result<(TensorBuf, InferMetrics), DynamapError> {
+        if input.len() != self.input_len {
+            return Err(DynamapError::Shape {
+                context: format!("request for model '{}'", self.model),
+                expected: self.input_len,
+                got: input.len(),
+            });
+        }
+        let sender = self.tx.lock().unwrap_or_else(|p| p.into_inner()).clone();
+        let Some(sender) = sender else {
+            return Err(closed_error(&self.model));
+        };
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.metrics.enqueued();
+        let req = Request { input, enqueued: Instant::now(), reply: reply_tx };
+        if sender.send(req).is_err() {
+            self.metrics.dequeued();
+            return Err(closed_error(&self.model));
+        }
+        drop(sender);
+        // the scheduler answers every drained request; a dropped reply
+        // channel means it exited before reaching ours
+        reply_rx.recv().unwrap_or_else(|_| Err(closed_error(&self.model)))
+    }
+
+    /// Stop accepting requests, drain everything already submitted and
+    /// join the scheduler thread. Idempotent.
+    pub fn shutdown(&self) {
+        self.tx.lock().unwrap_or_else(|p| p.into_inner()).take();
+        let worker = self.worker.lock().unwrap_or_else(|p| p.into_inner()).take();
+        if let Some(handle) = worker {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for BatchQueue {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// The scheduler: block for the first request, top the batch up until
+/// full or past the deadline, flush, repeat. Exits when every sender is
+/// gone and the channel is drained.
+fn scheduler_loop(
+    rx: mpsc::Receiver<Request>,
+    state: Arc<NativeState>,
+    config: BatchConfig,
+    metrics: Arc<ModelMetrics>,
+) {
+    loop {
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => break, // all senders dropped, nothing buffered
+        };
+        let mut batch = vec![first];
+        // the max_wait budget is measured from the oldest request's
+        // enqueue, not from scheduler pickup: a request that already
+        // aged in the channel while the previous batch was computing
+        // must not wait another full max_wait for companions
+        let deadline = batch[0].enqueued + config.max_wait;
+        let mut disconnected = false;
+        while batch.len() < config.max_batch {
+            // requests already buffered during the previous flush
+            // batch for free, even past the deadline
+            match rx.try_recv() {
+                Ok(r) => {
+                    batch.push(r);
+                    continue;
+                }
+                Err(mpsc::TryRecvError::Empty) => {}
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    disconnected = true;
+                    break;
+                }
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                break;
+            }
+            match rx.recv_timeout(left) {
+                Ok(r) => batch.push(r),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    disconnected = true;
+                    break;
+                }
+            }
+        }
+        flush(&state, &metrics, batch);
+        if disconnected {
+            break;
+        }
+    }
+}
+
+/// Serve one accumulated batch and answer every caller.
+fn flush(state: &NativeState, metrics: &ModelMetrics, batch: Vec<Request>) {
+    let mut inputs = Vec::with_capacity(batch.len());
+    let mut waiters = Vec::with_capacity(batch.len());
+    for req in batch {
+        metrics.dequeued();
+        inputs.push(req.input);
+        waiters.push((req.enqueued, req.reply));
+    }
+    metrics.record_batch(inputs.len());
+    match state.infer_batch(&inputs) {
+        Ok((outputs, bm)) => {
+            // account the whole batch under one lock BEFORE answering:
+            // a caller that has its reply must already be visible in
+            // the metrics (the soak test asserts exactly that)
+            let lat: Vec<f64> = waiters
+                .iter()
+                .map(|(enqueued, _)| enqueued.elapsed().as_secs_f64() * 1e6)
+                .collect();
+            metrics.record_requests(&lat);
+            let replies = waiters.into_iter().zip(outputs).zip(bm.per_request);
+            for (((_, reply), output), m) in replies {
+                let _ = reply.send(Ok((output, m)));
+            }
+        }
+        Err(e) => {
+            // DynamapError is not Clone: every caller gets the flush
+            // failure re-wrapped as a serve error
+            metrics.record_errors(waiters.len());
+            let msg = format!("batch flush failed: {e}");
+            for (_, reply) in waiters {
+                let _ = reply.send(Err(DynamapError::Serve(msg.clone())));
+            }
+        }
+    }
+}

@@ -1,0 +1,446 @@
+//! [`ModelRegistry`] — named, lazily compiled, LRU-evicted model hosts.
+//!
+//! The registry is the front door of the serving engine: callers name a
+//! zoo model ("mini", "googlenet", …) and get back a [`ModelHost`]
+//! whose [`crate::serve::BatchQueue`] they can submit to. Hosting is
+//! lazy — the first request for a model resolves its artifacts
+//! (synthesizing a manifest + seeded random weights when permitted and
+//! none exist), builds a native-backend [`Session`] (hitting the shared
+//! on-disk [`crate::api::PlanCache`] so the DSE runs at most once per
+//! `(model, device, config)` across all hosts and process restarts),
+//! splits off its [`NativeState`] and spawns the model's batch
+//! scheduler. Beyond `capacity` resident models the least-recently-used
+//! host is evicted: its queue drains and shuts down, and the next
+//! request for that model rebuilds it (from the plan cache — no DSE).
+//!
+//! Artifact layout: `<artifacts_root>/<canonical model name>/manifest.json`
+//! plus per-layer weight files, exactly the contract
+//! [`crate::runtime::Manifest`] defines for AOT artifacts.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::api::session::NativeState;
+use crate::api::{Backend, Compiler, DynamapError, InferMetrics, Session};
+use crate::graph::layer::Op;
+use crate::graph::{zoo, Cnn};
+use crate::runtime::TensorBuf;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::metrics::{ModelMetrics, ServerMetrics};
+use super::queue::{BatchConfig, BatchQueue};
+
+/// Configuration for [`ModelRegistry`].
+#[derive(Debug, Clone)]
+pub struct RegistryConfig {
+    /// Root directory; each model's artifacts live at
+    /// `<artifacts_root>/<canonical name>/`.
+    pub artifacts_root: PathBuf,
+    /// Shared on-disk plan cache for every hosted model (`None`
+    /// compiles a fresh plan per session build).
+    pub plan_cache: Option<PathBuf>,
+    /// Maximum resident models; `0` means unbounded. The
+    /// least-recently-used host is evicted first.
+    pub capacity: usize,
+    /// When a zoo model has no artifacts on disk, synthesize a manifest
+    /// with seeded random weights instead of failing (demo/benchmark
+    /// substrate; real deployments point `artifacts_root` at AOT
+    /// output).
+    pub synthesize_missing: bool,
+    /// Seed for synthesized weights.
+    pub seed: u64,
+    /// Compiler used for lazy plan compilation; also keys the shared
+    /// plan cache.
+    pub compiler: Compiler,
+    /// Batch scheduler configuration applied to every model queue.
+    pub batch: BatchConfig,
+}
+
+impl Default for RegistryConfig {
+    fn default() -> RegistryConfig {
+        RegistryConfig {
+            artifacts_root: PathBuf::from("serve-models"),
+            plan_cache: None,
+            capacity: 4,
+            synthesize_missing: true,
+            seed: 0x5EED,
+            compiler: Compiler::new(),
+            batch: BatchConfig::default(),
+        }
+    }
+}
+
+/// One resident model: its shareable serving state, batch queue and
+/// telemetry.
+pub struct ModelHost {
+    model: String,
+    state: Arc<NativeState>,
+    queue: BatchQueue,
+    metrics: Arc<ModelMetrics>,
+    plan_from_cache: bool,
+}
+
+impl ModelHost {
+    /// Canonical model name.
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
+    /// The request-invariant serving state backing the queue.
+    pub fn state(&self) -> &Arc<NativeState> {
+        &self.state
+    }
+
+    /// Telemetry for this model (shared with [`ServerMetrics`]).
+    pub fn metrics(&self) -> &Arc<ModelMetrics> {
+        &self.metrics
+    }
+
+    /// `true` when the host's plan came from the shared cache (no DSE
+    /// ran while building it).
+    pub fn plan_from_cache(&self) -> bool {
+        self.plan_from_cache
+    }
+
+    /// Input dimensions `(C, H1, H2)` this model expects.
+    pub fn input_dims(&self) -> (usize, usize, usize) {
+        self.state.input_dims()
+    }
+
+    /// Submit one request to the model's batch queue and block for the
+    /// result. Fails with [`DynamapError::QueueClosed`] after the host
+    /// has been evicted — [`ModelRegistry::infer`] handles that by
+    /// re-resolving the host.
+    pub fn infer(&self, input: TensorBuf) -> Result<(TensorBuf, InferMetrics), DynamapError> {
+        self.queue.infer(input)
+    }
+
+    fn shutdown(&self) {
+        self.queue.shutdown();
+    }
+}
+
+/// The multi-model registry: lazy hosting, shared plan cache, LRU
+/// eviction, per-model batching.
+pub struct ModelRegistry {
+    config: RegistryConfig,
+    metrics: Arc<ServerMetrics>,
+    /// Resident hosts in LRU → MRU order.
+    resident: Mutex<Vec<(String, Arc<ModelHost>)>>,
+    /// Serializes session builds (and artifact synthesis) so two
+    /// first-requests for the same model never race a half-written
+    /// manifest or duplicate an expensive compile.
+    build_lock: Mutex<()>,
+    loads: AtomicUsize,
+}
+
+impl ModelRegistry {
+    /// An empty registry; models are hosted on first request.
+    pub fn new(config: RegistryConfig) -> ModelRegistry {
+        ModelRegistry {
+            config,
+            metrics: Arc::new(ServerMetrics::new()),
+            resident: Mutex::new(Vec::new()),
+            build_lock: Mutex::new(()),
+            loads: AtomicUsize::new(0),
+        }
+    }
+
+    /// The configuration the registry was built with.
+    pub fn config(&self) -> &RegistryConfig {
+        &self.config
+    }
+
+    /// Registry-wide telemetry (survives evictions).
+    pub fn metrics(&self) -> &Arc<ServerMetrics> {
+        &self.metrics
+    }
+
+    /// How many sessions this registry has built — a probe for LRU
+    /// tests: an eviction followed by a re-request increments this, a
+    /// resident hit does not.
+    pub fn loads(&self) -> usize {
+        self.loads.load(Ordering::Relaxed)
+    }
+
+    /// Canonical names of the currently resident models, least recently
+    /// used first.
+    pub fn resident(&self) -> Vec<String> {
+        self.lock_resident().iter().map(|(n, _)| n.clone()).collect()
+    }
+
+    /// Resolve (and if necessary host) `model`, refreshing its recency.
+    /// Accepts any zoo alias ("mini" == "mini-inception"). The resident
+    /// hit path is cheap (name canonicalization + one short lock); the
+    /// model graph is only built on a hosting miss.
+    pub fn host(&self, model: &str) -> Result<Arc<ModelHost>, DynamapError> {
+        let canonical = zoo::canonical_name(model)
+            .ok_or_else(|| DynamapError::UnknownModel(model.to_string()))?;
+        if let Some(host) = self.lookup_refresh(canonical) {
+            return Ok(host);
+        }
+        // build under the build lock; re-check residency first because
+        // another thread may have hosted the model while we waited
+        let build_guard = self.build_lock.lock().unwrap_or_else(|p| p.into_inner());
+        if let Some(host) = self.lookup_refresh(canonical) {
+            return Ok(host);
+        }
+        let cnn = zoo::by_name(canonical)
+            .ok_or_else(|| DynamapError::UnknownModel(canonical.to_string()))?;
+        let host = Arc::new(self.build_host(&cnn, canonical)?);
+        self.loads.fetch_add(1, Ordering::Relaxed);
+        let evicted = {
+            let mut resident = self.lock_resident();
+            resident.push((canonical.to_string(), host.clone()));
+            let mut evicted = Vec::new();
+            if self.config.capacity > 0 {
+                while resident.len() > self.config.capacity {
+                    evicted.push(resident.remove(0).1);
+                }
+            }
+            evicted
+        };
+        // the new host is published; release both locks before joining
+        // evicted schedulers — draining another model's in-flight batch
+        // must block neither resident lookups nor unrelated cold starts
+        drop(build_guard);
+        for old in evicted {
+            old.shutdown();
+        }
+        Ok(host)
+    }
+
+    /// Serve one request through `model`'s batch queue, hosting the
+    /// model first if needed. A host evicted between lookup and submit
+    /// is transparently re-resolved.
+    pub fn infer(
+        &self,
+        model: &str,
+        input: &TensorBuf,
+    ) -> Result<(TensorBuf, InferMetrics), DynamapError> {
+        for _ in 0..3 {
+            let host = self.host(model)?;
+            match host.infer(input.clone()) {
+                Err(DynamapError::QueueClosed { .. }) => continue,
+                result => return result,
+            }
+        }
+        Err(DynamapError::Serve(format!(
+            "model '{model}' kept being evicted mid-request"
+        )))
+    }
+
+    /// Evict `model` now (no-op when it is not resident). Returns
+    /// whether a host was evicted. The next request re-hosts it.
+    pub fn evict(&self, model: &str) -> bool {
+        let Some(canonical) = zoo::canonical_name(model) else {
+            return false;
+        };
+        let host = {
+            let mut resident = self.lock_resident();
+            match resident.iter().position(|(n, _)| n == canonical) {
+                Some(pos) => Some(resident.remove(pos).1),
+                None => None,
+            }
+        };
+        match host {
+            Some(h) => {
+                h.shutdown();
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Drain and shut down every resident host. The registry stays
+    /// usable: later requests re-host lazily.
+    pub fn shutdown(&self) {
+        let hosts: Vec<_> = self.lock_resident().drain(..).collect();
+        for (_, host) in hosts {
+            host.shutdown();
+        }
+    }
+
+    fn lock_resident(&self) -> std::sync::MutexGuard<'_, Vec<(String, Arc<ModelHost>)>> {
+        self.resident.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Resident hit: move to the MRU end and return the host.
+    fn lookup_refresh(&self, canonical: &str) -> Option<Arc<ModelHost>> {
+        let mut resident = self.lock_resident();
+        let pos = resident.iter().position(|(n, _)| n == canonical)?;
+        let entry = resident.remove(pos);
+        let host = entry.1.clone();
+        resident.push(entry);
+        Some(host)
+    }
+
+    /// Resolve artifacts, build the session, split its native state and
+    /// spawn the batch scheduler.
+    fn build_host(&self, cnn: &Cnn, canonical: &str) -> Result<ModelHost, DynamapError> {
+        let dir = self.config.artifacts_root.join(canonical);
+        if !dir.join("manifest.json").exists() {
+            if self.config.synthesize_missing {
+                synthesize_artifacts(cnn, &dir, self.config.seed)?;
+            } else {
+                return Err(DynamapError::Serve(format!(
+                    "no artifacts for model '{canonical}' under {} \
+                     (synthesize_missing is off)",
+                    dir.display()
+                )));
+            }
+        }
+        let mut builder = Session::builder(dir.to_string_lossy().into_owned())
+            .backend(Backend::Native)
+            .compiler(self.config.compiler.clone());
+        if let Some(cache) = &self.config.plan_cache {
+            builder = builder.plan_cache(cache);
+        }
+        let session = builder.build()?;
+        let plan_from_cache = session.plan_from_cache();
+        let state = session.native_state().ok_or_else(|| {
+            DynamapError::Serve("native session produced no shareable state".into())
+        })?;
+        let metrics = self.metrics.model(canonical);
+        let queue = BatchQueue::new(state.clone(), self.config.batch.clone(), metrics.clone());
+        Ok(ModelHost {
+            model: canonical.to_string(),
+            state,
+            queue,
+            metrics,
+            plan_from_cache,
+        })
+    }
+}
+
+/// Write a synthetic artifact set for `cnn` into `dir`: a
+/// [`crate::runtime::Manifest`]-conformant `manifest.json` with empty
+/// `algos` maps (native serving needs no HLO) and one seeded random
+/// weight file per conv/FC layer, He-scaled so activations stay bounded
+/// through deep networks.
+///
+/// This is the registry's missing-artifact fallback and the substrate
+/// for the serving tests and benches; it deliberately produces the same
+/// bytes for the same `(cnn, seed)` so runs are reproducible.
+pub fn synthesize_artifacts(cnn: &Cnn, dir: &Path, seed: u64) -> Result<(), DynamapError> {
+    std::fs::create_dir_all(dir).map_err(|e| DynamapError::io(dir, e))?;
+    let mut input = None;
+    for node in &cnn.nodes {
+        if let Op::Input { c, h1, h2 } = &node.op {
+            input = Some((*c, *h1, *h2));
+        }
+    }
+    let (c, h1, h2) = input
+        .ok_or_else(|| DynamapError::Graph(format!("model '{}' has no input node", cnn.name)))?;
+    let mut rng = Rng::new(seed);
+    let mut layers = Vec::new();
+    for node in &cnn.nodes {
+        // (c_in, c_out, h1, h2, k1, k2, s, p1, p2, o1, o2)
+        let (dims, count) = match &node.op {
+            Op::Conv(spec) => (
+                (
+                    spec.c_in, spec.c_out, spec.h1, spec.h2, spec.k1, spec.k2, spec.s,
+                    spec.p1, spec.p2, spec.o1(), spec.o2(),
+                ),
+                spec.weight_count(),
+            ),
+            // an FC layer is a 1×1 conv over the flattened activation —
+            // see `NativeState::infer` — so the manifest carries it in
+            // the same layer schema
+            Op::Fc { c_in, c_out } => {
+                ((*c_in, *c_out, 1, 1, 1, 1, 1, 0, 0, 1, 1), c_in * c_out)
+            }
+            _ => continue,
+        };
+        let (ci, co, lh1, lh2, k1, k2, s, p1, p2, o1, o2) = dims;
+        let scale = (2.0 / (ci * k1 * k2) as f32).sqrt();
+        let safe: String = node
+            .name
+            .chars()
+            .map(|ch| if ch.is_ascii_alphanumeric() || ch == '-' || ch == '.' { ch } else { '_' })
+            .collect();
+        let wfile = format!("w__{safe}.bin");
+        let mut bytes = Vec::with_capacity(count * 4);
+        for _ in 0..count {
+            bytes.extend_from_slice(&rng.f32_range(-scale, scale).to_le_bytes());
+        }
+        let wpath = dir.join(&wfile);
+        std::fs::write(&wpath, bytes).map_err(|e| DynamapError::io(&wpath, e))?;
+        layers.push(Json::obj(vec![
+            ("name", Json::str(node.name.clone())),
+            ("c_in", Json::num(ci as f64)),
+            ("c_out", Json::num(co as f64)),
+            ("h1", Json::num(lh1 as f64)),
+            ("h2", Json::num(lh2 as f64)),
+            ("k1", Json::num(k1 as f64)),
+            ("k2", Json::num(k2 as f64)),
+            ("s", Json::num(s as f64)),
+            ("p1", Json::num(p1 as f64)),
+            ("p2", Json::num(p2 as f64)),
+            ("o1", Json::num(o1 as f64)),
+            ("o2", Json::num(o2 as f64)),
+            ("algos", Json::obj(vec![])),
+            ("weights", Json::str(wfile)),
+            ("weight_count", Json::num(count as f64)),
+        ]));
+    }
+    let manifest = Json::obj(vec![
+        ("model", Json::str(cnn.name.clone())),
+        (
+            "input",
+            Json::obj(vec![
+                ("c", Json::num(c as f64)),
+                ("h1", Json::num(h1 as f64)),
+                ("h2", Json::num(h2 as f64)),
+            ]),
+        ),
+        ("layers", Json::Arr(layers)),
+        ("golden_input", Json::str("")),
+        ("golden_output", Json::str("")),
+    ]);
+    let mpath = dir.join("manifest.json");
+    std::fs::write(&mpath, manifest.pretty()).map_err(|e| DynamapError::io(&mpath, e))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_model_is_typed() {
+        let reg = ModelRegistry::new(RegistryConfig::default());
+        let e = reg.host("not-a-model").unwrap_err();
+        assert!(matches!(e, DynamapError::UnknownModel(_)), "{e}");
+        assert!(!reg.evict("not-a-model"));
+    }
+
+    #[test]
+    fn synthesized_manifest_round_trips() {
+        let cnn = zoo::mini_inception();
+        let dir = std::env::temp_dir()
+            .join(format!("dynamap_synth_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        synthesize_artifacts(&cnn, &dir, 7).unwrap();
+        let m = crate::runtime::Manifest::load(dir.to_str().unwrap()).unwrap();
+        assert_eq!(m.model, "mini-inception");
+        assert_eq!(m.input, (4, 16, 16));
+        assert_eq!(m.layers.len(), 7);
+        for l in &m.layers {
+            let w = m.weights(l).unwrap();
+            assert_eq!(w.len(), l.weight_count);
+            assert!(w.iter().all(|v| v.is_finite()));
+        }
+        // same seed, same bytes: synthesis is reproducible
+        let dir2 = std::env::temp_dir()
+            .join(format!("dynamap_synth2_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir2).ok();
+        synthesize_artifacts(&cnn, &dir2, 7).unwrap();
+        let a = std::fs::read(dir.join("manifest.json")).unwrap();
+        let b = std::fs::read(dir2.join("manifest.json")).unwrap();
+        assert_eq!(a, b);
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::remove_dir_all(&dir2).ok();
+    }
+}

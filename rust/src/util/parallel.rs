@@ -76,6 +76,40 @@ where
     out.into_iter().map(|o| o.expect("parallel_map: missing result slot")).collect()
 }
 
+/// Run `f(0)`, `f(1)`, …, `f(n-1)` on `n` dedicated scoped threads and
+/// collect the results in index order.
+///
+/// Unlike [`parallel_map`], this always spawns exactly `n` threads and
+/// ignores `DYNAMAP_THREADS`: it models *concurrent callers* (blocking
+/// closed-loop clients driving a serving queue, where each thread spends
+/// its time waiting, not computing), not CPU-bound work items. Worker
+/// panics are re-raised on the caller thread.
+pub fn parallel_run<R, F>(n: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    if n <= 1 {
+        return (0..n).map(&f).collect();
+    }
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n)
+            .map(|i| {
+                let f = &f;
+                s.spawn(move || f(i))
+            })
+            .collect();
+        for (i, h) in handles.into_iter().enumerate() {
+            match h.join() {
+                Ok(r) => out[i] = Some(r),
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+        }
+    });
+    out.into_iter().map(|o| o.expect("parallel_run: missing result slot")).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -114,6 +148,25 @@ mod tests {
                 panic!("boom");
             }
             x
+        });
+    }
+
+    #[test]
+    fn parallel_run_spawns_every_index() {
+        assert!(parallel_run(0, |i| i).is_empty());
+        assert_eq!(parallel_run(1, |i| i + 10), vec![10]);
+        let out = parallel_run(17, |i| i * i);
+        assert_eq!(out, (0..17).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    #[should_panic(expected = "client boom")]
+    fn parallel_run_propagates_panics() {
+        parallel_run(4, |i| {
+            if i == 2 {
+                panic!("client boom");
+            }
+            i
         });
     }
 

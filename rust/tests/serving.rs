@@ -1,0 +1,215 @@
+//! Multi-model serving engine integration tests: the soak test (N
+//! client threads × M requests through the batch queue produce outputs
+//! bitwise-equal to sequential `Session::infer`), registry LRU eviction
+//! with lazy recompilation through the shared plan cache, and
+//! concurrent two-model serving. Everything runs on synthesized
+//! artifacts — no PJRT, no `make artifacts`.
+
+use std::path::PathBuf;
+
+use dynamap::api::{Backend, Compiler, Device, DynamapError, Session};
+use dynamap::runtime::TensorBuf;
+use dynamap::serve::{BatchConfig, ModelRegistry, RegistryConfig};
+use dynamap::util::parallel::parallel_run;
+use dynamap::util::rng::Rng;
+
+fn temp_root(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("dynamap_serving_{}_{}", tag, std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+/// Registry over a temp root: small-edge device (fast DSE), shared plan
+/// cache under the same root, synthetic artifacts.
+fn registry(root: &PathBuf, capacity: usize, max_batch: usize, max_wait_ms: u64) -> ModelRegistry {
+    ModelRegistry::new(RegistryConfig {
+        artifacts_root: root.join("zoo"),
+        plan_cache: Some(root.join("plans")),
+        capacity,
+        synthesize_missing: true,
+        seed: 0xA11CE,
+        compiler: Compiler::new().device(Device::small_edge()),
+        batch: BatchConfig {
+            max_batch,
+            max_wait: std::time::Duration::from_millis(max_wait_ms),
+        },
+    })
+}
+
+fn input_for(dims: (usize, usize, usize), client: usize, req: usize) -> TensorBuf {
+    let (c, h1, h2) = dims;
+    let mut rng = Rng::new(0xBA5E ^ ((client * 1000 + req) as u64));
+    TensorBuf::new(
+        vec![c, h1, h2],
+        (0..c * h1 * h2).map(|_| rng.f32_range(-1.0, 1.0)).collect(),
+    )
+}
+
+/// The soak test of the PR: concurrent closed-loop clients through the
+/// dynamic batching queue must be indistinguishable (bitwise) from a
+/// sequential `Session::infer` loop over the same inputs.
+#[test]
+fn soak_batched_outputs_bitwise_equal_sequential() {
+    let root = temp_root("soak");
+    let reg = registry(&root, 0, 5, 25);
+    let host = reg.host("mini").unwrap();
+    assert_eq!(host.model(), "mini-inception");
+    assert!(!host.plan_from_cache(), "first host compiles the plan");
+    let dims = host.input_dims();
+
+    // sequential reference: a plain Session over the very same
+    // synthesized artifact dir (and plan cache, so the same algo map)
+    let dir = root.join("zoo").join("mini-inception");
+    let mut session = Session::builder(dir.to_str().unwrap().to_string())
+        .backend(Backend::Native)
+        .compiler(Compiler::new().device(Device::small_edge()))
+        .plan_cache(root.join("plans"))
+        .build()
+        .unwrap();
+    assert!(session.plan_from_cache(), "registry already populated the shared plan cache");
+
+    let clients = 4usize;
+    let per_client = 10usize;
+    let expected: Vec<Vec<TensorBuf>> = (0..clients)
+        .map(|ci| {
+            (0..per_client)
+                .map(|j| session.infer(&input_for(dims, ci, j)).unwrap().0)
+                .collect()
+        })
+        .collect();
+
+    // the soak: concurrent closed-loop clients through the batch queue
+    let results: Vec<Vec<TensorBuf>> = parallel_run(clients, |ci| {
+        (0..per_client)
+            .map(|j| reg.infer("mini", &input_for(dims, ci, j)).unwrap().0)
+            .collect()
+    });
+    for (ci, (exp, got)) in expected.iter().zip(&results).enumerate() {
+        for (j, (e, g)) in exp.iter().zip(got).enumerate() {
+            assert_eq!(e, g, "client {ci} request {j}: batched != sequential");
+        }
+    }
+
+    // telemetry must account for exactly the queued traffic
+    let snap = host.metrics().snapshot();
+    let total = (clients * per_client) as u64;
+    assert_eq!(snap.requests, total);
+    assert_eq!(snap.errors, 0);
+    assert_eq!(snap.queue_depth, 0, "queue drained");
+    let hist_total: u64 = snap.batch_hist.iter().map(|(size, n)| *size as u64 * n).sum();
+    assert_eq!(hist_total, total, "batch histogram covers every request");
+    assert!(snap.batches >= total / 5, "no batch may exceed max_batch=5");
+    assert!(snap.batch_hist.keys().all(|&s| (1..=5).contains(&s)));
+    assert!(snap.p50_us > 0.0 && snap.p99_us >= snap.p50_us);
+
+    reg.shutdown();
+    std::fs::remove_dir_all(&root).ok();
+}
+
+/// A malformed request is rejected at submit time with a typed Shape
+/// error and never enters a batch — so it cannot fail co-batched
+/// requests from other callers or distort the serving counters.
+#[test]
+fn wrong_shape_is_rejected_before_batching() {
+    let root = temp_root("shape");
+    let reg = registry(&root, 0, 4, 2);
+    let host = reg.host("mini").unwrap();
+    let err = reg.infer("mini", &TensorBuf::zeros(vec![1, 1, 1])).unwrap_err();
+    assert!(matches!(err, DynamapError::Shape { .. }), "{err}");
+    // the queue saw nothing: no request, no error, no batch
+    let snap = host.metrics().snapshot();
+    assert_eq!((snap.requests, snap.errors, snap.batches), (0, 0, 0));
+    // and valid traffic is unaffected
+    let (out, _) = reg.infer("mini", &input_for(host.input_dims(), 0, 0)).unwrap();
+    assert_eq!(out.shape, vec![16, 8, 8]);
+    reg.shutdown();
+    std::fs::remove_dir_all(&root).ok();
+}
+
+/// Registry behavior end to end, sharing one artifact root + plan cache
+/// across three registry configurations (synthesis and each model's DSE
+/// run exactly once): LRU eviction under capacity pressure, lazy
+/// re-hosting from the shared plan cache, recency refresh on touch, and
+/// two models serving concurrently — mini-vgg's trailing FC runs
+/// natively as a 1×1 conv. (Big-model hosting — googlenet and friends —
+/// goes through the identical code path via `dynamap serve`/`loadgen`;
+/// tier-1 sticks to the debug-build-fast mini pair.)
+#[test]
+fn registry_lru_eviction_and_multi_model_serving() {
+    let root = temp_root("registry");
+
+    // -- capacity 1: hosting a second model evicts the first ------------
+    let reg = registry(&root, 1, 4, 2);
+    let first = reg.host("mini").unwrap();
+    assert_eq!(reg.loads(), 1);
+    assert_eq!(reg.resident(), vec!["mini-inception".to_string()]);
+    assert!(!first.plan_from_cache(), "first host compiles the plan");
+    let mini_dims = first.input_dims();
+
+    let vgg = reg.host("mini-vgg").unwrap();
+    assert_eq!(reg.loads(), 2);
+    assert_eq!(reg.resident(), vec!["mini-vgg".to_string()]);
+    let vgg_dims = vgg.input_dims();
+    assert_eq!(vgg_dims, (3, 16, 16), "per-model input shapes");
+
+    // the evicted host's queue is shut down: stale handles fail typed…
+    let stale = first.infer(input_for(mini_dims, 0, 0));
+    assert!(
+        matches!(stale, Err(DynamapError::QueueClosed { .. })),
+        "evicted host must refuse new requests with the retry-safe error"
+    );
+
+    // …but the registry transparently re-hosts: this evicts mini-vgg,
+    // rebuilds mini from the shared plan cache (no DSE) and serves
+    let (out, _) = reg.infer("mini", &input_for(mini_dims, 0, 0)).unwrap();
+    assert_eq!(out.shape, vec![16, 8, 8]);
+    assert_eq!(reg.loads(), 3, "eviction + re-request = one more session build");
+    let back = reg.host("mini").unwrap();
+    assert!(back.plan_from_cache(), "rebuild must hit the shared plan cache");
+    assert_eq!(reg.loads(), 3, "resident hit does not rebuild");
+    reg.shutdown();
+    assert!(reg.resident().is_empty());
+
+    // -- capacity 2: touches refresh recency, eviction is explicit ------
+    let reg2 = registry(&root, 2, 4, 2);
+    let a = reg2.host("mini").unwrap();
+    let b = reg2.host("mini-vgg").unwrap();
+    assert!(a.plan_from_cache() && b.plan_from_cache(), "all plans cached by now");
+    assert_eq!(
+        reg2.resident(),
+        vec!["mini-inception".to_string(), "mini-vgg".to_string()]
+    );
+    reg2.host("mini").unwrap(); // touch → MRU end
+    assert_eq!(
+        reg2.resident(),
+        vec!["mini-vgg".to_string(), "mini-inception".to_string()]
+    );
+    assert_eq!(reg2.loads(), 2, "touches never rebuild resident hosts");
+    assert!(reg2.evict("mini-vgg"));
+    assert_eq!(reg2.resident(), vec!["mini-inception".to_string()]);
+    assert!(!reg2.evict("mini-vgg"), "double eviction is a no-op");
+    reg2.shutdown();
+
+    // -- capacity 4: both models serve concurrently ---------------------
+    let reg3 = registry(&root, 4, 4, 2);
+    let outputs = parallel_run(4, |ci| {
+        if ci % 2 == 0 {
+            reg3.infer("mini", &input_for(mini_dims, 0, 0)).unwrap().0
+        } else {
+            reg3.infer("mini-vgg", &input_for(vgg_dims, 1, 0)).unwrap().0
+        }
+    });
+    assert_eq!(outputs[0].shape, vec![16, 8, 8]);
+    // mini-vgg ends in a 10-way FC served natively as a 1×1 conv
+    assert_eq!(outputs[1].shape, vec![10, 1, 1]);
+    assert!(outputs[1].data.iter().all(|v| v.is_finite()));
+    assert_eq!(outputs[0], outputs[2], "same input, same model → same output");
+    assert_eq!(outputs[1], outputs[3], "same input, same model → same output");
+    assert_eq!(
+        reg3.resident(),
+        vec!["mini-inception".to_string(), "mini-vgg".to_string()]
+    );
+    reg3.shutdown();
+    std::fs::remove_dir_all(&root).ok();
+}
