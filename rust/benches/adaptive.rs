@@ -1,0 +1,136 @@
+//! `cargo bench` target for the online adaptation loop (ROADMAP
+//! §Performance, PR 4 methodology — fixed seed 99, release profile,
+//! `DYNAMAP_BENCH_FAST` unset for real numbers).
+//!
+//! Start from a deliberately mis-calibrated device: kn2row and
+//! Winograd priced ~10000× too cheap, so the DSE maps mini-inception's
+//! conv layers away from im2col even where im2col is actually fastest
+//! on this host. Serve profiled traffic, then run the
+//! profile → calibrate → remap loop to convergence (no further swaps)
+//! and measure the same 8-request `infer_batch` workload before and
+//! after. The run prints `adaptive remap speedup: N.NNx` so ROADMAP.md
+//! has a number to append; `DYNAMAP_BENCH_ASSERT=1` turns the ≥1.2×
+//! threshold into a hard failure on hosts with ≥4 cores (plain runs
+//! only report — the gap between algorithm families is a property of
+//! the host's cache hierarchy, and single-core CI boxes are too noisy
+//! to gate on).
+
+use std::collections::BTreeMap;
+
+use dynamap::api::{Compiler, Device};
+use dynamap::bench::harness::Bencher;
+use dynamap::cost::DeviceCalibration;
+use dynamap::runtime::TensorBuf;
+use dynamap::serve::{BatchConfig, ModelRegistry, RegistryConfig};
+use dynamap::tune::{calibrate, remap, RemapConfig};
+use dynamap::util::parallel::worker_count;
+use dynamap::util::rng::Rng;
+
+fn algo_histogram(map: &BTreeMap<String, String>) -> BTreeMap<String, usize> {
+    let mut h = BTreeMap::new();
+    for algo in map.values() {
+        *h.entry(algo.clone()).or_insert(0) += 1;
+    }
+    h
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    let root = std::env::temp_dir()
+        .join(format!("dynamap_adaptive_bench_{}", std::process::id()));
+    std::fs::remove_dir_all(&root).ok();
+
+    // the deliberately mis-calibrated device
+    let skew = DeviceCalibration::default()
+        .with("kn2row", 1e-4, 0.0)
+        .with("winograd", 1e-4, 0.0);
+    let registry = ModelRegistry::new(RegistryConfig {
+        artifacts_root: root.join("zoo"),
+        plan_cache: None,
+        capacity: 2,
+        synthesize_missing: true,
+        seed: 99,
+        compiler: Compiler::new().device(Device::small_edge()).calibration(skew),
+        batch: BatchConfig::default(),
+        profile: true,
+    });
+    let host = registry.host("mini-inception").expect("host mini-inception");
+    println!(
+        "  mis-calibrated plan: {:?}",
+        algo_histogram(host.state().algo_map())
+    );
+
+    // fixed 8-request workload, seed 99 (ROADMAP methodology)
+    let (c, h1, h2) = host.input_dims();
+    let mut rng = Rng::new(99);
+    let inputs: Vec<TensorBuf> = (0..8)
+        .map(|_| {
+            TensorBuf::new(
+                vec![c, h1, h2],
+                (0..c * h1 * h2).map(|_| rng.f32_range(-1.0, 1.0)).collect(),
+            )
+        })
+        .collect();
+    let warm = |n: usize| {
+        for _ in 0..n {
+            host.state().infer_batch(&inputs).expect("profiled warm-up batch");
+        }
+    };
+    warm(16); // populate the profiler before the first calibration
+
+    let before = b
+        .bench("adaptive/mini-inception/8req/mis-calibrated", || {
+            host.state().infer_batch(&inputs).expect("pre-remap batch").0.len()
+        })
+        .clone();
+
+    // profile → calibrate → remap to convergence (hysteresis stops it)
+    let mut swaps = 0usize;
+    for pass in 0..4 {
+        let state = host.state();
+        let (p1, p2) = host.plan_shape().expect("registry hosts carry a plan shape");
+        let profile = host.profile().expect("profiling is on");
+        let cal = calibrate(
+            state.cnn(),
+            &registry.config().compiler,
+            p1,
+            p2,
+            &profile.snapshot(),
+        )
+        .expect("calibration over profiled traffic");
+        let outcome = remap(&registry, "mini-inception", &cal, &RemapConfig::default())
+            .expect("remap");
+        println!("  pass {pass}: {}", outcome.summary());
+        if !outcome.swapped {
+            break;
+        }
+        swaps += 1;
+        warm(8); // refresh observations under the new plan
+    }
+    println!(
+        "  calibrated plan after {swaps} swap(s): {:?}",
+        algo_histogram(host.state().algo_map())
+    );
+
+    let after = b
+        .bench("adaptive/mini-inception/8req/calibrated", || {
+            host.state().infer_batch(&inputs).expect("post-remap batch").0.len()
+        })
+        .clone();
+
+    let speedup = before.mean.as_secs_f64() / after.mean.as_secs_f64();
+    println!(
+        "adaptive remap speedup (calibrated plan vs deliberately mis-calibrated \
+         device): {speedup:.2}x"
+    );
+    // enforced gate: needs real parallel headroom and at least one swap
+    if std::env::var("DYNAMAP_BENCH_ASSERT").is_ok() && worker_count(8) >= 4 {
+        assert!(swaps >= 1, "the adaptation loop never swapped a plan");
+        assert!(
+            speedup >= 1.2,
+            "adaptive remap speedup regressed below the 1.2x gate: {speedup:.2}x"
+        );
+    }
+    registry.shutdown();
+    std::fs::remove_dir_all(&root).ok();
+}

@@ -15,7 +15,7 @@ use super::artifact::PlanArtifact;
 use super::error::DynamapError;
 use crate::cost::gemm::Dataflow;
 use crate::cost::graph_build::{CostGraph, Policy};
-use crate::cost::Device;
+use crate::cost::{Device, DeviceCalibration};
 use crate::dse::algo1::{identify_parameters_bounded, Algo1Result};
 use crate::dse::{DseConfig, Plan};
 use crate::graph::Cnn;
@@ -97,6 +97,16 @@ impl Compiler {
         self
     }
 
+    /// Apply a profile-fitted [`DeviceCalibration`] to the cost model:
+    /// every plan this compiler produces prices each algorithm family
+    /// at its observed (rather than purely analytic) latency. The
+    /// calibration is part of [`Compiler::fingerprint`], so calibrated
+    /// and uncalibrated plans never collide in a [`super::PlanCache`].
+    pub fn calibration(mut self, calibration: DeviceCalibration) -> Compiler {
+        self.config.calibration = calibration;
+        self
+    }
+
     /// `P_SA1` sweep bounds for Algorithm 1. Survives a later
     /// [`Compiler::device`] call.
     pub fn p1_bounds(mut self, lo: usize, hi: usize) -> Compiler {
@@ -169,7 +179,7 @@ impl Compiler {
             Some((p1, p2)) => format!("{p1}x{p2}"),
         };
         let desc = format!(
-            "{}|{}|{}|{}|{}|{}|{}|{}|wino{}x{}|strided{}|df{}|owl{}|fuse{}|p1[{},{}]|{}|{}",
+            "{}|{}|{}|{}|{}|{}|{}|{}|wino{}x{}|strided{}|df{}|owl{}|fuse{}|p1[{},{}]|{}|cal{}|{}",
             d.name,
             d.dsp_cap,
             d.freq_mhz,
@@ -187,6 +197,7 @@ impl Compiler {
             c.p1_lo,
             c.p1_hi,
             shape,
+            c.calibration.describe(),
             PlanArtifact::SCHEMA_VERSION,
         );
         format!("{:016x}", fnv1a(&desc))
@@ -353,6 +364,18 @@ mod tests {
         assert_ne!(
             base.fingerprint(),
             Compiler::new().device(Device::small_edge()).fingerprint()
+        );
+        // a non-identity calibration keys a distinct plan-cache entry
+        assert_ne!(
+            base.fingerprint(),
+            Compiler::new()
+                .calibration(DeviceCalibration::default().with("kn2row", 2.0, 0.0))
+                .fingerprint()
+        );
+        assert_eq!(
+            base.fingerprint(),
+            Compiler::new().calibration(DeviceCalibration::identity()).fingerprint(),
+            "identity calibration is the default"
         );
     }
 

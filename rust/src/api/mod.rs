@@ -53,11 +53,9 @@
 //!
 //! ## Migrating from the 0.1 API
 //!
-//! The old entry points remain as thin deprecated shims for one
-//! release. The shims preserve the call shape, not the exact types:
-//! their error type is now [`DynamapError`] (the stringly-typed
-//! `Result<_, String>` is gone everywhere), and `InferenceEngine`'s
-//! former public fields are accessor methods:
+//! The 0.1 entry points (and their one-release deprecated shims) are
+//! gone. The replacements preserve the call shape, with the typed
+//! [`DynamapError`] instead of `Result<_, String>`:
 //!
 //! * `dse::Dse::{run, run_policy, run_fixed_shape}` →
 //!   [`Compiler::compile`] (with [`Compiler::policy`] /

@@ -48,6 +48,7 @@ use crate::graph::{zoo, Cnn};
 use crate::kernels::PreparedWeights;
 use crate::overlay::pooling;
 use crate::runtime::{Manifest, PjrtRuntime, TensorBuf};
+use crate::tune::profiler::LayerProfile;
 use crate::util::parallel::parallel_map;
 
 /// How conv layers execute on the request path.
@@ -87,6 +88,7 @@ pub struct SessionBuilder {
     plan: Option<PlanArtifact>,
     cache_dir: Option<PathBuf>,
     backend: Backend,
+    profiler: Option<Arc<LayerProfile>>,
 }
 
 impl SessionBuilder {
@@ -133,12 +135,28 @@ impl SessionBuilder {
         self
     }
 
+    /// Attach a per-layer latency profiler to the native serving state
+    /// at construction (so no post-build copy of the prepared weights
+    /// is ever needed). Ignored on [`Backend::Pjrt`], which has no
+    /// profiled native path.
+    pub fn profiler(mut self, profiler: Arc<LayerProfile>) -> SessionBuilder {
+        self.profiler = Some(profiler);
+        self
+    }
+
     /// Resolve the plan, pre-compile every chosen executable (PJRT
     /// backend), pre-load weights and lower them into per-layer
     /// [`PreparedWeights`].
     pub fn build(self) -> Result<Session, DynamapError> {
-        let SessionBuilder { artifacts_dir, compiler, custom_map, plan, cache_dir, backend } =
-            self;
+        let SessionBuilder {
+            artifacts_dir,
+            compiler,
+            custom_map,
+            plan,
+            cache_dir,
+            backend,
+            profiler,
+        } = self;
         if custom_map.is_some() && (plan.is_some() || cache_dir.is_some()) {
             return Err(DynamapError::Config(
                 "SessionBuilder: .algo_map bypasses the DSE and cannot be combined with \
@@ -278,6 +296,7 @@ impl SessionBuilder {
                 algo_map: clamped.clone(),
                 prepared,
                 input: manifest.input,
+                profiler,
             })),
             Backend::Pjrt => None,
         };
@@ -305,8 +324,9 @@ impl SessionBuilder {
 /// have no typed plan at all, and a plan compiled with non-default
 /// Winograd hyper-parameters (e.g. `F(4×4, 3×3)`) must *clamp* to the
 /// `F(2×2, 3×3)` core the kernel layer implements instead of panicking
-/// at session build.
-fn resolve_algo(name: &str, spec: &ConvSpec) -> Algo {
+/// at session build. Shared with `tune::calibrate`, which must price
+/// observed family names exactly as the serving layer executes them.
+pub(crate) fn resolve_algo(name: &str, spec: &ConvSpec) -> Algo {
     match name {
         "kn2row" => Algo::Kn2row,
         "winograd" => {
@@ -338,6 +358,11 @@ pub struct NativeState {
     algo_map: BTreeMap<String, String>,
     prepared: BTreeMap<String, PreparedWeights>,
     input: (usize, usize, usize),
+    /// Optional per-layer latency sink ([`crate::tune`]): when present,
+    /// every request records its per-layer wall-clock samples here.
+    /// Purely observational — attaching a profiler never changes a
+    /// single output bit.
+    profiler: Option<Arc<LayerProfile>>,
 }
 
 impl NativeState {
@@ -375,6 +400,23 @@ impl NativeState {
     pub fn input_len(&self) -> usize {
         let (c, h1, h2) = self.input;
         c * h1 * h2
+    }
+
+    /// A copy of this state with `profiler` attached: every request
+    /// served from the copy records its per-layer wall-clock samples
+    /// into the shared [`LayerProfile`]. Note this clones the prepared
+    /// weights; when building a fresh session, prefer
+    /// [`SessionBuilder::profiler`], which attaches the profiler at
+    /// construction with no copy.
+    pub fn profiled(&self, profiler: Arc<LayerProfile>) -> NativeState {
+        let mut state = self.clone();
+        state.profiler = Some(profiler);
+        state
+    }
+
+    /// The attached per-layer latency profile, if any.
+    pub fn profiler(&self) -> Option<&Arc<LayerProfile>> {
+        self.profiler.as_ref()
     }
 
     /// One request through the CNN graph with conv (and FC) layers
@@ -472,6 +514,9 @@ impl NativeState {
         }
         let out =
             final_out.ok_or_else(|| DynamapError::Graph("no output node reached".into()))?;
+        if let Some(profiler) = &self.profiler {
+            profiler.record(&per_layer);
+        }
         let m = InferMetrics {
             total_us: t_total.elapsed().as_secs_f64() * 1e6,
             per_layer_us: per_layer,
@@ -552,6 +597,7 @@ impl Session {
             plan: None,
             cache_dir: None,
             backend: Backend::Pjrt,
+            profiler: None,
         }
     }
 

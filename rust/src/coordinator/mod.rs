@@ -1,20 +1,12 @@
-//! L3 coordinator: the end-to-end inference layer.
+//! L3 coordinator: latency accounting + the simulation/inference CLI.
 //!
-//! Chains per-layer PJRT executables according to the DSE-chosen
-//! algorithm mapping — the functional embodiment of dynamic algorithm
-//! mapping: each conv layer runs the AOT artifact of *its* algorithm,
-//! while pooling and concat execute natively in Rust between them.
-//! Python never runs on this path.
-//!
-//! The serving implementation lives in [`crate::api::Session`];
-//! [`InferenceEngine`]/[`EnginePolicy`] remain as deprecated shims for
-//! one release. [`metrics::LatencyStats`] is shared with the new API.
+//! The end-to-end serving implementation lives in
+//! [`crate::api::Session`] (the 0.1 `InferenceEngine`/`EnginePolicy`
+//! shims have been removed; `Session::builder` with `.policy(..)` /
+//! `.algo_map(..)` covers their call shapes).
+//! [`metrics::LatencyStats`] is shared with the staged API.
 
-pub mod engine;
 pub mod metrics;
 pub mod cli;
 
-pub use engine::InferMetrics;
-#[allow(deprecated)]
-pub use engine::{EnginePolicy, InferenceEngine};
 pub use metrics::LatencyStats;

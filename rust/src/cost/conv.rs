@@ -1,7 +1,7 @@
 //! Eq. 10–12 — per-layer convolution latency under each algorithm, and
 //! Eq. 14 — effective PE utilization.
 
-use super::device::Device;
+use super::device::{Device, DeviceCalibration};
 use super::gemm::{self, Dataflow};
 use crate::graph::layer::ConvSpec;
 
@@ -25,6 +25,18 @@ impl Algo {
             Algo::Kn2row => "kn2row".into(),
             Algo::Winograd { m, r } => format!("winograd-f{m}x{r}"),
             Algo::WinogradStrided { m, r } => format!("winograd-strided-f{m}x{r}"),
+        }
+    }
+
+    /// The family name shared by every variant of one algorithm — the
+    /// key space of [`DeviceCalibration`] and the label the serving
+    /// layer's algorithm maps use ("im2col", "kn2row", "winograd";
+    /// the strided extension belongs to the Winograd family).
+    pub fn family(&self) -> &'static str {
+        match self {
+            Algo::Im2col => "im2col",
+            Algo::Kn2row => "kn2row",
+            Algo::Winograd { .. } | Algo::WinogradStrided { .. } => "winograd",
         }
     }
 
@@ -74,6 +86,11 @@ pub struct CostModel {
     /// Restrict every layer to one dataflow (the Figs. 9/10 `bl1`/`bl2`
     /// NS-only baselines disable the §3.2 dataflow optimization).
     pub force_dataflow: Option<Dataflow>,
+    /// Profile-fitted per-algorithm correction applied to every
+    /// latency this model reports (identity by default). Fitted by
+    /// `tune::calibrate` from observed per-layer latencies so the DSE
+    /// re-solves against what the hardware actually achieves.
+    pub calibration: DeviceCalibration,
 }
 
 impl CostModel {
@@ -85,6 +102,7 @@ impl CostModel {
             stall_free: true,
             strided_winograd: false,
             force_dataflow: None,
+            calibration: DeviceCalibration::identity(),
         }
     }
 
@@ -157,11 +175,18 @@ impl CostModel {
         let cycles = (per_call + lt) * calls as u64;
         let macs = gemm::gemm_macs(a, b, c) * calls as u64;
         let pes = (p1 * p2) as f64;
+        // `cycles` stays the raw analytic count (it also feeds Eq. 14);
+        // the calibration corrects the wall-clock estimate only, so a
+        // family-uniform affine fit never reorders dataflows within a
+        // family but does reorder algorithms against each other
+        let seconds = self
+            .calibration
+            .apply(algo.family(), cycles as f64 * self.device.cycle_time());
         ConvCost {
             algo,
             dataflow: df,
             cycles,
-            seconds: cycles as f64 * self.device.cycle_time(),
+            seconds,
             macs,
             utilization: macs as f64 / (cycles as f64 * pes),
             gemm: (a, b, c, calls),
@@ -319,6 +344,21 @@ mod tests {
         let s2 = ConvSpec::new(8, 8, 16, 16, 3, 3, 2, 1, 1);
         assert_eq!(Algo::available(&s2, 2, 3, false).len(), 2);
         assert_eq!(Algo::available(&s2, 2, 3, true).len(), 3);
+    }
+
+    #[test]
+    fn calibration_rescales_one_family_only() {
+        let mut m = model();
+        let spec = layer_3x3();
+        let base_kn = m.best_conv_cost(&spec, Algo::Kn2row, 64, 64);
+        let base_im = m.best_conv_cost(&spec, Algo::Im2col, 64, 64);
+        m.calibration = DeviceCalibration::default().with("kn2row", 10.0, 0.0);
+        let cal_kn = m.best_conv_cost(&spec, Algo::Kn2row, 64, 64);
+        let cal_im = m.best_conv_cost(&spec, Algo::Im2col, 64, 64);
+        assert!((cal_kn.seconds / base_kn.seconds - 10.0).abs() < 1e-9);
+        assert_eq!(cal_im.seconds, base_im.seconds, "other families untouched");
+        assert_eq!(cal_kn.cycles, base_kn.cycles, "raw cycle count is preserved");
+        assert_eq!(cal_kn.dataflow, base_kn.dataflow, "uniform fit keeps the dataflow");
     }
 
     #[test]

@@ -1,6 +1,10 @@
 //! Target device meta data — the third input of the DYNAMAP flow
 //! (paper §1: "FPGA device meta data (DSP resources, on-chip memory size
-//! and external bandwidth)").
+//! and external bandwidth)") — plus [`DeviceCalibration`], the
+//! profile-fitted correction the `tune` subsystem layers on top of the
+//! analytic numbers.
+
+use std::collections::BTreeMap;
 
 /// FPGA device description. All bandwidth numbers are for the INT8
 /// datapath the paper evaluates (1 byte / element).
@@ -74,6 +78,102 @@ impl Device {
     }
 }
 
+/// Affine correction for one algorithm family, fitted from observed
+/// latencies: `calibrated_sec = scale · analytic_sec + offset_sec`
+/// (clamped at zero).
+///
+/// `scale` is the inverse of the achievable fraction of modeled GEMM
+/// throughput for that family (`scale = 2` means the family runs at
+/// half the analytic rate); `offset_sec` absorbs per-invocation
+/// overheads the cycle model does not see (dispatch, transform setup).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AlgoFit {
+    /// Multiplicative term applied to the analytic latency.
+    pub scale: f64,
+    /// Additive per-layer overhead, seconds.
+    pub offset_sec: f64,
+}
+
+impl AlgoFit {
+    /// The do-nothing fit (`scale = 1`, no offset).
+    pub fn identity() -> AlgoFit {
+        AlgoFit { scale: 1.0, offset_sec: 0.0 }
+    }
+
+    /// Apply the fit to an analytic latency, never going negative.
+    pub fn apply(&self, sec: f64) -> f64 {
+        (self.scale * sec + self.offset_sec).max(0.0)
+    }
+}
+
+impl Default for AlgoFit {
+    fn default() -> AlgoFit {
+        AlgoFit::identity()
+    }
+}
+
+/// Profile-fitted correction of a [`Device`]'s analytic cost model:
+/// one [`AlgoFit`] per algorithm family (keyed by
+/// [`super::Algo::family`] — "im2col", "kn2row", "winograd"), plus a
+/// fallback fit for families without observations.
+///
+/// The default value is the identity (every family served verbatim by
+/// the analytic model), so an uncalibrated pipeline behaves exactly as
+/// before. `tune::calibrate` produces non-trivial instances from
+/// measured per-layer latencies; the fallback is set to the global
+/// time-scale so an unprofiled family is never accidentally priced at
+/// the raw analytic cost next to heavily re-scaled profiled ones.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct DeviceCalibration {
+    /// Per-family fit, keyed by algorithm family name.
+    pub per_algo: BTreeMap<String, AlgoFit>,
+    /// Fit applied to families absent from `per_algo`.
+    pub fallback: AlgoFit,
+}
+
+impl DeviceCalibration {
+    /// The identity calibration (same as `Default`).
+    pub fn identity() -> DeviceCalibration {
+        DeviceCalibration::default()
+    }
+
+    /// `true` when applying this calibration changes nothing.
+    pub fn is_identity(&self) -> bool {
+        self.fallback == AlgoFit::identity()
+            && self.per_algo.values().all(|f| *f == AlgoFit::identity())
+    }
+
+    /// Builder-style: set the fit for one family (tests and the
+    /// deliberately mis-calibrated bench device use this).
+    pub fn with(mut self, family: &str, scale: f64, offset_sec: f64) -> DeviceCalibration {
+        self.per_algo.insert(family.to_string(), AlgoFit { scale, offset_sec });
+        self
+    }
+
+    /// The fit for `family` (the fallback when unprofiled).
+    pub fn fit(&self, family: &str) -> &AlgoFit {
+        self.per_algo.get(family).unwrap_or(&self.fallback)
+    }
+
+    /// Apply the family's fit to an analytic latency.
+    pub fn apply(&self, family: &str, sec: f64) -> f64 {
+        self.fit(family).apply(sec)
+    }
+
+    /// Stable textual form for compiler fingerprints: two calibrations
+    /// with equal descriptions produce identical plans.
+    pub fn describe(&self) -> String {
+        if self.is_identity() {
+            return "id".to_string();
+        }
+        let mut s = format!("fb{:e},{:e}", self.fallback.scale, self.fallback.offset_sec);
+        for (family, f) in &self.per_algo {
+            s.push_str(&format!(";{family}{:e},{:e}", f.scale, f.offset_sec));
+        }
+        s
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -91,5 +191,27 @@ mod tests {
         // 64 GB/s → 64e9 elements/s → 64e9 elems in 1 s
         assert!((d.xfer_sec(64e9) - 1.0).abs() < 1e-9);
         assert!(d.xfer_sec(1.0) > 0.0);
+    }
+
+    #[test]
+    fn calibration_identity_and_apply() {
+        let id = DeviceCalibration::identity();
+        assert!(id.is_identity());
+        assert_eq!(id.apply("im2col", 2.5), 2.5);
+        assert_eq!(id.describe(), "id");
+
+        let cal = DeviceCalibration::default().with("kn2row", 3.0, 0.5);
+        assert!(!cal.is_identity());
+        assert!((cal.apply("kn2row", 2.0) - 6.5).abs() < 1e-12);
+        // unprofiled family falls back (identity fallback here)
+        assert_eq!(cal.apply("winograd", 2.0), 2.0);
+        assert_ne!(cal.describe(), "id");
+        assert_eq!(cal.describe(), cal.clone().describe(), "description is stable");
+    }
+
+    #[test]
+    fn calibration_never_goes_negative() {
+        let f = AlgoFit { scale: 1.0, offset_sec: -5.0 };
+        assert_eq!(f.apply(1.0), 0.0);
     }
 }

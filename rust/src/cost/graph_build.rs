@@ -195,7 +195,10 @@ impl CostGraph {
                 Op::Fc { c_in, c_out } => {
                     let (df, cy) = super::gemm::best_dataflow(p1, p2, 1, *c_in, *c_out);
                     let _ = df;
-                    let sec = cy as f64 * cm.device.cycle_time();
+                    // the serving layer executes FC as an im2col 1×1
+                    // conv, so it calibrates with that family
+                    let sec =
+                        cm.calibration.apply("im2col", cy as f64 * cm.device.cycle_time());
                     let w = tm.device.xfer_sec((*c_in * *c_out) as f64);
                     let sec = if overlap_weight_load { sec.max(w) } else { sec + w };
                     (vec![Choice::Passthrough { node: node.id, seconds: sec }], vec![sec])

@@ -8,13 +8,12 @@
 //! (continued in [`crate::emit`]).
 //!
 //! The flow is driven through [`crate::api::Compiler`], which produces a
-//! cacheable [`crate::api::PlanArtifact`]; the [`Dse`] driver here is a
-//! deprecated shim kept for one release.
+//! cacheable [`crate::api::PlanArtifact`]. The online `tune` subsystem
+//! re-enters this flow at serving time: `tune::remap` re-runs the cost
+//! graph + PBQP solve with a profile-calibrated cost model.
 
 pub mod algo1;
 pub mod plan;
 
 pub use algo1::{identify_parameters, Algo1Result};
-#[allow(deprecated)]
-pub use plan::Dse;
 pub use plan::{DseConfig, Plan};

@@ -1,17 +1,15 @@
 //! DSE configuration + the [`Plan`] produced by the pipeline (Fig. 7
-//! steps ①–⑥) — everything the coordinator, the Verilog emitter and the
-//! bench harness consume.
+//! steps ①–⑥) — everything the serving layer, the Verilog emitter and
+//! the bench harness consume.
 //!
-//! The pipeline itself is driven by [`crate::api::Compiler`]; the
-//! [`Dse`] struct remains as a deprecated shim for one release.
+//! The pipeline itself is driven by [`crate::api::Compiler`]; the 0.1
+//! `Dse` driver shim has been removed (its call shapes map 1:1 onto
+//! `Compiler::compile` / `Compiler::policy` / `Compiler::fixed_shape`).
 
-use super::algo1::{identify_parameters_bounded, Algo1Result};
-use crate::api::{Compiler, DynamapError};
 use crate::cost::conv::CostModel;
-use crate::cost::graph_build::{BuildOpts, CostGraph, MappingResult, Policy};
+use crate::cost::graph_build::{BuildOpts, MappingResult};
 use crate::cost::transition::TransitionModel;
-use crate::cost::Device;
-use crate::graph::Cnn;
+use crate::cost::{Device, DeviceCalibration};
 use crate::util::json::Json;
 
 /// Framework configuration: device + model hyper-parameters + search
@@ -31,6 +29,9 @@ pub struct DseConfig {
     /// `P_SA1` sweep bounds for Algorithm 1.
     pub p1_lo: usize,
     pub p1_hi: usize,
+    /// Profile-fitted correction of the analytic cost model (identity
+    /// by default; produced by `tune::calibrate`).
+    pub calibration: DeviceCalibration,
 }
 
 impl DseConfig {
@@ -45,6 +46,7 @@ impl DseConfig {
             opts: BuildOpts::default(),
             p1_lo: 16,
             p1_hi: 512,
+            calibration: DeviceCalibration::identity(),
         }
     }
 
@@ -59,6 +61,7 @@ impl DseConfig {
             opts: BuildOpts::default(),
             p1_lo: 2,
             p1_hi: cap,
+            calibration: DeviceCalibration::identity(),
         }
     }
 
@@ -68,6 +71,7 @@ impl DseConfig {
         cm.wino_r = self.wino_r;
         cm.strided_winograd = self.strided_winograd;
         cm.force_dataflow = self.force_dataflow;
+        cm.calibration = self.calibration.clone();
         cm
     }
 
@@ -77,16 +81,6 @@ impl DseConfig {
         tm.wino_r = self.wino_r;
         tm
     }
-}
-
-/// The original DSE driver, kept as a thin shim over
-/// [`Compiler`] for one release.
-#[deprecated(
-    since = "0.2.0",
-    note = "use dynamap::api::Compiler (e.g. `Compiler::from_config(config).compile(&cnn)`)"
-)]
-pub struct Dse {
-    pub config: DseConfig,
 }
 
 /// Full DSE output: architecture parameters + optimal algorithm mapping.
@@ -101,61 +95,6 @@ pub struct Plan {
     /// End-to-end throughput in GOP/s (2·MACs / latency), the paper's
     /// Table-3 metric.
     pub throughput_gops: f64,
-}
-
-#[allow(deprecated)]
-impl Dse {
-    pub fn new(config: DseConfig) -> Dse {
-        Dse { config }
-    }
-
-    fn compiler(&self) -> Compiler {
-        Compiler::from_config(self.config.clone())
-    }
-
-    /// Fig. 7 steps ①–③: Algorithm 1 → cost graph → PBQP solve.
-    pub fn run(&self, cnn: &Cnn) -> Result<Plan, DynamapError> {
-        Ok(self.compiler().compile(cnn)?.into_plan())
-    }
-
-    /// Run with a fixed baseline policy instead of the PBQP solve
-    /// (baselines bl3–bl5 and greedy of §6.1.2).
-    pub fn run_policy(&self, cnn: &Cnn, policy: Policy) -> Result<Plan, DynamapError> {
-        Ok(self.compiler().policy(policy).compile(cnn)?.into_plan())
-    }
-
-    /// Run with a fixed systolic-array shape (used by Fig. 9/10's
-    /// square-NS baseline bl1 and by tests).
-    pub fn run_fixed_shape(
-        &self,
-        cnn: &Cnn,
-        p1: usize,
-        p2: usize,
-    ) -> Result<Plan, DynamapError> {
-        Ok(self.compiler().fixed_shape(p1, p2).compile(cnn)?.into_plan())
-    }
-
-    /// Algorithm 1 only.
-    pub fn identify(&self, cnn: &Cnn) -> Algo1Result {
-        identify_parameters_bounded(
-            cnn,
-            &self.config.cost_model(),
-            self.config.device.dsp_cap,
-            self.config.p1_lo,
-            self.config.p1_hi,
-        )
-    }
-
-    pub fn build_graph(&self, cnn: &Cnn, p1: usize, p2: usize) -> CostGraph {
-        CostGraph::build(
-            cnn,
-            &self.config.cost_model(),
-            &self.config.transition_model(),
-            p1,
-            p2,
-            self.config.opts,
-        )
-    }
 }
 
 impl Plan {
@@ -201,6 +140,8 @@ impl Plan {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::Compiler;
+    use crate::cost::graph_build::Policy;
     use crate::graph::zoo;
 
     #[test]
@@ -232,6 +173,12 @@ mod tests {
         }
     }
 
-    // (the deprecated Dse shim's equivalence with Compiler is covered at
-    // the crate surface in rust/tests/dse_pipeline.rs::deprecated_shims_still_work)
+    #[test]
+    fn calibration_flows_into_the_cost_model() {
+        let mut cfg = DseConfig::with_device(Device::small_edge());
+        cfg.calibration = DeviceCalibration::default().with("kn2row", 7.0, 0.0);
+        let cm = cfg.cost_model();
+        assert!((cm.calibration.apply("kn2row", 1.0) - 7.0).abs() < 1e-12);
+        assert_eq!(cm.calibration.apply("im2col", 1.0), 1.0);
+    }
 }

@@ -38,9 +38,11 @@
 //! println!("{} outputs, {}", outputs.len(), metrics.stats.summary());
 //! ```
 //!
-//! The 0.1 entry points (`dse::Dse`, `coordinator::InferenceEngine`)
-//! remain as deprecated shims for one release — see the [`api`] module
-//! docs for the migration table.
+//! At serving time the mapping stays dynamic: the [`tune`] subsystem
+//! profiles per-layer latency on the live request path, fits the
+//! analytic cost model to the observations, re-solves the DSE and
+//! hot-swaps improved plans into the serving engine without dropping a
+//! request.
 //!
 //! ## Layers
 //!
@@ -72,8 +74,11 @@
 //!   model registry with LRU eviction and a shared plan cache, dynamic
 //!   batching queues, per-model QPS/tail-latency metrics, and the
 //!   closed-loop load generator behind `dynamap serve`/`loadgen`.
-//! * [`coordinator`] — latency metrics + the deprecated engine shim
-//!   (superseded by [`api::Session`]).
+//! * [`tune`] — online adaptation: per-layer latency profiling on the
+//!   native serving path, least-squares cost-model calibration,
+//!   DSE re-solve and zero-downtime plan hot-swap (`dynamap tune`,
+//!   `dynamap serve --tune`).
+//! * [`coordinator`] — latency metrics + the simulate/infer CLI.
 //! * [`emit`] — Verilog-style RTL + control-stream emission.
 //! * [`bench`] — mini-criterion harness + figure/table regeneration.
 //! * [`util`] — in-repo substrates (JSON, CLI, RNG/property testing,
@@ -91,6 +96,7 @@ pub mod algos;
 pub mod kernels;
 pub mod runtime;
 pub mod serve;
+pub mod tune;
 pub mod coordinator;
 pub mod emit;
 pub mod bench;

@@ -9,12 +9,17 @@
 //! * `simulate --model <name>` — cycle-level overlay simulation.
 //! * `infer [--plan-cache DIR]` — end-to-end functional inference
 //!   through PJRT artifacts, optionally caching the DSE plan on disk.
-//! * `serve --models <a,b,…>` — host several models behind the
-//!   multi-model engine (registry + dynamic batching) and answer stdin
-//!   commands (`infer <model> [n]`, `stats`, `models`, `quit`).
+//! * `serve --models <a,b,…> [--tune]` — host several models behind
+//!   the multi-model engine (registry + dynamic batching) and answer
+//!   stdin commands (`infer <model> [n]`, `stats`, `models`,
+//!   `profile <model> [file]`, `quit`); `--tune` runs the online
+//!   profile → calibrate → remap → hot-swap loop.
 //! * `loadgen --models <a,b,…> --clients N --requests M` — seeded
 //!   closed-loop load through the serving engine; `--compare` reruns
 //!   the identical workload unbatched and prints the speedup.
+//! * `tune --model <name> --profile <file>` — one-shot cost-model
+//!   calibration + re-map from a recorded profile; prints the residual
+//!   report, the algorithm-map diff and the predicted speedup.
 //! * `figures --out <dir>` — regenerate every paper table/figure.
 //! * `emit --model <name> --out <dir>` — emit Verilog + control streams.
 
@@ -25,7 +30,8 @@ use dynamap::util::cli::Args;
 use dynamap::util::table::Table;
 
 fn main() {
-    let args = Args::parse_env(&["json", "verbose", "no-fuse", "no-synth", "compare"]);
+    let args =
+        Args::parse_env(&["json", "verbose", "no-fuse", "no-synth", "compare", "tune"]);
     let code = match args.subcommand.as_deref() {
         Some("zoo") => cmd_zoo(),
         Some("dse") => cmd_dse(&args),
@@ -35,13 +41,15 @@ fn main() {
         Some("infer") => dynamap::coordinator::cli::infer(&args),
         Some("serve") => dynamap::serve::cli::serve(&args),
         Some("loadgen") => dynamap::serve::cli::loadgen(&args),
+        Some("tune") => dynamap::tune::cli::tune(&args),
         Some("figures") => dynamap::bench::figures::cli(&args),
         Some("emit") => dynamap::emit::cli(&args),
         _ => {
             eprintln!(
                 "usage: dynamap <zoo|dse|compile|baselines|simulate|infer|serve|loadgen|\
-                 figures|emit> [--model NAME] [--models A,B] [--clients N] [--requests M] \
-                 [--dsp N] [--out DIR] [--plan-cache DIR] [--json]"
+                 tune|figures|emit> [--model NAME] [--models A,B] [--clients N] \
+                 [--requests M] [--dsp N] [--out DIR] [--plan-cache DIR] \
+                 [--profile FILE] [--tune] [--json]"
             );
             2
         }

@@ -2,20 +2,26 @@
 //!
 //! The offline build has no network stack, so `serve` exposes the
 //! multi-model engine through a line-oriented stdin REPL (`infer
-//! <model> [n]`, `stats`, `models`, `quit`) — the transport is trivial
-//! to swap once one exists; everything behind it is the real engine.
+//! <model> [n]`, `stats`, `models`, `profile <model> [file]`, `quit`)
+//! — the transport is trivial to swap once one exists; everything
+//! behind it is the real engine. With `--tune` the server also runs
+//! the online adaptation loop ([`crate::tune`]): per-layer profiling,
+//! cost-model calibration and zero-downtime plan hot-swaps, with
+//! `stats` printing the observed-vs-predicted per-layer table.
 //! `loadgen` drives the same engine with the seeded closed-loop
 //! generator from [`crate::serve::loadgen`] and prints throughput +
 //! tail-latency tables; `--compare` reruns the identical workload with
 //! batching disabled (`max_batch = 1`) and prints the speedup.
 
 use std::io::BufRead;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::api::DynamapError;
 use crate::coordinator::metrics::LatencyStats;
 use crate::graph::zoo;
 use crate::runtime::TensorBuf;
+use crate::tune::{observed_vs_predicted, TuneConfig, TuneController};
 use crate::util::cli::Args;
 use crate::util::parallel::parallel_run;
 use crate::util::rng::Rng;
@@ -26,6 +32,9 @@ use super::registry::{ModelRegistry, RegistryConfig};
 
 /// Shared flags → [`RegistryConfig`] (`--root`, `--plan-cache`,
 /// `--cap`, `--max-batch`, `--max-wait-ms`, `--seed`, `--no-synth`).
+/// Profiling stays off here; only `serve` (the command that can run
+/// the tune loop) opts in — `loadgen` must not silently add profiler
+/// overhead to the hot path it exists to measure.
 ///
 /// Unless `--cap` is given explicitly, capacity grows to fit every
 /// listed model — serving a model list that LRU-thrashes by default
@@ -58,12 +67,19 @@ fn model_list(args: &Args, default: &str) -> Vec<String> {
 }
 
 /// `dynamap serve --models mini,googlenet [--max-batch 8]
-/// [--max-wait-ms 2] [--cap 4] [--root DIR] [--plan-cache DIR]` —
-/// host the listed models behind batch queues and answer stdin
-/// commands until EOF/`quit`.
+/// [--max-wait-ms 2] [--cap 4] [--root DIR] [--plan-cache DIR]
+/// [--tune]` — host the listed models behind batch queues and answer
+/// stdin commands until EOF/`quit`. `--tune` (or `DYNAMAP_TUNE=1` in
+/// the environment) profiles the serving path and runs the background
+/// calibrate → remap → hot-swap loop (cadence knobs via
+/// `DYNAMAP_TUNE_*` env vars).
 pub fn serve(args: &Args) -> i32 {
     let models = model_list(args, "mini");
-    let registry = ModelRegistry::new(registry_config(args, models.len()));
+    // either opt-in enables the adaptation loop
+    let tune_on = args.has("tune") || TuneConfig::from_env().is_some();
+    let mut config = registry_config(args, models.len());
+    config.profile = tune_on;
+    let registry = Arc::new(ModelRegistry::new(config));
     for model in &models {
         match registry.host(model) {
             Ok(host) => {
@@ -84,9 +100,23 @@ pub fn serve(args: &Args) -> i32 {
             }
         }
     }
+    let controller = if tune_on {
+        // the DYNAMAP_TUNE_* cadence knobs apply with or without the
+        // DYNAMAP_TUNE enable flag (--tune already opted in)
+        let mut tune_config = TuneConfig::knobs_from_env();
+        tune_config.verbose = true;
+        println!(
+            "online tuning enabled: calibrate + remap every {:?} once a model has \
+             {} fresh profiled requests (hysteresis {:.2})",
+            tune_config.interval, tune_config.min_new_requests, tune_config.hysteresis,
+        );
+        Some(TuneController::spawn(registry.clone(), tune_config))
+    } else {
+        None
+    };
     println!(
         "serving {} model(s) [max_batch={}, max_wait={:?}] — commands: \
-         infer <model> [n] | stats | models | quit",
+         infer <model> [n] | stats | models | profile <model> [file] | quit",
         models.len(),
         registry.config().batch.max_batch,
         registry.config().batch.max_wait,
@@ -106,21 +136,100 @@ pub fn serve(args: &Args) -> i32 {
                     Err(e) => eprintln!("error: {e}"),
                 }
             }
-            Some("stats") => println!("{}", registry.metrics().report()),
+            Some("stats") => {
+                println!("{}", registry.metrics().report());
+                print_tune_tables(&registry);
+            }
             Some("models") => {
                 println!("resident (LRU → MRU): {:?}", registry.resident());
                 println!("zoo: {:?}", zoo::names());
             }
+            Some("profile") => {
+                let model = parts.next().unwrap_or("mini").to_string();
+                match save_profile(&registry, &model, parts.next()) {
+                    Ok(msg) => println!("{msg}"),
+                    Err(e) => eprintln!("error: {e}"),
+                }
+            }
             Some("quit") | Some("exit") => break,
             None => {}
             Some(other) => {
-                println!("unknown command '{other}' — infer <model> [n] | stats | models | quit");
+                println!(
+                    "unknown command '{other}' — infer <model> [n] | stats | models | \
+                     profile <model> [file] | quit"
+                );
             }
         }
     }
     println!("{}", registry.metrics().report());
+    if let Some(controller) = controller {
+        controller.shutdown();
+        println!(
+            "tune loop: {} pass(es), {} hot-swap(s)",
+            controller.passes(),
+            controller.swaps()
+        );
+    }
     registry.shutdown();
     0
+}
+
+/// `stats` tail: one observed-vs-predicted table per resident model
+/// that carries a profile (i.e. when serving with `--tune`), so
+/// calibration quality is inspectable without a bench run.
+fn print_tune_tables(registry: &ModelRegistry) {
+    for model in registry.resident() {
+        // peek: a stats report must not touch LRU recency
+        let Some(host) = registry.peek(&model) else { continue };
+        let (Some(profile), Some((p1, p2))) = (host.profile(), host.plan_shape()) else {
+            continue;
+        };
+        let state = host.state();
+        let table = observed_vs_predicted(
+            state.cnn(),
+            &registry.config().compiler,
+            p1,
+            p2,
+            state.algo_map(),
+            &profile.snapshot(),
+        );
+        println!("{}", table.render());
+        println!("  (epoch {}, {} profiled requests)", host.epoch(), profile.requests());
+    }
+}
+
+/// `profile <model> [file]`: dump the model's recorded profile as JSON
+/// (to stdout without a file argument) — the input `dynamap tune`
+/// replays offline.
+fn save_profile(
+    registry: &ModelRegistry,
+    model: &str,
+    file: Option<&str>,
+) -> Result<String, DynamapError> {
+    // peek: dumping a profile must not host a cold model (its profile
+    // would necessarily be empty) or touch LRU recency
+    let Some(host) = registry.peek(model) else {
+        return Err(DynamapError::Serve(format!(
+            "model '{model}' is not resident — serve a request to it first"
+        )));
+    };
+    let Some(profile) = host.profile() else {
+        return Err(DynamapError::Serve(
+            "profiling is off — start the server with --tune".into(),
+        ));
+    };
+    match file {
+        Some(path) => {
+            profile.save(path)?;
+            Ok(format!(
+                "wrote {} ({} keys over {} requests)",
+                path,
+                profile.len(),
+                profile.requests()
+            ))
+        }
+        None => Ok(profile.to_json().pretty()),
+    }
 }
 
 /// Submitter-thread cap for the REPL's `infer <model> [n]` bursts.

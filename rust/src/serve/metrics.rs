@@ -27,6 +27,7 @@ pub struct ModelMetrics {
     started: Instant,
     depth: AtomicUsize,
     max_depth: AtomicUsize,
+    swaps: AtomicUsize,
     inner: Mutex<Inner>,
 }
 
@@ -58,6 +59,7 @@ impl ModelMetrics {
             started: Instant::now(),
             depth: AtomicUsize::new(0),
             max_depth: AtomicUsize::new(0),
+            swaps: AtomicUsize::new(0),
             inner: Mutex::new(Inner::default()),
         }
     }
@@ -81,6 +83,16 @@ impl ModelMetrics {
     /// Requests currently waiting in the queue.
     pub fn queue_depth(&self) -> usize {
         self.depth.load(Ordering::Relaxed)
+    }
+
+    /// The tune loop hot-swapped this model's plan.
+    pub fn record_swap(&self) {
+        self.swaps.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Plan hot-swaps served by this model so far.
+    pub fn swaps(&self) -> usize {
+        self.swaps.load(Ordering::Relaxed)
     }
 
     /// Latency samples currently held in the sliding window (bounded by
@@ -150,6 +162,7 @@ impl ModelMetrics {
             p99_us: tail[2],
             queue_depth: self.queue_depth(),
             max_queue_depth: self.max_depth.load(Ordering::Relaxed),
+            swaps: self.swaps(),
             batch_hist: inner.batch_hist.clone(),
         }
     }
@@ -187,6 +200,8 @@ pub struct ModelSnapshot {
     pub queue_depth: usize,
     /// High-water queue depth since the metrics were created.
     pub max_queue_depth: usize,
+    /// Plan hot-swaps applied by the tune loop.
+    pub swaps: usize,
     /// Flushed batch size → number of batches of that size.
     pub batch_hist: BTreeMap<usize, u64>,
 }
@@ -196,7 +211,7 @@ impl ModelSnapshot {
     pub fn summary(&self) -> String {
         format!(
             "{}: {} req ({} err) {:.1} qps  e2e mean={:.0}µs p50={:.0}µs p95={:.0}µs \
-             p99={:.0}µs  {} batches (mean {:.2}, hist {})  max depth {}",
+             p99={:.0}µs  {} batches (mean {:.2}, hist {})  max depth {}  swaps {}",
             self.model,
             self.requests,
             self.errors,
@@ -208,7 +223,8 @@ impl ModelSnapshot {
             self.batches,
             self.mean_batch,
             self.hist_summary(),
-            self.max_queue_depth
+            self.max_queue_depth,
+            self.swaps
         )
     }
 
@@ -261,7 +277,7 @@ impl ServerMetrics {
             "serving metrics",
             &[
                 "model", "req", "err", "qps", "mean µs", "p50 µs", "p95 µs", "p99 µs",
-                "batches", "mean b", "depth max", "batch hist",
+                "batches", "mean b", "depth max", "swaps", "batch hist",
             ],
         );
         for s in self.snapshots() {
@@ -277,6 +293,7 @@ impl ServerMetrics {
                 s.batches.to_string(),
                 format!("{:.2}", s.mean_batch),
                 s.max_queue_depth.to_string(),
+                s.swaps.to_string(),
                 s.hist_summary(),
             ]);
         }
@@ -303,12 +320,14 @@ mod tests {
             m.record_request(us);
         }
         m.record_errors(1);
+        m.record_swap();
         let s = m.snapshot();
         assert_eq!(s.requests, 3);
         assert_eq!(s.errors, 1);
         assert_eq!(s.batches, 1);
         assert_eq!(s.queue_depth, 0);
         assert_eq!(s.max_queue_depth, 3);
+        assert_eq!(s.swaps, 1);
         assert_eq!(s.mean_batch, 3.0);
         assert_eq!(s.p50_us, 200.0);
         assert!(s.p99_us >= s.p50_us);

@@ -25,6 +25,11 @@
 //!   p50/p95/p99 end-to-end latency.
 //! * [`loadgen`] is the seeded closed-loop measurement harness behind
 //!   `dynamap loadgen` and `benches/serving.rs`.
+//! * [`StateCell`] holds each host's serving state behind an
+//!   epoch-counted `Arc` swap, so the online adaptation loop in
+//!   [`crate::tune`] can hot-swap a re-mapped plan into a live model
+//!   ([`ModelRegistry::swap_state`]) without dropping, duplicating or
+//!   corrupting a single reply.
 //!
 //! ```no_run
 //! use dynamap::serve::{ModelRegistry, RegistryConfig};
@@ -50,4 +55,6 @@ pub mod registry;
 pub use loadgen::{LoadReport, LoadgenConfig};
 pub use metrics::{ModelMetrics, ModelSnapshot, ServerMetrics};
 pub use queue::{BatchConfig, BatchQueue};
-pub use registry::{synthesize_artifacts, ModelHost, ModelRegistry, RegistryConfig};
+pub use registry::{
+    synthesize_artifacts, ModelHost, ModelRegistry, RegistryConfig, StateCell,
+};

@@ -16,17 +16,23 @@
 //! caller gets the bitwise-identical output a sequential
 //! [`crate::api::Session::infer`] would have produced (asserted by the
 //! soak test in `rust/tests/serving.rs`).
+//!
+//! Hot-swap guarantee: the scheduler resolves the model's
+//! [`StateCell`] once per flush — not at spawn time — so a
+//! [`crate::serve::ModelRegistry::swap_state`] takes effect on the
+//! next batch while in-flight batches finish on the state they
+//! captured. No batch is ever served by a mix of plans.
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use crate::api::session::NativeState;
 use crate::api::{DynamapError, InferMetrics};
 use crate::runtime::TensorBuf;
 
 use super::metrics::ModelMetrics;
+use super::registry::StateCell;
 
 /// A request hit a queue whose scheduler has shut down (e.g. the model
 /// was evicted from the registry between lookup and submit) — the
@@ -75,20 +81,24 @@ pub struct BatchQueue {
 }
 
 impl BatchQueue {
-    /// Spawn the scheduler thread for `state`'s model.
+    /// Spawn the scheduler thread over `cell`'s model. The scheduler
+    /// re-reads the cell at every flush, so hot-swapped states take
+    /// effect without restarting the queue.
     pub fn new(
-        state: Arc<NativeState>,
+        cell: Arc<StateCell>,
         config: BatchConfig,
         metrics: Arc<ModelMetrics>,
     ) -> BatchQueue {
+        let state = cell.get();
         let model = state.model().to_string();
         let input_len = state.input_len();
+        drop(state);
         let config = BatchConfig { max_batch: config.max_batch.max(1), ..config };
         let (tx, rx) = mpsc::channel::<Request>();
         let worker_metrics = metrics.clone();
         let worker = thread::Builder::new()
             .name(format!("dynamap-batch-{model}"))
-            .spawn(move || scheduler_loop(rx, state, config, worker_metrics))
+            .spawn(move || scheduler_loop(rx, cell, config, worker_metrics))
             .expect("spawn batch scheduler thread");
         BatchQueue {
             model,
@@ -168,11 +178,12 @@ impl Drop for BatchQueue {
 }
 
 /// The scheduler: block for the first request, top the batch up until
-/// full or past the deadline, flush, repeat. Exits when every sender is
-/// gone and the channel is drained.
+/// full or past the deadline, flush against the cell's *current*
+/// state, repeat. Exits when every sender is gone and the channel is
+/// drained.
 fn scheduler_loop(
     rx: mpsc::Receiver<Request>,
-    state: Arc<NativeState>,
+    cell: Arc<StateCell>,
     config: BatchConfig,
     metrics: Arc<ModelMetrics>,
 ) {
@@ -215,6 +226,9 @@ fn scheduler_loop(
                 }
             }
         }
+        // snapshot the serving state per flush: the whole batch runs on
+        // one plan, and a concurrent hot swap lands on the next batch
+        let state = cell.get();
         flush(&state, &metrics, batch);
         if disconnected {
             break;
@@ -223,7 +237,11 @@ fn scheduler_loop(
 }
 
 /// Serve one accumulated batch and answer every caller.
-fn flush(state: &NativeState, metrics: &ModelMetrics, batch: Vec<Request>) {
+fn flush(
+    state: &crate::api::session::NativeState,
+    metrics: &ModelMetrics,
+    batch: Vec<Request>,
+) {
     let mut inputs = Vec::with_capacity(batch.len());
     let mut waiters = Vec::with_capacity(batch.len());
     for req in batch {

@@ -13,19 +13,24 @@
 //! host is evicted: its queue drains and shuts down, and the next
 //! request for that model rebuilds it (from the plan cache — no DSE).
 //!
+//! Each host's state lives in a [`StateCell`], so the `tune` subsystem
+//! can hot-swap a re-mapped plan into a live host
+//! ([`ModelRegistry::swap_state`]) without dropping a request.
+//!
 //! Artifact layout: `<artifacts_root>/<canonical model name>/manifest.json`
 //! plus per-layer weight files, exactly the contract
 //! [`crate::runtime::Manifest`] defines for AOT artifacts.
 
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 
 use crate::api::session::NativeState;
 use crate::api::{Backend, Compiler, DynamapError, InferMetrics, Session};
 use crate::graph::layer::Op;
 use crate::graph::{zoo, Cnn};
 use crate::runtime::TensorBuf;
+use crate::tune::profiler::LayerProfile;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
@@ -56,6 +61,11 @@ pub struct RegistryConfig {
     pub compiler: Compiler,
     /// Batch scheduler configuration applied to every model queue.
     pub batch: BatchConfig,
+    /// Attach a [`LayerProfile`] to every host so the serving path
+    /// records per-layer latency — the evidence `tune::calibrate`
+    /// fits. Off by default (`serve --tune` and the adaptive bench
+    /// turn it on); attaching a profiler never changes outputs.
+    pub profile: bool,
 }
 
 impl Default for RegistryConfig {
@@ -68,18 +78,69 @@ impl Default for RegistryConfig {
             seed: 0x5EED,
             compiler: Compiler::new(),
             batch: BatchConfig::default(),
+            profile: false,
         }
     }
 }
 
-/// One resident model: its shareable serving state, batch queue and
-/// telemetry.
+/// The hot-swappable serving state of one hosted model: an epoch
+/// counter plus the current `Arc<NativeState>` behind a read-write
+/// lock.
+///
+/// Readers ([`crate::serve::BatchQueue`]'s scheduler) take the read
+/// lock once per *flush* — never per request — clone the `Arc` and
+/// serve the whole batch from that snapshot, so a concurrent
+/// [`StateCell::swap`] can never split a batch across plans: batches
+/// in flight finish on the state they started with, later batches pick
+/// up the new one. Because only the algorithm map (and its prepared
+/// weight form) differs between swapped states, every request is
+/// bitwise-identical to a sequential `Session::infer` under whichever
+/// plan served it.
+#[derive(Debug)]
+pub struct StateCell {
+    state: RwLock<Arc<NativeState>>,
+    epoch: AtomicU64,
+}
+
+impl StateCell {
+    /// A cell at epoch 0 holding `state`.
+    pub fn new(state: Arc<NativeState>) -> StateCell {
+        StateCell { state: RwLock::new(state), epoch: AtomicU64::new(0) }
+    }
+
+    /// Snapshot the current state (one read-lock + `Arc` clone).
+    pub fn get(&self) -> Arc<NativeState> {
+        self.state.read().unwrap_or_else(|p| p.into_inner()).clone()
+    }
+
+    /// Atomically publish `state`, returning the previous one. Bumps
+    /// the epoch after the new state is visible.
+    pub fn swap(&self, state: Arc<NativeState>) -> Arc<NativeState> {
+        let old = {
+            let mut slot = self.state.write().unwrap_or_else(|p| p.into_inner());
+            std::mem::replace(&mut *slot, state)
+        };
+        self.epoch.fetch_add(1, Ordering::Release);
+        old
+    }
+
+    /// How many swaps this cell has seen.
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+}
+
+/// One resident model: its hot-swappable serving state, batch queue
+/// and telemetry.
 pub struct ModelHost {
     model: String,
-    state: Arc<NativeState>,
+    cell: Arc<StateCell>,
+    input: (usize, usize, usize),
     queue: BatchQueue,
     metrics: Arc<ModelMetrics>,
     plan_from_cache: bool,
+    profile: Option<Arc<LayerProfile>>,
+    plan_shape: Mutex<Option<(usize, usize)>>,
 }
 
 impl ModelHost {
@@ -88,9 +149,35 @@ impl ModelHost {
         &self.model
     }
 
-    /// The request-invariant serving state backing the queue.
-    pub fn state(&self) -> &Arc<NativeState> {
-        &self.state
+    /// Snapshot of the request-invariant serving state currently
+    /// backing the queue (the *current* plan — a later
+    /// [`ModelRegistry::swap_state`] does not retroactively change the
+    /// returned `Arc`).
+    pub fn state(&self) -> Arc<NativeState> {
+        self.cell.get()
+    }
+
+    /// The hot-swappable state slot shared with the batch scheduler.
+    pub fn state_cell(&self) -> &Arc<StateCell> {
+        &self.cell
+    }
+
+    /// How many plan hot-swaps this host has served.
+    pub fn epoch(&self) -> u64 {
+        self.cell.epoch()
+    }
+
+    /// The per-layer latency profile recorded by this host's serving
+    /// path (`None` unless [`RegistryConfig::profile`] is set).
+    pub fn profile(&self) -> Option<&Arc<LayerProfile>> {
+        self.profile.as_ref()
+    }
+
+    /// `P_SA1 × P_SA2` shape of the plan currently served (`None` for
+    /// hosts built from — or hot-swapped to — an explicit algorithm
+    /// map).
+    pub fn plan_shape(&self) -> Option<(usize, usize)> {
+        *self.plan_shape.lock().unwrap_or_else(|p| p.into_inner())
     }
 
     /// Telemetry for this model (shared with [`ServerMetrics`]).
@@ -104,9 +191,10 @@ impl ModelHost {
         self.plan_from_cache
     }
 
-    /// Input dimensions `(C, H1, H2)` this model expects.
+    /// Input dimensions `(C, H1, H2)` this model expects (invariant
+    /// across hot swaps — a swap changes algorithms, never the model).
     pub fn input_dims(&self) -> (usize, usize, usize) {
-        self.state.input_dims()
+        self.input
     }
 
     /// Submit one request to the model's batch queue and block for the
@@ -171,6 +259,17 @@ impl ModelRegistry {
         self.lock_resident().iter().map(|(n, _)| n.clone()).collect()
     }
 
+    /// Look up a resident host *without* refreshing its LRU recency or
+    /// hosting on a miss. This is the observation path for the tune
+    /// loop and `stats` reporting: a background tick over every
+    /// resident model must not promote idle models over ones real
+    /// traffic is keeping warm.
+    pub fn peek(&self, model: &str) -> Option<Arc<ModelHost>> {
+        let canonical = zoo::canonical_name(model)?;
+        let resident = self.lock_resident();
+        resident.iter().find(|(n, _)| n == canonical).map(|(_, h)| h.clone())
+    }
+
     /// Resolve (and if necessary host) `model`, refreshing its recency.
     /// Accepts any zoo alias ("mini" == "mini-inception"). The resident
     /// hit path is cheap (name canonicalization + one short lock); the
@@ -230,6 +329,54 @@ impl ModelRegistry {
         Err(DynamapError::Serve(format!(
             "model '{model}' kept being evicted mid-request"
         )))
+    }
+
+    /// Atomically hot-swap `model`'s serving state (the `tune::remap`
+    /// publish step). The new state must serve the same model and
+    /// input shape — only the algorithm map (and its prepared-weight
+    /// form) may differ; keeping the underlying weights identical is
+    /// the caller's contract (`tune::remap` rebuilds from the host's
+    /// own artifact directory). Batches already flushed keep the state
+    /// they started with; every later batch reads the new one. Does
+    /// not refresh LRU recency — a background remap of an idle model
+    /// must not shield it from eviction. Returns the new swap epoch.
+    /// `plan_shape` becomes the host's new [`ModelHost::plan_shape`]
+    /// verbatim: `Some` for a compiled plan, `None` for an explicit
+    /// algorithm map (whose state corresponds to no array shape).
+    pub fn swap_state(
+        &self,
+        model: &str,
+        state: Arc<NativeState>,
+        plan_shape: Option<(usize, usize)>,
+    ) -> Result<u64, DynamapError> {
+        let canonical = zoo::canonical_name(model)
+            .ok_or_else(|| DynamapError::UnknownModel(model.to_string()))?;
+        let host = self.peek(canonical).ok_or_else(|| {
+            DynamapError::Serve(format!(
+                "cannot swap plan for '{canonical}': model is not resident"
+            ))
+        })?;
+        if state.model() != canonical {
+            return Err(DynamapError::Serve(format!(
+                "plan swap for '{canonical}' carries state for model '{}'",
+                state.model()
+            )));
+        }
+        if state.input_dims() != host.input_dims() {
+            return Err(DynamapError::Serve(format!(
+                "plan swap for '{canonical}' changes the input shape \
+                 ({:?} → {:?})",
+                host.input_dims(),
+                state.input_dims()
+            )));
+        }
+        let old = host.cell.swap(state);
+        drop(old); // in-flight batches keep their own Arc clones
+        // overwrite unconditionally: keeping a stale shape would price
+        // later tune-loop observations against a plan no longer served
+        *host.plan_shape.lock().unwrap_or_else(|p| p.into_inner()) = plan_shape;
+        host.metrics.record_swap();
+        Ok(host.cell.epoch())
     }
 
     /// Evict `model` now (no-op when it is not resident). Returns
@@ -298,19 +445,32 @@ impl ModelRegistry {
         if let Some(cache) = &self.config.plan_cache {
             builder = builder.plan_cache(cache);
         }
+        let profile = self
+            .config
+            .profile
+            .then(|| Arc::new(LayerProfile::new(canonical)));
+        if let Some(profile) = &profile {
+            builder = builder.profiler(profile.clone());
+        }
         let session = builder.build()?;
         let plan_from_cache = session.plan_from_cache();
+        let plan_shape = session.plan().map(|a| (a.plan.p1, a.plan.p2));
         let state = session.native_state().ok_or_else(|| {
             DynamapError::Serve("native session produced no shareable state".into())
         })?;
+        let input = state.input_dims();
         let metrics = self.metrics.model(canonical);
-        let queue = BatchQueue::new(state.clone(), self.config.batch.clone(), metrics.clone());
+        let cell = Arc::new(StateCell::new(state));
+        let queue = BatchQueue::new(cell.clone(), self.config.batch.clone(), metrics.clone());
         Ok(ModelHost {
             model: canonical.to_string(),
-            state,
+            cell,
+            input,
             queue,
             metrics,
             plan_from_cache,
+            profile,
+            plan_shape: Mutex::new(plan_shape),
         })
     }
 }
@@ -414,6 +574,58 @@ mod tests {
         let e = reg.host("not-a-model").unwrap_err();
         assert!(matches!(e, DynamapError::UnknownModel(_)), "{e}");
         assert!(!reg.evict("not-a-model"));
+        let e = reg
+            .swap_state("not-a-model", dummy_state(), None)
+            .unwrap_err();
+        assert!(matches!(e, DynamapError::UnknownModel(_)), "{e}");
+        // known model, but not resident: typed serve error, no panic
+        let e = reg.swap_state("mini", dummy_state(), None).unwrap_err();
+        assert!(matches!(e, DynamapError::Serve(_)), "{e}");
+    }
+
+    /// A NativeState for StateCell unit tests, built through the
+    /// synthetic-artifact path (no DSE: explicit algorithm map). Each
+    /// call gets its own directory so concurrently running tests never
+    /// race a half-written manifest.
+    fn dummy_state() -> Arc<NativeState> {
+        static SEQ: AtomicUsize = AtomicUsize::new(0);
+        let cnn = zoo::mini_inception();
+        let dir = std::env::temp_dir().join(format!(
+            "dynamap_cell_state_{}_{}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        synthesize_artifacts(&cnn, &dir, 3).unwrap();
+        let map: std::collections::BTreeMap<String, String> = cnn
+            .nodes
+            .iter()
+            .filter(|n| n.op.is_conv())
+            .map(|n| (n.name.clone(), "im2col".to_string()))
+            .collect();
+        let session = Session::builder(dir.to_string_lossy().into_owned())
+            .backend(Backend::Native)
+            .algo_map(map)
+            .build()
+            .unwrap();
+        session.native_state().unwrap()
+    }
+
+    #[test]
+    fn state_cell_swap_publishes_and_counts_epochs() {
+        let a = dummy_state();
+        let b = dummy_state();
+        let cell = StateCell::new(a.clone());
+        assert_eq!(cell.epoch(), 0);
+        assert!(Arc::ptr_eq(&cell.get(), &a));
+        let old = cell.swap(b.clone());
+        assert!(Arc::ptr_eq(&old, &a), "swap returns the displaced state");
+        assert!(Arc::ptr_eq(&cell.get(), &b));
+        assert_eq!(cell.epoch(), 1);
+        // a snapshot taken before a swap keeps serving the old plan
+        let snapshot = cell.get();
+        cell.swap(a);
+        assert!(Arc::ptr_eq(&snapshot, &b));
+        assert_eq!(cell.epoch(), 2);
     }
 
     #[test]

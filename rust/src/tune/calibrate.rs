@@ -1,0 +1,375 @@
+//! Least-squares calibration of the analytic cost model against
+//! observed per-layer latencies.
+//!
+//! fpgaConvNet-style DSE models stay predictive only when fitted to
+//! measured performance. For each algorithm family this module fits an
+//! affine correction `observed ≈ scale · analytic + offset` over the
+//! profiled layers (ordinary least squares; falls back to a
+//! through-origin fit when there are too few points for a stable
+//! intercept). The result is a [`CalibratedDevice`]: the effective
+//! device parameters — achievable per-family GEMM throughput, an
+//! effective DDR bandwidth scaled by the global time-dilation factor so
+//! compute and transition costs stay commensurate — plus an
+//! observed-vs-predicted residual report. Feeding its
+//! [`DeviceCalibration`] back into a [`Compiler`] re-prices the whole
+//! DSE in observed time units, which is what `tune::remap` re-solves.
+
+use std::collections::BTreeMap;
+
+use crate::api::session::resolve_algo;
+use crate::api::{Compiler, DynamapError};
+use crate::cost::conv::CostModel;
+use crate::cost::{AlgoFit, Device, DeviceCalibration};
+use crate::graph::layer::{ConvSpec, Op};
+use crate::graph::Cnn;
+use crate::util::table::Table;
+
+use super::profiler::LayerObs;
+
+/// Per-family fit summary in a [`CalibratedDevice`] report.
+#[derive(Debug, Clone)]
+pub struct AlgoFitReport {
+    /// Algorithm family the fit covers.
+    pub family: String,
+    /// Profiled layers behind the fit.
+    pub points: usize,
+    /// Fitted multiplicative term (observed / analytic time-scale).
+    pub scale: f64,
+    /// Fitted per-layer overhead, µs.
+    pub offset_us: f64,
+    /// Mean |observed − calibrated-predicted| over the fit points, µs.
+    pub mean_abs_residual_us: f64,
+    /// Worst |observed − calibrated-predicted| over the fit points, µs.
+    pub max_abs_residual_us: f64,
+}
+
+/// One observed-vs-predicted row of the residual report.
+#[derive(Debug, Clone)]
+pub struct LayerResidual {
+    /// Layer name.
+    pub layer: String,
+    /// Algorithm family observed.
+    pub algo: String,
+    /// Observed steady-state latency (profile minimum), µs.
+    pub observed_us: f64,
+    /// Raw analytic prediction, µs.
+    pub predicted_raw_us: f64,
+    /// Prediction after applying the fitted calibration, µs.
+    pub predicted_cal_us: f64,
+}
+
+/// The calibration result: effective device + fitted per-family
+/// corrections + the residual evidence behind them.
+#[derive(Debug, Clone)]
+pub struct CalibratedDevice {
+    /// Effective device: the base device with `ddr_gbps` divided by the
+    /// global time-scale factor, so transition costs stay commensurate
+    /// with the re-scaled compute costs.
+    pub device: Device,
+    /// Fitted per-family corrections; the fallback fit carries the
+    /// global time-scale so unprofiled families are never accidentally
+    /// priced at the raw analytic cost.
+    pub calibration: DeviceCalibration,
+    /// Global time-dilation factor (median of the per-family scales).
+    pub global_scale: f64,
+    /// Per-family fit summaries.
+    pub fits: Vec<AlgoFitReport>,
+    /// Per-layer observed-vs-predicted rows.
+    pub residuals: Vec<LayerResidual>,
+}
+
+impl CalibratedDevice {
+    /// ASCII residual report: per-family fits and per-layer
+    /// observed-vs-predicted rows.
+    pub fn report(&self) -> String {
+        let mut fit_t = Table::new(
+            &format!(
+                "calibration fits (global time-scale {:.3}×, effective {:.1} MHz)",
+                self.global_scale,
+                self.device.freq_mhz / self.global_scale.max(1e-12)
+            ),
+            &["family", "points", "scale", "offset µs", "mean |resid| µs", "max |resid| µs"],
+        );
+        for f in &self.fits {
+            fit_t.row(vec![
+                f.family.clone(),
+                f.points.to_string(),
+                format!("{:.4}", f.scale),
+                format!("{:.2}", f.offset_us),
+                format!("{:.2}", f.mean_abs_residual_us),
+                format!("{:.2}", f.max_abs_residual_us),
+            ]);
+        }
+        let mut res_t = Table::new(
+            "observed vs predicted",
+            &["layer", "algo", "observed µs", "analytic µs", "calibrated µs"],
+        );
+        for r in &self.residuals {
+            res_t.row(vec![
+                r.layer.clone(),
+                r.algo.clone(),
+                format!("{:.2}", r.observed_us),
+                format!("{:.2}", r.predicted_raw_us),
+                format!("{:.2}", r.predicted_cal_us),
+            ]);
+        }
+        format!("{}\n{}", fit_t.render(), res_t.render())
+    }
+}
+
+/// Conv-equivalent spec of a layer the serving path times: conv layers
+/// verbatim, FC layers as the 1×1 conv the native path executes.
+pub(crate) fn conv_equivalent(cnn: &Cnn) -> BTreeMap<String, ConvSpec> {
+    let mut specs = BTreeMap::new();
+    for node in &cnn.nodes {
+        match &node.op {
+            Op::Conv(spec) => {
+                specs.insert(node.name.clone(), spec.clone());
+            }
+            Op::Fc { c_in, c_out } => {
+                specs.insert(
+                    node.name.clone(),
+                    ConvSpec::new(*c_in, *c_out, 1, 1, 1, 1, 1, 0, 0),
+                );
+            }
+            _ => {}
+        }
+    }
+    specs
+}
+
+/// Fit `y ≈ scale · x + offset` over `(analytic, observed)` second
+/// pairs. OLS with intercept when there are enough spread-out points
+/// for a stable one; through-origin otherwise. The returned fit always
+/// has a strictly positive scale and a non-negative offset, so
+/// calibrated costs remain valid PBQP node costs.
+fn fit_family(points: &[(f64, f64)]) -> AlgoFit {
+    let n = points.len() as f64;
+    let sx: f64 = points.iter().map(|p| p.0).sum();
+    let sy: f64 = points.iter().map(|p| p.1).sum();
+    let sxx: f64 = points.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = points.iter().map(|p| p.0 * p.1).sum();
+    let var = sxx - sx * sx / n.max(1.0);
+    if points.len() >= 3 && var > 1e-24 {
+        let scale = (sxy - sx * sy / n) / var;
+        let offset = (sy - scale * sx) / n;
+        if scale > 1e-12 && offset >= 0.0 {
+            return AlgoFit { scale, offset_sec: offset };
+        }
+    }
+    // through-origin fallback (also the path for negative intercepts:
+    // a negative fitted offset means the intercept is not identifiable
+    // from these points, not that the hardware pays negative overhead)
+    let scale = if sxx > 1e-300 { (sxy / sxx).max(1e-12) } else { 1.0 };
+    AlgoFit { scale, offset_sec: 0.0 }
+}
+
+/// Fit the device model to a profile snapshot.
+///
+/// `compiler` supplies the *base* analytic configuration (device,
+/// Winograd tile, dataflow restrictions); any calibration it already
+/// carries is deliberately ignored so repeated calibrations converge on
+/// the analytic→observed fit instead of compounding. `(p1, p2)` is the
+/// systolic-array shape of the plan the observations were served under.
+/// Observations for layers the model does not contain are skipped.
+pub fn calibrate(
+    cnn: &Cnn,
+    compiler: &Compiler,
+    p1: usize,
+    p2: usize,
+    observations: &[LayerObs],
+) -> Result<CalibratedDevice, DynamapError> {
+    if p1 == 0 || p2 == 0 {
+        return Err(DynamapError::Dse(format!(
+            "calibration needs a valid array shape, got {p1}×{p2}"
+        )));
+    }
+    let mut cm: CostModel = compiler.config().cost_model();
+    cm.calibration = DeviceCalibration::identity();
+    let specs = conv_equivalent(cnn);
+
+    // (analytic sec, observed sec) per family + the residual rows
+    let mut points: BTreeMap<String, Vec<(f64, f64)>> = BTreeMap::new();
+    let mut rows: Vec<(String, String, f64, f64)> = Vec::new();
+    for obs in observations {
+        if obs.count == 0 || !obs.min_us.is_finite() || obs.min_us < 0.0 {
+            continue;
+        }
+        let Some(spec) = specs.get(&obs.layer) else { continue };
+        let algo = resolve_algo(&obs.algo, spec);
+        if algo.family() != obs.algo {
+            // the observation labels an algorithm this layer cannot run
+            // (stale profile across a model change) — not evidence
+            continue;
+        }
+        let predicted = cm.best_conv_cost(spec, algo, p1, p2).seconds;
+        if !(predicted > 0.0) {
+            continue;
+        }
+        let observed = obs.min_us / 1e6;
+        points.entry(obs.algo.clone()).or_default().push((predicted, observed));
+        rows.push((obs.layer.clone(), obs.algo.clone(), predicted, observed));
+    }
+    if points.is_empty() {
+        return Err(DynamapError::Dse(
+            "calibration needs at least one profiled conv layer \
+             (serve with profiling enabled first)"
+                .into(),
+        ));
+    }
+
+    let mut calibration = DeviceCalibration::identity();
+    for (family, pts) in &points {
+        calibration
+            .per_algo
+            .insert(family.clone(), fit_family(pts));
+    }
+    // global time-scale: median of the fitted per-family scales — the
+    // fallback for unprofiled families and the factor the effective DDR
+    // bandwidth dilates by
+    let mut scales: Vec<f64> =
+        calibration.per_algo.values().map(|f| f.scale).collect();
+    scales.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let global_scale = scales[scales.len() / 2];
+    calibration.fallback = AlgoFit { scale: global_scale, offset_sec: 0.0 };
+
+    let mut device = compiler.config().device.clone();
+    device.ddr_gbps = (device.ddr_gbps / global_scale.max(1e-12)).max(1e-9);
+
+    // residual evidence under the fitted calibration
+    let mut fits = Vec::new();
+    for (family, pts) in &points {
+        let fit = *calibration.fit(family);
+        let resid: Vec<f64> =
+            pts.iter().map(|(x, y)| (y - fit.apply(*x)).abs() * 1e6).collect();
+        fits.push(AlgoFitReport {
+            family: family.clone(),
+            points: pts.len(),
+            scale: fit.scale,
+            offset_us: fit.offset_sec * 1e6,
+            mean_abs_residual_us: resid.iter().sum::<f64>() / resid.len() as f64,
+            max_abs_residual_us: resid.iter().cloned().fold(0.0, f64::max),
+        });
+    }
+    let residuals = rows
+        .into_iter()
+        .map(|(layer, algo, pred, obs)| LayerResidual {
+            predicted_cal_us: calibration.apply(&algo, pred) * 1e6,
+            layer,
+            algo,
+            observed_us: obs * 1e6,
+            predicted_raw_us: pred * 1e6,
+        })
+        .collect();
+
+    Ok(CalibratedDevice { device, calibration, global_scale, fits, residuals })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::Device;
+    use crate::graph::zoo;
+
+    fn compiler() -> Compiler {
+        Compiler::new().device(Device::small_edge())
+    }
+
+    fn synthetic_obs(
+        cnn: &Cnn,
+        compiler: &Compiler,
+        p1: usize,
+        p2: usize,
+        factor: impl Fn(&str) -> f64,
+    ) -> Vec<LayerObs> {
+        let cm = compiler.config().cost_model();
+        let specs = conv_equivalent(cnn);
+        let mut obs = Vec::new();
+        for (layer, spec) in &specs {
+            for family in ["im2col", "kn2row", "winograd"] {
+                let algo = resolve_algo(family, spec);
+                if algo.family() != family {
+                    continue; // family not executable on this layer
+                }
+                let us =
+                    cm.best_conv_cost(spec, algo, p1, p2).seconds * 1e6 * factor(family);
+                obs.push(LayerObs {
+                    layer: layer.clone(),
+                    algo: family.to_string(),
+                    count: 8,
+                    mean_us: us,
+                    std_us: 0.0,
+                    min_us: us,
+                    max_us: us,
+                });
+            }
+        }
+        obs
+    }
+
+    #[test]
+    fn recovers_a_known_per_family_skew() {
+        let cnn = zoo::mini_inception();
+        let c = compiler();
+        let obs = synthetic_obs(&cnn, &c, 16, 16, |family| {
+            if family == "kn2row" {
+                50.0
+            } else {
+                1.0
+            }
+        });
+        let cal = calibrate(&cnn, &c, 16, 16, &obs).unwrap();
+        let kn = cal.calibration.fit("kn2row");
+        let im = cal.calibration.fit("im2col");
+        assert!((kn.apply(1.0) / 50.0 - 1.0).abs() < 0.05, "kn2row fit {kn:?}");
+        assert!((im.apply(1.0) - 1.0).abs() < 0.05, "im2col fit {im:?}");
+        assert!(
+            cal.residuals.iter().all(|r| {
+                (r.predicted_cal_us - r.observed_us).abs()
+                    <= 0.05 * r.observed_us.max(1e-6)
+            }),
+            "exact synthetic observations must calibrate to near-zero residuals"
+        );
+        assert!(cal.report().contains("kn2row"));
+    }
+
+    #[test]
+    fn unprofiled_family_inherits_the_global_scale() {
+        let cnn = zoo::mini_inception();
+        let c = compiler();
+        // observe only im2col, uniformly 10× slower than analytic
+        let obs: Vec<LayerObs> = synthetic_obs(&cnn, &c, 16, 16, |_| 10.0)
+            .into_iter()
+            .filter(|o| o.algo == "im2col")
+            .collect();
+        let cal = calibrate(&cnn, &c, 16, 16, &obs).unwrap();
+        assert!((cal.global_scale / 10.0 - 1.0).abs() < 0.05);
+        // winograd was never observed: it must be priced at the global
+        // time-scale, not at the raw analytic cost
+        assert!((cal.calibration.fit("winograd").scale / 10.0 - 1.0).abs() < 0.05);
+        // effective DDR bandwidth dilates by the same factor
+        let base = c.config().device.ddr_gbps;
+        assert!((cal.device.ddr_gbps * 10.0 / base - 1.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn empty_profile_is_a_typed_error() {
+        let cnn = zoo::mini_inception();
+        let e = calibrate(&cnn, &compiler(), 16, 16, &[]).unwrap_err();
+        assert!(matches!(e, DynamapError::Dse(_)), "{e}");
+    }
+
+    #[test]
+    fn affine_fit_recovers_scale_and_offset() {
+        // y = 3x + 0.5 over well-spread points
+        let pts: Vec<(f64, f64)> =
+            (1..=6).map(|i| (i as f64, 3.0 * i as f64 + 0.5)).collect();
+        let f = fit_family(&pts);
+        assert!((f.scale - 3.0).abs() < 1e-9);
+        assert!((f.offset_sec - 0.5).abs() < 1e-9);
+        // two points: through-origin fallback, still positive
+        let f = fit_family(&[(1.0, 2.0), (2.0, 4.0)]);
+        assert!((f.scale - 2.0).abs() < 1e-9);
+        assert_eq!(f.offset_sec, 0.0);
+    }
+}

@@ -1,0 +1,144 @@
+//! `dynamap tune` — one-shot calibrate + re-map from a recorded
+//! profile.
+//!
+//! Reads a profile JSON written by the `dynamap serve` REPL
+//! (`profile <model> <file>`, available when serving with `--tune`),
+//! fits the cost model to it, re-solves the DSE and prints the
+//! calibration report, the algorithm-map diff and the predicted
+//! speedup. With `--out` the calibrated plan artifact is persisted for
+//! later `Session::builder(..).plan(..)` serving. No live registry is
+//! involved: this is the offline half of the adaptation loop, useful
+//! for inspecting what `serve --tune` would do before enabling it.
+
+use crate::api::Compiler;
+use crate::cost::Device;
+use crate::graph::zoo;
+use crate::util::cli::Args;
+use crate::util::table::Table;
+
+use super::calibrate::calibrate;
+use super::profiler::LayerProfile;
+use super::remap::plan_delta;
+use super::report::observed_vs_predicted;
+
+/// `dynamap tune --model <name> --profile <file> [--device small-edge]
+/// [--hysteresis 0.05] [--out <dir|file.json>]`.
+pub fn tune(args: &Args) -> i32 {
+    let model = args.get_or("model", "mini-inception");
+    let Some(cnn) = zoo::by_name(model) else {
+        eprintln!("error: unknown model '{model}' (see `dynamap zoo`)");
+        return 1;
+    };
+    let Some(profile_path) = args.get("profile") else {
+        eprintln!(
+            "usage: dynamap tune --model <name> --profile <file.json> \
+             [--device small-edge|alveo-u200] [--hysteresis 0.05] [--out <dir|file>]\n\
+             record a profile first: `dynamap serve --models <name> --tune`, then \
+             `profile <name> <file.json>` in the REPL"
+        );
+        return 2;
+    };
+    let profile = match LayerProfile::load(profile_path) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("error loading profile: {e}");
+            return 1;
+        }
+    };
+    let device = match args.get_or("device", "alveo-u200") {
+        "small-edge" | "small_edge" => Device::small_edge(),
+        "alveo-u200" | "alveo_u200" => Device::alveo_u200(),
+        other => {
+            // calibrating a profile against the wrong device produces
+            // confidently wrong fits — refuse rather than guess
+            eprintln!("error: unknown device '{other}' (small-edge | alveo-u200)");
+            return 2;
+        }
+    };
+    let compiler = Compiler::new().device(device);
+
+    // base plan: what the uncalibrated model would serve
+    let base = match compiler.compile(&cnn) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    let (p1, p2) = (base.plan.p1, base.plan.p2);
+    let base_map: std::collections::BTreeMap<String, String> = base
+        .plan
+        .mapping
+        .layers
+        .iter()
+        .map(|l| (l.name.clone(), l.cost.algo.family().to_string()))
+        .collect();
+    let snapshot = profile.snapshot();
+    println!(
+        "{}",
+        observed_vs_predicted(&cnn, &compiler, p1, p2, &base_map, &snapshot).render()
+    );
+
+    let cal = match calibrate(&cnn, &compiler, p1, p2, &snapshot) {
+        Ok(cal) => cal,
+        Err(e) => {
+            eprintln!("calibration failed: {e}");
+            return 1;
+        }
+    };
+    println!("{}", cal.report());
+
+    // calibrated re-solve + diff against the base plan, through the
+    // same plan_delta decision a live `serve --tune` remap uses
+    let calibrated_compiler =
+        compiler.clone().device(cal.device.clone()).calibration(cal.calibration.clone());
+    let artifact = match calibrated_compiler.compile(&cnn) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("calibrated compile failed: {e}");
+            return 1;
+        }
+    };
+    let delta = plan_delta(&cnn, &calibrated_compiler, &artifact, &base_map);
+    if delta.changed.is_empty() {
+        println!("calibrated re-solve keeps the base algorithm map unchanged");
+    } else {
+        let mut diff = Table::new(
+            &format!("algorithm map diff ({} → calibrated)", cnn.name),
+            &["layer", "base", "calibrated"],
+        );
+        for c in &delta.changed {
+            diff.row(vec![c.layer.clone(), c.from.clone(), c.to.clone()]);
+        }
+        println!("{}", diff.render());
+    }
+
+    let hysteresis = args.get_f64("hysteresis", 0.05).clamp(0.0, 0.9);
+    println!(
+        "predicted compute under the calibrated model: {:.0}µs → {:.0}µs \
+         ({:.2}x, hysteresis {hysteresis:.2} → {})",
+        delta.predicted_before_us,
+        delta.predicted_after_us,
+        delta.predicted_speedup,
+        if delta.improves(hysteresis) {
+            "a live server would hot-swap"
+        } else {
+            "a live server would keep the current plan"
+        }
+    );
+
+    if let Some(out) = args.get("out") {
+        let path = if out.ends_with(".json") {
+            std::path::PathBuf::from(out)
+        } else {
+            std::path::Path::new(out)
+                .join(calibrated_compiler.cache_file_name(&cnn.name))
+        };
+        if let Err(e) = artifact.save(&path) {
+            eprintln!("error saving calibrated plan: {e}");
+            return 1;
+        }
+        println!("wrote calibrated plan artifact to {}", path.display());
+    }
+    0
+}

@@ -1,0 +1,249 @@
+//! [`TuneController`] — the background profile → calibrate → remap
+//! cadence.
+//!
+//! One thread per registry wakes every [`TuneConfig::interval`] and,
+//! for each resident model whose profile has accumulated at least
+//! [`TuneConfig::min_new_requests`] new requests since its last tune
+//! attempt, runs [`calibrate`](super::calibrate::calibrate) +
+//! [`remap`](super::remap::remap). Models hosted without profiling,
+//! models without enough fresh evidence and models whose calibrated
+//! re-solve does not clear the hysteresis band are all skipped, so a
+//! converged server settles into cheap no-op ticks. Swap counts surface
+//! through [`crate::serve::ServerMetrics`].
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+use crate::serve::ModelRegistry;
+
+use super::calibrate::calibrate;
+use super::remap::{remap, RemapConfig, RemapOutcome};
+
+/// Cadence and thresholds for the adaptation loop.
+#[derive(Debug, Clone)]
+pub struct TuneConfig {
+    /// How often the controller wakes to consider a pass.
+    pub interval: Duration,
+    /// Minimum profiled requests per model between tune attempts (the
+    /// "every N requests" half of the cadence).
+    pub min_new_requests: u64,
+    /// Hysteresis handed to [`remap`] (minimum predicted improvement).
+    pub hysteresis: f64,
+    /// Print a line per remap outcome (the `serve --tune` REPL does).
+    pub verbose: bool,
+}
+
+impl Default for TuneConfig {
+    fn default() -> TuneConfig {
+        TuneConfig {
+            interval: Duration::from_secs(5),
+            min_new_requests: 64,
+            hysteresis: 0.05,
+            verbose: false,
+        }
+    }
+}
+
+impl TuneConfig {
+    /// Read the loop configuration from the environment: `DYNAMAP_TUNE`
+    /// (`1`/`true`/`on`) enables it, with the cadence knobs of
+    /// [`TuneConfig::knobs_from_env`] applied. Returns `None` when
+    /// tuning is not enabled.
+    pub fn from_env() -> Option<TuneConfig> {
+        let on = std::env::var("DYNAMAP_TUNE")
+            .map(|v| matches!(v.to_ascii_lowercase().as_str(), "1" | "true" | "on"))
+            .unwrap_or(false);
+        on.then(TuneConfig::knobs_from_env)
+    }
+
+    /// Read only the cadence knobs — `DYNAMAP_TUNE_INTERVAL_MS`,
+    /// `DYNAMAP_TUNE_MIN_REQUESTS`, `DYNAMAP_TUNE_HYSTERESIS` — over
+    /// the defaults, without requiring the `DYNAMAP_TUNE` enable flag.
+    /// Callers that opted in by other means (`serve --tune`) use this,
+    /// so the knobs are never silently discarded.
+    pub fn knobs_from_env() -> TuneConfig {
+        let mut config = TuneConfig::default();
+        if let Ok(ms) = std::env::var("DYNAMAP_TUNE_INTERVAL_MS") {
+            if let Ok(ms) = ms.parse::<u64>() {
+                config.interval = Duration::from_millis(ms.max(1));
+            }
+        }
+        if let Ok(n) = std::env::var("DYNAMAP_TUNE_MIN_REQUESTS") {
+            if let Ok(n) = n.parse::<u64>() {
+                config.min_new_requests = n;
+            }
+        }
+        if let Ok(h) = std::env::var("DYNAMAP_TUNE_HYSTERESIS") {
+            if let Ok(h) = h.parse::<f64>() {
+                config.hysteresis = h.clamp(0.0, 0.9);
+            }
+        }
+        config
+    }
+}
+
+/// One profile → calibrate → remap sweep over the registry's resident
+/// models. `seen` carries each model's request count at its last
+/// attempt (the controller owns one across ticks; one-shot callers
+/// pass a fresh map). Models that error during calibration (e.g. not
+/// enough evidence yet) are skipped, not fatal.
+pub fn run_pass(
+    registry: &ModelRegistry,
+    config: &TuneConfig,
+    seen: &mut BTreeMap<String, u64>,
+) -> Vec<RemapOutcome> {
+    let mut outcomes = Vec::new();
+    for model in registry.resident() {
+        // peek, not host: a background tick must neither refresh LRU
+        // recency (idle models would dodge eviction) nor re-host
+        let Some(host) = registry.peek(&model) else { continue };
+        let Some(profile) = host.profile() else { continue };
+        let requests = profile.requests();
+        let mut last = seen.get(&model).copied().unwrap_or(0);
+        if requests < last {
+            // the profile's counter went backwards: the model was
+            // evicted and re-hosted with a fresh LayerProfile. Reset
+            // the high-water mark or the loop would stay dead until
+            // the new profile re-accumulates the old lifetime count.
+            seen.insert(model.clone(), 0);
+            last = 0;
+        }
+        if requests < last + config.min_new_requests {
+            continue;
+        }
+        let state = host.state();
+        let Some((p1, p2)) = host.plan_shape() else { continue };
+        let snapshot = profile.snapshot();
+        let cal = match calibrate(state.cnn(), &registry.config().compiler, p1, p2, &snapshot)
+        {
+            Ok(cal) => cal,
+            Err(e) => {
+                if config.verbose {
+                    eprintln!("[tune] {model}: calibration skipped: {e}");
+                }
+                continue;
+            }
+        };
+        seen.insert(model.clone(), requests);
+        match remap(registry, &model, &cal, &RemapConfig { hysteresis: config.hysteresis })
+        {
+            Ok(outcome) => outcomes.push(outcome),
+            Err(e) => {
+                // not fatal for the loop, but never invisible: without
+                // this line an operator cannot tell "converged" from
+                // "remap broken" (both show zero swaps)
+                eprintln!("[tune] {model}: remap failed: {e}");
+                continue;
+            }
+        }
+    }
+    outcomes
+}
+
+/// The background adaptation thread. Spawn with
+/// [`TuneController::spawn`], stop with [`TuneController::shutdown`]
+/// (also runs on drop). The thread holds an `Arc<ModelRegistry>`, so
+/// the registry outlives the controller wherever it is stopped.
+pub struct TuneController {
+    stop: Mutex<Option<mpsc::Sender<()>>>,
+    handle: Mutex<Option<thread::JoinHandle<()>>>,
+    passes: Arc<AtomicU64>,
+    swaps: Arc<AtomicU64>,
+}
+
+impl TuneController {
+    /// Start the cadence thread over `registry`.
+    pub fn spawn(registry: Arc<ModelRegistry>, config: TuneConfig) -> TuneController {
+        let (stop_tx, stop_rx) = mpsc::channel::<()>();
+        let passes = Arc::new(AtomicU64::new(0));
+        let swaps = Arc::new(AtomicU64::new(0));
+        let (passes_t, swaps_t) = (passes.clone(), swaps.clone());
+        let handle = thread::Builder::new()
+            .name("dynamap-tune".into())
+            .spawn(move || {
+                let mut seen = BTreeMap::new();
+                loop {
+                    match stop_rx.recv_timeout(config.interval) {
+                        Ok(()) | Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                        Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    }
+                    let outcomes = run_pass(&registry, &config, &mut seen);
+                    passes_t.fetch_add(1, Ordering::Relaxed);
+                    for outcome in outcomes {
+                        if outcome.swapped {
+                            swaps_t.fetch_add(1, Ordering::Relaxed);
+                        }
+                        if config.verbose {
+                            println!("[tune] {}", outcome.summary());
+                        }
+                    }
+                }
+            })
+            .expect("spawn tune controller thread");
+        TuneController {
+            stop: Mutex::new(Some(stop_tx)),
+            handle: Mutex::new(Some(handle)),
+            passes,
+            swaps,
+        }
+    }
+
+    /// Completed cadence passes so far.
+    pub fn passes(&self) -> u64 {
+        self.passes.load(Ordering::Relaxed)
+    }
+
+    /// Plan swaps performed by this controller so far.
+    pub fn swaps(&self) -> u64 {
+        self.swaps.load(Ordering::Relaxed)
+    }
+
+    /// Stop the cadence thread and join it. Idempotent.
+    pub fn shutdown(&self) {
+        let stop = self.stop.lock().unwrap_or_else(|p| p.into_inner()).take();
+        if let Some(tx) = stop {
+            let _ = tx.send(());
+        }
+        let handle = self.handle.lock().unwrap_or_else(|p| p.into_inner()).take();
+        if let Some(handle) = handle {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for TuneController {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_env_parses_and_defaults() {
+        std::env::remove_var("DYNAMAP_TUNE");
+        std::env::set_var("DYNAMAP_TUNE_INTERVAL_MS", "250");
+        std::env::set_var("DYNAMAP_TUNE_MIN_REQUESTS", "7");
+        std::env::set_var("DYNAMAP_TUNE_HYSTERESIS", "0.2");
+        // enable flag absent: from_env is None, but callers that opted
+        // in by other means still see the knobs
+        assert!(TuneConfig::from_env().is_none());
+        let knobs = TuneConfig::knobs_from_env();
+        assert_eq!(knobs.interval, Duration::from_millis(250));
+        assert_eq!(knobs.min_new_requests, 7);
+        std::env::set_var("DYNAMAP_TUNE", "1");
+        let config = TuneConfig::from_env().expect("enabled");
+        assert_eq!(config.interval, Duration::from_millis(250));
+        assert_eq!(config.min_new_requests, 7);
+        assert!((config.hysteresis - 0.2).abs() < 1e-12);
+        std::env::remove_var("DYNAMAP_TUNE");
+        std::env::remove_var("DYNAMAP_TUNE_INTERVAL_MS");
+        std::env::remove_var("DYNAMAP_TUNE_MIN_REQUESTS");
+        std::env::remove_var("DYNAMAP_TUNE_HYSTERESIS");
+    }
+}

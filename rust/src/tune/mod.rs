@@ -1,0 +1,63 @@
+//! Online adaptation: profile → calibrate → remap → hot-swap.
+//!
+//! DYNAMAP picks per-layer algorithms with an analytic cost model
+//! (Eq. 9–14). Analytic DSE models drift from reality (fpgaConvNet,
+//! arxiv 1711.08740, calibrates its models against measured
+//! performance for exactly this reason), and serving conditions change
+//! while a process is live (the multi-CNN regime of f-CNNx, arxiv
+//! 1805.10174). This module closes the loop so the "dynamic" in
+//! DYNAMAP extends past compile time:
+//!
+//! * [`profiler`] — [`LayerProfile`]: bounded, lock-cheap per-layer ×
+//!   per-algorithm wall-clock observations recorded by the native
+//!   serving path itself
+//!   ([`NativeState::profiled`](crate::api::NativeState::profiled)).
+//! * [`calibrate`](mod@calibrate) — least-squares fit of the effective
+//!   [`Device`](crate::cost::Device) parameters (achievable per-family
+//!   GEMM throughput, effective DDR bandwidth, per-algorithm overhead
+//!   constants) from a profile, producing a [`CalibratedDevice`] with
+//!   an observed-vs-predicted residual report.
+//! * [`remap`](mod@remap) — re-runs cost-graph construction + the
+//!   series-parallel PBQP solve under the calibrated model, diffs the
+//!   mapping against the live plan and, past a hysteresis threshold,
+//!   atomically hot-swaps a freshly prepared serving state into the
+//!   [`crate::serve::ModelRegistry`] (epoch/`Arc` swap — in-flight
+//!   batches finish on the old plan; no request is lost or duplicated).
+//! * [`controller`] — the background cadence thread behind
+//!   `dynamap serve --tune` (every N requests or T seconds, knobs via
+//!   [`TuneConfig`] / `DYNAMAP_TUNE*` env vars).
+//! * [`report`] — the observed-vs-predicted table the `serve` REPL
+//!   prints on `stats`.
+//! * [`cli`] — `dynamap tune`, the one-shot offline calibrate + re-map
+//!   over a recorded profile.
+//!
+//! ```no_run
+//! use dynamap::serve::{ModelRegistry, RegistryConfig};
+//! use dynamap::tune::{TuneConfig, TuneController};
+//! use std::sync::Arc;
+//!
+//! let mut config = RegistryConfig::default();
+//! config.profile = true; // attach a LayerProfile to every host
+//! let registry = Arc::new(ModelRegistry::new(config));
+//! let controller = TuneController::spawn(registry.clone(), TuneConfig::default());
+//! // ... serve traffic; the controller re-maps in the background ...
+//! controller.shutdown();
+//! ```
+#![warn(missing_docs)]
+#![deny(clippy::correctness, clippy::suspicious)]
+
+pub mod calibrate;
+pub mod cli;
+pub mod controller;
+pub mod profiler;
+pub mod remap;
+pub mod report;
+
+pub use calibrate::{calibrate, AlgoFitReport, CalibratedDevice, LayerResidual};
+pub use controller::{run_pass, TuneConfig, TuneController};
+pub use profiler::{LayerObs, LayerProfile};
+pub use remap::{
+    plan_delta, predicted_compute_us, remap, AlgoChange, PlanDelta, RemapConfig,
+    RemapOutcome,
+};
+pub use report::observed_vs_predicted;

@@ -1,0 +1,342 @@
+//! [`LayerProfile`] — per-layer, per-algorithm latency observations
+//! from the live native serving path.
+//!
+//! Every request served by a profiled
+//! [`NativeState`](crate::api::NativeState) records one wall-clock
+//! sample per conv/FC layer under its currently served algorithm. The
+//! store keeps streaming statistics (Welford mean/variance plus
+//! min/max) per `(layer, algorithm)` key — O(1) memory per key, and the
+//! key space is bounded by `layers × algorithm families`, so the
+//! profile never grows with traffic. Recording takes one short mutex
+//! acquisition per *request* (not per layer), keeping the cost on the
+//! serving hot path negligible next to the convolutions themselves.
+//!
+//! Snapshots feed [`crate::tune::calibrate::calibrate`]; profiles
+//! round-trip through JSON (`save`/`load`) so `dynamap tune` can
+//! replay a profile recorded by a `dynamap serve --tune` process.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::api::DynamapError;
+use crate::util::json::Json;
+
+/// Streaming per-key statistics (Welford's online algorithm).
+#[derive(Debug, Clone, Default)]
+struct Stat {
+    count: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Stat {
+    fn push(&mut self, x: f64) {
+        if self.count == 0 {
+            self.min = x;
+            self.max = x;
+        } else {
+            self.min = self.min.min(x);
+            self.max = self.max.max(x);
+        }
+        self.count += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.count as f64;
+        self.m2 += delta * (x - self.mean);
+    }
+
+    fn std(&self) -> f64 {
+        if self.count < 2 {
+            0.0
+        } else {
+            (self.m2 / self.count as f64).sqrt()
+        }
+    }
+}
+
+/// One `(layer, algorithm)` observation in a profile snapshot. All
+/// latencies are microseconds of wall-clock on the native kernel path.
+#[derive(Debug, Clone)]
+pub struct LayerObs {
+    /// Layer name (manifest / CNN node name).
+    pub layer: String,
+    /// Algorithm family the layer was served with ("im2col", "kn2row",
+    /// "winograd").
+    pub algo: String,
+    /// Number of samples behind the statistics.
+    pub count: u64,
+    /// Mean observed latency, µs.
+    pub mean_us: f64,
+    /// Population standard deviation, µs.
+    pub std_us: f64,
+    /// Fastest observed sample, µs — the steady-state estimate
+    /// calibration fits against (robust to scheduler noise).
+    pub min_us: f64,
+    /// Slowest observed sample, µs.
+    pub max_us: f64,
+}
+
+/// Bounded, lock-cheap store of per-layer latency observations for one
+/// model. Shared (`Arc`) between the serving path (writer) and the tune
+/// controller / REPL reporting (readers); every method takes `&self`.
+#[derive(Debug)]
+pub struct LayerProfile {
+    model: String,
+    inner: Mutex<BTreeMap<(String, String), Stat>>,
+    requests: AtomicU64,
+}
+
+impl LayerProfile {
+    /// An empty profile for `model`.
+    pub fn new(model: impl Into<String>) -> LayerProfile {
+        LayerProfile {
+            model: model.into(),
+            inner: Mutex::new(BTreeMap::new()),
+            requests: AtomicU64::new(0),
+        }
+    }
+
+    /// Model this profile observes.
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
+    /// Record one request's per-layer samples: `(layer, algorithm,
+    /// µs)` triples, exactly the shape of
+    /// [`crate::api::InferMetrics::per_layer_us`]. One lock
+    /// acquisition for the whole request.
+    pub fn record(&self, per_layer_us: &[(String, String, f64)]) {
+        if per_layer_us.is_empty() {
+            return;
+        }
+        {
+            let mut inner = self.lock();
+            for (layer, algo, us) in per_layer_us {
+                if !us.is_finite() {
+                    continue;
+                }
+                inner
+                    .entry((layer.clone(), algo.clone()))
+                    .or_default()
+                    .push(*us);
+            }
+        }
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// How many requests have been recorded (the tune controller's
+    /// cadence counter — an atomic read, no lock).
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    /// Number of distinct `(layer, algorithm)` keys observed so far.
+    pub fn len(&self) -> usize {
+        self.lock().len()
+    }
+
+    /// `true` when nothing has been recorded yet.
+    pub fn is_empty(&self) -> bool {
+        self.lock().is_empty()
+    }
+
+    /// Point-in-time copy of every observation, sorted by
+    /// `(layer, algorithm)`.
+    pub fn snapshot(&self) -> Vec<LayerObs> {
+        self.lock()
+            .iter()
+            .map(|((layer, algo), s)| LayerObs {
+                layer: layer.clone(),
+                algo: algo.clone(),
+                count: s.count,
+                mean_us: s.mean,
+                std_us: s.std(),
+                min_us: s.min,
+                max_us: s.max,
+            })
+            .collect()
+    }
+
+    /// Drop every observation (the request counter keeps counting).
+    pub fn clear(&self) {
+        self.lock().clear();
+    }
+
+    /// Serialize the profile (model + per-key statistics).
+    pub fn to_json(&self) -> Json {
+        let layers = self
+            .snapshot()
+            .into_iter()
+            .map(|o| {
+                Json::obj(vec![
+                    ("layer", Json::str(o.layer)),
+                    ("algo", Json::str(o.algo)),
+                    ("count", Json::num(o.count as f64)),
+                    ("mean_us", Json::num(o.mean_us)),
+                    ("std_us", Json::num(o.std_us)),
+                    ("min_us", Json::num(o.min_us)),
+                    ("max_us", Json::num(o.max_us)),
+                ])
+            })
+            .collect::<Vec<_>>();
+        Json::obj(vec![
+            ("model", Json::str(self.model.clone())),
+            ("requests", Json::num(self.requests() as f64)),
+            ("layers", Json::Arr(layers)),
+        ])
+    }
+
+    /// Rebuild a profile from its serialized form.
+    pub fn from_json(j: &Json) -> Result<LayerProfile, DynamapError> {
+        let model = j
+            .get("model")
+            .as_str()
+            .ok_or_else(|| DynamapError::Artifact("profile: missing 'model'".into()))?
+            .to_string();
+        let profile = LayerProfile::new(model);
+        let layers = j
+            .get("layers")
+            .as_arr()
+            .ok_or_else(|| DynamapError::Artifact("profile: missing 'layers'".into()))?;
+        {
+            let mut inner = profile.lock();
+            for l in layers {
+                let field = |k: &str| -> Result<f64, DynamapError> {
+                    l.get(k).as_f64().ok_or_else(|| {
+                        DynamapError::Artifact(format!("profile layer: missing '{k}'"))
+                    })
+                };
+                let layer = l.get("layer").as_str().ok_or_else(|| {
+                    DynamapError::Artifact("profile layer: missing 'layer'".into())
+                })?;
+                let algo = l.get("algo").as_str().ok_or_else(|| {
+                    DynamapError::Artifact("profile layer: missing 'algo'".into())
+                })?;
+                let count = field("count")? as u64;
+                let mean = field("mean_us")?;
+                let std = field("std_us")?;
+                inner.insert(
+                    (layer.to_string(), algo.to_string()),
+                    Stat {
+                        count,
+                        mean,
+                        m2: std * std * count as f64,
+                        min: field("min_us")?,
+                        max: field("max_us")?,
+                    },
+                );
+            }
+        }
+        profile
+            .requests
+            .store(j.get("requests").as_u64().unwrap_or(0), Ordering::Relaxed);
+        Ok(profile)
+    }
+
+    /// Write the profile as pretty JSON.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<(), DynamapError> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent).map_err(|e| DynamapError::io(parent, e))?;
+            }
+        }
+        std::fs::write(path, self.to_json().pretty()).map_err(|e| DynamapError::io(path, e))
+    }
+
+    /// Load a profile previously written by [`LayerProfile::save`].
+    pub fn load(path: impl AsRef<Path>) -> Result<LayerProfile, DynamapError> {
+        let path = path.as_ref();
+        let text =
+            std::fs::read_to_string(path).map_err(|e| DynamapError::io(path, e))?;
+        let j = Json::parse(&text).map_err(|e| DynamapError::json_in(path, e))?;
+        LayerProfile::from_json(&j)
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, BTreeMap<(String, String), Stat>> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_statistics_are_exact() {
+        let p = LayerProfile::new("m");
+        for us in [10.0, 20.0, 30.0] {
+            p.record(&[("c1".into(), "im2col".into(), us)]);
+        }
+        assert_eq!(p.requests(), 3);
+        let snap = p.snapshot();
+        assert_eq!(snap.len(), 1);
+        let o = &snap[0];
+        assert_eq!((o.layer.as_str(), o.algo.as_str(), o.count), ("c1", "im2col", 3));
+        assert!((o.mean_us - 20.0).abs() < 1e-12);
+        assert_eq!((o.min_us, o.max_us), (10.0, 30.0));
+        // population std of {10,20,30} = sqrt(200/3)
+        assert!((o.std_us - (200.0f64 / 3.0).sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn keys_stay_bounded_and_separate_algorithms() {
+        let p = LayerProfile::new("m");
+        for i in 0..1000 {
+            p.record(&[
+                ("c1".into(), "im2col".into(), i as f64),
+                ("c1".into(), "kn2row".into(), i as f64 + 1.0),
+            ]);
+        }
+        assert_eq!(p.len(), 2, "one key per (layer, algo), not per sample");
+        assert_eq!(p.requests(), 1000);
+        p.clear();
+        assert!(p.is_empty());
+    }
+
+    #[test]
+    fn json_round_trip_preserves_statistics() {
+        let p = LayerProfile::new("mini-inception");
+        for us in [5.0, 7.0, 9.0, 11.0] {
+            p.record(&[
+                ("stem".into(), "winograd".into(), us),
+                ("head".into(), "im2col".into(), us * 2.0),
+            ]);
+        }
+        let back = LayerProfile::from_json(&p.to_json()).unwrap();
+        assert_eq!(back.model(), "mini-inception");
+        assert_eq!(back.requests(), 4);
+        let (a, b) = (p.snapshot(), back.snapshot());
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!((&x.layer, &x.algo, x.count), (&y.layer, &y.algo, y.count));
+            assert!((x.mean_us - y.mean_us).abs() < 1e-9);
+            assert!((x.std_us - y.std_us).abs() < 1e-6);
+            assert_eq!((x.min_us, x.max_us), (y.min_us, y.max_us));
+        }
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let p = LayerProfile::new("m");
+        p.record(&[("c".into(), "im2col".into(), 42.0)]);
+        let path = std::env::temp_dir()
+            .join(format!("dynamap_profile_{}.json", std::process::id()));
+        p.save(&path).unwrap();
+        let back = LayerProfile::load(&path).unwrap();
+        assert_eq!(back.snapshot()[0].mean_us, 42.0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn malformed_json_is_a_typed_error() {
+        let j = Json::parse(r#"{"layers": []}"#).unwrap();
+        assert!(matches!(
+            LayerProfile::from_json(&j),
+            Err(DynamapError::Artifact(_))
+        ));
+    }
+}

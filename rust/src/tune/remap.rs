@@ -1,0 +1,273 @@
+//! Re-solve the DSE under a calibrated cost model and hot-swap the
+//! improved plan into the live serving engine.
+//!
+//! [`remap`] re-runs the full mapping flow (`CostGraph::build` + the
+//! series-parallel PBQP solve, via
+//! [`Compiler::compile`](crate::api::Compiler::compile)) with the
+//! [`CalibratedDevice`] produced by [`super::calibrate::calibrate`],
+//! diffs the
+//! resulting per-layer algorithm map against the plan currently being
+//! served, and — when the predicted end-to-end latency improves beyond
+//! a hysteresis threshold — builds a freshly prepared
+//! [`NativeState`](crate::api::NativeState) for the new map and swaps
+//! it into the model's [`crate::serve::StateCell`]. The swap is an
+//! `Arc` epoch swap: batches already in flight finish on the plan they
+//! started with, later batches pick up the new one, and no request is
+//! ever lost, duplicated or served by a half-updated plan.
+
+use std::collections::BTreeMap;
+
+use crate::api::session::resolve_algo;
+use crate::api::{Backend, Compiler, DynamapError, PlanArtifact, Session};
+use crate::cost::conv::CostModel;
+use crate::graph::{zoo, Cnn};
+use crate::serve::ModelRegistry;
+
+use super::calibrate::{conv_equivalent, CalibratedDevice};
+
+/// When [`remap`] actually swaps.
+#[derive(Debug, Clone)]
+pub struct RemapConfig {
+    /// Minimum predicted end-to-end improvement required to swap, as a
+    /// fraction (0.05 = swap only when the new plan is predicted ≥5%
+    /// faster). Hysteresis keeps borderline re-fits from flapping the
+    /// plan back and forth under measurement noise.
+    pub hysteresis: f64,
+}
+
+impl Default for RemapConfig {
+    fn default() -> RemapConfig {
+        RemapConfig { hysteresis: 0.05 }
+    }
+}
+
+/// One layer whose algorithm assignment changed.
+#[derive(Debug, Clone)]
+pub struct AlgoChange {
+    /// Layer name.
+    pub layer: String,
+    /// Family served before the remap.
+    pub from: String,
+    /// Family the calibrated plan assigns.
+    pub to: String,
+}
+
+/// What one [`remap`] call decided and did.
+#[derive(Debug, Clone)]
+pub struct RemapOutcome {
+    /// Canonical model name.
+    pub model: String,
+    /// Whether a new plan was swapped into the registry.
+    pub swapped: bool,
+    /// The swap epoch after the swap (`None` when no swap happened).
+    pub epoch: Option<u64>,
+    /// Array shape of the calibrated plan.
+    pub shape: (usize, usize),
+    /// Layers whose algorithm assignment changed.
+    pub changed: Vec<AlgoChange>,
+    /// Predicted end-to-end compute of the *served* map under the
+    /// calibrated model, µs.
+    pub predicted_before_us: f64,
+    /// Predicted end-to-end compute of the calibrated plan's map, µs.
+    pub predicted_after_us: f64,
+    /// `predicted_before_us / predicted_after_us`.
+    pub predicted_speedup: f64,
+}
+
+impl RemapOutcome {
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        if self.swapped {
+            format!(
+                "{}: swapped plan (epoch {}, {} layer(s) changed, predicted \
+                 {:.0}µs → {:.0}µs, {:.2}x)",
+                self.model,
+                self.epoch.unwrap_or(0),
+                self.changed.len(),
+                self.predicted_before_us,
+                self.predicted_after_us,
+                self.predicted_speedup
+            )
+        } else if self.changed.is_empty() {
+            format!(
+                "{}: kept plan (calibrated re-solve agrees with the served mapping)",
+                self.model
+            )
+        } else {
+            format!(
+                "{}: kept plan ({} layer(s) would change but predicted gain \
+                 {:.2}x is inside the hysteresis band)",
+                self.model,
+                self.changed.len(),
+                self.predicted_speedup
+            )
+        }
+    }
+}
+
+/// Predicted end-to-end conv/FC compute (µs) of serving `map` on a
+/// `p1 × p2` array under `cm` — the quantity the hysteresis decision
+/// compares. Transitions are excluded: the native serving path the
+/// observations come from has no DRAM layout round-trips between
+/// layers.
+pub fn predicted_compute_us(
+    cnn: &Cnn,
+    cm: &CostModel,
+    p1: usize,
+    p2: usize,
+    map: &BTreeMap<String, String>,
+) -> f64 {
+    let mut total = 0.0;
+    for (layer, spec) in conv_equivalent(cnn) {
+        let family = map.get(&layer).map(String::as_str).unwrap_or("im2col");
+        let algo = resolve_algo(family, &spec);
+        total += cm.best_conv_cost(&spec, algo, p1, p2).seconds;
+    }
+    total * 1e6
+}
+
+/// The registry-independent core of the remap decision: what a
+/// calibrated plan changes relative to a served map, and by how much.
+/// Shared by [`remap`] (live hot-swap) and `dynamap tune` (offline
+/// replay), so the two can never disagree about whether a profile
+/// justifies a swap.
+#[derive(Debug, Clone)]
+pub struct PlanDelta {
+    /// `P_SA1 × P_SA2` shape of the calibrated plan.
+    pub shape: (usize, usize),
+    /// The served map with the calibrated plan's conv assignments
+    /// overlaid (non-conv entries, e.g. FC layers, carry over).
+    pub new_map: BTreeMap<String, String>,
+    /// Layers whose algorithm assignment changed.
+    pub changed: Vec<AlgoChange>,
+    /// Predicted end-to-end compute of the *base* map under the
+    /// calibrated model, µs.
+    pub predicted_before_us: f64,
+    /// Predicted end-to-end compute of the calibrated plan's map, µs.
+    pub predicted_after_us: f64,
+    /// `predicted_before_us / predicted_after_us`.
+    pub predicted_speedup: f64,
+}
+
+impl PlanDelta {
+    /// The swap decision: at least one layer changes AND the predicted
+    /// gain clears the hysteresis band.
+    pub fn improves(&self, hysteresis: f64) -> bool {
+        !self.changed.is_empty()
+            && self.predicted_after_us
+                <= self.predicted_before_us * (1.0 - hysteresis)
+    }
+}
+
+/// Diff a calibrated plan `artifact` (compiled by `compiler`, which
+/// carries the calibration) against the `base_map` currently served,
+/// pricing both sides with the same calibrated cost model at the
+/// plan's array shape.
+pub fn plan_delta(
+    cnn: &Cnn,
+    compiler: &Compiler,
+    artifact: &PlanArtifact,
+    base_map: &BTreeMap<String, String>,
+) -> PlanDelta {
+    let (p1, p2) = (artifact.plan.p1, artifact.plan.p2);
+    let mut new_map = base_map.clone();
+    for layer in &artifact.plan.mapping.layers {
+        new_map.insert(layer.name.clone(), layer.cost.algo.family().to_string());
+    }
+    let changed: Vec<AlgoChange> = base_map
+        .iter()
+        .filter_map(|(layer, from)| {
+            let to = new_map.get(layer)?;
+            (to != from).then(|| AlgoChange {
+                layer: layer.clone(),
+                from: from.clone(),
+                to: to.clone(),
+            })
+        })
+        .collect();
+    let cm = compiler.config().cost_model();
+    let before = predicted_compute_us(cnn, &cm, p1, p2, base_map);
+    let after = predicted_compute_us(cnn, &cm, p1, p2, &new_map);
+    PlanDelta {
+        shape: (p1, p2),
+        new_map,
+        changed,
+        predicted_before_us: before,
+        predicted_after_us: after,
+        predicted_speedup: if after > 0.0 { before / after } else { 1.0 },
+    }
+}
+
+/// Calibrated re-solve + diff + (hysteresis-gated) hot swap for one
+/// hosted model. See the module docs for the swap safety argument.
+pub fn remap(
+    registry: &ModelRegistry,
+    model: &str,
+    cal: &CalibratedDevice,
+    config: &RemapConfig,
+) -> Result<RemapOutcome, DynamapError> {
+    let canonical = zoo::canonical_name(model)
+        .ok_or_else(|| DynamapError::UnknownModel(model.to_string()))?;
+    // peek, not host: re-mapping must neither resurrect an evicted
+    // model nor refresh LRU recency — only real traffic does that
+    let host = registry.peek(canonical).ok_or_else(|| {
+        DynamapError::Serve(format!(
+            "cannot remap '{canonical}': model is not resident (host it first)"
+        ))
+    })?;
+    let state = host.state();
+    let cnn = state.cnn().clone();
+    let old_map = state.algo_map().clone();
+
+    // re-run the full mapping flow in observed time units
+    let compiler = registry
+        .config()
+        .compiler
+        .clone()
+        .device(cal.device.clone())
+        .calibration(cal.calibration.clone());
+    let artifact = compiler.compile(&cnn)?;
+    let delta = plan_delta(&cnn, &compiler, &artifact, &old_map);
+    let improves = delta.improves(config.hysteresis);
+
+    let PlanDelta {
+        shape,
+        new_map,
+        changed,
+        predicted_before_us,
+        predicted_after_us,
+        predicted_speedup,
+    } = delta;
+    let mut outcome = RemapOutcome {
+        model: canonical.to_string(),
+        swapped: false,
+        epoch: None,
+        shape,
+        changed,
+        predicted_before_us,
+        predicted_after_us,
+        predicted_speedup,
+    };
+    if !improves {
+        return Ok(outcome);
+    }
+
+    // prepare the new serving state from the same artifacts: only the
+    // algorithm map changes, so this is a weight re-lowering, not a DSE
+    let dir = registry.config().artifacts_root.join(canonical);
+    let mut builder = Session::builder(dir.to_string_lossy().into_owned())
+        .backend(Backend::Native)
+        .algo_map(new_map);
+    if let Some(profile) = host.profile() {
+        // keep observing under the new plan so later passes can refine
+        builder = builder.profiler(profile.clone());
+    }
+    let session = builder.build()?;
+    let new_state = session.native_state().ok_or_else(|| {
+        DynamapError::Serve("remap: native session produced no shareable state".into())
+    })?;
+    let epoch = registry.swap_state(canonical, new_state, Some(shape))?;
+    outcome.swapped = true;
+    outcome.epoch = Some(epoch);
+    Ok(outcome)
+}

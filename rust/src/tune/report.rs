@@ -1,0 +1,113 @@
+//! Observed-vs-predicted reporting — calibration quality at a glance.
+//!
+//! [`observed_vs_predicted`] renders one [`crate::util::table::Table`]
+//! row per served conv/FC layer: the analytic prediction for the
+//! algorithm currently being served next to the profiled wall-clock
+//! observations. The `dynamap serve` REPL prints it on `stats` so
+//! calibration quality is inspectable on a live server without a bench
+//! run; `dynamap tune` prints it when replaying a recorded profile.
+
+use std::collections::BTreeMap;
+
+use crate::api::session::resolve_algo;
+use crate::api::Compiler;
+use crate::cost::DeviceCalibration;
+use crate::graph::Cnn;
+use crate::util::table::Table;
+
+use super::calibrate::conv_equivalent;
+use super::profiler::LayerObs;
+
+/// Per-layer observed-vs-predicted table for the algorithms in
+/// `algo_map`, priced by `compiler`'s *base* (uncalibrated) model on a
+/// `p1 × p2` array. Layers without observations render `-` columns, so
+/// the table doubles as a coverage check for the profiler.
+pub fn observed_vs_predicted(
+    cnn: &Cnn,
+    compiler: &Compiler,
+    p1: usize,
+    p2: usize,
+    algo_map: &BTreeMap<String, String>,
+    observations: &[LayerObs],
+) -> Table {
+    let mut cm = compiler.config().cost_model();
+    cm.calibration = DeviceCalibration::identity();
+    let by_key: BTreeMap<(&str, &str), &LayerObs> = observations
+        .iter()
+        .map(|o| ((o.layer.as_str(), o.algo.as_str()), o))
+        .collect();
+    let mut t = Table::new(
+        &format!("observed vs predicted per-layer cycles ({})", cnn.name),
+        &[
+            "layer", "algo", "pred µs", "pred cycles", "obs min µs", "obs mean µs",
+            "samples", "obs/pred",
+        ],
+    );
+    for (layer, spec) in conv_equivalent(cnn) {
+        let family = algo_map.get(&layer).map(String::as_str).unwrap_or("im2col");
+        let algo = resolve_algo(family, &spec);
+        let cost = cm.best_conv_cost(&spec, algo, p1, p2);
+        let pred_us = cost.seconds * 1e6;
+        match by_key.get(&(layer.as_str(), family)) {
+            Some(o) => {
+                let ratio = if pred_us > 0.0 { o.min_us / pred_us } else { 0.0 };
+                t.row(vec![
+                    layer.clone(),
+                    family.to_string(),
+                    format!("{pred_us:.2}"),
+                    cost.cycles.to_string(),
+                    format!("{:.2}", o.min_us),
+                    format!("{:.2}", o.mean_us),
+                    o.count.to_string(),
+                    format!("{ratio:.2}"),
+                ]);
+            }
+            None => {
+                t.row(vec![
+                    layer.clone(),
+                    family.to_string(),
+                    format!("{pred_us:.2}"),
+                    cost.cycles.to_string(),
+                    "-".into(),
+                    "-".into(),
+                    "0".into(),
+                    "-".into(),
+                ]);
+            }
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::Device;
+    use crate::graph::zoo;
+
+    #[test]
+    fn table_covers_every_served_layer() {
+        let cnn = zoo::mini_inception();
+        let compiler = Compiler::new().device(Device::small_edge());
+        let map: BTreeMap<String, String> = conv_equivalent(&cnn)
+            .keys()
+            .map(|k| (k.clone(), "im2col".to_string()))
+            .collect();
+        let obs = vec![LayerObs {
+            layer: "stem".into(),
+            algo: "im2col".into(),
+            count: 4,
+            mean_us: 11.0,
+            std_us: 1.0,
+            min_us: 10.0,
+            max_us: 13.0,
+        }];
+        let t = observed_vs_predicted(&cnn, &compiler, 16, 16, &map, &obs);
+        assert_eq!(t.rows.len(), cnn.conv_count(), "one row per conv layer");
+        let rendered = t.render();
+        assert!(rendered.contains("stem"));
+        assert!(rendered.contains("10.00"), "observed minimum shows up:\n{rendered}");
+        // unobserved layers render placeholder columns
+        assert!(rendered.contains(" - "));
+    }
+}

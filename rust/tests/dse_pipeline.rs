@@ -220,18 +220,19 @@ fn emit_produces_consistent_package() {
 }
 
 #[test]
-#[allow(deprecated)]
-fn deprecated_shims_still_work() {
-    use dynamap::dse::Dse;
+fn compiler_covers_legacy_call_shapes() {
+    // the 0.1 `Dse` driver is gone; its call shapes (`run`,
+    // `run_policy`, `run_fixed_shape`) map 1:1 onto the staged Compiler
     let cnn = zoo::mini_inception();
     let cfg = DseConfig::with_device(Device::small_edge());
-    let old = Dse::new(cfg.clone());
-    let plan = old.run(&cnn).unwrap();
-    let new = Compiler::from_config(cfg).compile(&cnn).unwrap().into_plan();
-    assert_eq!(plan.mapping.assignment, new.mapping.assignment);
-    assert_eq!(plan.total_latency_ms, new.total_latency_ms);
-    let bl = old.run_policy(&cnn, Policy::Im2colOnly).unwrap();
+    let compiler = Compiler::from_config(cfg);
+    let plan = compiler.compile(&cnn).unwrap().into_plan();
+    let again = compiler.compile(&cnn).unwrap().into_plan();
+    assert_eq!(plan.mapping.assignment, again.mapping.assignment);
+    assert_eq!(plan.total_latency_ms, again.total_latency_ms);
+    let bl = compiler.clone().policy(Policy::Im2colOnly).compile(&cnn).unwrap().into_plan();
     assert!(plan.total_latency_ms <= bl.total_latency_ms + 1e-9);
-    let fixed = old.run_fixed_shape(&cnn, 16, 16).unwrap();
+    let fixed =
+        compiler.clone().fixed_shape(16, 16).compile(&cnn).unwrap().into_plan();
     assert_eq!((fixed.p1, fixed.p2), (16, 16));
 }

@@ -1,0 +1,130 @@
+//! Seeded property test at the crate surface: on randomized small
+//! series-parallel PBQP instances the polynomial-time SP solver must
+//! return solutions with exactly the brute-force-optimal cost, and the
+//! cost it reports must equal the cost of the assignment it returns.
+//!
+//! `tune::remap` re-runs this solver *in production* whenever the
+//! calibrated cost model justifies a plan hot-swap, so an optimality
+//! regression here would silently ship worse mappings to live serving
+//! — this test catches it before that. Graphs are built by the paper's
+//! inductive SP construction (Definition 1: start from K₂, repeatedly
+//! subdivide an edge or duplicate an edge in parallel), with dyadic
+//! fractional costs so float comparisons stay exact.
+
+use dynamap::pbqp::brute::search_space;
+use dynamap::pbqp::{solve_brute, solve_sp, Matrix, Problem};
+use dynamap::util::proptest;
+use dynamap::util::rng::Rng;
+
+/// Random series-parallel PBQP instance with source 0 and sink 1.
+/// Domains of size 1–4 (the real cost graphs have ≤4 algorithm
+/// choices), up to 12 series/parallel growth steps, dyadic costs in
+/// [0, 32).
+fn random_sp_problem(rng: &mut Rng) -> Problem {
+    let mut p = Problem::default();
+    let dom = |rng: &mut Rng| rng.range(1, 4);
+    let labels = |n: usize| (0..n).map(|i| format!("o{i}")).collect::<Vec<_>>();
+    let costs =
+        |rng: &mut Rng, n: usize| (0..n).map(|_| rng.below(256) as f64 / 8.0).collect();
+    let matrix = |rng: &mut Rng, a: usize, b: usize| {
+        Matrix::from_fn(a, b, |_, _| rng.below(256) as f64 / 8.0)
+    };
+    let ds = dom(rng);
+    let dt = dom(rng);
+    let costs_s = costs(rng, ds);
+    let costs_t = costs(rng, dt);
+    let s = p.add_vertex("s", costs_s, labels(ds));
+    let t = p.add_vertex("t", costs_t, labels(dt));
+    let m0 = matrix(rng, p.costs[s].len(), p.costs[t].len());
+    p.add_edge(s, t, m0);
+    for _ in 0..rng.range(1, 12) {
+        let eid = rng.below(p.edges.len() as u64) as usize;
+        let (u, v) = (p.edges[eid].u, p.edges[eid].v);
+        if rng.bool() {
+            // series: subdivide (u, v) with a fresh vertex
+            let dk = dom(rng);
+            let name = format!("v{}", p.n());
+            let ck = costs(rng, dk);
+            let k = p.add_vertex(&name, ck, labels(dk));
+            let m1 = matrix(rng, p.costs[u].len(), dk);
+            let m2 = matrix(rng, dk, p.costs[v].len());
+            p.edges.remove(eid);
+            p.add_edge(u, k, m1);
+            p.add_edge(k, v, m2);
+        } else {
+            // parallel: duplicate (u, v) with fresh transition costs
+            let m = matrix(rng, p.costs[u].len(), p.costs[v].len());
+            p.add_edge(u, v, m);
+        }
+    }
+    p
+}
+
+#[test]
+fn sp_solver_is_cost_optimal_on_random_sp_graphs() {
+    proptest::check("sp_solver_vs_brute_crate_surface", 128, |rng: &mut Rng| {
+        let p = random_sp_problem(rng);
+        if search_space(&p) >= (1 << 22) {
+            return Ok(()); // keep the brute-force oracle fast
+        }
+        let sol = solve_sp(&p, 0, 1)
+            .ok_or("inductively constructed SP graph judged non-series-parallel")?;
+        let brute = solve_brute(&p);
+        if (sol.cost - brute.cost).abs() > 1e-9 {
+            return Err(format!(
+                "sp solver cost {} != brute-force optimum {} on {} vertices",
+                sol.cost,
+                brute.cost,
+                p.n()
+            ));
+        }
+        let evaluated = p.evaluate(&sol.assignment);
+        if (evaluated - sol.cost).abs() > 1e-9 {
+            return Err(format!(
+                "reported cost {} != evaluated assignment cost {}",
+                sol.cost, evaluated
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sp_solver_matches_brute_on_pure_chains_and_fans() {
+    // degenerate shapes the generator rarely hits in quantity: long
+    // chains (every vertex degree ≤ 2) and wide parallel fans
+    proptest::check("sp_solver_chains_and_fans", 32, |rng: &mut Rng| {
+        let mut p = Problem::default();
+        let labels = vec!["a".to_string(), "b".to_string()];
+        let costs = |rng: &mut Rng| vec![rng.below(64) as f64 / 4.0, rng.below(64) as f64 / 4.0];
+        let c0 = costs(rng);
+        let c1 = costs(rng);
+        let s = p.add_vertex("s", c0, labels.clone());
+        let t = p.add_vertex("t", c1, labels.clone());
+        if rng.bool() {
+            // chain s - v1 - … - vk - t
+            let mut prev = s;
+            for i in 0..rng.range(1, 8) {
+                let ci = costs(rng);
+                let v = p.add_vertex(&format!("v{i}"), ci, labels.clone());
+                let m = Matrix::from_fn(2, 2, |_, _| rng.below(64) as f64 / 4.0);
+                p.add_edge(prev, v, m);
+                prev = v;
+            }
+            let m = Matrix::from_fn(2, 2, |_, _| rng.below(64) as f64 / 4.0);
+            p.add_edge(prev, t, m);
+        } else {
+            // fan: many parallel s→t edges
+            for _ in 0..rng.range(2, 9) {
+                let m = Matrix::from_fn(2, 2, |_, _| rng.below(64) as f64 / 4.0);
+                p.add_edge(s, t, m);
+            }
+        }
+        let sol = solve_sp(&p, s, t).ok_or("chain/fan judged non-SP")?;
+        let brute = solve_brute(&p);
+        if (sol.cost - brute.cost).abs() > 1e-9 {
+            return Err(format!("sp {} != brute {}", sol.cost, brute.cost));
+        }
+        Ok(())
+    });
+}

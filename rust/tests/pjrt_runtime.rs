@@ -198,12 +198,12 @@ fn fused_artifact_matches_golden() {
 }
 
 #[test]
-#[allow(deprecated)]
-fn deprecated_engine_shim_still_serves() {
-    use dynamap::coordinator::{EnginePolicy, InferenceEngine};
+fn default_session_build_serves_golden() {
+    // covers what the removed `InferenceEngine::new(dir, Optimal)` shim
+    // exercised: a default (optimal-mapping) build over AOT artifacts
     let Some(dir) = artifacts_dir() else { return };
-    let mut engine = InferenceEngine::new(&dir, EnginePolicy::Optimal).unwrap();
-    let err = engine.validate_golden().unwrap();
-    assert!(err < 1e-3, "engine shim golden max |Δ| = {err}");
-    assert!(engine.loaded_executables() > 0);
+    let mut session = Session::builder(dir.as_str()).build().unwrap();
+    let err = session.validate_golden().unwrap();
+    assert!(err < 1e-3, "default session golden max |Δ| = {err}");
+    assert!(session.loaded_executables() > 0);
 }
