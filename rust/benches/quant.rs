@@ -1,0 +1,128 @@
+//! `cargo bench` target for the quantized int8 serving path: the
+//! headline f32-vs-int8 GEMM comparison on the ROADMAP's fixed
+//! `128×96×128` shape (prints `int8 gemm speedup: N.NNx`;
+//! `DYNAMAP_BENCH_ASSERT=1` turns the ≥1.5× threshold into a hard
+//! failure), plus prepared-layer conv comparisons and an end-to-end
+//! mixed-precision `infer_batch` on mini-inception.
+//!
+//! The int8 measurements deliberately include the per-call activation
+//! quantization pass (dynamic per-tensor scale) — that is what the
+//! serving path pays — while weights are pre-quantized once, exactly
+//! like the f32 side's pre-packed `Wᵀ` panels.
+
+use std::collections::BTreeMap;
+
+use dynamap::algos::tensor::{Mat, Tensor, Weights};
+use dynamap::bench::harness::Bencher;
+use dynamap::cost::conv::Algo;
+use dynamap::graph::layer::Op;
+use dynamap::graph::zoo;
+use dynamap::kernels::{self, PackedWt, PackedWtI8, PreparedWeights, QuantMat};
+use dynamap::quant::Precision;
+use dynamap::util::parallel::parallel_map;
+use dynamap::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut rng = Rng::new(99);
+
+    // ---- the gated comparison: f32 vs int8 GEMM on 128×96×128 ----
+    let x = Mat::from_fn(128, 96, |_, _| rng.f32_range(-1.0, 1.0));
+    let w = Mat::from_fn(96, 128, |_, _| rng.f32_range(-0.5, 0.5));
+    let wt = PackedWt::pack(&w);
+    let wq = PackedWtI8::quantize(&w);
+    let f32_m = b.bench("gemm/128x96x128/f32_packed", || kernels::gemm(&x, &wt)).clone();
+    let i8_m = b
+        .bench("gemm/128x96x128/int8_quantize+qgemm", || {
+            kernels::qgemm(&QuantMat::quantize(&x), &wq)
+        })
+        .clone();
+    let speedup = f32_m.mean.as_secs_f64() / i8_m.mean.as_secs_f64();
+    println!("int8 gemm speedup: {speedup:.2}x  (target >= 1.5x)");
+
+    // ---- prepared-layer conv: f32 vs int8, im2col and kn2row ----
+    let spec = dynamap::graph::layer::ConvSpec::new(16, 32, 16, 16, 3, 3, 1, 1, 1);
+    let input = Tensor::random(16, 16, 16, &mut rng);
+    let wts = Weights::random(32, 16, 3, 3, &mut rng);
+    for algo in [Algo::Im2col, Algo::Kn2row] {
+        let f = PreparedWeights::new(&wts, &spec, algo);
+        let q = PreparedWeights::with_precision(&wts, &spec, algo, Precision::Int8, None);
+        assert_eq!(q.precision(), Precision::Int8);
+        b.bench(&format!("conv/16x16x16_3x3/{}/f32", algo.name()), || f.conv2d(&input));
+        b.bench(&format!("conv/16x16x16_3x3/{}/int8", algo.name()), || q.conv2d(&input));
+    }
+
+    // ---- end-to-end: mini-inception batch, f32 map vs mixed map ----
+    // quantize every im2col/kn2row layer, keep winograd (3×3) at f32 —
+    // the shape of plan the precision-aware DSE produces
+    let cnn = zoo::mini_inception();
+    let mut prep_f32 = BTreeMap::new();
+    let mut prep_mixed = BTreeMap::new();
+    for node in &cnn.nodes {
+        let Op::Conv(spec) = &node.op else { continue };
+        let w = Weights::random(spec.c_out, spec.c_in, spec.k1, spec.k2, &mut rng);
+        let algo = match spec.k1 {
+            3 => Algo::Winograd { m: 2, r: 3 },
+            _ => Algo::Im2col,
+        };
+        prep_f32.insert(node.name.clone(), PreparedWeights::new(&w, spec, algo));
+        prep_mixed.insert(
+            node.name.clone(),
+            PreparedWeights::with_precision(&w, spec, algo, Precision::Int8, None),
+        );
+    }
+    let n_req = 8;
+    let inputs: Vec<Tensor> =
+        (0..n_req).map(|_| Tensor::random(4, 16, 16, &mut rng)).collect();
+    let infer = |prep: &BTreeMap<String, PreparedWeights>, input: &Tensor| -> Tensor {
+        let mut values: BTreeMap<usize, Tensor> = BTreeMap::new();
+        let mut out = None;
+        for id in cnn.topo_order() {
+            let node = cnn.node(id);
+            let preds = cnn.predecessors(id);
+            let t = match &node.op {
+                Op::Input { .. } => input.clone(),
+                Op::Conv(_) => prep[&node.name].conv2d(&values[&preds[0]]),
+                Op::Pool(p) => dynamap::overlay::pooling::reference(&values[&preds[0]], p),
+                Op::Concat { c_out, h1, h2 } => {
+                    let mut data = Vec::with_capacity(c_out * h1 * h2);
+                    for &p in &preds {
+                        data.extend_from_slice(&values[&p].data);
+                    }
+                    Tensor { c: *c_out, h: *h1, w: *h2, data }
+                }
+                Op::Output => {
+                    out = Some(values[&preds[0]].clone());
+                    continue;
+                }
+                _ => unreachable!("mini-inception has no add/fc layers"),
+            };
+            values.insert(id, t);
+        }
+        out.expect("graph has an output")
+    };
+    let e2e_f32 = b
+        .bench(&format!("infer_batch/mini-inception/{n_req}req/f32"), || {
+            parallel_map(&inputs, |_, inp| infer(&prep_f32, inp))
+        })
+        .clone();
+    let e2e_mixed = b
+        .bench(&format!("infer_batch/mini-inception/{n_req}req/mixed_int8"), || {
+            parallel_map(&inputs, |_, inp| infer(&prep_mixed, inp))
+        })
+        .clone();
+    println!(
+        "mixed-precision infer_batch speedup (informational): {:.2}x",
+        e2e_f32.mean.as_secs_f64() / e2e_mixed.mean.as_secs_f64()
+    );
+
+    // enforced gate: `DYNAMAP_BENCH_ASSERT=1 cargo bench` fails the run
+    // when the int8 kernel loses its packing advantage (plain runs only
+    // report, so noisy shared runners don't flake)
+    if std::env::var("DYNAMAP_BENCH_ASSERT").is_ok() {
+        assert!(
+            speedup >= 1.5,
+            "int8 gemm speedup regressed below the 1.5x acceptance gate: {speedup:.2}x"
+        );
+    }
+}

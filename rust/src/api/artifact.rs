@@ -14,6 +14,7 @@ use super::compiler::Compiler;
 use super::error::DynamapError;
 use crate::cost::conv::{Algo, ConvCost};
 use crate::cost::gemm::Dataflow;
+use crate::quant::Precision;
 use crate::cost::graph_build::{LayerAssignment, MappingResult};
 use crate::dse::Plan;
 use crate::graph::Cnn;
@@ -37,8 +38,10 @@ pub struct PlanArtifact {
 
 impl PlanArtifact {
     /// Current schema version; [`PlanArtifact::from_json`] rejects
-    /// artifacts written by a newer schema.
-    pub const SCHEMA_VERSION: u64 = 1;
+    /// artifacts written by a newer schema. Version history:
+    /// 1 — initial staged-API schema; 2 — per-layer `precision` on
+    /// every cost entry (older artifacts read back as all-f32).
+    pub const SCHEMA_VERSION: u64 = 2;
     const SCHEMA_NAME: &'static str = "dynamap.plan-artifact";
 
     /// Wrap a freshly compiled [`Plan`] at the current schema version.
@@ -88,7 +91,7 @@ impl PlanArtifact {
             model: req_str(j, "model")?,
             device: req_str(j, "device")?,
             fingerprint: req_str(j, "fingerprint")?,
-            plan: plan_from_json(j.get("plan"))?,
+            plan: plan_from_json(j.get("plan"), version)?,
         })
     }
 
@@ -231,6 +234,7 @@ fn cost_to_json(c: &ConvCost) -> Json {
     let (a, b, cc, calls) = c.gemm;
     Json::obj(vec![
         ("algo", algo_to_json(c.algo)),
+        ("precision", Json::str(c.precision.name())),
         ("dataflow", Json::str(c.dataflow.name())),
         ("cycles", Json::num(c.cycles as f64)),
         ("seconds", Json::num(c.seconds)),
@@ -248,7 +252,22 @@ fn cost_to_json(c: &ConvCost) -> Json {
     ])
 }
 
-fn cost_from_json(j: &Json) -> Result<ConvCost, DynamapError> {
+fn precision_from_json(j: &Json, version: u64) -> Result<Precision, DynamapError> {
+    match j.get("precision").as_str() {
+        // only schema version 1 artifacts — which predate the precision
+        // axis and are all-f32 by construction — may omit the key; a
+        // v2 artifact without it is corrupt, not implicitly f32
+        None if version < 2 => Ok(Precision::F32),
+        None => Err(bad("precision")),
+        Some("f32") => Ok(Precision::F32),
+        Some("int8") => Ok(Precision::Int8),
+        Some(other) => {
+            Err(DynamapError::Artifact(format!("unknown precision '{other}'")))
+        }
+    }
+}
+
+fn cost_from_json(j: &Json, version: u64) -> Result<ConvCost, DynamapError> {
     let g = j.get("gemm");
     let gemm = (
         g.at(0).as_usize().ok_or_else(|| bad("gemm[0]"))?,
@@ -258,6 +277,7 @@ fn cost_from_json(j: &Json) -> Result<ConvCost, DynamapError> {
     );
     Ok(ConvCost {
         algo: algo_from_json(j.get("algo"))?,
+        precision: precision_from_json(j, version)?,
         dataflow: dataflow_from_str(
             j.get("dataflow").as_str().ok_or_else(|| bad("dataflow"))?,
         )?,
@@ -293,7 +313,7 @@ fn mapping_to_json(m: &MappingResult) -> Json {
     ])
 }
 
-fn mapping_from_json(j: &Json) -> Result<MappingResult, DynamapError> {
+fn mapping_from_json(j: &Json, version: u64) -> Result<MappingResult, DynamapError> {
     let assignment = j
         .get("assignment")
         .as_arr()
@@ -306,7 +326,7 @@ fn mapping_from_json(j: &Json) -> Result<MappingResult, DynamapError> {
         layers.push(LayerAssignment {
             node: req_usize(lj, "node")?,
             name: req_str(lj, "name")?,
-            cost: cost_from_json(lj.get("cost"))?,
+            cost: cost_from_json(lj.get("cost"), version)?,
         });
     }
     Ok(MappingResult {
@@ -330,7 +350,7 @@ fn plan_to_json(p: &Plan) -> Json {
     ])
 }
 
-fn plan_from_json(j: &Json) -> Result<Plan, DynamapError> {
+fn plan_from_json(j: &Json, version: u64) -> Result<Plan, DynamapError> {
     Ok(Plan {
         cnn_name: req_str(j, "cnn")?,
         p1: req_usize(j, "p1")?,
@@ -338,7 +358,7 @@ fn plan_from_json(j: &Json) -> Result<Plan, DynamapError> {
         tau_sec: req_f64(j, "tau_sec")?,
         total_latency_ms: req_f64(j, "latency_ms")?,
         throughput_gops: req_f64(j, "throughput_gops")?,
-        mapping: mapping_from_json(j.get("mapping"))?,
+        mapping: mapping_from_json(j.get("mapping"), version)?,
     })
 }
 
@@ -387,6 +407,51 @@ mod tests {
 
     // (on-disk save/load round-trip is covered at the crate surface in
     // rust/tests/dse_pipeline.rs::plan_artifact_roundtrip_and_cache)
+
+    #[test]
+    fn version1_artifacts_read_back_as_all_f32() {
+        // schema v1 predates the precision axis: strip every
+        // "precision" key and mark the artifact v1 — it must parse,
+        // with every layer cost defaulting to f32
+        let a = compile_mini();
+        let mut j = a.to_json();
+        fn strip(j: &mut Json) {
+            match j {
+                Json::Obj(m) => {
+                    m.remove("precision");
+                    for v in m.values_mut() {
+                        strip(v);
+                    }
+                }
+                Json::Arr(v) => {
+                    for x in v.iter_mut() {
+                        strip(x);
+                    }
+                }
+                _ => {}
+            }
+        }
+        strip(&mut j);
+        // same stripped payload at version 2: corrupt, not implicitly f32
+        let e = PlanArtifact::from_json(&j).unwrap_err();
+        assert!(matches!(e, DynamapError::Artifact(_)), "{e}");
+        if let Json::Obj(m) = &mut j {
+            m.insert("version".into(), Json::num(1.0));
+        }
+        let b = PlanArtifact::from_json(&j).unwrap();
+        assert_eq!(b.version, 1);
+        assert!(!b.plan.mapping.layers.is_empty());
+        assert!(b
+            .plan
+            .mapping
+            .layers
+            .iter()
+            .all(|l| l.cost.precision == Precision::F32));
+        // and an explicit unknown precision is a typed error
+        let text = a.to_json().pretty().replace("\"f32\"", "\"int4\"");
+        let e = PlanArtifact::from_json(&Json::parse(&text).unwrap()).unwrap_err();
+        assert!(matches!(e, DynamapError::Artifact(_)), "{e}");
+    }
 
     #[test]
     fn rejects_future_schema_and_garbage() {

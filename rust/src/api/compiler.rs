@@ -22,6 +22,30 @@ use crate::graph::Cnn;
 
 /// The offline compiler: device + model hyper-parameters + mapping
 /// policy, evaluated once into a [`PlanArtifact`].
+///
+/// The README's library quickstart, as a compiled example — run the
+/// DSE once, persist the versioned plan, reuse it across processes:
+///
+/// ```no_run
+/// use dynamap::api::Compiler;
+/// use dynamap::graph::zoo;
+///
+/// // offline: run the DSE once (Algorithm 1 + cost graph + PBQP) …
+/// let artifact = Compiler::new().compile(&zoo::googlenet())?;
+/// println!(
+///     "P_SA = {}×{}, latency = {:.3} ms",
+///     artifact.plan.p1, artifact.plan.p2, artifact.plan.total_latency_ms
+/// );
+/// // … and persist the versioned artifact for later sessions
+/// artifact.save("plans/googlenet.json")?;
+///
+/// // opt into the precision axis: the DSE may map layers to int8
+/// let quantized = Compiler::new()
+///     .precision_search(true)
+///     .compile(&zoo::googlenet())?;
+/// println!("{:?}", quantized.plan.algo_histogram());
+/// # Ok::<(), dynamap::api::DynamapError>(())
+/// ```
 #[derive(Debug, Clone)]
 pub struct Compiler {
     config: DseConfig,
@@ -88,6 +112,20 @@ impl Compiler {
     /// Enable the strided-Winograd future-work extension (§7).
     pub fn strided_winograd(mut self, on: bool) -> Compiler {
         self.config.strided_winograd = on;
+        self
+    }
+
+    /// Search precision as a second mapping dimension: each conv
+    /// vertex's PBQP domain widens from {algorithm × dataflow} to
+    /// {algorithm × dataflow × precision}, with int8 choices priced at
+    /// the device's DSP-packing throughput
+    /// ([`Device::int8_macs_per_dsp`]), requantization costs on edges
+    /// whose endpoints disagree, and Winograd constrained to f32 (see
+    /// [`crate::quant`]). Off by default because quantization changes
+    /// numerics; plans compiled either way never collide in a
+    /// [`super::PlanCache`] — the flag is part of the fingerprint.
+    pub fn precision_search(mut self, on: bool) -> Compiler {
+        self.config.precision_search = on;
         self
     }
 
@@ -179,7 +217,7 @@ impl Compiler {
             Some((p1, p2)) => format!("{p1}x{p2}"),
         };
         let desc = format!(
-            "{}|{}|{}|{}|{}|{}|{}|{}|wino{}x{}|strided{}|df{}|owl{}|fuse{}|p1[{},{}]|{}|cal{}|{}",
+            "{}|{}|{}|{}|{}|{}|{}|pack{}|{}|wino{}x{}|strided{}|prec{}|df{}|owl{}|fuse{}|p1[{},{}]|{}|cal{}|{}",
             d.name,
             d.dsp_cap,
             d.freq_mhz,
@@ -187,10 +225,12 @@ impl Compiler {
             d.burst_len,
             d.sram_bytes,
             d.pool_units,
+            d.int8_macs_per_dsp,
             policy,
             c.wino_m,
             c.wino_r,
             c.strided_winograd,
+            c.precision_search,
             df,
             c.opts.overlap_weight_load,
             c.opts.sram_fuse,
@@ -372,6 +412,8 @@ mod tests {
                 .calibration(DeviceCalibration::default().with("kn2row", 2.0, 0.0))
                 .fingerprint()
         );
+        // precision search keys a distinct plan-cache entry too
+        assert_ne!(base.fingerprint(), Compiler::new().precision_search(true).fingerprint());
         assert_eq!(
             base.fingerprint(),
             Compiler::new().calibration(DeviceCalibration::identity()).fingerprint(),

@@ -47,6 +47,7 @@ use crate::graph::layer::{ConvSpec, Op};
 use crate::graph::{zoo, Cnn};
 use crate::kernels::PreparedWeights;
 use crate::overlay::pooling;
+use crate::quant::{self, ActScales, Precision};
 use crate::runtime::{Manifest, PjrtRuntime, TensorBuf};
 use crate::tune::profiler::LayerProfile;
 use crate::util::parallel::parallel_map;
@@ -89,6 +90,7 @@ pub struct SessionBuilder {
     cache_dir: Option<PathBuf>,
     backend: Backend,
     profiler: Option<Arc<LayerProfile>>,
+    act_scales: Option<ActScales>,
 }
 
 impl SessionBuilder {
@@ -106,9 +108,22 @@ impl SessionBuilder {
     }
 
     /// Skip the DSE entirely and use an explicit per-layer
-    /// `layer name → algorithm name` map.
+    /// `layer name → algorithm name` map. Values are family names
+    /// ("im2col", "kn2row", "winograd"), optionally precision-suffixed
+    /// ("im2col-int8") to serve that layer quantized on the native
+    /// backend (see [`crate::quant::mapped_name`]).
     pub fn algo_map(mut self, map: BTreeMap<String, String>) -> SessionBuilder {
         self.custom_map = Some(map);
+        self
+    }
+
+    /// Calibrated per-tensor activation scales for quantized layers
+    /// ([`crate::quant::ActScales`], produced by
+    /// [`NativeState::calibrate_activations`]). Layers without a
+    /// calibrated scale quantize dynamically from each request's own
+    /// magnitude; f32 layers ignore the scales entirely.
+    pub fn act_scales(mut self, scales: ActScales) -> SessionBuilder {
+        self.act_scales = Some(scales);
         self
     }
 
@@ -156,6 +171,7 @@ impl SessionBuilder {
             cache_dir,
             backend,
             profiler,
+            act_scales,
         } = self;
         if custom_map.is_some() && (plan.is_some() || cache_dir.is_some()) {
             return Err(DynamapError::Config(
@@ -198,12 +214,13 @@ impl SessionBuilder {
                 .layers
                 .iter()
                 .map(|l| {
-                    let algo = match l.cost.algo {
-                        Algo::Im2col => "im2col",
-                        Algo::Kn2row => "kn2row",
-                        Algo::Winograd { .. } | Algo::WinogradStrided { .. } => "winograd",
-                    };
-                    (l.name.clone(), algo.to_string())
+                    // plan entries carry (family, precision); the map
+                    // spells the pair the serving-layer way, e.g.
+                    // "im2col-int8" (see crate::quant::mapped_name)
+                    (
+                        l.name.clone(),
+                        quant::mapped_name(l.cost.algo.family(), l.cost.precision),
+                    )
                 })
                 .collect(),
             (None, None) => unreachable!("plan or custom map is always resolved"),
@@ -220,33 +237,50 @@ impl SessionBuilder {
         let mut prepared = BTreeMap::new();
         for layer in &manifest.layers {
             let want = algo_map.get(&layer.name).map(|s| s.as_str()).unwrap_or("im2col");
-            let algo = match &mut runtime {
-                Some(rt) => {
-                    // PJRT: clamp to the algorithms that were AOT'd
-                    let algo = if layer.algos.contains_key(want) { want } else { "im2col" };
-                    let art = layer.algos.get(algo).ok_or_else(|| {
-                        DynamapError::Manifest(format!(
-                            "{}: no artifact for {algo}",
-                            layer.name
-                        ))
-                    })?;
-                    rt.load(&manifest.dir.join(art))?;
-                    algo
-                }
-                None => {
-                    // native: every kernel-layer algorithm is available
-                    if ["im2col", "kn2row", "winograd"].contains(&want) {
-                        want
-                    } else {
-                        "im2col"
-                    }
-                }
-            };
-            clamped.insert(layer.name.clone(), algo.to_string());
+            let (want_family, want_precision) = quant::parse_mapped(want);
             let spec = ConvSpec::new(
                 layer.c_in, layer.c_out, layer.h1, layer.h2, layer.k1, layer.k2, layer.s,
                 layer.p1, layer.p2,
             );
+            let (family, precision) = match &mut runtime {
+                Some(rt) => {
+                    // PJRT: clamp to the algorithms that were AOT'd —
+                    // the executables are f32, so any requested int8
+                    // clamps back to full precision
+                    let family = if layer.algos.contains_key(want_family) {
+                        want_family
+                    } else {
+                        "im2col"
+                    };
+                    let art = layer.algos.get(family).ok_or_else(|| {
+                        DynamapError::Manifest(format!(
+                            "{}: no artifact for {family}",
+                            layer.name
+                        ))
+                    })?;
+                    rt.load(&manifest.dir.join(art))?;
+                    (family, Precision::F32)
+                }
+                None => {
+                    // native: every kernel-layer algorithm is
+                    // available; int8 applies to im2col/kn2row only
+                    // (winograd clamps to f32, mirroring the DSE's
+                    // constraint and PreparedWeights::with_precision)
+                    let family = if ["im2col", "kn2row", "winograd"].contains(&want_family)
+                    {
+                        want_family
+                    } else {
+                        "im2col"
+                    };
+                    let algo = resolve_algo(family, &spec);
+                    let precision = match (want_precision, algo) {
+                        (Precision::Int8, Algo::Im2col | Algo::Kn2row) => Precision::Int8,
+                        _ => Precision::F32,
+                    };
+                    (family, precision)
+                }
+            };
+            clamped.insert(layer.name.clone(), quant::mapped_name(family, precision));
             let wts = Weights {
                 c_out: layer.c_out,
                 c_in: layer.c_in,
@@ -259,9 +293,18 @@ impl SessionBuilder {
             // PJRT feeds raw tensors to its executables
             match backend {
                 Backend::Native => {
+                    let scale = act_scales
+                        .as_ref()
+                        .and_then(|s| s.scale_for(&layer.name));
                     prepared.insert(
                         layer.name.clone(),
-                        PreparedWeights::new(&wts, &spec, resolve_algo(algo, &spec)),
+                        PreparedWeights::with_precision(
+                            &wts,
+                            &spec,
+                            resolve_algo(family, &spec),
+                            precision,
+                            scale,
+                        ),
                     );
                 }
                 Backend::Pjrt => {
@@ -419,10 +462,56 @@ impl NativeState {
         self.profiler.as_ref()
     }
 
+    /// The precision each conv/FC layer actually executes with (after
+    /// any clamping at build time).
+    pub fn precision(&self, layer: &str) -> Option<Precision> {
+        self.prepared.get(layer).map(|pw| pw.precision())
+    }
+
+    /// How many layers execute quantized.
+    pub fn int8_count(&self) -> usize {
+        self.prepared.values().filter(|pw| pw.precision() == Precision::Int8).count()
+    }
+
+    /// Calibrate per-tensor activation scales from a handful of
+    /// representative batches: run each input through this state,
+    /// recording every conv/FC layer's input-magnitude high-water mark.
+    /// Feed the result to [`SessionBuilder::act_scales`] (or persist it
+    /// with [`ActScales::save`]) so quantized layers use deterministic
+    /// calibrated scales instead of per-request dynamic ones.
+    ///
+    /// Calibration observes the f32 activations *entering* each layer,
+    /// so it works on an f32 state (the usual flow: calibrate first,
+    /// then build the quantized session) as well as on a mixed one.
+    pub fn calibrate_activations(
+        &self,
+        batches: &[TensorBuf],
+    ) -> Result<ActScales, DynamapError> {
+        let mut scales = ActScales::new();
+        for input in batches {
+            let mut observe = |layer: &str, data: &[f32]| {
+                scales.observe(layer, quant::max_abs(data));
+            };
+            self.infer_observed(input, Some(&mut observe))?;
+        }
+        Ok(scales)
+    }
+
     /// One request through the CNN graph with conv (and FC) layers
     /// executed by the kernel layer. Takes `&self` over immutable data,
     /// so a parallel batch can fan it out across threads.
     pub fn infer(&self, input: &TensorBuf) -> Result<(TensorBuf, InferMetrics), DynamapError> {
+        self.infer_observed(input, None)
+    }
+
+    /// [`NativeState::infer`] with an optional observer called with
+    /// each conv/FC layer's name and input activation before the layer
+    /// executes (the calibration hook; `None` on the serving hot path).
+    fn infer_observed(
+        &self,
+        input: &TensorBuf,
+        mut observe: Option<&mut dyn FnMut(&str, &[f32])>,
+    ) -> Result<(TensorBuf, InferMetrics), DynamapError> {
         let cnn = &self.cnn;
         let t_total = Instant::now();
         let mut per_layer = Vec::new();
@@ -451,6 +540,9 @@ impl NativeState {
                             node.name
                         ))
                     })?;
+                    if let Some(obs) = observe.as_mut() {
+                        obs(&node.name, &values[&preds[0]].data);
+                    }
                     let t0 = Instant::now();
                     let out = pw.conv2d(&values[&preds[0]]);
                     per_layer.push((
@@ -495,6 +587,9 @@ impl NativeState {
                         });
                     }
                     let flat = Tensor { c: *c_in, h: 1, w: 1, data: x.data.clone() };
+                    if let Some(obs) = observe.as_mut() {
+                        obs(&node.name, &flat.data);
+                    }
                     let t0 = Instant::now();
                     let out = pw.conv2d(&flat);
                     debug_assert_eq!(out.c, *c_out);
@@ -598,6 +693,7 @@ impl Session {
             cache_dir: None,
             backend: Backend::Pjrt,
             profiler: None,
+            act_scales: None,
         }
     }
 

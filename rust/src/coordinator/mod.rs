@@ -1,10 +1,10 @@
 //! L3 coordinator: latency accounting + the simulation/inference CLI.
 //!
 //! The end-to-end serving implementation lives in
-//! [`crate::api::Session`] (the 0.1 `InferenceEngine`/`EnginePolicy`
-//! shims have been removed; `Session::builder` with `.policy(..)` /
-//! `.algo_map(..)` covers their call shapes).
-//! [`metrics::LatencyStats`] is shared with the staged API.
+//! [`crate::api::Session`] — build one with `Session::builder`, using
+//! `.policy(..)` for fixed-baseline mappings or `.algo_map(..)` for an
+//! explicit per-layer map. [`metrics::LatencyStats`] is shared with
+//! the staged API.
 
 pub mod metrics;
 pub mod cli;

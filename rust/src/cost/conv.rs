@@ -4,6 +4,7 @@
 use super::device::{Device, DeviceCalibration};
 use super::gemm::{self, Dataflow};
 use crate::graph::layer::ConvSpec;
+use crate::quant::Precision;
 
 /// A GEMM-based convolution algorithm (paper §2.1). `Winograd { m, r }`
 /// is the F(m×m, r×r) minimal-filtering variant; the paper evaluates
@@ -12,13 +13,29 @@ use crate::graph::layer::ConvSpec;
 /// 4 stride-1 sub-convolutions.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Algo {
+    /// Toeplitz lowering: one large GEMM (Eq. 10).
     Im2col,
+    /// Per-tap unit GEMMs + pad-and-accumulate (Eq. 11).
     Kn2row,
-    Winograd { m: usize, r: usize },
-    WinogradStrided { m: usize, r: usize },
+    /// Minimal-filtering `F(m×m, r×r)` in transform space (Eq. 12).
+    Winograd {
+        /// Output tile size per axis.
+        m: usize,
+        /// Kernel tile size per axis.
+        r: usize,
+    },
+    /// §7 future-work extension: stride-2 square kernels via channel
+    /// splitting into 4 stride-1 sub-convolutions.
+    WinogradStrided {
+        /// Output tile size per axis.
+        m: usize,
+        /// Kernel tile size per axis.
+        r: usize,
+    },
 }
 
 impl Algo {
+    /// Full display name, including Winograd tile parameters.
     pub fn name(&self) -> String {
         match self {
             Algo::Im2col => "im2col".into(),
@@ -53,12 +70,28 @@ impl Algo {
         }
         v
     }
+
+    /// Precisions this algorithm can execute with: im2col and kn2row
+    /// quantize to int8; Winograd (and the strided extension) stays
+    /// f32 because its transform-space arithmetic amplifies
+    /// quantization error — the kernel layer enforces the same clamp.
+    pub fn precisions(&self) -> &'static [Precision] {
+        match self {
+            Algo::Im2col | Algo::Kn2row => &Precision::ALL,
+            Algo::Winograd { .. } | Algo::WinogradStrided { .. } => &[Precision::F32],
+        }
+    }
 }
 
-/// Fully-evaluated cost of one (layer, algorithm, dataflow) triple.
+/// Fully-evaluated cost of one (layer, algorithm, precision, dataflow)
+/// tuple.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ConvCost {
+    /// Algorithm the cost was evaluated for.
     pub algo: Algo,
+    /// Arithmetic precision (int8 runs on the DSP-packed array).
+    pub precision: Precision,
+    /// Best (or forced) systolic dataflow.
     pub dataflow: Dataflow,
     /// Total systolic-array busy cycles (compute only).
     pub cycles: u64,
@@ -67,7 +100,8 @@ pub struct ConvCost {
     /// MACs the algorithm actually performs (Winograd performs fewer
     /// "pixel" MACs but in transform space).
     pub macs: u64,
-    /// Effective PE utilization μ (Eq. 14).
+    /// Effective PE utilization μ (Eq. 14); for int8 the denominator
+    /// counts the packed MAC capacity (`P1 · P2 · int8_macs_per_dsp`).
     pub utilization: f64,
     /// GEMM dims fed to the array, for reporting: (a, b, c, calls).
     pub gemm: (usize, usize, usize, usize),
@@ -77,15 +111,26 @@ pub struct ConvCost {
 /// stall-free-PE switch (naive mode exists for the ablation bench).
 #[derive(Debug, Clone)]
 pub struct CostModel {
+    /// Target device meta data.
     pub device: Device,
+    /// Winograd output tile size `m` of `F(m×m, r×r)`.
     pub wino_m: usize,
+    /// Winograd kernel tile size `r` of `F(m×m, r×r)`.
     pub wino_r: usize,
+    /// Use the §3.2 stall-free PE (one `I_SA` per GEMM instead of one
+    /// per pass).
     pub stall_free: bool,
     /// Enable the strided-Winograd future-work extension.
     pub strided_winograd: bool,
     /// Restrict every layer to one dataflow (the Figs. 9/10 `bl1`/`bl2`
     /// NS-only baselines disable the §3.2 dataflow optimization).
     pub force_dataflow: Option<Dataflow>,
+    /// Search int8 beside f32 per layer: [`CostModel::layer_options`]
+    /// widens each conv domain from {algorithm} to
+    /// {algorithm × precision}. Off by default — quantization changes
+    /// numerics, so the precision axis is an explicit opt-in
+    /// ([`crate::api::Compiler::precision_search`]).
+    pub precision_search: bool,
     /// Profile-fitted per-algorithm correction applied to every
     /// latency this model reports (identity by default). Fitted by
     /// `tune::calibrate` from observed per-layer latencies so the DSE
@@ -94,6 +139,8 @@ pub struct CostModel {
 }
 
 impl CostModel {
+    /// A cost model over `device` with the paper's defaults
+    /// (`F(2×2, 3×3)`, stall-free PEs, f32-only mapping).
     pub fn new(device: Device) -> CostModel {
         CostModel {
             device,
@@ -102,6 +149,7 @@ impl CostModel {
             stall_free: true,
             strided_winograd: false,
             force_dataflow: None,
+            precision_search: false,
             calibration: DeviceCalibration::identity(),
         }
     }
@@ -155,17 +203,30 @@ impl CostModel {
         (tiles.div_ceil(p1) + (m + r - 1)) as u64
     }
 
-    /// Evaluate one (layer, algorithm, dataflow): Eq. 10–12 + Eq. 14.
-    pub fn conv_cost(
+    /// DSP-packing factor a precision runs the array at.
+    fn packing(&self, precision: Precision) -> usize {
+        match precision {
+            Precision::F32 => 1,
+            Precision::Int8 => self.device.int8_macs_per_dsp.max(1),
+        }
+    }
+
+    /// Evaluate one (layer, algorithm, precision, dataflow):
+    /// Eq. 10–12 + Eq. 14, with int8 priced as a
+    /// `P_SA1 × (P_SA2 · int8_macs_per_dsp)` array on the same DSP
+    /// budget (DSP packing).
+    pub fn conv_cost_at(
         &self,
         spec: &ConvSpec,
         algo: Algo,
+        precision: Precision,
         df: Dataflow,
         p1: usize,
         p2: usize,
     ) -> ConvCost {
+        let packing = self.packing(precision);
         let (a, b, c, calls) = self.gemm_dims(spec, algo);
-        let per_call = self.gemm_cycles(p1, p2, df, a, b, c);
+        let per_call = self.gemm_cycles(p1, p2 * packing, df, a, b, c);
         let lt = match algo {
             Algo::Winograd { m, r } | Algo::WinogradStrided { m, r } => {
                 self.lt_cycles(p1, a, m, r)
@@ -174,16 +235,23 @@ impl CostModel {
         };
         let cycles = (per_call + lt) * calls as u64;
         let macs = gemm::gemm_macs(a, b, c) * calls as u64;
-        let pes = (p1 * p2) as f64;
+        let pes = (p1 * p2 * packing) as f64;
         // `cycles` stays the raw analytic count (it also feeds Eq. 14);
         // the calibration corrects the wall-clock estimate only, so a
         // family-uniform affine fit never reorders dataflows within a
-        // family but does reorder algorithms against each other
+        // family but does reorder algorithms against each other. The
+        // calibration key carries the precision ("im2col" vs
+        // "im2col-int8"): a host's int8 observed/analytic ratio differs
+        // systematically from its f32 one, so the two regimes must
+        // never pool into one fit. f32 keys are the bare family name,
+        // keeping every pre-quantization calibration bit-identical.
+        let key = crate::quant::mapped_name(algo.family(), precision);
         let seconds = self
             .calibration
-            .apply(algo.family(), cycles as f64 * self.device.cycle_time());
+            .apply(&key, cycles as f64 * self.device.cycle_time());
         ConvCost {
             algo,
+            precision,
             dataflow: df,
             cycles,
             seconds,
@@ -193,26 +261,62 @@ impl CostModel {
         }
     }
 
-    /// Best dataflow for a (layer, algorithm) pair on a fixed array —
-    /// the inner loop of Algorithm 1 (lines 7–9). Honours
-    /// `force_dataflow` for the NS-only baselines.
-    pub fn best_conv_cost(&self, spec: &ConvSpec, algo: Algo, p1: usize, p2: usize) -> ConvCost {
+    /// [`CostModel::conv_cost_at`] at f32 — the pre-quantization call
+    /// shape, kept for the overlay simulator and figure code.
+    pub fn conv_cost(
+        &self,
+        spec: &ConvSpec,
+        algo: Algo,
+        df: Dataflow,
+        p1: usize,
+        p2: usize,
+    ) -> ConvCost {
+        self.conv_cost_at(spec, algo, Precision::F32, df, p1, p2)
+    }
+
+    /// Best dataflow for a (layer, algorithm, precision) tuple on a
+    /// fixed array — the inner loop of Algorithm 1 (lines 7–9).
+    /// Honours `force_dataflow` for the NS-only baselines.
+    pub fn best_conv_cost_at(
+        &self,
+        spec: &ConvSpec,
+        algo: Algo,
+        precision: Precision,
+        p1: usize,
+        p2: usize,
+    ) -> ConvCost {
         if let Some(df) = self.force_dataflow {
-            return self.conv_cost(spec, algo, df, p1, p2);
+            return self.conv_cost_at(spec, algo, precision, df, p1, p2);
         }
         Dataflow::ALL
             .iter()
-            .map(|&df| self.conv_cost(spec, algo, df, p1, p2))
+            .map(|&df| self.conv_cost_at(spec, algo, precision, df, p1, p2))
             .min_by(|x, y| x.cycles.cmp(&y.cycles))
             .unwrap()
     }
 
-    /// All available algorithms with their best dataflow for a layer.
+    /// [`CostModel::best_conv_cost_at`] at f32.
+    pub fn best_conv_cost(&self, spec: &ConvSpec, algo: Algo, p1: usize, p2: usize) -> ConvCost {
+        self.best_conv_cost_at(spec, algo, Precision::F32, p1, p2)
+    }
+
+    /// All available (algorithm, precision) choices with their best
+    /// dataflow for a layer — the PBQP vertex domain. Without
+    /// `precision_search` only the f32 entries are produced (the
+    /// pre-quantization domain, bit-identical costs). With it, each
+    /// quantizable algorithm contributes an int8 entry after its f32
+    /// one, so exact ties keep full precision.
     pub fn layer_options(&self, spec: &ConvSpec, p1: usize, p2: usize) -> Vec<ConvCost> {
-        Algo::available(spec, self.wino_m, self.wino_r, self.strided_winograd)
-            .into_iter()
-            .map(|algo| self.best_conv_cost(spec, algo, p1, p2))
-            .collect()
+        let mut out = Vec::new();
+        for algo in Algo::available(spec, self.wino_m, self.wino_r, self.strided_winograd) {
+            for &precision in algo.precisions() {
+                if precision != Precision::F32 && !self.precision_search {
+                    continue;
+                }
+                out.push(self.best_conv_cost_at(spec, algo, precision, p1, p2));
+            }
+        }
+        out
     }
 
     /// Compute-and-memory load summary used by Fig. 1: returns
@@ -359,6 +463,47 @@ mod tests {
         assert_eq!(cal_im.seconds, base_im.seconds, "other families untouched");
         assert_eq!(cal_kn.cycles, base_kn.cycles, "raw cycle count is preserved");
         assert_eq!(cal_kn.dataflow, base_kn.dataflow, "uniform fit keeps the dataflow");
+    }
+
+    #[test]
+    fn int8_packing_never_slower_and_utilization_bounded() {
+        let m = model();
+        let spec = layer_3x3();
+        for algo in [Algo::Im2col, Algo::Kn2row] {
+            let f = m.best_conv_cost_at(&spec, algo, Precision::F32, 92, 66);
+            let q = m.best_conv_cost_at(&spec, algo, Precision::Int8, 92, 66);
+            assert!(q.cycles <= f.cycles, "{algo:?}: int8 {} > f32 {}", q.cycles, f.cycles);
+            assert!(q.utilization > 0.0 && q.utilization <= 1.0 + 1e-12, "{q:?}");
+            assert_eq!(q.precision, Precision::Int8);
+            assert_eq!(f.precision, Precision::F32);
+        }
+        // a wide layer sees close to the full 2x packing win
+        let wide = ConvSpec::new(64, 256, 28, 28, 3, 3, 1, 1, 1);
+        let f = m.best_conv_cost_at(&wide, Algo::Im2col, Precision::F32, 64, 64);
+        let q = m.best_conv_cost_at(&wide, Algo::Im2col, Precision::Int8, 64, 64);
+        let ratio = f.cycles as f64 / q.cycles as f64;
+        assert!((1.6..=2.1).contains(&ratio), "packing ratio {ratio}");
+    }
+
+    #[test]
+    fn precision_search_widens_the_domain_f32_first() {
+        let mut m = model();
+        let spec = layer_3x3();
+        let base = m.layer_options(&spec, 32, 32);
+        assert_eq!(base.len(), 3, "f32-only domain: one entry per algorithm");
+        assert!(base.iter().all(|c| c.precision == Precision::F32));
+        m.precision_search = true;
+        let wide = m.layer_options(&spec, 32, 32);
+        // im2col and kn2row gain an int8 entry; winograd stays f32-only
+        assert_eq!(wide.len(), 5);
+        assert!(wide
+            .iter()
+            .all(|c| !matches!(c.algo, Algo::Winograd { .. }) || c.precision == Precision::F32));
+        for pair in wide.chunks(2).take(2) {
+            assert_eq!(pair[0].algo, pair[1].algo);
+            assert_eq!(pair[0].precision, Precision::F32, "f32 precedes int8 per algo");
+            assert_eq!(pair[1].precision, Precision::Int8);
+        }
     }
 
     #[test]

@@ -10,9 +10,10 @@ use std::collections::BTreeMap;
 /// datapath the paper evaluates (1 byte / element).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Device {
+    /// Device name (keys plan-cache entries and reports).
     pub name: String,
     /// PE budget for the systolic array. The paper caps DSP consumption
-    /// at 6084 for fairness; with INT8 one PE maps to one DSP.
+    /// at 6084 for fairness; at full precision one PE maps to one DSP.
     pub dsp_cap: usize,
     /// Accelerator clock in MHz (paper achieves 286 MHz on the U200).
     pub freq_mhz: f64,
@@ -25,6 +26,13 @@ pub struct Device {
     pub sram_bytes: usize,
     /// Parallel pooling units (§3.4 "array of PUs").
     pub pool_units: usize,
+    /// DSP packing factor for int8 layers: MACs one DSP slice performs
+    /// per cycle on the quantized datapath (2 on DSP48-class slices —
+    /// two int8 multiplies share the wide operand port). The cost model
+    /// prices a [`crate::quant::Precision::Int8`] choice as a
+    /// `P_SA1 × (P_SA2 · int8_macs_per_dsp)` array on the same DSP
+    /// budget; f32 choices always run at 1 MAC/DSP.
+    pub int8_macs_per_dsp: usize,
 }
 
 impl Device {
@@ -44,6 +52,7 @@ impl Device {
             burst_len: 64,
             sram_bytes: 2 << 20,
             pool_units: 64,
+            int8_macs_per_dsp: 2,
         }
     }
 
@@ -58,6 +67,7 @@ impl Device {
             burst_len: 32,
             sram_bytes: 2 << 20,
             pool_units: 16,
+            int8_macs_per_dsp: 2,
         }
     }
 
@@ -113,9 +123,12 @@ impl Default for AlgoFit {
 }
 
 /// Profile-fitted correction of a [`Device`]'s analytic cost model:
-/// one [`AlgoFit`] per algorithm family (keyed by
-/// [`super::Algo::family`] — "im2col", "kn2row", "winograd"), plus a
-/// fallback fit for families without observations.
+/// one [`AlgoFit`] per algorithm family and precision (keyed by
+/// [`crate::quant::mapped_name`] — "im2col", "kn2row", "winograd" for
+/// f32, "im2col-int8"/"kn2row-int8" for quantized layers, which fit
+/// separately because a host's int8 observed/analytic ratio differs
+/// systematically from its f32 one), plus a fallback fit for keys
+/// without observations.
 ///
 /// The default value is the identity (every family served verbatim by
 /// the analytic model), so an uncalibrated pipeline behaves exactly as

@@ -26,8 +26,10 @@ pub enum Dataflow {
 }
 
 impl Dataflow {
+    /// All three dataflows, in the tie-breaking order `NS < WS < IS`.
     pub const ALL: [Dataflow; 3] = [Dataflow::NS, Dataflow::WS, Dataflow::IS];
 
+    /// Stable display name ("NS" / "WS" / "IS").
     pub fn name(&self) -> &'static str {
         match self {
             Dataflow::NS => "NS",

@@ -9,7 +9,11 @@
 //!
 //! Node costs are Eq. 10–12 latencies (overlapped with the layer's
 //! weight streaming when `overlap_weight_load` is set); edge matrices
-//! are the Table-2 store+load transition latencies.
+//! are the Table-2 store+load transition latencies, plus a
+//! requantization pass ([`TransitionModel::requant_sec`]) whenever the
+//! two endpoints run at different precisions — that term is what
+//! couples neighbouring precision choices into the PBQP solve instead
+//! of leaving precision a per-layer greedy pick.
 
 use std::collections::BTreeMap;
 
@@ -19,18 +23,43 @@ use crate::graph::layer::{Op, PoolKind};
 use crate::graph::{Cnn, NodeId};
 use crate::pbqp::{solve_brute, solve_sp, Matrix, Problem, Solution};
 use crate::pbqp::brute::search_space;
+use crate::quant::Precision;
 use crate::util::parallel::parallel_map;
 
 /// One entry of a PBQP vertex domain.
 #[derive(Debug, Clone)]
 pub enum Choice {
-    /// Conv layer executed with this algorithm-dataflow pair.
-    Conv { node: NodeId, cost: ConvCost },
+    /// Conv layer executed with this (algorithm, precision, dataflow)
+    /// tuple.
+    Conv {
+        /// CNN node this choice belongs to.
+        node: NodeId,
+        /// Evaluated cost of the tuple.
+        cost: ConvCost,
+    },
     /// Non-conv layer (pool/concat/add/fc/input/output).
-    Passthrough { node: NodeId, seconds: f64 },
-    /// `V_s` store vertex: store output in the input format of
-    /// algorithm-choice `choice_idx` of downstream `child`.
-    StoreAs { node: NodeId, child: NodeId, fmt: Format, dims: EdgeDims, volume: u64 },
+    Passthrough {
+        /// CNN node this choice belongs to.
+        node: NodeId,
+        /// Fixed node latency.
+        seconds: f64,
+    },
+    /// `V_s` store vertex: store output in the input format (and
+    /// precision domain) of one algorithm choice of downstream `child`.
+    StoreAs {
+        /// Fan-out CNN node whose output is stored.
+        node: NodeId,
+        /// The downstream consumer the stored copy is formatted for.
+        child: NodeId,
+        /// Stored layout family.
+        fmt: Format,
+        /// Precision domain the stored copy lives in.
+        precision: Precision,
+        /// Consumer dims the layout is instantiated at.
+        dims: EdgeDims,
+        /// Stored element volume (drives mismatch restores).
+        volume: u64,
+    },
 }
 
 impl Choice {
@@ -52,13 +81,31 @@ impl Choice {
         }
     }
 
+    /// Precision domain of this choice's data: the conv tuple's
+    /// precision, the stored copy's precision, f32 for passthrough
+    /// layers (pool/concat/add run on the full-precision datapath).
+    pub fn precision(&self) -> Precision {
+        match self {
+            Choice::Conv { cost, .. } => cost.precision,
+            Choice::Passthrough { .. } => Precision::F32,
+            Choice::StoreAs { precision, .. } => *precision,
+        }
+    }
+
+    /// Human-readable label for reports and the PBQP problem dump.
     pub fn label(&self) -> String {
         match self {
-            Choice::Conv { cost, .. } => {
-                format!("{}/{}", cost.algo.name(), cost.dataflow.name())
-            }
+            Choice::Conv { cost, .. } => match cost.precision {
+                Precision::F32 => format!("{}/{}", cost.algo.name(), cost.dataflow.name()),
+                Precision::Int8 => {
+                    format!("{}/{}/int8", cost.algo.name(), cost.dataflow.name())
+                }
+            },
             Choice::Passthrough { .. } => "pass".into(),
-            Choice::StoreAs { child, fmt, .. } => format!("store[{}]:{}", child, fmt.name()),
+            Choice::StoreAs { child, fmt, precision, .. } => match precision {
+                Precision::F32 => format!("store[{}]:{}", child, fmt.name()),
+                Precision::Int8 => format!("store[{}]:{}/int8", child, fmt.name()),
+            },
         }
     }
 }
@@ -66,6 +113,7 @@ impl Choice {
 /// The constructed cost graph: PBQP problem + bookkeeping to map the
 /// solution back onto CNN layers.
 pub struct CostGraph {
+    /// The PBQP instance (vertex cost vectors + edge matrices).
     pub problem: Problem,
     /// Domain metadata parallel to `problem.costs`.
     pub choices: Vec<Vec<Choice>>,
@@ -73,21 +121,27 @@ pub struct CostGraph {
     pub vc: BTreeMap<NodeId, usize>,
     /// `V_s` vertex of fan-out CNN nodes.
     pub vs: BTreeMap<NodeId, usize>,
+    /// PBQP vertex of the CNN input node (SP-solve source).
     pub source: usize,
+    /// PBQP vertex of the CNN output node (SP-solve sink).
     pub sink: usize,
 }
 
 /// The chosen mapping for one conv layer.
 #[derive(Debug, Clone)]
 pub struct LayerAssignment {
+    /// CNN node id of the layer.
     pub node: NodeId,
+    /// Layer name.
     pub name: String,
+    /// The chosen (algorithm, precision, dataflow) cost tuple.
     pub cost: ConvCost,
 }
 
 /// A solved algorithm mapping with its latency breakdown.
 #[derive(Debug, Clone)]
 pub struct MappingResult {
+    /// Chosen domain index per PBQP vertex.
     pub assignment: Vec<usize>,
     /// Total objective (seconds): compute + transitions.
     pub total_sec: f64,
@@ -95,6 +149,7 @@ pub struct MappingResult {
     pub compute_sec: f64,
     /// Σ edge (store+load) costs.
     pub transition_sec: f64,
+    /// Per-conv-layer chosen (algorithm, precision, dataflow).
     pub layers: Vec<LayerAssignment>,
 }
 
@@ -240,7 +295,9 @@ impl CostGraph {
             if succs.len() <= 1 {
                 continue;
             }
-            // domain: Σ_{b'} |A_{b'}| store choices (paper §5.1)
+            // domain: Σ_{b'} |A_{b'}| store choices (paper §5.1); the
+            // stored copy inherits each child choice's precision domain
+            // so precision coupling survives the fan-out indirection
             let mut dom = Vec::new();
             for &child in &succs {
                 let d = consumer_dims(child);
@@ -250,17 +307,19 @@ impl CostGraph {
                         node: node.id,
                         child,
                         fmt,
+                        precision: ch.precision(),
                         dims: d,
                         volume: d.volume(fmt, tm.wino_m, tm.wino_r),
                     });
                 }
             }
-            // deduplicate identical (child, fmt) entries to keep d small
+            // deduplicate identical (child, fmt, precision) entries to
+            // keep the domain small
             dom.dedup_by(|a, b| match (a, b) {
                 (
-                    Choice::StoreAs { child: c1, fmt: f1, .. },
-                    Choice::StoreAs { child: c2, fmt: f2, .. },
-                ) => c1 == c2 && f1 == f2,
+                    Choice::StoreAs { child: c1, fmt: f1, precision: p1a, .. },
+                    Choice::StoreAs { child: c2, fmt: f2, precision: p2a, .. },
+                ) => c1 == c2 && f1 == f2 && p1a == p2a,
                 _ => false,
             });
             let labels = dom.iter().map(|c| c.label()).collect();
@@ -271,6 +330,16 @@ impl CostGraph {
         }
 
         // --- edges --------------------------------------------------------
+        // precision term shared by every edge kind: endpoints in
+        // different precision domains pay one requantization pass over
+        // the consumed layout
+        let requant = |from: &Choice, to: &Choice, fmt: Format, d: &EdgeDims| -> f64 {
+            if from.precision() != to.precision() {
+                tm.requant_sec(fmt, d)
+            } else {
+                0.0
+            }
+        };
         for &(src, dst) in &cnn.edges {
             let d = consumer_dims(dst);
             if cnn.out_degree(src) <= 1 {
@@ -283,11 +352,12 @@ impl CostGraph {
                     |i, j| {
                         let from = choices[u][i].out_format();
                         let to = choices[v][j].in_format();
-                        if opts.sram_fuse && tm.fits_on_chip(to, &d) {
+                        let base = if opts.sram_fuse && tm.fits_on_chip(to, &d) {
                             tm.edge_sec_onchip(to, &d, p1)
                         } else {
                             tm.store_sec(from, to, &d) + tm.load_sec(to, &d)
-                        }
+                        };
+                        base + requant(&choices[u][i], &choices[v][j], to, &d)
                     },
                 );
                 problem.add_edge(u, v, m);
@@ -299,7 +369,7 @@ impl CostGraph {
                     choices[v].len(),
                     |i, j| {
                         let needed = choices[v][j].in_format();
-                        match &choices[u][i] {
+                        let base = match &choices[u][i] {
                             Choice::StoreAs { child, fmt, volume, .. } => {
                                 if *child == dst && *fmt == needed {
                                     tm.load_sec(needed, &d)
@@ -308,7 +378,8 @@ impl CostGraph {
                                 }
                             }
                             _ => unreachable!("V_s domain holds StoreAs only"),
-                        }
+                        };
+                        base + requant(&choices[u][i], &choices[v][j], needed, &d)
                     },
                 );
                 problem.add_edge(u, v, m);
@@ -321,6 +392,7 @@ impl CostGraph {
                 match &choices[sv][j] {
                     Choice::StoreAs { fmt, dims, .. } => {
                         tm.store_sec(choices[u][i].out_format(), *fmt, dims)
+                            + requant(&choices[u][i], &choices[sv][j], *fmt, dims)
                     }
                     _ => unreachable!(),
                 }
@@ -367,6 +439,12 @@ impl CostGraph {
                     let mut pick = 0;
                     for (i, ch) in dom.iter().enumerate() {
                         if let Choice::Conv { cost, .. } = ch {
+                            // the fixed bl3–bl5 baselines are f32
+                            // policies; int8 domain entries (precision
+                            // search) are never theirs to pick
+                            if cost.precision != Precision::F32 {
+                                continue;
+                            }
                             let hit = match policy {
                                 Policy::Im2colOnly => cost.algo == Algo::Im2col,
                                 Policy::Kn2rowApplied => cost.algo == Algo::Kn2row,
@@ -501,6 +579,48 @@ mod tests {
             (opt.compute_sec + opt.transition_sec - opt.total_sec).abs() < 1e-9,
             "breakdown mismatch"
         );
+    }
+
+    #[test]
+    fn precision_search_widens_domains_and_stays_optimal() {
+        let cnn = zoo::mini_inception();
+        let (mut cm, tm) = models();
+        cm.precision_search = true;
+        let g = CostGraph::build(&cnn, &cm, &tm, 16, 16, BuildOpts::default());
+        // conv domains gain one int8 entry per quantizable algorithm
+        for id in cnn.conv_nodes() {
+            let d = g.choices[g.vc[&id]].len();
+            assert!((4..=5).contains(&d), "conv domain size {d}");
+        }
+        // the widened problem still solves exactly: SP result == brute
+        let opt = g.solve(&cnn);
+        let brute = solve_brute(&g.problem);
+        assert!(
+            (opt.total_sec - brute.cost).abs() < 1e-12,
+            "sp {} vs brute {}",
+            opt.total_sec,
+            brute.cost
+        );
+        // a strictly larger choice space can never cost more
+        let g_f32 = CostGraph::build(
+            &cnn,
+            &CostModel { precision_search: false, ..cm.clone() },
+            &tm,
+            16,
+            16,
+            BuildOpts::default(),
+        );
+        let opt_f32 = g_f32.solve(&cnn);
+        assert!(opt.total_sec <= opt_f32.total_sec + 1e-12);
+        // f32 baseline policies keep picking f32 entries
+        for policy in [Policy::Im2colOnly, Policy::Kn2rowApplied, Policy::WinoApplied] {
+            let bl = g.solve_policy(&cnn, policy);
+            assert!(bl
+                .layers
+                .iter()
+                .all(|l| l.cost.precision == crate::quant::Precision::F32));
+            assert!(opt.total_sec <= bl.total_sec + 1e-12);
+        }
     }
 
     #[test]

@@ -12,6 +12,13 @@
 //! * [`graph_build`] — §5.1 cost-graph construction: one PBQP vertex per
 //!   layer (`V_c`), plus a store vertex (`V_s`) per fan-out layer, with
 //!   cost vectors and transition matrices.
+//!
+//! Precision is a second mapping dimension throughout: int8 choices are
+//! priced with DSP packing ([`Device::int8_macs_per_dsp`]), edges whose
+//! endpoints disagree pay a requantization pass, and Winograd choices
+//! are f32-only (see [`crate::quant`]).
+
+#![warn(missing_docs)]
 
 pub mod device;
 pub mod gemm;

@@ -25,6 +25,7 @@ pub enum Format {
 }
 
 impl Format {
+    /// Stable display name of the layout family.
     pub fn name(&self) -> &'static str {
         match self {
             Format::Tensor3D => "3d-tensor",
@@ -56,12 +57,19 @@ pub fn output_format(algo: Algo) -> Format {
 /// producer's channel count `C_out(i)` (= `C_in(i+1)` on direct edges).
 #[derive(Debug, Clone, Copy)]
 pub struct EdgeDims {
+    /// Consumer input height.
     pub h1: usize,
+    /// Consumer input width.
     pub h2: usize,
+    /// Consumer output height.
     pub o1: usize,
+    /// Consumer output width.
     pub o2: usize,
+    /// Consumer kernel height.
     pub k1: usize,
+    /// Consumer kernel width.
     pub k2: usize,
+    /// Channel count crossing the edge (`C_out(i)` = `C_in(i+1)`).
     pub c: usize,
 }
 
@@ -101,8 +109,11 @@ impl EdgeDims {
 /// Transition-cost model: Table 2 with the Eq. 13 burst-wastage factor.
 #[derive(Debug, Clone)]
 pub struct TransitionModel {
+    /// Target device (bandwidth, burst length, clock).
     pub device: Device,
+    /// Winograd output tile size `m` (scattered-layout volumes).
     pub wino_m: usize,
+    /// Winograd kernel tile size `r` (scattered-layout volumes).
     pub wino_r: usize,
     /// Use the literal Eq. 13 as printed in the paper. The printed
     /// formula `f = C/(C + m²/(H1H2))·BW` is ≈ BW for any realistic
@@ -118,6 +129,8 @@ pub struct TransitionModel {
 }
 
 impl TransitionModel {
+    /// A transition model over `device` with `F(2×2, 3×3)` layouts and
+    /// the burst-wastage reading of Eq. 13.
     pub fn new(device: Device) -> TransitionModel {
         // ovhd: two pipelined LTU passes' fill time — a few hundred
         // cycles; modeled as 512 cycles at the device clock.
@@ -227,6 +240,19 @@ impl TransitionModel {
         let vol_out = d.volume(Format::Tensor3D, self.wino_m, self.wino_r);
         // INT8: 1 byte/element; both buffers must coexist (double buffer)
         (vol_in + vol_out) as u64 <= self.device.sram_bytes as u64
+    }
+
+    /// Quantize/dequantize cost paid on a cost-graph edge whose
+    /// endpoints run at different precisions: one streaming pass of the
+    /// consumer-layout volume through the requantization unit at DDR
+    /// bandwidth. Same price in both directions (f32→int8 quantize and
+    /// int8→f32 dequantize are both one multiply per element on a
+    /// streamed tensor), and deliberately cheap relative to compute —
+    /// the point of the edge term is to couple neighbouring precision
+    /// choices (a lone int8 layer pays two requant passes; a chain pays
+    /// two at its borders), not to forbid mixing.
+    pub fn requant_sec(&self, fmt: Format, d: &EdgeDims) -> f64 {
+        d.volume(fmt, self.wino_m, self.wino_r) as f64 / self.device.bw_elems_per_sec()
     }
 
     /// Mismatched load at a fan-out point (`V_s` vertices): the tensor

@@ -29,6 +29,12 @@ pub struct DseConfig {
     /// `P_SA1` sweep bounds for Algorithm 1.
     pub p1_lo: usize,
     pub p1_hi: usize,
+    /// Search int8 beside f32 per layer (see
+    /// [`crate::quant`]): widens each conv vertex's PBQP domain to
+    /// {algorithm × precision} with DSP-packed int8 pricing and
+    /// requantization edge costs. Off by default — quantization changes
+    /// numerics, so the precision axis is an explicit opt-in.
+    pub precision_search: bool,
     /// Profile-fitted correction of the analytic cost model (identity
     /// by default; produced by `tune::calibrate`).
     pub calibration: DeviceCalibration,
@@ -46,6 +52,7 @@ impl DseConfig {
             opts: BuildOpts::default(),
             p1_lo: 16,
             p1_hi: 512,
+            precision_search: false,
             calibration: DeviceCalibration::identity(),
         }
     }
@@ -61,6 +68,7 @@ impl DseConfig {
             opts: BuildOpts::default(),
             p1_lo: 2,
             p1_hi: cap,
+            precision_search: false,
             calibration: DeviceCalibration::identity(),
         }
     }
@@ -71,6 +79,7 @@ impl DseConfig {
         cm.wino_r = self.wino_r;
         cm.strided_winograd = self.strided_winograd;
         cm.force_dataflow = self.force_dataflow;
+        cm.precision_search = self.precision_search;
         cm.calibration = self.calibration.clone();
         cm
     }
@@ -109,6 +118,7 @@ impl Plan {
                 Json::obj(vec![
                     ("name", Json::str(l.name.clone())),
                     ("algo", Json::str(l.cost.algo.name())),
+                    ("precision", Json::str(l.cost.precision.name())),
                     ("dataflow", Json::str(l.cost.dataflow.name())),
                     ("cycles", Json::num(l.cost.cycles as f64)),
                     ("utilization", Json::num(l.cost.utilization)),
@@ -127,11 +137,14 @@ impl Plan {
         ])
     }
 
-    /// Histogram of chosen algorithms, for reports.
+    /// Histogram of chosen algorithms, for reports. Int8 choices count
+    /// under a precision-suffixed key ("im2col-int8"), so a
+    /// mixed-precision plan's histogram shows the precision split.
     pub fn algo_histogram(&self) -> Vec<(String, usize)> {
         let mut h: std::collections::BTreeMap<String, usize> = Default::default();
         for l in &self.mapping.layers {
-            *h.entry(l.cost.algo.name()).or_insert(0) += 1;
+            let key = crate::quant::mapped_name(&l.cost.algo.name(), l.cost.precision);
+            *h.entry(key).or_insert(0) += 1;
         }
         h.into_iter().collect()
     }

@@ -14,10 +14,21 @@
 //! the naive references in [`crate::algos`], and the analytic cycle
 //! stats are asserted equal to the old loop-derived schedule walk
 //! (`SystolicSim::loop_stats`) in debug builds and tests.
+//!
+//! Beside the f32 path sits the quantized int8 kernel layer
+//! ([`qgemm`]): packed `Wᵀ` panels on the symmetric int8 grid with
+//! per-output-channel scales, i32 accumulation and f32 requantization,
+//! property-tested bit-identical to the scalar reference in
+//! [`crate::quant`]. [`PreparedWeights`] carries quantized prepared
+//! forms for im2col and kn2row; Winograd stays f32 (its transform-space
+//! arithmetic amplifies quantization error), and the DSE knows it.
 #![deny(clippy::correctness, clippy::suspicious)]
+#![warn(missing_docs)]
 
 pub mod gemm;
 pub mod prepared;
+pub mod qgemm;
 
 pub use gemm::{gemm, gemm_xw, PackedWt};
 pub use prepared::{PreparedKernel, PreparedWeights};
+pub use qgemm::{qgemm, qgemm_xw, PackedWtI8, QuantMat};

@@ -10,39 +10,81 @@
 //! the request path is pure compute on packed panels.
 
 use super::gemm::{gemm, PackedWt};
+use super::qgemm::{qgemm, PackedWtI8, QuantMat};
 use crate::algos::tensor::{Mat, Tensor, Weights};
 use crate::algos::{im2col, kn2row, winograd};
 use crate::cost::conv::Algo;
 use crate::graph::layer::ConvSpec;
+use crate::quant::{ActQuant, Precision};
 
 /// The algorithm-specific pre-lowered form.
 #[derive(Debug, Clone)]
 pub enum PreparedKernel {
     /// im2col: the `C_out × K1K2C_in` weight matrix — already `Wᵀ` of
     /// the `(O1O2 × K1K2C_in) · (K1K2C_in × C_out)` GEMM.
-    Im2col { wt: PackedWt },
+    Im2col {
+        /// Packed `Wᵀ` panels.
+        wt: PackedWt,
+    },
     /// kn2row: one `C_out × C_in` unit matrix per kernel tap, in
     /// `(ky · K2 + kx)` order.
-    Kn2row { taps: Vec<PackedWt> },
+    Kn2row {
+        /// Per-tap packed unit matrices.
+        taps: Vec<PackedWt>,
+    },
     /// Winograd F(m×m, r×r): per sub-kernel round (`gy · groups + gx`),
     /// the `(m+r−1)²` transformed point matrices `Uᵀ (C_out × C_in)`.
-    Winograd { m: usize, r: usize, groups: usize, u: Vec<Vec<PackedWt>> },
+    Winograd {
+        /// Output tile size `m`.
+        m: usize,
+        /// Kernel tile size `r`.
+        r: usize,
+        /// Sub-kernel rounds per axis (`⌈K/r⌉`).
+        groups: usize,
+        /// Per round, the `(m+r−1)²` packed point matrices.
+        u: Vec<Vec<PackedWt>>,
+    },
     /// Strided-Winograd extension: functional fallback through the
     /// polyphase decomposition keeps the raw weights.
-    Direct { weights: Weights },
+    Direct {
+        /// Raw layer weights.
+        weights: Weights,
+    },
+    /// Quantized im2col: the same `Wᵀ` layout on the int8 grid with
+    /// per-output-channel scales.
+    QIm2col {
+        /// Quantized packed `Wᵀ` panels.
+        wt: PackedWtI8,
+        /// Per-tensor activation-scale policy.
+        act: ActQuant,
+    },
+    /// Quantized kn2row: per-tap unit matrices on the int8 grid. The
+    /// tap-invariant input matrix is quantized **once** per request and
+    /// shared by all `K1K2` tap GEMMs.
+    QKn2row {
+        /// Quantized per-tap unit matrices.
+        taps: Vec<PackedWtI8>,
+        /// Per-tensor activation-scale policy.
+        act: ActQuant,
+    },
 }
 
-/// Weights for one conv layer, lowered once for a chosen algorithm.
+/// Weights for one conv layer, lowered once for a chosen algorithm and
+/// precision.
 #[derive(Debug, Clone)]
 pub struct PreparedWeights {
+    /// The layer's convolution geometry.
     pub spec: ConvSpec,
+    /// Algorithm the weights were lowered for.
     pub algo: Algo,
+    /// The pre-lowered, packed (and possibly quantized) form.
     pub kernel: PreparedKernel,
 }
 
 impl PreparedWeights {
-    /// Lower `weights` for `algo`. This is the only place the per-layer
-    /// transforms run; everything downstream reuses the packed panels.
+    /// Lower `weights` for `algo` at f32. This is the only place the
+    /// per-layer transforms run; everything downstream reuses the
+    /// packed panels.
     pub fn new(weights: &Weights, spec: &ConvSpec, algo: Algo) -> PreparedWeights {
         let kernel = match algo {
             Algo::Im2col => {
@@ -98,6 +140,62 @@ impl PreparedWeights {
         PreparedWeights { spec: spec.clone(), algo, kernel }
     }
 
+    /// Lower `weights` for `algo` at `precision`. Int8 lowering applies
+    /// to im2col and kn2row; Winograd (and the strided extension)
+    /// **clamps to f32** — its transform-space arithmetic amplifies
+    /// quantization error, so the quantized grid is never offered there
+    /// (the DSE encodes the same constraint). `act_scale` is the
+    /// calibrated per-tensor activation scale for this layer
+    /// ([`crate::quant::ActScales`]); when absent the layer quantizes
+    /// dynamically from each request's own magnitude.
+    pub fn with_precision(
+        weights: &Weights,
+        spec: &ConvSpec,
+        algo: Algo,
+        precision: Precision,
+        act_scale: Option<f32>,
+    ) -> PreparedWeights {
+        let act = match act_scale {
+            Some(s) => ActQuant::Static(s),
+            None => ActQuant::Dynamic,
+        };
+        match (precision, algo) {
+            (Precision::Int8, Algo::Im2col) => PreparedWeights {
+                spec: spec.clone(),
+                algo,
+                kernel: PreparedKernel::QIm2col {
+                    wt: PackedWtI8::quantize_wt(&im2col::weight_matrix(weights)),
+                    act,
+                },
+            },
+            (Precision::Int8, Algo::Kn2row) => {
+                let mut taps = Vec::with_capacity(spec.k1 * spec.k2);
+                for ky in 0..spec.k1 {
+                    for kx in 0..spec.k2 {
+                        taps.push(PackedWtI8::quantize_wt(&kn2row::unit_weight_matrix(
+                            weights, ky, kx,
+                        )));
+                    }
+                }
+                PreparedWeights {
+                    spec: spec.clone(),
+                    algo,
+                    kernel: PreparedKernel::QKn2row { taps, act },
+                }
+            }
+            _ => PreparedWeights::new(weights, spec, algo),
+        }
+    }
+
+    /// The precision this layer actually executes with (after any
+    /// Winograd clamp).
+    pub fn precision(&self) -> Precision {
+        match self.kernel {
+            PreparedKernel::QIm2col { .. } | PreparedKernel::QKn2row { .. } => Precision::Int8,
+            _ => Precision::F32,
+        }
+    }
+
     /// Run the convolution on a prepared layer. Purely functional — no
     /// weight transform, no transpose, no cycle accounting.
     pub fn conv2d(&self, input: &Tensor) -> Tensor {
@@ -110,13 +208,14 @@ impl PreparedWeights {
             PreparedKernel::Direct { weights } => {
                 winograd::conv2d_strided(input, weights, &self.spec)
             }
+            PreparedKernel::QIm2col { wt, act } => self.conv_qim2col(input, wt, *act),
+            PreparedKernel::QKn2row { taps, act } => self.conv_qkn2row(input, taps, *act),
         }
     }
 
-    /// im2col: gather the Toeplitz matrix directly in its transposed
-    /// `(O1O2 × K1K2C_in)` orientation (each row is one window, built
-    /// contiguously) — one GEMM, no transpose anywhere.
-    fn conv_im2col(&self, input: &Tensor, wt: &PackedWt) -> Tensor {
+    /// Gather the im2col matrix in its transposed `(O1O2 × K1K2C_in)`
+    /// orientation (each row is one window, built contiguously).
+    fn im2col_matrix(&self, input: &Tensor) -> Mat {
         let spec = &self.spec;
         let (o1, o2) = (spec.o1(), spec.o2());
         let cols = spec.k1 * spec.k2 * spec.c_in;
@@ -136,7 +235,30 @@ impl PreparedWeights {
                 }
             }
         }
+        xt
+    }
+
+    /// im2col: gather + one GEMM, no transpose anywhere.
+    fn conv_im2col(&self, input: &Tensor, wt: &PackedWt) -> Tensor {
+        let spec = &self.spec;
+        let (o1, o2) = (spec.o1(), spec.o2());
+        let xt = self.im2col_matrix(input);
         let z = gemm(&xt, wt); // (O1O2 × C_out)
+        Tensor::from_fn(spec.c_out, o1, o2, |c, y, x| z.get(y * o2 + x, c))
+    }
+
+    /// Quantized im2col: gather f32, quantize the whole Toeplitz matrix
+    /// with one per-tensor scale, one int8 GEMM with fused f32
+    /// requantization.
+    fn conv_qim2col(&self, input: &Tensor, wt: &PackedWtI8, act: ActQuant) -> Tensor {
+        let spec = &self.spec;
+        let (o1, o2) = (spec.o1(), spec.o2());
+        let xt = self.im2col_matrix(input);
+        let xq = match act {
+            ActQuant::Static(s) => QuantMat::quantize_scaled(&xt, s),
+            ActQuant::Dynamic => QuantMat::quantize(&xt),
+        };
+        let z = qgemm(&xq, wt); // (O1O2 × C_out), requantized f32
         Tensor::from_fn(spec.c_out, o1, o2, |c, y, x| z.get(y * o2 + x, c))
     }
 
@@ -151,6 +273,28 @@ impl PreparedWeights {
         for ky in 0..spec.k1 {
             for kx in 0..spec.k2 {
                 let patch_t = gemm(&xm_t, &taps[ky * spec.k2 + kx]); // (H1H2 × C_out)
+                kn2row::pad_accumulate_t(&mut acc, &patch_t, spec, ky, kx);
+            }
+        }
+        acc
+    }
+
+    /// Quantized kn2row: quantize the tap-invariant input matrix once,
+    /// then one int8 GEMM per tap; each tap requantizes to f32 before
+    /// the shifted accumulation (i32 accumulate *within* a GEMM, f32
+    /// accumulate *across* taps).
+    fn conv_qkn2row(&self, input: &Tensor, taps: &[PackedWtI8], act: ActQuant) -> Tensor {
+        let spec = &self.spec;
+        let hw = spec.h1 * spec.h2;
+        let xm_t = Mat::from_fn(hw, spec.c_in, |rc, ci| input.data[ci * hw + rc]);
+        let xq = match act {
+            ActQuant::Static(s) => QuantMat::quantize_scaled(&xm_t, s),
+            ActQuant::Dynamic => QuantMat::quantize(&xm_t),
+        };
+        let mut acc = Tensor::zeros(spec.c_out, spec.o1(), spec.o2());
+        for ky in 0..spec.k1 {
+            for kx in 0..spec.k2 {
+                let patch_t = qgemm(&xq, &taps[ky * spec.k2 + kx]); // (H1H2 × C_out)
                 kn2row::pad_accumulate_t(&mut acc, &patch_t, spec, ky, kx);
             }
         }
@@ -301,6 +445,76 @@ mod tests {
         let out = pw.conv2d(&input);
         let reference = direct::conv2d(&input, &w, &spec);
         assert_allclose(&out.data, &reference.data, 1e-3, 1e-3).unwrap();
+    }
+
+    #[test]
+    fn quantized_prepared_close_to_f32_reference() {
+        // int8 im2col/kn2row vs the f32 direct reference: within the
+        // documented 5%-of-range tolerance on random data
+        check("prepared_quant_vs_direct", 32, |r: &mut Rng| {
+            let spec = im2col::random_spec(r);
+            let input = Tensor::random(spec.c_in, spec.h1, spec.h2, r);
+            let w = Weights::random(spec.c_out, spec.c_in, spec.k1, spec.k2, r);
+            let reference = direct::conv2d(&input, &w, &spec);
+            let fmax = reference.data.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-6);
+            for algo in [Algo::Im2col, Algo::Kn2row] {
+                let pw = PreparedWeights::with_precision(
+                    &w,
+                    &spec,
+                    algo,
+                    Precision::Int8,
+                    None,
+                );
+                assert_eq!(pw.precision(), Precision::Int8);
+                let out = pw.conv2d(&input);
+                for (i, (a, b)) in out.data.iter().zip(&reference.data).enumerate() {
+                    if (a - b).abs() > 0.05 * fmax {
+                        return Err(format!(
+                            "{algo:?} spec {spec:?} elem {i}: |{a} - {b}| > 5% of {fmax}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn winograd_int8_clamps_to_f32() {
+        let spec = ConvSpec::new(2, 3, 8, 8, 3, 3, 1, 1, 1);
+        let mut r = Rng::new(30);
+        let w = Weights::random(3, 2, 3, 3, &mut r);
+        let pw = PreparedWeights::with_precision(
+            &w,
+            &spec,
+            Algo::Winograd { m: 2, r: 3 },
+            Precision::Int8,
+            None,
+        );
+        assert_eq!(pw.precision(), Precision::F32, "winograd must stay f32");
+        assert!(matches!(pw.kernel, PreparedKernel::Winograd { .. }));
+    }
+
+    #[test]
+    fn static_act_scale_is_deterministic_across_requests() {
+        // with a calibrated scale, two different inputs quantize onto
+        // the same grid; with dynamic, each input picks its own scale —
+        // both must stay within tolerance of f32
+        let spec = ConvSpec::new(3, 4, 8, 8, 3, 3, 1, 1, 1);
+        let mut r = Rng::new(31);
+        let w = Weights::random(4, 3, 3, 3, &mut r);
+        let quant =
+            PreparedWeights::with_precision(&w, &spec, Algo::Im2col, Precision::Int8, Some(1.0 / 127.0));
+        for _ in 0..2 {
+            let input = Tensor::random(3, 8, 8, &mut r);
+            let out = quant.conv2d(&input);
+            let reference = direct::conv2d(&input, &w, &spec);
+            let fmax =
+                reference.data.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-6);
+            for (a, b) in out.data.iter().zip(&reference.data) {
+                assert!((a - b).abs() <= 0.05 * fmax, "{a} vs {b} (range {fmax})");
+            }
+        }
     }
 
     #[test]

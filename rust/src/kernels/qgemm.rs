@@ -1,0 +1,283 @@
+//! Quantized int8 GEMM beside the f32 kernel: packed `Wᵀ` panels of
+//! i8-range values, i32 accumulation, f32 requantization.
+//!
+//! The layout mirrors [`super::gemm`] — `Wᵀ` packed once per layer so
+//! every output element is one dot product over two contiguous slices —
+//! but the operands are quantized to the symmetric int8 grid and
+//! carried in **i16 lanes**: the host analogue of FPGA DSP packing.
+//! Two things make this kernel faster than the f32 one on the same
+//! shapes:
+//!
+//! * integer addition is associative, so the compiler is free to
+//!   vectorize the i32 reduction (the f32 kernel must preserve
+//!   ascending-`k` order to stay bit-identical to the naive reference,
+//!   which forbids reassociation);
+//! * i16 operands halve the memory traffic per multiply.
+//!
+//! Numerical contract: i32 sums are exact (no rounding, no order
+//! sensitivity — the reduction depth is hard-asserted below the i32
+//! overflow bound), so the kernel's
+//! output is **bit-identical** to the scalar reference
+//! [`crate::quant::qgemm_requant_ref`] for any summation order; the
+//! property tests below assert exactly that on ragged shapes.
+
+use crate::algos::tensor::Mat;
+use crate::quant::scale::{max_abs, quantize_slice, quantize_value, symmetric_scale};
+
+/// Column-panel group size, matching the f32 kernel's blocking.
+const NC: usize = 128;
+
+/// Largest reduction depth the i32 accumulator provably cannot
+/// overflow at: `b · 127 · 127 < i32::MAX`.
+const MAX_DEPTH: usize = (i32::MAX / (127 * 127)) as usize;
+
+/// Quantized `Wᵀ` panels: per-output-channel (= per-column of `W`)
+/// symmetric scales, values on the int8 grid in i16 lanes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedWtI8 {
+    /// Depth (rows of `W`, the reduction dimension).
+    pub b: usize,
+    /// Columns of `W` (= output channels = panel count).
+    pub c: usize,
+    data: Vec<i16>,
+    scales: Vec<f32>,
+}
+
+impl PackedWtI8 {
+    /// Quantize and pack a `b × c` matrix `W`, one symmetric scale per
+    /// output column (paid once per layer at prepare time). The
+    /// transpose is the one shared packing path, so the scale rule can
+    /// never diverge between the two entry points.
+    pub fn quantize(w: &Mat) -> PackedWtI8 {
+        PackedWtI8::quantize_wt(&w.transposed())
+    }
+
+    /// Quantize a matrix that is *already* `Wᵀ` (`c × b` row-major,
+    /// e.g. the im2col weight matrix or a kn2row per-tap unit matrix):
+    /// each row is one output channel and becomes one scaled panel.
+    pub fn quantize_wt(wt: &Mat) -> PackedWtI8 {
+        let (c, b) = (wt.rows, wt.cols);
+        let mut data = vec![0i16; b * c];
+        let mut scales = vec![0f32; c];
+        for j in 0..c {
+            let row = &wt.data[j * b..(j + 1) * b];
+            let s = symmetric_scale(max_abs(row));
+            scales[j] = s;
+            for (k, &v) in row.iter().enumerate() {
+                data[j * b + k] = quantize_value(v, s);
+            }
+        }
+        PackedWtI8 { b, c, data, scales }
+    }
+
+    /// Quantized column `j` of `W` as a contiguous slice.
+    #[inline]
+    pub fn col(&self, j: usize) -> &[i16] {
+        &self.data[j * self.b..(j + 1) * self.b]
+    }
+
+    /// Dequantization scale of output column `j`.
+    #[inline]
+    pub fn scale(&self, j: usize) -> f32 {
+        self.scales[j]
+    }
+}
+
+/// A per-tensor-quantized activation matrix: i8-range values in i16
+/// lanes plus the one shared scale. Built once per GEMM call (im2col)
+/// or once per *layer invocation* and reused across taps (kn2row).
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantMat {
+    /// Rows of the original matrix.
+    pub rows: usize,
+    /// Columns of the original matrix (the reduction dimension).
+    pub cols: usize,
+    /// Shared symmetric scale.
+    pub scale: f32,
+    data: Vec<i16>,
+}
+
+impl QuantMat {
+    /// Quantize `x` with a per-tensor symmetric scale derived from its
+    /// own max magnitude (dynamic quantization).
+    pub fn quantize(x: &Mat) -> QuantMat {
+        QuantMat::quantize_scaled(x, symmetric_scale(max_abs(&x.data)))
+    }
+
+    /// Quantize `x` with an explicit (calibrated) scale.
+    pub fn quantize_scaled(x: &Mat, scale: f32) -> QuantMat {
+        QuantMat {
+            rows: x.rows,
+            cols: x.cols,
+            scale,
+            data: quantize_slice(&x.data, scale),
+        }
+    }
+
+    /// Quantized row `i` as a contiguous slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[i16] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+}
+
+/// `X (a×b) · W (b×c)` on the int8 grid with f32 requantization:
+/// `out[i][j] = (Σ_k xq[i][k]·wq[k][j]) · (x.scale · w.scale(j))`.
+/// Panics on a depth mismatch.
+pub fn qgemm(x: &QuantMat, w: &PackedWtI8) -> Mat {
+    assert_eq!(x.cols, w.b, "kernels::qgemm depth mismatch");
+    // hard assert: past this depth the i32 accumulator could wrap and
+    // release builds would return silently wrong activations. One
+    // comparison per GEMM call — not per element — so it costs nothing
+    // on the hot path.
+    assert!(w.b <= MAX_DEPTH, "i32 accumulator would overflow at depth {}", w.b);
+    let (a, c) = (x.rows, w.c);
+    let mut out = Mat::zeros(a, c);
+    for jc in (0..c).step_by(NC) {
+        let jc_end = (jc + NC).min(c);
+        for i in 0..a {
+            let x_row = x.row(i);
+            let out_row = &mut out.data[i * c..(i + 1) * c];
+            let mut j = jc;
+            // 4 independent panels per iteration, exactly like the f32
+            // microkernel; each i32 reduction is free to vectorize
+            while j + 4 <= jc_end {
+                let w0 = w.col(j);
+                let w1 = w.col(j + 1);
+                let w2 = w.col(j + 2);
+                let w3 = w.col(j + 3);
+                let (mut s0, mut s1, mut s2, mut s3) = (0i32, 0i32, 0i32, 0i32);
+                for k in 0..x_row.len() {
+                    let xv = x_row[k] as i32;
+                    s0 += xv * w0[k] as i32;
+                    s1 += xv * w1[k] as i32;
+                    s2 += xv * w2[k] as i32;
+                    s3 += xv * w3[k] as i32;
+                }
+                out_row[j] = s0 as f32 * (x.scale * w.scale(j));
+                out_row[j + 1] = s1 as f32 * (x.scale * w.scale(j + 1));
+                out_row[j + 2] = s2 as f32 * (x.scale * w.scale(j + 2));
+                out_row[j + 3] = s3 as f32 * (x.scale * w.scale(j + 3));
+                j += 4;
+            }
+            while j < jc_end {
+                let wc = w.col(j);
+                let mut s: i32 = 0;
+                for k in 0..x_row.len() {
+                    s += x_row[k] as i32 * wc[k] as i32;
+                }
+                out_row[j] = s as f32 * (x.scale * w.scale(j));
+                j += 1;
+            }
+        }
+    }
+    out
+}
+
+/// Convenience wrapper quantizing both operands per call (dynamic
+/// activation scale) — the one-shot form the bench and tests use. In a
+/// serving loop prefer a prepared [`PackedWtI8`] and, for multi-call
+/// algorithms, a shared [`QuantMat`].
+pub fn qgemm_xw(x: &Mat, w: &Mat) -> Mat {
+    assert_eq!(x.cols, w.rows, "kernels::qgemm_xw dims");
+    qgemm(&QuantMat::quantize(x), &PackedWtI8::quantize(w))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::scale::qgemm_requant_ref;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matches_scalar_reference_bitwise_random_shapes() {
+        // ragged shapes not divisible by the microkernel width or the
+        // panel block, plus degenerate 1-dims — the vectorizable i32
+        // reduction must be bit-identical to the ascending-k scalar ref
+        check("qgemm_vs_scalar_ref", 96, |r: &mut Rng| {
+            let (a, b, c) = (r.range(1, 40), r.range(1, 40), r.range(1, 300));
+            let x = Mat::from_fn(a, b, |_, _| r.f32_range(-2.0, 2.0));
+            let w = Mat::from_fn(b, c, |_, _| r.f32_range(-1.0, 1.0));
+            let fast = qgemm_xw(&x, &w);
+            let reference = qgemm_requant_ref(&x, &w);
+            if fast.data != reference.data {
+                return Err(format!("bitwise mismatch for ({a},{b},{c})"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn exact_on_grid_data() {
+        // integer data whose max magnitude is exactly on the grid:
+        // scale 1 on both sides, so the quantized GEMM equals the f32
+        // matmul bitwise
+        check("qgemm_grid_exact", 48, |r: &mut Rng| {
+            let (a, b, c) = (r.range(1, 24), r.range(1, 24), r.range(1, 24));
+            let mut x = Mat::from_fn(a, b, |_, _| r.i8_small() as f32);
+            let mut w = Mat::from_fn(b, c, |_, _| r.i8_small() as f32);
+            x.data[0] = 127.0;
+            for j in 0..c {
+                w.set(0, j, 127.0);
+            }
+            let q = qgemm_xw(&x, &w);
+            let exact = x.matmul(&w);
+            if q.data != exact.data {
+                return Err(format!("on-grid mismatch for ({a},{b},{c})"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn quantization_error_bounded_vs_f32() {
+        check("qgemm_error_bound", 32, |r: &mut Rng| {
+            let (a, b, c) = (r.range(1, 16), r.range(4, 64), r.range(1, 16));
+            let x = Mat::from_fn(a, b, |_, _| r.f32_range(-1.0, 1.0));
+            let w = Mat::from_fn(b, c, |_, _| r.f32_range(-0.5, 0.5));
+            let q = qgemm_xw(&x, &w);
+            let f = x.matmul(&w);
+            let fmax = max_abs(&f.data).max(1e-6);
+            for (i, (qa, fa)) in q.data.iter().zip(&f.data).enumerate() {
+                if (qa - fa).abs() > 0.05 * fmax {
+                    return Err(format!(
+                        "({a},{b},{c}) elem {i}: |{qa} - {fa}| > 5% of {fmax}"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn per_channel_scales_follow_columns() {
+        // column j holds values up to 0.6·(j+1): scales must grow with j
+        let w = Mat::from_fn(6, 3, |i, j| (i + 1) as f32 * 0.1 * (j + 1) as f32);
+        let p = PackedWtI8::quantize(&w);
+        assert!(p.scale(0) < p.scale(1) && p.scale(1) < p.scale(2));
+        assert!((p.scale(2) / p.scale(0) - 3.0).abs() < 1e-6, "3x column, 3x scale");
+        // quantize_wt on the transpose is the identical packing
+        assert_eq!(PackedWtI8::quantize_wt(&w.transposed()), p);
+    }
+
+    #[test]
+    fn static_scale_is_honoured() {
+        let x = Mat { rows: 1, cols: 2, data: vec![0.5, -0.25] };
+        let q = QuantMat::quantize_scaled(&x, 0.01);
+        assert_eq!(q.scale, 0.01);
+        assert_eq!(q.row(0), &[50, -25]);
+        // dynamic picks the max-abs-derived scale instead
+        let d = QuantMat::quantize(&x);
+        assert_eq!(d.scale, symmetric_scale(0.5));
+        assert_eq!(d.row(0), &[127, -64], "0.5 maps to the grid edge");
+    }
+
+    #[test]
+    #[should_panic(expected = "depth mismatch")]
+    fn depth_mismatch_panics() {
+        let x = QuantMat::quantize(&Mat::zeros(2, 3));
+        let w = PackedWtI8::quantize(&Mat::zeros(4, 2));
+        qgemm(&x, &w);
+    }
+}

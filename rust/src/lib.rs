@@ -67,7 +67,12 @@
 //! * [`kernels`] — the fast host-side kernel layer: cache-blocked
 //!   transpose-free GEMM over packed `Wᵀ` panels and per-layer
 //!   [`kernels::PreparedWeights`] (pre-lowered im2col/kn2row/Winograd
-//!   weights) built once at plan time.
+//!   weights) built once at plan time, plus the quantized int8 GEMM
+//!   ([`kernels::qgemm`]) beside it.
+//! * [`quant`] — the precision axis of the mapping space: per-channel
+//!   symmetric weight scales, calibrated per-tensor activation scales,
+//!   and the `(family, precision)` spelling shared by plans, serving
+//!   maps and the tuner.
 //! * [`runtime`] — PJRT client wrapper that loads the AOT-compiled HLO
 //!   artifacts produced by `python/compile/aot.py` and executes them.
 //! * [`serve`] — multi-model serving engine on top of [`api::Session`]:
@@ -86,6 +91,7 @@
 
 pub mod util;
 pub mod graph;
+pub mod quant;
 pub mod cost;
 pub mod sp;
 pub mod pbqp;

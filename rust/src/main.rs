@@ -2,9 +2,10 @@
 //!
 //! Subcommands:
 //! * `zoo` — list the built-in model zoo with stats.
-//! * `dse --model <name>` — run the full DSE flow, print the plan.
-//! * `compile --model <name> --out <dir|file.json>` — run the DSE once
-//!   and persist a versioned plan artifact for later sessions.
+//! * `dse --model <name> [--quant]` — run the full DSE flow, print the
+//!   plan; `--quant` searches int8 beside f32 per layer.
+//! * `compile --model <name> --out <dir|file.json> [--quant]` — run the
+//!   DSE once and persist a versioned plan artifact for later sessions.
 //! * `baselines --model <name>` — compare OPT vs bl3/bl4/bl5/greedy.
 //! * `simulate --model <name>` — cycle-level overlay simulation.
 //! * `infer [--plan-cache DIR]` — end-to-end functional inference
@@ -30,8 +31,9 @@ use dynamap::util::cli::Args;
 use dynamap::util::table::Table;
 
 fn main() {
-    let args =
-        Args::parse_env(&["json", "verbose", "no-fuse", "no-synth", "compare", "tune"]);
+    let args = Args::parse_env(&[
+        "json", "verbose", "no-fuse", "no-synth", "compare", "tune", "quant",
+    ]);
     let code = match args.subcommand.as_deref() {
         Some("zoo") => cmd_zoo(),
         Some("dse") => cmd_dse(&args),
@@ -49,7 +51,7 @@ fn main() {
                 "usage: dynamap <zoo|dse|compile|baselines|simulate|infer|serve|loadgen|\
                  tune|figures|emit> [--model NAME] [--models A,B] [--clients N] \
                  [--requests M] [--dsp N] [--out DIR] [--plan-cache DIR] \
-                 [--profile FILE] [--tune] [--json]"
+                 [--profile FILE] [--tune] [--quant] [--json]"
             );
             2
         }
@@ -77,6 +79,8 @@ fn compiler_from(args: &Args) -> Compiler {
     if args.has("no-fuse") {
         cfg.opts.sram_fuse = false;
     }
+    // --quant: search int8 beside f32 per layer (precision axis)
+    cfg.precision_search = args.has("quant");
     Compiler::from_config(cfg)
 }
 
@@ -121,12 +125,15 @@ fn cmd_dse(args: &Args) -> i32 {
     );
     println!("  algorithm histogram: {:?}", plan.algo_histogram());
     if args.has("verbose") {
-        let mut t =
-            Table::new("per-layer mapping", &["layer", "algo", "dataflow", "cycles", "util"]);
+        let mut t = Table::new(
+            "per-layer mapping",
+            &["layer", "algo", "precision", "dataflow", "cycles", "util"],
+        );
         for l in &plan.mapping.layers {
             t.row(vec![
                 l.name.clone(),
                 l.cost.algo.name(),
+                l.cost.precision.name().into(),
                 l.cost.dataflow.name().into(),
                 l.cost.cycles.to_string(),
                 format!("{:.3}", l.cost.utilization),

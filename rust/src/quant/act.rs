@@ -1,0 +1,147 @@
+//! [`ActScales`] — per-layer, per-tensor activation scales calibrated
+//! from profiled f32 batches.
+//!
+//! Static activation scales make quantized serving deterministic (the
+//! same input always quantizes onto the same grid regardless of the
+//! rest of the batch) and save the per-request max-abs pass. They are
+//! produced by [`crate::api::NativeState::calibrate_activations`] —
+//! run a handful of representative batches through the f32 path,
+//! record each conv/FC layer's input magnitude high-water mark, map it
+//! onto the int8 grid — and round-trip through JSON so a calibration
+//! is a durable artifact next to the plan.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use super::scale::symmetric_scale;
+use crate::api::error::DynamapError;
+use crate::util::json::Json;
+
+/// Calibrated per-layer activation scales (`layer name → scale`).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ActScales {
+    /// Largest observed input magnitude per layer (the calibration
+    /// evidence; the scale is derived from it).
+    max_abs: BTreeMap<String, f32>,
+}
+
+impl ActScales {
+    /// An empty calibration (every layer falls back to dynamic
+    /// quantization).
+    pub fn new() -> ActScales {
+        ActScales::default()
+    }
+
+    /// Record an observed input magnitude for `layer`, keeping the
+    /// high-water mark across observations and batches.
+    pub fn observe(&mut self, layer: &str, max_abs: f32) {
+        let e = self.max_abs.entry(layer.to_string()).or_insert(0.0);
+        *e = e.max(max_abs);
+    }
+
+    /// The calibrated scale for `layer`, if it was observed **with a
+    /// non-zero magnitude**. A layer whose calibration batches only
+    /// ever showed zero activations has no usable grid — a degenerate
+    /// static scale would saturate every real request to ±127 and
+    /// dequantize to ~0 — so it returns `None` and the layer falls back
+    /// to dynamic per-request quantization.
+    pub fn scale_for(&self, layer: &str) -> Option<f32> {
+        self.max_abs
+            .get(layer)
+            .and_then(|&m| (m > 0.0).then_some(symmetric_scale(m)))
+    }
+
+    /// Number of calibrated layers.
+    pub fn len(&self) -> usize {
+        self.max_abs.len()
+    }
+
+    /// `true` when no layer has been observed.
+    pub fn is_empty(&self) -> bool {
+        self.max_abs.is_empty()
+    }
+
+    /// Serialize to JSON (`{"layer": max_abs, ...}`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(
+            self.max_abs
+                .iter()
+                .map(|(k, &v)| (k.as_str(), Json::num(v as f64)))
+                .collect(),
+        )
+    }
+
+    /// Parse the form produced by [`ActScales::to_json`].
+    pub fn from_json(j: &Json) -> Result<ActScales, DynamapError> {
+        let obj = j.as_obj().ok_or_else(|| {
+            DynamapError::Artifact("activation scales: expected a JSON object".into())
+        })?;
+        let mut s = ActScales::new();
+        for (layer, v) in obj {
+            let m = v.as_f64().ok_or_else(|| {
+                DynamapError::Artifact(format!(
+                    "activation scales: non-numeric entry for '{layer}'"
+                ))
+            })?;
+            s.observe(layer, m as f32);
+        }
+        Ok(s)
+    }
+
+    /// Write the calibration to `path` as pretty JSON.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<(), DynamapError> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent).map_err(|e| DynamapError::io(parent, e))?;
+            }
+        }
+        std::fs::write(path, self.to_json().pretty()).map_err(|e| DynamapError::io(path, e))
+    }
+
+    /// Load a calibration previously written with [`ActScales::save`].
+    pub fn load(path: impl AsRef<Path>) -> Result<ActScales, DynamapError> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path).map_err(|e| DynamapError::io(path, e))?;
+        let j = Json::parse(&text).map_err(|e| DynamapError::json_in(path, e))?;
+        ActScales::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn observe_keeps_high_water_mark() {
+        let mut s = ActScales::new();
+        s.observe("stem", 1.0);
+        s.observe("stem", 3.0);
+        s.observe("stem", 2.0);
+        assert_eq!(s.scale_for("stem"), Some(symmetric_scale(3.0)));
+        assert_eq!(s.scale_for("head"), None);
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn all_zero_observations_fall_back_to_dynamic() {
+        // a layer that only ever saw zero activations has no usable
+        // grid: no static scale, so the serving layer stays dynamic
+        let mut s = ActScales::new();
+        s.observe("dead", 0.0);
+        assert_eq!(s.scale_for("dead"), None);
+        // a later non-zero observation flips it to calibrated
+        s.observe("dead", 0.5);
+        assert_eq!(s.scale_for("dead"), Some(symmetric_scale(0.5)));
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let mut s = ActScales::new();
+        s.observe("a", 0.5);
+        s.observe("b/c", 7.25);
+        let back = ActScales::from_json(&Json::parse(&s.to_json().pretty()).unwrap()).unwrap();
+        assert_eq!(back, s);
+        assert!(ActScales::from_json(&Json::parse("[1,2]").unwrap()).is_err());
+    }
+}

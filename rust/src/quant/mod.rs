@@ -1,0 +1,174 @@
+//! Reduced-precision (int8) inference support: the precision axis of
+//! the mapping space.
+//!
+//! The paper's overlay computes in reduced-precision fixed point, and
+//! FPGA CNN accelerators earn their throughput from DSP packing — two
+//! int8 multiply-accumulates per DSP slice per cycle (the fpgaConvNet
+//! toolflow and the FPGA CNN acceleration survey in PAPERS.md both
+//! build on this). This module makes precision a *searchable* dimension
+//! of DYNAMAP's mapping space rather than a global switch:
+//!
+//! * [`Precision`] — the per-layer precision choice. The DSE widens
+//!   each conv vertex's PBQP domain from {algorithm × dataflow} to
+//!   {algorithm × dataflow × precision} (see
+//!   [`crate::cost::graph_build`]), pricing int8 with the DSP-packing
+//!   throughput of [`crate::cost::Device::int8_macs_per_dsp`] and
+//!   charging quantize/dequantize transition costs on edges whose
+//!   endpoints disagree ([`crate::cost::transition::TransitionModel::requant_sec`]).
+//!   Winograd stays f32: its transform-space arithmetic amplifies
+//!   quantization error, so [`Precision::Int8`] is never offered for a
+//!   Winograd choice and the serving layer clamps any such request.
+//! * [`scale`] — the quantization scheme: per-output-channel symmetric
+//!   weight scales, per-tensor activation scales, i32 accumulation with
+//!   f32 requantization, plus the scalar reference GEMM the fast kernel
+//!   ([`crate::kernels::qgemm`]) is property-tested against.
+//! * [`act`] — [`act::ActScales`]: per-layer activation scales
+//!   calibrated from a handful of profiled f32 batches
+//!   ([`crate::api::NativeState::calibrate_activations`]), with JSON
+//!   round-tripping so a calibration is a durable artifact. Layers
+//!   without a calibrated scale quantize dynamically (per-request
+//!   max-abs).
+//!
+//! Serving-layer plumbing: a per-layer precision rides in the
+//! `layer → algorithm` maps as a `-int8` suffix on the family name
+//! ("im2col-int8"), so plans, profiles, the serve REPL and
+//! `tune::remap` all agree on one spelling — [`mapped_name`] and
+//! [`parse_mapped`] are the only encoder/decoder.
+//!
+//! The README's quantization quickstart (calibrate → compile with
+//! precision search → serve), as a compiled example:
+//!
+//! ```no_run
+//! use dynamap::api::{Backend, Compiler, Session};
+//! use dynamap::graph::zoo;
+//! use dynamap::quant::ActScales;
+//! use dynamap::runtime::TensorBuf;
+//! use dynamap::util::rng::Rng;
+//!
+//! // 1. calibrate per-tensor activation scales from a handful of
+//! //    *representative* batches on the f32 native path (real inputs
+//! //    in production — an all-zero layer falls back to dynamic)
+//! let f32_session = Session::builder("artifacts").backend(Backend::Native).build()?;
+//! let mut rng = Rng::new(7);
+//! let batches: Vec<TensorBuf> = (0..4)
+//!     .map(|_| {
+//!         TensorBuf::new(
+//!             vec![4, 16, 16],
+//!             (0..4 * 16 * 16).map(|_| rng.f32_range(-1.0, 1.0)).collect(),
+//!         )
+//!     })
+//!     .collect();
+//! let scales = f32_session
+//!     .native_state()
+//!     .expect("native backend always has shareable state")
+//!     .calibrate_activations(&batches)?;
+//! scales.save("plans/act_scales.json")?;
+//!
+//! // 2. compile with the precision axis enabled: the DSE may now map
+//! //    individual layers to int8 (Winograd layers stay f32)
+//! let plan = Compiler::new().precision_search(true).compile(&zoo::mini_inception())?;
+//! println!("{:?}", plan.plan.algo_histogram());
+//!
+//! // 3. serve the mixed-precision plan with the calibrated scales
+//! let mut session = Session::builder("artifacts")
+//!     .backend(Backend::Native)
+//!     .plan(plan)
+//!     .act_scales(ActScales::load("plans/act_scales.json")?)
+//!     .build()?;
+//! let (outputs, metrics) = session.infer_batch(&[TensorBuf::zeros(vec![4, 16, 16])])?;
+//! println!("{} outputs, {}", outputs.len(), metrics.stats.summary());
+//! # Ok::<(), dynamap::api::DynamapError>(())
+//! ```
+
+#![deny(clippy::correctness, clippy::suspicious)]
+#![warn(missing_docs)]
+
+pub mod act;
+pub mod scale;
+
+pub use act::ActScales;
+pub use scale::{max_abs, qgemm_requant_ref, quantize_value, symmetric_scale, QMAX};
+
+/// Arithmetic precision a conv layer executes with — the second
+/// dimension (after the algorithm) of a PBQP vertex domain.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Precision {
+    /// Full-precision f32 datapath (1 MAC per DSP in the cost model).
+    #[default]
+    F32,
+    /// Quantized int8 datapath: i8 operands, i32 accumulation, f32
+    /// requantization; priced with DSP packing
+    /// ([`crate::cost::Device::int8_macs_per_dsp`] MACs per DSP).
+    Int8,
+}
+
+impl Precision {
+    /// Both precisions, in search order (f32 first, so exact ties keep
+    /// the full-precision choice).
+    pub const ALL: [Precision; 2] = [Precision::F32, Precision::Int8];
+
+    /// Stable display/serialization name ("f32" / "int8").
+    pub fn name(&self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Int8 => "int8",
+        }
+    }
+}
+
+/// How a quantized layer obtains its per-tensor activation scale.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ActQuant {
+    /// Compute the scale per request from the actual input (max-abs
+    /// pass). Self-calibrating, costs one pass over the input.
+    Dynamic,
+    /// Use a scale calibrated offline from profiled batches
+    /// ([`ActScales`]); deterministic across requests.
+    Static(f32),
+}
+
+/// The suffix [`mapped_name`] appends for [`Precision::Int8`] entries.
+pub const INT8_SUFFIX: &str = "-int8";
+
+/// Serving-layer spelling of an `(algorithm family, precision)` pair:
+/// the family name verbatim for f32, `<family>-int8` for int8.
+pub fn mapped_name(family: &str, precision: Precision) -> String {
+    match precision {
+        Precision::F32 => family.to_string(),
+        Precision::Int8 => format!("{family}{INT8_SUFFIX}"),
+    }
+}
+
+/// Decode a serving-layer algorithm name into `(family, precision)` —
+/// the inverse of [`mapped_name`]. Unsuffixed names are f32.
+pub fn parse_mapped(name: &str) -> (&str, Precision) {
+    match name.strip_suffix(INT8_SUFFIX) {
+        Some(family) => (family, Precision::Int8),
+        None => (name, Precision::F32),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mapped_name_round_trips() {
+        for family in ["im2col", "kn2row", "winograd"] {
+            for p in Precision::ALL {
+                let name = mapped_name(family, p);
+                assert_eq!(parse_mapped(&name), (family, p));
+            }
+        }
+        assert_eq!(parse_mapped("im2col"), ("im2col", Precision::F32));
+        assert_eq!(parse_mapped("kn2row-int8"), ("kn2row", Precision::Int8));
+    }
+
+    #[test]
+    fn precision_names_and_order() {
+        assert_eq!(Precision::F32.name(), "f32");
+        assert_eq!(Precision::Int8.name(), "int8");
+        assert_eq!(Precision::ALL[0], Precision::F32, "ties must resolve to f32");
+        assert_eq!(Precision::default(), Precision::F32);
+    }
+}

@@ -1,0 +1,132 @@
+//! The quantization scheme: symmetric scales, i32 accumulation, f32
+//! requantization — and the scalar reference GEMM.
+//!
+//! Weights are quantized **per output channel** (one scale per GEMM
+//! output column, computed from that channel's max magnitude);
+//! activations are quantized **per tensor** (one scale for the whole
+//! matrix, calibrated offline or computed per request). Both sides are
+//! symmetric around zero with the int8 grid `[-127, 127]` (−128 is
+//! unused, so negation is exact). Products accumulate in i32 —
+//! bit-exact regardless of summation order, which is what lets the
+//! fast kernel vectorize its reduction while staying property-testably
+//! identical to [`qgemm_requant_ref`] — and one f32 multiply per output
+//! element requantizes the i32 sum back to real units.
+
+use crate::algos::tensor::Mat;
+
+/// Largest representable quantized magnitude (symmetric int8 grid).
+pub const QMAX: f32 = 127.0;
+
+/// Smallest scale ever produced: an all-zero tensor still needs a
+/// non-zero scale so dequantization stays finite.
+const MIN_SCALE: f32 = 1e-20;
+
+/// Symmetric scale mapping `[-max_abs, max_abs]` onto the int8 grid.
+pub fn symmetric_scale(max_abs: f32) -> f32 {
+    (max_abs / QMAX).max(MIN_SCALE)
+}
+
+/// Largest magnitude in a slice (0 for an empty slice).
+pub fn max_abs(xs: &[f32]) -> f32 {
+    xs.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+}
+
+/// Quantize one value: round to nearest, clamp to the symmetric grid.
+/// The result is an i8-range value carried in an i16 lane — the host
+/// analogue of DSP packing, chosen so the kernel's widening multiplies
+/// vectorize (see [`crate::kernels::qgemm`]).
+#[inline]
+pub fn quantize_value(v: f32, scale: f32) -> i16 {
+    (v / scale).round().clamp(-QMAX, QMAX) as i16
+}
+
+/// Quantize a slice with one shared (per-tensor) scale.
+pub fn quantize_slice(xs: &[f32], scale: f32) -> Vec<i16> {
+    xs.iter().map(|&v| quantize_value(v, scale)).collect()
+}
+
+/// Scalar reference for the quantized GEMM: `X (a×b) · W (b×c)` with a
+/// per-tensor activation scale, per-output-channel (per-column) weight
+/// scales, i32 accumulation in ascending-`k` order and f32
+/// requantization. [`crate::kernels::qgemm`] must match this
+/// **bit-exactly** (integer sums are order-independent; the requantize
+/// expression is kept identical on both sides).
+pub fn qgemm_requant_ref(x: &Mat, w: &Mat) -> Mat {
+    assert_eq!(x.cols, w.rows, "qgemm_requant_ref dim mismatch");
+    let (a, b, c) = (x.rows, x.cols, w.cols);
+    let sx = symmetric_scale(max_abs(&x.data));
+    let xq = quantize_slice(&x.data, sx);
+    let mut out = Mat::zeros(a, c);
+    for j in 0..c {
+        let col: Vec<f32> = (0..b).map(|k| w.get(k, j)).collect();
+        let sw = symmetric_scale(max_abs(&col));
+        let wq: Vec<i16> = col.iter().map(|&v| quantize_value(v, sw)).collect();
+        let combined = sx * sw;
+        for i in 0..a {
+            let mut acc: i32 = 0;
+            for k in 0..b {
+                acc += xq[i * b + k] as i32 * wq[k] as i32;
+            }
+            out.set(i, j, acc as f32 * combined);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn scale_maps_extremes_onto_grid() {
+        let s = symmetric_scale(2.54);
+        assert_eq!(quantize_value(2.54, s), 127);
+        assert_eq!(quantize_value(-2.54, s), -127);
+        assert_eq!(quantize_value(0.0, s), 0);
+        // out-of-range values clamp instead of wrapping
+        assert_eq!(quantize_value(1e9, s), 127);
+    }
+
+    #[test]
+    fn zero_tensor_has_finite_scale() {
+        let s = symmetric_scale(max_abs(&[0.0, 0.0]));
+        assert!(s > 0.0 && s.is_finite());
+        assert_eq!(quantize_value(0.0, s), 0);
+    }
+
+    #[test]
+    fn integer_grid_data_quantizes_exactly() {
+        // data already on the grid (max |v| = 127, integer values):
+        // scale = 1, quantization is lossless, so the quantized GEMM is
+        // exact integer arithmetic and matches the f32 matmul bitwise
+        let mut r = Rng::new(5);
+        let mut x = Mat::from_fn(5, 7, |_, _| r.i8_small() as f32);
+        let mut w = Mat::from_fn(7, 4, |_, _| r.i8_small() as f32);
+        x.data[0] = 127.0;
+        for j in 0..4 {
+            w.set(0, j, 127.0);
+        }
+        let q = qgemm_requant_ref(&x, &w);
+        let exact = x.matmul(&w);
+        assert_eq!(q.data, exact.data, "on-grid data must round-trip exactly");
+    }
+
+    #[test]
+    fn requant_error_is_bounded_on_random_data() {
+        let mut r = Rng::new(6);
+        let x = Mat::from_fn(9, 20, |_, _| r.f32_range(-1.0, 1.0));
+        let w = Mat::from_fn(20, 8, |_, _| r.f32_range(-0.5, 0.5));
+        let q = qgemm_requant_ref(&x, &w);
+        let f = x.matmul(&w);
+        let fmax = max_abs(&f.data).max(1e-6);
+        for (a, b) in q.data.iter().zip(&f.data) {
+            assert!(
+                (a - b).abs() <= 0.05 * fmax,
+                "quantization error {} vs {} exceeds 5% of range {fmax}",
+                a,
+                b
+            );
+        }
+    }
+}

@@ -17,7 +17,7 @@ use std::io::BufRead;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::api::DynamapError;
+use crate::api::{Compiler, DynamapError};
 use crate::coordinator::metrics::LatencyStats;
 use crate::graph::zoo;
 use crate::runtime::TensorBuf;
@@ -31,7 +31,10 @@ use super::queue::BatchConfig;
 use super::registry::{ModelRegistry, RegistryConfig};
 
 /// Shared flags → [`RegistryConfig`] (`--root`, `--plan-cache`,
-/// `--cap`, `--max-batch`, `--max-wait-ms`, `--seed`, `--no-synth`).
+/// `--cap`, `--max-batch`, `--max-wait-ms`, `--seed`, `--no-synth`,
+/// `--quant`). `--quant` compiles every hosted model with precision
+/// search on, so the DSE may serve layers int8 (quantized plans key
+/// their own plan-cache entries and `tune` re-solves keep the flag).
 /// Profiling stays off here; only `serve` (the command that can run
 /// the tune loop) opts in — `loadgen` must not silently add profiler
 /// overhead to the hot path it exists to measure.
@@ -54,6 +57,7 @@ fn registry_config(args: &Args, models: usize) -> RegistryConfig {
             max_batch: args.get_usize("max-batch", 8).max(1),
             max_wait: Duration::from_secs_f64(args.get_f64("max-wait-ms", 2.0).max(0.0) / 1e3),
         },
+        compiler: Compiler::new().precision_search(args.has("quant")),
         ..RegistryConfig::default()
     }
 }

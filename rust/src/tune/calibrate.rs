@@ -26,10 +26,11 @@ use crate::util::table::Table;
 
 use super::profiler::LayerObs;
 
-/// Per-family fit summary in a [`CalibratedDevice`] report.
+/// Per-key fit summary in a [`CalibratedDevice`] report.
 #[derive(Debug, Clone)]
 pub struct AlgoFitReport {
-    /// Algorithm family the fit covers.
+    /// Fit key: algorithm family, precision-suffixed when the
+    /// observations came from a quantized layer ("im2col-int8").
     pub family: String,
     /// Profiled layers behind the fit.
     pub points: usize,
@@ -48,7 +49,8 @@ pub struct AlgoFitReport {
 pub struct LayerResidual {
     /// Layer name.
     pub layer: String,
-    /// Algorithm family observed.
+    /// Algorithm observed, precision-suffixed when the layer served
+    /// quantized ("im2col-int8").
     pub algo: String,
     /// Observed steady-state latency (profile minimum), µs.
     pub observed_us: f64,
@@ -196,18 +198,28 @@ pub fn calibrate(
             continue;
         }
         let Some(spec) = specs.get(&obs.layer) else { continue };
-        let algo = resolve_algo(&obs.algo, spec);
-        if algo.family() != obs.algo {
+        // the observed label may carry a precision suffix
+        // ("im2col-int8") when the layer served quantized; price the
+        // analytic side at that same precision AND fit per
+        // (family, precision) key — a host's int8 observed/analytic
+        // ratio differs systematically from its f32 one (the int8
+        // kernel's reductions vectorize, f32's cannot), so pooling the
+        // two regimes would bias both fits. The cost model applies the
+        // calibration under the same precision-suffixed key.
+        let (family, precision) = crate::quant::parse_mapped(&obs.algo);
+        let algo = resolve_algo(family, spec);
+        if algo.family() != family {
             // the observation labels an algorithm this layer cannot run
             // (stale profile across a model change) — not evidence
             continue;
         }
-        let predicted = cm.best_conv_cost(spec, algo, p1, p2).seconds;
+        let predicted = cm.best_conv_cost_at(spec, algo, precision, p1, p2).seconds;
         if !(predicted > 0.0) {
             continue;
         }
         let observed = obs.min_us / 1e6;
-        points.entry(obs.algo.clone()).or_default().push((predicted, observed));
+        let key = crate::quant::mapped_name(family, precision);
+        points.entry(key).or_default().push((predicted, observed));
         rows.push((obs.layer.clone(), obs.algo.clone(), predicted, observed));
     }
     if points.is_empty() {
@@ -253,12 +265,18 @@ pub fn calibrate(
     }
     let residuals = rows
         .into_iter()
-        .map(|(layer, algo, pred, obs)| LayerResidual {
-            predicted_cal_us: calibration.apply(&algo, pred) * 1e6,
-            layer,
-            algo,
-            observed_us: obs * 1e6,
-            predicted_raw_us: pred * 1e6,
+        .map(|(layer, algo, pred, obs)| {
+            // normalize the observed label into the canonical
+            // (family, precision) fit key before applying
+            let (family, precision) = crate::quant::parse_mapped(&algo);
+            let key = crate::quant::mapped_name(family, precision);
+            LayerResidual {
+                predicted_cal_us: calibration.apply(&key, pred) * 1e6,
+                layer,
+                algo,
+                observed_us: obs * 1e6,
+                predicted_raw_us: pred * 1e6,
+            }
         })
         .collect();
 

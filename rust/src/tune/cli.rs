@@ -22,7 +22,7 @@ use super::remap::plan_delta;
 use super::report::observed_vs_predicted;
 
 /// `dynamap tune --model <name> --profile <file> [--device small-edge]
-/// [--hysteresis 0.05] [--out <dir|file.json>]`.
+/// [--hysteresis 0.05] [--quant] [--out <dir|file.json>]`.
 pub fn tune(args: &Args) -> i32 {
     let model = args.get_or("model", "mini-inception");
     let Some(cnn) = zoo::by_name(model) else {
@@ -55,7 +55,9 @@ pub fn tune(args: &Args) -> i32 {
             return 2;
         }
     };
-    let compiler = Compiler::new().device(device);
+    // --quant: keep the precision axis in the re-solve, so a profile
+    // recorded under a quantized plan re-maps in the same search space
+    let compiler = Compiler::new().device(device).precision_search(args.has("quant"));
 
     // base plan: what the uncalibrated model would serve
     let base = match compiler.compile(&cnn) {
@@ -71,7 +73,12 @@ pub fn tune(args: &Args) -> i32 {
         .mapping
         .layers
         .iter()
-        .map(|l| (l.name.clone(), l.cost.algo.family().to_string()))
+        .map(|l| {
+            (
+                l.name.clone(),
+                crate::quant::mapped_name(l.cost.algo.family(), l.cost.precision),
+            )
+        })
         .collect();
     let snapshot = profile.snapshot();
     println!(

@@ -41,14 +41,15 @@ impl Default for RemapConfig {
     }
 }
 
-/// One layer whose algorithm assignment changed.
+/// One layer whose (algorithm, precision) assignment changed.
 #[derive(Debug, Clone)]
 pub struct AlgoChange {
     /// Layer name.
     pub layer: String,
-    /// Family served before the remap.
+    /// Assignment served before the remap (family name, precision
+    /// suffixed when quantized — e.g. "im2col-int8").
     pub from: String,
-    /// Family the calibrated plan assigns.
+    /// Assignment the calibrated plan chooses, same spelling.
     pub to: String,
 }
 
@@ -119,9 +120,10 @@ pub fn predicted_compute_us(
 ) -> f64 {
     let mut total = 0.0;
     for (layer, spec) in conv_equivalent(cnn) {
-        let family = map.get(&layer).map(String::as_str).unwrap_or("im2col");
+        let served = map.get(&layer).map(String::as_str).unwrap_or("im2col");
+        let (family, precision) = crate::quant::parse_mapped(served);
         let algo = resolve_algo(family, &spec);
-        total += cm.best_conv_cost(&spec, algo, p1, p2).seconds;
+        total += cm.best_conv_cost_at(&spec, algo, precision, p1, p2).seconds;
     }
     total * 1e6
 }
@@ -172,7 +174,13 @@ pub fn plan_delta(
     let (p1, p2) = (artifact.plan.p1, artifact.plan.p2);
     let mut new_map = base_map.clone();
     for layer in &artifact.plan.mapping.layers {
-        new_map.insert(layer.name.clone(), layer.cost.algo.family().to_string());
+        // spell (family, precision) the serving-layer way so a
+        // precision flip (e.g. "im2col" → "im2col-int8") registers as
+        // a change exactly like an algorithm flip does
+        new_map.insert(
+            layer.name.clone(),
+            crate::quant::mapped_name(layer.cost.algo.family(), layer.cost.precision),
+        );
     }
     let changed: Vec<AlgoChange> = base_map
         .iter()

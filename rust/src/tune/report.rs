@@ -44,16 +44,17 @@ pub fn observed_vs_predicted(
         ],
     );
     for (layer, spec) in conv_equivalent(cnn) {
-        let family = algo_map.get(&layer).map(String::as_str).unwrap_or("im2col");
+        let served = algo_map.get(&layer).map(String::as_str).unwrap_or("im2col");
+        let (family, precision) = crate::quant::parse_mapped(served);
         let algo = resolve_algo(family, &spec);
-        let cost = cm.best_conv_cost(&spec, algo, p1, p2);
+        let cost = cm.best_conv_cost_at(&spec, algo, precision, p1, p2);
         let pred_us = cost.seconds * 1e6;
-        match by_key.get(&(layer.as_str(), family)) {
+        match by_key.get(&(layer.as_str(), served)) {
             Some(o) => {
                 let ratio = if pred_us > 0.0 { o.min_us / pred_us } else { 0.0 };
                 t.row(vec![
                     layer.clone(),
-                    family.to_string(),
+                    served.to_string(),
                     format!("{pred_us:.2}"),
                     cost.cycles.to_string(),
                     format!("{:.2}", o.min_us),
@@ -65,7 +66,7 @@ pub fn observed_vs_predicted(
             None => {
                 t.row(vec![
                     layer.clone(),
-                    family.to_string(),
+                    served.to_string(),
                     format!("{pred_us:.2}"),
                     cost.cycles.to_string(),
                     "-".into(),

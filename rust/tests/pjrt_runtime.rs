@@ -199,8 +199,8 @@ fn fused_artifact_matches_golden() {
 
 #[test]
 fn default_session_build_serves_golden() {
-    // covers what the removed `InferenceEngine::new(dir, Optimal)` shim
-    // exercised: a default (optimal-mapping) build over AOT artifacts
+    // the plain front door: a default (optimal-mapping) `Session::builder`
+    // build over AOT artifacts, no policy or custom map
     let Some(dir) = artifacts_dir() else { return };
     let mut session = Session::builder(dir.as_str()).build().unwrap();
     let err = session.validate_golden().unwrap();

@@ -1,0 +1,318 @@
+//! Quantized serving-path tests: the mixed-precision accuracy harness
+//! (int8 layers within a documented tolerance of the f32 golden path),
+//! the precision-aware DSE on mini-inception, and the mixed-precision
+//! plan-artifact round trip.
+//!
+//! Documented accuracy tolerance: with per-output-channel weight scales
+//! and per-tensor activation scales, every output element of a
+//! mixed-precision mini-inception inference stays within **5% of the
+//! f32 output's maximum magnitude** (measured headroom is ~3×; see the
+//! "Precision in the mapping space" section of ARCHITECTURE.md).
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use dynamap::api::{Backend, Compiler, PlanArtifact, Session};
+use dynamap::cost::gemm::Dataflow;
+use dynamap::graph::layer::Op;
+use dynamap::graph::zoo;
+use dynamap::quant::{self, Precision};
+use dynamap::runtime::TensorBuf;
+use dynamap::util::rng::Rng;
+
+/// Relative-to-range L∞ tolerance for mixed-precision inference.
+const QUANT_TOLERANCE: f32 = 0.05;
+
+fn write_f32(path: &std::path::Path, data: &[f32]) {
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    std::fs::write(path, bytes).unwrap();
+}
+
+/// Minimal artifact manifest for mini-inception with random weights and
+/// no HLO artifacts (same shape as the native-session test suite).
+fn synth_manifest_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("dynamap_quant_manifest_{}_{}", tag, std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let cnn = zoo::mini_inception();
+    let mut rng = Rng::new(0x0_11_7);
+    let mut layers = Vec::new();
+    for node in &cnn.nodes {
+        let Op::Conv(spec) = &node.op else { continue };
+        let safe = node.name.replace('/', "_");
+        let wfile = format!("w__{safe}.bin");
+        let n = spec.weight_count();
+        let w: Vec<f32> = (0..n).map(|_| rng.f32_range(-0.5, 0.5)).collect();
+        write_f32(&dir.join(&wfile), &w);
+        layers.push(format!(
+            r#"{{"name":"{}","c_in":{},"c_out":{},"h1":{},"h2":{},"k1":{},"k2":{},"s":{},"p1":{},"p2":{},"o1":{},"o2":{},"algos":{{}},"weights":"{}","weight_count":{}}}"#,
+            node.name,
+            spec.c_in,
+            spec.c_out,
+            spec.h1,
+            spec.h2,
+            spec.k1,
+            spec.k2,
+            spec.s,
+            spec.p1,
+            spec.p2,
+            spec.o1(),
+            spec.o2(),
+            wfile,
+            n
+        ));
+    }
+    let manifest = format!(
+        r#"{{"model":"mini-inception","input":{{"c":4,"h1":16,"h2":16}},"layers":[{}],"golden_input":"","golden_output":""}}"#,
+        layers.join(",")
+    );
+    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    dir
+}
+
+fn random_inputs(n: usize, seed: u64) -> Vec<TensorBuf> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            TensorBuf::new(
+                vec![4, 16, 16],
+                (0..4 * 16 * 16).map(|_| rng.f32_range(-1.0, 1.0)).collect(),
+            )
+        })
+        .collect()
+}
+
+/// `layer → family` maps for the accuracy harness: the f32 golden map
+/// and the mixed map that serves every im2col/kn2row layer int8 while
+/// the 3×3 layers stay winograd/f32 — the shape of plan the
+/// precision-aware DSE produces.
+fn golden_and_mixed_maps() -> (BTreeMap<String, String>, BTreeMap<String, String>) {
+    let cnn = zoo::mini_inception();
+    let mut golden = BTreeMap::new();
+    let mut mixed = BTreeMap::new();
+    for node in &cnn.nodes {
+        let Op::Conv(spec) = &node.op else { continue };
+        let (f32_name, mixed_name) = match spec.k1 {
+            3 => ("winograd", "winograd".to_string()),
+            5 => ("kn2row", quant::mapped_name("kn2row", Precision::Int8)),
+            _ => ("im2col", quant::mapped_name("im2col", Precision::Int8)),
+        };
+        golden.insert(node.name.clone(), f32_name.to_string());
+        mixed.insert(node.name.clone(), mixed_name);
+    }
+    (golden, mixed)
+}
+
+fn assert_within_tolerance(q: &TensorBuf, golden: &TensorBuf, what: &str) {
+    assert_eq!(q.shape, golden.shape, "{what}: shape mismatch");
+    let range = golden.data.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-6);
+    for (i, (a, b)) in q.data.iter().zip(&golden.data).enumerate() {
+        assert!(
+            (a - b).abs() <= QUANT_TOLERANCE * range,
+            "{what}: elem {i}: |{a} - {b}| exceeds {QUANT_TOLERANCE} of range {range}"
+        );
+    }
+}
+
+#[test]
+fn mixed_precision_accuracy_within_documented_tolerance() {
+    let dir = synth_manifest_dir("accuracy");
+    let (golden_map, mixed_map) = golden_and_mixed_maps();
+    let mut golden = Session::builder(dir.to_str().unwrap())
+        .backend(Backend::Native)
+        .algo_map(golden_map)
+        .build()
+        .unwrap();
+    let mut mixed = Session::builder(dir.to_str().unwrap())
+        .backend(Backend::Native)
+        .algo_map(mixed_map.clone())
+        .build()
+        .unwrap();
+    // the session reports the precisions it actually serves
+    assert_eq!(mixed.algo_map(), &mixed_map, "no clamping expected for this map");
+    let state = mixed.native_state().unwrap();
+    assert!(state.int8_count() >= 3, "1×1 and 5×5 layers must serve int8");
+    assert_eq!(state.precision("inc/b2_3x3"), Some(Precision::F32), "winograd stays f32");
+
+    for (i, input) in random_inputs(4, 40).iter().enumerate() {
+        let (g, _) = golden.infer(input).unwrap();
+        let (q, _) = mixed.infer(input).unwrap();
+        assert_within_tolerance(&q, &g, &format!("dynamic-scale request {i}"));
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn calibrated_activation_scales_hold_the_same_tolerance() {
+    let dir = synth_manifest_dir("calibrated");
+    let (golden_map, mixed_map) = golden_and_mixed_maps();
+    let mut golden = Session::builder(dir.to_str().unwrap())
+        .backend(Backend::Native)
+        .algo_map(golden_map)
+        .build()
+        .unwrap();
+    // calibrate per-tensor activation scales from a handful of profiled
+    // batches on the f32 path...
+    let scales = golden
+        .native_state()
+        .unwrap()
+        .calibrate_activations(&random_inputs(8, 41))
+        .unwrap();
+    assert_eq!(scales.len(), 7, "one scale per conv layer");
+    // ...then serve quantized with the calibrated (static) scales
+    let mut mixed = Session::builder(dir.to_str().unwrap())
+        .backend(Backend::Native)
+        .algo_map(mixed_map)
+        .act_scales(scales.clone())
+        .build()
+        .unwrap();
+    // calibration survives a JSON round trip unchanged
+    let path = dir.join("act_scales.json");
+    scales.save(&path).unwrap();
+    assert_eq!(dynamap::quant::ActScales::load(&path).unwrap(), scales);
+
+    for (i, input) in random_inputs(4, 42).iter().enumerate() {
+        let (g, _) = golden.infer(input).unwrap();
+        let (q, _) = mixed.infer(input).unwrap();
+        assert_within_tolerance(&q, &g, &format!("static-scale request {i}"));
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The precision-aware compiler used by the DSE-selection and
+/// round-trip tests. The NS-only 8×8 operating point is where the
+/// precision trade-off is legible on mini-inception's tiny layers:
+/// Winograd/f32 wins the 3×3/5×5 layers outright (its 2.25× multiply
+/// reduction beats the 2× DSP packing once `I_SA` is small), while the
+/// head's `C_out = 16 > P_SA2` column tiling halves under int8 packing.
+/// Under free dataflow choice the IS dataflow lets packed im2col win
+/// everything, which is a valid plan but not the mix this test pins.
+fn mixed_compiler() -> Compiler {
+    Compiler::new()
+        .fixed_shape(8, 8)
+        .force_dataflow(Dataflow::NS)
+        .precision_search(true)
+}
+
+#[test]
+fn dse_selects_int8_and_winograd_f32_on_mini_inception() {
+    let artifact = mixed_compiler().compile(&zoo::mini_inception()).unwrap();
+    let layers = &artifact.plan.mapping.layers;
+    assert_eq!(layers.len(), 7);
+    let int8 = layers.iter().filter(|l| l.cost.precision == Precision::Int8).count();
+    let wino_f32 = layers
+        .iter()
+        .filter(|l| {
+            matches!(l.cost.algo, dynamap::cost::Algo::Winograd { .. })
+                && l.cost.precision == Precision::F32
+        })
+        .count();
+    assert!(int8 >= 1, "DSE must quantize at least one layer: {:?}", algo_summary(layers));
+    assert!(
+        wino_f32 >= 1,
+        "DSE must keep at least one winograd/f32 layer: {:?}",
+        algo_summary(layers)
+    );
+    // the winograd-stays-f32 constraint holds for every selected layer
+    assert!(layers
+        .iter()
+        .filter(|l| matches!(
+            l.cost.algo,
+            dynamap::cost::Algo::Winograd { .. } | dynamap::cost::Algo::WinogradStrided { .. }
+        ))
+        .all(|l| l.cost.precision == Precision::F32));
+    // the head's wide output tiling is exactly what DSP packing halves
+    let head = layers.iter().find(|l| l.name == "head").unwrap();
+    assert_eq!(head.cost.precision, Precision::Int8, "{:?}", algo_summary(layers));
+}
+
+fn algo_summary(
+    layers: &[dynamap::cost::graph_build::LayerAssignment],
+) -> Vec<(String, String)> {
+    layers
+        .iter()
+        .map(|l| (l.name.clone(), quant::mapped_name(&l.cost.algo.name(), l.cost.precision)))
+        .collect()
+}
+
+#[test]
+fn mixed_precision_plan_round_trips_with_identical_map_and_fingerprint() {
+    let compiler = mixed_compiler();
+    let cnn = zoo::mini_inception();
+    let a = compiler.compile(&cnn).unwrap();
+    let dir =
+        std::env::temp_dir().join(format!("dynamap_quant_plan_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let path = dir.join("mini.json");
+    a.save(&path).unwrap();
+    let b = PlanArtifact::load(&path).unwrap();
+
+    // identical per-layer (algorithm, precision) map
+    let map = |art: &PlanArtifact| -> Vec<(String, String)> {
+        art.plan
+            .mapping
+            .layers
+            .iter()
+            .map(|l| {
+                (l.name.clone(), quant::mapped_name(l.cost.algo.family(), l.cost.precision))
+            })
+            .collect()
+    };
+    assert_eq!(map(&a), map(&b));
+    assert!(
+        map(&a).iter().any(|(_, m)| m.ends_with("-int8")),
+        "round trip must exercise a genuinely mixed plan: {:?}",
+        map(&a)
+    );
+    // identical cache fingerprint, and the cache serves it back without
+    // re-running the DSE
+    assert_eq!(a.fingerprint, b.fingerprint);
+    assert_eq!(a.fingerprint, compiler.fingerprint());
+    let cache = dynamap::api::PlanCache::new(&dir);
+    let (c, cached) = {
+        // seed the cache with the artifact under its canonical name
+        a.save(cache.path_for(&compiler, &cnn.name)).unwrap();
+        cache.load_or_compile(&compiler, &cnn).unwrap()
+    };
+    assert!(cached, "fingerprint-matched mixed plan must come from the cache");
+    assert_eq!(map(&a), map(&c));
+    assert_eq!(compiler.compile_count(), 1, "only the original compile ran the DSE");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn native_session_serves_a_mixed_precision_plan() {
+    let dir = synth_manifest_dir("plan_serving");
+    let artifact = mixed_compiler().compile(&zoo::mini_inception()).unwrap();
+    let expected: BTreeMap<String, Precision> = artifact
+        .plan
+        .mapping
+        .layers
+        .iter()
+        .map(|l| (l.name.clone(), l.cost.precision))
+        .collect();
+    let mut session = Session::builder(dir.to_str().unwrap())
+        .backend(Backend::Native)
+        .plan(artifact)
+        .build()
+        .unwrap();
+    let state = session.native_state().unwrap();
+    for (layer, precision) in &expected {
+        assert_eq!(
+            state.precision(layer),
+            Some(*precision),
+            "layer {layer} must serve at the plan's precision"
+        );
+    }
+    assert!(state.int8_count() >= 1);
+    // and it still infers sane outputs
+    let (out, metrics) = session.infer(&random_inputs(1, 43)[0]).unwrap();
+    assert_eq!(out.shape, vec![16, 8, 8]);
+    assert!(out.data.iter().all(|v| v.is_finite()));
+    assert_eq!(metrics.per_layer_us.len(), 7);
+    std::fs::remove_dir_all(&dir).ok();
+}
