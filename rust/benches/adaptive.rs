@@ -52,6 +52,7 @@ fn main() {
         seed: 99,
         compiler: Compiler::new().device(Device::small_edge()).calibration(skew),
         batch: BatchConfig::default(),
+        max_inflight: 0,
         profile: true,
     });
     let host = registry.host("mini-inception").expect("host mini-inception");

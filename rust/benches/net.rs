@@ -1,0 +1,163 @@
+//! `cargo bench` target for the TCP front-end: the open-loop overload
+//! study of the ROADMAP §Performance methodology (fixed seed 99,
+//! release profile, loopback, `DYNAMAP_BENCH_FAST` unset for real
+//! numbers).
+//!
+//! The run first estimates the server's closed-loop capacity with a
+//! short burst, then offers seeded-Poisson open-loop load at 0.25×,
+//! 0.5×, 1×, 2× and 4× that capacity through [`dynamap::net::Client`]
+//! against a [`dynamap::net::NetServer`] on an ephemeral loopback port
+//! (mini-inception, `max_inflight = 32`). For each point it prints
+//! offered vs achieved QPS, shed fraction and p50/p99/p99.9 latency
+//! (measured from the *scheduled* arrival instant, so queue collapse is
+//! charged to the tail — no coordinated omission), plus the worst
+//! shed-reply time. The summary names the knee: the highest offered
+//! load the server still absorbs at ≥95%.
+//!
+//! `DYNAMAP_BENCH_ASSERT=1` turns the overload contract into hard
+//! failures: beyond the knee the server must shed (not queue without
+//! bound), every shed reply must land within the 100 ms deadline, and
+//! the server must still answer a ping after the sweep.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use dynamap::api::{Compiler, Device};
+use dynamap::net::{Client, NetServer};
+use dynamap::serve::loadgen::{
+    model_input_dims, open_loop, open_loop_input, OpenLoopConfig, OpenLoopReport,
+};
+use dynamap::serve::{BatchConfig, ModelRegistry, RegistryConfig};
+use dynamap::util::parallel::parallel_run;
+
+const MODEL: &str = "mini-inception";
+const MAX_INFLIGHT: usize = 32;
+/// Every shed reply must land within this deadline (µs) — the whole
+/// point of admission control is that "no" arrives fast.
+const SHED_DEADLINE_US: f64 = 100_000.0;
+
+fn main() {
+    let fast = std::env::var("DYNAMAP_BENCH_FAST").is_ok();
+    let assert_gate = std::env::var("DYNAMAP_BENCH_ASSERT").is_ok();
+    let root =
+        std::env::temp_dir().join(format!("dynamap_net_bench_{}", std::process::id()));
+    std::fs::remove_dir_all(&root).ok();
+
+    let reg = Arc::new(ModelRegistry::new(RegistryConfig {
+        artifacts_root: root.join("zoo"),
+        plan_cache: Some(root.join("plans")),
+        capacity: 0,
+        synthesize_missing: true,
+        seed: 99,
+        compiler: Compiler::new().device(Device::small_edge()),
+        batch: BatchConfig { max_batch: 8, max_wait: Duration::from_millis(2) },
+        max_inflight: MAX_INFLIGHT,
+        profile: false,
+    }));
+    reg.host(MODEL).expect("host mini-inception"); // compile before timing
+    let dims = model_input_dims(MODEL).expect("zoo dims");
+
+    let mut server = NetServer::bind(reg.clone(), "127.0.0.1:0").expect("bind loopback");
+    let client = Client::connect(server.local_addr().to_string()).expect("connect");
+
+    // closed-loop capacity estimate: 8 connections, back-to-back
+    // requests — the denominator the sweep multiplies
+    let (burst_clients, burst_per) = if fast { (4, 8) } else { (8, 32) };
+    let t0 = Instant::now();
+    parallel_run(burst_clients, |w| {
+        for j in 0..burst_per {
+            client
+                .infer(MODEL, &open_loop_input(99, w * burst_per + j, dims))
+                .expect("burst infer");
+        }
+    });
+    let capacity = (burst_clients * burst_per) as f64 / t0.elapsed().as_secs_f64();
+    println!(
+        "net/{MODEL}: closed-loop capacity ≈ {capacity:.0} qps \
+         ({burst_clients} conns × {burst_per} reqs, loopback, max_inflight={MAX_INFLIGHT})"
+    );
+
+    // the open-loop sweep: offered load as a multiple of capacity
+    let (secs_per_point, req_cap) = if fast { (0.25, 400) } else { (2.0, 4000) };
+    println!(
+        "{:>12} {:>12} {:>6} {:>7} {:>9} {:>9} {:>10} {:>12}",
+        "offered qps", "achieved", "ok", "shed%", "p50 µs", "p99 µs", "p99.9 µs", "shed max µs"
+    );
+    let mut points: Vec<OpenLoopReport> = Vec::new();
+    for mult in [0.25, 0.5, 1.0, 2.0, 4.0] {
+        let offered = capacity * mult;
+        let cfg = OpenLoopConfig {
+            model: MODEL.to_string(),
+            rate_qps: offered,
+            requests: ((offered * secs_per_point) as usize).clamp(32, req_cap),
+            seed: 99,
+            workers: 64,
+        };
+        let r = open_loop(&client, &cfg).expect("open loop");
+        let tail = r.latency.percentiles(&[50.0, 99.0, 99.9]);
+        println!(
+            "{:>12.0} {:>12.1} {:>6} {:>6.1}% {:>9.0} {:>9.0} {:>10.0} {:>12.0}",
+            r.offered_qps,
+            r.achieved_qps,
+            r.ok,
+            100.0 * r.shed as f64 / r.sent as f64,
+            tail[0],
+            tail[1],
+            tail[2],
+            r.shed_latency.max(),
+        );
+        points.push(r);
+    }
+
+    for s in reg.metrics().snapshots() {
+        println!("  {}", s.summary());
+    }
+
+    // knee: the highest offered load still absorbed at >= 95%
+    let knee = points
+        .iter()
+        .filter(|r| r.achieved_qps >= 0.95 * r.offered_qps)
+        .map(|r| r.offered_qps)
+        .fold(0.0f64, f64::max);
+    let worst_shed_us =
+        points.iter().map(|r| r.shed_latency.max()).fold(0.0f64, f64::max);
+    let beyond: Vec<&OpenLoopReport> =
+        points.iter().filter(|r| r.offered_qps > knee).collect();
+    let shed_beyond: usize = beyond.iter().map(|r| r.shed).sum();
+    if knee > 0.0 {
+        println!(
+            "net knee point: {knee:.0} qps offered still achieves ≥95%; beyond it the \
+             server shed {shed_beyond} requests (worst shed reply {worst_shed_us:.0} µs)"
+        );
+    } else {
+        println!(
+            "net knee point: below the sweep floor ({:.0} qps) on this host; \
+             {shed_beyond} requests shed (worst shed reply {worst_shed_us:.0} µs)",
+            capacity * 0.25
+        );
+    }
+
+    if assert_gate {
+        // beyond the knee the server must say "no" rather than queue
+        // without bound — the last point is 4× capacity, overload is
+        // certain there
+        assert!(
+            points.last().map(|r| r.shed > 0).unwrap_or(false),
+            "4x-capacity open loop shed nothing: admission control is not engaging"
+        );
+        assert!(
+            worst_shed_us <= SHED_DEADLINE_US,
+            "shed reply blew the {SHED_DEADLINE_US:.0}µs deadline: {worst_shed_us:.0}µs"
+        );
+        // typed sheds only — generic errors under overload are a bug
+        let errors: usize = points.iter().map(|r| r.errors).sum();
+        assert_eq!(errors, 0, "open loop saw non-Overloaded failures under load");
+        // and the server survived the whole study
+        client.ping().expect("server must still answer after the sweep");
+    }
+
+    client.shutdown_server().expect("drain request");
+    server.shutdown();
+    reg.shutdown();
+    std::fs::remove_dir_all(&root).ok();
+}

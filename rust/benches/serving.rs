@@ -32,6 +32,7 @@ fn registry(root: &std::path::Path, max_batch: usize) -> ModelRegistry {
         seed: 99,
         compiler: Compiler::new().device(Device::small_edge()),
         batch: BatchConfig { max_batch, max_wait: Duration::from_millis(2) },
+        max_inflight: 0,
         profile: false,
     })
 }

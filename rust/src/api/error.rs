@@ -51,6 +51,28 @@ pub enum DynamapError {
         /// Model whose queue was gone.
         model: String,
     },
+    /// Admission control shed the request: the model's bounded in-flight
+    /// budget was full, so the request was rejected *before* entering
+    /// the batch queue instead of growing it unboundedly. Retriable —
+    /// `retry_after_ms` is the server's backoff hint, derived from the
+    /// model's recent batch latency.
+    Overloaded {
+        /// Model whose in-flight budget was exhausted.
+        model: String,
+        /// Suggested client backoff before retrying, milliseconds (≥ 1).
+        retry_after_ms: u64,
+    },
+    /// A wire-protocol violation on the network front-end: bad magic,
+    /// unsupported version, truncated frame, oversized payload or a
+    /// malformed frame body. The server replies with a typed protocol
+    /// error frame (when the socket still permits) and closes the
+    /// connection; the serving engine itself is unaffected.
+    Protocol(String),
+    /// Network transport failure (connect, read or write on the TCP
+    /// front-end). Distinct from [`DynamapError::Protocol`]: the bytes
+    /// never arrived, rather than arriving malformed. Inference requests
+    /// are stateless, so retrying on a fresh connection is safe.
+    Net(String),
 }
 
 impl DynamapError {
@@ -91,6 +113,15 @@ impl fmt::Display for DynamapError {
             DynamapError::QueueClosed { model } => {
                 write!(f, "serving error: queue for model '{}' is shut down", model)
             }
+            DynamapError::Overloaded { model, retry_after_ms } => {
+                write!(
+                    f,
+                    "overloaded: model '{}' shed the request (retry after {} ms)",
+                    model, retry_after_ms
+                )
+            }
+            DynamapError::Protocol(m) => write!(f, "protocol error: {}", m),
+            DynamapError::Net(m) => write!(f, "network error: {}", m),
         }
     }
 }
@@ -133,6 +164,16 @@ mod tests {
 
         let e = DynamapError::UnknownModel("resnet-99".into());
         assert!(e.to_string().contains("resnet-99"));
+
+        let e = DynamapError::Overloaded { model: "mini".into(), retry_after_ms: 7 };
+        let s = e.to_string();
+        assert!(s.contains("mini") && s.contains("7 ms"), "{s}");
+
+        let e = DynamapError::Protocol("bad magic 0xBEEF".into());
+        assert!(e.to_string().contains("bad magic"), "{e}");
+
+        let e = DynamapError::Net("connection refused".into());
+        assert!(e.to_string().contains("connection refused"), "{e}");
     }
 
     #[test]

@@ -77,8 +77,13 @@
 //!   artifacts produced by `python/compile/aot.py` and executes them.
 //! * [`serve`] — multi-model serving engine on top of [`api::Session`]:
 //!   model registry with LRU eviction and a shared plan cache, dynamic
-//!   batching queues, per-model QPS/tail-latency metrics, and the
-//!   closed-loop load generator behind `dynamap serve`/`loadgen`.
+//!   batching queues, per-model QPS/tail-latency metrics, admission
+//!   control with typed `Overloaded` shedding, and the closed- and
+//!   open-loop load generators behind `dynamap serve`/`loadgen`.
+//! * [`net`] — production TCP front-end over [`serve`]: versioned
+//!   length-prefixed wire protocol, blocking threaded [`net::NetServer`]
+//!   with graceful drain, and the pooled [`net::Client`]
+//!   (`dynamap serve --listen`, `loadgen --connect`).
 //! * [`tune`] — online adaptation: per-layer latency profiling on the
 //!   native serving path, least-squares cost-model calibration,
 //!   DSE re-solve and zero-downtime plan hot-swap (`dynamap tune`,
@@ -102,6 +107,7 @@ pub mod algos;
 pub mod kernels;
 pub mod runtime;
 pub mod serve;
+pub mod net;
 pub mod tune;
 pub mod coordinator;
 pub mod emit;

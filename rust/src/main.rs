@@ -10,14 +10,19 @@
 //! * `simulate --model <name>` — cycle-level overlay simulation.
 //! * `infer [--plan-cache DIR]` — end-to-end functional inference
 //!   through PJRT artifacts, optionally caching the DSE plan on disk.
-//! * `serve --models <a,b,…> [--tune]` — host several models behind
-//!   the multi-model engine (registry + dynamic batching) and answer
-//!   stdin commands (`infer <model> [n]`, `stats`, `models`,
-//!   `profile <model> [file]`, `quit`); `--tune` runs the online
+//! * `serve --models <a,b,…> [--listen ADDR] [--max-inflight N]
+//!   [--tune]` — host several models behind the multi-model engine
+//!   (registry + dynamic batching). `--listen` serves the TCP wire
+//!   protocol with admission control and graceful drain; otherwise a
+//!   stdin REPL answers `infer <model> [n]`, `stats`, `models`,
+//!   `profile <model> [file]`, `quit`. `--tune` runs the online
 //!   profile → calibrate → remap → hot-swap loop.
 //! * `loadgen --models <a,b,…> --clients N --requests M` — seeded
 //!   closed-loop load through the serving engine; `--compare` reruns
-//!   the identical workload unbatched and prints the speedup.
+//!   the identical workload unbatched and prints the speedup. With
+//!   `--rate QPS` the load is open-loop seeded-Poisson instead (so
+//!   overload is reachable), and `--connect ADDR` aims it at a running
+//!   `serve --listen` server over TCP (`--shutdown` drains it after).
 //! * `tune --model <name> --profile <file>` — one-shot cost-model
 //!   calibration + re-map from a recorded profile; prints the residual
 //!   report, the algorithm-map diff and the predicted speedup.
@@ -32,7 +37,7 @@ use dynamap::util::table::Table;
 
 fn main() {
     let args = Args::parse_env(&[
-        "json", "verbose", "no-fuse", "no-synth", "compare", "tune", "quant",
+        "json", "verbose", "no-fuse", "no-synth", "compare", "tune", "quant", "shutdown",
     ]);
     let code = match args.subcommand.as_deref() {
         Some("zoo") => cmd_zoo(),
@@ -50,7 +55,8 @@ fn main() {
             eprintln!(
                 "usage: dynamap <zoo|dse|compile|baselines|simulate|infer|serve|loadgen|\
                  tune|figures|emit> [--model NAME] [--models A,B] [--clients N] \
-                 [--requests M] [--dsp N] [--out DIR] [--plan-cache DIR] \
+                 [--requests M] [--listen ADDR] [--connect ADDR] [--rate QPS] \
+                 [--max-inflight N] [--dsp N] [--out DIR] [--plan-cache DIR] \
                  [--profile FILE] [--tune] [--quant] [--json]"
             );
             2

@@ -1,0 +1,169 @@
+//! [`Client`] — blocking TCP client for the DYNAMAP wire protocol,
+//! with connection pooling and one transparent reconnect.
+//!
+//! The protocol is strictly request-reply, so a connection is "free"
+//! whenever no call is using it: [`Client`] keeps a small pool of idle
+//! connections, checks one out per call and returns it afterwards.
+//! Typed server errors (`Overloaded`, `UnknownModel`, …) leave the
+//! stream on a frame boundary, so the connection goes back to the pool;
+//! transport failures ([`DynamapError::Net`]) discard the connection
+//! and — because inference requests are stateless and idempotent —
+//! retry exactly once on a freshly dialed one, which absorbs the
+//! common case of a pooled connection going stale between calls.
+//! Protocol errors never retry: the stream is out of sync, and
+//! re-sending bytes at a confused peer helps nobody.
+
+use std::net::TcpStream;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::api::DynamapError;
+use crate::runtime::TensorBuf;
+use crate::serve::loadgen::InferTarget;
+
+use super::protocol::{read_frame, write_frame, Frame};
+
+/// Idle connections kept per client (beyond this, checked-in
+/// connections are simply closed).
+const MAX_POOL: usize = 16;
+
+/// A blocking client for one server address; cheap to share across
+/// threads (`&self` methods, pool behind a mutex held only during
+/// checkout/checkin — never across a network round trip).
+pub struct Client {
+    addr: String,
+    pool: Mutex<Vec<TcpStream>>,
+}
+
+impl Client {
+    /// Connect to `addr` (e.g. `"127.0.0.1:4071"`), validating the
+    /// server is reachable by dialing one pooled connection.
+    pub fn connect(addr: impl Into<String>) -> Result<Client, DynamapError> {
+        let client = Client { addr: addr.into(), pool: Mutex::new(Vec::new()) };
+        let conn = client.dial()?;
+        client.checkin(conn);
+        Ok(client)
+    }
+
+    /// The server address this client dials.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    fn dial(&self) -> Result<TcpStream, DynamapError> {
+        let stream = TcpStream::connect(&self.addr)
+            .map_err(|e| DynamapError::Net(format!("connect {} failed: {e}", self.addr)))?;
+        let _ = stream.set_nodelay(true);
+        Ok(stream)
+    }
+
+    fn checkout(&self) -> Result<TcpStream, DynamapError> {
+        let pooled = self.pool.lock().unwrap_or_else(|p| p.into_inner()).pop();
+        match pooled {
+            Some(conn) => Ok(conn),
+            None => self.dial(),
+        }
+    }
+
+    fn checkin(&self, conn: TcpStream) {
+        let mut pool = self.pool.lock().unwrap_or_else(|p| p.into_inner());
+        if pool.len() < MAX_POOL {
+            pool.push(conn);
+        }
+    }
+
+    /// One request-reply round trip on a checked-out connection, with
+    /// a single retry on transport failure (fresh connection). Returns
+    /// the reply frame with the connection already returned to the
+    /// pool — except after `Shutdown`, whose connection is spent.
+    fn request(&self, frame: &Frame) -> Result<Frame, DynamapError> {
+        let mut last_err = None;
+        for attempt in 0..2 {
+            // first attempt may use a pooled (possibly stale)
+            // connection; the retry always dials fresh
+            let mut conn = if attempt == 0 { self.checkout()? } else { self.dial()? };
+            match roundtrip(&mut conn, frame) {
+                Ok(reply) => {
+                    if !matches!(frame, Frame::Shutdown) {
+                        self.checkin(conn);
+                    }
+                    return Ok(reply);
+                }
+                Err(e @ DynamapError::Net(_)) => {
+                    last_err = Some(e); // dropped conn; retry once
+                }
+                Err(e) => return Err(e), // protocol error: never retry
+            }
+        }
+        Err(last_err.expect("retry loop ran"))
+    }
+
+    /// Serve one inference for `model`; returns the output tensor
+    /// (bitwise-equal to a local `Session::infer` of the same request)
+    /// and the server-side end-to-end latency in µs. Server-side
+    /// failures come back as their typed [`DynamapError`] — including
+    /// the retriable `Overloaded` with its `retry_after_ms` hint, which
+    /// this client deliberately does *not* sleep on: backoff policy
+    /// belongs to the caller.
+    pub fn infer(
+        &self,
+        model: &str,
+        input: &TensorBuf,
+    ) -> Result<(TensorBuf, f64), DynamapError> {
+        let frame = Frame::Infer { model: model.to_string(), input: input.clone() };
+        match self.request(&frame)? {
+            Frame::InferOk { output, server_us } => Ok((output, server_us)),
+            Frame::Error(e) => Err(e.into()),
+            other => Err(unexpected("InferOk", &other)),
+        }
+    }
+
+    /// Liveness probe; returns the round-trip time.
+    pub fn ping(&self) -> Result<Duration, DynamapError> {
+        let t0 = Instant::now();
+        match self.request(&Frame::Ping)? {
+            Frame::Pong => Ok(t0.elapsed()),
+            Frame::Error(e) => Err(e.into()),
+            other => Err(unexpected("Pong", &other)),
+        }
+    }
+
+    /// Ask the server to drain and shut down; returns once the server
+    /// has acked (drain begins immediately after).
+    pub fn shutdown_server(&self) -> Result<(), DynamapError> {
+        match self.request(&Frame::Shutdown)? {
+            Frame::ShutdownAck => Ok(()),
+            Frame::Error(e) => Err(e.into()),
+            other => Err(unexpected("ShutdownAck", &other)),
+        }
+    }
+}
+
+impl InferTarget for Client {
+    fn infer_once(&self, model: &str, input: &TensorBuf) -> Result<TensorBuf, DynamapError> {
+        self.infer(model, input).map(|(out, _)| out)
+    }
+}
+
+fn unexpected(wanted: &str, got: &Frame) -> DynamapError {
+    let kind = match got {
+        Frame::Infer { .. } => "Infer",
+        Frame::Ping => "Ping",
+        Frame::Shutdown => "Shutdown",
+        Frame::InferOk { .. } => "InferOk",
+        Frame::Pong => "Pong",
+        Frame::ShutdownAck => "ShutdownAck",
+        Frame::Error(_) => "Error",
+    };
+    DynamapError::Protocol(format!("expected a {wanted} reply, got {kind}"))
+}
+
+/// Write `frame`, read one reply. A clean server close mid-call is a
+/// transport failure (the pooled connection went stale), not protocol.
+fn roundtrip(conn: &mut TcpStream, frame: &Frame) -> Result<Frame, DynamapError> {
+    write_frame(conn, frame)?;
+    match read_frame(conn)? {
+        Some(reply) => Ok(reply),
+        None => Err(DynamapError::Net("server closed the connection".into())),
+    }
+}

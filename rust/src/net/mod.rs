@@ -1,0 +1,51 @@
+//! Production TCP front-end for the serving engine — `dynamap serve
+//! --listen` and `loadgen --connect`.
+//!
+//! Three pieces, std-TCP only (no async runtime — the whole crate runs
+//! on scoped threads and blocking I/O):
+//!
+//! * [`protocol`] — the versioned, length-prefixed binary wire format:
+//!   `Infer`/`Ping`/`Shutdown` requests, typed error frames
+//!   ([`WireError`] mirrors the serving subset of
+//!   [`crate::api::DynamapError`]), hard payload caps, and decode paths
+//!   that turn every malformed byte sequence into a typed
+//!   `Protocol` error instead of a panic.
+//! * [`server`] — [`NetServer`]: accept thread + one blocking worker
+//!   per connection, all submitting into the shared
+//!   [`crate::serve::ModelRegistry`] so network callers batch together
+//!   with in-process ones. Admission control
+//!   ([`crate::serve::RegistryConfig::max_inflight`]) sheds excess load
+//!   with retriable `Overloaded` frames; [`NetServer::shutdown`]
+//!   drains gracefully — every accepted request gets its reply, late
+//!   connects are refused by the closed listener.
+//! * [`client`] — [`Client`]: blocking, connection-pooled,
+//!   one-transparent-reconnect. Implements
+//!   [`crate::serve::loadgen::InferTarget`], so the open-loop generator
+//!   drives a remote server exactly as it drives an in-process
+//!   registry.
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use dynamap::net::{Client, NetServer};
+//! use dynamap::serve::{ModelRegistry, RegistryConfig};
+//!
+//! let registry = Arc::new(ModelRegistry::new(RegistryConfig::default()));
+//! let mut server = NetServer::bind(registry, "127.0.0.1:0")?;
+//! let client = Client::connect(server.local_addr().to_string())?;
+//! let input = dynamap::runtime::TensorBuf::zeros(vec![4, 16, 16]);
+//! let (output, server_us) = client.infer("mini", &input)?;
+//! println!("{:?} in {server_us:.0}µs", output.shape);
+//! client.shutdown_server()?;
+//! server.shutdown(); // drain: every accepted request gets its reply
+//! # Ok::<(), dynamap::api::DynamapError>(())
+//! ```
+#![warn(missing_docs)]
+#![deny(clippy::correctness, clippy::suspicious)]
+
+pub mod client;
+pub mod protocol;
+pub mod server;
+
+pub use client::Client;
+pub use protocol::{Frame, WireError};
+pub use server::NetServer;

@@ -1,0 +1,628 @@
+//! The length-prefixed binary wire protocol of the TCP front-end.
+//!
+//! Every frame is an 8-byte header — magic `0xD1A7` (u16 LE), protocol
+//! version (u8), frame kind (u8), payload length (u32 LE) — followed by
+//! `len` payload bytes. Integers are little-endian throughout; strings
+//! are u16-length-prefixed UTF-8; tensors are a u8 rank, u32 dimensions
+//! and raw f32 LE data whose element count must equal the dimension
+//! product. Anything violating the framing — bad magic, unsupported
+//! version, unknown kind, payload over [`MAX_PAYLOAD`], short reads,
+//! trailing bytes — decodes to the typed
+//! [`DynamapError::Protocol`], never a panic, so a malicious or
+//! confused peer cannot take down a server thread.
+//!
+//! [`read_frame`] distinguishes three outcomes a server loop needs:
+//! `Ok(Some(frame))` (a complete frame), `Ok(None)` (clean EOF on a
+//! frame boundary — the peer hung up) and `Err(..)` (protocol violation
+//! or transport failure).
+
+use std::io::{Read, Write};
+
+use crate::api::DynamapError;
+use crate::runtime::TensorBuf;
+
+/// Frame magic: the first two header bytes of every DYNAMAP frame.
+pub const MAGIC: u16 = 0xD1A7;
+/// Current protocol version; bumped on any incompatible framing change.
+pub const VERSION: u8 = 1;
+/// Hard cap on a frame payload (64 MiB) — read before allocating, so an
+/// adversarial length field cannot force a huge allocation.
+pub const MAX_PAYLOAD: u32 = 64 << 20;
+/// Hard cap on tensor rank over the wire.
+pub const MAX_RANK: u8 = 8;
+
+/// One protocol message, request or response.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Request: serve one inference for `model`.
+    Infer {
+        /// Zoo model name (aliases accepted, as in [`crate::serve::ModelRegistry`]).
+        model: String,
+        /// Input tensor.
+        input: TensorBuf,
+    },
+    /// Request: liveness probe.
+    Ping,
+    /// Request: begin graceful drain and shut the server down.
+    Shutdown,
+    /// Response to [`Frame::Infer`]: the output plus server-side
+    /// end-to-end latency in microseconds.
+    InferOk {
+        /// Output tensor (bitwise-equal to `Session::infer`).
+        output: TensorBuf,
+        /// Server-side end-to-end latency, µs.
+        server_us: f64,
+    },
+    /// Response to [`Frame::Ping`].
+    Pong,
+    /// Response to [`Frame::Shutdown`]: drain has begun.
+    ShutdownAck,
+    /// Typed failure response to any request.
+    Error(WireError),
+}
+
+/// The error taxonomy a server can put on the wire — the serving-path
+/// subset of [`DynamapError`], flattened into stable wire codes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireError {
+    /// Admission control shed the request; retriable after the hint.
+    Overloaded {
+        /// Model whose in-flight budget was full.
+        model: String,
+        /// Suggested backoff, milliseconds.
+        retry_after_ms: u64,
+    },
+    /// The model is not in the zoo registry.
+    UnknownModel(String),
+    /// Input tensor shape mismatch.
+    Shape {
+        /// What was being validated.
+        context: String,
+        /// Expected element count.
+        expected: u64,
+        /// Received element count.
+        got: u64,
+    },
+    /// The model's queue is shut down (eviction race or drain); retriable.
+    QueueClosed {
+        /// Model whose queue was gone.
+        model: String,
+    },
+    /// The peer violated the framing; the connection will close.
+    Protocol(String),
+    /// Any other server-side failure, stringified.
+    Server(String),
+}
+
+impl From<DynamapError> for WireError {
+    fn from(e: DynamapError) -> WireError {
+        match e {
+            DynamapError::Overloaded { model, retry_after_ms } => {
+                WireError::Overloaded { model, retry_after_ms }
+            }
+            DynamapError::UnknownModel(m) => WireError::UnknownModel(m),
+            DynamapError::Shape { context, expected, got } => WireError::Shape {
+                context,
+                expected: expected as u64,
+                got: got as u64,
+            },
+            DynamapError::QueueClosed { model } => WireError::QueueClosed { model },
+            DynamapError::Protocol(m) => WireError::Protocol(m),
+            other => WireError::Server(other.to_string()),
+        }
+    }
+}
+
+impl From<WireError> for DynamapError {
+    fn from(e: WireError) -> DynamapError {
+        match e {
+            WireError::Overloaded { model, retry_after_ms } => {
+                DynamapError::Overloaded { model, retry_after_ms }
+            }
+            WireError::UnknownModel(m) => DynamapError::UnknownModel(m),
+            WireError::Shape { context, expected, got } => DynamapError::Shape {
+                context,
+                expected: expected as usize,
+                got: got as usize,
+            },
+            WireError::QueueClosed { model } => DynamapError::QueueClosed { model },
+            WireError::Protocol(m) => DynamapError::Protocol(m),
+            WireError::Server(m) => DynamapError::Serve(m),
+        }
+    }
+}
+
+// frame kinds (header byte 3)
+const K_INFER: u8 = 1;
+const K_PING: u8 = 2;
+const K_SHUTDOWN: u8 = 3;
+const K_INFER_OK: u8 = 4;
+const K_PONG: u8 = 5;
+const K_SHUTDOWN_ACK: u8 = 6;
+const K_ERROR: u8 = 7;
+
+// wire-error codes (first payload byte of an Error frame)
+const E_OVERLOADED: u8 = 1;
+const E_UNKNOWN_MODEL: u8 = 2;
+const E_SHAPE: u8 = 3;
+const E_QUEUE_CLOSED: u8 = 4;
+const E_PROTOCOL: u8 = 5;
+const E_SERVER: u8 = 6;
+
+fn proto(msg: impl Into<String>) -> DynamapError {
+    DynamapError::Protocol(msg.into())
+}
+
+/// Longest prefix of `s` that fits `max` bytes without splitting a
+/// UTF-8 code point (strings are u16-length-prefixed on the wire).
+fn clip_utf8(s: &str, max: usize) -> &str {
+    if s.len() <= max {
+        return s;
+    }
+    let mut end = max;
+    while end > 0 && !s.is_char_boundary(end) {
+        end -= 1;
+    }
+    &s[..end]
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    let s = clip_utf8(s, u16::MAX as usize);
+    buf.extend_from_slice(&(s.len() as u16).to_le_bytes());
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn put_tensor(buf: &mut Vec<u8>, t: &TensorBuf) {
+    buf.push(t.shape.len() as u8);
+    for &d in &t.shape {
+        buf.extend_from_slice(&(d as u32).to_le_bytes());
+    }
+    for v in &t.data {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Bounds-checked cursor over one frame payload.
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], DynamapError> {
+        if self.buf.len() - self.pos < n {
+            return Err(proto(format!(
+                "payload too short: wanted {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            )));
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> Result<u8, DynamapError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, DynamapError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, DynamapError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, DynamapError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, DynamapError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn str(&mut self) -> Result<String, DynamapError> {
+        let len = self.u16()? as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| proto("string field is not valid UTF-8"))
+    }
+
+    fn tensor(&mut self) -> Result<TensorBuf, DynamapError> {
+        let rank = self.u8()?;
+        if rank == 0 || rank > MAX_RANK {
+            return Err(proto(format!("tensor rank {rank} outside 1..={MAX_RANK}")));
+        }
+        let mut shape = Vec::with_capacity(rank as usize);
+        let mut count: u64 = 1;
+        for _ in 0..rank {
+            let d = self.u32()? as u64;
+            shape.push(d as usize);
+            // overflow-proof: reject the moment the running product can
+            // no longer fit the payload cap
+            count = count
+                .checked_mul(d)
+                .filter(|&c| c <= u64::from(MAX_PAYLOAD) / 4)
+                .ok_or_else(|| {
+                    proto(format!("tensor shape {shape:?}… exceeds the payload cap"))
+                })?;
+        }
+        let bytes = self.take(count as usize * 4)?;
+        let data = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(TensorBuf::new(shape, data))
+    }
+
+    fn finish(self) -> Result<(), DynamapError> {
+        if self.pos != self.buf.len() {
+            return Err(proto(format!(
+                "{} trailing bytes after a complete frame body",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Serialize `frame` (header + payload) into a fresh byte vector.
+pub fn encode_frame(frame: &Frame) -> Vec<u8> {
+    let (kind, payload) = match frame {
+        Frame::Infer { model, input } => {
+            let mut p = Vec::with_capacity(input.data.len() * 4 + 64);
+            put_str(&mut p, model);
+            put_tensor(&mut p, input);
+            (K_INFER, p)
+        }
+        Frame::Ping => (K_PING, Vec::new()),
+        Frame::Shutdown => (K_SHUTDOWN, Vec::new()),
+        Frame::InferOk { output, server_us } => {
+            let mut p = Vec::with_capacity(output.data.len() * 4 + 64);
+            p.extend_from_slice(&server_us.to_le_bytes());
+            put_tensor(&mut p, output);
+            (K_INFER_OK, p)
+        }
+        Frame::Pong => (K_PONG, Vec::new()),
+        Frame::ShutdownAck => (K_SHUTDOWN_ACK, Vec::new()),
+        Frame::Error(e) => {
+            let mut p = Vec::new();
+            match e {
+                WireError::Overloaded { model, retry_after_ms } => {
+                    p.push(E_OVERLOADED);
+                    put_str(&mut p, model);
+                    p.extend_from_slice(&retry_after_ms.to_le_bytes());
+                }
+                WireError::UnknownModel(m) => {
+                    p.push(E_UNKNOWN_MODEL);
+                    put_str(&mut p, m);
+                }
+                WireError::Shape { context, expected, got } => {
+                    p.push(E_SHAPE);
+                    put_str(&mut p, context);
+                    p.extend_from_slice(&expected.to_le_bytes());
+                    p.extend_from_slice(&got.to_le_bytes());
+                }
+                WireError::QueueClosed { model } => {
+                    p.push(E_QUEUE_CLOSED);
+                    put_str(&mut p, model);
+                }
+                WireError::Protocol(m) => {
+                    p.push(E_PROTOCOL);
+                    put_str(&mut p, m);
+                }
+                WireError::Server(m) => {
+                    p.push(E_SERVER);
+                    put_str(&mut p, m);
+                }
+            }
+            (K_ERROR, p)
+        }
+    };
+    debug_assert!(payload.len() as u64 <= u64::from(MAX_PAYLOAD));
+    let mut out = Vec::with_capacity(8 + payload.len());
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.push(VERSION);
+    out.push(kind);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// Decode one frame body given its header `kind` and `payload`.
+fn decode_payload(kind: u8, payload: &[u8]) -> Result<Frame, DynamapError> {
+    let mut cur = Cur { buf: payload, pos: 0 };
+    let frame = match kind {
+        K_INFER => {
+            let model = cur.str()?;
+            let input = cur.tensor()?;
+            Frame::Infer { model, input }
+        }
+        K_PING => Frame::Ping,
+        K_SHUTDOWN => Frame::Shutdown,
+        K_INFER_OK => {
+            let server_us = cur.f64()?;
+            let output = cur.tensor()?;
+            Frame::InferOk { output, server_us }
+        }
+        K_PONG => Frame::Pong,
+        K_SHUTDOWN_ACK => Frame::ShutdownAck,
+        K_ERROR => {
+            let code = cur.u8()?;
+            let err = match code {
+                E_OVERLOADED => {
+                    let model = cur.str()?;
+                    let retry_after_ms = cur.u64()?;
+                    WireError::Overloaded { model, retry_after_ms }
+                }
+                E_UNKNOWN_MODEL => WireError::UnknownModel(cur.str()?),
+                E_SHAPE => {
+                    let context = cur.str()?;
+                    let expected = cur.u64()?;
+                    let got = cur.u64()?;
+                    WireError::Shape { context, expected, got }
+                }
+                E_QUEUE_CLOSED => WireError::QueueClosed { model: cur.str()? },
+                E_PROTOCOL => WireError::Protocol(cur.str()?),
+                E_SERVER => WireError::Server(cur.str()?),
+                other => return Err(proto(format!("unknown wire-error code {other}"))),
+            };
+            Frame::Error(err)
+        }
+        other => return Err(proto(format!("unknown frame kind {other}"))),
+    };
+    cur.finish()?;
+    Ok(frame)
+}
+
+/// Read one frame from `r`.
+///
+/// Returns `Ok(None)` on a clean EOF at a frame boundary (the peer
+/// closed the connection), [`DynamapError::Protocol`] on any framing
+/// violation (including EOF mid-frame) and [`DynamapError::Net`] on
+/// transport failure.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Frame>, DynamapError> {
+    // header, byte-at-a-time loop so "no frame at all" (clean close) is
+    // distinguishable from "half a header" (truncation)
+    let mut header = [0u8; 8];
+    let mut got = 0usize;
+    while got < header.len() {
+        match r.read(&mut header[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(None);
+                }
+                return Err(proto(format!("truncated header: {got}/8 bytes")));
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(DynamapError::Net(format!("read failed: {e}"))),
+        }
+    }
+    let magic = u16::from_le_bytes([header[0], header[1]]);
+    if magic != MAGIC {
+        return Err(proto(format!("bad magic {magic:#06x} (want {MAGIC:#06x})")));
+    }
+    if header[2] != VERSION {
+        return Err(proto(format!(
+            "unsupported protocol version {} (speak {VERSION})",
+            header[2]
+        )));
+    }
+    let kind = header[3];
+    let len = u32::from_le_bytes([header[4], header[5], header[6], header[7]]);
+    if len > MAX_PAYLOAD {
+        return Err(proto(format!("oversized frame: {len} bytes > cap {MAX_PAYLOAD}")));
+    }
+    let mut payload = vec![0u8; len as usize];
+    if let Err(e) = r.read_exact(&mut payload) {
+        return Err(match e.kind() {
+            std::io::ErrorKind::UnexpectedEof => {
+                proto(format!("truncated payload: wanted {len} bytes"))
+            }
+            _ => DynamapError::Net(format!("read failed: {e}")),
+        });
+    }
+    decode_payload(kind, &payload).map(Some)
+}
+
+/// Serialize `frame` and write it to `w` (single `write_all` + flush).
+/// Transport failures map to [`DynamapError::Net`].
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> Result<(), DynamapError> {
+    let bytes = encode_frame(frame);
+    w.write_all(&bytes)
+        .and_then(|_| w.flush())
+        .map_err(|e| DynamapError::Net(format!("write failed: {e}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    fn rand_string(rng: &mut Rng) -> String {
+        let pool = [
+            "mini", "mini-inception", "Ω-model", "a", "", "模型", "zoo/π",
+        ];
+        let mut s = (*rng.choose(&pool)).to_string();
+        for _ in 0..rng.below(8) {
+            s.push((b'a' + rng.below(26) as u8) as char);
+        }
+        s
+    }
+
+    fn rand_tensor(rng: &mut Rng) -> TensorBuf {
+        let rank = rng.range(1, 4);
+        let mut shape = Vec::new();
+        let mut count = 1usize;
+        for _ in 0..rank {
+            let d = rng.range(1, 8);
+            shape.push(d);
+            count *= d;
+        }
+        let data = (0..count).map(|_| rng.f32_range(-1e3, 1e3)).collect();
+        TensorBuf::new(shape, data)
+    }
+
+    fn rand_frame(rng: &mut Rng) -> Frame {
+        match rng.below(10) {
+            0 => Frame::Ping,
+            1 => Frame::Pong,
+            2 => Frame::Shutdown,
+            3 => Frame::ShutdownAck,
+            4 => Frame::Infer { model: rand_string(rng), input: rand_tensor(rng) },
+            5 => Frame::InferOk {
+                output: rand_tensor(rng),
+                server_us: rng.f64() * 1e6,
+            },
+            6 => Frame::Error(WireError::Overloaded {
+                model: rand_string(rng),
+                retry_after_ms: rng.below(10_000),
+            }),
+            7 => Frame::Error(WireError::UnknownModel(rand_string(rng))),
+            8 => Frame::Error(WireError::Shape {
+                context: rand_string(rng),
+                expected: rng.below(1 << 20),
+                got: rng.below(1 << 20),
+            }),
+            _ => {
+                let opts = [
+                    WireError::QueueClosed { model: rand_string(rng) },
+                    WireError::Protocol(rand_string(rng)),
+                    WireError::Server(rand_string(rng)),
+                ];
+                Frame::Error(rng.choose(&opts).clone())
+            }
+        }
+    }
+
+    #[test]
+    fn round_trip_random_frames() {
+        check("frame round trip", 256, |rng| {
+            let frame = rand_frame(rng);
+            let bytes = encode_frame(&frame);
+            let mut cursor = &bytes[..];
+            let back = read_frame(&mut cursor)
+                .map_err(|e| format!("decode failed: {e}"))?
+                .ok_or("decoded EOF from a full frame")?;
+            if back != frame {
+                return Err(format!("{frame:?} → {back:?}"));
+            }
+            if !cursor.is_empty() {
+                return Err(format!("{} bytes left unread", cursor.len()));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn clean_eof_and_back_to_back_frames() {
+        let mut empty: &[u8] = &[];
+        assert_eq!(read_frame(&mut empty).unwrap(), None);
+
+        // two frames on one stream decode in order
+        let mut bytes = encode_frame(&Frame::Ping);
+        bytes.extend(encode_frame(&Frame::Pong));
+        let mut cursor = &bytes[..];
+        assert_eq!(read_frame(&mut cursor).unwrap(), Some(Frame::Ping));
+        assert_eq!(read_frame(&mut cursor).unwrap(), Some(Frame::Pong));
+        assert_eq!(read_frame(&mut cursor).unwrap(), None);
+    }
+
+    #[test]
+    fn truncated_frames_are_typed_protocol_errors() {
+        check("truncation", 128, |rng| {
+            let frame = rand_frame(rng);
+            let bytes = encode_frame(&frame);
+            // cut anywhere strictly inside the frame (1..len)
+            let cut = 1 + rng.below(bytes.len() as u64 - 1) as usize;
+            let mut cursor = &bytes[..cut];
+            match read_frame(&mut cursor) {
+                Err(DynamapError::Protocol(_)) => Ok(()),
+                other => Err(format!("cut at {cut}/{}: {other:?}", bytes.len())),
+            }
+        });
+    }
+
+    #[test]
+    fn corrupt_headers_are_typed_protocol_errors() {
+        let good = encode_frame(&Frame::Ping);
+
+        let mut bad_magic = good.clone();
+        bad_magic[0] ^= 0xFF;
+        let e = read_frame(&mut &bad_magic[..]).unwrap_err();
+        assert!(matches!(e, DynamapError::Protocol(_)), "{e}");
+        assert!(e.to_string().contains("magic"), "{e}");
+
+        let mut bad_version = good.clone();
+        bad_version[2] = VERSION + 1;
+        let e = read_frame(&mut &bad_version[..]).unwrap_err();
+        assert!(e.to_string().contains("version"), "{e}");
+
+        let mut bad_kind = good.clone();
+        bad_kind[3] = 200;
+        let e = read_frame(&mut &bad_kind[..]).unwrap_err();
+        assert!(e.to_string().contains("kind"), "{e}");
+
+        // oversized length field is rejected *before* allocation — no
+        // 4 GiB buffer, no waiting for bytes that will never come
+        let mut oversized = good.clone();
+        oversized[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+        let e = read_frame(&mut &oversized[..]).unwrap_err();
+        assert!(e.to_string().contains("oversized"), "{e}");
+    }
+
+    #[test]
+    fn malformed_bodies_are_typed_protocol_errors() {
+        // trailing junk after a complete body
+        let mut bytes = encode_frame(&Frame::Ping);
+        bytes[4..8].copy_from_slice(&4u32.to_le_bytes());
+        bytes.extend_from_slice(&[0, 0, 0, 0]);
+        let e = read_frame(&mut &bytes[..]).unwrap_err();
+        assert!(e.to_string().contains("trailing"), "{e}");
+
+        // tensor whose declared shape exceeds the payload cap
+        let mut body = Vec::new();
+        put_str(&mut body, "mini");
+        body.push(2); // rank 2
+        body.extend_from_slice(&u32::MAX.to_le_bytes());
+        body.extend_from_slice(&u32::MAX.to_le_bytes());
+        let e = decode_payload(K_INFER, &body).unwrap_err();
+        assert!(e.to_string().contains("payload cap"), "{e}");
+
+        // zero-rank tensor
+        let mut body = Vec::new();
+        put_str(&mut body, "mini");
+        body.push(0);
+        let e = decode_payload(K_INFER, &body).unwrap_err();
+        assert!(matches!(e, DynamapError::Protocol(_)), "{e}");
+
+        // invalid UTF-8 in a string field (an Infer body starts with
+        // the model name: u16 len = 3, then three non-UTF-8 bytes)
+        let body = [3u8, 0, 0xFF, 0xFE, 0xFD];
+        let e = decode_payload(K_INFER, &body).unwrap_err();
+        assert!(matches!(e, DynamapError::Protocol(_)), "{e}");
+    }
+
+    #[test]
+    fn wire_errors_round_trip_through_dynamap_errors() {
+        let cases = vec![
+            DynamapError::Overloaded { model: "mini".into(), retry_after_ms: 3 },
+            DynamapError::UnknownModel("ghost".into()),
+            DynamapError::Shape { context: "input".into(), expected: 1024, got: 7 },
+            DynamapError::QueueClosed { model: "mini".into() },
+            DynamapError::Protocol("bad magic".into()),
+        ];
+        for e in cases {
+            let msg = e.to_string();
+            let wire: WireError = e.into();
+            let back: DynamapError = wire.into();
+            assert_eq!(back.to_string(), msg, "lossless for serving-path variants");
+        }
+        // everything else flattens to a stringly Server error
+        let wire: WireError = DynamapError::Dse("no plans".into()).into();
+        assert!(matches!(wire, WireError::Server(_)));
+    }
+}

@@ -1,0 +1,254 @@
+//! [`NetServer`] — the blocking TCP front-end over a
+//! [`ModelRegistry`].
+//!
+//! Threading model (std only, no async runtime, matching the rest of
+//! the crate): one accept thread polls a non-blocking listener; each
+//! accepted connection gets a dedicated worker thread running a
+//! blocking read-serve-reply loop. Inference itself is **not** done per
+//! connection — workers submit into the registry's per-model
+//! [`crate::serve::BatchQueue`], so concurrent connections batch
+//! together exactly like in-process callers and replies stay
+//! bitwise-equal to [`crate::api::Session::infer`].
+//!
+//! Overload safety: the registry's admission budget
+//! ([`crate::serve::RegistryConfig::max_inflight`]) bounds queued work,
+//! so a worker either serves a request or immediately writes a typed
+//! `Overloaded` error frame — the server never queues unboundedly and
+//! never stalls a shed client behind a full queue.
+//!
+//! Graceful drain ([`NetServer::shutdown`]): (1) stop accepting and
+//! join the accept thread, dropping the listener so late connects are
+//! refused by the OS; (2) half-close every connection's *read* side —
+//! blocked workers wake with a clean EOF while their write sides stay
+//! open; (3) join every worker — each one finishes the request it
+//! already read, writes the reply, and exits on the EOF. Every accepted
+//! request therefore gets exactly one reply; only then may the caller
+//! drain the registry's queues ([`crate::serve::ModelRegistry::shutdown`]).
+//! A remote [`Frame::Shutdown`] triggers the same sequence via
+//! [`NetServer::wait_shutdown`] returning on the owner thread — the
+//! worker that received the frame only acks and raises the stop flag,
+//! it never joins its siblings (or itself).
+
+use std::collections::HashMap;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::api::DynamapError;
+use crate::serve::ModelRegistry;
+
+use super::protocol::{read_frame, write_frame, Frame, WireError};
+
+/// Accept-loop poll interval while the listener has nothing to accept.
+const ACCEPT_POLL: Duration = Duration::from_millis(2);
+
+/// State shared between the accept thread, connection workers and the
+/// owning [`NetServer`] handle.
+struct Shared {
+    registry: Arc<ModelRegistry>,
+    /// Raised once; accept loop exits and workers refuse further reads.
+    stop: AtomicBool,
+    /// Signalled when a shutdown is requested (remote frame or local
+    /// [`NetServer::request_stop`]); [`NetServer::wait_shutdown`] blocks on it.
+    stop_signal: (Mutex<bool>, Condvar),
+    /// Read-half handles of every live connection, keyed by connection
+    /// id — drain half-closes these to wake blocked workers.
+    conns: Mutex<HashMap<u64, TcpStream>>,
+    /// Live connection worker handles (reaped opportunistically by the
+    /// accept loop, joined exhaustively by drain).
+    workers: Mutex<Vec<JoinHandle<()>>>,
+    next_conn: AtomicU64,
+}
+
+impl Shared {
+    fn lock_conns(&self) -> std::sync::MutexGuard<'_, HashMap<u64, TcpStream>> {
+        self.conns.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn lock_workers(&self) -> std::sync::MutexGuard<'_, Vec<JoinHandle<()>>> {
+        self.workers.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn request_stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let (lock, cvar) = &self.stop_signal;
+        *lock.lock().unwrap_or_else(|p| p.into_inner()) = true;
+        cvar.notify_all();
+    }
+}
+
+/// A running TCP front-end: accept thread + one worker per connection,
+/// all serving one shared [`ModelRegistry`].
+pub struct NetServer {
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+    local_addr: SocketAddr,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// start accepting connections against `registry`. Returns as soon
+    /// as the listener is live; [`NetServer::local_addr`] reports the
+    /// actual bound address.
+    pub fn bind(
+        registry: Arc<ModelRegistry>,
+        addr: impl ToSocketAddrs,
+    ) -> Result<NetServer, DynamapError> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| DynamapError::Net(format!("bind failed: {e}")))?;
+        let local_addr = listener
+            .local_addr()
+            .map_err(|e| DynamapError::Net(format!("local_addr failed: {e}")))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| DynamapError::Net(format!("set_nonblocking failed: {e}")))?;
+        let shared = Arc::new(Shared {
+            registry,
+            stop: AtomicBool::new(false),
+            stop_signal: (Mutex::new(false), Condvar::new()),
+            conns: Mutex::new(HashMap::new()),
+            workers: Mutex::new(Vec::new()),
+            next_conn: AtomicU64::new(0),
+        });
+        let accept_shared = shared.clone();
+        let accept = std::thread::spawn(move || accept_loop(listener, accept_shared));
+        Ok(NetServer { shared, accept: Some(accept), local_addr })
+    }
+
+    /// The address the listener actually bound (resolves `:0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Raise the stop flag without draining — unblocks
+    /// [`NetServer::wait_shutdown`]; call [`NetServer::shutdown`] to drain.
+    pub fn request_stop(&self) {
+        self.shared.request_stop();
+    }
+
+    /// Block until a shutdown is requested, by a remote
+    /// [`Frame::Shutdown`] or a local [`NetServer::request_stop`].
+    pub fn wait_shutdown(&self) {
+        let (lock, cvar) = &self.shared.stop_signal;
+        let mut stopped = lock.lock().unwrap_or_else(|p| p.into_inner());
+        while !*stopped {
+            stopped = cvar.wait(stopped).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    /// Graceful drain (idempotent): stop accepting, wake every blocked
+    /// connection read with a clean EOF, and join all workers — every
+    /// request a worker already read gets its reply before this
+    /// returns. Does **not** shut the registry down; the caller owns
+    /// that ordering (drain the front-end first, then the queues).
+    pub fn shutdown(&mut self) {
+        self.shared.request_stop();
+        if let Some(accept) = self.accept.take() {
+            let _ = accept.join(); // drops the listener: late connects refused
+        } else {
+            return; // already drained
+        }
+        // half-close read sides: blocked `read_frame`s return EOF, but
+        // in-flight replies still go out on the intact write sides
+        for (_, conn) in self.shared.lock_conns().iter() {
+            let _ = conn.shutdown(Shutdown::Read);
+        }
+        // the accept thread is joined, so no new workers can appear:
+        // one sweep is exhaustive
+        let workers: Vec<_> = self.shared.lock_workers().drain(..).collect();
+        for w in workers {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    while !shared.stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                // the worker runs a blocking loop; nodelay because the
+                // protocol is strictly request-reply
+                let _ = stream.set_nonblocking(false);
+                let _ = stream.set_nodelay(true);
+                let id = shared.next_conn.fetch_add(1, Ordering::Relaxed);
+                if let Ok(read_half) = stream.try_clone() {
+                    shared.lock_conns().insert(id, read_half);
+                }
+                let worker_shared = shared.clone();
+                let handle =
+                    std::thread::spawn(move || connection_loop(stream, id, worker_shared));
+                let mut workers = shared.lock_workers();
+                workers.push(handle);
+                // reap finished workers so a long-lived server does not
+                // accumulate one parked handle per historical connection
+                workers.retain(|h| !h.is_finished());
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(_) => std::thread::sleep(ACCEPT_POLL),
+        }
+    }
+    // listener drops here → the OS refuses late connects
+}
+
+/// Serve one connection: read a frame, act, reply, repeat. Every error
+/// path replies typed when the socket permits and never panics.
+fn connection_loop(mut stream: TcpStream, id: u64, shared: Arc<Shared>) {
+    loop {
+        match read_frame(&mut stream) {
+            Ok(Some(Frame::Ping)) => {
+                if write_frame(&mut stream, &Frame::Pong).is_err() {
+                    break;
+                }
+            }
+            Ok(Some(Frame::Shutdown)) => {
+                // ack, then only *raise the flag*: the actual drain
+                // joins workers, and this thread must not join itself
+                let _ = write_frame(&mut stream, &Frame::ShutdownAck);
+                shared.request_stop();
+                break;
+            }
+            Ok(Some(Frame::Infer { model, input })) => {
+                let reply = match shared.registry.infer(&model, &input) {
+                    Ok((output, metrics)) => {
+                        Frame::InferOk { output, server_us: metrics.total_us }
+                    }
+                    Err(e) => Frame::Error(WireError::from(e)),
+                };
+                if write_frame(&mut stream, &reply).is_err() {
+                    break;
+                }
+            }
+            Ok(Some(_)) => {
+                // a response-kind frame (InferOk/Pong/…) from a client
+                // is a protocol violation: reply typed, then drop the
+                // connection
+                let msg = "unexpected response-kind frame from client".to_string();
+                let _ = write_frame(&mut stream, &Frame::Error(WireError::Protocol(msg)));
+                break;
+            }
+            Ok(None) => break, // clean close (or drain's half-close EOF)
+            Err(DynamapError::Protocol(msg)) => {
+                // malformed bytes: the stream is out of sync, so reply
+                // (best effort) and close — resyncing is impossible
+                let _ = write_frame(
+                    &mut stream,
+                    &Frame::Error(WireError::Protocol(msg)),
+                );
+                break;
+            }
+            Err(_) => break, // transport failure: nothing to say it on
+        }
+    }
+    let _ = stream.shutdown(Shutdown::Both);
+    shared.lock_conns().remove(&id);
+}

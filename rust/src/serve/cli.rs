@@ -1,17 +1,21 @@
 //! `dynamap serve` and `dynamap loadgen` subcommands.
 //!
-//! The offline build has no network stack, so `serve` exposes the
-//! multi-model engine through a line-oriented stdin REPL (`infer
-//! <model> [n]`, `stats`, `models`, `profile <model> [file]`, `quit`)
-//! — the transport is trivial to swap once one exists; everything
-//! behind it is the real engine. With `--tune` the server also runs
-//! the online adaptation loop ([`crate::tune`]): per-layer profiling,
-//! cost-model calibration and zero-downtime plan hot-swaps, with
-//! `stats` printing the observed-vs-predicted per-layer table.
-//! `loadgen` drives the same engine with the seeded closed-loop
-//! generator from [`crate::serve::loadgen`] and prints throughput +
-//! tail-latency tables; `--compare` reruns the identical workload with
-//! batching disabled (`max_batch = 1`) and prints the speedup.
+//! `serve` exposes the multi-model engine over two transports behind
+//! the same [`ModelRegistry`]: with `--listen <addr>` the TCP
+//! front-end ([`crate::net::NetServer`]) speaks the length-prefixed
+//! binary protocol (admission control via `--max-inflight`, graceful
+//! drain on a remote `Shutdown` frame); without it, a line-oriented
+//! stdin REPL (`infer <model> [n]`, `stats`, `models`,
+//! `profile <model> [file]`, `quit`). With `--tune` the server also
+//! runs the online adaptation loop ([`crate::tune`]): per-layer
+//! profiling, cost-model calibration and zero-downtime plan hot-swaps,
+//! with `stats` printing the observed-vs-predicted per-layer table.
+//! `loadgen` drives the engine three ways: the seeded closed-loop
+//! generator (default; `--compare` reruns the identical workload with
+//! batching disabled and prints the speedup), open-loop seeded-Poisson
+//! in process (`--rate <qps>`), or open-loop over TCP against a
+//! running server (`--connect <addr> --rate <qps>`, with `--shutdown`
+//! draining the server afterwards).
 
 use std::io::BufRead;
 use std::sync::Arc;
@@ -20,19 +24,23 @@ use std::time::{Duration, Instant};
 use crate::api::{Compiler, DynamapError};
 use crate::coordinator::metrics::LatencyStats;
 use crate::graph::zoo;
+use crate::net::{Client, NetServer};
 use crate::runtime::TensorBuf;
 use crate::tune::{observed_vs_predicted, TuneConfig, TuneController};
 use crate::util::cli::Args;
 use crate::util::parallel::parallel_run;
 use crate::util::rng::Rng;
 
-use super::loadgen::{self, LoadgenConfig};
+use super::loadgen::{self, InferTarget, LoadgenConfig, OpenLoopConfig};
 use super::queue::BatchConfig;
 use super::registry::{ModelRegistry, RegistryConfig};
 
 /// Shared flags → [`RegistryConfig`] (`--root`, `--plan-cache`,
-/// `--cap`, `--max-batch`, `--max-wait-ms`, `--seed`, `--no-synth`,
-/// `--quant`). `--quant` compiles every hosted model with precision
+/// `--cap`, `--max-batch`, `--max-wait-ms`, `--max-inflight`,
+/// `--seed`, `--no-synth`, `--quant`). `--max-inflight` bounds each
+/// model's admitted-but-unreplied requests; excess is shed with the
+/// retriable `Overloaded` error (0 = unbounded, the default).
+/// `--quant` compiles every hosted model with precision
 /// search on, so the DSE may serve layers int8 (quantized plans key
 /// their own plan-cache entries and `tune` re-solves keep the flag).
 /// Profiling stays off here; only `serve` (the command that can run
@@ -57,6 +65,7 @@ fn registry_config(args: &Args, models: usize) -> RegistryConfig {
             max_batch: args.get_usize("max-batch", 8).max(1),
             max_wait: Duration::from_secs_f64(args.get_f64("max-wait-ms", 2.0).max(0.0) / 1e3),
         },
+        max_inflight: args.get_usize("max-inflight", 0),
         compiler: Compiler::new().precision_search(args.has("quant")),
         ..RegistryConfig::default()
     }
@@ -72,9 +81,12 @@ fn model_list(args: &Args, default: &str) -> Vec<String> {
 
 /// `dynamap serve --models mini,googlenet [--max-batch 8]
 /// [--max-wait-ms 2] [--cap 4] [--root DIR] [--plan-cache DIR]
-/// [--tune]` — host the listed models behind batch queues and answer
-/// stdin commands until EOF/`quit`. `--tune` (or `DYNAMAP_TUNE=1` in
-/// the environment) profiles the serving path and runs the background
+/// [--listen ADDR] [--max-inflight N] [--tune]` — host the listed
+/// models behind batch queues. With `--listen` (e.g. `127.0.0.1:0`)
+/// the TCP front-end serves the wire protocol until a client sends
+/// `Shutdown`, then drains gracefully; without it, answer stdin
+/// commands until EOF/`quit`. `--tune` (or `DYNAMAP_TUNE=1` in the
+/// environment) profiles the serving path and runs the background
 /// calibrate → remap → hot-swap loop (cadence knobs via
 /// `DYNAMAP_TUNE_*` env vars).
 pub fn serve(args: &Args) -> i32 {
@@ -118,6 +130,9 @@ pub fn serve(args: &Args) -> i32 {
     } else {
         None
     };
+    if let Some(listen) = args.get("listen") {
+        return serve_net(registry, controller, listen);
+    }
     println!(
         "serving {} model(s) [max_batch={}, max_wait={:?}] — commands: \
          infer <model> [n] | stats | models | profile <model> [file] | quit",
@@ -175,6 +190,47 @@ pub fn serve(args: &Args) -> i32 {
         );
     }
     registry.shutdown();
+    0
+}
+
+/// The `--listen` arm of `serve`: bind the TCP front-end, block until
+/// a client's `Shutdown` frame (or the accept loop is stopped), drain
+/// the front-end (every accepted request gets its reply), then drain
+/// the batch queues. The "listening on" line carries the actual bound
+/// address so `--listen 127.0.0.1:0` callers (tests, CI) can discover
+/// the ephemeral port, and the final stats table surfaces the per-model
+/// shed counters.
+fn serve_net(
+    registry: Arc<ModelRegistry>,
+    controller: Option<TuneController>,
+    listen: &str,
+) -> i32 {
+    let mut server = match NetServer::bind(registry.clone(), listen) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("error binding {listen}: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "listening on {} (max_inflight={}, send a Shutdown frame to drain)",
+        server.local_addr(),
+        registry.config().max_inflight,
+    );
+    server.wait_shutdown();
+    println!("shutdown requested — draining connections");
+    server.shutdown();
+    println!("{}", registry.metrics().report());
+    if let Some(controller) = controller {
+        controller.shutdown();
+        println!(
+            "tune loop: {} pass(es), {} hot-swap(s)",
+            controller.passes(),
+            controller.swaps()
+        );
+    }
+    registry.shutdown();
+    println!("drained cleanly");
     0
 }
 
@@ -284,12 +340,22 @@ fn infer_burst(
     ))
 }
 
-/// `dynamap loadgen --models mini,googlenet --clients N --requests M
-/// [--seed S] [--compare]` — closed-loop synthetic load through the
-/// serving engine; `--requests` counts per client. `--compare` reruns
-/// the identical workload with batching disabled and prints the
-/// dynamic-batching speedup.
+/// `dynamap loadgen` in three modes:
+///
+/// * `--models mini,googlenet --clients N --requests M [--seed S]
+///   [--compare]` — closed-loop load through an in-process engine;
+///   `--requests` counts per client, `--compare` reruns the identical
+///   workload with batching disabled and prints the speedup.
+/// * `--rate QPS [--requests N] [--workers W]` — open-loop
+///   seeded-Poisson load through an in-process engine (overload is
+///   reachable; the summary separates ok/shed/errors).
+/// * `--connect ADDR --rate QPS [--shutdown]` — the same open loop
+///   over TCP against a running `serve --listen` server, via the
+///   pooled [`Client`]; `--shutdown` drains the server afterwards.
 pub fn loadgen(args: &Args) -> i32 {
+    if args.has("connect") || args.get("connect").is_some() || args.get("rate").is_some() {
+        return loadgen_open(args);
+    }
     let cfg = LoadgenConfig {
         models: model_list(args, "mini"),
         clients: args.get_usize("clients", 4).max(1),
@@ -339,4 +405,73 @@ pub fn loadgen(args: &Args) -> i32 {
         seq_registry.shutdown();
     }
     0
+}
+
+/// The open-loop arm of `loadgen` (`--rate` and/or `--connect`).
+/// Offered load, request count and worker cap come from the CLI; the
+/// target is a TCP [`Client`] when `--connect ADDR` is given, the
+/// in-process registry otherwise. The printed summary's `shed=` field
+/// is machine-parsed by the CI smoke job.
+fn loadgen_open(args: &Args) -> i32 {
+    let models = model_list(args, "mini");
+    let cfg = OpenLoopConfig {
+        model: models.first().cloned().unwrap_or_else(|| "mini".into()),
+        rate_qps: args.get_f64("rate", 200.0),
+        requests: args.get_usize("requests", 256).max(1),
+        seed: args.get_usize("seed", 99) as u64,
+        workers: args.get_usize("workers", 64).max(1),
+    };
+    if models.len() > 1 {
+        eprintln!(
+            "note: open-loop mode drives one model; using '{}' (got {models:?})",
+            cfg.model
+        );
+    }
+    println!(
+        "open loop: {} @ {:.0} qps offered, {} requests (seed {}, {} workers)",
+        cfg.model, cfg.rate_qps, cfg.requests, cfg.seed, cfg.workers
+    );
+    let run = |target: &dyn InferTarget| loadgen::open_loop(target, &cfg);
+    let report = match args.get("connect") {
+        Some(addr) => {
+            let client = match Client::connect(addr) {
+                Ok(c) => c,
+                Err(e) => {
+                    eprintln!("connect failed: {e}");
+                    return 1;
+                }
+            };
+            let report = run(&client);
+            if args.has("shutdown") {
+                match client.shutdown_server() {
+                    Ok(()) => println!("server drain requested"),
+                    Err(e) => eprintln!("shutdown request failed: {e}"),
+                }
+            }
+            report
+        }
+        None => {
+            if args.has("connect") {
+                eprintln!("--connect needs an address (e.g. --connect 127.0.0.1:4071)");
+                return 1;
+            }
+            let registry = ModelRegistry::new(registry_config(args, 1));
+            let report = run(&registry);
+            if report.is_ok() {
+                println!("{}", registry.metrics().report());
+            }
+            registry.shutdown();
+            report
+        }
+    };
+    match report {
+        Ok(r) => {
+            println!("{}", r.summary());
+            0
+        }
+        Err(e) => {
+            eprintln!("open-loop loadgen failed: {e}");
+            1
+        }
+    }
 }

@@ -1,6 +1,7 @@
-//! Closed-loop synthetic load generator.
+//! Synthetic load generators: closed-loop ([`run`]) and open-loop
+//! ([`open_loop`]).
 //!
-//! Spawns `clients` dedicated threads (via
+//! **Closed loop** spawns `clients` dedicated threads (via
 //! [`crate::util::parallel::parallel_run`]); each runs a closed loop of
 //! `requests` inferences against a shared [`ModelRegistry`], picking a
 //! model uniformly at random per request from a seeded
@@ -15,10 +16,28 @@
 //!
 //! This is the measurement harness behind `dynamap loadgen` and the
 //! batched-vs-sequential comparison in `benches/serving.rs`.
+//!
+//! **Open loop** is how overload becomes measurable: closed-loop
+//! clients self-throttle (a slow server slows its own offered load), so
+//! they can never push a server past its knee. [`open_loop`] instead
+//! fires requests at seeded-Poisson arrival instants derived from an
+//! offered-load parameter in QPS, regardless of how fast replies come
+//! back, and measures each success from its *scheduled* arrival time —
+//! the coordinated-omission-safe convention, so queue buildup shows up
+//! in the tail percentiles instead of being silently absorbed. Requests
+//! shed by admission control ([`DynamapError::Overloaded`]) are
+//! accounted separately, with reply latency measured from the actual
+//! send. The target is anything implementing [`InferTarget`]: the
+//! in-process [`ModelRegistry`] or the TCP [`crate::net::Client`].
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::api::DynamapError;
+use crate::coordinator::metrics::LatencyStats;
+use crate::graph::layer::Op;
+use crate::graph::zoo;
 use crate::runtime::TensorBuf;
 use crate::util::parallel::parallel_run;
 use crate::util::rng::Rng;
@@ -119,4 +138,324 @@ pub fn run(registry: &ModelRegistry, cfg: &LoadgenConfig) -> Result<LoadReport, 
         },
         snapshots: registry.metrics().snapshots(),
     })
+}
+
+/// Anything the open-loop generator can drive: one blocking inference
+/// per call. Implemented by the in-process [`ModelRegistry`] and the
+/// TCP [`crate::net::Client`], so the same generator measures the
+/// engine with and without the network in front of it.
+pub trait InferTarget: Sync {
+    /// Serve one request for `model`, blocking for the reply.
+    fn infer_once(&self, model: &str, input: &TensorBuf) -> Result<TensorBuf, DynamapError>;
+}
+
+impl InferTarget for ModelRegistry {
+    fn infer_once(&self, model: &str, input: &TensorBuf) -> Result<TensorBuf, DynamapError> {
+        self.infer(model, input).map(|(out, _)| out)
+    }
+}
+
+/// Input dimensions `(C, H1, H2)` of a zoo model, resolved from the
+/// graph alone — no hosting, no artifacts. Lets a network client build
+/// correctly shaped requests without a round trip.
+pub fn model_input_dims(model: &str) -> Result<(usize, usize, usize), DynamapError> {
+    let canonical = zoo::canonical_name(model)
+        .ok_or_else(|| DynamapError::UnknownModel(model.to_string()))?;
+    let cnn = zoo::by_name(canonical)
+        .ok_or_else(|| DynamapError::UnknownModel(canonical.to_string()))?;
+    for node in &cnn.nodes {
+        if let Op::Input { c, h1, h2 } = &node.op {
+            return Ok((*c, *h1, *h2));
+        }
+    }
+    Err(DynamapError::Graph(format!("model '{canonical}' has no input node")))
+}
+
+/// The deterministic input for open-loop request `index`: any party
+/// holding `(seed, index, dims)` regenerates the identical tensor, so
+/// tests and benches can bitwise-compare a server reply against a
+/// sequential [`crate::api::Session::infer`] of the same request.
+pub fn open_loop_input(seed: u64, index: usize, dims: (usize, usize, usize)) -> TensorBuf {
+    let (c, h1, h2) = dims;
+    let stream = (index as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    let mut rng = Rng::new(seed ^ stream);
+    TensorBuf::new(
+        vec![c, h1, h2],
+        (0..c * h1 * h2).map(|_| rng.f32_range(-1.0, 1.0)).collect(),
+    )
+}
+
+/// Workload shape for one [`open_loop`] call.
+#[derive(Debug, Clone)]
+pub struct OpenLoopConfig {
+    /// Zoo model every request targets (alias fine).
+    pub model: String,
+    /// Offered load: mean arrival rate of the Poisson process, QPS.
+    pub rate_qps: f64,
+    /// Total requests to offer.
+    pub requests: usize,
+    /// Seed for arrival instants and request payloads (fixed 99 across
+    /// the benches, per the ROADMAP methodology).
+    pub seed: u64,
+    /// Worker threads available to carry in-flight requests. This is a
+    /// transport concurrency cap, not a load parameter — arrivals the
+    /// pool cannot pick up immediately wait (and that wait is charged
+    /// to their latency), they are never dropped by the generator.
+    pub workers: usize,
+}
+
+impl Default for OpenLoopConfig {
+    fn default() -> OpenLoopConfig {
+        OpenLoopConfig {
+            model: "mini-inception".to_string(),
+            rate_qps: 200.0,
+            requests: 256,
+            seed: 99,
+            workers: 64,
+        }
+    }
+}
+
+/// Outcome of one [`open_loop`] call.
+#[derive(Debug, Clone)]
+pub struct OpenLoopReport {
+    /// Configured offered load, QPS.
+    pub offered_qps: f64,
+    /// Successful replies per second of wall clock.
+    pub achieved_qps: f64,
+    /// Requests offered (= `cfg.requests`).
+    pub sent: usize,
+    /// Successful replies.
+    pub ok: usize,
+    /// Requests shed with [`DynamapError::Overloaded`].
+    pub shed: usize,
+    /// Requests failing with any other error.
+    pub errors: usize,
+    /// Wall clock from first scheduled arrival to last reply.
+    pub wall: Duration,
+    /// Success latency, µs, measured from each request's *scheduled*
+    /// arrival instant (coordinated-omission-safe).
+    pub latency: LatencyStats,
+    /// Shed-reply latency, µs, measured from the actual send — how
+    /// quickly the server says "back off" when it cannot serve.
+    pub shed_latency: LatencyStats,
+}
+
+impl OpenLoopReport {
+    /// One-line human summary (the `shed=` field is machine-parsed by
+    /// the CI smoke job — keep it).
+    pub fn summary(&self) -> String {
+        let tail = self.latency.percentiles(&[50.0, 99.0, 99.9]);
+        format!(
+            "offered {:.0} qps → achieved {:.1} qps  ok={} shed={} errors={} \
+             p50={:.0}µs p99={:.0}µs p99.9={:.0}µs  shed reply max={:.0}µs",
+            self.offered_qps,
+            self.achieved_qps,
+            self.ok,
+            self.shed,
+            self.errors,
+            tail[0],
+            tail[1],
+            tail[2],
+            self.shed_latency.max(),
+        )
+    }
+}
+
+/// Offer `cfg.requests` requests to `target` at seeded-Poisson arrival
+/// instants with mean rate `cfg.rate_qps`, and report what came back.
+///
+/// A dispatcher thread sleeps until each pre-generated arrival instant
+/// and hands the request to a fixed pool of `cfg.workers` blocking
+/// workers; arrivals that find every worker busy queue up, and their
+/// wait is charged to their latency (measured from the scheduled
+/// instant). Request `i`'s payload is [`open_loop_input`]`(seed, i)` —
+/// deterministic, so replies can be verified offline.
+pub fn open_loop<T: InferTarget + ?Sized>(
+    target: &T,
+    cfg: &OpenLoopConfig,
+) -> Result<OpenLoopReport, DynamapError> {
+    if cfg.rate_qps <= 0.0 || !cfg.rate_qps.is_finite() {
+        return Err(DynamapError::Config(format!(
+            "open-loop rate must be a positive QPS figure, got {}",
+            cfg.rate_qps
+        )));
+    }
+    if cfg.requests == 0 {
+        return Err(DynamapError::Config("open loop needs at least one request".into()));
+    }
+    let dims = model_input_dims(&cfg.model)?;
+
+    // pre-generate every Poisson arrival instant so the dispatch loop
+    // does no RNG work between sleeps
+    let mut rng = Rng::new(cfg.seed);
+    let mut arrivals = Vec::with_capacity(cfg.requests);
+    let mut t = 0.0f64;
+    for _ in 0..cfg.requests {
+        // inter-arrival gaps of a Poisson process are Exp(λ);
+        // 1 - f64() is in (0, 1], so the log is always finite
+        t += -(1.0 - rng.f64()).ln() / cfg.rate_qps;
+        arrivals.push(Duration::from_secs_f64(t));
+    }
+
+    let workers = cfg.workers.clamp(1, cfg.requests);
+    let (tx, rx) = mpsc::channel::<(usize, Duration)>();
+    let rx = Mutex::new(rx);
+    let ok_lat = Mutex::new(Vec::new());
+    let shed_lat = Mutex::new(Vec::new());
+    let errors = AtomicUsize::new(0);
+    let start = Instant::now();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let job = rx.lock().unwrap_or_else(|p| p.into_inner()).recv();
+                let Ok((i, scheduled)) = job else { break };
+                let input = open_loop_input(cfg.seed, i, dims);
+                let sent = Instant::now();
+                match target.infer_once(&cfg.model, &input) {
+                    Ok(_) => {
+                        let e2e = start.elapsed().saturating_sub(scheduled);
+                        let us = e2e.as_secs_f64() * 1e6;
+                        ok_lat.lock().unwrap_or_else(|p| p.into_inner()).push(us);
+                    }
+                    Err(DynamapError::Overloaded { .. }) => {
+                        let us = sent.elapsed().as_secs_f64() * 1e6;
+                        shed_lat.lock().unwrap_or_else(|p| p.into_inner()).push(us);
+                    }
+                    Err(_) => {
+                        errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            });
+        }
+        // dispatch on this thread: sleep to each arrival instant, send
+        for (i, at) in arrivals.iter().enumerate() {
+            let now = start.elapsed();
+            if *at > now {
+                std::thread::sleep(*at - now);
+            }
+            // workers only exit once the channel is closed below, so a
+            // send can only fail if a worker panicked — propagate then
+            tx.send((i, *at)).expect("open-loop worker pool died");
+        }
+        drop(tx); // closes the channel; workers drain and exit
+    });
+    let wall = start.elapsed();
+
+    let mut latency = LatencyStats::new();
+    for us in ok_lat.into_inner().unwrap_or_else(|p| p.into_inner()) {
+        latency.push(us);
+    }
+    let mut shed_latency = LatencyStats::new();
+    for us in shed_lat.into_inner().unwrap_or_else(|p| p.into_inner()) {
+        shed_latency.push(us);
+    }
+    let ok = latency.count();
+    let shed = shed_latency.count();
+    Ok(OpenLoopReport {
+        offered_qps: cfg.rate_qps,
+        achieved_qps: if wall.as_secs_f64() > 0.0 {
+            ok as f64 / wall.as_secs_f64()
+        } else {
+            0.0
+        },
+        sent: cfg.requests,
+        ok,
+        shed,
+        errors: errors.into_inner(),
+        wall,
+        latency,
+        shed_latency,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_loop_inputs_are_deterministic_and_distinct() {
+        let dims = (4, 16, 16);
+        let a = open_loop_input(99, 7, dims);
+        let b = open_loop_input(99, 7, dims);
+        assert_eq!(a, b, "same (seed, index) → same tensor");
+        assert_eq!(a.shape, vec![4, 16, 16]);
+        let c = open_loop_input(99, 8, dims);
+        assert_ne!(a.data, c.data, "different index → different tensor");
+        let d = open_loop_input(100, 7, dims);
+        assert_ne!(a.data, d.data, "different seed → different tensor");
+    }
+
+    #[test]
+    fn model_dims_resolve_through_aliases() {
+        assert_eq!(model_input_dims("mini").unwrap(), (4, 16, 16));
+        assert_eq!(model_input_dims("mini-inception").unwrap(), (4, 16, 16));
+        assert_eq!(model_input_dims("mini-vgg").unwrap(), (3, 16, 16));
+        assert!(matches!(
+            model_input_dims("nope").unwrap_err(),
+            DynamapError::UnknownModel(_)
+        ));
+    }
+
+    #[test]
+    fn poisson_arrivals_are_seeded_and_rate_scaled() {
+        // regenerate the arrival schedule exactly as open_loop does
+        let gaps = |seed: u64, rate: f64, n: usize| -> Vec<f64> {
+            let mut rng = Rng::new(seed);
+            (0..n).map(|_| -(1.0 - rng.f64()).ln() / rate).collect()
+        };
+        let a = gaps(99, 100.0, 512);
+        let b = gaps(99, 100.0, 512);
+        assert_eq!(a, b, "fixed seed → identical schedule");
+        let mean = a.iter().sum::<f64>() / a.len() as f64;
+        assert!(
+            (mean - 0.01).abs() < 0.002,
+            "mean inter-arrival {mean:.4}s ≈ 1/rate"
+        );
+        assert!(a.iter().all(|g| g.is_finite() && *g >= 0.0));
+    }
+
+    /// A stub target that sheds every other request — checks the
+    /// report's accounting paths without a real server.
+    struct Flaky(AtomicUsize);
+    impl InferTarget for Flaky {
+        fn infer_once(
+            &self,
+            _model: &str,
+            input: &TensorBuf,
+        ) -> Result<TensorBuf, DynamapError> {
+            let n = self.0.fetch_add(1, Ordering::Relaxed);
+            match n % 3 {
+                0 => Ok(input.clone()),
+                1 => Err(DynamapError::Overloaded {
+                    model: "mini-inception".into(),
+                    retry_after_ms: 1,
+                }),
+                _ => Err(DynamapError::Serve("boom".into())),
+            }
+        }
+    }
+
+    #[test]
+    fn open_loop_accounts_ok_shed_and_errors() {
+        let target = Flaky(AtomicUsize::new(0));
+        let cfg = OpenLoopConfig {
+            rate_qps: 20_000.0, // finish fast; accounting is rate-blind
+            requests: 99,
+            workers: 8,
+            ..OpenLoopConfig::default()
+        };
+        let report = open_loop(&target, &cfg).unwrap();
+        assert_eq!(report.sent, 99);
+        assert_eq!(report.ok + report.shed + report.errors, 99);
+        assert_eq!(report.ok, 33);
+        assert_eq!(report.shed, 33);
+        assert_eq!(report.errors, 33);
+        assert_eq!(report.latency.count(), report.ok);
+        assert!(report.summary().contains("shed=33"), "{}", report.summary());
+
+        // invalid configs are typed, not panics
+        assert!(open_loop(&target, &OpenLoopConfig { rate_qps: 0.0, ..cfg.clone() }).is_err());
+        assert!(open_loop(&target, &OpenLoopConfig { requests: 0, ..cfg }).is_err());
+    }
 }

@@ -2,14 +2,15 @@
 //!
 //! Extends the request-level [`LatencyStats`] accounting with the
 //! quantities a multi-model server is judged on: per-model QPS, queue
-//! depth (current and high-water), batch-size histograms and
-//! p50/p95/p99 end-to-end latency. Counters on the submit path are
-//! atomics; the latency samples and histogram sit behind a mutex the
-//! flush path takes a constant number of times per batch (never per
-//! request), so the accounting stays off the per-request hot path.
+//! depth (current and high-water), batch-size histograms, shed-request
+//! accounting and p50/p95/p99/p99.9 end-to-end latency. Counters on the
+//! submit path are atomics; the latency samples and histogram sit
+//! behind a mutex the flush path takes a constant number of times per
+//! batch (never per request), so the accounting stays off the
+//! per-request hot path.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -28,6 +29,12 @@ pub struct ModelMetrics {
     depth: AtomicUsize,
     max_depth: AtomicUsize,
     swaps: AtomicUsize,
+    shed: AtomicU64,
+    /// EWMA of the mean per-request end-to-end latency (µs), updated
+    /// once per flushed batch. Feeds the `retry_after_ms` hint on
+    /// [`crate::api::DynamapError::Overloaded`] without touching the
+    /// latency mutex on the (shed) submit path.
+    ewma_us: AtomicU64,
     inner: Mutex<Inner>,
 }
 
@@ -60,6 +67,8 @@ impl ModelMetrics {
             depth: AtomicUsize::new(0),
             max_depth: AtomicUsize::new(0),
             swaps: AtomicUsize::new(0),
+            shed: AtomicU64::new(0),
+            ewma_us: AtomicU64::new(0),
             inner: Mutex::new(Inner::default()),
         }
     }
@@ -95,6 +104,30 @@ impl ModelMetrics {
         self.swaps.load(Ordering::Relaxed)
     }
 
+    /// Admission control rejected a request (in-flight budget full).
+    /// Shed requests never enter the queue, so they are counted here and
+    /// nowhere else — `requests` stays "work the backend actually did".
+    pub fn record_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Requests shed by admission control so far.
+    pub fn shed(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    /// Backoff hint for [`crate::api::DynamapError::Overloaded`],
+    /// milliseconds: one EWMA'd batch-mean latency rounded up, clamped
+    /// to ≥ 1 ms. Falls back to 2 ms before the first batch completes
+    /// (cold server, nothing measured yet).
+    pub fn suggest_retry_ms(&self) -> u64 {
+        let ewma = self.ewma_us.load(Ordering::Relaxed);
+        if ewma == 0 {
+            return 2;
+        }
+        (ewma as f64 / 1000.0).ceil().max(1.0) as u64
+    }
+
     /// Latency samples currently held in the sliding window (bounded by
     /// `LATENCY_WINDOW` regardless of lifetime traffic).
     pub fn window_len(&self) -> usize {
@@ -120,6 +153,9 @@ impl ModelMetrics {
     /// path). The sample buffer slides past [`LATENCY_WINDOW`] entries;
     /// the request counter stays exact forever.
     pub fn record_requests(&self, e2e_us: &[f64]) {
+        if e2e_us.is_empty() {
+            return;
+        }
         let mut inner = self.lock();
         inner.requests += e2e_us.len() as u64;
         for &us in e2e_us {
@@ -128,6 +164,14 @@ impl ModelMetrics {
         if inner.latency.samples_us.len() >= LATENCY_WINDOW {
             inner.latency.samples_us.drain(..LATENCY_WINDOW / 2);
         }
+        drop(inner);
+        // blend the batch mean into the retry-hint EWMA (¾ old + ¼ new);
+        // a lock-free store is fine — the hint is advisory, and a lost
+        // race between two flushes loses one blend step, not the value
+        let mean = e2e_us.iter().sum::<f64>() / e2e_us.len() as f64;
+        let old = self.ewma_us.load(Ordering::Relaxed);
+        let new = if old == 0 { mean } else { old as f64 * 0.75 + mean * 0.25 };
+        self.ewma_us.store(new.max(1.0) as u64, Ordering::Relaxed);
     }
 
     /// `n` requests failed (backend error or shutdown mid-flight).
@@ -142,11 +186,12 @@ impl ModelMetrics {
         let inner = self.lock();
         let elapsed = self.started.elapsed().as_secs_f64();
         let served = inner.requests;
-        let tail = inner.latency.percentiles(&[50.0, 95.0, 99.0]);
+        let tail = inner.latency.percentiles(&[50.0, 95.0, 99.0, 99.9]);
         ModelSnapshot {
             model: self.model.clone(),
             requests: served,
             errors: inner.errors,
+            shed: self.shed(),
             batches: inner.batches,
             qps: if elapsed > 0.0 { served as f64 / elapsed } else { 0.0 },
             mean_batch: if inner.batches > 0 {
@@ -160,6 +205,7 @@ impl ModelMetrics {
             p50_us: tail[0],
             p95_us: tail[1],
             p99_us: tail[2],
+            p999_us: tail[3],
             queue_depth: self.queue_depth(),
             max_queue_depth: self.max_depth.load(Ordering::Relaxed),
             swaps: self.swaps(),
@@ -181,6 +227,8 @@ pub struct ModelSnapshot {
     pub requests: u64,
     /// Failed requests.
     pub errors: u64,
+    /// Requests shed by admission control (never entered the queue).
+    pub shed: u64,
     /// Batches flushed to the backend.
     pub batches: u64,
     /// Served requests per second since the metrics were created.
@@ -196,6 +244,8 @@ pub struct ModelSnapshot {
     pub p95_us: f64,
     /// 99th-percentile end-to-end latency, µs (sliding window).
     pub p99_us: f64,
+    /// 99.9th-percentile end-to-end latency, µs (sliding window).
+    pub p999_us: f64,
     /// Requests waiting in the queue at snapshot time.
     pub queue_depth: usize,
     /// High-water queue depth since the metrics were created.
@@ -210,16 +260,19 @@ impl ModelSnapshot {
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
-            "{}: {} req ({} err) {:.1} qps  e2e mean={:.0}µs p50={:.0}µs p95={:.0}µs \
-             p99={:.0}µs  {} batches (mean {:.2}, hist {})  max depth {}  swaps {}",
+            "{}: {} req ({} err, {} shed) {:.1} qps  e2e mean={:.0}µs p50={:.0}µs \
+             p95={:.0}µs p99={:.0}µs p99.9={:.0}µs  {} batches (mean {:.2}, hist {})  \
+             max depth {}  swaps {}",
             self.model,
             self.requests,
             self.errors,
+            self.shed,
             self.qps,
             self.mean_us,
             self.p50_us,
             self.p95_us,
             self.p99_us,
+            self.p999_us,
             self.batches,
             self.mean_batch,
             self.hist_summary(),
@@ -276,8 +329,9 @@ impl ServerMetrics {
         let mut t = Table::new(
             "serving metrics",
             &[
-                "model", "req", "err", "qps", "mean µs", "p50 µs", "p95 µs", "p99 µs",
-                "batches", "mean b", "depth max", "swaps", "batch hist",
+                "model", "req", "err", "shed", "qps", "mean µs", "p50 µs", "p95 µs",
+                "p99 µs", "p99.9 µs", "batches", "mean b", "depth max", "swaps",
+                "batch hist",
             ],
         );
         for s in self.snapshots() {
@@ -285,11 +339,13 @@ impl ServerMetrics {
                 s.model.clone(),
                 s.requests.to_string(),
                 s.errors.to_string(),
+                s.shed.to_string(),
                 format!("{:.1}", s.qps),
                 format!("{:.0}", s.mean_us),
                 format!("{:.0}", s.p50_us),
                 format!("{:.0}", s.p95_us),
                 format!("{:.0}", s.p99_us),
+                format!("{:.0}", s.p999_us),
                 s.batches.to_string(),
                 format!("{:.2}", s.mean_batch),
                 s.max_queue_depth.to_string(),
@@ -321,9 +377,12 @@ mod tests {
         }
         m.record_errors(1);
         m.record_swap();
+        m.record_shed();
+        m.record_shed();
         let s = m.snapshot();
         assert_eq!(s.requests, 3);
         assert_eq!(s.errors, 1);
+        assert_eq!(s.shed, 2);
         assert_eq!(s.batches, 1);
         assert_eq!(s.queue_depth, 0);
         assert_eq!(s.max_queue_depth, 3);
@@ -331,9 +390,30 @@ mod tests {
         assert_eq!(s.mean_batch, 3.0);
         assert_eq!(s.p50_us, 200.0);
         assert!(s.p99_us >= s.p50_us);
+        assert!(s.p999_us >= s.p99_us);
         assert!(s.qps > 0.0);
         assert_eq!(s.batch_hist.get(&3), Some(&1));
         assert!(s.summary().contains("mini"));
+        assert!(s.summary().contains("2 shed"), "{}", s.summary());
+    }
+
+    #[test]
+    fn retry_hint_tracks_batch_latency() {
+        let m = ModelMetrics::new("hint");
+        // cold server: conservative fallback, never zero
+        assert_eq!(m.suggest_retry_ms(), 2);
+        m.record_requests(&[8000.0, 8000.0]); // 8 ms mean
+        let hint = m.suggest_retry_ms();
+        assert!((1..=9).contains(&hint), "hint {hint} ≈ one batch latency");
+        // EWMA converges toward a sustained latency shift
+        for _ in 0..32 {
+            m.record_requests(&[40_000.0]);
+        }
+        let hint = m.suggest_retry_ms();
+        assert!((20..=41).contains(&hint), "hint {hint} follows the 40 ms regime");
+        // empty flush is a no-op, not a divide-by-zero
+        m.record_requests(&[]);
+        assert_eq!(m.snapshot().requests, 34);
     }
 
     #[test]

@@ -21,10 +21,17 @@
 //!   outputs are bitwise-identical to sequential
 //!   [`crate::api::Session::infer`].
 //! * [`ServerMetrics`] extends [`crate::api::LatencyStats`] with
-//!   per-model QPS, queue depth, batch-size histograms and
-//!   p50/p95/p99 end-to-end latency.
-//! * [`loadgen`] is the seeded closed-loop measurement harness behind
-//!   `dynamap loadgen` and `benches/serving.rs`.
+//!   per-model QPS, queue depth, batch-size histograms, shed-request
+//!   accounting and p50/p95/p99/p99.9 end-to-end latency.
+//! * Admission control: [`RegistryConfig::max_inflight`] bounds each
+//!   host's in-flight requests; excess submits are shed with the
+//!   retriable [`crate::api::DynamapError::Overloaded`] (carrying a
+//!   measured `retry_after_ms` hint) instead of queueing unboundedly —
+//!   the backpressure story behind the TCP front-end in [`crate::net`].
+//! * [`loadgen`] is the seeded measurement harness behind
+//!   `dynamap loadgen` and the benches: closed-loop ([`loadgen::run`])
+//!   for throughput, open-loop seeded-Poisson ([`loadgen::open_loop`])
+//!   for overload and coordinated-omission-safe tail latency.
 //! * [`StateCell`] holds each host's serving state behind an
 //!   epoch-counted `Arc` swap, so the online adaptation loop in
 //!   [`crate::tune`] can hot-swap a re-mapped plan into a live model
@@ -52,7 +59,9 @@ pub mod metrics;
 pub mod queue;
 pub mod registry;
 
-pub use loadgen::{LoadReport, LoadgenConfig};
+pub use loadgen::{
+    open_loop, InferTarget, LoadReport, LoadgenConfig, OpenLoopConfig, OpenLoopReport,
+};
 pub use metrics::{ModelMetrics, ModelSnapshot, ServerMetrics};
 pub use queue::{BatchConfig, BatchQueue};
 pub use registry::{

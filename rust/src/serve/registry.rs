@@ -61,6 +61,13 @@ pub struct RegistryConfig {
     pub compiler: Compiler,
     /// Batch scheduler configuration applied to every model queue.
     pub batch: BatchConfig,
+    /// Per-model admission budget: at most this many requests may be
+    /// in flight (queued or being served) per host; excess submits are
+    /// shed with the retriable [`DynamapError::Overloaded`] instead of
+    /// growing the queue unboundedly. `0` means unbounded (the
+    /// pre-admission-control behavior; fine for in-process callers,
+    /// the network front-end should set a budget).
+    pub max_inflight: usize,
     /// Attach a [`LayerProfile`] to every host so the serving path
     /// records per-layer latency — the evidence `tune::calibrate`
     /// fits. Off by default (`serve --tune` and the adaptive bench
@@ -78,6 +85,7 @@ impl Default for RegistryConfig {
             seed: 0x5EED,
             compiler: Compiler::new(),
             batch: BatchConfig::default(),
+            max_inflight: 0,
             profile: false,
         }
     }
@@ -141,6 +149,22 @@ pub struct ModelHost {
     plan_from_cache: bool,
     profile: Option<Arc<LayerProfile>>,
     plan_shape: Mutex<Option<(usize, usize)>>,
+    /// Requests currently admitted (queued or being served).
+    inflight: AtomicUsize,
+    /// Admission budget ([`RegistryConfig::max_inflight`]; 0 = unbounded).
+    max_inflight: usize,
+}
+
+/// RAII guard for one slot of a host's bounded in-flight budget;
+/// releases the slot when dropped — on reply *and* on every error path.
+struct AdmissionPermit<'a> {
+    inflight: &'a AtomicUsize,
+}
+
+impl Drop for AdmissionPermit<'_> {
+    fn drop(&mut self) {
+        self.inflight.fetch_sub(1, Ordering::SeqCst);
+    }
 }
 
 impl ModelHost {
@@ -197,12 +221,43 @@ impl ModelHost {
         self.input
     }
 
+    /// Requests currently in flight (admitted but not yet replied to).
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::SeqCst)
+    }
+
+    /// Admission budget this host enforces (0 = unbounded).
+    pub fn max_inflight(&self) -> usize {
+        self.max_inflight
+    }
+
     /// Submit one request to the model's batch queue and block for the
     /// result. Fails with [`DynamapError::QueueClosed`] after the host
     /// has been evicted — [`ModelRegistry::infer`] handles that by
-    /// re-resolving the host.
+    /// re-resolving the host — and with the retriable
+    /// [`DynamapError::Overloaded`] when the in-flight budget
+    /// ([`RegistryConfig::max_inflight`]) is exhausted; shed requests
+    /// never enter the queue.
     pub fn infer(&self, input: TensorBuf) -> Result<(TensorBuf, InferMetrics), DynamapError> {
+        let _permit = self.try_admit()?;
         self.queue.infer(input)
+    }
+
+    /// Claim one in-flight slot or shed the request. The counter is
+    /// bumped first and rolled back on rejection, so two racing submits
+    /// can at worst *both* be shed (conservative), never both admitted
+    /// over budget.
+    fn try_admit(&self) -> Result<AdmissionPermit<'_>, DynamapError> {
+        let prev = self.inflight.fetch_add(1, Ordering::SeqCst);
+        if self.max_inflight > 0 && prev >= self.max_inflight {
+            self.inflight.fetch_sub(1, Ordering::SeqCst);
+            self.metrics.record_shed();
+            return Err(DynamapError::Overloaded {
+                model: self.model.clone(),
+                retry_after_ms: self.metrics.suggest_retry_ms(),
+            });
+        }
+        Ok(AdmissionPermit { inflight: &self.inflight })
     }
 
     fn shutdown(&self) {
@@ -313,7 +368,10 @@ impl ModelRegistry {
 
     /// Serve one request through `model`'s batch queue, hosting the
     /// model first if needed. A host evicted between lookup and submit
-    /// is transparently re-resolved.
+    /// is transparently re-resolved. [`DynamapError::Overloaded`] is
+    /// *not* retried here — admission control's whole point is to push
+    /// backoff to the caller, so the shed propagates with its
+    /// `retry_after_ms` hint intact.
     pub fn infer(
         &self,
         model: &str,
@@ -471,6 +529,8 @@ impl ModelRegistry {
             plan_from_cache,
             profile,
             plan_shape: Mutex::new(plan_shape),
+            inflight: AtomicUsize::new(0),
+            max_inflight: self.config.max_inflight,
         })
     }
 }

@@ -34,6 +34,7 @@ fn registry(root: &PathBuf, capacity: usize, max_batch: usize, max_wait_ms: u64)
             max_batch,
             max_wait: std::time::Duration::from_millis(max_wait_ms),
         },
+        max_inflight: 0,
         profile: false,
     })
 }

@@ -38,6 +38,7 @@ fn registry(root: &PathBuf, skew: DeviceCalibration, profile: bool) -> ModelRegi
             max_batch: 4,
             max_wait: std::time::Duration::from_millis(2),
         },
+        max_inflight: 0,
         profile,
     })
 }
