@@ -7,7 +7,11 @@
 //! short burst, then offers seeded-Poisson open-loop load at 0.25×,
 //! 0.5×, 1×, 2× and 4× that capacity through [`dynamap::net::Client`]
 //! against a [`dynamap::net::NetServer`] on an ephemeral loopback port
-//! (mini-inception, `max_inflight = 32`). For each point it prints
+//! (mini-inception, `max_inflight = 32`). `DYNAMAP_BENCH_FAST=1`
+//! shrinks the sweep to the 0.5× and 4× points with short windows (the
+//! CI smoke shape). A final point rides at 2× capacity with a 50 ms
+//! per-request deadline and shed retries enabled, reporting deadline
+//! misses and client retry spend. For each point it prints
 //! offered vs achieved QPS, shed fraction and p50/p99/p99.9 latency
 //! (measured from the *scheduled* arrival instant, so queue collapse is
 //! charged to the tail — no coordinated omission), plus the worst
@@ -23,7 +27,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use dynamap::api::{Compiler, Device};
-use dynamap::net::{Client, NetServer};
+use dynamap::net::{Client, NetServer, RetryPolicy};
 use dynamap::serve::loadgen::{
     model_input_dims, open_loop, open_loop_input, OpenLoopConfig, OpenLoopReport,
 };
@@ -78,13 +82,31 @@ fn main() {
     );
 
     // the open-loop sweep: offered load as a multiple of capacity
+    // (fast mode keeps only the below-knee and deep-overload points)
     let (secs_per_point, req_cap) = if fast { (0.25, 400) } else { (2.0, 4000) };
+    let mults: &[f64] = if fast { &[0.5, 4.0] } else { &[0.25, 0.5, 1.0, 2.0, 4.0] };
     println!(
-        "{:>12} {:>12} {:>6} {:>7} {:>9} {:>9} {:>10} {:>12}",
-        "offered qps", "achieved", "ok", "shed%", "p50 µs", "p99 µs", "p99.9 µs", "shed max µs"
+        "{:>12} {:>12} {:>6} {:>7} {:>8} {:>9} {:>9} {:>10} {:>12}",
+        "offered qps", "achieved", "ok", "shed%", "dl miss", "p50 µs", "p99 µs",
+        "p99.9 µs", "shed max µs"
     );
+    let print_point = |r: &OpenLoopReport| {
+        let tail = r.latency.percentiles(&[50.0, 99.0, 99.9]);
+        println!(
+            "{:>12.0} {:>12.1} {:>6} {:>6.1}% {:>8} {:>9.0} {:>9.0} {:>10.0} {:>12.0}",
+            r.offered_qps,
+            r.achieved_qps,
+            r.ok,
+            100.0 * r.shed as f64 / r.sent as f64,
+            r.deadline_miss,
+            tail[0],
+            tail[1],
+            tail[2],
+            r.shed_latency.max(),
+        );
+    };
     let mut points: Vec<OpenLoopReport> = Vec::new();
-    for mult in [0.25, 0.5, 1.0, 2.0, 4.0] {
+    for &mult in mults {
         let offered = capacity * mult;
         let cfg = OpenLoopConfig {
             model: MODEL.to_string(),
@@ -92,22 +114,38 @@ fn main() {
             requests: ((offered * secs_per_point) as usize).clamp(32, req_cap),
             seed: 99,
             workers: 64,
+            deadline: None,
         };
         let r = open_loop(&client, &cfg).expect("open loop");
-        let tail = r.latency.percentiles(&[50.0, 99.0, 99.9]);
-        println!(
-            "{:>12.0} {:>12.1} {:>6} {:>6.1}% {:>9.0} {:>9.0} {:>10.0} {:>12.0}",
-            r.offered_qps,
-            r.achieved_qps,
-            r.ok,
-            100.0 * r.shed as f64 / r.sent as f64,
-            tail[0],
-            tail[1],
-            tail[2],
-            r.shed_latency.max(),
-        );
+        print_point(&r);
         points.push(r);
     }
+
+    // deadline + retry point: 2× capacity with a 50 ms per-request
+    // deadline and two shed retries under backoff — what deadlines and
+    // polite retries recover (and cost) under overload
+    let retry_client = Client::connect_with(
+        server.local_addr().to_string(),
+        RetryPolicy { overloaded_attempts: 2, ..RetryPolicy::default() },
+    )
+    .expect("connect retry client");
+    let offered = capacity * 2.0;
+    let cfg = OpenLoopConfig {
+        model: MODEL.to_string(),
+        rate_qps: offered,
+        requests: ((offered * secs_per_point) as usize).clamp(32, req_cap),
+        seed: 99,
+        workers: 64,
+        deadline: Some(Duration::from_millis(50)),
+    };
+    let r = open_loop(&retry_client, &cfg).expect("deadline point");
+    print_point(&r);
+    let stats = retry_client.stats();
+    println!(
+        "  ^ deadline point: 50 ms deadline, 2 shed retries → dl_miss={} retries={} \
+         budget left={}",
+        r.deadline_miss, stats.retries, stats.budget_remaining
+    );
 
     for s in reg.metrics().snapshots() {
         println!("  {}", s.summary());

@@ -62,6 +62,18 @@ pub enum DynamapError {
         /// Suggested client backoff before retrying, milliseconds (≥ 1).
         retry_after_ms: u64,
     },
+    /// The request's deadline expired before compute ran: either it
+    /// arrived already expired, or it aged out while waiting in the
+    /// batch queue. The request is shed *before* occupying a batch
+    /// slot (or dropped at dequeue), so late work never wastes device
+    /// time. Not retriable as-is — the caller must mint a new deadline.
+    DeadlineExceeded {
+        /// Model the expired request was addressed to.
+        model: String,
+        /// How long the request waited before being shed, milliseconds
+        /// (0 when it arrived already expired).
+        waited_ms: u64,
+    },
     /// A wire-protocol violation on the network front-end: bad magic,
     /// unsupported version, truncated frame, oversized payload or a
     /// malformed frame body. The server replies with a typed protocol
@@ -120,6 +132,13 @@ impl fmt::Display for DynamapError {
                     model, retry_after_ms
                 )
             }
+            DynamapError::DeadlineExceeded { model, waited_ms } => {
+                write!(
+                    f,
+                    "deadline exceeded: model '{}' shed the request after {} ms in queue",
+                    model, waited_ms
+                )
+            }
             DynamapError::Protocol(m) => write!(f, "protocol error: {}", m),
             DynamapError::Net(m) => write!(f, "network error: {}", m),
         }
@@ -168,6 +187,10 @@ mod tests {
         let e = DynamapError::Overloaded { model: "mini".into(), retry_after_ms: 7 };
         let s = e.to_string();
         assert!(s.contains("mini") && s.contains("7 ms"), "{s}");
+
+        let e = DynamapError::DeadlineExceeded { model: "mini".into(), waited_ms: 12 };
+        let s = e.to_string();
+        assert!(s.contains("mini") && s.contains("12 ms"), "{s}");
 
         let e = DynamapError::Protocol("bad magic 0xBEEF".into());
         assert!(e.to_string().contains("bad magic"), "{e}");

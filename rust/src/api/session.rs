@@ -513,6 +513,10 @@ impl NativeState {
         mut observe: Option<&mut dyn FnMut(&str, &[f32])>,
     ) -> Result<(TensorBuf, InferMetrics), DynamapError> {
         let cnn = &self.cnn;
+        // chaos hook: one poisoned request panics mid-compute; the batch
+        // queue's per-request catch_unwind must convert it into a typed
+        // error while batch siblings complete untouched
+        crate::fault::panic_if(crate::fault::Site::WorkerPanic);
         let t_total = Instant::now();
         let mut per_layer = Vec::new();
         // activations stay `Tensor` end to end — the only buffer copies
@@ -543,6 +547,10 @@ impl NativeState {
                     if let Some(obs) = observe.as_mut() {
                         obs(&node.name, &values[&preds[0]].data);
                     }
+                    // chaos hook: interference/throttling makes one
+                    // layer run arbitrarily slow — deadline and tail
+                    // accounting must absorb it, correctness must not
+                    crate::fault::sleep_if(crate::fault::Site::SlowLayer);
                     let t0 = Instant::now();
                     let out = pw.conv2d(&values[&preds[0]]);
                     per_layer.push((

@@ -1,0 +1,456 @@
+//! Deterministic, seeded fault injection for the serving stack.
+//!
+//! Production serving fails in ways unit tests never provoke on their
+//! own: a layer that suddenly runs 100× slow, a worker thread that
+//! panics mid-batch, a connection that stalls or drops between request
+//! and reply, a reply frame corrupted in flight, an artifact directory
+//! that returns I/O errors. This module makes every one of those
+//! failure modes *reachable on demand and reproducible by seed*, so the
+//! chaos harness (`rust/tests/chaos.rs`) and the `chaos-smoke` CI job
+//! can assert the reliability invariants — exactly one typed reply per
+//! accepted request, zero leaked admission permits, clean drain — under
+//! an adversarial schedule instead of a sunny-day one.
+//!
+//! Design constraints:
+//!
+//! - **Default-off and near-zero-cost when off.** Every injection point
+//!   compiles down to one relaxed atomic load when no plan is
+//!   installed. Production binaries pay nothing unless
+//!   `DYNAMAP_FAULTS` is set.
+//! - **Deterministic.** Whether draw *k* at site *s* fires is a pure
+//!   function of `(seed, s, k)` via SplitMix64 — independent of thread
+//!   interleaving, so a failing chaos run replays with the same seed.
+//! - **Bounded.** Each site takes an optional `limit` so a test can ask
+//!   for *exactly one* scheduler panic rather than a rate.
+//!
+//! The hooks ([`should_fire`], [`sleep_if`], [`panic_if`],
+//! [`io_error_if`]) are sprinkled through `api::session` (slow layer,
+//! worker panic), `serve::queue` (scheduler panic), `serve::registry`
+//! (artifact I/O) and `net::server` (connection stall/drop, reply
+//! corruption). Tests install a plan with [`install`] (or the
+//! [`FaultGuard`] RAII wrapper) and read back per-site counts with
+//! [`fired`].
+
+#![warn(missing_docs)]
+#![deny(clippy::correctness, clippy::suspicious)]
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+use std::time::Duration;
+
+/// The injection sites wired through the stack. Each value doubles as a
+/// stable index into the per-site counters, so adding a site at the end
+/// never perturbs an existing seed's schedule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Site {
+    /// Sleep inside a conv layer's compute (`api::session`), modelling
+    /// interference / DVFS throttling on a shared device.
+    SlowLayer,
+    /// Panic inside per-request compute (`api::session`), modelling a
+    /// poisoned request; the batch's siblings must still complete.
+    WorkerPanic,
+    /// Panic inside the `BatchQueue` scheduler thread itself
+    /// (`serve::queue`), wedging the whole queue; the registry must
+    /// re-host the model.
+    SchedulerPanic,
+    /// Drop the connection after serving a request but before writing
+    /// the reply (`net::server`) — the client sees a transport error
+    /// and must treat the request as retriable.
+    ConnDrop,
+    /// Stall the connection worker before serving (`net::server`),
+    /// modelling a slow or half-dead peer path.
+    ConnStall,
+    /// Corrupt the reply frame's header kind byte (`net::server`) so
+    /// the client's decoder rejects it as a protocol error.
+    CorruptReply,
+    /// Fail artifact/manifest I/O during model hosting
+    /// (`serve::registry`).
+    ArtifactIo,
+}
+
+/// All sites, in index order (parallel to the counter arrays).
+pub const SITES: [Site; 7] = [
+    Site::SlowLayer,
+    Site::WorkerPanic,
+    Site::SchedulerPanic,
+    Site::ConnDrop,
+    Site::ConnStall,
+    Site::CorruptReply,
+    Site::ArtifactIo,
+];
+
+impl Site {
+    fn index(self) -> usize {
+        SITES.iter().position(|s| *s == self).expect("site in SITES")
+    }
+
+    /// Parse the `DYNAMAP_FAULTS` spelling of a site (case-insensitive
+    /// snake case).
+    pub fn parse(name: &str) -> Option<Site> {
+        match name.to_ascii_lowercase().as_str() {
+            "slow_layer" => Some(Site::SlowLayer),
+            "worker_panic" => Some(Site::WorkerPanic),
+            "scheduler_panic" => Some(Site::SchedulerPanic),
+            "conn_drop" => Some(Site::ConnDrop),
+            "conn_stall" => Some(Site::ConnStall),
+            "corrupt_reply" => Some(Site::CorruptReply),
+            "artifact_io" => Some(Site::ArtifactIo),
+            _ => None,
+        }
+    }
+}
+
+/// Per-site injection parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct SiteConfig {
+    /// Probability in `[0, 1]` that a given draw fires.
+    pub rate: f64,
+    /// Maximum number of firings (0 = unbounded). Lets a test request
+    /// *exactly one* panic instead of a statistical rate.
+    pub limit: u64,
+    /// Delay applied by [`sleep_if`] sites (ignored elsewhere).
+    pub delay: Duration,
+}
+
+impl Default for SiteConfig {
+    fn default() -> Self {
+        SiteConfig { rate: 0.0, limit: 0, delay: Duration::from_millis(0) }
+    }
+}
+
+/// A complete fault schedule: a seed plus the set of armed sites.
+///
+/// Built programmatically by tests or parsed from the environment
+/// (`DYNAMAP_FAULTS` / `DYNAMAP_FAULT_SEED`) by [`FaultPlan::from_env`].
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    /// Seed for the deterministic per-draw decision hash.
+    pub seed: u64,
+    sites: BTreeMap<Site, SiteConfig>,
+}
+
+impl FaultPlan {
+    /// Empty plan (no armed sites) with the given seed.
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan { seed, sites: BTreeMap::new() }
+    }
+
+    /// Arm `site` at `rate` with no firing limit and no delay.
+    pub fn with(mut self, site: Site, rate: f64) -> FaultPlan {
+        self.sites.insert(site, SiteConfig { rate, ..SiteConfig::default() });
+        self
+    }
+
+    /// Arm `site` with full per-site configuration.
+    pub fn with_config(mut self, site: Site, cfg: SiteConfig) -> FaultPlan {
+        self.sites.insert(site, cfg);
+        self
+    }
+
+    /// Parse a plan from the environment. Returns `None` when
+    /// `DYNAMAP_FAULTS` is unset or empty. The grammar is
+    /// `site:rate[:delay_ms]` entries separated by commas, e.g.
+    /// `DYNAMAP_FAULTS="slow_layer:0.05:3,worker_panic:0.01"`, with the
+    /// seed taken from `DYNAMAP_FAULT_SEED` (default 99). Unknown sites
+    /// and malformed entries are skipped with a note on stderr rather
+    /// than aborting the server.
+    pub fn from_env() -> Option<FaultPlan> {
+        let spec = std::env::var("DYNAMAP_FAULTS").ok()?;
+        if spec.trim().is_empty() {
+            return None;
+        }
+        let seed = std::env::var("DYNAMAP_FAULT_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(99);
+        let mut plan = FaultPlan::new(seed);
+        for entry in spec.split(',') {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            let mut parts = entry.split(':');
+            let site = parts.next().and_then(Site::parse);
+            let rate = parts.next().and_then(|r| r.parse::<f64>().ok());
+            let delay_ms = parts.next().and_then(|d| d.parse::<u64>().ok()).unwrap_or(0);
+            match (site, rate) {
+                (Some(site), Some(rate)) => {
+                    plan = plan.with_config(
+                        site,
+                        SiteConfig {
+                            rate,
+                            limit: 0,
+                            delay: Duration::from_millis(delay_ms),
+                        },
+                    );
+                }
+                _ => eprintln!("dynamap: ignoring malformed DYNAMAP_FAULTS entry {entry:?}"),
+            }
+        }
+        Some(plan)
+    }
+}
+
+/// The decision core, kept free of global state so it is unit-testable
+/// without cross-contaminating parallel tests.
+#[derive(Debug)]
+pub struct Injector {
+    seed: u64,
+    /// One entry per [`SITES`] slot; `None` means the site is unarmed.
+    sites: [Option<SiteConfig>; 7],
+    /// Draw counters: how many times each site was *consulted*.
+    draws: [AtomicU64; 7],
+    /// Firing counters: how many times each site actually fired.
+    hits: [AtomicU64; 7],
+}
+
+/// SplitMix64 finalizer — the same mixer `util::rng` seeds xoshiro
+/// with; one application is enough to decorrelate (seed, site, draw)
+/// triples.
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl Injector {
+    /// Build an injector from a plan.
+    pub fn new(plan: &FaultPlan) -> Injector {
+        let mut sites = [None; 7];
+        for (site, cfg) in &plan.sites {
+            sites[site.index()] = Some(*cfg);
+        }
+        Injector {
+            seed: plan.seed,
+            sites,
+            draws: Default::default(),
+            hits: Default::default(),
+        }
+    }
+
+    /// Deterministically decide whether this draw at `site` fires.
+    ///
+    /// Lock-free: the draw index comes from a per-site atomic counter
+    /// and the decision is `splitmix64(seed ^ site ^ draw)` mapped to
+    /// `[0, 1)` and compared against the site's rate, so the schedule
+    /// depends only on *how many* draws happened at the site, never on
+    /// thread interleaving across sites. Respects the site's `limit`
+    /// by rolling back an over-limit hit.
+    pub fn should_fire(&self, site: Site) -> bool {
+        let idx = site.index();
+        let cfg = match self.sites[idx] {
+            Some(cfg) if cfg.rate > 0.0 => cfg,
+            _ => return false,
+        };
+        let draw = self.draws[idx].fetch_add(1, Ordering::Relaxed);
+        let h = splitmix64(self.seed ^ ((idx as u64) << 56) ^ draw);
+        // same u64 → f64 mapping as util::rng::Rng::f64
+        let u = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        if u >= cfg.rate {
+            return false;
+        }
+        if cfg.limit > 0 {
+            let k = self.hits[idx].fetch_add(1, Ordering::SeqCst);
+            if k >= cfg.limit {
+                self.hits[idx].fetch_sub(1, Ordering::SeqCst);
+                return false;
+            }
+            true
+        } else {
+            self.hits[idx].fetch_add(1, Ordering::Relaxed);
+            true
+        }
+    }
+
+    /// Configured delay for `site` (zero when unarmed).
+    pub fn delay(&self, site: Site) -> Duration {
+        self.sites[site.index()].map(|c| c.delay).unwrap_or(Duration::ZERO)
+    }
+
+    /// How many times `site` has fired so far.
+    pub fn fired(&self, site: Site) -> u64 {
+        self.hits[site.index()].load(Ordering::SeqCst)
+    }
+}
+
+/// Fast path: is *any* plan installed? One relaxed load.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static ACTIVE: RwLock<Option<Arc<Injector>>> = RwLock::new(None);
+
+/// Install a fault plan process-wide, replacing any previous one.
+pub fn install(plan: FaultPlan) {
+    let injector = Arc::new(Injector::new(&plan));
+    *ACTIVE.write().expect("fault registry lock") = Some(injector);
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Remove the installed plan; all hooks return to no-ops.
+pub fn clear() {
+    ENABLED.store(false, Ordering::SeqCst);
+    *ACTIVE.write().expect("fault registry lock") = None;
+}
+
+/// Whether a plan is currently installed.
+pub fn is_active() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+fn active() -> Option<Arc<Injector>> {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return None;
+    }
+    ACTIVE.read().expect("fault registry lock").clone()
+}
+
+/// Draw at `site`; true when the installed plan says this one fires.
+pub fn should_fire(site: Site) -> bool {
+    match active() {
+        Some(inj) => inj.should_fire(site),
+        None => false,
+    }
+}
+
+/// Sleep for the site's configured delay when its draw fires.
+/// Returns true when it slept.
+pub fn sleep_if(site: Site) -> bool {
+    if let Some(inj) = active() {
+        if inj.should_fire(site) {
+            std::thread::sleep(inj.delay(site));
+            return true;
+        }
+    }
+    false
+}
+
+/// Panic with an identifiable message when the site's draw fires.
+pub fn panic_if(site: Site) {
+    if should_fire(site) {
+        panic!("injected fault: {site:?}");
+    }
+}
+
+/// Return an injected I/O error for `path` when the site's draw fires.
+pub fn io_error_if(site: Site, path: &str) -> std::io::Result<()> {
+    if should_fire(site) {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::Other,
+            format!("injected fault: {site:?} at {path}"),
+        ));
+    }
+    Ok(())
+}
+
+/// How many times `site` has fired under the installed plan (0 when no
+/// plan is installed).
+pub fn fired(site: Site) -> u64 {
+    match active() {
+        Some(inj) => inj.fired(site),
+        None => 0,
+    }
+}
+
+/// RAII installer for tests: installs on construction, clears on drop —
+/// including the unwind path, so a failing chaos test cannot leak its
+/// schedule into the next one.
+pub struct FaultGuard(());
+
+impl FaultGuard {
+    /// Install `plan` and return the guard holding it active.
+    pub fn install(plan: FaultPlan) -> FaultGuard {
+        install(plan);
+        FaultGuard(())
+    }
+}
+
+impl Drop for FaultGuard {
+    fn drop(&mut self) {
+        clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_by_default() {
+        assert!(!is_active());
+        assert!(!should_fire(Site::WorkerPanic));
+        assert_eq!(fired(Site::WorkerPanic), 0);
+    }
+
+    #[test]
+    fn decisions_are_deterministic_and_rate_shaped() {
+        let plan = FaultPlan::new(7).with(Site::SlowLayer, 0.25);
+        let a = Injector::new(&plan);
+        let b = Injector::new(&plan);
+        let draws = 4000;
+        let seq_a: Vec<bool> = (0..draws).map(|_| a.should_fire(Site::SlowLayer)).collect();
+        let seq_b: Vec<bool> = (0..draws).map(|_| b.should_fire(Site::SlowLayer)).collect();
+        assert_eq!(seq_a, seq_b, "same (seed, site, draw) must give same schedule");
+        let hits = seq_a.iter().filter(|f| **f).count() as f64;
+        let rate = hits / draws as f64;
+        assert!(
+            (rate - 0.25).abs() < 0.05,
+            "empirical rate {rate} too far from configured 0.25"
+        );
+        // other sites stay silent
+        assert!(!a.should_fire(Site::ConnDrop));
+    }
+
+    #[test]
+    fn limit_bounds_firings() {
+        let plan = FaultPlan::new(1).with_config(
+            Site::WorkerPanic,
+            SiteConfig { rate: 1.0, limit: 3, delay: Duration::ZERO },
+        );
+        let inj = Injector::new(&plan);
+        let hits =
+            (0..100).filter(|_| inj.should_fire(Site::WorkerPanic)).count();
+        assert_eq!(hits, 3, "limit=3 must cap firings at exactly 3");
+        assert_eq!(inj.fired(Site::WorkerPanic), 3);
+    }
+
+    #[test]
+    fn seeds_change_the_schedule() {
+        let a = Injector::new(&FaultPlan::new(1).with(Site::ConnStall, 0.5));
+        let b = Injector::new(&FaultPlan::new(2).with(Site::ConnStall, 0.5));
+        let seq_a: Vec<bool> = (0..256).map(|_| a.should_fire(Site::ConnStall)).collect();
+        let seq_b: Vec<bool> = (0..256).map(|_| b.should_fire(Site::ConnStall)).collect();
+        assert_ne!(seq_a, seq_b, "different seeds must give different schedules");
+    }
+
+    #[test]
+    fn site_parse_round_trips() {
+        for site in SITES {
+            let name = format!("{site:?}");
+            // Debug is CamelCase; the env grammar is snake_case
+            let snake: String = name
+                .chars()
+                .enumerate()
+                .flat_map(|(i, c)| {
+                    if c.is_ascii_uppercase() && i > 0 {
+                        vec!['_', c.to_ascii_lowercase()]
+                    } else {
+                        vec![c.to_ascii_lowercase()]
+                    }
+                })
+                .collect();
+            assert_eq!(Site::parse(&snake), Some(site), "parse {snake}");
+        }
+        assert_eq!(Site::parse("nope"), None);
+    }
+
+    #[test]
+    fn guard_clears_on_drop() {
+        {
+            let _g = FaultGuard::install(FaultPlan::new(3).with(Site::ConnDrop, 1.0));
+            assert!(is_active());
+            assert!(should_fire(Site::ConnDrop));
+        }
+        assert!(!is_active());
+        assert!(!should_fire(Site::ConnDrop));
+    }
+}

@@ -88,6 +88,10 @@
 //!   native serving path, least-squares cost-model calibration,
 //!   DSE re-solve and zero-downtime plan hot-swap (`dynamap tune`,
 //!   `dynamap serve --tune`).
+//! * [`fault`] — deterministic, seeded fault injection (slow layers,
+//!   worker panics, dropped/stalled connections, corrupted replies,
+//!   artifact I/O errors) behind default-off hooks; powers the chaos
+//!   harness in `rust/tests/chaos.rs`.
 //! * [`coordinator`] — latency metrics + the simulate/infer CLI.
 //! * [`emit`] — Verilog-style RTL + control-stream emission.
 //! * [`bench`] — mini-criterion harness + figure/table regeneration.
@@ -108,6 +112,7 @@ pub mod kernels;
 pub mod runtime;
 pub mod serve;
 pub mod net;
+pub mod fault;
 pub mod tune;
 pub mod coordinator;
 pub mod emit;

@@ -22,7 +22,10 @@
 //!   the identical workload unbatched and prints the speedup. With
 //!   `--rate QPS` the load is open-loop seeded-Poisson instead (so
 //!   overload is reachable), and `--connect ADDR` aims it at a running
-//!   `serve --listen` server over TCP (`--shutdown` drains it after).
+//!   `serve --listen` server over TCP (`--shutdown` drains it after;
+//!   `--deadline-ms D` attaches per-request deadlines, `--retries N`
+//!   retries sheds under backoff, `--hedge` races a second attempt
+//!   against slow requests).
 //! * `tune --model <name> --profile <file>` — one-shot cost-model
 //!   calibration + re-map from a recorded profile; prints the residual
 //!   report, the algorithm-map diff and the predicted speedup.
@@ -38,7 +41,18 @@ use dynamap::util::table::Table;
 fn main() {
     let args = Args::parse_env(&[
         "json", "verbose", "no-fuse", "no-synth", "compare", "tune", "quant", "shutdown",
+        "hedge",
     ]);
+    // deterministic fault injection, opt-in via DYNAMAP_FAULTS (chaos
+    // testing a live server without a rebuild); off = zero cost
+    if let Some(plan) = dynamap::fault::FaultPlan::from_env() {
+        eprintln!(
+            "fault injection active (seed {}): DYNAMAP_FAULTS={}",
+            plan.seed,
+            std::env::var("DYNAMAP_FAULTS").unwrap_or_default()
+        );
+        dynamap::fault::install(plan);
+    }
     let code = match args.subcommand.as_deref() {
         Some("zoo") => cmd_zoo(),
         Some("dse") => cmd_dse(&args),
@@ -56,7 +70,8 @@ fn main() {
                 "usage: dynamap <zoo|dse|compile|baselines|simulate|infer|serve|loadgen|\
                  tune|figures|emit> [--model NAME] [--models A,B] [--clients N] \
                  [--requests M] [--listen ADDR] [--connect ADDR] [--rate QPS] \
-                 [--max-inflight N] [--dsp N] [--out DIR] [--plan-cache DIR] \
+                 [--max-inflight N] [--deadline-ms D] [--retries N] [--hedge] \
+                 [--dsp N] [--out DIR] [--plan-cache DIR] \
                  [--profile FILE] [--tune] [--quant] [--json]"
             );
             2

@@ -1,25 +1,53 @@
 //! [`Client`] — blocking TCP client for the DYNAMAP wire protocol,
-//! with connection pooling and one transparent reconnect.
+//! with connection pooling, a unified retry/backoff policy and opt-in
+//! request hedging.
 //!
 //! The protocol is strictly request-reply, so a connection is "free"
 //! whenever no call is using it: [`Client`] keeps a small pool of idle
 //! connections, checks one out per call and returns it afterwards.
 //! Typed server errors (`Overloaded`, `UnknownModel`, …) leave the
-//! stream on a frame boundary, so the connection goes back to the pool;
-//! transport failures ([`DynamapError::Net`]) discard the connection
-//! and — because inference requests are stateless and idempotent —
-//! retry exactly once on a freshly dialed one, which absorbs the
-//! common case of a pooled connection going stale between calls.
-//! Protocol errors never retry: the stream is out of sync, and
-//! re-sending bytes at a confused peer helps nobody.
+//! stream on a frame boundary, so the connection goes back to the pool.
+//!
+//! Failure handling is governed by one [`RetryPolicy`] instead of the
+//! old asymmetry (transport errors got a silent fresh-dial retry while
+//! `Overloaded` was surfaced raw even when `retry_after_ms` was tiny):
+//!
+//! * **Transport failures** ([`DynamapError::Net`]) — the bytes never
+//!   arrived; inference requests are stateless and idempotent, so the
+//!   client re-dials fresh and retries up to
+//!   [`RetryPolicy::transport_attempts`] total attempts.
+//! * **`Overloaded` sheds** — retried up to
+//!   [`RetryPolicy::overloaded_attempts`] *extra* attempts (default 0:
+//!   surfacing the shed raw preserves the open-loop measurement
+//!   semantics the loadgen and benches depend on), sleeping at least
+//!   the server's `retry_after_ms` hint.
+//! * Both paths share capped exponential backoff with seeded jitter
+//!   ([`backoff_delay`]) and draw from one per-client
+//!   [`RetryPolicy::retry_budget`], so a shed storm costs a bounded
+//!   number of extra requests no matter how many callers share the
+//!   client.
+//! * **Protocol errors never retry**: the stream is out of sync, and
+//!   re-sending bytes at a confused peer helps nobody.
+//!
+//! Hedging ([`RetryPolicy::hedge`]): when the primary attempt has
+//! outlived a latency-EWMA-derived delay, a second identical request is
+//! launched on a fresh connection and the first reply wins. The loser
+//! is cancelled by dropping its reply channel — its connection is
+//! closed, never pooled, so a late duplicate reply can never be
+//! misdelivered to a future request. Hedging is safe precisely because
+//! inference is read-only: a duplicated request duplicates compute,
+//! never a side effect.
 
 use std::net::TcpStream;
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::api::DynamapError;
 use crate::runtime::TensorBuf;
 use crate::serve::loadgen::InferTarget;
+use crate::serve::metrics::ModelMetrics;
+use crate::util::rng::Rng;
 
 use super::protocol::{read_frame, write_frame, Frame};
 
@@ -27,19 +55,159 @@ use super::protocol::{read_frame, write_frame, Frame};
 /// connections are simply closed).
 const MAX_POOL: usize = 16;
 
+/// Client-side failure policy: how many attempts each error class
+/// gets, how backoff between attempts is shaped, and whether to hedge.
+///
+/// The default reproduces the original client behavior exactly — one
+/// fresh-dial transport retry, `Overloaded` surfaced raw, no hedging —
+/// so existing callers (the loadgen's shed accounting, the overload
+/// benches) measure what they always measured. Opt into more with
+/// [`Client::connect_with`].
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Total attempts for a request whose failures are all transport
+    /// errors (≥ 1; the first attempt is included in the count).
+    pub transport_attempts: u32,
+    /// Extra attempts granted when the server sheds with `Overloaded`
+    /// (0 = surface the shed raw, the default).
+    pub overloaded_attempts: u32,
+    /// Backoff before retry attempt 0 (doubles every attempt).
+    pub base_backoff: Duration,
+    /// Backoff ceiling (pre-jitter; the server's `retry_after_ms` hint
+    /// may exceed it and then wins).
+    pub max_backoff: Duration,
+    /// Total retries this client may spend over its lifetime, across
+    /// all threads sharing it. Bounds the amplification a retry storm
+    /// can produce: once spent, every failure surfaces raw.
+    pub retry_budget: u64,
+    /// Seed for backoff jitter (deterministic given the draw order).
+    pub seed: u64,
+    /// `Some` enables hedged requests for `infer` calls.
+    pub hedge: Option<HedgeConfig>,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            transport_attempts: 2,
+            overloaded_attempts: 0,
+            base_backoff: Duration::from_millis(1),
+            max_backoff: Duration::from_millis(100),
+            retry_budget: 64,
+            seed: 99,
+            hedge: None,
+        }
+    }
+}
+
+/// When to launch a hedged second attempt: after the primary has been
+/// outstanding `ewma_mult ×` the client's EWMA of recent successful
+/// request latency, clamped to `[min_delay, max_delay]` (and
+/// `max_delay` before any latency has been observed).
+#[derive(Debug, Clone)]
+pub struct HedgeConfig {
+    /// Multiple of the latency EWMA to wait before hedging.
+    pub ewma_mult: f64,
+    /// Never hedge sooner than this.
+    pub min_delay: Duration,
+    /// Never wait longer than this (also the cold-start delay).
+    pub max_delay: Duration,
+}
+
+impl Default for HedgeConfig {
+    fn default() -> HedgeConfig {
+        HedgeConfig {
+            ewma_mult: 3.0,
+            min_delay: Duration::from_millis(1),
+            max_delay: Duration::from_millis(50),
+        }
+    }
+}
+
+/// The backoff schedule, as a pure function so it is property-testable:
+/// capped exponential in the attempt index, floored by the server's
+/// `retry_after_ms` hint, scaled by seeded jitter in `[1, 1.25)`.
+///
+/// Invariants (asserted by the in-module property test):
+/// * deterministic — same policy + same `Rng` state ⇒ same delay;
+/// * the pre-jitter value grows monotonically with `attempt` until it
+///   saturates at [`RetryPolicy::max_backoff`];
+/// * the delay is always ≥ the server hint (backing off *less* than the
+///   server asked just converts one shed into two);
+/// * the delay is bounded by `max(max_backoff, hint) × 1.25`, so the
+///   total sleep across a budget of retries is bounded too.
+pub fn backoff_delay(
+    policy: &RetryPolicy,
+    attempt: u32,
+    hint_ms: Option<u64>,
+    rng: &mut Rng,
+) -> Duration {
+    let base_us = policy.base_backoff.as_secs_f64() * 1e6;
+    let cap_us = policy.max_backoff.as_secs_f64() * 1e6;
+    let exp_us = (base_us * 2f64.powi(attempt.min(16) as i32)).min(cap_us);
+    let hint_us = hint_ms.unwrap_or(0) as f64 * 1000.0;
+    let pre_us = exp_us.max(hint_us);
+    let jitter = 1.0 + 0.25 * rng.f64();
+    Duration::from_secs_f64((pre_us * jitter / 1e6).max(0.0))
+}
+
+/// Point-in-time counters for one [`Client`]'s failure handling.
+#[derive(Debug, Clone, Copy)]
+pub struct ClientStats {
+    /// Retries spent so far (transport + overloaded).
+    pub retries: u64,
+    /// Hedged attempts that won the race against the primary.
+    pub hedges_won: u64,
+    /// Retry-budget tokens still available.
+    pub budget_remaining: u64,
+    /// EWMA of recent successful request latency, µs (0 = none yet).
+    pub ewma_us: u64,
+}
+
 /// A blocking client for one server address; cheap to share across
 /// threads (`&self` methods, pool behind a mutex held only during
 /// checkout/checkin — never across a network round trip).
 pub struct Client {
     addr: String,
     pool: Mutex<Vec<TcpStream>>,
+    policy: RetryPolicy,
+    rng: Mutex<Rng>,
+    retries: AtomicU64,
+    hedges_won: AtomicU64,
+    budget_left: AtomicU64,
+    /// EWMA of successful `infer` latency, µs — drives the hedge delay.
+    ewma_us: AtomicU64,
+    /// Optional server-side [`ModelMetrics`] to mirror retry/hedge
+    /// counters into (so they land in the `stats` table).
+    mirror: Mutex<Option<Arc<ModelMetrics>>>,
 }
 
 impl Client {
-    /// Connect to `addr` (e.g. `"127.0.0.1:4071"`), validating the
-    /// server is reachable by dialing one pooled connection.
+    /// Connect to `addr` (e.g. `"127.0.0.1:4071"`) with the default
+    /// (original-behavior) [`RetryPolicy`], validating the server is
+    /// reachable by dialing one pooled connection.
     pub fn connect(addr: impl Into<String>) -> Result<Client, DynamapError> {
-        let client = Client { addr: addr.into(), pool: Mutex::new(Vec::new()) };
+        Client::connect_with(addr, RetryPolicy::default())
+    }
+
+    /// [`Client::connect`] with an explicit retry/backoff/hedge policy.
+    pub fn connect_with(
+        addr: impl Into<String>,
+        policy: RetryPolicy,
+    ) -> Result<Client, DynamapError> {
+        let budget = policy.retry_budget;
+        let seed = policy.seed;
+        let client = Client {
+            addr: addr.into(),
+            pool: Mutex::new(Vec::new()),
+            policy,
+            rng: Mutex::new(Rng::new(seed)),
+            retries: AtomicU64::new(0),
+            hedges_won: AtomicU64::new(0),
+            budget_left: AtomicU64::new(budget),
+            ewma_us: AtomicU64::new(0),
+            mirror: Mutex::new(None),
+        };
         let conn = client.dial()?;
         client.checkin(conn);
         Ok(client)
@@ -48,6 +216,29 @@ impl Client {
     /// The server address this client dials.
     pub fn addr(&self) -> &str {
         &self.addr
+    }
+
+    /// The policy this client was built with.
+    pub fn policy(&self) -> &RetryPolicy {
+        &self.policy
+    }
+
+    /// Current retry/hedge/budget counters.
+    pub fn stats(&self) -> ClientStats {
+        ClientStats {
+            retries: self.retries.load(Ordering::Relaxed),
+            hedges_won: self.hedges_won.load(Ordering::Relaxed),
+            budget_remaining: self.budget_left.load(Ordering::Relaxed),
+            ewma_us: self.ewma_us.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Mirror this client's retry and hedge-win counters into `metrics`
+    /// (a model's [`ModelMetrics`]), so client-side reliability spend
+    /// shows up in the server's `stats` table next to the work it
+    /// caused.
+    pub fn bind_metrics(&self, metrics: Arc<ModelMetrics>) {
+        *self.mirror.lock().unwrap_or_else(|p| p.into_inner()) = Some(metrics);
     }
 
     fn dial(&self) -> Result<TcpStream, DynamapError> {
@@ -72,10 +263,45 @@ impl Client {
         }
     }
 
+    /// Spend one retry-budget token; `false` when the budget is dry.
+    fn try_spend_budget(&self) -> bool {
+        self.budget_left
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |b| b.checked_sub(1))
+            .is_ok()
+    }
+
+    fn note_retry(&self) {
+        self.retries.fetch_add(1, Ordering::Relaxed);
+        if let Some(m) = &*self.mirror.lock().unwrap_or_else(|p| p.into_inner()) {
+            m.record_retries(1);
+        }
+    }
+
+    fn note_hedge_won(&self) {
+        self.hedges_won.fetch_add(1, Ordering::Relaxed);
+        if let Some(m) = &*self.mirror.lock().unwrap_or_else(|p| p.into_inner()) {
+            m.record_hedge_won();
+        }
+    }
+
+    fn next_backoff(&self, attempt: u32, hint_ms: Option<u64>) -> Duration {
+        let mut rng = self.rng.lock().unwrap_or_else(|p| p.into_inner());
+        backoff_delay(&self.policy, attempt, hint_ms, &mut rng)
+    }
+
+    fn observe_latency(&self, elapsed: Duration) {
+        let us = (elapsed.as_secs_f64() * 1e6).max(1.0);
+        let old = self.ewma_us.load(Ordering::Relaxed);
+        let new = if old == 0 { us } else { old as f64 * 0.75 + us * 0.25 };
+        self.ewma_us.store(new as u64, Ordering::Relaxed);
+    }
+
     /// One request-reply round trip on a checked-out connection, with
-    /// a single retry on transport failure (fresh connection). Returns
-    /// the reply frame with the connection already returned to the
-    /// pool — except after `Shutdown`, whose connection is spent.
+    /// a single retry on transport failure (fresh connection). Used by
+    /// the control-plane calls (`ping`, `shutdown`); `infer` goes
+    /// through the policy-driven path instead. Returns the reply frame
+    /// with the connection already returned to the pool — except after
+    /// `Shutdown`, whose connection is spent.
     fn request(&self, frame: &Frame) -> Result<Frame, DynamapError> {
         let mut last_err = None;
         for attempt in 0..2 {
@@ -100,21 +326,196 @@ impl Client {
 
     /// Serve one inference for `model`; returns the output tensor
     /// (bitwise-equal to a local `Session::infer` of the same request)
-    /// and the server-side end-to-end latency in µs. Server-side
-    /// failures come back as their typed [`DynamapError`] — including
-    /// the retriable `Overloaded` with its `retry_after_ms` hint, which
-    /// this client deliberately does *not* sleep on: backoff policy
-    /// belongs to the caller.
+    /// and the server-side end-to-end latency in µs. Failure handling
+    /// follows the client's [`RetryPolicy`]; under the default policy
+    /// `Overloaded` comes back raw with its `retry_after_ms` hint.
     pub fn infer(
         &self,
         model: &str,
         input: &TensorBuf,
     ) -> Result<(TensorBuf, f64), DynamapError> {
-        let frame = Frame::Infer { model: model.to_string(), input: input.clone() };
-        match self.request(&frame)? {
+        self.infer_with_deadline(model, input, None)
+    }
+
+    /// [`Client::infer`] carrying a relative deadline on the wire: the
+    /// server sheds the request with the typed
+    /// [`DynamapError::DeadlineExceeded`] once `deadline` has elapsed
+    /// from the moment it decodes the frame (a relative field dodges
+    /// clock skew between client and server). Each retry attempt sends
+    /// the deadline afresh — the budget is per attempt, by design: a
+    /// retry is a *new* request with a new arrival time.
+    pub fn infer_with_deadline(
+        &self,
+        model: &str,
+        input: &TensorBuf,
+        deadline: Option<Duration>,
+    ) -> Result<(TensorBuf, f64), DynamapError> {
+        let frame = Frame::Infer {
+            model: model.to_string(),
+            input: input.clone(),
+            deadline_ms: deadline.map(|d| d.as_millis() as u64),
+        };
+        let mut transport_left = self.policy.transport_attempts.saturating_sub(1);
+        let mut overloaded_left = self.policy.overloaded_attempts;
+        let mut attempt: u32 = 0;
+        loop {
+            let t0 = Instant::now();
+            match self.attempt_infer(&frame, attempt > 0) {
+                Ok((output, server_us)) => {
+                    self.observe_latency(t0.elapsed());
+                    return Ok((output, server_us));
+                }
+                Err(e @ DynamapError::Net(_)) => {
+                    if transport_left == 0 || !self.try_spend_budget() {
+                        return Err(e);
+                    }
+                    transport_left -= 1;
+                    self.note_retry();
+                    std::thread::sleep(self.next_backoff(attempt, None));
+                }
+                Err(DynamapError::Overloaded { model, retry_after_ms }) => {
+                    if overloaded_left == 0 || !self.try_spend_budget() {
+                        return Err(DynamapError::Overloaded { model, retry_after_ms });
+                    }
+                    overloaded_left -= 1;
+                    self.note_retry();
+                    // the backoff floor is the server's own hint: it
+                    // knows its batch latency better than we do
+                    std::thread::sleep(self.next_backoff(attempt, Some(retry_after_ms)));
+                }
+                Err(e) => return Err(e), // typed, non-retriable
+            }
+            attempt += 1;
+        }
+    }
+
+    /// One infer attempt: a plain round trip, or a hedged race when the
+    /// policy enables it.
+    fn attempt_infer(
+        &self,
+        frame: &Frame,
+        fresh: bool,
+    ) -> Result<(TensorBuf, f64), DynamapError> {
+        let reply = if self.policy.hedge.is_some() {
+            self.roundtrip_hedged(frame, fresh)?
+        } else {
+            let mut conn = if fresh { self.dial()? } else { self.checkout()? };
+            let reply = roundtrip(&mut conn, frame)?;
+            self.checkin(conn);
+            reply
+        };
+        match reply {
             Frame::InferOk { output, server_us } => Ok((output, server_us)),
             Frame::Error(e) => Err(e.into()),
             other => Err(unexpected("InferOk", &other)),
+        }
+    }
+
+    /// The hedge delay for the current latency regime.
+    fn hedge_delay(&self, cfg: &HedgeConfig) -> Duration {
+        let ewma = self.ewma_us.load(Ordering::Relaxed);
+        if ewma == 0 {
+            return cfg.max_delay; // cold: hedge late, not eagerly
+        }
+        Duration::from_secs_f64(ewma as f64 * cfg.ewma_mult / 1e6)
+            .clamp(cfg.min_delay, cfg.max_delay)
+    }
+
+    /// Race a primary attempt against an optional hedged second attempt
+    /// launched once the primary has outlived the hedge delay. First
+    /// reply wins; the loser's reply channel is dropped, so its late
+    /// send fails and its connection is closed rather than pooled — a
+    /// stale duplicate reply can never be misread by a later request.
+    fn roundtrip_hedged(
+        &self,
+        frame: &Frame,
+        fresh: bool,
+    ) -> Result<Frame, DynamapError> {
+        let cfg = self.policy.hedge.clone().expect("hedge config present");
+        type Msg = (Result<Frame, DynamapError>, Option<TcpStream>, bool);
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let done = Arc::new(AtomicBool::new(false));
+
+        // primary: moves its (possibly pooled) connection into a
+        // detached thread so this caller can time it out without
+        // abandoning the read mid-frame
+        let mut conn = if fresh { self.dial()? } else { self.checkout()? };
+        let p_tx = tx.clone();
+        let p_frame = frame.clone();
+        std::thread::spawn(move || {
+            let result = roundtrip(&mut conn, &p_frame);
+            let keep = result.is_ok();
+            let _ = p_tx.send((result, keep.then_some(conn), false));
+        });
+
+        let mut first = match rx.recv_timeout(self.hedge_delay(&cfg)) {
+            Ok(msg) => Some(msg),
+            Err(_) => None,
+        };
+        let mut hedge_launched = false;
+        if first.is_none() {
+            // primary is slow: fire the hedge on a fresh dial
+            hedge_launched = true;
+            let h_tx = tx.clone();
+            let h_frame = frame.clone();
+            let h_done = done.clone();
+            let addr = self.addr.clone();
+            std::thread::spawn(move || {
+                if h_done.load(Ordering::SeqCst) {
+                    return; // already decided: skip the dial entirely
+                }
+                let result = (|| {
+                    let conn = TcpStream::connect(&addr)
+                        .map_err(|e| DynamapError::Net(format!("hedge connect failed: {e}")))?;
+                    let _ = conn.set_nodelay(true);
+                    let mut conn = conn;
+                    let reply = roundtrip(&mut conn, &h_frame)?;
+                    Ok::<_, DynamapError>((reply, conn))
+                })();
+                let _ = match result {
+                    Ok((reply, conn)) => h_tx.send((Ok(reply), Some(conn), true)),
+                    Err(e) => h_tx.send((Err(e), None, true)),
+                };
+            });
+        }
+        drop(tx);
+
+        let mut last_err: Option<DynamapError> = None;
+        loop {
+            let msg = match first.take() {
+                Some(m) => m,
+                None => match rx.recv() {
+                    Ok(m) => m,
+                    // every attempt has reported in and none won
+                    Err(_) => {
+                        return Err(last_err.unwrap_or_else(|| {
+                            DynamapError::Net("hedged request got no reply".into())
+                        }))
+                    }
+                },
+            };
+            let (result, conn, is_hedge) = msg;
+            match result {
+                Ok(reply) => {
+                    done.store(true, Ordering::SeqCst);
+                    if let Some(conn) = conn {
+                        self.checkin(conn);
+                    }
+                    if is_hedge {
+                        self.note_hedge_won();
+                    }
+                    return Ok(reply);
+                }
+                Err(e) => {
+                    last_err = Some(e);
+                    if !hedge_launched {
+                        // primary failed before the hedge delay expired:
+                        // there is no second attempt to wait for
+                        return Err(last_err.expect("just set"));
+                    }
+                    // otherwise loop: the other attempt may still win
+                }
+            }
         }
     }
 
@@ -143,6 +544,15 @@ impl InferTarget for Client {
     fn infer_once(&self, model: &str, input: &TensorBuf) -> Result<TensorBuf, DynamapError> {
         self.infer(model, input).map(|(out, _)| out)
     }
+
+    fn infer_deadline(
+        &self,
+        model: &str,
+        input: &TensorBuf,
+        deadline: Option<Duration>,
+    ) -> Result<TensorBuf, DynamapError> {
+        self.infer_with_deadline(model, input, deadline).map(|(out, _)| out)
+    }
 }
 
 fn unexpected(wanted: &str, got: &Frame) -> DynamapError {
@@ -165,5 +575,90 @@ fn roundtrip(conn: &mut TcpStream, frame: &Frame) -> Result<Frame, DynamapError>
     match read_frame(conn)? {
         Some(reply) => Ok(reply),
         None => Err(DynamapError::Net("server closed the connection".into())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    /// The satellite property test for the backoff schedule: seeded
+    /// `Rng` ⇒ deterministic, pre-jitter values monotonically capped,
+    /// always ≥ the server hint, total sleep bounded by the budget.
+    #[test]
+    fn backoff_schedule_properties() {
+        check("backoff schedule", 128, |rng| {
+            let policy = RetryPolicy {
+                base_backoff: Duration::from_micros(rng.range(100, 5_000) as u64),
+                max_backoff: Duration::from_millis(rng.range(10, 500) as u64),
+                ..RetryPolicy::default()
+            };
+            let seed = rng.next_u64();
+            let hint = if rng.bool() { Some(rng.below(300)) } else { None };
+
+            // deterministic: same seed, same draw order ⇒ same schedule
+            let mut a = Rng::new(seed);
+            let mut b = Rng::new(seed);
+            let seq_a: Vec<Duration> =
+                (0..12).map(|i| backoff_delay(&policy, i, hint, &mut a)).collect();
+            let seq_b: Vec<Duration> =
+                (0..12).map(|i| backoff_delay(&policy, i, hint, &mut b)).collect();
+            if seq_a != seq_b {
+                return Err("same seed produced different schedules".into());
+            }
+
+            let base_us = policy.base_backoff.as_secs_f64() * 1e6;
+            let cap_us = policy.max_backoff.as_secs_f64() * 1e6;
+            let hint_us = hint.unwrap_or(0) as f64 * 1000.0;
+            let mut total_us = 0.0;
+            let mut prev_floor = 0.0;
+            for (i, d) in seq_a.iter().enumerate() {
+                let us = d.as_secs_f64() * 1e6;
+                let floor =
+                    (base_us * 2f64.powi(i.min(16) as i32)).min(cap_us).max(hint_us);
+                // ≥ hint and ≥ the capped exponential it was derived from
+                if us < floor - 1.0 {
+                    return Err(format!("attempt {i}: delay {us}µs below floor {floor}µs"));
+                }
+                // ≤ the cap (or hint) with full jitter
+                let ceil = cap_us.max(hint_us) * 1.25 + 1.0;
+                if us > ceil {
+                    return Err(format!("attempt {i}: delay {us}µs above ceiling {ceil}µs"));
+                }
+                // pre-jitter floor is monotone non-decreasing
+                if floor < prev_floor {
+                    return Err(format!("floor shrank at attempt {i}"));
+                }
+                prev_floor = floor;
+                total_us += us;
+            }
+            // total sleep across a whole budget of retries is bounded
+            let bound = 12.0 * cap_us.max(hint_us) * 1.25 + 12.0;
+            if total_us > bound {
+                return Err(format!("total {total_us}µs exceeds bound {bound}µs"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn backoff_honors_hint_over_exponential() {
+        let policy = RetryPolicy::default(); // base 1 ms, cap 100 ms
+        let mut rng = Rng::new(7);
+        // a hint far above the exponential floor must win
+        let d = backoff_delay(&policy, 0, Some(80), &mut rng);
+        assert!(d >= Duration::from_millis(80), "{d:?} ignores the 80 ms hint");
+        // and a hint above the cap still wins (the server knows best)
+        let d = backoff_delay(&policy, 9, Some(500), &mut rng);
+        assert!(d >= Duration::from_millis(500), "{d:?} capped below the hint");
+    }
+
+    #[test]
+    fn default_policy_matches_original_client_behavior() {
+        let p = RetryPolicy::default();
+        assert_eq!(p.transport_attempts, 2, "one fresh-dial transport retry");
+        assert_eq!(p.overloaded_attempts, 0, "Overloaded surfaces raw by default");
+        assert!(p.hedge.is_none(), "hedging is opt-in");
     }
 }

@@ -18,11 +18,17 @@
 //!   with retriable `Overloaded` frames; [`NetServer::shutdown`]
 //!   drains gracefully — every accepted request gets its reply, late
 //!   connects are refused by the closed listener.
-//! * [`client`] — [`Client`]: blocking, connection-pooled,
-//!   one-transparent-reconnect. Implements
-//!   [`crate::serve::loadgen::InferTarget`], so the open-loop generator
-//!   drives a remote server exactly as it drives an in-process
-//!   registry.
+//! * [`client`] — [`Client`]: blocking, connection-pooled, with a
+//!   unified [`RetryPolicy`] (capped exponential backoff with seeded
+//!   jitter, a per-client retry budget, opt-in [`HedgeConfig`] hedged
+//!   requests) and optional per-request deadlines carried on the wire.
+//!   Implements [`crate::serve::loadgen::InferTarget`], so the
+//!   open-loop generator drives a remote server exactly as it drives
+//!   an in-process registry.
+//!
+//! Failure isolation and the deterministic fault-injection sites wired
+//! through this stack are documented in [`crate::fault`] and exercised
+//! end-to-end by the chaos harness in `rust/tests/chaos.rs`.
 //!
 //! ```no_run
 //! use std::sync::Arc;
@@ -46,6 +52,6 @@ pub mod client;
 pub mod protocol;
 pub mod server;
 
-pub use client::Client;
+pub use client::{backoff_delay, Client, ClientStats, HedgeConfig, RetryPolicy};
 pub use protocol::{Frame, WireError};
 pub use server::NetServer;

@@ -24,7 +24,14 @@ use crate::runtime::TensorBuf;
 /// Frame magic: the first two header bytes of every DYNAMAP frame.
 pub const MAGIC: u16 = 0xD1A7;
 /// Current protocol version; bumped on any incompatible framing change.
-pub const VERSION: u8 = 1;
+/// Version 2 adds an optional trailing deadline to [`Frame::Infer`] and
+/// the [`WireError::DeadlineExceeded`] reply.
+pub const VERSION: u8 = 2;
+/// Oldest protocol version still accepted on the read side. Version-1
+/// frames are exactly version-2 frames with the optional fields absent,
+/// so v1 peers keep working against a v2 server (and vice versa for
+/// requests that don't carry a deadline).
+pub const MIN_VERSION: u8 = 1;
 /// Hard cap on a frame payload (64 MiB) — read before allocating, so an
 /// adversarial length field cannot force a huge allocation.
 pub const MAX_PAYLOAD: u32 = 64 << 20;
@@ -40,6 +47,12 @@ pub enum Frame {
         model: String,
         /// Input tensor.
         input: TensorBuf,
+        /// Optional request deadline, milliseconds from the moment the
+        /// server decodes the frame. `None` (and every version-1 frame)
+        /// means "no deadline". When set, the server sheds the request
+        /// with [`WireError::DeadlineExceeded`] instead of computing a
+        /// result nobody is waiting for.
+        deadline_ms: Option<u64>,
     },
     /// Request: liveness probe.
     Ping,
@@ -83,6 +96,15 @@ pub enum WireError {
         /// Received element count.
         got: u64,
     },
+    /// The request's deadline expired before compute ran; the request
+    /// was shed without occupying a batch slot. Not retriable as-is —
+    /// the client must mint a fresh deadline.
+    DeadlineExceeded {
+        /// Model the expired request was addressed to.
+        model: String,
+        /// How long the request waited before being shed, milliseconds.
+        waited_ms: u64,
+    },
     /// The model's queue is shut down (eviction race or drain); retriable.
     QueueClosed {
         /// Model whose queue was gone.
@@ -106,6 +128,9 @@ impl From<DynamapError> for WireError {
                 expected: expected as u64,
                 got: got as u64,
             },
+            DynamapError::DeadlineExceeded { model, waited_ms } => {
+                WireError::DeadlineExceeded { model, waited_ms }
+            }
             DynamapError::QueueClosed { model } => WireError::QueueClosed { model },
             DynamapError::Protocol(m) => WireError::Protocol(m),
             other => WireError::Server(other.to_string()),
@@ -125,6 +150,9 @@ impl From<WireError> for DynamapError {
                 expected: expected as usize,
                 got: got as usize,
             },
+            WireError::DeadlineExceeded { model, waited_ms } => {
+                DynamapError::DeadlineExceeded { model, waited_ms }
+            }
             WireError::QueueClosed { model } => DynamapError::QueueClosed { model },
             WireError::Protocol(m) => DynamapError::Protocol(m),
             WireError::Server(m) => DynamapError::Serve(m),
@@ -148,6 +176,7 @@ const E_SHAPE: u8 = 3;
 const E_QUEUE_CLOSED: u8 = 4;
 const E_PROTOCOL: u8 = 5;
 const E_SERVER: u8 = 6;
+const E_DEADLINE: u8 = 7;
 
 fn proto(msg: impl Into<String>) -> DynamapError {
     DynamapError::Protocol(msg.into())
@@ -270,10 +299,15 @@ impl<'a> Cur<'a> {
 /// Serialize `frame` (header + payload) into a fresh byte vector.
 pub fn encode_frame(frame: &Frame) -> Vec<u8> {
     let (kind, payload) = match frame {
-        Frame::Infer { model, input } => {
+        Frame::Infer { model, input, deadline_ms } => {
             let mut p = Vec::with_capacity(input.data.len() * 4 + 64);
             put_str(&mut p, model);
             put_tensor(&mut p, input);
+            // optional trailing deadline: absent ⇒ the body is exactly
+            // a version-1 Infer frame, so old readers stay compatible
+            if let Some(ms) = deadline_ms {
+                p.extend_from_slice(&ms.to_le_bytes());
+            }
             (K_INFER, p)
         }
         Frame::Ping => (K_PING, Vec::new()),
@@ -316,6 +350,11 @@ pub fn encode_frame(frame: &Frame) -> Vec<u8> {
                     p.push(E_SERVER);
                     put_str(&mut p, m);
                 }
+                WireError::DeadlineExceeded { model, waited_ms } => {
+                    p.push(E_DEADLINE);
+                    put_str(&mut p, model);
+                    p.extend_from_slice(&waited_ms.to_le_bytes());
+                }
             }
             (K_ERROR, p)
         }
@@ -337,7 +376,10 @@ fn decode_payload(kind: u8, payload: &[u8]) -> Result<Frame, DynamapError> {
         K_INFER => {
             let model = cur.str()?;
             let input = cur.tensor()?;
-            Frame::Infer { model, input }
+            // version-2 extension: a trailing u64 deadline, when present
+            let deadline_ms =
+                if cur.pos < cur.buf.len() { Some(cur.u64()?) } else { None };
+            Frame::Infer { model, input, deadline_ms }
         }
         K_PING => Frame::Ping,
         K_SHUTDOWN => Frame::Shutdown,
@@ -366,6 +408,11 @@ fn decode_payload(kind: u8, payload: &[u8]) -> Result<Frame, DynamapError> {
                 E_QUEUE_CLOSED => WireError::QueueClosed { model: cur.str()? },
                 E_PROTOCOL => WireError::Protocol(cur.str()?),
                 E_SERVER => WireError::Server(cur.str()?),
+                E_DEADLINE => {
+                    let model = cur.str()?;
+                    let waited_ms = cur.u64()?;
+                    WireError::DeadlineExceeded { model, waited_ms }
+                }
                 other => return Err(proto(format!("unknown wire-error code {other}"))),
             };
             Frame::Error(err)
@@ -404,9 +451,9 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Frame>, DynamapError> {
     if magic != MAGIC {
         return Err(proto(format!("bad magic {magic:#06x} (want {MAGIC:#06x})")));
     }
-    if header[2] != VERSION {
+    if header[2] < MIN_VERSION || header[2] > VERSION {
         return Err(proto(format!(
-            "unsupported protocol version {} (speak {VERSION})",
+            "unsupported protocol version {} (speak {MIN_VERSION}..={VERSION})",
             header[2]
         )));
     }
@@ -472,7 +519,11 @@ mod tests {
             1 => Frame::Pong,
             2 => Frame::Shutdown,
             3 => Frame::ShutdownAck,
-            4 => Frame::Infer { model: rand_string(rng), input: rand_tensor(rng) },
+            4 => Frame::Infer {
+                model: rand_string(rng),
+                input: rand_tensor(rng),
+                deadline_ms: if rng.bool() { Some(rng.below(100_000)) } else { None },
+            },
             5 => Frame::InferOk {
                 output: rand_tensor(rng),
                 server_us: rng.f64() * 1e6,
@@ -492,6 +543,10 @@ mod tests {
                     WireError::QueueClosed { model: rand_string(rng) },
                     WireError::Protocol(rand_string(rng)),
                     WireError::Server(rand_string(rng)),
+                    WireError::DeadlineExceeded {
+                        model: rand_string(rng),
+                        waited_ms: rng.below(100_000),
+                    },
                 ];
                 Frame::Error(rng.choose(&opts).clone())
             }
@@ -607,12 +662,39 @@ mod tests {
     }
 
     #[test]
+    fn version1_infer_frames_decode_as_no_deadline() {
+        // a v1 Infer body is exactly a v2 body without the trailing
+        // deadline; stamping the old version byte must still decode
+        let frame = Frame::Infer {
+            model: "mini".into(),
+            input: TensorBuf::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]),
+            deadline_ms: None,
+        };
+        let mut bytes = encode_frame(&frame);
+        assert_eq!(bytes[2], VERSION);
+        bytes[2] = MIN_VERSION;
+        let back = read_frame(&mut &bytes[..]).unwrap().unwrap();
+        assert_eq!(back, frame, "v1 framing reads back as deadline-free");
+
+        // and a deadline survives a v2 round trip
+        let frame = Frame::Infer {
+            model: "mini".into(),
+            input: TensorBuf::new(vec![1], vec![0.5]),
+            deadline_ms: Some(250),
+        };
+        let bytes = encode_frame(&frame);
+        let back = read_frame(&mut &bytes[..]).unwrap().unwrap();
+        assert_eq!(back, frame);
+    }
+
+    #[test]
     fn wire_errors_round_trip_through_dynamap_errors() {
         let cases = vec![
             DynamapError::Overloaded { model: "mini".into(), retry_after_ms: 3 },
             DynamapError::UnknownModel("ghost".into()),
             DynamapError::Shape { context: "input".into(), expected: 1024, got: 7 },
             DynamapError::QueueClosed { model: "mini".into() },
+            DynamapError::DeadlineExceeded { model: "mini".into(), waited_ms: 42 },
             DynamapError::Protocol("bad magic".into()),
         ];
         for e in cases {

@@ -28,18 +28,28 @@
 //! [`NetServer::wait_shutdown`] returning on the owner thread — the
 //! worker that received the frame only acks and raises the stop flag,
 //! it never joins its siblings (or itself).
+//!
+//! Failure isolation: every connection worker runs under
+//! `catch_unwind`, and each Infer request gets its own unwind barrier
+//! around the registry submit — one poisoned request costs one typed
+//! `Server` error (or at worst one connection), never the process. The
+//! [`crate::fault`] hooks on this path (stall, drop, corrupt-reply) let
+//! the chaos harness provoke each failure deterministically.
 
 use std::collections::HashMap;
+use std::io::Write;
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::api::DynamapError;
+use crate::fault;
 use crate::serve::ModelRegistry;
 
-use super::protocol::{read_frame, write_frame, Frame, WireError};
+use super::protocol::{encode_frame, read_frame, write_frame, Frame, WireError};
 
 /// Accept-loop poll interval while the listener has nothing to accept.
 const ACCEPT_POLL: Duration = Duration::from_millis(2);
@@ -183,8 +193,25 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
                     shared.lock_conns().insert(id, read_half);
                 }
                 let worker_shared = shared.clone();
-                let handle =
-                    std::thread::spawn(move || connection_loop(stream, id, worker_shared));
+                let handle = std::thread::spawn(move || {
+                    // panic isolation: a worker that unwinds (a bug, or
+                    // the chaos harness) takes down one connection, not
+                    // the server — and its map entry is still cleaned
+                    // up so drain never waits on a ghost
+                    let cleanup_shared = worker_shared.clone();
+                    let result = catch_unwind(AssertUnwindSafe(move || {
+                        connection_loop(stream, id, worker_shared)
+                    }));
+                    if let Some(conn) = cleanup_shared.lock_conns().remove(&id) {
+                        let _ = conn.shutdown(Shutdown::Both);
+                    }
+                    if result.is_err() {
+                        eprintln!(
+                            "dynamap: connection worker {id} panicked; \
+                             connection dropped, server unaffected"
+                        );
+                    }
+                });
                 let mut workers = shared.lock_workers();
                 workers.push(handle);
                 // reap finished workers so a long-lived server does not
@@ -217,13 +244,46 @@ fn connection_loop(mut stream: TcpStream, id: u64, shared: Arc<Shared>) {
                 shared.request_stop();
                 break;
             }
-            Ok(Some(Frame::Infer { model, input })) => {
-                let reply = match shared.registry.infer(&model, &input) {
-                    Ok((output, metrics)) => {
+            Ok(Some(Frame::Infer { model, input, deadline_ms })) => {
+                // chaos hook: a stalled peer path delays service — the
+                // deadline clock below keeps ticking through it
+                fault::sleep_if(fault::Site::ConnStall);
+                // the deadline starts when the server *decodes* the
+                // frame: a relative wire field dodges clock skew
+                let deadline =
+                    deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms));
+                // second unwind barrier, per request: even if a panic
+                // escapes the batch queue's own isolation (e.g. on the
+                // submit path itself), this connection answers typed
+                // and lives on
+                let reply = match catch_unwind(AssertUnwindSafe(|| {
+                    shared.registry.infer_with_deadline(&model, &input, deadline)
+                })) {
+                    Ok(Ok((output, metrics))) => {
                         Frame::InferOk { output, server_us: metrics.total_us }
                     }
-                    Err(e) => Frame::Error(WireError::from(e)),
+                    Ok(Err(e)) => Frame::Error(WireError::from(e)),
+                    Err(_) => Frame::Error(WireError::Server(
+                        "connection worker panicked serving the request".into(),
+                    )),
                 };
+                // chaos hook: drop the connection after serving but
+                // before replying — the client must see a transport
+                // error and treat the request as safely retriable
+                if fault::should_fire(fault::Site::ConnDrop) {
+                    break;
+                }
+                // chaos hook: corrupt the reply frame's kind byte (never
+                // the payload — silent data corruption is a different
+                // failure class than a decodable-but-wrong frame)
+                if fault::should_fire(fault::Site::CorruptReply) {
+                    let mut bytes = encode_frame(&reply);
+                    bytes[3] ^= 0x40;
+                    if stream.write_all(&bytes).and_then(|_| stream.flush()).is_err() {
+                        break;
+                    }
+                    continue;
+                }
                 if write_frame(&mut stream, &reply).is_err() {
                     break;
                 }
@@ -249,6 +309,8 @@ fn connection_loop(mut stream: TcpStream, id: u64, shared: Arc<Shared>) {
             Err(_) => break, // transport failure: nothing to say it on
         }
     }
+    // map-entry removal lives in the spawn wrapper (it must run even
+    // when this loop unwinds); closing our own handle here just makes
+    // the normal-exit close prompt
     let _ = stream.shutdown(Shutdown::Both);
-    shared.lock_conns().remove(&id);
 }

@@ -24,7 +24,7 @@ use std::time::{Duration, Instant};
 use crate::api::{Compiler, DynamapError};
 use crate::coordinator::metrics::LatencyStats;
 use crate::graph::zoo;
-use crate::net::{Client, NetServer};
+use crate::net::{Client, HedgeConfig, NetServer, RetryPolicy};
 use crate::runtime::TensorBuf;
 use crate::tune::{observed_vs_predicted, TuneConfig, TuneController};
 use crate::util::cli::Args;
@@ -352,6 +352,15 @@ fn infer_burst(
 /// * `--connect ADDR --rate QPS [--shutdown]` — the same open loop
 ///   over TCP against a running `serve --listen` server, via the
 ///   pooled [`Client`]; `--shutdown` drains the server afterwards.
+///
+/// Open-loop reliability knobs: `--deadline-ms D` attaches a relative
+/// deadline to every request (expired ones are shed server-side with
+/// the typed `DeadlineExceeded`, reported as `dl_miss=`);
+/// `--retries N` grants N extra attempts on `Overloaded` sheds
+/// (honoring the server's `retry_after_ms` hint under capped
+/// exponential backoff); `--hedge` enables a hedged second attempt
+/// once a request outlives the client's latency EWMA. The latter two
+/// apply only with `--connect` — they are client policy.
 pub fn loadgen(args: &Args) -> i32 {
     if args.has("connect") || args.get("connect").is_some() || args.get("rate").is_some() {
         return loadgen_open(args);
@@ -420,6 +429,9 @@ fn loadgen_open(args: &Args) -> i32 {
         requests: args.get_usize("requests", 256).max(1),
         seed: args.get_usize("seed", 99) as u64,
         workers: args.get_usize("workers", 64).max(1),
+        deadline: args
+            .get("deadline-ms")
+            .map(|_| Duration::from_millis(args.get_usize("deadline-ms", 250) as u64)),
     };
     if models.len() > 1 {
         eprintln!(
@@ -428,13 +440,27 @@ fn loadgen_open(args: &Args) -> i32 {
         );
     }
     println!(
-        "open loop: {} @ {:.0} qps offered, {} requests (seed {}, {} workers)",
-        cfg.model, cfg.rate_qps, cfg.requests, cfg.seed, cfg.workers
+        "open loop: {} @ {:.0} qps offered, {} requests (seed {}, {} workers{})",
+        cfg.model,
+        cfg.rate_qps,
+        cfg.requests,
+        cfg.seed,
+        cfg.workers,
+        match cfg.deadline {
+            Some(d) => format!(", deadline {d:?}"),
+            None => String::new(),
+        },
     );
     let run = |target: &dyn InferTarget| loadgen::open_loop(target, &cfg);
     let report = match args.get("connect") {
         Some(addr) => {
-            let client = match Client::connect(addr) {
+            let policy = RetryPolicy {
+                overloaded_attempts: args.get_usize("retries", 0) as u32,
+                hedge: args.has("hedge").then(HedgeConfig::default),
+                seed: args.get_usize("seed", 99) as u64,
+                ..RetryPolicy::default()
+            };
+            let client = match Client::connect_with(addr, policy) {
                 Ok(c) => c,
                 Err(e) => {
                     eprintln!("connect failed: {e}");
@@ -442,6 +468,13 @@ fn loadgen_open(args: &Args) -> i32 {
                 }
             };
             let report = run(&client);
+            let stats = client.stats();
+            if stats.retries > 0 || stats.hedges_won > 0 {
+                println!(
+                    "client: {} retries, {} hedges won, {} budget tokens left",
+                    stats.retries, stats.hedges_won, stats.budget_remaining
+                );
+            }
             if args.has("shutdown") {
                 match client.shutdown_server() {
                     Ok(()) => println!("server drain requested"),

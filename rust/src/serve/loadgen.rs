@@ -147,11 +147,36 @@ pub fn run(registry: &ModelRegistry, cfg: &LoadgenConfig) -> Result<LoadReport, 
 pub trait InferTarget: Sync {
     /// Serve one request for `model`, blocking for the reply.
     fn infer_once(&self, model: &str, input: &TensorBuf) -> Result<TensorBuf, DynamapError>;
+
+    /// [`InferTarget::infer_once`] with an optional relative deadline:
+    /// the target should shed the request with
+    /// [`DynamapError::DeadlineExceeded`] once `deadline` has elapsed
+    /// from acceptance. Targets without deadline support ignore it
+    /// (the default), which keeps third-party stubs source-compatible.
+    fn infer_deadline(
+        &self,
+        model: &str,
+        input: &TensorBuf,
+        deadline: Option<Duration>,
+    ) -> Result<TensorBuf, DynamapError> {
+        let _ = deadline;
+        self.infer_once(model, input)
+    }
 }
 
 impl InferTarget for ModelRegistry {
     fn infer_once(&self, model: &str, input: &TensorBuf) -> Result<TensorBuf, DynamapError> {
         self.infer(model, input).map(|(out, _)| out)
+    }
+
+    fn infer_deadline(
+        &self,
+        model: &str,
+        input: &TensorBuf,
+        deadline: Option<Duration>,
+    ) -> Result<TensorBuf, DynamapError> {
+        let absolute = deadline.map(|d| Instant::now() + d);
+        self.infer_with_deadline(model, input, absolute).map(|(out, _)| out)
     }
 }
 
@@ -202,6 +227,10 @@ pub struct OpenLoopConfig {
     /// pool cannot pick up immediately wait (and that wait is charged
     /// to their latency), they are never dropped by the generator.
     pub workers: usize,
+    /// Optional relative deadline attached to every request; the target
+    /// sheds expired requests with [`DynamapError::DeadlineExceeded`],
+    /// accounted separately from errors in the report.
+    pub deadline: Option<Duration>,
 }
 
 impl Default for OpenLoopConfig {
@@ -212,6 +241,7 @@ impl Default for OpenLoopConfig {
             requests: 256,
             seed: 99,
             workers: 64,
+            deadline: None,
         }
     }
 }
@@ -229,6 +259,9 @@ pub struct OpenLoopReport {
     pub ok: usize,
     /// Requests shed with [`DynamapError::Overloaded`].
     pub shed: usize,
+    /// Requests shed with [`DynamapError::DeadlineExceeded`] — they
+    /// expired (pre-admission or in queue) before compute started.
+    pub deadline_miss: usize,
     /// Requests failing with any other error.
     pub errors: usize,
     /// Wall clock from first scheduled arrival to last reply.
@@ -247,12 +280,13 @@ impl OpenLoopReport {
     pub fn summary(&self) -> String {
         let tail = self.latency.percentiles(&[50.0, 99.0, 99.9]);
         format!(
-            "offered {:.0} qps → achieved {:.1} qps  ok={} shed={} errors={} \
+            "offered {:.0} qps → achieved {:.1} qps  ok={} shed={} dl_miss={} errors={} \
              p50={:.0}µs p99={:.0}µs p99.9={:.0}µs  shed reply max={:.0}µs",
             self.offered_qps,
             self.achieved_qps,
             self.ok,
             self.shed,
+            self.deadline_miss,
             self.errors,
             tail[0],
             tail[1],
@@ -303,6 +337,7 @@ pub fn open_loop<T: InferTarget + ?Sized>(
     let rx = Mutex::new(rx);
     let ok_lat = Mutex::new(Vec::new());
     let shed_lat = Mutex::new(Vec::new());
+    let deadline_miss = AtomicUsize::new(0);
     let errors = AtomicUsize::new(0);
     let start = Instant::now();
     std::thread::scope(|s| {
@@ -312,7 +347,7 @@ pub fn open_loop<T: InferTarget + ?Sized>(
                 let Ok((i, scheduled)) = job else { break };
                 let input = open_loop_input(cfg.seed, i, dims);
                 let sent = Instant::now();
-                match target.infer_once(&cfg.model, &input) {
+                match target.infer_deadline(&cfg.model, &input, cfg.deadline) {
                     Ok(_) => {
                         let e2e = start.elapsed().saturating_sub(scheduled);
                         let us = e2e.as_secs_f64() * 1e6;
@@ -321,6 +356,9 @@ pub fn open_loop<T: InferTarget + ?Sized>(
                     Err(DynamapError::Overloaded { .. }) => {
                         let us = sent.elapsed().as_secs_f64() * 1e6;
                         shed_lat.lock().unwrap_or_else(|p| p.into_inner()).push(us);
+                    }
+                    Err(DynamapError::DeadlineExceeded { .. }) => {
+                        deadline_miss.fetch_add(1, Ordering::Relaxed);
                     }
                     Err(_) => {
                         errors.fetch_add(1, Ordering::Relaxed);
@@ -362,6 +400,7 @@ pub fn open_loop<T: InferTarget + ?Sized>(
         sent: cfg.requests,
         ok,
         shed,
+        deadline_miss: deadline_miss.into_inner(),
         errors: errors.into_inner(),
         wall,
         latency,
@@ -415,7 +454,7 @@ mod tests {
         assert!(a.iter().all(|g| g.is_finite() && *g >= 0.0));
     }
 
-    /// A stub target that sheds every other request — checks the
+    /// A stub target cycling through every reply class — checks the
     /// report's accounting paths without a real server.
     struct Flaky(AtomicUsize);
     impl InferTarget for Flaky {
@@ -425,11 +464,15 @@ mod tests {
             input: &TensorBuf,
         ) -> Result<TensorBuf, DynamapError> {
             let n = self.0.fetch_add(1, Ordering::Relaxed);
-            match n % 3 {
+            match n % 4 {
                 0 => Ok(input.clone()),
                 1 => Err(DynamapError::Overloaded {
                     model: "mini-inception".into(),
                     retry_after_ms: 1,
+                }),
+                2 => Err(DynamapError::DeadlineExceeded {
+                    model: "mini-inception".into(),
+                    waited_ms: 5,
                 }),
                 _ => Err(DynamapError::Serve("boom".into())),
             }
@@ -441,18 +484,20 @@ mod tests {
         let target = Flaky(AtomicUsize::new(0));
         let cfg = OpenLoopConfig {
             rate_qps: 20_000.0, // finish fast; accounting is rate-blind
-            requests: 99,
+            requests: 100,
             workers: 8,
             ..OpenLoopConfig::default()
         };
         let report = open_loop(&target, &cfg).unwrap();
-        assert_eq!(report.sent, 99);
-        assert_eq!(report.ok + report.shed + report.errors, 99);
-        assert_eq!(report.ok, 33);
-        assert_eq!(report.shed, 33);
-        assert_eq!(report.errors, 33);
+        assert_eq!(report.sent, 100);
+        assert_eq!(report.ok + report.shed + report.deadline_miss + report.errors, 100);
+        assert_eq!(report.ok, 25);
+        assert_eq!(report.shed, 25);
+        assert_eq!(report.deadline_miss, 25);
+        assert_eq!(report.errors, 25);
         assert_eq!(report.latency.count(), report.ok);
-        assert!(report.summary().contains("shed=33"), "{}", report.summary());
+        assert!(report.summary().contains("shed=25"), "{}", report.summary());
+        assert!(report.summary().contains("dl_miss=25"), "{}", report.summary());
 
         // invalid configs are typed, not panics
         assert!(open_loop(&target, &OpenLoopConfig { rate_qps: 0.0, ..cfg.clone() }).is_err());

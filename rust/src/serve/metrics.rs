@@ -30,6 +30,10 @@ pub struct ModelMetrics {
     max_depth: AtomicUsize,
     swaps: AtomicUsize,
     shed: AtomicU64,
+    deadline_miss: AtomicU64,
+    retries: AtomicU64,
+    hedges_won: AtomicU64,
+    panics: AtomicU64,
     /// EWMA of the mean per-request end-to-end latency (µs), updated
     /// once per flushed batch. Feeds the `retry_after_ms` hint on
     /// [`crate::api::DynamapError::Overloaded`] without touching the
@@ -68,6 +72,10 @@ impl ModelMetrics {
             max_depth: AtomicUsize::new(0),
             swaps: AtomicUsize::new(0),
             shed: AtomicU64::new(0),
+            deadline_miss: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            hedges_won: AtomicU64::new(0),
+            panics: AtomicU64::new(0),
             ewma_us: AtomicU64::new(0),
             inner: Mutex::new(Inner::default()),
         }
@@ -114,6 +122,50 @@ impl ModelMetrics {
     /// Requests shed by admission control so far.
     pub fn shed(&self) -> u64 {
         self.shed.load(Ordering::Relaxed)
+    }
+
+    /// A request's deadline expired before compute ran — shed either at
+    /// admission (arrived expired) or at batch dequeue (aged out in
+    /// queue). Like `shed`, these never count toward `requests`.
+    pub fn record_deadline_miss(&self) {
+        self.deadline_miss.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Requests shed because their deadline expired.
+    pub fn deadline_miss(&self) -> u64 {
+        self.deadline_miss.load(Ordering::Relaxed)
+    }
+
+    /// `n` client-side retries were spent against this model (mirrored
+    /// into the server table via [`crate::net::Client::bind_metrics`]).
+    pub fn record_retries(&self, n: u64) {
+        self.retries.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Client-side retries recorded against this model.
+    pub fn retries(&self) -> u64 {
+        self.retries.load(Ordering::Relaxed)
+    }
+
+    /// A hedged second attempt beat the primary request.
+    pub fn record_hedge_won(&self) {
+        self.hedges_won.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Hedged attempts that won the race against the primary.
+    pub fn hedges_won(&self) -> u64 {
+        self.hedges_won.load(Ordering::Relaxed)
+    }
+
+    /// A per-request compute panic was caught and converted into a
+    /// typed error while the batch's siblings completed.
+    pub fn record_panic_recovered(&self) {
+        self.panics.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Compute panics caught and isolated so far.
+    pub fn panics_recovered(&self) -> u64 {
+        self.panics.load(Ordering::Relaxed)
     }
 
     /// Backoff hint for [`crate::api::DynamapError::Overloaded`],
@@ -192,6 +244,10 @@ impl ModelMetrics {
             requests: served,
             errors: inner.errors,
             shed: self.shed(),
+            deadline_miss: self.deadline_miss(),
+            retries: self.retries(),
+            hedges_won: self.hedges_won(),
+            panics_recovered: self.panics_recovered(),
             batches: inner.batches,
             qps: if elapsed > 0.0 { served as f64 / elapsed } else { 0.0 },
             mean_batch: if inner.batches > 0 {
@@ -229,6 +285,14 @@ pub struct ModelSnapshot {
     pub errors: u64,
     /// Requests shed by admission control (never entered the queue).
     pub shed: u64,
+    /// Requests shed because their deadline expired before compute.
+    pub deadline_miss: u64,
+    /// Client-side retries mirrored into the server table.
+    pub retries: u64,
+    /// Hedged attempts that won the race against the primary.
+    pub hedges_won: u64,
+    /// Per-request compute panics caught and isolated.
+    pub panics_recovered: u64,
     /// Batches flushed to the backend.
     pub batches: u64,
     /// Served requests per second since the metrics were created.
@@ -260,13 +324,15 @@ impl ModelSnapshot {
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
-            "{}: {} req ({} err, {} shed) {:.1} qps  e2e mean={:.0}µs p50={:.0}µs \
-             p95={:.0}µs p99={:.0}µs p99.9={:.0}µs  {} batches (mean {:.2}, hist {})  \
-             max depth {}  swaps {}",
+            "{}: {} req ({} err, {} shed, {} dl-miss) {:.1} qps  e2e mean={:.0}µs \
+             p50={:.0}µs p95={:.0}µs p99={:.0}µs p99.9={:.0}µs  {} batches (mean \
+             {:.2}, hist {})  max depth {}  swaps {}  retries {}  hedges won {}  \
+             panics {}",
             self.model,
             self.requests,
             self.errors,
             self.shed,
+            self.deadline_miss,
             self.qps,
             self.mean_us,
             self.p50_us,
@@ -277,7 +343,10 @@ impl ModelSnapshot {
             self.mean_batch,
             self.hist_summary(),
             self.max_queue_depth,
-            self.swaps
+            self.swaps,
+            self.retries,
+            self.hedges_won,
+            self.panics_recovered
         )
     }
 
@@ -329,9 +398,9 @@ impl ServerMetrics {
         let mut t = Table::new(
             "serving metrics",
             &[
-                "model", "req", "err", "shed", "qps", "mean µs", "p50 µs", "p95 µs",
-                "p99 µs", "p99.9 µs", "batches", "mean b", "depth max", "swaps",
-                "batch hist",
+                "model", "req", "err", "shed", "dl miss", "qps", "mean µs", "p50 µs",
+                "p95 µs", "p99 µs", "p99.9 µs", "batches", "mean b", "depth max",
+                "swaps", "retries", "hedged", "panics", "batch hist",
             ],
         );
         for s in self.snapshots() {
@@ -340,6 +409,7 @@ impl ServerMetrics {
                 s.requests.to_string(),
                 s.errors.to_string(),
                 s.shed.to_string(),
+                s.deadline_miss.to_string(),
                 format!("{:.1}", s.qps),
                 format!("{:.0}", s.mean_us),
                 format!("{:.0}", s.p50_us),
@@ -350,6 +420,9 @@ impl ServerMetrics {
                 format!("{:.2}", s.mean_batch),
                 s.max_queue_depth.to_string(),
                 s.swaps.to_string(),
+                s.retries.to_string(),
+                s.hedges_won.to_string(),
+                s.panics_recovered.to_string(),
                 s.hist_summary(),
             ]);
         }
@@ -395,6 +468,29 @@ mod tests {
         assert_eq!(s.batch_hist.get(&3), Some(&1));
         assert!(s.summary().contains("mini"));
         assert!(s.summary().contains("2 shed"), "{}", s.summary());
+    }
+
+    #[test]
+    fn reliability_counters_land_in_snapshot_and_report() {
+        let m = ModelMetrics::new("rel");
+        m.record_deadline_miss();
+        m.record_deadline_miss();
+        m.record_retries(5);
+        m.record_hedge_won();
+        m.record_panic_recovered();
+        let s = m.snapshot();
+        assert_eq!(s.deadline_miss, 2);
+        assert_eq!(s.retries, 5);
+        assert_eq!(s.hedges_won, 1);
+        assert_eq!(s.panics_recovered, 1);
+        assert!(s.summary().contains("2 dl-miss"), "{}", s.summary());
+        assert!(s.summary().contains("retries 5"), "{}", s.summary());
+
+        let sm = ServerMetrics::new();
+        sm.model("rel").record_deadline_miss();
+        let report = sm.report();
+        assert!(report.contains("dl miss"), "{report}");
+        assert!(report.contains("retries"), "{report}");
     }
 
     #[test]

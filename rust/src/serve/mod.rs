@@ -28,6 +28,18 @@
 //!   retriable [`crate::api::DynamapError::Overloaded`] (carrying a
 //!   measured `retry_after_ms` hint) instead of queueing unboundedly —
 //!   the backpressure story behind the TCP front-end in [`crate::net`].
+//!   Requests may also carry a deadline
+//!   ([`ModelRegistry::infer_with_deadline`]): expired requests are
+//!   shed with the typed
+//!   [`crate::api::DynamapError::DeadlineExceeded`] *before* they
+//!   claim an admission permit or a batch slot, and re-checked at
+//!   flush time so a request that expired waiting never burns compute.
+//! * Panic isolation: a request that panics inside compute is caught
+//!   at the batch boundary and answered with a typed `Serve` error
+//!   while its batch siblings complete normally; a wedged queue (dead
+//!   scheduler) is detected and the model re-hosted on the next
+//!   request. Counters for all of it (`deadline_miss`, `retries`,
+//!   `hedges_won`, `panics_recovered`) land in [`ServerMetrics`].
 //! * [`loadgen`] is the seeded measurement harness behind
 //!   `dynamap loadgen` and the benches: closed-loop ([`loadgen::run`])
 //!   for throughput, open-loop seeded-Poisson ([`loadgen::open_loop`])

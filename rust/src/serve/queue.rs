@@ -63,6 +63,10 @@ impl Default for BatchConfig {
 struct Request {
     input: TensorBuf,
     enqueued: Instant,
+    /// Absolute expiry: when `Some` and already past at dequeue time,
+    /// the request is shed with [`DynamapError::DeadlineExceeded`]
+    /// instead of entering the flushed batch.
+    deadline: Option<Instant>,
     reply: mpsc::Sender<Result<(TensorBuf, InferMetrics), DynamapError>>,
 }
 
@@ -124,6 +128,23 @@ impl BatchQueue {
         self.tx.lock().unwrap_or_else(|p| p.into_inner()).is_some()
     }
 
+    /// `true` when the scheduler thread died while the queue was still
+    /// open — e.g. it panicked — so every future submit would fail with
+    /// [`DynamapError::QueueClosed`] forever. The registry uses this to
+    /// distinguish "evicted while I looked" (retry against a fresh
+    /// lookup) from "poisoned" (evict and re-host the model).
+    pub fn is_wedged(&self) -> bool {
+        let open = self.tx.lock().unwrap_or_else(|p| p.into_inner()).is_some();
+        let dead = self
+            .worker
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .as_ref()
+            .map(|h| h.is_finished())
+            .unwrap_or(false);
+        open && dead
+    }
+
     /// Submit one request and block until its batch is served.
     ///
     /// Returns the output plus the request's compute-side
@@ -136,6 +157,14 @@ impl BatchQueue {
         &self,
         input: TensorBuf,
     ) -> Result<(TensorBuf, InferMetrics), DynamapError> {
+        self.infer_with_deadline(input, None)
+    }
+
+    /// Shape-check `input` against the model's expected element count
+    /// without submitting anything. Public so the registry can reject a
+    /// malformed request *before* claiming an admission slot — a shaped
+    /// reject must never consume in-flight budget.
+    pub fn validate_input(&self, input: &TensorBuf) -> Result<(), DynamapError> {
         if input.len() != self.input_len {
             return Err(DynamapError::Shape {
                 context: format!("request for model '{}'", self.model),
@@ -143,13 +172,27 @@ impl BatchQueue {
                 got: input.len(),
             });
         }
+        Ok(())
+    }
+
+    /// [`BatchQueue::infer`] with an optional absolute deadline. A
+    /// request whose deadline has passed by the time the scheduler
+    /// dequeues it is shed with [`DynamapError::DeadlineExceeded`]
+    /// *without* entering the flushed batch — late work never wastes
+    /// device time on a reply nobody is waiting for.
+    pub fn infer_with_deadline(
+        &self,
+        input: TensorBuf,
+        deadline: Option<Instant>,
+    ) -> Result<(TensorBuf, InferMetrics), DynamapError> {
+        self.validate_input(&input)?;
         let sender = self.tx.lock().unwrap_or_else(|p| p.into_inner()).clone();
         let Some(sender) = sender else {
             return Err(closed_error(&self.model));
         };
         let (reply_tx, reply_rx) = mpsc::channel();
         self.metrics.enqueued();
-        let req = Request { input, enqueued: Instant::now(), reply: reply_tx };
+        let req = Request { input, enqueued: Instant::now(), deadline, reply: reply_tx };
         if sender.send(req).is_err() {
             self.metrics.dequeued();
             return Err(closed_error(&self.model));
@@ -192,12 +235,15 @@ fn scheduler_loop(
             Ok(r) => r,
             Err(_) => break, // all senders dropped, nothing buffered
         };
+        // chaos hook: a scheduler that dies mid-service wedges the whole
+        // queue — the registry's re-host path must recover it
+        crate::fault::panic_if(crate::fault::Site::SchedulerPanic);
         let mut batch = vec![first];
         // the max_wait budget is measured from the oldest request's
         // enqueue, not from scheduler pickup: a request that already
         // aged in the channel while the previous batch was computing
         // must not wait another full max_wait for companions
-        let deadline = batch[0].enqueued + config.max_wait;
+        let flush_by = batch[0].enqueued + config.max_wait;
         let mut disconnected = false;
         while batch.len() < config.max_batch {
             // requests already buffered during the previous flush
@@ -213,7 +259,7 @@ fn scheduler_loop(
                     break;
                 }
             }
-            let left = deadline.saturating_duration_since(Instant::now());
+            let left = flush_by.saturating_duration_since(Instant::now());
             if left.is_zero() {
                 break;
             }
@@ -236,43 +282,96 @@ fn scheduler_loop(
     }
 }
 
+/// Render a caught panic payload into something loggable.
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 /// Serve one accumulated batch and answer every caller.
+///
+/// Two reliability gates run here, per request:
+///
+/// * **Deadline re-check at dequeue.** A request whose deadline expired
+///   while it sat in the channel is answered with
+///   [`DynamapError::DeadlineExceeded`] and never enters the computed
+///   batch — the whole point of a deadline is not computing results
+///   nobody will read.
+/// * **Panic isolation.** Each request's compute runs under
+///   `catch_unwind`, so one poisoned input yields one typed
+///   [`DynamapError::Serve`] reply while its batch siblings return
+///   bitwise-correct results. Without this, a single panic would kill
+///   the scheduler thread and wedge the queue for every future caller.
 fn flush(
     state: &crate::api::session::NativeState,
     metrics: &ModelMetrics,
     batch: Vec<Request>,
 ) {
-    let mut inputs = Vec::with_capacity(batch.len());
-    let mut waiters = Vec::with_capacity(batch.len());
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    let mut inputs = Vec::new();
+    let mut waiters = Vec::new();
     for req in batch {
         metrics.dequeued();
-        inputs.push(req.input);
-        waiters.push((req.enqueued, req.reply));
+        match req.deadline {
+            Some(d) if Instant::now() >= d => {
+                // aged out in queue: shed at dequeue, before the batch
+                metrics.record_deadline_miss();
+                let waited_ms = req.enqueued.elapsed().as_millis() as u64;
+                let _ = req.reply.send(Err(DynamapError::DeadlineExceeded {
+                    model: state.model().to_string(),
+                    waited_ms,
+                }));
+            }
+            _ => {
+                inputs.push(req.input);
+                waiters.push((req.enqueued, req.reply));
+            }
+        }
+    }
+    if inputs.is_empty() {
+        return; // everything expired — nothing to compute, no batch
     }
     metrics.record_batch(inputs.len());
-    match state.infer_batch(&inputs) {
-        Ok((outputs, bm)) => {
-            // account the whole batch under one lock BEFORE answering:
-            // a caller that has its reply must already be visible in
-            // the metrics (the soak test asserts exactly that)
-            let lat: Vec<f64> = waiters
-                .iter()
-                .map(|(enqueued, _)| enqueued.elapsed().as_secs_f64() * 1e6)
-                .collect();
-            metrics.record_requests(&lat);
-            let replies = waiters.into_iter().zip(outputs).zip(bm.per_request);
-            for (((_, reply), output), m) in replies {
-                let _ = reply.send(Ok((output, m)));
+
+    // per-request compute with per-request blast radius: panics are
+    // caught inside the worker closure, so `parallel_map` never
+    // re-raises and the scheduler thread survives
+    let results: Vec<Result<(TensorBuf, InferMetrics), DynamapError>> =
+        crate::util::parallel::parallel_map(&inputs, |_, input| {
+            catch_unwind(AssertUnwindSafe(|| state.infer(input))).unwrap_or_else(
+                |payload| {
+                    Err(DynamapError::Serve(format!(
+                        "request compute panicked: {}",
+                        panic_message(payload)
+                    )))
+                },
+            )
+        });
+
+    // account the whole batch under one lock BEFORE answering: a caller
+    // that has its reply must already be visible in the metrics (the
+    // soak test asserts exactly that)
+    let mut lat = Vec::with_capacity(waiters.len());
+    let mut errors = 0usize;
+    for ((enqueued, _), result) in waiters.iter().zip(&results) {
+        match result {
+            Ok(_) => lat.push(enqueued.elapsed().as_secs_f64() * 1e6),
+            Err(DynamapError::Serve(m)) if m.starts_with("request compute panicked") => {
+                errors += 1;
+                metrics.record_panic_recovered();
             }
+            Err(_) => errors += 1,
         }
-        Err(e) => {
-            // DynamapError is not Clone: every caller gets the flush
-            // failure re-wrapped as a serve error
-            metrics.record_errors(waiters.len());
-            let msg = format!("batch flush failed: {e}");
-            for (_, reply) in waiters {
-                let _ = reply.send(Err(DynamapError::Serve(msg.clone())));
-            }
-        }
+    }
+    metrics.record_requests(&lat);
+    metrics.record_errors(errors);
+    for ((_, reply), result) in waiters.into_iter().zip(results) {
+        let _ = reply.send(result);
     }
 }

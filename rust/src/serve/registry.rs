@@ -239,8 +239,46 @@ impl ModelHost {
     /// ([`RegistryConfig::max_inflight`]) is exhausted; shed requests
     /// never enter the queue.
     pub fn infer(&self, input: TensorBuf) -> Result<(TensorBuf, InferMetrics), DynamapError> {
+        self.infer_with_deadline(input, None)
+    }
+
+    /// [`ModelHost::infer`] with an optional absolute deadline.
+    ///
+    /// Ordering here is the permit-leak audit made explicit:
+    ///
+    /// 1. **Shape validation before admission** — a malformed request
+    ///    must not consume a slot of the in-flight budget, even
+    ///    transiently.
+    /// 2. **Deadline check before admission** — a request that arrives
+    ///    already expired is shed with
+    ///    [`DynamapError::DeadlineExceeded`] without claiming a slot or
+    ///    touching the queue.
+    /// 3. Only then is the RAII [`AdmissionPermit`] claimed; it releases
+    ///    on *every* exit from the queue submit — reply, typed error or
+    ///    unwind — because release lives in `Drop`.
+    pub fn infer_with_deadline(
+        &self,
+        input: TensorBuf,
+        deadline: Option<std::time::Instant>,
+    ) -> Result<(TensorBuf, InferMetrics), DynamapError> {
+        self.queue.validate_input(&input)?;
+        if let Some(d) = deadline {
+            if std::time::Instant::now() >= d {
+                self.metrics.record_deadline_miss();
+                return Err(DynamapError::DeadlineExceeded {
+                    model: self.model.clone(),
+                    waited_ms: 0,
+                });
+            }
+        }
         let _permit = self.try_admit()?;
-        self.queue.infer(input)
+        self.queue.infer_with_deadline(input, deadline)
+    }
+
+    /// `true` when this host's batch scheduler died while the queue was
+    /// still open (a wedged queue: every submit would fail forever).
+    pub fn is_wedged(&self) -> bool {
+        self.queue.is_wedged()
     }
 
     /// Claim one in-flight slot or shed the request. The counter is
@@ -377,16 +415,78 @@ impl ModelRegistry {
         model: &str,
         input: &TensorBuf,
     ) -> Result<(TensorBuf, InferMetrics), DynamapError> {
+        self.infer_with_deadline(model, input, None)
+    }
+
+    /// [`ModelRegistry::infer`] with an optional absolute deadline.
+    ///
+    /// Besides deadline threading, this is where wedged-queue recovery
+    /// lives: when a submit fails with [`DynamapError::QueueClosed`]
+    /// but the host's scheduler thread is *dead* rather than evicted
+    /// (it panicked — e.g. the chaos harness's `SchedulerPanic` site),
+    /// the poisoned host is evicted and the retry re-hosts the model
+    /// from the plan cache instead of propagating the poison forever.
+    pub fn infer_with_deadline(
+        &self,
+        model: &str,
+        input: &TensorBuf,
+        deadline: Option<std::time::Instant>,
+    ) -> Result<(TensorBuf, InferMetrics), DynamapError> {
         for _ in 0..3 {
             let host = self.host(model)?;
-            match host.infer(input.clone()) {
-                Err(DynamapError::QueueClosed { .. }) => continue,
+            match host.infer_with_deadline(input.clone(), deadline) {
+                Err(DynamapError::QueueClosed { .. }) => {
+                    self.evict_if_wedged(&host);
+                    continue;
+                }
                 result => return result,
             }
         }
         Err(DynamapError::Serve(format!(
             "model '{model}' kept being evicted mid-request"
         )))
+    }
+
+    /// Evict `host` iff it is still the resident entry for its model
+    /// *and* its scheduler is wedged (dead thread behind an open
+    /// queue). The `Arc::ptr_eq` guard makes the race with a concurrent
+    /// re-host benign: a freshly built healthy host is never evicted on
+    /// the strength of its poisoned predecessor's failure.
+    fn evict_if_wedged(&self, host: &Arc<ModelHost>) {
+        if !host.is_wedged() {
+            return;
+        }
+        let removed = {
+            let mut resident = self.lock_resident();
+            match resident
+                .iter()
+                .position(|(n, h)| n == host.model() && Arc::ptr_eq(h, host))
+            {
+                Some(pos) => Some(resident.remove(pos).1),
+                None => None,
+            }
+        };
+        if let Some(h) = removed {
+            h.shutdown();
+        }
+    }
+
+    /// Sum of every resident host's in-flight count. Used by the
+    /// permit-leak audit: after a drain (or any test), this must be 0 —
+    /// a nonzero value means an error path returned without releasing
+    /// its [`AdmissionPermit`].
+    pub fn inflight_total(&self) -> usize {
+        self.lock_resident().iter().map(|(_, h)| h.inflight()).sum()
+    }
+
+    /// Assert the permit-leak invariant: no admitted request is still
+    /// holding a slot. Call after a drain or at the end of a test.
+    pub fn assert_quiesced(&self) {
+        let total = self.inflight_total();
+        assert_eq!(
+            total, 0,
+            "admission-permit leak: {total} in-flight slots still held after drain"
+        );
     }
 
     /// Atomically hot-swap `model`'s serving state (the `tune::remap`
@@ -486,6 +586,11 @@ impl ModelRegistry {
     /// spawn the batch scheduler.
     fn build_host(&self, cnn: &Cnn, canonical: &str) -> Result<ModelHost, DynamapError> {
         let dir = self.config.artifacts_root.join(canonical);
+        // chaos hook: a hosting attempt whose artifact I/O fails must
+        // surface a typed error and leave the registry healthy — the
+        // next request simply retries the build
+        crate::fault::io_error_if(crate::fault::Site::ArtifactIo, &dir.to_string_lossy())
+            .map_err(|e| DynamapError::io(&dir, e))?;
         if !dir.join("manifest.json").exists() {
             if self.config.synthesize_missing {
                 synthesize_artifacts(cnn, &dir, self.config.seed)?;

@@ -12,7 +12,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use dynamap::api::{Backend, Compiler, Device, DynamapError, Session};
-use dynamap::net::{Client, NetServer};
+use dynamap::net::{Client, HedgeConfig, NetServer, RetryPolicy};
 use dynamap::runtime::TensorBuf;
 use dynamap::serve::loadgen::{open_loop, open_loop_input, OpenLoopConfig};
 use dynamap::serve::{BatchConfig, ModelRegistry, RegistryConfig};
@@ -103,6 +103,7 @@ fn infer_over_tcp_is_bitwise_equal_to_session_and_errors_are_typed() {
 
     client.shutdown_server().unwrap();
     server.shutdown();
+    reg.assert_quiesced(); // every admission permit returned
     reg.shutdown();
     std::fs::remove_dir_all(&root).ok();
 }
@@ -147,6 +148,7 @@ fn admission_budget_sheds_over_tcp_with_retry_hint() {
     assert!(client.infer("mini", &open_loop_input(99, 5, dims)).is_ok());
     client.shutdown_server().unwrap();
     server.shutdown();
+    reg.assert_quiesced(); // sheds must not leak permits either
     reg.shutdown();
     std::fs::remove_dir_all(&root).ok();
 }
@@ -273,10 +275,15 @@ fn open_loop_over_tcp_sheds_under_overload_and_server_stays_live() {
         requests: 80,
         seed: 99,
         workers: 16,
+        deadline: None,
     };
     let report = open_loop(&client, &cfg).unwrap();
     assert_eq!(report.sent, 80);
-    assert_eq!(report.ok + report.shed + report.errors, 80, "every request accounted");
+    assert_eq!(
+        report.ok + report.shed + report.deadline_miss + report.errors,
+        80,
+        "every request accounted"
+    );
     assert!(report.ok >= 1, "the server kept serving under overload");
     assert!(report.shed >= 1, "overload must be shed, not absorbed: {}", report.summary());
     assert_eq!(report.errors, 0, "sheds are typed, not generic failures");
@@ -294,6 +301,175 @@ fn open_loop_over_tcp_sheds_under_overload_and_server_stays_live() {
     client.ping().unwrap();
     client.shutdown_server().unwrap();
     server.shutdown();
+    reg.assert_quiesced();
+    reg.shutdown();
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn deadlines_ride_the_wire_and_expired_requests_come_back_typed() {
+    let root = temp_root("deadline");
+    let reg = registry(&root, 4, 2, 0);
+    let host = reg.host("mini").unwrap();
+    let dims = host.input_dims();
+    let mut server = NetServer::bind(reg.clone(), "127.0.0.1:0").unwrap();
+    let client = Client::connect(server.local_addr().to_string()).unwrap();
+
+    // a generous deadline changes nothing: same bitwise reply
+    let mut session = reference_session(&root);
+    let expected = session.infer(&open_loop_input(99, 0, dims)).unwrap().0;
+    let (out, _) = client
+        .infer_with_deadline("mini", &open_loop_input(99, 0, dims), Some(Duration::from_secs(30)))
+        .unwrap();
+    assert_eq!(out, expected, "deadline-carrying reply != sequential Session::infer");
+
+    // a zero deadline is expired the moment the server decodes it:
+    // shed pre-admission with the typed error, never batched
+    let batches_before = host.metrics().snapshot().batches;
+    let e = client
+        .infer_with_deadline("mini", &open_loop_input(99, 1, dims), Some(Duration::ZERO))
+        .unwrap_err();
+    match e {
+        DynamapError::DeadlineExceeded { model, waited_ms } => {
+            assert_eq!(model, "mini-inception");
+            assert_eq!(waited_ms, 0, "pre-admission shed never waited in queue");
+        }
+        other => panic!("expected DeadlineExceeded over the wire, got {other}"),
+    }
+    let snap = host.metrics().snapshot();
+    assert_eq!(snap.batches, batches_before, "an expired request must not enter a batch");
+    assert_eq!(snap.deadline_miss, 1, "the miss is counted per model");
+
+    // the connection stayed on a frame boundary; plain traffic resumes
+    assert!(client.infer("mini", &open_loop_input(99, 2, dims)).is_ok());
+    client.shutdown_server().unwrap();
+    server.shutdown();
+    reg.assert_quiesced(); // a deadline shed must not leak its permit
+    reg.shutdown();
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn client_retries_sheds_under_backoff_when_the_policy_allows() {
+    let root = temp_root("retry");
+    // budget 1 + slow flush: the second concurrent request is shed —
+    // but with overloaded_attempts granted it retries past the storm
+    let reg = registry(&root, 8, 150, 1);
+    let host = reg.host("mini").unwrap();
+    let dims = host.input_dims();
+    let mut server = NetServer::bind(reg.clone(), "127.0.0.1:0").unwrap();
+    let client = Client::connect_with(
+        server.local_addr().to_string(),
+        RetryPolicy {
+            overloaded_attempts: 20,
+            max_backoff: Duration::from_millis(50),
+            ..RetryPolicy::default()
+        },
+    )
+    .unwrap();
+
+    let results = parallel_run(2, |i| {
+        if i == 1 {
+            std::thread::sleep(Duration::from_millis(40));
+        }
+        client.infer("mini", &open_loop_input(99, i, dims))
+    });
+    for (i, r) in results.iter().enumerate() {
+        assert!(r.is_ok(), "request {i} should succeed after retries: {:?}", r.as_ref().err());
+    }
+    let stats = client.stats();
+    assert!(stats.retries >= 1, "the shed request must have retried");
+    assert!(
+        stats.budget_remaining < RetryPolicy::default().retry_budget,
+        "retries draw from the budget"
+    );
+    // the shed itself still shows in the server's accounting
+    assert!(host.metrics().snapshot().shed >= 1);
+
+    client.shutdown_server().unwrap();
+    server.shutdown();
+    reg.assert_quiesced();
+    reg.shutdown();
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn retry_budget_bounds_transport_retries() {
+    // a stub listener that accepts and immediately hangs up: every
+    // attempt is a transport failure (detached thread; it dies with
+    // the test process)
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        for conn in listener.incoming() {
+            let Ok(conn) = conn else { break };
+            drop(conn);
+        }
+    });
+
+    let input = TensorBuf::zeros(vec![4, 16, 16]);
+    // attempts allowed but budget dry: the first failure surfaces raw
+    let broke = Client::connect_with(
+        addr.clone(),
+        RetryPolicy { transport_attempts: 5, retry_budget: 0, ..RetryPolicy::default() },
+    )
+    .unwrap();
+    assert!(matches!(broke.infer("mini", &input), Err(DynamapError::Net(_))));
+    assert_eq!(broke.stats().retries, 0, "no budget, no retries");
+
+    // budget available: exactly transport_attempts total tries
+    let client = Client::connect_with(
+        addr,
+        RetryPolicy {
+            transport_attempts: 3,
+            retry_budget: 10,
+            base_backoff: Duration::from_micros(100),
+            ..RetryPolicy::default()
+        },
+    )
+    .unwrap();
+    assert!(matches!(client.infer("mini", &input), Err(DynamapError::Net(_))));
+    let stats = client.stats();
+    assert_eq!(stats.retries, 2, "3 attempts = 1 try + 2 retries");
+    assert_eq!(stats.budget_remaining, 8);
+}
+
+#[test]
+fn hedged_requests_return_bitwise_correct_replies() {
+    let root = temp_root("hedge");
+    let reg = registry(&root, 4, 2, 0);
+    let host = reg.host("mini").unwrap();
+    let dims = host.input_dims();
+    let mut server = NetServer::bind(reg.clone(), "127.0.0.1:0").unwrap();
+    // an aggressive hedge delay (1 ms cold) so the race actually runs:
+    // most requests will have a hedge in flight alongside the primary
+    let client = Client::connect_with(
+        server.local_addr().to_string(),
+        RetryPolicy {
+            hedge: Some(HedgeConfig {
+                ewma_mult: 1.0,
+                min_delay: Duration::from_micros(200),
+                max_delay: Duration::from_millis(1),
+            }),
+            ..RetryPolicy::default()
+        },
+    )
+    .unwrap();
+
+    let mut session = reference_session(&root);
+    for i in 0..12 {
+        let input = open_loop_input(99, i, dims);
+        let expected = session.infer(&input).unwrap().0;
+        let (out, _) = client.infer("mini", &input).unwrap();
+        // whichever attempt won, the reply is the same tensor — hedging
+        // may duplicate compute, never results
+        assert_eq!(out, expected, "request {i}: hedged reply != sequential Session::infer");
+    }
+
+    client.ping().unwrap();
+    client.shutdown_server().unwrap();
+    server.shutdown();
+    reg.assert_quiesced(); // losing hedges must release their permits too
     reg.shutdown();
     std::fs::remove_dir_all(&root).ok();
 }
