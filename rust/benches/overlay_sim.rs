@@ -119,13 +119,15 @@ fn main() {
         b.bench(&format!("systolic_gemm/128x96x128/{}", df.name()), || sim.gemm(&x, &w));
     }
 
-    // kernel layer: packed panels vs the pre-change hot path — a fresh
-    // W transpose every call, then the same contiguous-slice dots the
-    // old per-PE loop ran (faithful baseline, so the reported ratio is
-    // the real per-call-transpose + blocking win, not an inflated one)
+    // kernel layer, three generations on one fixed shape: the
+    // pre-change hot path, the packed scalar kernel, the SIMD tier.
+    // The transpose is hoisted out of the baseline closure (it used to
+    // be re-derived per iteration, silently inflating the packed
+    // kernel's ratio); what remains inside is exactly the contiguous-
+    // slice dot loop the old per-PE path ran.
+    let wtr = w.transposed();
     let wt = PackedWt::pack(&w);
     b.bench("kernels_gemm/128x96x128/baseline_transpose", || {
-        let wtr = w.transposed();
         let (ar, br, cr) = (x.rows, x.cols, wtr.rows);
         let mut out = Mat::zeros(ar, cr);
         for i in 0..ar {
@@ -138,43 +140,69 @@ fn main() {
         }
         out
     });
-    b.bench("kernels_gemm/128x96x128/packed", || kernels::gemm(&x, &wt));
-
-    // DLT transforms
-    let spec = ConvSpec::new(16, 32, 32, 32, 3, 3, 1, 1, 1);
-    let t = Tensor::random(16, 32, 32, &mut rng);
-    let ltu = Ltu::tensor3d_to_toeplitz(&spec);
-    let mut dst = vec![0.0f32; 16 * 9 * 32 * 32];
-    b.bench("dlt/tensor3d_to_toeplitz/16x32x32_3x3", || {
-        ltu.gather(&t.data, &mut dst);
-        dst[0]
-    });
-    let ltu_w = Ltu::tensor3d_to_wino(16, 32, 32, 2, 3, 1);
-    let mut dst_w = vec![0.0f32; ltu_w.len()];
-    b.bench("dlt/tensor3d_to_wino/16x32x32", || {
-        ltu_w.gather(&t.data, &mut dst_w);
-        dst_w[0]
-    });
-
-    // whole-layer simulation per algorithm: one-shot (weights lowered
-    // per call) vs prepared (lowered once)
-    let lspec = ConvSpec::new(8, 8, 16, 16, 3, 3, 1, 1, 1);
-    let input = Tensor::random(8, 16, 16, &mut rng);
-    let wts = Weights::random(8, 8, 3, 3, &mut rng);
-    for algo in [Algo::Im2col, Algo::Kn2row, Algo::Winograd { m: 2, r: 3 }] {
-        b.bench(&format!("layer_sim/8x16x16_3x3/{}", algo.name()), || {
-            simulate_layer(&input, &wts, &lspec, algo, Dataflow::NS, 16, 16)
-        });
-        let pw = prepare_layer(&wts, &lspec, algo);
-        b.bench(&format!("layer_sim_prepared/8x16x16_3x3/{}", algo.name()), || {
-            simulate_layer_prepared(&input, &pw, Dataflow::NS, 16, 16)
-        });
+    let packed = b.bench("kernels_gemm/128x96x128/packed", || kernels::gemm(&x, &wt)).clone();
+    let choice = kernels::KernelSelector::probed().choose(x.rows, x.cols, wt.c);
+    let simd = b
+        .bench(&format!("kernels_gemm/128x96x128/simd_{}", choice.name()), || {
+            kernels::simd::gemm(&x, &wt)
+        })
+        .clone();
+    let simd_speedup = packed.mean.as_secs_f64() / simd.mean.as_secs_f64();
+    println!("simd gemm speedup: {simd_speedup:.2}x  (kernel {}, target >= 2x)", choice.name());
+    // enforced gate (see the infer_batch gate below for the pattern):
+    // ≥2× over the packed scalar kernel whenever the probe found a SIMD
+    // instruction set — the scalar fallback cannot promise a ratio, so
+    // scalar-only hosts (and DYNAMAP_SIMD=off runs) report but don't gate
+    if std::env::var("DYNAMAP_BENCH_ASSERT").is_ok()
+        && choice.kind != kernels::KernelKind::Scalar
+    {
+        assert!(
+            simd_speedup >= 2.0,
+            "simd gemm speedup regressed below the 2x acceptance gate: {simd_speedup:.2}x"
+        );
     }
 
-    // pooling pipeline
-    let pspec = PoolSpec { kind: PoolKind::Max, c: 64, h1: 28, h2: 28, k: 3, s: 2, p: 1 };
-    let pin = Tensor::random(64, 28, 28, &mut rng);
-    b.bench("pooling/hpu_vpu/64x28x28", || pooling::simulate(&pin, &pspec, 16));
+    // informational sections (DLT, layer sim, pooling): skipped under
+    // DYNAMAP_BENCH_FAST so the CI smoke sweep stays lean — the gated
+    // comparisons above and below always run
+    let fast = std::env::var("DYNAMAP_BENCH_FAST").is_ok();
+    if !fast {
+        // DLT transforms
+        let spec = ConvSpec::new(16, 32, 32, 32, 3, 3, 1, 1, 1);
+        let t = Tensor::random(16, 32, 32, &mut rng);
+        let ltu = Ltu::tensor3d_to_toeplitz(&spec);
+        let mut dst = vec![0.0f32; 16 * 9 * 32 * 32];
+        b.bench("dlt/tensor3d_to_toeplitz/16x32x32_3x3", || {
+            ltu.gather(&t.data, &mut dst);
+            dst[0]
+        });
+        let ltu_w = Ltu::tensor3d_to_wino(16, 32, 32, 2, 3, 1);
+        let mut dst_w = vec![0.0f32; ltu_w.len()];
+        b.bench("dlt/tensor3d_to_wino/16x32x32", || {
+            ltu_w.gather(&t.data, &mut dst_w);
+            dst_w[0]
+        });
+
+        // whole-layer simulation per algorithm: one-shot (weights
+        // lowered per call) vs prepared (lowered once)
+        let lspec = ConvSpec::new(8, 8, 16, 16, 3, 3, 1, 1, 1);
+        let input = Tensor::random(8, 16, 16, &mut rng);
+        let wts = Weights::random(8, 8, 3, 3, &mut rng);
+        for algo in [Algo::Im2col, Algo::Kn2row, Algo::Winograd { m: 2, r: 3 }] {
+            b.bench(&format!("layer_sim/8x16x16_3x3/{}", algo.name()), || {
+                simulate_layer(&input, &wts, &lspec, algo, Dataflow::NS, 16, 16)
+            });
+            let pw = prepare_layer(&wts, &lspec, algo);
+            b.bench(&format!("layer_sim_prepared/8x16x16_3x3/{}", algo.name()), || {
+                simulate_layer_prepared(&input, &pw, Dataflow::NS, 16, 16)
+            });
+        }
+
+        // pooling pipeline
+        let pspec = PoolSpec { kind: PoolKind::Max, c: 64, h1: 28, h2: 28, k: 3, s: 2, p: 1 };
+        let pin = Tensor::random(64, 28, 28, &mut rng);
+        b.bench("pooling/hpu_vpu/64x28x28", || pooling::simulate(&pin, &pspec, 16));
+    }
 
     // ---- end-to-end batch serving: before vs after this perf pass ----
     let cnn = zoo::mini_inception();

@@ -15,7 +15,7 @@ use super::artifact::PlanArtifact;
 use super::error::DynamapError;
 use crate::cost::gemm::Dataflow;
 use crate::cost::graph_build::{CostGraph, Policy};
-use crate::cost::{Device, DeviceCalibration};
+use crate::cost::{Device, DeviceCalibration, KernelThroughput};
 use crate::dse::algo1::{identify_parameters_bounded, Algo1Result};
 use crate::dse::{DseConfig, Plan};
 use crate::graph::Cnn;
@@ -145,6 +145,19 @@ impl Compiler {
         self
     }
 
+    /// Fold a measured host-microkernel throughput table
+    /// ([`crate::kernels::KernelSelector::measure`]) into the cost
+    /// model: f32 layer latencies are then priced from the host SIMD
+    /// GEMM rate (per-shape tile occupancy + per-call overhead)
+    /// instead of the analytic overlay cycles, so the mapping the DSE
+    /// returns is optimal for what the native serving path actually
+    /// runs. Part of [`Compiler::fingerprint`] — plans priced by
+    /// different tables never collide in a [`super::PlanCache`].
+    pub fn microkernels(mut self, table: KernelThroughput) -> Compiler {
+        self.config.microkernels = table;
+        self
+    }
+
     /// `P_SA1` sweep bounds for Algorithm 1. Survives a later
     /// [`Compiler::device`] call.
     pub fn p1_bounds(mut self, lo: usize, hi: usize) -> Compiler {
@@ -217,7 +230,7 @@ impl Compiler {
             Some((p1, p2)) => format!("{p1}x{p2}"),
         };
         let desc = format!(
-            "{}|{}|{}|{}|{}|{}|{}|pack{}|{}|wino{}x{}|strided{}|prec{}|df{}|owl{}|fuse{}|p1[{},{}]|{}|cal{}|{}",
+            "{}|{}|{}|{}|{}|{}|{}|pack{}|{}|wino{}x{}|strided{}|prec{}|df{}|owl{}|fuse{}|p1[{},{}]|{}|cal{}|mk{}|{}",
             d.name,
             d.dsp_cap,
             d.freq_mhz,
@@ -238,6 +251,7 @@ impl Compiler {
             c.p1_hi,
             shape,
             c.calibration.describe(),
+            c.microkernels.describe(),
             PlanArtifact::SCHEMA_VERSION,
         );
         format!("{:016x}", fnv1a(&desc))
@@ -414,6 +428,18 @@ mod tests {
         );
         // precision search keys a distinct plan-cache entry too
         assert_ne!(base.fingerprint(), Compiler::new().precision_search(true).fingerprint());
+        // a measured microkernel table keys a distinct plan-cache entry
+        assert_ne!(
+            base.fingerprint(),
+            Compiler::new()
+                .microkernels(KernelThroughput::default().with("avx2-4x16", 8.0))
+                .fingerprint()
+        );
+        assert_eq!(
+            base.fingerprint(),
+            Compiler::new().microkernels(KernelThroughput::default()).fingerprint(),
+            "empty microkernel table is the default"
+        );
         assert_eq!(
             base.fingerprint(),
             Compiler::new().calibration(DeviceCalibration::identity()).fingerprint(),

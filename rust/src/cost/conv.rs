@@ -1,7 +1,7 @@
 //! Eq. 10–12 — per-layer convolution latency under each algorithm, and
 //! Eq. 14 — effective PE utilization.
 
-use super::device::{Device, DeviceCalibration};
+use super::device::{Device, DeviceCalibration, KernelThroughput};
 use super::gemm::{self, Dataflow};
 use crate::graph::layer::ConvSpec;
 use crate::quant::Precision;
@@ -136,6 +136,14 @@ pub struct CostModel {
     /// `tune::calibrate` from observed per-layer latencies so the DSE
     /// re-solves against what the hardware actually achieves.
     pub calibration: DeviceCalibration,
+    /// Measured host-microkernel throughput
+    /// ([`crate::kernels::KernelSelector::measure`]). When non-empty,
+    /// f32 latencies are priced from the host GEMM rate (per-shape tile
+    /// occupancy + per-call overhead) instead of the analytic overlay
+    /// cycles, so the DSE maps for what the native serving path
+    /// actually runs. Empty by default — nothing changes until a
+    /// measured table is folded in.
+    pub microkernels: KernelThroughput,
 }
 
 impl CostModel {
@@ -151,6 +159,7 @@ impl CostModel {
             force_dataflow: None,
             precision_search: false,
             calibration: DeviceCalibration::identity(),
+            microkernels: KernelThroughput::default(),
         }
     }
 
@@ -245,10 +254,23 @@ impl CostModel {
         // systematically from its f32 one, so the two regimes must
         // never pool into one fit. f32 keys are the bare family name,
         // keeping every pre-quantization calibration bit-identical.
+        //
+        // A measured microkernel table replaces the *f32* wall-clock
+        // estimate with the host GEMM rate (the native serving path
+        // runs these exact GEMM shapes on the SIMD tier); int8 layers
+        // keep the analytic overlay price — the qgemm path is not part
+        // of the measured tier. The calibration still applies on top,
+        // in both regimes.
         let key = crate::quant::mapped_name(algo.family(), precision);
-        let seconds = self
-            .calibration
-            .apply(&key, cycles as f64 * self.device.cycle_time());
+        let analytic = cycles as f64 * self.device.cycle_time();
+        let host = match precision {
+            Precision::F32 => self
+                .microkernels
+                .gemm_sec(a, b, c)
+                .map(|per_call| per_call * calls as f64),
+            Precision::Int8 => None,
+        };
+        let seconds = self.calibration.apply(&key, host.unwrap_or(analytic));
         ConvCost {
             algo,
             precision,
@@ -463,6 +485,42 @@ mod tests {
         assert_eq!(cal_im.seconds, base_im.seconds, "other families untouched");
         assert_eq!(cal_kn.cycles, base_kn.cycles, "raw cycle count is preserved");
         assert_eq!(cal_kn.dataflow, base_kn.dataflow, "uniform fit keeps the dataflow");
+    }
+
+    #[test]
+    fn microkernel_table_reprices_f32_only() {
+        let mut m = model();
+        let spec = layer_3x3();
+        let base_f32 = m.best_conv_cost(&spec, Algo::Im2col, 64, 64);
+        let base_i8 = m.best_conv_cost_at(&spec, Algo::Im2col, Precision::Int8, 64, 64);
+        m.microkernels = KernelThroughput::default().with("avx2-4x16", 8.0);
+        let host_f32 = m.best_conv_cost(&spec, Algo::Im2col, 64, 64);
+        let host_i8 = m.best_conv_cost_at(&spec, Algo::Im2col, Precision::Int8, 64, 64);
+        // f32 now priced by the host table: per-call gemm_sec × calls
+        let (a, b, c, calls) = m.gemm_dims(&spec, Algo::Im2col);
+        let expect = m.microkernels.gemm_sec(a, b, c).unwrap() * calls as f64;
+        assert!((host_f32.seconds - expect).abs() < 1e-15, "{} vs {expect}", host_f32.seconds);
+        assert_ne!(host_f32.seconds, base_f32.seconds);
+        // raw cycles (and so Eq. 14 utilization) are untouched, and the
+        // int8 overlay price is out of the measured tier's scope
+        assert_eq!(host_f32.cycles, base_f32.cycles);
+        assert_eq!(host_f32.utilization, base_f32.utilization);
+        assert_eq!(host_i8.seconds, base_i8.seconds);
+    }
+
+    #[test]
+    fn call_overhead_penalizes_many_call_algorithms() {
+        let mut m = model();
+        let spec = layer_3x3();
+        // overhead-dominated table: 1 ms per GEMM call dwarfs compute
+        m.microkernels =
+            KernelThroughput::default().with("avx2-4x16", 50.0).with_call_overhead(1e-3);
+        let im = m.best_conv_cost(&spec, Algo::Im2col, 64, 64);
+        let kn = m.best_conv_cost(&spec, Algo::Kn2row, 64, 64);
+        let wino = m.best_conv_cost(&spec, Algo::Winograd { m: 2, r: 3 }, 64, 64);
+        // 1 call vs 9 taps vs 16 transform-space point GEMMs
+        assert!(im.seconds < kn.seconds);
+        assert!(kn.seconds < wino.seconds);
     }
 
     #[test]

@@ -187,6 +187,103 @@ impl DeviceCalibration {
     }
 }
 
+/// Measured host-microkernel throughput — the second
+/// [`DeviceCalibration`]-style correction, produced by
+/// [`crate::kernels::KernelSelector::measure`] and folded into
+/// [`crate::cost::CostModel`] so the DSE prices f32 GEMMs at what the
+/// serving host actually runs instead of the analytic overlay rate.
+///
+/// Keys are kernel names (`avx2-4x16`, `scalar-1x8`, …: kind, then
+/// `mr×nr` register tile); values are measured GFLOP/s at full tile
+/// occupancy. [`KernelThroughput::gemm_sec`] re-applies shape-dependent
+/// tail losses analytically, so one fixed-shape measurement prices
+/// every layer shape. The default (empty) table disables host pricing
+/// — an unmeasured pipeline behaves exactly as before.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct KernelThroughput {
+    /// Measured full-tile throughput per kernel name, GFLOP/s.
+    pub gflops: BTreeMap<String, f64>,
+    /// Fixed per-GEMM-call overhead in seconds (dispatch, panel-pack
+    /// setup, output allocation) — the axis the three conv algorithms
+    /// differ on hardest (1 im2col call vs `K1K2` kn2row calls vs
+    /// `(m+r−1)²·rounds` Winograd calls).
+    pub call_overhead_sec: f64,
+}
+
+impl KernelThroughput {
+    /// `true` when no kernel was measured: host pricing is disabled and
+    /// the analytic model serves every latency verbatim.
+    pub fn is_empty(&self) -> bool {
+        self.gflops.is_empty()
+    }
+
+    /// Builder-style: record one kernel's measured throughput (tests
+    /// and deliberately skewed cost-fold fixtures use this).
+    pub fn with(mut self, kernel: &str, gflops: f64) -> KernelThroughput {
+        self.gflops.insert(kernel.to_string(), gflops);
+        self
+    }
+
+    /// Builder-style: set the per-call overhead.
+    pub fn with_call_overhead(mut self, sec: f64) -> KernelThroughput {
+        self.call_overhead_sec = sec;
+        self
+    }
+
+    /// Predicted seconds for one `a × b × c` f32 GEMM call on the
+    /// fastest measured kernel, or `None` when the table is empty.
+    ///
+    /// Each kernel's effective rate is its measured full-tile GFLOP/s
+    /// scaled by row (`mr`) and column (`nr`) tail occupancy for this
+    /// shape — tail lanes compute zero-packed dead work — plus the
+    /// per-call overhead. Deterministic in the table alone, so plans
+    /// priced by equal tables are identical (fingerprint-safe).
+    pub fn gemm_sec(&self, a: usize, b: usize, c: usize) -> Option<f64> {
+        let flops = 2.0 * (a as f64) * (b as f64) * (c as f64);
+        self.gflops
+            .iter()
+            .filter(|(_, &gf)| gf > 0.0)
+            .map(|(name, &gf)| {
+                let (mr, nr) = parse_tile(name);
+                let occ = |dim: usize, t: usize| {
+                    if dim == 0 {
+                        1.0
+                    } else {
+                        dim as f64 / (dim.div_ceil(t) * t) as f64
+                    }
+                };
+                flops / (gf * 1e9 * occ(a, mr) * occ(c, nr)) + self.call_overhead_sec
+            })
+            .min_by(|x, y| x.partial_cmp(y).unwrap_or(std::cmp::Ordering::Equal))
+    }
+
+    /// Stable textual form for compiler fingerprints (mirrors
+    /// [`DeviceCalibration::describe`]): `id` when empty, otherwise the
+    /// overhead plus every `name=gflops` entry in key order.
+    pub fn describe(&self) -> String {
+        if self.is_empty() {
+            return "id".to_string();
+        }
+        let mut s = format!("ov{:e}", self.call_overhead_sec);
+        for (name, g) in &self.gflops {
+            s.push_str(&format!(";{name}={g:e}"));
+        }
+        s
+    }
+}
+
+/// Parse the `MRxNR` register-tile suffix of a kernel name
+/// (`avx2-4x16` → `(4, 16)`); unparseable names fall back to a 1×1
+/// tile (no occupancy penalty).
+fn parse_tile(name: &str) -> (usize, usize) {
+    name.rsplit('-')
+        .next()
+        .and_then(|t| t.split_once('x'))
+        .and_then(|(m, n)| Some((m.parse().ok()?, n.parse().ok()?)))
+        .filter(|&(m, n)| m > 0 && n > 0)
+        .unwrap_or((1, 1))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -226,5 +323,58 @@ mod tests {
     fn calibration_never_goes_negative() {
         let f = AlgoFit { scale: 1.0, offset_sec: -5.0 };
         assert_eq!(f.apply(1.0), 0.0);
+    }
+
+    #[test]
+    fn kernel_throughput_empty_is_inert() {
+        let t = KernelThroughput::default();
+        assert!(t.is_empty());
+        assert_eq!(t.gemm_sec(128, 96, 128), None);
+        assert_eq!(t.describe(), "id");
+    }
+
+    #[test]
+    fn gemm_sec_applies_tile_occupancy() {
+        // 10 GFLOP/s full-tile; a=4, c=16 is a perfect 4x16 fit
+        let t = KernelThroughput::default().with("avx2-4x16", 10.0);
+        let perfect = t.gemm_sec(4, 100, 16).unwrap();
+        let flops = 2.0 * 4.0 * 100.0 * 16.0;
+        assert!((perfect - flops / 10e9).abs() < 1e-15);
+        // c=17 pads to 32 lanes: the same flops run at 17/32 occupancy
+        let ragged = t.gemm_sec(4, 100, 17).unwrap();
+        let ragged_flops = 2.0 * 4.0 * 100.0 * 17.0;
+        assert!((ragged - ragged_flops / (10e9 * 17.0 / 32.0)).abs() < 1e-15);
+        assert!(ragged > perfect);
+    }
+
+    #[test]
+    fn gemm_sec_picks_fastest_kernel_and_adds_overhead() {
+        let t = KernelThroughput::default()
+            .with("scalar-1x8", 1.0)
+            .with("avx2-4x16", 8.0)
+            .with_call_overhead(1e-6);
+        // a perfect-fit shape for both tiles: the 8 GFLOP/s entry wins
+        let sec = t.gemm_sec(16, 32, 16).unwrap();
+        let flops = 2.0 * 16.0 * 32.0 * 16.0;
+        assert!((sec - (flops / 8e9 + 1e-6)).abs() < 1e-12);
+        // degenerate zero-flop call still pays the per-call overhead
+        assert!((t.gemm_sec(0, 32, 16).unwrap() - 1e-6).abs() < 1e-15);
+    }
+
+    #[test]
+    fn kernel_throughput_describe_is_stable_and_distinct() {
+        let a = KernelThroughput::default().with("avx2-4x16", 8.0);
+        let b = KernelThroughput::default().with("avx2-4x16", 9.0);
+        assert_eq!(a.describe(), a.clone().describe());
+        assert_ne!(a.describe(), b.describe());
+        assert_ne!(a.describe(), "id");
+    }
+
+    #[test]
+    fn tile_suffix_parsing() {
+        assert_eq!(parse_tile("avx2-4x16"), (4, 16));
+        assert_eq!(parse_tile("scalar-1x8"), (1, 8));
+        assert_eq!(parse_tile("weird"), (1, 1));
+        assert_eq!(parse_tile("neon-0x8"), (1, 1));
     }
 }

@@ -27,6 +27,6 @@ pub mod transition;
 pub mod graph_build;
 
 pub use conv::{Algo, ConvCost, CostModel};
-pub use device::{AlgoFit, Device, DeviceCalibration};
+pub use device::{AlgoFit, Device, DeviceCalibration, KernelThroughput};
 pub use gemm::{gemm_cycles, gemm_macs, Dataflow};
 pub use transition::Format;

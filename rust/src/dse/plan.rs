@@ -9,7 +9,7 @@
 use crate::cost::conv::CostModel;
 use crate::cost::graph_build::{BuildOpts, MappingResult};
 use crate::cost::transition::TransitionModel;
-use crate::cost::{Device, DeviceCalibration};
+use crate::cost::{Device, DeviceCalibration, KernelThroughput};
 use crate::util::json::Json;
 
 /// Framework configuration: device + model hyper-parameters + search
@@ -38,6 +38,11 @@ pub struct DseConfig {
     /// Profile-fitted correction of the analytic cost model (identity
     /// by default; produced by `tune::calibrate`).
     pub calibration: DeviceCalibration,
+    /// Measured host-microkernel throughput table (empty by default;
+    /// produced by [`crate::kernels::KernelSelector::measure`]). When
+    /// present, f32 layer latencies are priced from the host SIMD GEMM
+    /// rate instead of the analytic overlay cycles.
+    pub microkernels: KernelThroughput,
 }
 
 impl DseConfig {
@@ -54,6 +59,7 @@ impl DseConfig {
             p1_hi: 512,
             precision_search: false,
             calibration: DeviceCalibration::identity(),
+            microkernels: KernelThroughput::default(),
         }
     }
 
@@ -70,6 +76,7 @@ impl DseConfig {
             p1_hi: cap,
             precision_search: false,
             calibration: DeviceCalibration::identity(),
+            microkernels: KernelThroughput::default(),
         }
     }
 
@@ -81,6 +88,7 @@ impl DseConfig {
         cm.force_dataflow = self.force_dataflow;
         cm.precision_search = self.precision_search;
         cm.calibration = self.calibration.clone();
+        cm.microkernels = self.microkernels.clone();
         cm
     }
 

@@ -22,13 +22,30 @@
 //! [`crate::quant`]. [`PreparedWeights`] carries quantized prepared
 //! forms for im2col and kn2row; Winograd stays f32 (its transform-space
 //! arithmetic amplifies quantization error), and the DSE knows it.
+//!
+//! On top of the packed f32 path sits the microkernel tier: a one-time
+//! CPU capability probe and per-shape [`KernelSelector`] ([`select`])
+//! feeding explicit-SIMD microkernels with double-buffered panel
+//! packing ([`simd`]) — still bit-identical to [`Mat::matmul`] (the
+//! kernels vectorize across output *columns*, so every element keeps
+//! its ascending-`k` scalar accumulation order). The f32 prepared conv
+//! paths route their GEMMs through [`simd::gemm`];
+//! [`KernelSelector::measure`] exports the host's measured per-kernel
+//! throughput to the cost model
+//! ([`crate::cost::device::KernelThroughput`]) so the DSE prices what
+//! the host actually runs.
+//!
+//! [`Mat::matmul`]: crate::algos::tensor::Mat::matmul
 #![deny(clippy::correctness, clippy::suspicious)]
 #![warn(missing_docs)]
 
 pub mod gemm;
 pub mod prepared;
 pub mod qgemm;
+pub mod select;
+pub mod simd;
 
 pub use gemm::{gemm, gemm_xw, PackedWt};
 pub use prepared::{PreparedKernel, PreparedWeights};
 pub use qgemm::{qgemm, qgemm_xw, PackedWtI8, QuantMat};
+pub use select::{cpu_caps, CpuCaps, KernelChoice, KernelKind, KernelSelector};

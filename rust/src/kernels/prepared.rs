@@ -9,8 +9,12 @@
 //! session builds a [`PreparedWeights`] once per layer at plan time and
 //! the request path is pure compute on packed panels.
 
-use super::gemm::{gemm, PackedWt};
+use super::gemm::PackedWt;
 use super::qgemm::{qgemm, PackedWtI8, QuantMat};
+// the f32 GEMMs run on the SIMD microkernel tier — bit-identical to
+// `gemm::gemm` (and `Mat::matmul`), so swapping the entry point changes
+// latency only, never a single output bit
+use super::simd::gemm;
 use crate::algos::tensor::{Mat, Tensor, Weights};
 use crate::algos::{im2col, kn2row, winograd};
 use crate::cost::conv::Algo;

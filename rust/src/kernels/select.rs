@@ -1,0 +1,372 @@
+//! CPU capability probe + per-shape kernel selection for the SIMD
+//! microkernel tier ([`super::simd`]).
+//!
+//! The probe ([`cpu_caps`]) runs once per process and answers "which
+//! instruction sets does this host have"; the [`KernelSelector`] then
+//! picks a microkernel and tile shape *per GEMM shape* from a small
+//! static throughput table — the software analogue of DYNAMAP picking a
+//! dataflow per layer on a fixed overlay. Selection is a pure function
+//! of `(capabilities, shape)`: no timing feeds the *choice*, so the
+//! same host always produces the same kernel for the same layer (plans
+//! and serving stay deterministic). Measured throughput enters the
+//! picture only through [`KernelSelector::measure`], which produces a
+//! [`KernelThroughput`] table for the *cost model* — the DSE prices
+//! layers with what the host was measured to run, while the runtime
+//! choice stays table-driven and reproducible.
+//!
+//! `DYNAMAP_SIMD=off` (or `scalar`/`0`) forces the portable scalar
+//! fallback, for debugging and for the CI leg that keeps the fallback
+//! green on SIMD-capable runners.
+#![deny(clippy::correctness, clippy::suspicious)]
+#![warn(missing_docs)]
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use super::gemm::PackedWt;
+use crate::algos::tensor::Mat;
+use crate::cost::device::KernelThroughput;
+
+/// Instruction-set capabilities of the host, as seen by the kernel
+/// tier. Constructed by [`CpuCaps::detect`] in production; tests build
+/// instances directly to exercise every fallback path without mutating
+/// process-global environment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CpuCaps {
+    /// x86-64 AVX2 (256-bit, 8 f32 lanes per register).
+    pub avx2: bool,
+    /// AArch64 NEON (128-bit, 4 f32 lanes per register).
+    pub neon: bool,
+}
+
+impl CpuCaps {
+    /// Probe the hardware and apply the `DYNAMAP_SIMD` override.
+    pub fn detect() -> CpuCaps {
+        CpuCaps::from_env_value(std::env::var("DYNAMAP_SIMD").ok().as_deref())
+    }
+
+    /// The raw hardware probe, ignoring the environment.
+    pub fn host() -> CpuCaps {
+        CpuCaps { avx2: host_avx2(), neon: host_neon() }
+    }
+
+    /// No SIMD at all: every shape runs the portable scalar microkernel.
+    pub fn scalar() -> CpuCaps {
+        CpuCaps { avx2: false, neon: false }
+    }
+
+    /// The probe as a function of the `DYNAMAP_SIMD` value — the env
+    /// hook, factored so tests can drive it with explicit values
+    /// instead of racing on `set_var` across test threads.
+    /// `off`/`scalar`/`0` force the scalar fallback; anything else
+    /// (including unset) keeps the hardware probe.
+    pub fn from_env_value(simd: Option<&str>) -> CpuCaps {
+        match simd.map(str::trim) {
+            Some("off") | Some("scalar") | Some("0") => CpuCaps::scalar(),
+            _ => CpuCaps::host(),
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn host_avx2() -> bool {
+    std::arch::is_x86_feature_detected!("avx2")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn host_avx2() -> bool {
+    false
+}
+
+/// NEON is baseline on AArch64 (std targets always enable it).
+fn host_neon() -> bool {
+    cfg!(target_arch = "aarch64")
+}
+
+/// The process-wide capability probe, run once and cached.
+pub fn cpu_caps() -> CpuCaps {
+    static CAPS: OnceLock<CpuCaps> = OnceLock::new();
+    *CAPS.get_or_init(CpuCaps::detect)
+}
+
+/// Which microkernel family executes a GEMM.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelKind {
+    /// AVX2 intrinsics, 16 output columns per tile (two 256-bit
+    /// registers).
+    Avx2,
+    /// NEON intrinsics, 8 output columns per tile (two 128-bit
+    /// registers).
+    Neon,
+    /// Portable scalar fallback with fixed 8-wide lane arrays (the
+    /// compiler may auto-vectorize it; per-lane semantics are identical
+    /// either way).
+    Scalar,
+}
+
+impl KernelKind {
+    /// Display name (also the prefix of [`KernelChoice::name`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelKind::Avx2 => "avx2",
+            KernelKind::Neon => "neon",
+            KernelKind::Scalar => "scalar",
+        }
+    }
+
+    /// Output columns one tile of this kind produces (`nr`).
+    pub fn lanes(&self) -> usize {
+        match self {
+            KernelKind::Avx2 => 16,
+            KernelKind::Neon | KernelKind::Scalar => 8,
+        }
+    }
+
+    /// Static sustained-throughput estimate in f32 FLOPs/cycle, used
+    /// only to *rank* kinds in [`KernelSelector::choose`] (never as a
+    /// latency — measured numbers live in [`KernelThroughput`]).
+    fn flops_per_cycle(&self) -> f64 {
+        match self {
+            KernelKind::Avx2 => 24.0,
+            KernelKind::Neon => 10.0,
+            KernelKind::Scalar => 2.5,
+        }
+    }
+
+    /// Is this kind executable under `caps`?
+    pub fn available(&self, caps: CpuCaps) -> bool {
+        match self {
+            KernelKind::Avx2 => caps.avx2,
+            KernelKind::Neon => caps.neon,
+            KernelKind::Scalar => true,
+        }
+    }
+}
+
+/// A fully-resolved kernel choice for one GEMM shape: microkernel kind
+/// plus tile geometry. `mr × nr` is the register tile (rows × output
+/// columns); `nc` is the column-panel group width the packer builds
+/// ahead of the compute (see `super::simd`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KernelChoice {
+    /// Microkernel family.
+    pub kind: KernelKind,
+    /// Register-tile rows (1 or 4).
+    pub mr: usize,
+    /// Register-tile output columns (the kind's lane count).
+    pub nr: usize,
+    /// Columns per packed panel group (multiple of `nr`).
+    pub nc: usize,
+}
+
+impl KernelChoice {
+    /// A choice for `kind` with its natural tile (`mr` ∈ {1, 4}) and a
+    /// default panel-group width for reduction depth `b`.
+    pub fn of(kind: KernelKind, mr: usize, b: usize) -> KernelChoice {
+        assert!(mr == 1 || mr == 4, "microkernel tier implements mr ∈ {{1, 4}}");
+        let nr = kind.lanes();
+        KernelChoice { kind, mr, nr, nc: default_nc(b, nr) }
+    }
+
+    /// Stable name, e.g. `avx2-4x16` — the key space of
+    /// [`KernelThroughput`].
+    pub fn name(&self) -> String {
+        format!("{}-{}x{}", self.kind.name(), self.mr, self.nr)
+    }
+}
+
+/// Panel-group width targeting ~128 KiB of packed floats (L2-resident
+/// next to the row block), rounded to a multiple of `nr` and clamped to
+/// `[nr, 512]`.
+fn default_nc(b: usize, nr: usize) -> usize {
+    let target_cols = (128 * 1024 / 4) / b.max(1);
+    let nc = (target_cols / nr).max(1) * nr;
+    nc.clamp(nr, 512)
+}
+
+/// Shape-aware kernel selection over a fixed capability set.
+#[derive(Debug, Clone, Copy)]
+pub struct KernelSelector {
+    caps: CpuCaps,
+}
+
+impl KernelSelector {
+    /// A selector over explicit capabilities (tests force the fallback
+    /// this way).
+    pub fn new(caps: CpuCaps) -> KernelSelector {
+        KernelSelector { caps }
+    }
+
+    /// A selector over the process-wide probe ([`cpu_caps`]).
+    pub fn probed() -> KernelSelector {
+        KernelSelector::new(cpu_caps())
+    }
+
+    /// The capabilities this selector chooses under.
+    pub fn caps(&self) -> CpuCaps {
+        self.caps
+    }
+
+    /// Kinds executable under the probe, best-ranked first. Scalar is
+    /// always last (and always present).
+    pub fn kinds(&self) -> Vec<KernelKind> {
+        [KernelKind::Avx2, KernelKind::Neon, KernelKind::Scalar]
+            .into_iter()
+            .filter(|k| k.available(self.caps))
+            .collect()
+    }
+
+    /// Pick the microkernel and tile shape for an `a × b × c` GEMM.
+    /// Deterministic in `(caps, a, b, c)`: the ranking multiplies each
+    /// kind's static FLOPs/cycle by its column-lane efficiency on `c`
+    /// (tail lanes past `c` are packed as zeros and compute dead work),
+    /// and ties break toward the earlier (wider) kind.
+    pub fn choose(&self, a: usize, b: usize, c: usize) -> KernelChoice {
+        let kind = self
+            .kinds()
+            .into_iter()
+            // max_by keeps the *last* maximum, so iterate worst-first:
+            // exact rate ties resolve to the best-ranked kind
+            .rev()
+            .max_by(|p, q| {
+                let rate = |k: &KernelKind| k.flops_per_cycle() * lane_efficiency(c, k.lanes());
+                rate(p).partial_cmp(&rate(q)).unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .unwrap_or(KernelKind::Scalar);
+        let mr = if a >= 4 { 4 } else { 1 };
+        KernelChoice::of(kind, mr, b)
+    }
+
+    /// Time every selectable kernel on a fixed reference GEMM and
+    /// return the measured-throughput table the cost model folds in
+    /// ([`crate::cost::CostModel::microkernels`]). This is the only
+    /// place wall-clock feeds the tier, and its output goes to the
+    /// *pricing* side exclusively — runtime selection stays static.
+    pub fn measure(&self) -> KernelThroughput {
+        // reference shape: multiple of every tile (rows of 4, 16 lanes)
+        // so the table records peak-tile throughput; shape-dependent
+        // tail losses are re-applied analytically by `gemm_sec`
+        let (a, b, c) = (96, 64, 128);
+        let mut rng = crate::util::rng::Rng::new(99);
+        let x = Mat::from_fn(a, b, |_, _| rng.f32_range(-1.0, 1.0));
+        let w = PackedWt::pack(&Mat::from_fn(b, c, |_, _| rng.f32_range(-1.0, 1.0)));
+        let flops = 2.0 * (a * b * c) as f64;
+        let mut table = KernelThroughput::default();
+        let mut best_gflops = 0.0f64;
+        for kind in self.kinds() {
+            for mr in [4usize, 1] {
+                let choice = KernelChoice::of(kind, mr, b);
+                let gflops = flops * time_calls(|| super::simd::gemm_with(&x, &w, &choice)) / 1e9;
+                if gflops > best_gflops {
+                    best_gflops = gflops;
+                }
+                table = table.with(&choice.name(), gflops);
+            }
+        }
+        // per-call overhead: what a near-zero-work GEMM costs beyond
+        // its (negligible) modeled compute — dispatch, packing setup,
+        // output allocation. Priced per GEMM *call*, which is exactly
+        // the axis the algorithms differ on (1 im2col call vs K1K2
+        // kn2row calls vs (m+r−1)²·rounds Winograd calls).
+        let tiny_x = Mat::from_fn(1, 1, |_, _| 1.0);
+        let tiny_w = PackedWt::pack(&Mat::from_fn(1, 1, |_, _| 1.0));
+        let best = self.choose(1, 1, 1);
+        let tiny_sec = 1.0 / time_calls(|| super::simd::gemm_with(&tiny_x, &tiny_w, &best));
+        let modeled = 2.0 / (best_gflops.max(1e-9) * 1e9);
+        table.call_overhead_sec = (tiny_sec - modeled).max(0.0);
+        table
+    }
+}
+
+/// Fraction of lanes doing live work for `c` output columns at lane
+/// width `nr` (tail lanes are zero-packed and wasted).
+fn lane_efficiency(c: usize, nr: usize) -> f64 {
+    if c == 0 {
+        return 1.0;
+    }
+    c as f64 / (c.div_ceil(nr) * nr) as f64
+}
+
+/// Calls per second of `f`, measured over a short fixed budget.
+fn time_calls<R>(mut f: impl FnMut() -> R) -> f64 {
+    // warm once (page in, fill caches), then run for ~2 ms or 64 calls,
+    // whichever comes later — enough to average out timer granularity
+    // without making `measure()` noticeable at session startup
+    std::hint::black_box(f());
+    let start = Instant::now();
+    let mut calls = 0u32;
+    loop {
+        std::hint::black_box(f());
+        calls += 1;
+        if calls >= 64 && start.elapsed().as_secs_f64() >= 2e-3 {
+            break;
+        }
+        if calls >= 4096 {
+            break;
+        }
+    }
+    calls as f64 / start.elapsed().as_secs_f64().max(1e-9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_is_always_available() {
+        for caps in [CpuCaps::host(), CpuCaps::scalar()] {
+            let kinds = KernelSelector::new(caps).kinds();
+            assert_eq!(kinds.last(), Some(&KernelKind::Scalar));
+        }
+        assert_eq!(KernelSelector::new(CpuCaps::scalar()).kinds(), vec![KernelKind::Scalar]);
+    }
+
+    #[test]
+    fn env_hook_forces_scalar() {
+        for v in ["off", "scalar", "0", " off "] {
+            assert_eq!(CpuCaps::from_env_value(Some(v)), CpuCaps::scalar());
+        }
+        assert_eq!(CpuCaps::from_env_value(None), CpuCaps::host());
+        assert_eq!(CpuCaps::from_env_value(Some("on")), CpuCaps::host());
+    }
+
+    #[test]
+    fn choice_geometry_is_sane() {
+        let sel = KernelSelector::probed();
+        for (a, b, c) in [(1, 1, 1), (3, 7, 5), (128, 96, 128), (0, 0, 0), (512, 2048, 512)] {
+            let ch = sel.choose(a, b, c);
+            assert_eq!(ch.nr, ch.kind.lanes());
+            assert_eq!(ch.nc % ch.nr, 0, "nc must be a whole number of panels");
+            assert!((ch.nr..=512).contains(&ch.nc));
+            assert_eq!(ch.mr, if a >= 4 { 4 } else { 1 });
+        }
+    }
+
+    #[test]
+    fn scalar_selector_never_picks_simd() {
+        let sel = KernelSelector::new(CpuCaps::scalar());
+        for (a, b, c) in [(1, 1, 1), (64, 64, 64), (128, 96, 128)] {
+            assert_eq!(sel.choose(a, b, c).kind, KernelKind::Scalar);
+            assert_eq!(sel.choose(a, b, c).name(), format!("scalar-{}x8", if a >= 4 { 4 } else { 1 }));
+        }
+    }
+
+    #[test]
+    fn lane_efficiency_bounds() {
+        assert_eq!(lane_efficiency(16, 16), 1.0);
+        assert_eq!(lane_efficiency(8, 16), 0.5);
+        assert_eq!(lane_efficiency(0, 16), 1.0);
+        assert!((lane_efficiency(17, 16) - 17.0 / 32.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn measure_covers_every_selectable_kernel() {
+        let sel = KernelSelector::new(CpuCaps::scalar());
+        let table = sel.measure();
+        assert!(!table.is_empty());
+        assert!(table.gflops.contains_key("scalar-4x8"));
+        assert!(table.gflops.contains_key("scalar-1x8"));
+        assert!(table.gflops.values().all(|&g| g > 0.0));
+        assert!(table.call_overhead_sec >= 0.0);
+    }
+}

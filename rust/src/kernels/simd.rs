@@ -1,0 +1,483 @@
+//! Explicit-SIMD f32 GEMM microkernels with double-buffered panel
+//! packing — the top tier of the kernel layer.
+//!
+//! [`gemm`] computes `X (a×b) · W (b×c)` like [`super::gemm::gemm`],
+//! but through per-architecture microkernels chosen by the one-time CPU
+//! probe ([`super::select`]): AVX2 on x86-64, NEON on AArch64, and a
+//! portable scalar tile everywhere else (or under `DYNAMAP_SIMD=off`).
+//!
+//! # Bit-exactness
+//!
+//! Every output element accumulates its dot product in ascending-`k`
+//! order with a *separate* IEEE-754 multiply and add per step — exactly
+//! the operation sequence of [`Mat::matmul`]. The microkernels earn
+//! their speed by vectorizing **across output columns**: each vector
+//! lane is one column's independent accumulator, so widening the tile
+//! never reassociates a sum. FMA is deliberately not used — its single
+//! rounding per multiply-add would change low bits and break the
+//! bit-identical contract the hot-swap, parallel-batch and
+//! wire-bitwise tests rely on. `rust/tests/kernels.rs` fuzzes this
+//! claim over ragged and degenerate shapes for every selectable kernel.
+//!
+//! # Packing and double buffering
+//!
+//! `W` arrives as the layer-lifetime [`PackedWt`] (column-major `Wᵀ`);
+//! per call, columns are regrouped into `nc`-wide *panel groups* laid
+//! out `k`-major so one tile step loads `nr` consecutive lane weights.
+//! Groups are packed one step ahead of the compute on a scoped helper
+//! thread ([`double_buffered`]) — the software analogue of the paper's
+//! §3.3 off-chip/on-chip transfer overlap — and fall back to a
+//! sequential pack-then-compute loop when `DYNAMAP_THREADS=1` or the
+//! GEMM has a single group.
+#![deny(clippy::correctness, clippy::suspicious)]
+#![warn(missing_docs)]
+
+use super::gemm::PackedWt;
+use super::select::{KernelChoice, KernelKind, KernelSelector};
+use crate::algos::tensor::Mat;
+use crate::util::parallel::double_buffered;
+
+/// Widest supported register tile: 4 rows × 16 columns (AVX2).
+const MAX_MR: usize = 4;
+/// Widest supported lane count (AVX2: two 256-bit registers).
+const MAX_NR: usize = 16;
+
+/// `X (a×b) · W (b×c)` through the probed, shape-selected microkernel.
+/// Bit-identical to [`Mat::matmul`] and to [`super::gemm::gemm`].
+/// Panics on a depth mismatch.
+pub fn gemm(x: &Mat, w: &PackedWt) -> Mat {
+    gemm_with(x, w, &KernelSelector::probed().choose(x.rows, x.cols, w.c))
+}
+
+/// [`gemm`] with an explicit kernel choice (tests sweep every
+/// selectable kernel through this; the selector owns the default).
+/// Panics if `choice` names a kind the host cannot execute.
+pub fn gemm_with(x: &Mat, w: &PackedWt, choice: &KernelChoice) -> Mat {
+    assert_eq!(x.cols, w.b, "kernels::simd::gemm depth mismatch");
+    assert!(
+        choice.kind.available(super::select::cpu_caps()) || choice.kind == KernelKind::Scalar,
+        "kernel kind {:?} not executable on this host",
+        choice.kind
+    );
+    let (a, b, c) = (x.rows, x.cols, w.c);
+    let mut out = Mat::zeros(a, c);
+    if a == 0 || c == 0 {
+        return out;
+    }
+    let (nr, nc) = (choice.nr, choice.nc);
+    let n_groups = c.div_ceil(nc);
+    double_buffered(
+        n_groups,
+        |g| pack_group(w, g * nc, nc.min(c - g * nc), nr),
+        |_, group| compute_group(x, b, &group, choice, &mut out),
+    );
+    out
+}
+
+/// One packed group of `cols ≤ nc` consecutive columns of `W`, split
+/// into `nr`-wide panels laid out `panel → k → lane`; tail lanes past
+/// `cols` are zero-filled (their tile results are computed and
+/// discarded — zero weights never affect live lanes).
+struct PanelGroup {
+    /// First output column the group covers.
+    j0: usize,
+    /// Live columns in the group.
+    cols: usize,
+    /// `cols.div_ceil(nr) · b · nr` floats, panel-major.
+    data: Vec<f32>,
+}
+
+fn pack_group(w: &PackedWt, j0: usize, cols: usize, nr: usize) -> PanelGroup {
+    let b = w.b;
+    let n_panels = cols.div_ceil(nr);
+    let mut data = vec![0.0f32; n_panels * b * nr];
+    for p in 0..n_panels {
+        let base = p * b * nr;
+        for l in 0..nr.min(cols - p * nr) {
+            let col = w.col(j0 + p * nr + l);
+            for (k, &v) in col.iter().enumerate() {
+                data[base + k * nr + l] = v;
+            }
+        }
+    }
+    PanelGroup { j0, cols, data }
+}
+
+/// Run the chosen microkernel over every (row-block, panel) tile of one
+/// packed group, scattering the live lanes into `out`.
+fn compute_group(x: &Mat, b: usize, group: &PanelGroup, choice: &KernelChoice, out: &mut Mat) {
+    let a = x.rows;
+    let c = out.cols;
+    let nr = choice.nr;
+    let n_panels = group.cols.div_ceil(nr);
+    let mut i = 0;
+    while i < a {
+        let mr = if choice.mr == MAX_MR && i + MAX_MR <= a { MAX_MR } else { 1 };
+        for p in 0..n_panels {
+            let j = group.j0 + p * nr;
+            let vc = nr.min(group.j0 + group.cols - j);
+            let panel = &group.data[p * b * nr..(p + 1) * b * nr];
+            let mut tile = [0.0f32; MAX_MR * MAX_NR];
+            run_tile(x, i, mr, b, panel, nr, choice.kind, &mut tile);
+            for r in 0..mr {
+                out.data[(i + r) * c + j..(i + r) * c + j + vc]
+                    .copy_from_slice(&tile[r * nr..r * nr + vc]);
+            }
+        }
+        i += mr;
+    }
+}
+
+/// Dispatch one `mr × nr` tile to the architecture kernel. `tile` is
+/// the row-major `mr × nr` destination scratch.
+fn run_tile(
+    x: &Mat,
+    i: usize,
+    mr: usize,
+    b: usize,
+    panel: &[f32],
+    nr: usize,
+    kind: KernelKind,
+    tile: &mut [f32; MAX_MR * MAX_NR],
+) {
+    let row = |r: usize| &x.data[(i + r) * b..(i + r + 1) * b];
+    match kind {
+        KernelKind::Avx2 => run_avx2(row, mr, panel, tile),
+        KernelKind::Neon => run_neon(row, mr, panel, tile),
+        KernelKind::Scalar => {
+            debug_assert_eq!(nr, 8, "scalar tile is fixed 8 lanes wide");
+            if mr == MAX_MR {
+                scalar::tile::<MAX_MR>([row(0), row(1), row(2), row(3)], panel, tile);
+            } else {
+                scalar::tile::<1>([row(0)], panel, tile);
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn run_avx2<'a>(
+    row: impl Fn(usize) -> &'a [f32],
+    mr: usize,
+    panel: &[f32],
+    tile: &mut [f32; MAX_MR * MAX_NR],
+) {
+    // SAFETY: Avx2 is only ever chosen (or accepted by `gemm_with`)
+    // when the probe reported AVX2 support on this host.
+    unsafe {
+        if mr == MAX_MR {
+            avx2::tile4(row(0), row(1), row(2), row(3), panel, tile);
+        } else {
+            avx2::tile1(row(0), panel, tile);
+        }
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn run_avx2<'a>(
+    _row: impl Fn(usize) -> &'a [f32],
+    _mr: usize,
+    _panel: &[f32],
+    _tile: &mut [f32; MAX_MR * MAX_NR],
+) {
+    unreachable!("AVX2 kernel selected on a non-x86-64 host");
+}
+
+#[cfg(target_arch = "aarch64")]
+fn run_neon<'a>(
+    row: impl Fn(usize) -> &'a [f32],
+    mr: usize,
+    panel: &[f32],
+    tile: &mut [f32; MAX_MR * MAX_NR],
+) {
+    // SAFETY: NEON is baseline on every AArch64 std target.
+    unsafe {
+        if mr == MAX_MR {
+            neon::tile4(row(0), row(1), row(2), row(3), panel, tile);
+        } else {
+            neon::tile1(row(0), panel, tile);
+        }
+    }
+}
+
+#[cfg(not(target_arch = "aarch64"))]
+fn run_neon<'a>(
+    _row: impl Fn(usize) -> &'a [f32],
+    _mr: usize,
+    _panel: &[f32],
+    _tile: &mut [f32; MAX_MR * MAX_NR],
+) {
+    unreachable!("NEON kernel selected on a non-AArch64 host");
+}
+
+/// Portable scalar tile, fixed 8 lanes wide. Each lane `l` of each row
+/// accumulates `Σ_k x[k] · w[k][l]` in ascending `k` with separate
+/// mul/add — the compiler may auto-vectorize the lane loop, which
+/// preserves per-lane IEEE semantics and therefore bitwise results.
+mod scalar {
+    use super::{MAX_MR, MAX_NR};
+
+    pub fn tile<const MR: usize>(
+        xs: [&[f32]; MR],
+        panel: &[f32],
+        tile: &mut [f32; MAX_MR * MAX_NR],
+    ) {
+        const NR: usize = 8;
+        let b = xs[0].len();
+        let mut acc = [[0.0f32; NR]; MR];
+        for k in 0..b {
+            let w = &panel[k * NR..k * NR + NR];
+            for r in 0..MR {
+                let xv = xs[r][k];
+                for l in 0..NR {
+                    acc[r][l] += xv * w[l];
+                }
+            }
+        }
+        for r in 0..MR {
+            tile[r * NR..r * NR + NR].copy_from_slice(&acc[r]);
+        }
+    }
+}
+
+/// AVX2 tiles, 16 lanes wide (two 256-bit registers per row). Separate
+/// `_mm256_mul_ps` + `_mm256_add_ps` per step — never FMA — keeps every
+/// lane bit-identical to the scalar reference.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{MAX_MR, MAX_NR};
+    use std::arch::x86_64::*;
+
+    /// 4×16 tile.
+    ///
+    /// # Safety
+    /// Requires AVX2. `panel` must hold `b · 16` floats where
+    /// `b = x0.len() = x1.len() = x2.len() = x3.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn tile4(
+        x0: &[f32],
+        x1: &[f32],
+        x2: &[f32],
+        x3: &[f32],
+        panel: &[f32],
+        tile: &mut [f32; MAX_MR * MAX_NR],
+    ) {
+        let b = x0.len();
+        debug_assert!(panel.len() >= b * 16);
+        let mut a00 = _mm256_setzero_ps();
+        let mut a01 = _mm256_setzero_ps();
+        let mut a10 = _mm256_setzero_ps();
+        let mut a11 = _mm256_setzero_ps();
+        let mut a20 = _mm256_setzero_ps();
+        let mut a21 = _mm256_setzero_ps();
+        let mut a30 = _mm256_setzero_ps();
+        let mut a31 = _mm256_setzero_ps();
+        for k in 0..b {
+            let w0 = _mm256_loadu_ps(panel.as_ptr().add(k * 16));
+            let w1 = _mm256_loadu_ps(panel.as_ptr().add(k * 16 + 8));
+            let v0 = _mm256_set1_ps(*x0.get_unchecked(k));
+            a00 = _mm256_add_ps(a00, _mm256_mul_ps(v0, w0));
+            a01 = _mm256_add_ps(a01, _mm256_mul_ps(v0, w1));
+            let v1 = _mm256_set1_ps(*x1.get_unchecked(k));
+            a10 = _mm256_add_ps(a10, _mm256_mul_ps(v1, w0));
+            a11 = _mm256_add_ps(a11, _mm256_mul_ps(v1, w1));
+            let v2 = _mm256_set1_ps(*x2.get_unchecked(k));
+            a20 = _mm256_add_ps(a20, _mm256_mul_ps(v2, w0));
+            a21 = _mm256_add_ps(a21, _mm256_mul_ps(v2, w1));
+            let v3 = _mm256_set1_ps(*x3.get_unchecked(k));
+            a30 = _mm256_add_ps(a30, _mm256_mul_ps(v3, w0));
+            a31 = _mm256_add_ps(a31, _mm256_mul_ps(v3, w1));
+        }
+        let t = tile.as_mut_ptr();
+        _mm256_storeu_ps(t, a00);
+        _mm256_storeu_ps(t.add(8), a01);
+        _mm256_storeu_ps(t.add(16), a10);
+        _mm256_storeu_ps(t.add(24), a11);
+        _mm256_storeu_ps(t.add(32), a20);
+        _mm256_storeu_ps(t.add(40), a21);
+        _mm256_storeu_ps(t.add(48), a30);
+        _mm256_storeu_ps(t.add(56), a31);
+    }
+
+    /// 1×16 remainder-row tile.
+    ///
+    /// # Safety
+    /// Requires AVX2. `panel` must hold `x0.len() · 16` floats.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn tile1(x0: &[f32], panel: &[f32], tile: &mut [f32; MAX_MR * MAX_NR]) {
+        let b = x0.len();
+        debug_assert!(panel.len() >= b * 16);
+        let mut a00 = _mm256_setzero_ps();
+        let mut a01 = _mm256_setzero_ps();
+        for k in 0..b {
+            let w0 = _mm256_loadu_ps(panel.as_ptr().add(k * 16));
+            let w1 = _mm256_loadu_ps(panel.as_ptr().add(k * 16 + 8));
+            let v0 = _mm256_set1_ps(*x0.get_unchecked(k));
+            a00 = _mm256_add_ps(a00, _mm256_mul_ps(v0, w0));
+            a01 = _mm256_add_ps(a01, _mm256_mul_ps(v0, w1));
+        }
+        _mm256_storeu_ps(tile.as_mut_ptr(), a00);
+        _mm256_storeu_ps(tile.as_mut_ptr().add(8), a01);
+    }
+}
+
+/// NEON tiles, 8 lanes wide (two 128-bit registers per row). Separate
+/// `vmulq_f32` + `vaddq_f32` per step — never FMA.
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::{MAX_MR, MAX_NR};
+    use std::arch::aarch64::*;
+
+    /// 4×8 tile.
+    ///
+    /// # Safety
+    /// `panel` must hold `b · 8` floats where `b` is the shared row
+    /// length (NEON itself is baseline on AArch64).
+    pub unsafe fn tile4(
+        x0: &[f32],
+        x1: &[f32],
+        x2: &[f32],
+        x3: &[f32],
+        panel: &[f32],
+        tile: &mut [f32; MAX_MR * MAX_NR],
+    ) {
+        let b = x0.len();
+        debug_assert!(panel.len() >= b * 8);
+        let mut a00 = vdupq_n_f32(0.0);
+        let mut a01 = vdupq_n_f32(0.0);
+        let mut a10 = vdupq_n_f32(0.0);
+        let mut a11 = vdupq_n_f32(0.0);
+        let mut a20 = vdupq_n_f32(0.0);
+        let mut a21 = vdupq_n_f32(0.0);
+        let mut a30 = vdupq_n_f32(0.0);
+        let mut a31 = vdupq_n_f32(0.0);
+        for k in 0..b {
+            let w0 = vld1q_f32(panel.as_ptr().add(k * 8));
+            let w1 = vld1q_f32(panel.as_ptr().add(k * 8 + 4));
+            let v0 = vdupq_n_f32(*x0.get_unchecked(k));
+            a00 = vaddq_f32(a00, vmulq_f32(v0, w0));
+            a01 = vaddq_f32(a01, vmulq_f32(v0, w1));
+            let v1 = vdupq_n_f32(*x1.get_unchecked(k));
+            a10 = vaddq_f32(a10, vmulq_f32(v1, w0));
+            a11 = vaddq_f32(a11, vmulq_f32(v1, w1));
+            let v2 = vdupq_n_f32(*x2.get_unchecked(k));
+            a20 = vaddq_f32(a20, vmulq_f32(v2, w0));
+            a21 = vaddq_f32(a21, vmulq_f32(v2, w1));
+            let v3 = vdupq_n_f32(*x3.get_unchecked(k));
+            a30 = vaddq_f32(a30, vmulq_f32(v3, w0));
+            a31 = vaddq_f32(a31, vmulq_f32(v3, w1));
+        }
+        let t = tile.as_mut_ptr();
+        vst1q_f32(t, a00);
+        vst1q_f32(t.add(4), a01);
+        vst1q_f32(t.add(8), a10);
+        vst1q_f32(t.add(12), a11);
+        vst1q_f32(t.add(16), a20);
+        vst1q_f32(t.add(20), a21);
+        vst1q_f32(t.add(24), a30);
+        vst1q_f32(t.add(28), a31);
+    }
+
+    /// 1×8 remainder-row tile.
+    ///
+    /// # Safety
+    /// `panel` must hold `x0.len() · 8` floats.
+    pub unsafe fn tile1(x0: &[f32], panel: &[f32], tile: &mut [f32; MAX_MR * MAX_NR]) {
+        let b = x0.len();
+        debug_assert!(panel.len() >= b * 8);
+        let mut a00 = vdupq_n_f32(0.0);
+        let mut a01 = vdupq_n_f32(0.0);
+        for k in 0..b {
+            let w0 = vld1q_f32(panel.as_ptr().add(k * 8));
+            let w1 = vld1q_f32(panel.as_ptr().add(k * 8 + 4));
+            let v0 = vdupq_n_f32(*x0.get_unchecked(k));
+            a00 = vaddq_f32(a00, vmulq_f32(v0, w0));
+            a01 = vaddq_f32(a01, vmulq_f32(v0, w1));
+        }
+        vst1q_f32(tile.as_mut_ptr(), a00);
+        vst1q_f32(tile.as_mut_ptr().add(4), a01);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::select::CpuCaps;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    fn random_mat(r: &mut Rng, rows: usize, cols: usize) -> Mat {
+        Mat::from_fn(rows, cols, |_, _| r.f32_range(-1.0, 1.0))
+    }
+
+    #[test]
+    fn probed_path_matches_matmul_bitwise() {
+        check("simd_gemm_vs_matmul", 64, |r: &mut Rng| {
+            let (a, b, c) = (r.range(1, 40), r.range(1, 40), r.range(1, 200));
+            let x = random_mat(r, a, b);
+            let w = random_mat(r, b, c);
+            let fast = gemm(&x, &PackedWt::pack(&w));
+            if fast.data != x.matmul(&w).data {
+                return Err(format!("bitwise mismatch for ({a},{b},{c})"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn every_kind_matches_on_a_remainder_heavy_shape() {
+        // 5×7×19: rows leave an mr=4 remainder, 19 columns leave tail
+        // lanes in every lane width, and with nc = nr the GEMM spans
+        // multiple double-buffered groups
+        let mut r = Rng::new(7);
+        let x = random_mat(&mut r, 5, 7);
+        let w = random_mat(&mut r, 7, 19);
+        let packed = PackedWt::pack(&w);
+        let reference = x.matmul(&w);
+        for kind in KernelSelector::probed().kinds() {
+            for mr in [1, 4] {
+                let mut choice = KernelChoice::of(kind, mr, 7);
+                choice.nc = choice.nr;
+                let out = gemm_with(&x, &packed, &choice);
+                assert_eq!(out.data, reference.data, "{}", choice.name());
+            }
+        }
+    }
+
+    #[test]
+    fn zero_depth_yields_zeros() {
+        let x = Mat::zeros(3, 0);
+        let w = PackedWt::pack(&Mat::zeros(0, 9));
+        let out = gemm(&x, &w);
+        assert_eq!(out, Mat::zeros(3, 9));
+        assert_eq!(out.data, x.matmul(&w.as_wt_mat().transposed()).data);
+    }
+
+    #[test]
+    fn empty_output_shapes() {
+        assert_eq!(gemm(&Mat::zeros(0, 4), &PackedWt::pack(&Mat::zeros(4, 6))), Mat::zeros(0, 6));
+        assert_eq!(gemm(&Mat::zeros(4, 4), &PackedWt::pack(&Mat::zeros(4, 0))), Mat::zeros(4, 0));
+    }
+
+    #[test]
+    fn scalar_fallback_matches_packed_kernel() {
+        let sel = KernelSelector::new(CpuCaps::scalar());
+        check("simd_scalar_vs_packed", 32, |r: &mut Rng| {
+            let (a, b, c) = (r.range(1, 20), r.range(1, 20), r.range(1, 40));
+            let x = random_mat(r, a, b);
+            let w = random_mat(r, b, c);
+            let packed = PackedWt::pack(&w);
+            let simd = gemm_with(&x, &packed, &sel.choose(a, b, c));
+            if simd.data != super::super::gemm::gemm(&x, &packed).data {
+                return Err(format!("scalar fallback mismatch for ({a},{b},{c})"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "depth mismatch")]
+    fn depth_mismatch_panics() {
+        gemm(&Mat::zeros(2, 3), &PackedWt::pack(&Mat::zeros(4, 2)));
+    }
+}

@@ -110,6 +110,45 @@ where
     out.into_iter().map(|o| o.expect("parallel_run: missing result slot")).collect()
 }
 
+/// Produce/consume overlap for a pipeline of `n` sequential items:
+/// while `consume(i, item_i)` runs on the caller thread, `produce(i+1)`
+/// runs on one scoped helper thread, so item `i+1` is (usually) ready
+/// the moment item `i` finishes. Consumption order is strictly
+/// `0, 1, …, n-1` — this is double buffering, not a parallel map.
+///
+/// The kernel tier uses this to pack the next GEMM column-panel group
+/// while the current one computes. Falls back to a sequential
+/// pack-then-consume loop when `n <= 1` or the machine (or
+/// `DYNAMAP_THREADS=1`) offers no second worker. Panics from either
+/// side are re-raised on the caller thread.
+pub fn double_buffered<T, P, C>(n: usize, produce: P, mut consume: C)
+where
+    T: Send,
+    P: Fn(usize) -> T + Sync,
+    C: FnMut(usize, T),
+{
+    if n <= 1 || worker_count(2) < 2 {
+        for i in 0..n {
+            consume(i, produce(i));
+        }
+        return;
+    }
+    std::thread::scope(|s| {
+        let produce = &produce;
+        let mut cur = Some(produce(0));
+        for i in 0..n {
+            let next = (i + 1 < n).then(|| s.spawn(move || produce(i + 1)));
+            consume(i, cur.take().expect("double_buffered: missing item"));
+            if let Some(h) = next {
+                match h.join() {
+                    Ok(v) => cur = Some(v),
+                    Err(payload) => std::panic::resume_unwind(payload),
+                }
+            }
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -167,6 +206,51 @@ mod tests {
                 panic!("client boom");
             }
             i
+        });
+    }
+
+    #[test]
+    fn double_buffered_consumes_in_order() {
+        for n in [0usize, 1, 2, 7, 33] {
+            let mut seen = Vec::new();
+            double_buffered(n, |i| i * 3, |i, v| {
+                assert_eq!(v, i * 3);
+                seen.push(i);
+            });
+            assert_eq!(seen, (0..n).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn double_buffered_matches_sequential() {
+        let mut pipelined = Vec::new();
+        double_buffered(100, |i| (i as u64).wrapping_mul(31) ^ 7, |_, v| pipelined.push(v));
+        let sequential: Vec<u64> = (0..100).map(|i: u64| i.wrapping_mul(31) ^ 7).collect();
+        assert_eq!(pipelined, sequential);
+    }
+
+    #[test]
+    #[should_panic(expected = "producer boom")]
+    fn double_buffered_propagates_producer_panics() {
+        double_buffered(
+            8,
+            |i| {
+                if i == 5 {
+                    panic!("producer boom");
+                }
+                i
+            },
+            |_, _| {},
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "consumer boom")]
+    fn double_buffered_propagates_consumer_panics() {
+        double_buffered(8, |i| i, |i, _| {
+            if i == 3 {
+                panic!("consumer boom");
+            }
         });
     }
 
