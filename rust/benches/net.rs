@@ -115,6 +115,7 @@ fn main() {
             seed: 99,
             workers: 64,
             deadline: None,
+            trace: false,
         };
         let r = open_loop(&client, &cfg).expect("open loop");
         print_point(&r);
@@ -137,6 +138,7 @@ fn main() {
         seed: 99,
         workers: 64,
         deadline: Some(Duration::from_millis(50)),
+        trace: false,
     };
     let r = open_loop(&retry_client, &cfg).expect("deadline point");
     print_point(&r);

@@ -12,14 +12,20 @@
 //!   `infer_batch` calls that fan out over the worker pool.
 //!
 //! The run prints `serving throughput speedup: N.NNx` so ROADMAP.md
-//! §Performance has a number to append. `DYNAMAP_BENCH_ASSERT=1` turns
-//! the ≥1.3× threshold into a hard failure when the host has ≥4 cores
-//! (plain runs only report; single-core runners can't batch-win).
+//! §Performance has a number to append, and `tracing overhead: …` for
+//! the observability layer (`obs`): the measured cost of the disabled
+//! instrumentation path (one relaxed atomic load per would-be span)
+//! scaled to a request, beside the cost of serving with a recorder
+//! installed. `DYNAMAP_BENCH_ASSERT=1` turns the ≥1.3× batching
+//! threshold into a hard failure when the host has ≥4 cores (plain
+//! runs only report; single-core runners can't batch-win) and gates
+//! the disabled-tracing overhead below 1% of a request.
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use dynamap::api::{Compiler, Device};
 use dynamap::bench::harness::Bencher;
+use dynamap::obs::ObsGuard;
 use dynamap::serve::{loadgen, BatchConfig, LoadgenConfig, ModelRegistry, RegistryConfig};
 use dynamap::util::parallel::worker_count;
 
@@ -84,6 +90,57 @@ fn main() {
         assert!(
             speedup >= 1.3,
             "dynamic batching speedup regressed below the 1.3x gate: {speedup:.2}x"
+        );
+    }
+
+    // --- tracing overhead --------------------------------------------
+    // enabled path: the identical batched workload with a recorder
+    // installed, so every request buffers its admission/queue/layer
+    // spans for real
+    let traced_registry = registry(&root, 8);
+    let n_layers =
+        traced_registry.host("mini-inception").expect("hosted").state().algo_map().len();
+    let guard = ObsGuard::install(dynamap::obs::DEFAULT_CAPACITY);
+    let traced = b
+        .bench("serving/mini-inception/8x8req/batched_traced", || {
+            loadgen::run(&traced_registry, &load).expect("traced loadgen").requests
+        })
+        .clone();
+    let spans = guard.recorder().len();
+    drop(guard);
+    traced_registry.shutdown();
+
+    // disabled path: every instrumentation point is one relaxed atomic
+    // load before anything else happens — measure that check directly
+    // and scale it to a request's worth of would-be spans (per-layer
+    // plus admission, queue and flush). This is the overhead every
+    // production request pays when tracing is off.
+    assert!(
+        !dynamap::obs::is_active(),
+        "recorder must be uninstalled so the disabled path is measured for real"
+    );
+    const CHECKS: u64 = 10_000_000;
+    let t0 = Instant::now();
+    for _ in 0..CHECKS {
+        std::hint::black_box(dynamap::obs::is_active());
+    }
+    let per_check = t0.elapsed().as_secs_f64() / CHECKS as f64;
+    let checks_per_request = (n_layers + 3) as f64;
+    // conservative denominator: batched wall-clock per request (smaller
+    // than a request's latency, so the reported percentage over-states)
+    let per_request = fast.mean.as_secs_f64() / (load.clients * load.requests) as f64;
+    let disabled_pct = 100.0 * per_check * checks_per_request / per_request;
+    let enabled_pct = 100.0 * (traced.mean.as_secs_f64() / fast.mean.as_secs_f64() - 1.0);
+    println!(
+        "tracing overhead: {disabled_pct:.2}% disabled ({checks_per_request:.0} \
+         checks/request at {:.1} ns each), {enabled_pct:.2}% enabled \
+         ({spans} spans buffered)",
+        per_check * 1e9
+    );
+    if std::env::var("DYNAMAP_BENCH_ASSERT").is_ok() {
+        assert!(
+            disabled_pct < 1.0,
+            "disabled tracing must cost <1% of a request, measured {disabled_pct:.2}%"
         );
     }
     std::fs::remove_dir_all(&root).ok();

@@ -158,6 +158,18 @@ impl Compiler {
         self
     }
 
+    /// Measure the host's microkernel tiers right now
+    /// ([`crate::kernels::KernelSelector::measure`]) and fold the
+    /// resulting table in, as [`Compiler::microkernels`] would. This is
+    /// the `dynamap --measure` path: one ~10 ms calibration at startup
+    /// buys a cost model priced from *this* machine's measured GEMM
+    /// throughput. Each timed kernel emits a `measure` span when a
+    /// recorder is installed ([`crate::obs`]).
+    pub fn measure_microkernels(self) -> Compiler {
+        let table = crate::kernels::KernelSelector::probed().measure();
+        self.microkernels(table)
+    }
+
     /// `P_SA1` sweep bounds for Algorithm 1. Survives a later
     /// [`Compiler::device`] call.
     pub fn p1_bounds(mut self, lo: usize, hi: usize) -> Compiler {

@@ -492,7 +492,7 @@ impl NativeState {
             let mut observe = |layer: &str, data: &[f32]| {
                 scales.observe(layer, quant::max_abs(data));
             };
-            self.infer_observed(input, Some(&mut observe))?;
+            self.infer_observed(input, Some(&mut observe), None)?;
         }
         Ok(scales)
     }
@@ -501,22 +501,52 @@ impl NativeState {
     /// executed by the kernel layer. Takes `&self` over immutable data,
     /// so a parallel batch can fan it out across threads.
     pub fn infer(&self, input: &TensorBuf) -> Result<(TensorBuf, InferMetrics), DynamapError> {
-        self.infer_observed(input, None)
+        self.infer_observed(input, None, None)
+    }
+
+    /// [`NativeState::infer`] carrying the request's trace identity:
+    /// when a recorder is installed ([`crate::obs::install`]), every
+    /// conv/FC layer emits one [`crate::obs::Stage::Layer`] span tagged
+    /// with the layer name plus the live plan's `algo`, executed
+    /// `precision` and host microkernel `kernel` tier. With tracing off
+    /// this is exactly [`NativeState::infer`]: the only added work is
+    /// one relaxed atomic load per request.
+    pub fn infer_traced(
+        &self,
+        input: &TensorBuf,
+        trace: Option<crate::obs::TraceId>,
+    ) -> Result<(TensorBuf, InferMetrics), DynamapError> {
+        self.infer_observed(input, None, trace)
     }
 
     /// [`NativeState::infer`] with an optional observer called with
     /// each conv/FC layer's name and input activation before the layer
-    /// executes (the calibration hook; `None` on the serving hot path).
+    /// executes (the calibration hook; `None` on the serving hot path)
+    /// and the request's optional span-correlation id.
     fn infer_observed(
         &self,
         input: &TensorBuf,
         mut observe: Option<&mut dyn FnMut(&str, &[f32])>,
+        trace: Option<crate::obs::TraceId>,
     ) -> Result<(TensorBuf, InferMetrics), DynamapError> {
         let cnn = &self.cnn;
         // chaos hook: one poisoned request panics mid-compute; the batch
         // queue's per-request catch_unwind must convert it into a typed
         // error while batch siblings complete untouched
         crate::fault::panic_if(crate::fault::Site::WorkerPanic);
+        // resolve the span recorder once per request (one relaxed load
+        // when tracing is off); the kernel tag is the best microkernel
+        // tier executable on this host — the same ranking `gemm` uses
+        let recorder = crate::obs::active();
+        let kernel: &'static str = if recorder.is_some() {
+            crate::kernels::KernelSelector::probed()
+                .kinds()
+                .first()
+                .map(|k| k.name())
+                .unwrap_or("scalar")
+        } else {
+            "scalar"
+        };
         let t_total = Instant::now();
         let mut per_layer = Vec::new();
         // activations stay `Tensor` end to end — the only buffer copies
@@ -553,10 +583,26 @@ impl NativeState {
                     crate::fault::sleep_if(crate::fault::Site::SlowLayer);
                     let t0 = Instant::now();
                     let out = pw.conv2d(&values[&preds[0]]);
+                    let t1 = Instant::now();
+                    let algo = self.algo_map.get(&node.name).cloned().unwrap_or_default();
+                    if let Some(rec) = &recorder {
+                        rec.record_span(
+                            trace,
+                            crate::obs::Stage::Layer,
+                            &node.name,
+                            t0,
+                            t1,
+                            vec![
+                                ("algo", algo.clone()),
+                                ("precision", pw.precision().name().to_string()),
+                                ("kernel", kernel.to_string()),
+                            ],
+                        );
+                    }
                     per_layer.push((
                         node.name.clone(),
-                        self.algo_map.get(&node.name).cloned().unwrap_or_default(),
-                        t0.elapsed().as_secs_f64() * 1e6,
+                        algo,
+                        t1.duration_since(t0).as_secs_f64() * 1e6,
                     ));
                     out
                 }
@@ -600,11 +646,27 @@ impl NativeState {
                     }
                     let t0 = Instant::now();
                     let out = pw.conv2d(&flat);
+                    let t1 = Instant::now();
                     debug_assert_eq!(out.c, *c_out);
+                    let algo = self.algo_map.get(&node.name).cloned().unwrap_or_default();
+                    if let Some(rec) = &recorder {
+                        rec.record_span(
+                            trace,
+                            crate::obs::Stage::Layer,
+                            &node.name,
+                            t0,
+                            t1,
+                            vec![
+                                ("algo", algo.clone()),
+                                ("precision", pw.precision().name().to_string()),
+                                ("kernel", kernel.to_string()),
+                            ],
+                        );
+                    }
                     per_layer.push((
                         node.name.clone(),
-                        self.algo_map.get(&node.name).cloned().unwrap_or_default(),
-                        t0.elapsed().as_secs_f64() * 1e6,
+                        algo,
+                        t1.duration_since(t0).as_secs_f64() * 1e6,
                     ));
                     out
                 }

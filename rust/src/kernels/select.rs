@@ -253,10 +253,25 @@ impl KernelSelector {
         let flops = 2.0 * (a * b * c) as f64;
         let mut table = KernelThroughput::default();
         let mut best_gflops = 0.0f64;
+        // the measurement itself is observable: each timed kernel emits
+        // one `measure` span when a recorder is installed (crate::obs),
+        // so a trace of session startup shows where calibration went
+        let recorder = crate::obs::active();
         for kind in self.kinds() {
             for mr in [4usize, 1] {
                 let choice = KernelChoice::of(kind, mr, b);
+                let t0 = Instant::now();
                 let gflops = flops * time_calls(|| super::simd::gemm_with(&x, &w, &choice)) / 1e9;
+                if let Some(rec) = &recorder {
+                    rec.record_span(
+                        None,
+                        crate::obs::Stage::Measure,
+                        &choice.name(),
+                        t0,
+                        Instant::now(),
+                        vec![("gflops", format!("{gflops:.2}"))],
+                    );
+                }
                 if gflops > best_gflops {
                     best_gflops = gflops;
                 }

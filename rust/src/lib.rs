@@ -92,6 +92,11 @@
 //!   worker panics, dropped/stalled connections, corrupted replies,
 //!   artifact I/O errors) behind default-off hooks; powers the chaos
 //!   harness in `rust/tests/chaos.rs`.
+//! * [`obs`] — end-to-end request tracing (per-request [`obs::TraceId`]
+//!   propagated as the protocol-v3 trailer, admission/queue/flush/layer
+//!   spans into a bounded ring, Chrome trace-event export for Perfetto)
+//!   and the O(1) log-bucketed [`obs::LogHistogram`] behind the serving
+//!   metrics (`dynamap trace` / `dynamap stats`).
 //! * [`coordinator`] — latency metrics + the simulate/infer CLI.
 //! * [`emit`] — Verilog-style RTL + control-stream emission.
 //! * [`bench`] — mini-criterion harness + figure/table regeneration.
@@ -113,6 +118,7 @@ pub mod runtime;
 pub mod serve;
 pub mod net;
 pub mod fault;
+pub mod obs;
 pub mod tune;
 pub mod coordinator;
 pub mod emit;

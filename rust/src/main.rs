@@ -26,6 +26,11 @@
 //!   `--deadline-ms D` attaches per-request deadlines, `--retries N`
 //!   retries sheds under backoff, `--hedge` races a second attempt
 //!   against slow requests).
+//! * `trace --connect ADDR [--out FILE]` — drain a running server's
+//!   span ring as Chrome trace-event JSON (Perfetto-loadable); spans
+//!   buffer when the server runs with `--trace` or `DYNAMAP_TRACE=1`.
+//! * `stats --connect ADDR` — scrape a running server's metrics +
+//!   latency-histogram snapshot (read-only, poll-safe).
 //! * `tune --model <name> --profile <file>` — one-shot cost-model
 //!   calibration + re-map from a recorded profile; prints the residual
 //!   report, the algorithm-map diff and the predicted speedup.
@@ -41,7 +46,7 @@ use dynamap::util::table::Table;
 fn main() {
     let args = Args::parse_env(&[
         "json", "verbose", "no-fuse", "no-synth", "compare", "tune", "quant", "shutdown",
-        "hedge",
+        "hedge", "measure", "trace",
     ]);
     // deterministic fault injection, opt-in via DYNAMAP_FAULTS (chaos
     // testing a live server without a rebuild); off = zero cost
@@ -53,6 +58,10 @@ fn main() {
         );
         dynamap::fault::install(plan);
     }
+    // span recorder, opt-in via DYNAMAP_TRACE=1 (tracing a live server
+    // without a rebuild, like DYNAMAP_FAULTS above); off = one relaxed
+    // atomic load per would-be span
+    dynamap::obs::install_from_env();
     let code = match args.subcommand.as_deref() {
         Some("zoo") => cmd_zoo(),
         Some("dse") => cmd_dse(&args),
@@ -62,17 +71,20 @@ fn main() {
         Some("infer") => dynamap::coordinator::cli::infer(&args),
         Some("serve") => dynamap::serve::cli::serve(&args),
         Some("loadgen") => dynamap::serve::cli::loadgen(&args),
+        Some("trace") => dynamap::serve::cli::trace(&args),
+        Some("stats") => dynamap::serve::cli::stats(&args),
         Some("tune") => dynamap::tune::cli::tune(&args),
         Some("figures") => dynamap::bench::figures::cli(&args),
         Some("emit") => dynamap::emit::cli(&args),
         _ => {
             eprintln!(
                 "usage: dynamap <zoo|dse|compile|baselines|simulate|infer|serve|loadgen|\
-                 tune|figures|emit> [--model NAME] [--models A,B] [--clients N] \
+                 trace|stats|tune|figures|emit> [--model NAME] [--models A,B] [--clients N] \
                  [--requests M] [--listen ADDR] [--connect ADDR] [--rate QPS] \
                  [--max-inflight N] [--deadline-ms D] [--retries N] [--hedge] \
                  [--dsp N] [--out DIR] [--plan-cache DIR] \
-                 [--profile FILE] [--tune] [--quant] [--json]"
+                 [--profile FILE] [--tune] [--quant] [--measure] [--trace] \
+                 [--trace-out FILE] [--json]"
             );
             2
         }

@@ -350,10 +350,29 @@ impl Client {
         input: &TensorBuf,
         deadline: Option<Duration>,
     ) -> Result<(TensorBuf, f64), DynamapError> {
+        self.infer_traced(model, input, deadline, None)
+    }
+
+    /// [`Client::infer_with_deadline`] carrying the request's
+    /// span-correlation id ([`crate::obs::TraceId`]) on the wire as the
+    /// protocol-v3 trailer, so the server's admission/queue/flush/layer
+    /// spans for this request are tagged with an id the *client* chose
+    /// (deterministic under a seeded loadgen). Retries and hedges
+    /// re-send the same id — they are the same logical request, and a
+    /// hedge's duplicate spans under one id are exactly what a trace
+    /// viewer should show.
+    pub fn infer_traced(
+        &self,
+        model: &str,
+        input: &TensorBuf,
+        deadline: Option<Duration>,
+        trace: Option<crate::obs::TraceId>,
+    ) -> Result<(TensorBuf, f64), DynamapError> {
         let frame = Frame::Infer {
             model: model.to_string(),
             input: input.clone(),
             deadline_ms: deadline.map(|d| d.as_millis() as u64),
+            trace,
         };
         let mut transport_left = self.policy.transport_attempts.saturating_sub(1);
         let mut overloaded_left = self.policy.overloaded_attempts;
@@ -538,6 +557,31 @@ impl Client {
             other => Err(unexpected("ShutdownAck", &other)),
         }
     }
+
+    /// Fetch the server's full metrics document — every model's
+    /// counters plus its latency-histogram snapshot
+    /// ([`crate::serve::ServerMetrics::to_json`]) — as a JSON string.
+    /// Behind `dynamap stats --connect`.
+    pub fn server_stats(&self) -> Result<String, DynamapError> {
+        match self.request(&Frame::Stats)? {
+            Frame::StatsOk { json } => Ok(json),
+            Frame::Error(e) => Err(e.into()),
+            other => Err(unexpected("StatsOk", &other)),
+        }
+    }
+
+    /// Drain the server's span recorder and fetch the result as a
+    /// Chrome trace-event JSON document ([`crate::obs::chrome_trace`]).
+    /// Collect-then-fetch: each call returns the spans recorded since
+    /// the previous one. A server with tracing off returns a valid
+    /// empty document. Behind `dynamap trace --connect`.
+    pub fn dump_trace(&self) -> Result<String, DynamapError> {
+        match self.request(&Frame::TraceDump)? {
+            Frame::TraceDumpOk { json } => Ok(json),
+            Frame::Error(e) => Err(e.into()),
+            other => Err(unexpected("TraceDumpOk", &other)),
+        }
+    }
 }
 
 impl InferTarget for Client {
@@ -553,6 +597,16 @@ impl InferTarget for Client {
     ) -> Result<TensorBuf, DynamapError> {
         self.infer_with_deadline(model, input, deadline).map(|(out, _)| out)
     }
+
+    fn infer_traced(
+        &self,
+        model: &str,
+        input: &TensorBuf,
+        deadline: Option<Duration>,
+        trace: Option<crate::obs::TraceId>,
+    ) -> Result<TensorBuf, DynamapError> {
+        Client::infer_traced(self, model, input, deadline, trace).map(|(out, _)| out)
+    }
 }
 
 fn unexpected(wanted: &str, got: &Frame) -> DynamapError {
@@ -560,9 +614,13 @@ fn unexpected(wanted: &str, got: &Frame) -> DynamapError {
         Frame::Infer { .. } => "Infer",
         Frame::Ping => "Ping",
         Frame::Shutdown => "Shutdown",
+        Frame::Stats => "Stats",
+        Frame::TraceDump => "TraceDump",
         Frame::InferOk { .. } => "InferOk",
         Frame::Pong => "Pong",
         Frame::ShutdownAck => "ShutdownAck",
+        Frame::StatsOk { .. } => "StatsOk",
+        Frame::TraceDumpOk { .. } => "TraceDumpOk",
         Frame::Error(_) => "Error",
     };
     DynamapError::Protocol(format!("expected a {wanted} reply, got {kind}"))

@@ -25,12 +25,17 @@ use crate::runtime::TensorBuf;
 pub const MAGIC: u16 = 0xD1A7;
 /// Current protocol version; bumped on any incompatible framing change.
 /// Version 2 adds an optional trailing deadline to [`Frame::Infer`] and
-/// the [`WireError::DeadlineExceeded`] reply.
-pub const VERSION: u8 = 2;
-/// Oldest protocol version still accepted on the read side. Version-1
-/// frames are exactly version-2 frames with the optional fields absent,
-/// so v1 peers keep working against a v2 server (and vice versa for
-/// requests that don't carry a deadline).
+/// the [`WireError::DeadlineExceeded`] reply. Version 3 widens the
+/// [`Frame::Infer`] trailer to optionally carry a trace id (see the
+/// trailer grammar on [`Frame::Infer::trace`]) and adds the
+/// [`Frame::Stats`] / [`Frame::TraceDump`] observability requests.
+pub const VERSION: u8 = 3;
+/// Oldest protocol version still accepted on the read side. Decoding is
+/// presence-based, not version-gated: a version-1 `Infer` body is
+/// exactly a version-3 body with the trailer absent, and a version-2
+/// body is one with the 8-byte deadline-only trailer, so old peers keep
+/// working against a v3 server (and vice versa for requests that don't
+/// carry the newer fields).
 pub const MIN_VERSION: u8 = 1;
 /// Hard cap on a frame payload (64 MiB) — read before allocating, so an
 /// adversarial length field cannot force a huge allocation.
@@ -53,6 +58,20 @@ pub enum Frame {
         /// with [`WireError::DeadlineExceeded`] instead of computing a
         /// result nobody is waiting for.
         deadline_ms: Option<u64>,
+        /// Optional request trace id (version-3 extension): when set,
+        /// every span the request produces server-side is stamped with
+        /// this id, so a `TraceDump` correlates wire requests to
+        /// admission/queue/flush/layer spans.
+        ///
+        /// Trailer grammar (everything after the input tensor):
+        /// 0 bytes ⇒ no deadline, no trace (the v1 body); 8 bytes ⇒
+        /// deadline only (the v2 body); 16 bytes ⇒ deadline then trace,
+        /// with a `u64::MAX` deadline meaning "no deadline" so the two
+        /// optional fields stay independently expressible. (A real
+        /// deadline of `u64::MAX` ms — 584 million years — is therefore
+        /// not representable alongside a trace; it decodes as `None`.)
+        /// Any other trailer length is a typed protocol error.
+        trace: Option<crate::obs::TraceId>,
     },
     /// Request: liveness probe.
     Ping,
@@ -70,6 +89,28 @@ pub enum Frame {
     Pong,
     /// Response to [`Frame::Shutdown`]: drain has begun.
     ShutdownAck,
+    /// Request (version 3): snapshot the server's metrics — per-model
+    /// counters plus the full latency histograms — as one JSON
+    /// document, so `dynamap stats --connect` and the benches scrape a
+    /// live server instead of parsing the REPL table.
+    Stats,
+    /// Response to [`Frame::Stats`].
+    StatsOk {
+        /// JSON document (`ServerMetrics` snapshot incl. per-model
+        /// [`crate::obs::LogHistogram`] buckets).
+        json: String,
+    },
+    /// Request (version 3): drain the server's span recorder and return
+    /// the spans as Chrome trace-event JSON. Collect-then-fetch: each
+    /// dump returns the spans recorded since the previous dump.
+    TraceDump,
+    /// Response to [`Frame::TraceDump`]; `{"traceEvents": []}` when no
+    /// recorder is installed server-side.
+    TraceDumpOk {
+        /// Chrome trace-event JSON document
+        /// ([`crate::obs::chrome_trace`] output), Perfetto-loadable.
+        json: String,
+    },
     /// Typed failure response to any request.
     Error(WireError),
 }
@@ -168,6 +209,10 @@ const K_INFER_OK: u8 = 4;
 const K_PONG: u8 = 5;
 const K_SHUTDOWN_ACK: u8 = 6;
 const K_ERROR: u8 = 7;
+const K_STATS: u8 = 8;
+const K_STATS_OK: u8 = 9;
+const K_TRACE: u8 = 10;
+const K_TRACE_OK: u8 = 11;
 
 // wire-error codes (first payload byte of an Error frame)
 const E_OVERLOADED: u8 = 1;
@@ -198,6 +243,16 @@ fn clip_utf8(s: &str, max: usize) -> &str {
 fn put_str(buf: &mut Vec<u8>, s: &str) {
     let s = clip_utf8(s, u16::MAX as usize);
     buf.extend_from_slice(&(s.len() as u16).to_le_bytes());
+    buf.extend_from_slice(s.as_bytes());
+}
+
+/// u32-length-prefixed UTF-8 string, for document bodies that can
+/// exceed [`put_str`]'s u16 cap (the JSON of `StatsOk`/`TraceDumpOk`).
+/// Clipped at the payload cap; the overall frame length check still
+/// bounds what a peer can make us allocate.
+fn put_lstr(buf: &mut Vec<u8>, s: &str) {
+    let s = clip_utf8(s, MAX_PAYLOAD as usize - 4);
+    buf.extend_from_slice(&(s.len() as u32).to_le_bytes());
     buf.extend_from_slice(s.as_bytes());
 }
 
@@ -258,6 +313,17 @@ impl<'a> Cur<'a> {
             .map_err(|_| proto("string field is not valid UTF-8"))
     }
 
+    /// u32-length-prefixed counterpart of [`Cur::str`] (see
+    /// [`put_lstr`]). The length is bounds-checked against the payload
+    /// by `take`, so a lying prefix is a typed error, not an
+    /// allocation.
+    fn lstr(&mut self) -> Result<String, DynamapError> {
+        let len = self.u32()? as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| proto("string field is not valid UTF-8"))
+    }
+
     fn tensor(&mut self) -> Result<TensorBuf, DynamapError> {
         let rank = self.u8()?;
         if rank == 0 || rank > MAX_RANK {
@@ -299,14 +365,21 @@ impl<'a> Cur<'a> {
 /// Serialize `frame` (header + payload) into a fresh byte vector.
 pub fn encode_frame(frame: &Frame) -> Vec<u8> {
     let (kind, payload) = match frame {
-        Frame::Infer { model, input, deadline_ms } => {
+        Frame::Infer { model, input, deadline_ms, trace } => {
             let mut p = Vec::with_capacity(input.data.len() * 4 + 64);
             put_str(&mut p, model);
             put_tensor(&mut p, input);
-            // optional trailing deadline: absent ⇒ the body is exactly
-            // a version-1 Infer frame, so old readers stay compatible
-            if let Some(ms) = deadline_ms {
-                p.extend_from_slice(&ms.to_le_bytes());
+            // optional trailer (see the grammar on `Frame::Infer::trace`):
+            // nothing ⇒ v1 body; deadline only ⇒ v2 body; a trace id
+            // always rides behind a deadline word (u64::MAX = "none")
+            // so the 8- and 16-byte trailers stay distinguishable
+            match (deadline_ms, trace) {
+                (None, None) => {}
+                (Some(ms), None) => p.extend_from_slice(&ms.to_le_bytes()),
+                (dl, Some(t)) => {
+                    p.extend_from_slice(&dl.unwrap_or(u64::MAX).to_le_bytes());
+                    p.extend_from_slice(&t.raw().to_le_bytes());
+                }
             }
             (K_INFER, p)
         }
@@ -320,6 +393,18 @@ pub fn encode_frame(frame: &Frame) -> Vec<u8> {
         }
         Frame::Pong => (K_PONG, Vec::new()),
         Frame::ShutdownAck => (K_SHUTDOWN_ACK, Vec::new()),
+        Frame::Stats => (K_STATS, Vec::new()),
+        Frame::StatsOk { json } => {
+            let mut p = Vec::with_capacity(json.len() + 4);
+            put_lstr(&mut p, json);
+            (K_STATS_OK, p)
+        }
+        Frame::TraceDump => (K_TRACE, Vec::new()),
+        Frame::TraceDumpOk { json } => {
+            let mut p = Vec::with_capacity(json.len() + 4);
+            put_lstr(&mut p, json);
+            (K_TRACE_OK, p)
+        }
         Frame::Error(e) => {
             let mut p = Vec::new();
             match e {
@@ -376,10 +461,24 @@ fn decode_payload(kind: u8, payload: &[u8]) -> Result<Frame, DynamapError> {
         K_INFER => {
             let model = cur.str()?;
             let input = cur.tensor()?;
-            // version-2 extension: a trailing u64 deadline, when present
-            let deadline_ms =
-                if cur.pos < cur.buf.len() { Some(cur.u64()?) } else { None };
-            Frame::Infer { model, input, deadline_ms }
+            // versioned trailer, decoded by presence (see the grammar
+            // on `Frame::Infer::trace`): 0 bytes = v1, 8 = v2 deadline,
+            // 16 = v3 deadline (u64::MAX sentinel = none) + trace id
+            let (deadline_ms, trace) = match cur.buf.len() - cur.pos {
+                0 => (None, None),
+                8 => (Some(cur.u64()?), None),
+                16 => {
+                    let dl = cur.u64()?;
+                    let t = crate::obs::TraceId::from_raw(cur.u64()?);
+                    ((dl != u64::MAX).then_some(dl), Some(t))
+                }
+                n => {
+                    return Err(proto(format!(
+                        "Infer trailer of {n} bytes (want 0, 8 or 16)"
+                    )))
+                }
+            };
+            Frame::Infer { model, input, deadline_ms, trace }
         }
         K_PING => Frame::Ping,
         K_SHUTDOWN => Frame::Shutdown,
@@ -390,6 +489,10 @@ fn decode_payload(kind: u8, payload: &[u8]) -> Result<Frame, DynamapError> {
         }
         K_PONG => Frame::Pong,
         K_SHUTDOWN_ACK => Frame::ShutdownAck,
+        K_STATS => Frame::Stats,
+        K_STATS_OK => Frame::StatsOk { json: cur.lstr()? },
+        K_TRACE => Frame::TraceDump,
+        K_TRACE_OK => Frame::TraceDumpOk { json: cur.lstr()? },
         K_ERROR => {
             let code = cur.u8()?;
             let err = match code {
@@ -514,7 +617,7 @@ mod tests {
     }
 
     fn rand_frame(rng: &mut Rng) -> Frame {
-        match rng.below(10) {
+        match rng.below(12) {
             0 => Frame::Ping,
             1 => Frame::Pong,
             2 => Frame::Shutdown,
@@ -523,6 +626,11 @@ mod tests {
                 model: rand_string(rng),
                 input: rand_tensor(rng),
                 deadline_ms: if rng.bool() { Some(rng.below(100_000)) } else { None },
+                trace: if rng.bool() {
+                    Some(crate::obs::TraceId::derive(99, rng.below(1 << 30)))
+                } else {
+                    None
+                },
             },
             5 => Frame::InferOk {
                 output: rand_tensor(rng),
@@ -538,6 +646,27 @@ mod tests {
                 expected: rng.below(1 << 20),
                 got: rng.below(1 << 20),
             }),
+            9 => {
+                if rng.bool() {
+                    Frame::Stats
+                } else {
+                    Frame::TraceDump
+                }
+            }
+            10 => {
+                // document bodies round trip through the u32-prefixed
+                // string, including ones past put_str's u16 cap
+                let json = if rng.below(8) == 0 {
+                    format!("{{\"pad\": \"{}\"}}", "x".repeat(70_000))
+                } else {
+                    format!("{{\"n\": {}}}", rng.below(1 << 20))
+                };
+                if rng.bool() {
+                    Frame::StatsOk { json }
+                } else {
+                    Frame::TraceDumpOk { json }
+                }
+            }
             _ => {
                 let opts = [
                     WireError::QueueClosed { model: rand_string(rng) },
@@ -669,6 +798,7 @@ mod tests {
             model: "mini".into(),
             input: TensorBuf::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]),
             deadline_ms: None,
+            trace: None,
         };
         let mut bytes = encode_frame(&frame);
         assert_eq!(bytes[2], VERSION);
@@ -681,10 +811,51 @@ mod tests {
             model: "mini".into(),
             input: TensorBuf::new(vec![1], vec![0.5]),
             deadline_ms: Some(250),
+            trace: None,
         };
         let bytes = encode_frame(&frame);
         let back = read_frame(&mut &bytes[..]).unwrap().unwrap();
         assert_eq!(back, frame);
+    }
+
+    #[test]
+    fn v3_trailer_grammar() {
+        let infer = |deadline_ms: Option<u64>, trace: Option<crate::obs::TraceId>| Frame::Infer {
+            model: "mini".into(),
+            input: TensorBuf::new(vec![2], vec![1.0, 2.0]),
+            deadline_ms,
+            trace,
+        };
+        let base_len = encode_frame(&infer(None, None)).len();
+
+        // deadline-only bodies stay byte-identical to v2 (8-byte trailer)
+        assert_eq!(encode_frame(&infer(Some(250), None)).len(), base_len + 8);
+
+        // trace without deadline: 16-byte trailer with the MAX sentinel
+        let trace = crate::obs::TraceId::derive(99, 7);
+        let traced = infer(None, Some(trace));
+        let bytes = encode_frame(&traced);
+        assert_eq!(bytes.len(), base_len + 16);
+        assert_eq!(
+            &bytes[bytes.len() - 16..bytes.len() - 8],
+            &u64::MAX.to_le_bytes(),
+            "absent deadline rides as the u64::MAX sentinel"
+        );
+        assert_eq!(read_frame(&mut &bytes[..]).unwrap().unwrap(), traced);
+
+        // both: the deadline word carries the real value
+        let both = infer(Some(250), Some(trace));
+        let bytes = encode_frame(&both);
+        assert_eq!(bytes.len(), base_len + 16);
+        assert_eq!(read_frame(&mut &bytes[..]).unwrap().unwrap(), both);
+
+        // a malformed trailer length must be a typed protocol error
+        let mut bytes = encode_frame(&infer(None, None));
+        let new_len = (bytes.len() - 8 + 4) as u32;
+        bytes[4..8].copy_from_slice(&new_len.to_le_bytes());
+        bytes.extend_from_slice(&[0u8; 4]);
+        let e = read_frame(&mut &bytes[..]).unwrap_err();
+        assert!(e.to_string().contains("trailer"), "{e}");
     }
 
     #[test]

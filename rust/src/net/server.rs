@@ -244,7 +244,7 @@ fn connection_loop(mut stream: TcpStream, id: u64, shared: Arc<Shared>) {
                 shared.request_stop();
                 break;
             }
-            Ok(Some(Frame::Infer { model, input, deadline_ms })) => {
+            Ok(Some(Frame::Infer { model, input, deadline_ms, trace })) => {
                 // chaos hook: a stalled peer path delays service — the
                 // deadline clock below keeps ticking through it
                 fault::sleep_if(fault::Site::ConnStall);
@@ -257,7 +257,7 @@ fn connection_loop(mut stream: TcpStream, id: u64, shared: Arc<Shared>) {
                 // submit path itself), this connection answers typed
                 // and lives on
                 let reply = match catch_unwind(AssertUnwindSafe(|| {
-                    shared.registry.infer_with_deadline(&model, &input, deadline)
+                    shared.registry.infer_traced(&model, &input, deadline, trace)
                 })) {
                     Ok(Ok((output, metrics))) => {
                         Frame::InferOk { output, server_us: metrics.total_us }
@@ -285,6 +285,28 @@ fn connection_loop(mut stream: TcpStream, id: u64, shared: Arc<Shared>) {
                     continue;
                 }
                 if write_frame(&mut stream, &reply).is_err() {
+                    break;
+                }
+            }
+            Ok(Some(Frame::Stats)) => {
+                // full metrics + per-model latency-histogram snapshot,
+                // as one JSON document (`ServerMetrics::to_json`)
+                let json = shared.registry.metrics().to_json().to_string();
+                if write_frame(&mut stream, &Frame::StatsOk { json }).is_err() {
+                    break;
+                }
+            }
+            Ok(Some(Frame::TraceDump)) => {
+                // collect-then-fetch: drain whatever the process-wide
+                // recorder buffered since the last dump. No recorder
+                // installed → a valid empty trace document, not an
+                // error — `dynamap trace` against an untraced server
+                // degrades gracefully
+                let json = match crate::obs::active() {
+                    Some(rec) => crate::obs::chrome_trace(&rec.drain()).to_string(),
+                    None => crate::obs::chrome_trace(&[]).to_string(),
+                };
+                if write_frame(&mut stream, &Frame::TraceDumpOk { json }).is_err() {
                     break;
                 }
             }

@@ -1,0 +1,334 @@
+//! Fixed log-bucketed latency histograms.
+//!
+//! [`LogHistogram`] replaces the sort-over-sample-window percentile
+//! path in `serve::metrics`: recording is O(1) (one bucket increment,
+//! no allocation), snapshots are O(buckets), and two histograms merge
+//! bucket-wise so per-model views can be aggregated server-wide. The
+//! price is bounded, documented quantile error: buckets grow
+//! geometrically at `2^(1/8)` per bucket (8 buckets per octave), so a
+//! reported quantile is at most a factor `2^(1/16)` away from the true
+//! sample — a relative error of at most
+//! [`LogHistogram::MAX_RELATIVE_ERROR`] ≈ 4.4%.
+//!
+//! The value domain is microseconds (the unit every latency path in the
+//! crate already uses): 256 buckets × 8 per octave cover `[1 µs, 2³² µs)`
+//! ≈ 71 minutes; values below 1 µs clamp into the first bucket and
+//! values past the top clamp into the last, so `record` is total.
+
+use crate::util::json::Json;
+
+/// Number of buckets per octave (factor-of-two span of the domain).
+const PER_OCTAVE: u32 = 8;
+
+/// Total bucket count: 32 octaves × 8 = `[2⁰, 2³²)` microseconds.
+const BUCKETS: usize = 256;
+
+/// A fixed-size log-bucketed histogram over microsecond samples.
+///
+/// O(1) [`record`](LogHistogram::record), O(buckets) quantiles,
+/// bucket-wise [`merge`](LogHistogram::merge); exact `count`/`sum`/
+/// `min`/`max` are tracked alongside the buckets so the mean and the
+/// extremes carry no bucketing error at all.
+#[derive(Clone, Debug)]
+pub struct LogHistogram {
+    counts: [u64; BUCKETS],
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> LogHistogram {
+        LogHistogram::new()
+    }
+}
+
+impl LogHistogram {
+    /// Worst-case relative error of any reported quantile versus the
+    /// exact sorted-sample quantile: half a bucket in log space,
+    /// `2^(1/16) − 1` ≈ 0.0443.
+    pub const MAX_RELATIVE_ERROR: f64 = 0.044_3;
+
+    /// An empty histogram.
+    pub fn new() -> LogHistogram {
+        LogHistogram {
+            counts: [0; BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Bucket index for a microsecond value: `floor(8·log2(v))`,
+    /// clamped into `[0, BUCKETS)`. Values ≤ 1 µs (and non-finite or
+    /// negative garbage) land in bucket 0.
+    fn bucket(v: f64) -> usize {
+        if !v.is_finite() || v <= 1.0 {
+            return 0;
+        }
+        let idx = (v.log2() * PER_OCTAVE as f64).floor();
+        if idx < 0.0 {
+            0
+        } else {
+            (idx as usize).min(BUCKETS - 1)
+        }
+    }
+
+    /// Geometric midpoint of bucket `i` — the value reported for any
+    /// sample that landed there: `2^((i + 0.5) / 8)` µs.
+    fn representative(i: usize) -> f64 {
+        ((i as f64 + 0.5) / PER_OCTAVE as f64).exp2()
+    }
+
+    /// Record one sample (microseconds). O(1), allocation-free.
+    pub fn record(&mut self, us: f64) {
+        self.counts[Self::bucket(us)] += 1;
+        self.count += 1;
+        if us.is_finite() {
+            self.sum += us;
+            self.min = self.min.min(us);
+            self.max = self.max.max(us);
+        }
+    }
+
+    /// Total samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact mean of all recorded samples; `0.0` when empty.
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Exact smallest recorded sample; `0.0` when empty.
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Exact largest recorded sample; `0.0` when empty.
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Nearest-rank quantile under the same convention as
+    /// `coordinator::metrics::LatencyStats`: `p` in `[0, 100]` maps to
+    /// rank `round(p/100 · (n−1))` in the (implicitly sorted) sample
+    /// set, resolved to the containing bucket's geometric midpoint and
+    /// clamped into `[min, max]` so degenerate distributions (one
+    /// bucket, one sample) report exactly. Empty histograms yield
+    /// `0.0`; `p` outside `[0, 100]` clamps to min/max.
+    pub fn quantile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((p.clamp(0.0, 100.0) / 100.0) * (self.count - 1) as f64).round() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen > rank {
+                return Self::representative(i).clamp(self.min, self.max);
+            }
+        }
+        self.max()
+    }
+
+    /// Several quantiles in one pass-per-quantile; mirrors
+    /// `LatencyStats::percentiles`.
+    pub fn percentiles(&self, ps: &[f64]) -> Vec<f64> {
+        ps.iter().map(|&p| self.quantile(p)).collect()
+    }
+
+    /// Fold `other` into `self` bucket-wise. Merging preserves every
+    /// quantile's error bound because both sides share the same fixed
+    /// bucket boundaries.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        if other.count > 0 {
+            self.min = self.min.min(other.min);
+            self.max = self.max.max(other.max);
+        }
+    }
+
+    /// Serialize for the wire `Stats` frame: exact summary fields plus
+    /// the sparse non-zero buckets as `[index, count]` pairs.
+    pub fn to_json(&self) -> Json {
+        let buckets = self
+            .counts
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| **c > 0)
+            .map(|(i, c)| Json::arr(vec![Json::Num(i as f64), Json::Num(*c as f64)]))
+            .collect::<Vec<_>>();
+        Json::obj(vec![
+            ("count", Json::Num(self.count as f64)),
+            ("sum", Json::Num(self.sum)),
+            ("min", Json::Num(self.min())),
+            ("max", Json::Num(self.max())),
+            ("buckets", Json::Arr(buckets)),
+        ])
+    }
+
+    /// Rebuild from [`LogHistogram::to_json`] output. Returns `None` on
+    /// a malformed value (missing fields, out-of-range bucket index).
+    pub fn from_json(v: &Json) -> Option<LogHistogram> {
+        let mut h = LogHistogram::new();
+        h.count = v.get("count").as_u64()?;
+        h.sum = v.get("sum").as_f64()?;
+        if h.count > 0 {
+            h.min = v.get("min").as_f64()?;
+            h.max = v.get("max").as_f64()?;
+        }
+        for pair in v.get("buckets").as_arr()? {
+            let i = pair.at(0).as_usize()?;
+            let c = pair.at(1).as_u64()?;
+            if i >= BUCKETS {
+                return None;
+            }
+            h.counts[i] = c;
+        }
+        Some(h)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn empty_is_total() {
+        let h = LogHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+        assert_eq!(h.quantile(50.0), 0.0);
+    }
+
+    #[test]
+    fn single_sample_is_every_quantile() {
+        let mut h = LogHistogram::new();
+        h.record(42.0);
+        for p in [0.0, 25.0, 50.0, 99.9, 100.0] {
+            assert_eq!(h.quantile(p), 42.0, "p={p} clamps to the exact sample");
+        }
+        assert_eq!(h.mean(), 42.0);
+    }
+
+    #[test]
+    fn clamps_below_and_above_domain() {
+        let mut h = LogHistogram::new();
+        h.record(0.0);
+        h.record(-5.0);
+        h.record(1e40);
+        assert_eq!(h.count(), 3);
+        // quantiles stay inside [min, max] even for clamped samples
+        assert!(h.quantile(0.0) >= -5.0 && h.quantile(100.0) <= 1e40);
+    }
+
+    #[test]
+    fn quantiles_within_documented_error_of_exact_sort() {
+        // seed-99 log-uniform samples spanning ~5 decades: the shape
+        // that stresses geometric bucketing hardest
+        let mut rng = Rng::new(99);
+        let mut h = LogHistogram::new();
+        let mut samples = Vec::new();
+        for _ in 0..50_000 {
+            let v = 10f64.powf(rng.f64() * 5.0); // 1 µs .. 100 ms
+            samples.push(v);
+            h.record(v);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for p in [1.0, 10.0, 50.0, 90.0, 95.0, 99.0, 99.9] {
+            let rank = ((p / 100.0) * (samples.len() - 1) as f64).round() as usize;
+            let exact = samples[rank];
+            let approx = h.quantile(p);
+            let rel = (approx - exact).abs() / exact;
+            assert!(
+                rel <= LogHistogram::MAX_RELATIVE_ERROR,
+                "p{p}: histogram {approx} vs exact {exact} — relative error \
+                 {rel:.4} exceeds the documented bound"
+            );
+        }
+    }
+
+    #[test]
+    fn merge_equals_recording_into_one() {
+        let mut rng = Rng::new(7);
+        let (mut a, mut b, mut whole) =
+            (LogHistogram::new(), LogHistogram::new(), LogHistogram::new());
+        for i in 0..2_000 {
+            let v = 1.0 + rng.f64() * 10_000.0;
+            whole.record(v);
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert_eq!(a.min(), whole.min());
+        assert_eq!(a.max(), whole.max());
+        for p in [50.0, 95.0, 99.0] {
+            assert_eq!(a.quantile(p), whole.quantile(p), "p={p}");
+        }
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let mut rng = Rng::new(3);
+        let mut h = LogHistogram::new();
+        for _ in 0..500 {
+            h.record(1.0 + rng.f64() * 1e6);
+        }
+        let back = LogHistogram::from_json(&h.to_json()).expect("round trip");
+        assert_eq!(back.count(), h.count());
+        assert_eq!(back.min(), h.min());
+        assert_eq!(back.max(), h.max());
+        for p in [50.0, 99.0, 99.9] {
+            assert_eq!(back.quantile(p), h.quantile(p), "p={p}");
+        }
+        // malformed inputs are rejected, not misread
+        assert!(LogHistogram::from_json(&Json::Null).is_none());
+        assert!(
+            LogHistogram::from_json(&Json::parse(r#"{"count":1,"sum":2.0,"min":2.0,"max":2.0,"buckets":[[999,1]]}"#).unwrap())
+                .is_none(),
+            "out-of-range bucket index must be rejected"
+        );
+    }
+
+    #[test]
+    fn quantiles_are_monotone() {
+        let mut rng = Rng::new(11);
+        let mut h = LogHistogram::new();
+        for _ in 0..10_000 {
+            h.record(1.0 + rng.f64() * 1e5);
+        }
+        let ps = h.percentiles(&[0.0, 10.0, 50.0, 90.0, 99.0, 99.9, 100.0]);
+        for w in ps.windows(2) {
+            assert!(w[0] <= w[1], "quantiles must be monotone: {ps:?}");
+        }
+        assert_eq!(ps[0], h.min());
+        assert_eq!(*ps.last().unwrap(), h.max());
+    }
+}

@@ -1,0 +1,492 @@
+//! Structured request tracing + histogram metrics export.
+//!
+//! DYNAMAP's thesis is that per-layer strategy choice (algorithm ×
+//! precision × kernel) drives end-to-end latency — but aggregate
+//! percentiles cannot say where *one* slow request spent its time.
+//! This module closes that gap with evidence-grade spans threaded
+//! through the whole request path:
+//!
+//! - **admission** — shape/deadline validation + admission-permit claim
+//!   in [`crate::serve::ModelHost`];
+//! - **queue** — enqueue → dequeue wait inside
+//!   [`crate::serve::BatchQueue`];
+//! - **flush** — one span per batch flush (tagged with batch size);
+//! - **layer** — one span per conv/FC layer executed by
+//!   [`crate::api::session::NativeState`], tagged with the layer name
+//!   and the *live* plan's (algo, precision, kernel) choice;
+//! - **measure** — microkernel timing runs in
+//!   [`crate::kernels::KernelSelector::measure`].
+//!
+//! Requests are correlated by a [`TraceId`] — seeded and deterministic
+//! under `loadgen` ([`TraceId::derive`]) — carried on the wire as the
+//! optional protocol-v3 trailer (`net::protocol`). Spans land in a
+//! bounded ring buffer ([`Recorder`]) and export as Chrome trace-event
+//! JSON ([`chrome_trace`]), loadable in Perfetto / `chrome://tracing`.
+//!
+//! Design constraints, shared with [`crate::fault`]:
+//!
+//! - **Default-off and near-zero-cost when off.** Every instrumentation
+//!   point compiles down to one relaxed atomic load
+//!   ([`is_active`]) when no recorder is installed; tags are only
+//!   materialized after that check passes. The serving bench prints the
+//!   measured disabled-path overhead and `DYNAMAP_BENCH_ASSERT=1`
+//!   gates it below 1%.
+//! - **Bounded.** The ring holds at most its capacity; overflow drops
+//!   the *oldest* span and bumps a counter — recording never blocks and
+//!   never allocates beyond the span being stored.
+//! - **Deterministic.** `TraceId::derive(seed, i)` is a pure SplitMix64
+//!   mix, so a seeded loadgen run produces the same trace ids every
+//!   time.
+//!
+//! The histogram half lives in [`hist`]: fixed log-bucketed
+//! [`LogHistogram`] with O(1) record and a documented ≤ 4.4% quantile
+//! error, replacing the sort-over-sample-window percentile path in
+//! `serve::metrics`.
+
+#![warn(missing_docs)]
+#![deny(clippy::correctness, clippy::suspicious)]
+
+pub mod hist;
+
+pub use hist::LogHistogram;
+
+use std::collections::BTreeMap;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Default ring capacity: enough for ~10k requests of a 6-layer model
+/// without eviction, small enough (~100 B/span) to stay cheap.
+pub const DEFAULT_CAPACITY: usize = 65_536;
+
+/// Per-request trace correlation id, propagated over the wire as the
+/// protocol-v3 trailer and stamped on every span the request produces.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TraceId(u64);
+
+impl TraceId {
+    /// Wrap a raw wire value.
+    pub fn from_raw(raw: u64) -> TraceId {
+        TraceId(raw)
+    }
+
+    /// The raw wire value.
+    pub fn raw(self) -> u64 {
+        self.0
+    }
+
+    /// Deterministically derive the id for request `index` of a seeded
+    /// run: one SplitMix64 finalization of `seed ^ (index+1)·φ64` (the
+    /// same mixer `fault::Injector` and `util::rng` use), remapped away
+    /// from 0 so a derived id is never the all-zeroes value.
+    pub fn derive(seed: u64, index: u64) -> TraceId {
+        let z = splitmix64(seed ^ index.wrapping_add(1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        TraceId(if z == 0 { 1 } else { z })
+    }
+}
+
+impl std::fmt::Display for TraceId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:016x}", self.0)
+    }
+}
+
+/// SplitMix64 finalizer (same constants as `fault::splitmix64`).
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Span taxonomy — where in the request path a span was recorded. The
+/// stage doubles as the Chrome trace-event category (`cat`), so
+/// Perfetto can filter per stage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Stage {
+    /// Shape/deadline validation + admission-permit claim
+    /// (`serve::registry::ModelHost`).
+    Admission,
+    /// Enqueue → dequeue wait in the batch queue (`serve::queue`).
+    Queue,
+    /// One batch flush: dequeue of the batch through the last reply
+    /// (`serve::queue`).
+    Flush,
+    /// One conv/FC layer executed under the live plan
+    /// (`api::session::NativeState`).
+    Layer,
+    /// One microkernel timing run (`kernels::KernelSelector::measure`).
+    Measure,
+}
+
+impl Stage {
+    /// Stable lowercase name, used as the Chrome trace `cat` field.
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Admission => "admission",
+            Stage::Queue => "queue",
+            Stage::Flush => "flush",
+            Stage::Layer => "layer",
+            Stage::Measure => "measure",
+        }
+    }
+}
+
+/// One completed span: a named interval at a [`Stage`], optionally
+/// correlated to a request [`TraceId`], with free-form tags (the layer
+/// spans carry `algo` / `precision` / `kernel` from the live plan).
+#[derive(Clone, Debug)]
+pub struct SpanRecord {
+    /// Correlated request, `None` for request-independent spans
+    /// (microkernel measurement).
+    pub trace: Option<TraceId>,
+    /// Where in the request path the span was recorded.
+    pub stage: Stage,
+    /// Human-readable span name (layer name, model name, kernel name).
+    pub name: String,
+    /// Start, microseconds since the recorder's epoch.
+    pub start_us: u64,
+    /// Duration in microseconds.
+    pub dur_us: u64,
+    /// Key/value tags; keys are static so tagging never allocates for
+    /// the key side.
+    pub tags: Vec<(&'static str, String)>,
+}
+
+/// Bounded lock-cheap span sink.
+///
+/// One mutex-protected ring of [`SpanRecord`]s: `record_span` is a
+/// short push under the lock (poison-tolerant, like every lock in the
+/// serving stack); overflow pops the oldest span and bumps
+/// [`Recorder::dropped`] instead of blocking or growing. All span
+/// timestamps are measured against the recorder's construction instant
+/// so exported traces start near `ts = 0`.
+#[derive(Debug)]
+pub struct Recorder {
+    epoch: Instant,
+    capacity: usize,
+    spans: Mutex<VecDeque<SpanRecord>>,
+    dropped: AtomicU64,
+}
+
+impl Recorder {
+    /// A recorder holding at most `capacity` spans (clamped to ≥ 1).
+    pub fn new(capacity: usize) -> Recorder {
+        Recorder {
+            epoch: Instant::now(),
+            capacity: capacity.max(1),
+            spans: Mutex::new(VecDeque::new()),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// A recorder with [`DEFAULT_CAPACITY`].
+    pub fn with_default_capacity() -> Recorder {
+        Recorder::new(DEFAULT_CAPACITY)
+    }
+
+    /// Microseconds from the recorder's epoch to `t` (0 for instants
+    /// before the epoch).
+    fn us_since_epoch(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.epoch).as_micros() as u64
+    }
+
+    /// Record a completed `[start, end]` interval. Never blocks beyond
+    /// the short ring lock; on a full ring the oldest span is dropped.
+    pub fn record_span(
+        &self,
+        trace: Option<TraceId>,
+        stage: Stage,
+        name: &str,
+        start: Instant,
+        end: Instant,
+        tags: Vec<(&'static str, String)>,
+    ) {
+        let start_us = self.us_since_epoch(start);
+        let end_us = self.us_since_epoch(end);
+        let record = SpanRecord {
+            trace,
+            stage,
+            name: name.to_string(),
+            start_us,
+            dur_us: end_us.saturating_sub(start_us),
+            tags,
+        };
+        let mut spans = self.spans.lock().unwrap_or_else(|p| p.into_inner());
+        if spans.len() >= self.capacity {
+            spans.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        spans.push_back(record);
+    }
+
+    /// Copy out the current ring contents, oldest first.
+    pub fn snapshot(&self) -> Vec<SpanRecord> {
+        self.spans
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .iter()
+            .cloned()
+            .collect()
+    }
+
+    /// Move out the current ring contents, oldest first, leaving the
+    /// ring empty (the `TraceDump` wire frame's collect-then-fetch
+    /// semantics: each dump returns the spans recorded since the last).
+    pub fn drain(&self) -> Vec<SpanRecord> {
+        self.spans
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .drain(..)
+            .collect()
+    }
+
+    /// Spans currently buffered.
+    pub fn len(&self) -> usize {
+        self.spans.lock().unwrap_or_else(|p| p.into_inner()).len()
+    }
+
+    /// `true` when no spans are buffered.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Maximum spans the ring holds before dropping the oldest.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// How many spans overflow has discarded since construction.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
+
+/// Render spans as a Chrome trace-event JSON document (the
+/// `{"traceEvents": [...]}` format Perfetto and `chrome://tracing`
+/// load). Each span becomes one complete event (`ph: "X"`, timestamps
+/// already in microseconds); events of the same request share a `tid`
+/// (a compact per-trace index — the full id is in `args.trace`), so
+/// Perfetto lays each request out on its own track. Untraced spans
+/// (microkernel measurement) share track 0.
+pub fn chrome_trace(spans: &[SpanRecord]) -> Json {
+    let mut tids: BTreeMap<u64, usize> = BTreeMap::new();
+    for s in spans {
+        if let Some(t) = s.trace {
+            let next = tids.len() + 1;
+            tids.entry(t.raw()).or_insert(next);
+        }
+    }
+    let events = spans
+        .iter()
+        .map(|s| {
+            let mut args = vec![];
+            if let Some(t) = s.trace {
+                args.push(("trace", Json::str(t.to_string())));
+            }
+            for (k, v) in &s.tags {
+                args.push((*k, Json::str(v.clone())));
+            }
+            let tid = s.trace.map(|t| tids[&t.raw()]).unwrap_or(0);
+            Json::obj(vec![
+                ("name", Json::str(s.name.clone())),
+                ("cat", Json::str(s.stage.name())),
+                ("ph", Json::str("X")),
+                ("ts", Json::Num(s.start_us as f64)),
+                ("dur", Json::Num(s.dur_us as f64)),
+                ("pid", Json::Num(1.0)),
+                ("tid", Json::Num(tid as f64)),
+                ("args", Json::obj(args)),
+            ])
+        })
+        .collect::<Vec<_>>();
+    Json::obj(vec![("traceEvents", Json::Arr(events))])
+}
+
+/// Fast path: is *any* recorder installed? One relaxed load.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static ACTIVE: RwLock<Option<Arc<Recorder>>> = RwLock::new(None);
+
+/// Install `recorder` process-wide, replacing any previous one. Every
+/// instrumentation point starts recording into it.
+pub fn install(recorder: Arc<Recorder>) {
+    *ACTIVE.write().expect("obs registry lock") = Some(recorder);
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Remove the installed recorder; every instrumentation point returns
+/// to the one-relaxed-load no-op.
+pub fn clear() {
+    ENABLED.store(false, Ordering::SeqCst);
+    *ACTIVE.write().expect("obs registry lock") = None;
+}
+
+/// Whether a recorder is currently installed — the check every
+/// instrumentation point performs *before* materializing tags or
+/// timestamps, so the disabled path costs one relaxed atomic load.
+pub fn is_active() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// The installed recorder, if any. Instrumentation points call this
+/// once and only build span tags when it returns `Some`.
+pub fn active() -> Option<Arc<Recorder>> {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return None;
+    }
+    ACTIVE.read().expect("obs registry lock").clone()
+}
+
+/// Install a recorder from the environment: `DYNAMAP_TRACE=1` turns
+/// tracing on (any other value leaves it off), `DYNAMAP_TRACE_CAP`
+/// overrides the ring capacity. Returns whether a recorder was
+/// installed. Wired in `main.rs` next to the `DYNAMAP_FAULTS` hook.
+pub fn install_from_env() -> bool {
+    match std::env::var("DYNAMAP_TRACE") {
+        Ok(v) if v == "1" => {}
+        _ => return false,
+    }
+    let cap = std::env::var("DYNAMAP_TRACE_CAP")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(DEFAULT_CAPACITY);
+    install(Arc::new(Recorder::new(cap)));
+    true
+}
+
+/// RAII installer for tests: installs a fresh recorder on construction,
+/// clears on drop — including the unwind path, so a failing trace test
+/// cannot leak its recorder into the next one.
+pub struct ObsGuard {
+    recorder: Arc<Recorder>,
+}
+
+impl ObsGuard {
+    /// Install a fresh recorder of `capacity` and hold it active.
+    pub fn install(capacity: usize) -> ObsGuard {
+        let recorder = Arc::new(Recorder::new(capacity));
+        install(recorder.clone());
+        ObsGuard { recorder }
+    }
+
+    /// The recorder this guard installed.
+    pub fn recorder(&self) -> &Arc<Recorder> {
+        &self.recorder
+    }
+}
+
+impl Drop for ObsGuard {
+    fn drop(&mut self) {
+        clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn trace_ids_are_deterministic_and_nonzero() {
+        for i in 0..10_000u64 {
+            let a = TraceId::derive(99, i);
+            let b = TraceId::derive(99, i);
+            assert_eq!(a, b, "same (seed, index) must give the same id");
+            assert_ne!(a.raw(), 0, "derived ids are never zero");
+        }
+        assert_ne!(TraceId::derive(99, 0), TraceId::derive(99, 1));
+        assert_ne!(TraceId::derive(99, 0), TraceId::derive(100, 0));
+        assert_eq!(TraceId::from_raw(7).raw(), 7);
+    }
+
+    #[test]
+    fn ring_overflow_drops_oldest_without_blocking() {
+        let rec = Recorder::new(4);
+        let t0 = rec.epoch;
+        for i in 0..10u64 {
+            rec.record_span(
+                Some(TraceId::from_raw(i + 1)),
+                Stage::Layer,
+                &format!("span{i}"),
+                t0 + Duration::from_micros(i),
+                t0 + Duration::from_micros(i + 1),
+                vec![],
+            );
+        }
+        assert_eq!(rec.len(), 4, "ring stays at capacity");
+        assert_eq!(rec.dropped(), 6, "overflow drops are counted");
+        let spans = rec.snapshot();
+        // the oldest were evicted: only the last 4 remain, in order
+        let names: Vec<&str> = spans.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, ["span6", "span7", "span8", "span9"]);
+    }
+
+    #[test]
+    fn drain_empties_the_ring() {
+        let rec = Recorder::new(16);
+        let t0 = rec.epoch;
+        rec.record_span(None, Stage::Measure, "k", t0, t0 + Duration::from_micros(5), vec![]);
+        assert_eq!(rec.len(), 1);
+        let spans = rec.drain();
+        assert_eq!(spans.len(), 1);
+        assert!(rec.is_empty(), "drain leaves the ring empty");
+        assert_eq!(spans[0].dur_us, 5);
+    }
+
+    #[test]
+    fn chrome_export_is_perfetto_shaped() {
+        let rec = Recorder::new(16);
+        let t0 = rec.epoch;
+        rec.record_span(
+            Some(TraceId::derive(99, 0)),
+            Stage::Layer,
+            "conv1",
+            t0 + Duration::from_micros(10),
+            t0 + Duration::from_micros(30),
+            vec![
+                ("algo", "im2col".to_string()),
+                ("precision", "f32".to_string()),
+                ("kernel", "avx2-4x16".to_string()),
+            ],
+        );
+        rec.record_span(None, Stage::Measure, "scalar-4x8", t0, t0 + Duration::from_micros(2), vec![]);
+        let json = chrome_trace(&rec.snapshot());
+        // must survive a parse round trip (what the CI smoke validates)
+        let back = Json::parse(&json.to_string()).expect("exported trace parses");
+        let events = back.get("traceEvents").as_arr().expect("traceEvents array");
+        assert_eq!(events.len(), 2);
+        let layer = &events[0];
+        assert_eq!(layer.get("name").as_str(), Some("conv1"));
+        assert_eq!(layer.get("cat").as_str(), Some("layer"));
+        assert_eq!(layer.get("ph").as_str(), Some("X"));
+        assert_eq!(layer.get("ts").as_u64(), Some(10));
+        assert_eq!(layer.get("dur").as_u64(), Some(20));
+        assert_eq!(layer.get("args").get("algo").as_str(), Some("im2col"));
+        assert_eq!(layer.get("args").get("precision").as_str(), Some("f32"));
+        assert_eq!(layer.get("args").get("kernel").as_str(), Some("avx2-4x16"));
+        assert_eq!(
+            layer.get("args").get("trace").as_str(),
+            Some(TraceId::derive(99, 0).to_string().as_str())
+        );
+        // untraced spans land on track 0, traced spans on 1..
+        assert_eq!(events[1].get("tid").as_u64(), Some(0));
+        assert_eq!(layer.get("tid").as_u64(), Some(1));
+    }
+
+    #[test]
+    fn guard_installs_and_clears() {
+        assert!(!is_active());
+        {
+            let g = ObsGuard::install(64);
+            assert!(is_active());
+            let t = Instant::now();
+            g.recorder().record_span(None, Stage::Flush, "f", t, t, vec![]);
+            assert_eq!(active().expect("installed").len(), 1);
+        }
+        assert!(!is_active());
+        assert!(active().is_none());
+    }
+}

@@ -16,6 +16,11 @@
 //! in process (`--rate <qps>`), or open-loop over TCP against a
 //! running server (`--connect <addr> --rate <qps>`, with `--shutdown`
 //! draining the server afterwards).
+//!
+//! Two observability subcommands scrape a running server over the same
+//! protocol: `trace --connect <addr>` drains its span ring as Chrome
+//! trace-event JSON ([`crate::obs`]) and `stats --connect <addr>`
+//! fetches the live metrics + latency-histogram snapshot.
 
 use std::io::BufRead;
 use std::sync::Arc;
@@ -37,12 +42,16 @@ use super::registry::{ModelRegistry, RegistryConfig};
 
 /// Shared flags → [`RegistryConfig`] (`--root`, `--plan-cache`,
 /// `--cap`, `--max-batch`, `--max-wait-ms`, `--max-inflight`,
-/// `--seed`, `--no-synth`, `--quant`). `--max-inflight` bounds each
-/// model's admitted-but-unreplied requests; excess is shed with the
-/// retriable `Overloaded` error (0 = unbounded, the default).
+/// `--seed`, `--no-synth`, `--quant`, `--measure`). `--max-inflight`
+/// bounds each model's admitted-but-unreplied requests; excess is shed
+/// with the retriable `Overloaded` error (0 = unbounded, the default).
 /// `--quant` compiles every hosted model with precision
 /// search on, so the DSE may serve layers int8 (quantized plans key
 /// their own plan-cache entries and `tune` re-solves keep the flag).
+/// `--measure` times the host's microkernel tiers once at startup
+/// ([`Compiler::measure_microkernels`]) so plans are priced from this
+/// machine's measured GEMM throughput (measured tables key their own
+/// plan-cache entries too).
 /// Profiling stays off here; only `serve` (the command that can run
 /// the tune loop) opts in — `loadgen` must not silently add profiler
 /// overhead to the hot path it exists to measure.
@@ -66,7 +75,14 @@ fn registry_config(args: &Args, models: usize) -> RegistryConfig {
             max_wait: Duration::from_secs_f64(args.get_f64("max-wait-ms", 2.0).max(0.0) / 1e3),
         },
         max_inflight: args.get_usize("max-inflight", 0),
-        compiler: Compiler::new().precision_search(args.has("quant")),
+        compiler: {
+            let compiler = Compiler::new().precision_search(args.has("quant"));
+            if args.has("measure") {
+                compiler.measure_microkernels()
+            } else {
+                compiler
+            }
+        },
         ..RegistryConfig::default()
     }
 }
@@ -88,9 +104,19 @@ fn model_list(args: &Args, default: &str) -> Vec<String> {
 /// commands until EOF/`quit`. `--tune` (or `DYNAMAP_TUNE=1` in the
 /// environment) profiles the serving path and runs the background
 /// calibrate → remap → hot-swap loop (cadence knobs via
-/// `DYNAMAP_TUNE_*` env vars).
+/// `DYNAMAP_TUNE_*` env vars). `--trace` (or `DYNAMAP_TRACE=1`)
+/// installs the process-wide span recorder ([`crate::obs`]): every
+/// request's admission/queue/flush/layer spans buffer in-process, and
+/// `dynamap trace --connect <addr>` drains them as Chrome trace JSON.
 pub fn serve(args: &Args) -> i32 {
     let models = model_list(args, "mini");
+    if args.has("trace") && !crate::obs::is_active() {
+        crate::obs::install(Arc::new(crate::obs::Recorder::with_default_capacity()));
+        println!(
+            "tracing enabled: spans buffer in-process \
+             (drain with `dynamap trace --connect <addr> --out trace.json`)"
+        );
+    }
     // either opt-in enables the adaptation loop
     let tune_on = args.has("tune") || TuneConfig::from_env().is_some();
     let mut config = registry_config(args, models.len());
@@ -361,6 +387,13 @@ fn infer_burst(
 /// exponential backoff); `--hedge` enables a hedged second attempt
 /// once a request outlives the client's latency EWMA. The latter two
 /// apply only with `--connect` — they are client policy.
+///
+/// `--trace` stamps every open-loop request with a deterministic
+/// [`crate::obs::TraceId`] derived from `--seed`. In process the span
+/// recorder is installed for the run and the Chrome trace JSON is
+/// written to `--trace-out FILE` (or summarized to stdout); over TCP
+/// the ids ride the protocol-v3 trailer and the spans buffer in the
+/// server — drain them with `dynamap trace --connect ADDR`.
 pub fn loadgen(args: &Args) -> i32 {
     if args.has("connect") || args.get("connect").is_some() || args.get("rate").is_some() {
         return loadgen_open(args);
@@ -432,6 +465,7 @@ fn loadgen_open(args: &Args) -> i32 {
         deadline: args
             .get("deadline-ms")
             .map(|_| Duration::from_millis(args.get_usize("deadline-ms", 250) as u64)),
+        trace: args.has("trace"),
     };
     if models.len() > 1 {
         eprintln!(
@@ -475,6 +509,12 @@ fn loadgen_open(args: &Args) -> i32 {
                     stats.retries, stats.hedges_won, stats.budget_remaining
                 );
             }
+            if cfg.trace {
+                println!(
+                    "trace ids sent on the wire — drain spans with \
+                     `dynamap trace --connect {addr} --out trace.json`"
+                );
+            }
             if args.has("shutdown") {
                 match client.shutdown_server() {
                     Ok(()) => println!("server drain requested"),
@@ -488,12 +528,39 @@ fn loadgen_open(args: &Args) -> i32 {
                 eprintln!("--connect needs an address (e.g. --connect 127.0.0.1:4071)");
                 return 1;
             }
+            // RAII so a panicking run still uninstalls the recorder;
+            // skipped when one is already live (e.g. DYNAMAP_TRACE=1)
+            // so we don't tear down an ambient recorder on exit.
+            let _guard = (cfg.trace && !crate::obs::is_active())
+                .then(|| crate::obs::ObsGuard::install(crate::obs::DEFAULT_CAPACITY));
             let registry = ModelRegistry::new(registry_config(args, 1));
             let report = run(&registry);
             if report.is_ok() {
                 println!("{}", registry.metrics().report());
             }
             registry.shutdown();
+            if cfg.trace {
+                if let Some(rec) = crate::obs::active() {
+                    let spans = rec.drain();
+                    let json = crate::obs::chrome_trace(&spans).to_string();
+                    match args.get("trace-out") {
+                        Some(path) => match std::fs::write(path, &json) {
+                            Ok(()) => println!(
+                                "wrote {path} ({} span events) — load in Perfetto or \
+                                 chrome://tracing",
+                                spans.len()
+                            ),
+                            Err(e) => eprintln!("error writing {path}: {e}"),
+                        },
+                        None => println!(
+                            "captured {} span events ({} dropped) — rerun with \
+                             --trace-out FILE to export Chrome trace JSON",
+                            spans.len(),
+                            rec.dropped()
+                        ),
+                    }
+                }
+            }
             report
         }
     };
@@ -504,6 +571,88 @@ fn loadgen_open(args: &Args) -> i32 {
         }
         Err(e) => {
             eprintln!("open-loop loadgen failed: {e}");
+            1
+        }
+    }
+}
+
+/// `dynamap trace --connect ADDR [--out FILE]` — drain a running
+/// server's span ring ([`crate::obs`]) as Chrome trace-event JSON.
+/// The dump is destructive (the server's ring is emptied) so repeated
+/// invocations see disjoint windows of activity. With `--out` the JSON
+/// is written to a file Perfetto / `chrome://tracing` can load
+/// directly; without it the JSON goes to stdout for piping.
+pub fn trace(args: &Args) -> i32 {
+    let Some(addr) = args.get("connect") else {
+        eprintln!("trace needs --connect <addr> (a running `serve --listen` server)");
+        return 1;
+    };
+    let client = match Client::connect(addr) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("connect failed: {e}");
+            return 1;
+        }
+    };
+    let json = match client.dump_trace() {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!("trace dump failed: {e}");
+            return 1;
+        }
+    };
+    let events = crate::util::json::Json::parse(&json)
+        .ok()
+        .and_then(|doc| doc.get("traceEvents").as_arr().map(<[_]>::len))
+        .unwrap_or(0);
+    match args.get("out") {
+        Some(path) => match std::fs::write(path, &json) {
+            Ok(()) => {
+                println!(
+                    "wrote {path} ({events} span events) — load in Perfetto or chrome://tracing"
+                );
+                0
+            }
+            Err(e) => {
+                eprintln!("error writing {path}: {e}");
+                1
+            }
+        },
+        None => {
+            println!("{json}");
+            0
+        }
+    }
+}
+
+/// `dynamap stats --connect ADDR` — fetch a running server's metrics
+/// snapshot (per-model counters plus the mergeable latency histogram,
+/// [`crate::serve::ServerMetrics::to_json`]) and pretty-print it. The
+/// scrape is read-only: unlike `trace` it leaves server state intact,
+/// so it is safe for dashboards to poll.
+pub fn stats(args: &Args) -> i32 {
+    let Some(addr) = args.get("connect") else {
+        eprintln!("stats needs --connect <addr> (a running `serve --listen` server)");
+        return 1;
+    };
+    let client = match Client::connect(addr) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("connect failed: {e}");
+            return 1;
+        }
+    };
+    match client.server_stats() {
+        Ok(json) => {
+            match crate::util::json::Json::parse(&json) {
+                Ok(doc) => println!("{}", doc.pretty()),
+                // still useful raw if the server speaks a newer schema
+                Err(_) => println!("{json}"),
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("stats fetch failed: {e}");
             1
         }
     }

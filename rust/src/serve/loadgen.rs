@@ -162,6 +162,23 @@ pub trait InferTarget: Sync {
         let _ = deadline;
         self.infer_once(model, input)
     }
+
+    /// [`InferTarget::infer_deadline`] carrying the request's
+    /// span-correlation id ([`crate::obs::TraceId`]). Targets without
+    /// tracing support drop the id (the default), which keeps
+    /// third-party stubs source-compatible; the registry threads it
+    /// into its spans and the TCP client puts it on the wire as the
+    /// protocol-v3 trailer.
+    fn infer_traced(
+        &self,
+        model: &str,
+        input: &TensorBuf,
+        deadline: Option<Duration>,
+        trace: Option<crate::obs::TraceId>,
+    ) -> Result<TensorBuf, DynamapError> {
+        let _ = trace;
+        self.infer_deadline(model, input, deadline)
+    }
 }
 
 impl InferTarget for ModelRegistry {
@@ -177,6 +194,17 @@ impl InferTarget for ModelRegistry {
     ) -> Result<TensorBuf, DynamapError> {
         let absolute = deadline.map(|d| Instant::now() + d);
         self.infer_with_deadline(model, input, absolute).map(|(out, _)| out)
+    }
+
+    fn infer_traced(
+        &self,
+        model: &str,
+        input: &TensorBuf,
+        deadline: Option<Duration>,
+        trace: Option<crate::obs::TraceId>,
+    ) -> Result<TensorBuf, DynamapError> {
+        let absolute = deadline.map(|d| Instant::now() + d);
+        ModelRegistry::infer_traced(self, model, input, absolute, trace).map(|(out, _)| out)
     }
 }
 
@@ -231,6 +259,12 @@ pub struct OpenLoopConfig {
     /// sheds expired requests with [`DynamapError::DeadlineExceeded`],
     /// accounted separately from errors in the report.
     pub deadline: Option<Duration>,
+    /// Stamp request `i` with the deterministic
+    /// [`crate::obs::TraceId::derive`]`(seed, i)` so its spans (local
+    /// or server-side via the protocol-v3 trailer) are correlated and
+    /// reproducible. Off by default: an untraced run offers zero
+    /// tracing work to the target.
+    pub trace: bool,
 }
 
 impl Default for OpenLoopConfig {
@@ -242,6 +276,7 @@ impl Default for OpenLoopConfig {
             seed: 99,
             workers: 64,
             deadline: None,
+            trace: false,
         }
     }
 }
@@ -346,8 +381,13 @@ pub fn open_loop<T: InferTarget + ?Sized>(
                 let job = rx.lock().unwrap_or_else(|p| p.into_inner()).recv();
                 let Ok((i, scheduled)) = job else { break };
                 let input = open_loop_input(cfg.seed, i, dims);
+                let trace = if cfg.trace {
+                    Some(crate::obs::TraceId::derive(cfg.seed, i as u64))
+                } else {
+                    None
+                };
                 let sent = Instant::now();
-                match target.infer_deadline(&cfg.model, &input, cfg.deadline) {
+                match target.infer_traced(&cfg.model, &input, cfg.deadline, trace) {
                     Ok(_) => {
                         let e2e = start.elapsed().saturating_sub(scheduled);
                         let us = e2e.as_secs_f64() * 1e6;

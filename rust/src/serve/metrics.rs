@@ -1,20 +1,29 @@
 //! [`ServerMetrics`] — per-model serving telemetry.
 //!
-//! Extends the request-level [`LatencyStats`] accounting with the
-//! quantities a multi-model server is judged on: per-model QPS, queue
-//! depth (current and high-water), batch-size histograms, shed-request
-//! accounting and p50/p95/p99/p99.9 end-to-end latency. Counters on the
-//! submit path are atomics; the latency samples and histogram sit
-//! behind a mutex the flush path takes a constant number of times per
-//! batch (never per request), so the accounting stays off the
-//! per-request hot path.
+//! Tracks the quantities a multi-model server is judged on: per-model
+//! QPS, queue depth (current and high-water), batch-size histograms,
+//! shed-request accounting and p50/p95/p99/p99.9 end-to-end latency.
+//! Counters on the submit path are atomics; the latency histogram and
+//! batch histogram sit behind a mutex the flush path takes a constant
+//! number of times per batch (never per request), so the accounting
+//! stays off the per-request hot path.
+//!
+//! Latency percentiles come from a fixed log-bucketed
+//! [`LogHistogram`] per model: O(1) record, O(buckets) snapshot (no
+//! sort-over-sample-window on `report`), constant memory over the
+//! server's whole lifetime, and a documented quantile error bound
+//! ([`LogHistogram::MAX_RELATIVE_ERROR`] ≈ 4.4%). The histogram covers
+//! *all* requests ever served, not a sliding window. The full bucket
+//! set exports through [`ServerMetrics::to_json`] for the wire `Stats`
+//! frame.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use crate::coordinator::metrics::LatencyStats;
+use crate::obs::LogHistogram;
+use crate::util::json::Json;
 use crate::util::table::Table;
 
 /// Mutable telemetry for one hosted model.
@@ -42,22 +51,16 @@ pub struct ModelMetrics {
     inner: Mutex<Inner>,
 }
 
-/// Latency samples kept for percentile reporting. Metrics live for the
-/// server's whole lifetime (they survive eviction by design), so the
-/// sample buffer must not grow with traffic: once it reaches this many
-/// samples the oldest half is discarded, keeping percentiles over the
-/// most recent 32k–64k requests at a bounded ~0.5 MB per model.
-const LATENCY_WINDOW: usize = 1 << 16;
-
 #[derive(Debug, Default)]
 struct Inner {
     requests: u64,
     errors: u64,
     batches: u64,
     /// End-to-end latency per request (queue wait + batched compute),
-    /// µs — a sliding window of the most recent ≤ [`LATENCY_WINDOW`]
-    /// samples.
-    latency: LatencyStats,
+    /// µs — a fixed log-bucketed histogram over the model's whole
+    /// lifetime. Constant memory (~2 KiB) no matter the traffic, so
+    /// metrics surviving LRU eviction never grow unbounded.
+    latency: LogHistogram,
     /// Flushed batch size → number of batches of that size.
     batch_hist: BTreeMap<usize, u64>,
 }
@@ -180,10 +183,11 @@ impl ModelMetrics {
         (ewma as f64 / 1000.0).ceil().max(1.0) as u64
     }
 
-    /// Latency samples currently held in the sliding window (bounded by
-    /// `LATENCY_WINDOW` regardless of lifetime traffic).
-    pub fn window_len(&self) -> usize {
-        self.lock().latency.count()
+    /// Point-in-time copy of the end-to-end latency histogram — the
+    /// full bucket set behind the snapshot percentiles, exported on the
+    /// wire `Stats` frame and mergeable across models.
+    pub fn latency_histogram(&self) -> LogHistogram {
+        self.lock().latency.clone()
     }
 
     /// A batch of `size` requests was flushed to the backend.
@@ -202,8 +206,8 @@ impl ModelMetrics {
     /// A batch of requests completed; one end-to-end latency sample per
     /// request, recorded under a single lock acquisition (this is what
     /// the flush path calls, keeping the mutex off the per-request hot
-    /// path). The sample buffer slides past [`LATENCY_WINDOW`] entries;
-    /// the request counter stays exact forever.
+    /// path). Each sample is one O(1) histogram bucket increment — no
+    /// buffer to slide, and the request counter stays exact forever.
     pub fn record_requests(&self, e2e_us: &[f64]) {
         if e2e_us.is_empty() {
             return;
@@ -211,10 +215,7 @@ impl ModelMetrics {
         let mut inner = self.lock();
         inner.requests += e2e_us.len() as u64;
         for &us in e2e_us {
-            inner.latency.push(us);
-        }
-        if inner.latency.samples_us.len() >= LATENCY_WINDOW {
-            inner.latency.samples_us.drain(..LATENCY_WINDOW / 2);
+            inner.latency.record(us);
         }
         drop(inner);
         // blend the batch mean into the retry-hint EWMA (¾ old + ¼ new);
@@ -232,8 +233,9 @@ impl ModelMetrics {
     }
 
     /// Point-in-time copy of every counter, with percentiles resolved
-    /// (one sort over the bounded sample window, so a `stats` report
-    /// cannot stall the flush path behind repeated clone-and-sorts).
+    /// from the log-bucketed histogram — O(buckets) per snapshot, no
+    /// sort and no sample-window copy, so a `stats` report can never
+    /// stall the flush path behind allocation-heavy work.
     pub fn snapshot(&self) -> ModelSnapshot {
         let inner = self.lock();
         let elapsed = self.started.elapsed().as_secs_f64();
@@ -299,16 +301,16 @@ pub struct ModelSnapshot {
     pub qps: f64,
     /// Mean flushed batch size.
     pub mean_batch: f64,
-    /// Mean end-to-end latency, µs, over the sliding sample window.
+    /// Exact mean end-to-end latency, µs, over the model's lifetime.
     pub mean_us: f64,
-    /// Median end-to-end latency, µs (sliding window of the most
-    /// recent requests — see `LATENCY_WINDOW`).
+    /// Median end-to-end latency, µs, from the log-bucketed histogram
+    /// (within [`LogHistogram::MAX_RELATIVE_ERROR`] of exact).
     pub p50_us: f64,
-    /// 95th-percentile end-to-end latency, µs (sliding window).
+    /// 95th-percentile end-to-end latency, µs (histogram).
     pub p95_us: f64,
-    /// 99th-percentile end-to-end latency, µs (sliding window).
+    /// 99th-percentile end-to-end latency, µs (histogram).
     pub p99_us: f64,
-    /// 99.9th-percentile end-to-end latency, µs (sliding window).
+    /// 99.9th-percentile end-to-end latency, µs (histogram).
     pub p999_us: f64,
     /// Requests waiting in the queue at snapshot time.
     pub queue_depth: usize,
@@ -360,6 +362,39 @@ impl ModelSnapshot {
             .map(|(size, n)| format!("{size}×{n}"))
             .collect::<Vec<_>>()
             .join(" ")
+    }
+
+    /// Serialize every snapshot field (batch histogram as
+    /// `[size, count]` pairs). The wire `Stats` frame pairs this with
+    /// the full latency histogram — see [`ServerMetrics::to_json`].
+    pub fn to_json(&self) -> Json {
+        let batch_hist = self
+            .batch_hist
+            .iter()
+            .map(|(size, n)| Json::arr(vec![Json::Num(*size as f64), Json::Num(*n as f64)]))
+            .collect::<Vec<_>>();
+        Json::obj(vec![
+            ("model", Json::str(self.model.clone())),
+            ("requests", Json::Num(self.requests as f64)),
+            ("errors", Json::Num(self.errors as f64)),
+            ("shed", Json::Num(self.shed as f64)),
+            ("deadline_miss", Json::Num(self.deadline_miss as f64)),
+            ("retries", Json::Num(self.retries as f64)),
+            ("hedges_won", Json::Num(self.hedges_won as f64)),
+            ("panics_recovered", Json::Num(self.panics_recovered as f64)),
+            ("batches", Json::Num(self.batches as f64)),
+            ("qps", Json::Num(self.qps)),
+            ("mean_batch", Json::Num(self.mean_batch)),
+            ("mean_us", Json::Num(self.mean_us)),
+            ("p50_us", Json::Num(self.p50_us)),
+            ("p95_us", Json::Num(self.p95_us)),
+            ("p99_us", Json::Num(self.p99_us)),
+            ("p999_us", Json::Num(self.p999_us)),
+            ("queue_depth", Json::Num(self.queue_depth as f64)),
+            ("max_queue_depth", Json::Num(self.max_queue_depth as f64)),
+            ("swaps", Json::Num(self.swaps as f64)),
+            ("batch_hist", Json::Arr(batch_hist)),
+        ])
     }
 }
 
@@ -428,6 +463,27 @@ impl ServerMetrics {
         }
         t.render()
     }
+
+    /// The wire `Stats` frame body: every model's snapshot fields plus
+    /// its full latency-histogram buckets, so a remote scraper
+    /// (`dynamap stats --connect`, the benches) reads the same numbers
+    /// the in-process report prints — and can re-derive any quantile
+    /// via [`LogHistogram::from_json`].
+    pub fn to_json(&self) -> Json {
+        let models = self.models.lock().unwrap_or_else(|p| p.into_inner());
+        let entries = models
+            .values()
+            .map(|m| {
+                let mut entry = match m.snapshot().to_json() {
+                    Json::Obj(o) => o,
+                    _ => unreachable!("snapshot serializes as an object"),
+                };
+                entry.insert("latency_hist".to_string(), m.latency_histogram().to_json());
+                Json::Obj(entry)
+            })
+            .collect::<Vec<_>>();
+        Json::obj(vec![("models", Json::Arr(entries))])
+    }
 }
 
 #[cfg(test)]
@@ -461,7 +517,13 @@ mod tests {
         assert_eq!(s.max_queue_depth, 3);
         assert_eq!(s.swaps, 1);
         assert_eq!(s.mean_batch, 3.0);
-        assert_eq!(s.p50_us, 200.0);
+        // p50 of [100, 200, 300] is 200 exactly up to the histogram's
+        // documented bucket error
+        assert!(
+            (s.p50_us - 200.0).abs() / 200.0 <= LogHistogram::MAX_RELATIVE_ERROR,
+            "p50 {} outside the documented error of 200",
+            s.p50_us
+        );
         assert!(s.p99_us >= s.p50_us);
         assert!(s.p999_us >= s.p99_us);
         assert!(s.qps > 0.0);
@@ -527,20 +589,72 @@ mod tests {
     }
 
     #[test]
-    fn latency_window_stays_bounded() {
+    fn latency_accounting_stays_bounded_and_exact() {
         let m = ModelMetrics::new("w");
         let chunk: Vec<f64> = (0..4096).map(|i| i as f64).collect();
         for _ in 0..40 {
             m.record_requests(&chunk);
         }
         let s = m.snapshot();
-        assert_eq!(s.requests, 40 * 4096, "exact request count survives the window");
-        assert!(
-            m.window_len() < LATENCY_WINDOW,
-            "sample buffer must not grow with lifetime traffic"
+        assert_eq!(s.requests, 40 * 4096, "exact request count");
+        assert_eq!(
+            m.latency_histogram().count(),
+            40 * 4096,
+            "the histogram covers every sample at constant memory — \
+             nothing slides out of a window"
         );
-        assert!(m.window_len() >= LATENCY_WINDOW / 2, "recent samples are retained");
+        // the mean is tracked exactly alongside the buckets
+        assert!((s.mean_us - 2047.5).abs() < 1e-9, "mean {}", s.mean_us);
         assert!(s.p99_us >= s.p50_us);
+    }
+
+    #[test]
+    fn snapshot_percentiles_agree_with_exact_sort() {
+        // seed-99 heavy-tailed latencies through the real recording
+        // path: snapshot percentiles must stay within the histogram's
+        // documented bucket error of a full sort of the same samples
+        let mut rng = crate::util::rng::Rng::new(99);
+        let m = ModelMetrics::new("agree");
+        let mut samples = Vec::new();
+        for _ in 0..64 {
+            let batch: Vec<f64> =
+                (0..1024).map(|_| 50.0 * 10f64.powf(rng.f64() * 2.5)).collect();
+            samples.extend_from_slice(&batch);
+            m.record_requests(&batch);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let s = m.snapshot();
+        for (p, got) in [(50.0, s.p50_us), (99.0, s.p99_us), (99.9, s.p999_us)] {
+            let rank = ((p / 100.0) * (samples.len() - 1) as f64).round() as usize;
+            let exact = samples[rank];
+            let rel = (got - exact).abs() / exact;
+            assert!(
+                rel <= LogHistogram::MAX_RELATIVE_ERROR,
+                "p{p}: snapshot {got} vs exact {exact} — relative error {rel:.4}"
+            );
+        }
+    }
+
+    #[test]
+    fn stats_json_carries_counters_and_histogram() {
+        let sm = ServerMetrics::new();
+        let m = sm.model("mini");
+        m.record_batch(2);
+        m.record_requests(&[100.0, 300.0]);
+        m.record_errors(1);
+        let doc = Json::parse(&sm.to_json().to_string()).expect("stats JSON parses");
+        let entry = doc.get("models").at(0);
+        assert_eq!(entry.get("model").as_str(), Some("mini"));
+        assert_eq!(entry.get("requests").as_u64(), Some(2));
+        assert_eq!(entry.get("errors").as_u64(), Some(1));
+        assert_eq!(entry.get("batches").as_u64(), Some(1));
+        assert_eq!(entry.get("batch_hist").at(0).at(0).as_u64(), Some(2));
+        // the embedded histogram re-derives the same quantiles
+        let hist = LogHistogram::from_json(entry.get("latency_hist"))
+            .expect("latency_hist round-trips");
+        assert_eq!(hist.count(), 2);
+        assert_eq!(hist.quantile(50.0), m.latency_histogram().quantile(50.0));
+        assert_eq!(entry.get("mean_us").as_f64(), Some(200.0));
     }
 
     #[test]

@@ -20,9 +20,11 @@
 //!   [`crate::util::parallel`], and batching is invisible to callers —
 //!   outputs are bitwise-identical to sequential
 //!   [`crate::api::Session::infer`].
-//! * [`ServerMetrics`] extends [`crate::api::LatencyStats`] with
-//!   per-model QPS, queue depth, batch-size histograms, shed-request
-//!   accounting and p50/p95/p99/p99.9 end-to-end latency.
+//! * [`ServerMetrics`] tracks per-model QPS, queue depth, batch-size
+//!   histograms, shed-request accounting and p50/p95/p99/p99.9
+//!   end-to-end latency — percentiles from an O(1)-record log-bucketed
+//!   [`crate::obs::LogHistogram`] per model, exported whole over the
+//!   wire `Stats` frame.
 //! * Admission control: [`RegistryConfig::max_inflight`] bounds each
 //!   host's in-flight requests; excess submits are shed with the
 //!   retriable [`crate::api::DynamapError::Overloaded`] (carrying a

@@ -67,6 +67,9 @@ struct Request {
     /// the request is shed with [`DynamapError::DeadlineExceeded`]
     /// instead of entering the flushed batch.
     deadline: Option<Instant>,
+    /// Span-correlation id ([`crate::obs`]): stamps the request's queue
+    /// span and rides into the per-layer spans of its compute.
+    trace: Option<crate::obs::TraceId>,
     reply: mpsc::Sender<Result<(TensorBuf, InferMetrics), DynamapError>>,
 }
 
@@ -185,6 +188,20 @@ impl BatchQueue {
         input: TensorBuf,
         deadline: Option<Instant>,
     ) -> Result<(TensorBuf, InferMetrics), DynamapError> {
+        self.infer_traced(input, deadline, None)
+    }
+
+    /// [`BatchQueue::infer_with_deadline`] carrying the request's
+    /// span-correlation id ([`crate::obs::TraceId`]): when a recorder is
+    /// installed, the request's enqueue → dequeue wait is recorded as a
+    /// [`crate::obs::Stage::Queue`] span and the id rides into the
+    /// per-layer spans of its compute.
+    pub fn infer_traced(
+        &self,
+        input: TensorBuf,
+        deadline: Option<Instant>,
+        trace: Option<crate::obs::TraceId>,
+    ) -> Result<(TensorBuf, InferMetrics), DynamapError> {
         self.validate_input(&input)?;
         let sender = self.tx.lock().unwrap_or_else(|p| p.into_inner()).clone();
         let Some(sender) = sender else {
@@ -192,7 +209,7 @@ impl BatchQueue {
         };
         let (reply_tx, reply_rx) = mpsc::channel();
         self.metrics.enqueued();
-        let req = Request { input, enqueued: Instant::now(), deadline, reply: reply_tx };
+        let req = Request { input, enqueued: Instant::now(), deadline, trace, reply: reply_tx };
         if sender.send(req).is_err() {
             self.metrics.dequeued();
             return Err(closed_error(&self.model));
@@ -314,10 +331,25 @@ fn flush(
 ) {
     use std::panic::{catch_unwind, AssertUnwindSafe};
 
+    // resolve the span recorder once per flush (one relaxed load when
+    // tracing is off; see `crate::obs`)
+    let recorder = crate::obs::active();
     let mut inputs = Vec::new();
     let mut waiters = Vec::new();
     for req in batch {
         metrics.dequeued();
+        if let Some(rec) = &recorder {
+            // queue span: the request's enqueue → dequeue wait,
+            // recorded for served and deadline-shed requests alike
+            rec.record_span(
+                req.trace,
+                crate::obs::Stage::Queue,
+                state.model(),
+                req.enqueued,
+                Instant::now(),
+                vec![],
+            );
+        }
         match req.deadline {
             Some(d) if Instant::now() >= d => {
                 // aged out in queue: shed at dequeue, before the batch
@@ -329,7 +361,7 @@ fn flush(
                 }));
             }
             _ => {
-                inputs.push(req.input);
+                inputs.push((req.input, req.trace));
                 waiters.push((req.enqueued, req.reply));
             }
         }
@@ -342,17 +374,29 @@ fn flush(
     // per-request compute with per-request blast radius: panics are
     // caught inside the worker closure, so `parallel_map` never
     // re-raises and the scheduler thread survives
+    let t_flush = Instant::now();
     let results: Vec<Result<(TensorBuf, InferMetrics), DynamapError>> =
-        crate::util::parallel::parallel_map(&inputs, |_, input| {
-            catch_unwind(AssertUnwindSafe(|| state.infer(input))).unwrap_or_else(
-                |payload| {
+        crate::util::parallel::parallel_map(&inputs, |_, (input, trace)| {
+            catch_unwind(AssertUnwindSafe(|| state.infer_traced(input, *trace)))
+                .unwrap_or_else(|payload| {
                     Err(DynamapError::Serve(format!(
                         "request compute panicked: {}",
                         panic_message(payload)
                     )))
-                },
-            )
+                })
         });
+    if let Some(rec) = &recorder {
+        // flush span: the whole batch's compute, on the batch-level
+        // track (no single owning request), tagged with its size
+        rec.record_span(
+            None,
+            crate::obs::Stage::Flush,
+            state.model(),
+            t_flush,
+            Instant::now(),
+            vec![("batch", inputs.len().to_string())],
+        );
+    }
 
     // account the whole batch under one lock BEFORE answering: a caller
     // that has its reply must already be visible in the metrics (the

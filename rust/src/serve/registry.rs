@@ -261,6 +261,22 @@ impl ModelHost {
         input: TensorBuf,
         deadline: Option<std::time::Instant>,
     ) -> Result<(TensorBuf, InferMetrics), DynamapError> {
+        self.infer_traced(input, deadline, None)
+    }
+
+    /// [`ModelHost::infer_with_deadline`] carrying the request's
+    /// span-correlation id ([`crate::obs::TraceId`]): when a recorder
+    /// is installed, the validate → admit front door is recorded as a
+    /// [`crate::obs::Stage::Admission`] span and the id rides through
+    /// the queue into the per-layer spans of the request's compute.
+    pub fn infer_traced(
+        &self,
+        input: TensorBuf,
+        deadline: Option<std::time::Instant>,
+        trace: Option<crate::obs::TraceId>,
+    ) -> Result<(TensorBuf, InferMetrics), DynamapError> {
+        let recorder = crate::obs::active();
+        let t_admit = std::time::Instant::now();
         self.queue.validate_input(&input)?;
         if let Some(d) = deadline {
             if std::time::Instant::now() >= d {
@@ -272,7 +288,20 @@ impl ModelHost {
             }
         }
         let _permit = self.try_admit()?;
-        self.queue.infer_with_deadline(input, deadline)
+        if let Some(rec) = &recorder {
+            // admission span: shape + deadline validation and the
+            // permit claim; shed requests never get here, so a trace
+            // with an admission span was genuinely admitted
+            rec.record_span(
+                trace,
+                crate::obs::Stage::Admission,
+                &self.model,
+                t_admit,
+                std::time::Instant::now(),
+                vec![],
+            );
+        }
+        self.queue.infer_traced(input, deadline, trace)
     }
 
     /// `true` when this host's batch scheduler died while the queue was
@@ -432,9 +461,23 @@ impl ModelRegistry {
         input: &TensorBuf,
         deadline: Option<std::time::Instant>,
     ) -> Result<(TensorBuf, InferMetrics), DynamapError> {
+        self.infer_traced(model, input, deadline, None)
+    }
+
+    /// [`ModelRegistry::infer_with_deadline`] carrying the request's
+    /// span-correlation id ([`crate::obs::TraceId`]) down through the
+    /// host's admission, queue and per-layer spans. The network server
+    /// threads the protocol-v3 trailer's id through here.
+    pub fn infer_traced(
+        &self,
+        model: &str,
+        input: &TensorBuf,
+        deadline: Option<std::time::Instant>,
+        trace: Option<crate::obs::TraceId>,
+    ) -> Result<(TensorBuf, InferMetrics), DynamapError> {
         for _ in 0..3 {
             let host = self.host(model)?;
-            match host.infer_with_deadline(input.clone(), deadline) {
+            match host.infer_traced(input.clone(), deadline, trace) {
                 Err(DynamapError::QueueClosed { .. }) => {
                     self.evict_if_wedged(&host);
                     continue;

@@ -276,6 +276,7 @@ fn seeded_storm_full_soak_accounts_every_request_and_drains_clean() {
         seed: 99,
         workers: 16,
         deadline: Some(Duration::from_millis(250)),
+        trace: false,
     };
     let report = open_loop(&client, &cfg).unwrap();
     drop(guard);

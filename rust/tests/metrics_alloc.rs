@@ -1,0 +1,103 @@
+//! Regression for the `ServerMetrics::report` hot-path cost: with the
+//! log-bucketed histogram behind `ModelMetrics`, producing a stats
+//! report must never re-sort (or even copy) the latency samples — at
+//! 64Ki recorded requests a sort-based percentile path would allocate
+//! ≥ 512 KiB per report, which this binary's counting allocator would
+//! see. The same run cross-checks the histogram percentiles against an
+//! exact sorted-sample computation on seed-99 data.
+//!
+//! One `#[test]` on purpose: the allocation counter is process-global,
+//! and a sibling test allocating concurrently would pollute the byte
+//! delta measured around `report()`.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use dynamap::obs::LogHistogram;
+use dynamap::serve::ServerMetrics;
+use dynamap::util::rng::Rng;
+
+/// System allocator wrapper that counts bytes handed out.
+struct CountingAlloc;
+
+static BYTES: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        BYTES.fetch_add(layout.size(), Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        BYTES.fetch_add(new_size.saturating_sub(layout.size()), Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// A sorted copy of the 64Ki samples is ≥ 512 KiB in a single
+/// allocation; a report that stays an order of magnitude under that
+/// cannot be sorting. The slack covers the rendered ASCII table and
+/// its per-cell strings.
+const REPORT_ALLOC_BUDGET: usize = 64 * 1024;
+
+#[test]
+fn report_never_sorts_samples_and_histogram_tracks_exact_quantiles() {
+    const N: usize = 64 * 1024;
+    let metrics = ServerMetrics::new();
+    let model = metrics.model("mini-inception");
+
+    // seed-99 log-uniform latencies spanning ~5 decades — the shape
+    // that stresses geometric bucketing hardest
+    let mut rng = Rng::new(99);
+    let mut samples = Vec::with_capacity(N);
+    for _ in 0..N {
+        let us = 10f64.powf(rng.f64() * 5.0); // 1 µs .. 100 ms
+        samples.push(us);
+        model.record_request(us);
+    }
+
+    // agreement: snapshot percentiles within the documented bucket
+    // error of the exact sorted-sample quantiles
+    let snap = model.snapshot();
+    assert_eq!(snap.requests, N as u64);
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let exact = |p: f64| samples[((p / 100.0) * (N - 1) as f64).round() as usize];
+    for (p, got) in [
+        (50.0, snap.p50_us),
+        (95.0, snap.p95_us),
+        (99.0, snap.p99_us),
+        (99.9, snap.p999_us),
+    ] {
+        let want = exact(p);
+        let rel = (got - want).abs() / want;
+        assert!(
+            rel <= LogHistogram::MAX_RELATIVE_ERROR,
+            "p{p}: snapshot {got:.1}µs vs exact {want:.1}µs — relative error \
+             {rel:.4} exceeds the documented bound"
+        );
+    }
+    let mean_exact = samples.iter().sum::<f64>() / N as f64;
+    assert!(
+        (snap.mean_us - mean_exact).abs() / mean_exact < 1e-9,
+        "the mean is tracked exactly, outside the buckets"
+    );
+
+    // regression: a full report over the 64Ki-sample model allocates
+    // far less than one sample-window copy would
+    let before = BYTES.load(Ordering::Relaxed);
+    let report = metrics.report();
+    let delta = BYTES.load(Ordering::Relaxed) - before;
+    assert!(report.contains("mini-inception"), "the table names the model");
+    assert!(
+        delta < REPORT_ALLOC_BUDGET,
+        "report() allocated {delta} bytes — a sample sort/copy has crept back \
+         into the stats path (budget {REPORT_ALLOC_BUDGET})"
+    );
+}

@@ -276,6 +276,7 @@ fn open_loop_over_tcp_sheds_under_overload_and_server_stays_live() {
         seed: 99,
         workers: 16,
         deadline: None,
+        trace: false,
     };
     let report = open_loop(&client, &cfg).unwrap();
     assert_eq!(report.sent, 80);

@@ -1,0 +1,328 @@
+//! Observability integration tests: trace ids over live TCP (the
+//! protocol-v3 trailer), span well-formedness against the *live* plan
+//! across a hot swap, v2-client compatibility (no trace, no error),
+//! the `Stats`/`TraceDump` wire frames, and bounded ring behaviour
+//! under real load. Everything runs on loopback ephemeral ports with
+//! synthesized artifacts — no PJRT, no fixed port numbers.
+//!
+//! The span recorder is process-global (like the fault registry), so
+//! every test that installs one serializes on [`obs_lock`].
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::time::Duration;
+
+use dynamap::api::{Backend, Compiler, Device, Session};
+use dynamap::net::{protocol, Client, Frame, NetServer};
+use dynamap::obs::{ObsGuard, Stage, TraceId};
+use dynamap::serve::loadgen::{open_loop, open_loop_input, OpenLoopConfig};
+use dynamap::serve::{BatchConfig, ModelRegistry, RegistryConfig};
+use dynamap::util::json::Json;
+
+fn obs_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+}
+
+fn temp_root(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("dynamap_obs_{}_{}", tag, std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+/// Registry over a temp root: small-edge device (fast DSE), shared plan
+/// cache, synthetic artifacts.
+fn registry(root: &PathBuf, max_batch: usize, max_wait_ms: u64) -> Arc<ModelRegistry> {
+    Arc::new(ModelRegistry::new(RegistryConfig {
+        artifacts_root: root.join("zoo"),
+        plan_cache: Some(root.join("plans")),
+        capacity: 0,
+        synthesize_missing: true,
+        seed: 0xA11CE,
+        compiler: Compiler::new().device(Device::small_edge()),
+        batch: BatchConfig {
+            max_batch,
+            max_wait: Duration::from_millis(max_wait_ms),
+        },
+        max_inflight: 0,
+        profile: false,
+    }))
+}
+
+/// Events of `doc` whose `args.trace` equals `id`'s hex form.
+fn events_of<'a>(events: &'a [Json], id: TraceId) -> Vec<&'a Json> {
+    let hex = id.to_string();
+    events
+        .iter()
+        .filter(|e| e.get("args").get("trace").as_str() == Some(hex.as_str()))
+        .collect()
+}
+
+fn cats<'a>(events: &[&'a Json]) -> Vec<&'a str> {
+    events.iter().filter_map(|e| e.get("cat").as_str()).collect()
+}
+
+#[test]
+fn traced_requests_over_tcp_export_complete_perfetto_spans() {
+    let _serial = obs_lock();
+    let root = temp_root("tcp");
+    let reg = registry(&root, 4, 2);
+    let host = reg.host("mini").unwrap();
+    let dims = host.input_dims();
+    let served_map = host.state().algo_map().clone();
+    let mut server = NetServer::bind(reg.clone(), "127.0.0.1:0").unwrap();
+    let client = Client::connect(server.local_addr().to_string()).unwrap();
+    let guard = ObsGuard::install(dynamap::obs::DEFAULT_CAPACITY);
+
+    // six traced requests with deterministic seeded ids — the id rides
+    // the protocol-v3 trailer; spans are recorded server-side
+    let ids: Vec<TraceId> = (0..6).map(|i| TraceId::derive(99, i)).collect();
+    for (i, id) in ids.iter().enumerate() {
+        client
+            .infer_traced("mini", &open_loop_input(99, i, dims), None, Some(*id))
+            .unwrap();
+    }
+
+    // fetch the spans back over the wire and validate the export shape
+    let json = client.dump_trace().unwrap();
+    let doc = Json::parse(&json).expect("TraceDumpOk payload parses as JSON");
+    let events = doc.get("traceEvents").as_arr().expect("traceEvents array");
+    assert!(!events.is_empty(), "traced requests must leave spans");
+
+    // well-formedness: every event is a complete-interval event with a
+    // known category and a non-empty name
+    for e in events {
+        assert_eq!(e.get("ph").as_str(), Some("X"), "complete events only");
+        assert!(e.get("ts").as_u64().is_some(), "ts is numeric µs");
+        assert!(e.get("dur").as_u64().is_some(), "dur is numeric µs");
+        let cat = e.get("cat").as_str().expect("category present");
+        assert!(
+            ["admission", "queue", "flush", "layer", "measure"].contains(&cat),
+            "unknown category {cat}"
+        );
+        assert!(!e.get("name").as_str().unwrap_or("").is_empty());
+    }
+
+    // per request: the full admission → queue → layer path, every layer
+    // span tagged with the live plan's (algo, precision, kernel)
+    let n_layers = served_map.len();
+    for (i, id) in ids.iter().enumerate() {
+        let mine = events_of(events, *id);
+        let c = cats(&mine);
+        assert!(c.contains(&"admission"), "request {i}: no admission span");
+        assert!(c.contains(&"queue"), "request {i}: no queue span");
+        let layers: Vec<_> =
+            mine.iter().filter(|e| e.get("cat").as_str() == Some("layer")).collect();
+        assert_eq!(
+            layers.len(),
+            n_layers,
+            "request {i}: one layer span per planned layer"
+        );
+        for l in &layers {
+            let name = l.get("name").as_str().expect("layer span names the layer");
+            let algo = l.get("args").get("algo").as_str().expect("algo tag");
+            assert_eq!(
+                Some(&algo.to_string()),
+                served_map.get(name),
+                "request {i}: span algo for '{name}' must match the live plan"
+            );
+            let precision = l.get("args").get("precision").as_str().expect("precision tag");
+            assert!(["f32", "int8"].contains(&precision), "{precision}");
+            assert!(
+                !l.get("args").get("kernel").as_str().unwrap_or("").is_empty(),
+                "kernel tag present"
+            );
+        }
+    }
+
+    // batch flushes show up (untraced, on track 0, tagged with size)
+    let flushes: Vec<_> =
+        events.iter().filter(|e| e.get("cat").as_str() == Some("flush")).collect();
+    assert!(!flushes.is_empty(), "at least one batch flush span");
+    for f in &flushes {
+        assert_eq!(f.get("tid").as_u64(), Some(0), "flush spans are untraced");
+        assert!(f.get("args").get("batch").as_str().is_some(), "batch-size tag");
+    }
+
+    // TraceDump drains: a second dump sees only spans recorded since
+    let json2 = client.dump_trace().unwrap();
+    let doc2 = Json::parse(&json2).unwrap();
+    assert_eq!(
+        doc2.get("traceEvents").as_arr().map(<[_]>::len),
+        Some(0),
+        "dump is collect-then-fetch — the ring is left empty"
+    );
+
+    // the Stats frame returns the full metrics + histogram snapshot
+    let stats = client.server_stats().unwrap();
+    let sdoc = Json::parse(&stats).expect("StatsOk payload parses as JSON");
+    let models = sdoc.get("models").as_arr().expect("models array");
+    let mine = models
+        .iter()
+        .find(|m| m.get("model").as_str() == Some("mini-inception"))
+        .expect("served model present in the scrape");
+    assert_eq!(mine.get("requests").as_u64(), Some(6));
+    assert!(
+        !mine.get("latency_hist").get("buckets").as_arr().unwrap_or(&[]).is_empty(),
+        "histogram buckets ride the Stats frame"
+    );
+
+    drop(guard);
+    client.shutdown_server().unwrap();
+    server.shutdown();
+    reg.shutdown();
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn v2_clients_get_replies_and_untraced_spans() {
+    let _serial = obs_lock();
+    let root = temp_root("v2");
+    let reg = registry(&root, 4, 2);
+    let host = reg.host("mini").unwrap();
+    let dims = host.input_dims();
+    let mut server = NetServer::bind(reg.clone(), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+    let guard = ObsGuard::install(4096);
+
+    // a trailer-less Infer body is valid in every protocol version;
+    // re-stamp the header's version byte to 2 to impersonate an old
+    // client that has never heard of trace ids
+    let mut bytes = protocol::encode_frame(&Frame::Infer {
+        model: "mini".into(),
+        input: open_loop_input(99, 0, dims),
+        deadline_ms: None,
+        trace: None,
+    });
+    bytes[2] = 2;
+    let mut raw = TcpStream::connect(&addr).unwrap();
+    raw.write_all(&bytes).unwrap();
+    let reply = protocol::read_frame(&mut raw).unwrap().expect("a reply frame");
+    assert!(
+        matches!(reply, Frame::InferOk { .. }),
+        "v2 infer must succeed untraced, got {reply:?}"
+    );
+    drop(raw);
+
+    // the request still produced its spans — all uncorrelated
+    let spans = guard.recorder().snapshot();
+    assert!(
+        spans.iter().any(|s| s.stage == Stage::Layer),
+        "v2 requests are observable too"
+    );
+    for s in &spans {
+        assert_eq!(s.trace, None, "no trailer ⇒ no trace id on any span");
+    }
+
+    drop(guard);
+    let client = Client::connect(addr).unwrap();
+    client.shutdown_server().unwrap();
+    server.shutdown();
+    reg.shutdown();
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn layer_spans_follow_the_live_plan_across_a_hot_swap() {
+    let _serial = obs_lock();
+    let root = temp_root("swap");
+    let reg = registry(&root, 4, 2);
+    let host = reg.host("mini").unwrap();
+    let dims = host.input_dims();
+    let old_map = host.state().algo_map().clone();
+    let guard = ObsGuard::install(4096);
+
+    let before = TraceId::derive(7, 0);
+    reg.infer_traced("mini", &open_loop_input(7, 0, dims), None, Some(before)).unwrap();
+
+    // hot-swap to a plan that flips every general conv between the two
+    // always-valid families, exactly like `tune::remap` does: rebuild
+    // the session over the same artifacts with an explicit algo map
+    let new_map: BTreeMap<String, String> = old_map
+        .iter()
+        .map(|(layer, algo)| {
+            let flipped = if algo == "im2col" { "kn2row" } else { "im2col" };
+            (layer.clone(), flipped.to_string())
+        })
+        .collect();
+    let dir = root.join("zoo").join("mini-inception");
+    let session = Session::builder(dir.to_string_lossy().into_owned())
+        .backend(Backend::Native)
+        .algo_map(new_map)
+        .build()
+        .unwrap();
+    let new_state = session.native_state().expect("native backend shares state");
+    let served_after = new_state.algo_map().clone();
+    assert_ne!(old_map, served_after, "the swap must actually change the plan");
+    reg.swap_state("mini", new_state, None).unwrap();
+
+    let after = TraceId::derive(7, 1);
+    reg.infer_traced("mini", &open_loop_input(7, 1, dims), None, Some(after)).unwrap();
+
+    // each request's layer spans carry the algo of the plan that was
+    // live *when it ran* — a swap never rewrites history
+    let spans = guard.recorder().snapshot();
+    let layer_algos = |id: TraceId| -> BTreeMap<String, String> {
+        spans
+            .iter()
+            .filter(|s| s.trace == Some(id) && s.stage == Stage::Layer)
+            .map(|s| {
+                let algo = s
+                    .tags
+                    .iter()
+                    .find(|(k, _)| *k == "algo")
+                    .map(|(_, v)| v.clone())
+                    .expect("layer spans carry an algo tag");
+                (s.name.clone(), algo)
+            })
+            .collect()
+    };
+    assert_eq!(layer_algos(before), old_map, "pre-swap spans match the old plan");
+    assert_eq!(layer_algos(after), served_after, "post-swap spans match the new plan");
+
+    drop(guard);
+    reg.shutdown();
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn ring_overflow_under_live_load_stays_bounded_and_never_blocks() {
+    let _serial = obs_lock();
+    let root = temp_root("ring");
+    let reg = registry(&root, 4, 1);
+    reg.host("mini").unwrap();
+    // a ring far smaller than the span volume of the run: a 6-layer
+    // model × 48 requests produces hundreds of spans
+    let guard = ObsGuard::install(16);
+
+    let cfg = OpenLoopConfig {
+        model: "mini".into(),
+        rate_qps: 2000.0,
+        requests: 48,
+        seed: 99,
+        workers: 8,
+        deadline: None,
+        trace: true,
+    };
+    let report = open_loop(reg.as_ref(), &cfg).unwrap();
+    assert_eq!(report.sent, 48);
+    assert_eq!(report.errors, 0, "overflow must never surface as request errors");
+
+    let rec = guard.recorder();
+    assert!(rec.len() <= 16, "ring never exceeds its capacity");
+    assert!(rec.dropped() > 0, "the run must actually have overflowed");
+    // what remains is the newest window, still well-formed
+    for s in rec.snapshot() {
+        assert!(!s.name.is_empty());
+    }
+
+    drop(guard);
+    reg.shutdown();
+    std::fs::remove_dir_all(&root).ok();
+}
