@@ -54,6 +54,7 @@ fn main() {
         batch: BatchConfig::default(),
         max_inflight: 0,
         profile: true,
+        slos: Default::default(),
     });
     let host = registry.host("mini-inception").expect("host mini-inception");
     println!(

@@ -57,6 +57,7 @@ fn main() {
         batch: BatchConfig { max_batch: 8, max_wait: Duration::from_millis(2) },
         max_inflight: MAX_INFLIGHT,
         profile: false,
+        slos: Default::default(),
     }));
     reg.host(MODEL).expect("host mini-inception"); // compile before timing
     let dims = model_input_dims(MODEL).expect("zoo dims");

@@ -20,13 +20,24 @@
 //! threshold into a hard failure when the host has ≥4 cores (plain
 //! runs only report; single-core runners can't batch-win) and gates
 //! the disabled-tracing overhead below 1% of a request.
+//!
+//! A third scenario measures SLO co-scheduling (`serve::sched`): an
+//! interactive tenant (100 ms target) beside a bulk tenant offered far
+//! past capacity, through the thread partitioner + per-partition plan
+//! re-solve + pressure-deferral path, printing the
+//! `slo attainment: high=NN.N% bulk=NN.N%` headline. Under
+//! `DYNAMAP_BENCH_ASSERT=1` (and ≥4 cores) the interactive tenant must
+//! attain ≥95% while the bulk tenant demonstrably saturates.
 
 use std::time::{Duration, Instant};
 
 use dynamap::api::{Compiler, Device};
 use dynamap::bench::harness::Bencher;
 use dynamap::obs::ObsGuard;
-use dynamap::serve::{loadgen, BatchConfig, LoadgenConfig, ModelRegistry, RegistryConfig};
+use dynamap::serve::{
+    loadgen, open_loop_mixed, BatchConfig, LoadgenConfig, MixedConfig, ModelRegistry,
+    ModelSlo, RegistryConfig, SloTable, TenantLoad,
+};
 use dynamap::util::parallel::worker_count;
 
 fn registry(root: &std::path::Path, max_batch: usize) -> ModelRegistry {
@@ -40,6 +51,7 @@ fn registry(root: &std::path::Path, max_batch: usize) -> ModelRegistry {
         batch: BatchConfig { max_batch, max_wait: Duration::from_millis(2) },
         max_inflight: 0,
         profile: false,
+        slos: Default::default(),
     })
 }
 
@@ -141,6 +153,80 @@ fn main() {
         assert!(
             disabled_pct < 1.0,
             "disabled tracing must cost <1% of a request, measured {disabled_pct:.2}%"
+        );
+    }
+
+    // --- multi-tenant SLO co-scheduling ------------------------------
+    // two opposed tenants through one registry: an interactive tenant
+    // (100 ms target, priority 8) at a modest offered rate beside a
+    // bulk best-effort tenant offered far past capacity (its excess
+    // sheds against the per-host admission budget). The partitioner
+    // splits the worker pool, both plans re-solve under their
+    // partitions, and bulk flushes defer while the interactive queue is
+    // pressured — the attainment line is the multi-CNN headline and the
+    // CI slo-smoke gate.
+    let fast_mode = std::env::var("DYNAMAP_BENCH_FAST").is_ok();
+    let slos: SloTable = [
+        ("mini-inception".to_string(), ModelSlo::interactive_ms(100.0)),
+        ("mini-vgg".to_string(), ModelSlo::bulk()),
+    ]
+    .into_iter()
+    .collect();
+    let tenant_registry = ModelRegistry::new(RegistryConfig {
+        artifacts_root: root.join("zoo"),
+        plan_cache: Some(root.join("plans")),
+        capacity: 2,
+        synthesize_missing: true,
+        seed: 99,
+        compiler: Compiler::new().device(Device::small_edge()),
+        batch: BatchConfig { max_batch: 8, max_wait: Duration::from_millis(2) },
+        max_inflight: 16,
+        profile: false,
+        slos,
+    });
+    tenant_registry.host("mini-inception").expect("host interactive tenant");
+    tenant_registry.host("mini-vgg").expect("host bulk tenant");
+    let budgets = tenant_registry.repartition();
+    let replanned =
+        tenant_registry.resolve_partition_plans().expect("partition plan re-solve");
+    println!(
+        "serving/mixed-tenant/slo-coschedule: partition {budgets:?}, \
+         {replanned} plan(s) re-solved"
+    );
+    let mixed = MixedConfig {
+        tenants: vec![
+            TenantLoad {
+                model: "mini-inception".into(),
+                rate_qps: 200.0,
+                requests: if fast_mode { 40 } else { 160 },
+                slo: Some(Duration::from_millis(100)),
+                deadline: None,
+            },
+            TenantLoad {
+                model: "mini-vgg".into(),
+                rate_qps: 4000.0,
+                requests: if fast_mode { 150 } else { 600 },
+                slo: None,
+                deadline: None,
+            },
+        ],
+        seed: 99,
+        workers: 64,
+    };
+    let mixed_report = open_loop_mixed(&tenant_registry, &mixed).expect("mixed open loop");
+    println!("{}", mixed_report.summary());
+    tenant_registry.shutdown();
+    // enforced gate: the interactive tenant holds its SLO while bulk
+    // saturates — again only meaningful with ≥4 cores to partition
+    if std::env::var("DYNAMAP_BENCH_ASSERT").is_ok() && worker_count(8) >= 4 {
+        let (high, _bulk) = mixed_report.attainment();
+        assert!(
+            high >= 95.0,
+            "interactive SLO attainment regressed below the 95% gate: {high:.1}%"
+        );
+        assert!(
+            mixed_report.tenants[1].report.shed >= 1,
+            "the bulk tenant never saturated — the co-scheduling gate measured nothing"
         );
     }
     std::fs::remove_dir_all(&root).ok();

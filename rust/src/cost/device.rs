@@ -173,6 +173,32 @@ impl DeviceCalibration {
         self.fit(family).apply(sec)
     }
 
+    /// A copy of this calibration with every fit's `scale` *and*
+    /// `offset_sec` multiplied by `factor`.
+    ///
+    /// This is the thread-partition hook for multi-tenant serving
+    /// ([`crate::serve::sched`]): a model granted `b` of the host's `t`
+    /// worker threads sees roughly `t / b` times the per-layer latency,
+    /// so re-running the DSE under `scaled(t / b)` re-solves its plan
+    /// for the slice it actually owns. Scaling the identity produces a
+    /// non-identity calibration, so [`DeviceCalibration::describe`] —
+    /// and therefore `Compiler::fingerprint` — keys a distinct plan
+    /// cache entry per partition with no extra plumbing. `factor = 1`
+    /// returns the calibration unchanged (identity stays identity).
+    pub fn scaled(self, factor: f64) -> DeviceCalibration {
+        if factor == 1.0 {
+            return self;
+        }
+        let stretch = |f: &AlgoFit| AlgoFit {
+            scale: f.scale * factor,
+            offset_sec: f.offset_sec * factor,
+        };
+        DeviceCalibration {
+            per_algo: self.per_algo.iter().map(|(k, f)| (k.clone(), stretch(f))).collect(),
+            fallback: stretch(&self.fallback),
+        }
+    }
+
     /// Stable textual form for compiler fingerprints: two calibrations
     /// with equal descriptions produce identical plans.
     pub fn describe(&self) -> String {
@@ -317,6 +343,27 @@ mod tests {
         assert_eq!(cal.apply("winograd", 2.0), 2.0);
         assert_ne!(cal.describe(), "id");
         assert_eq!(cal.describe(), cal.clone().describe(), "description is stable");
+    }
+
+    #[test]
+    fn calibration_scaled_stretches_and_keys_fingerprints() {
+        // scaling the identity must leave the identity regime: that is
+        // what keys a distinct plan-cache entry per thread partition
+        let half = DeviceCalibration::identity().scaled(2.0);
+        assert!(!half.is_identity());
+        assert_eq!(half.apply("im2col", 1.0), 2.0);
+        assert_ne!(half.describe(), "id");
+        assert_ne!(half.describe(), DeviceCalibration::identity().scaled(4.0).describe());
+
+        // factor 1 is a no-op (identity stays identity, fitted stays put)
+        assert!(DeviceCalibration::identity().scaled(1.0).is_identity());
+        let fitted = DeviceCalibration::default().with("kn2row", 3.0, 0.5);
+        assert_eq!(fitted.clone().scaled(1.0), fitted);
+
+        // per-family fits and the fallback both stretch linearly
+        let s = fitted.scaled(2.0);
+        assert!((s.apply("kn2row", 2.0) - 13.0).abs() < 1e-12);
+        assert!((s.apply("winograd", 2.0) - 4.0).abs() < 1e-12);
     }
 
     #[test]

@@ -10,12 +10,23 @@
 //! runs the online adaptation loop ([`crate::tune`]): per-layer
 //! profiling, cost-model calibration and zero-downtime plan hot-swaps,
 //! with `stats` printing the observed-vs-predicted per-layer table.
-//! `loadgen` drives the engine three ways: the seeded closed-loop
+//! `loadgen` drives the engine four ways: the seeded closed-loop
 //! generator (default; `--compare` reruns the identical workload with
 //! batching disabled and prints the speedup), open-loop seeded-Poisson
-//! in process (`--rate <qps>`), or open-loop over TCP against a
+//! in process (`--rate <qps>`), open-loop over TCP against a
 //! running server (`--connect <addr> --rate <qps>`, with `--shutdown`
-//! draining the server afterwards).
+//! draining the server afterwards), or seeded *mixed* multi-tenant
+//! open loop (`--tenants "model=RATExREQS[@SLO_MS],..."`) with
+//! per-tenant SLO-attainment reporting — in process the tenant specs
+//! also derive the registry's SLO table, so the co-scheduler in
+//! [`crate::serve::sched`] is exercised, not just measured.
+//!
+//! `serve --slo "model=MS[@PRIO],model=be,..."` attaches per-model
+//! SLOs: the thread-budget partitioner splits the host's cores across
+//! tenants by priority × demand, each tenant's plan is re-solved under
+//! its partition (fingerprint-keyed, so re-solves hit the plan cache
+//! on restart) and best-effort flushes defer while an interactive
+//! tenant is behind.
 //!
 //! Two observability subcommands scrape a running server over the same
 //! protocol: `trace --connect <addr>` drains its span ring as Chrome
@@ -33,12 +44,13 @@ use crate::net::{Client, HedgeConfig, NetServer, RetryPolicy};
 use crate::runtime::TensorBuf;
 use crate::tune::{observed_vs_predicted, TuneConfig, TuneController};
 use crate::util::cli::Args;
-use crate::util::parallel::parallel_run;
+use crate::util::parallel::{parallel_run, worker_count};
 use crate::util::rng::Rng;
 
-use super::loadgen::{self, InferTarget, LoadgenConfig, OpenLoopConfig};
+use super::loadgen::{self, InferTarget, LoadgenConfig, MixedConfig, OpenLoopConfig, TenantLoad};
 use super::queue::BatchConfig;
 use super::registry::{ModelRegistry, RegistryConfig};
+use super::sched::{ModelSlo, SloTable};
 
 /// Shared flags → [`RegistryConfig`] (`--root`, `--plan-cache`,
 /// `--cap`, `--max-batch`, `--max-wait-ms`, `--max-inflight`,
@@ -60,8 +72,9 @@ use super::registry::{ModelRegistry, RegistryConfig};
 /// listed model — serving a model list that LRU-thrashes by default
 /// would make warm-up meaningless; capacity pressure is something to
 /// opt into.
-fn registry_config(args: &Args, models: usize) -> RegistryConfig {
+fn registry_config(args: &Args, models: usize, slos: SloTable) -> RegistryConfig {
     RegistryConfig {
+        slos,
         artifacts_root: args.get_or("root", "serve-models").into(),
         plan_cache: Some(args.get_or("plan-cache", "plans").into()),
         capacity: match args.get("cap") {
@@ -85,6 +98,91 @@ fn registry_config(args: &Args, models: usize) -> RegistryConfig {
         },
         ..RegistryConfig::default()
     }
+}
+
+/// Parse `--slo "model=MS[@PRIO],model=be,..."` into a [`SloTable`].
+/// `model=100` reads "100 ms p99 target at interactive priority",
+/// `model=100@8` overrides the priority, and `model=be` (aliases
+/// `bulk`, `best-effort`) marks the model a deferrable best-effort
+/// tenant. An absent flag yields the empty table — multi-tenant
+/// scheduling stays off and the registry behaves exactly as before.
+fn slo_table(args: &Args) -> Result<SloTable, DynamapError> {
+    let mut table = SloTable::new();
+    let Some(spec) = args.get("slo") else { return Ok(table) };
+    for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+        let Some((model, rhs)) = entry.split_once('=') else {
+            return Err(DynamapError::Config(format!(
+                "--slo entry '{entry}' must be model=<ms>[@prio] or model=be"
+            )));
+        };
+        let slo = match rhs.trim() {
+            "be" | "bulk" | "best-effort" => ModelSlo::bulk(),
+            rhs => {
+                let (ms, prio) = match rhs.split_once('@') {
+                    Some((ms, p)) => (ms, Some(p)),
+                    None => (rhs, None),
+                };
+                let ms: u64 = ms.trim().parse().map_err(|_| {
+                    DynamapError::Config(format!(
+                        "--slo entry '{entry}': '{ms}' is not a millisecond count"
+                    ))
+                })?;
+                let slo = ModelSlo::interactive_ms(ms as f64);
+                match prio {
+                    Some(p) => {
+                        let p: u32 = p.trim().parse().map_err(|_| {
+                            DynamapError::Config(format!(
+                                "--slo entry '{entry}': '{p}' is not a priority"
+                            ))
+                        })?;
+                        slo.with_priority(p)
+                    }
+                    None => slo,
+                }
+            }
+        };
+        table.insert(model.trim().to_string(), slo);
+    }
+    Ok(table)
+}
+
+/// Parse `--tenants "model=RATExREQS[@SLO_MS],..."` into the mixed
+/// open-loop workload: `mini=200x160@100` offers 200 qps × 160
+/// requests under a 100 ms SLO; omitting `@SLO_MS` makes the tenant
+/// bulk (measured on service rate alone). Every tenant inherits the
+/// shared `--deadline-ms`, if given.
+fn parse_tenants(
+    spec: &str,
+    deadline: Option<Duration>,
+) -> Result<Vec<TenantLoad>, DynamapError> {
+    let mut tenants = Vec::new();
+    for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+        let bad = || {
+            DynamapError::Config(format!(
+                "--tenants entry '{entry}' must be model=RATExREQS[@SLO_MS] \
+                 (e.g. mini=200x160@100 or mini-vgg=4000x600)"
+            ))
+        };
+        let (model, rhs) = entry.split_once('=').ok_or_else(bad)?;
+        let (load, slo_ms) = match rhs.split_once('@') {
+            Some((load, slo)) => (load, Some(slo.trim().parse::<u64>().map_err(|_| bad())?)),
+            None => (rhs, None),
+        };
+        let (rate, requests) = load.split_once('x').ok_or_else(bad)?;
+        tenants.push(TenantLoad {
+            model: model.trim().to_string(),
+            rate_qps: rate.trim().parse().map_err(|_| bad())?,
+            requests: requests.trim().parse().map_err(|_| bad())?,
+            slo: slo_ms.map(Duration::from_millis),
+            deadline,
+        });
+    }
+    if tenants.is_empty() {
+        return Err(DynamapError::Config(
+            "--tenants needs at least one model=RATExREQS[@SLO_MS] entry".into(),
+        ));
+    }
+    Ok(tenants)
 }
 
 fn model_list(args: &Args, default: &str) -> Vec<String> {
@@ -119,7 +217,14 @@ pub fn serve(args: &Args) -> i32 {
     }
     // either opt-in enables the adaptation loop
     let tune_on = args.has("tune") || TuneConfig::from_env().is_some();
-    let mut config = registry_config(args, models.len());
+    let slos = match slo_table(args) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    let mut config = registry_config(args, models.len(), slos);
     config.profile = tune_on;
     let registry = Arc::new(ModelRegistry::new(config));
     for model in &models {
@@ -138,6 +243,29 @@ pub fn serve(args: &Args) -> i32 {
             }
             Err(e) => {
                 eprintln!("error hosting '{model}': {e}");
+                return 1;
+            }
+        }
+    }
+    if !registry.config().slos.is_empty() {
+        // partition once over the warm model set and re-solve each
+        // tenant's plan under its budget *before* taking traffic, so
+        // the first requests already run partition-priced plans
+        let budgets = registry.repartition();
+        let parts: Vec<String> =
+            budgets.iter().map(|(model, threads)| format!("{model}={threads}")).collect();
+        println!(
+            "slo scheduling on: thread partition [{}] of {} worker threads",
+            parts.join(", "),
+            worker_count(usize::MAX),
+        );
+        match registry.resolve_partition_plans() {
+            Ok(n) if n > 0 => {
+                println!("partition plans resolved: {n} model(s) re-planned under their budgets");
+            }
+            Ok(_) => {}
+            Err(e) => {
+                eprintln!("error resolving partition plans: {e}");
                 return 1;
             }
         }
@@ -378,6 +506,9 @@ fn infer_burst(
 /// * `--connect ADDR --rate QPS [--shutdown]` — the same open loop
 ///   over TCP against a running `serve --listen` server, via the
 ///   pooled [`Client`]; `--shutdown` drains the server afterwards.
+/// * `--tenants "model=RATExREQS[@SLO_MS],..."` — seeded mixed
+///   multi-tenant open loop ([`loadgen::open_loop_mixed`]) with
+///   per-tenant SLO attainment, in process or with `--connect`.
 ///
 /// Open-loop reliability knobs: `--deadline-ms D` attaches a relative
 /// deadline to every request (expired ones are shed server-side with
@@ -395,6 +526,9 @@ fn infer_burst(
 /// the ids ride the protocol-v3 trailer and the spans buffer in the
 /// server — drain them with `dynamap trace --connect ADDR`.
 pub fn loadgen(args: &Args) -> i32 {
+    if args.get("tenants").is_some() {
+        return loadgen_mixed(args);
+    }
     if args.has("connect") || args.get("connect").is_some() || args.get("rate").is_some() {
         return loadgen_open(args);
     }
@@ -404,7 +538,7 @@ pub fn loadgen(args: &Args) -> i32 {
         requests: args.get_usize("requests", 32).max(1),
         seed: args.get_usize("seed", 99) as u64,
     };
-    let reg_cfg = registry_config(args, cfg.models.len());
+    let reg_cfg = registry_config(args, cfg.models.len(), SloTable::new());
     println!(
         "loadgen: {:?} × {} clients × {} req/client (seed {}, max_batch={}, max_wait={:?})",
         cfg.models,
@@ -533,7 +667,7 @@ fn loadgen_open(args: &Args) -> i32 {
             // so we don't tear down an ambient recorder on exit.
             let _guard = (cfg.trace && !crate::obs::is_active())
                 .then(|| crate::obs::ObsGuard::install(crate::obs::DEFAULT_CAPACITY));
-            let registry = ModelRegistry::new(registry_config(args, 1));
+            let registry = ModelRegistry::new(registry_config(args, 1, SloTable::new()));
             let report = run(&registry);
             if report.is_ok() {
                 println!("{}", registry.metrics().report());
@@ -571,6 +705,112 @@ fn loadgen_open(args: &Args) -> i32 {
         }
         Err(e) => {
             eprintln!("open-loop loadgen failed: {e}");
+            1
+        }
+    }
+}
+
+/// The mixed multi-tenant arm of `loadgen`
+/// (`--tenants "model=RATExREQS[@SLO_MS],..."`): every tenant's
+/// seeded-Poisson stream is merged into one arrival timeline and the
+/// per-tenant summary ends with the aggregate
+/// `slo attainment: high=NN.N% bulk=NN.N%` line the CI `slo-smoke`
+/// job parses. In process, the tenant specs double as the registry's
+/// SLO table (`@SLO_MS` → interactive at that target, no SLO → bulk)
+/// and the partition plans are resolved before load is offered, so
+/// the run measures the co-scheduler, not compile stalls. With
+/// `--connect ADDR` the same workload rides the TCP client against a
+/// server whose own `--slo` flags govern scheduling.
+fn loadgen_mixed(args: &Args) -> i32 {
+    let deadline = args
+        .get("deadline-ms")
+        .map(|_| Duration::from_millis(args.get_usize("deadline-ms", 250) as u64));
+    let tenants = match parse_tenants(&args.get_or("tenants", ""), deadline) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    let cfg = MixedConfig {
+        tenants,
+        seed: args.get_usize("seed", 99) as u64,
+        workers: args.get_usize("workers", 64).max(1),
+    };
+    println!(
+        "mixed open loop: {} tenant(s), seed {}, {} workers",
+        cfg.tenants.len(),
+        cfg.seed,
+        cfg.workers
+    );
+    for t in &cfg.tenants {
+        println!(
+            "  {} @ {:.0} qps × {} requests{}",
+            t.model,
+            t.rate_qps,
+            t.requests,
+            match t.slo {
+                Some(slo) => format!(" (slo {:.0}ms)", slo.as_secs_f64() * 1e3),
+                None => " (bulk)".to_string(),
+            },
+        );
+    }
+    let report = match args.get("connect") {
+        Some(addr) => {
+            let client = match Client::connect(addr) {
+                Ok(c) => c,
+                Err(e) => {
+                    eprintln!("connect failed: {e}");
+                    return 1;
+                }
+            };
+            let report = loadgen::open_loop_mixed(&client, &cfg);
+            if args.has("shutdown") {
+                match client.shutdown_server() {
+                    Ok(()) => println!("server drain requested"),
+                    Err(e) => eprintln!("shutdown request failed: {e}"),
+                }
+            }
+            report
+        }
+        None => {
+            // derive the registry's SLO table from the tenant specs so
+            // the in-process run schedules the very priorities it
+            // measures
+            let mut slos = SloTable::new();
+            for t in &cfg.tenants {
+                let slo = match t.slo {
+                    Some(slo) => ModelSlo::interactive_ms(slo.as_secs_f64() * 1e3),
+                    None => ModelSlo::bulk(),
+                };
+                slos.insert(t.model.clone(), slo);
+            }
+            let registry = ModelRegistry::new(registry_config(args, cfg.tenants.len(), slos));
+            for t in &cfg.tenants {
+                if let Err(e) = registry.host(&t.model) {
+                    eprintln!("error hosting '{}': {e}", t.model);
+                    return 1;
+                }
+            }
+            if let Err(e) = registry.resolve_partition_plans() {
+                eprintln!("error resolving partition plans: {e}");
+                return 1;
+            }
+            let report = loadgen::open_loop_mixed(&registry, &cfg);
+            if report.is_ok() {
+                println!("{}", registry.metrics().report());
+            }
+            registry.shutdown();
+            report
+        }
+    };
+    match report {
+        Ok(r) => {
+            println!("{}", r.summary());
+            0
+        }
+        Err(e) => {
+            eprintln!("mixed loadgen failed: {e}");
             1
         }
     }

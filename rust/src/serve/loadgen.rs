@@ -448,6 +448,266 @@ pub fn open_loop<T: InferTarget + ?Sized>(
     })
 }
 
+/// The derived seed for tenant `t`'s arrival schedule and request
+/// payloads in a [`open_loop_mixed`] run: tenant `t` request `i`'s
+/// payload is [`open_loop_input`]`(tenant_seed(seed, t), i, dims)`.
+/// Public (and deliberately trivial) so tests and offline verifiers
+/// regenerate any tenant's exact request stream from `(seed, t)` alone
+/// and bitwise-compare server replies against `Session::infer`.
+pub fn tenant_seed(seed: u64, tenant: usize) -> u64 {
+    seed ^ (tenant as u64 + 1).wrapping_mul(0xD1B5_4A32_D192_ED03)
+}
+
+/// One tenant's traffic in a [`open_loop_mixed`] run.
+#[derive(Debug, Clone)]
+pub struct TenantLoad {
+    /// Zoo model this tenant targets (alias fine).
+    pub model: String,
+    /// Offered load: mean Poisson arrival rate, QPS.
+    pub rate_qps: f64,
+    /// Requests this tenant offers.
+    pub requests: usize,
+    /// End-to-end latency SLO. `Some` marks the tenant high-priority
+    /// for the report's attainment split: its attainment is the
+    /// fraction of *offered* requests answered OK within the target
+    /// (measured from the scheduled arrival — coordinated-omission
+    /// safe). `None` marks it bulk: its "attainment" is the plain
+    /// service rate `ok / sent`.
+    pub slo: Option<Duration>,
+    /// Optional relative deadline attached to every request (bulk
+    /// tenants typically set one so overload sheds instead of queueing
+    /// without bound).
+    pub deadline: Option<Duration>,
+}
+
+/// Workload shape for one [`open_loop_mixed`] call.
+#[derive(Debug, Clone)]
+pub struct MixedConfig {
+    /// The tenants; their Poisson streams are merged into one arrival
+    /// timeline.
+    pub tenants: Vec<TenantLoad>,
+    /// Master seed; tenant `t` streams from [`tenant_seed`]`(seed, t)`.
+    pub seed: u64,
+    /// Worker threads carrying in-flight requests across all tenants.
+    pub workers: usize,
+}
+
+impl Default for MixedConfig {
+    fn default() -> MixedConfig {
+        MixedConfig { tenants: Vec::new(), seed: 99, workers: 64 }
+    }
+}
+
+/// One tenant's slice of a [`MixedReport`].
+#[derive(Debug, Clone)]
+pub struct TenantReport {
+    /// The tenant's model.
+    pub model: String,
+    /// The SLO it was offered under (`None` = bulk).
+    pub slo: Option<Duration>,
+    /// OK replies whose scheduled-arrival-to-reply latency met the SLO
+    /// (always 0 for bulk tenants).
+    pub within_slo: usize,
+    /// Full per-tenant accounting, same shape as a single-tenant
+    /// [`open_loop`] run.
+    pub report: OpenLoopReport,
+}
+
+/// Outcome of one [`open_loop_mixed`] call.
+#[derive(Debug, Clone)]
+pub struct MixedReport {
+    /// Per-tenant reports, in [`MixedConfig::tenants`] order.
+    pub tenants: Vec<TenantReport>,
+    /// Wall clock from first scheduled arrival to last reply.
+    pub wall: Duration,
+}
+
+impl MixedReport {
+    /// `(high, bulk)` attainment percentages: high = SLO-tenant
+    /// requests answered within their target over requests offered;
+    /// bulk = no-SLO-tenant requests answered at all over requests
+    /// offered. An absent class reports 100% (vacuously attained).
+    pub fn attainment(&self) -> (f64, f64) {
+        let (mut hi_ok, mut hi_sent, mut bulk_ok, mut bulk_sent) = (0usize, 0usize, 0usize, 0usize);
+        for t in &self.tenants {
+            if t.slo.is_some() {
+                hi_ok += t.within_slo;
+                hi_sent += t.report.sent;
+            } else {
+                bulk_ok += t.report.ok;
+                bulk_sent += t.report.sent;
+            }
+        }
+        let pct = |ok: usize, sent: usize| {
+            if sent == 0 { 100.0 } else { 100.0 * ok as f64 / sent as f64 }
+        };
+        (pct(hi_ok, hi_sent), pct(bulk_ok, bulk_sent))
+    }
+
+    /// Multi-line human summary: one line per tenant plus the
+    /// aggregate `slo attainment: high=NN.N% bulk=NN.N%` line (the
+    /// latter is machine-parsed by the CI `slo-smoke` job and the
+    /// serving bench gate — keep its shape).
+    pub fn summary(&self) -> String {
+        let mut s = String::new();
+        for t in &self.tenants {
+            let tier = match t.slo {
+                Some(d) => format!("slo {:.0}ms (met {})", d.as_secs_f64() * 1e3, t.within_slo),
+                None => "bulk".to_string(),
+            };
+            s.push_str(&format!("  {} [{tier}]: {}\n", t.model, t.report.summary()));
+        }
+        let (high, bulk) = self.attainment();
+        s.push_str(&format!("slo attainment: high={high:.1}% bulk={bulk:.1}%"));
+        s
+    }
+}
+
+/// Offer every tenant's seeded-Poisson stream to `target`
+/// concurrently, merged into one arrival timeline, and report per
+/// tenant.
+///
+/// Each tenant's arrival instants and payloads derive from
+/// [`tenant_seed`]`(cfg.seed, t)` alone — adding, removing or
+/// reordering *other* tenants never changes what a given tenant sends,
+/// and the merged dispatch order is a pure sort of the union (ties
+/// broken by tenant index, then request index), so the same `(seed,
+/// config)` replays bit-for-bit. Latency is measured from each
+/// request's scheduled arrival, like [`open_loop`].
+pub fn open_loop_mixed<T: InferTarget + ?Sized>(
+    target: &T,
+    cfg: &MixedConfig,
+) -> Result<MixedReport, DynamapError> {
+    if cfg.tenants.is_empty() {
+        return Err(DynamapError::Config("mixed open loop needs at least one tenant".into()));
+    }
+    let mut dims = Vec::with_capacity(cfg.tenants.len());
+    for tenant in &cfg.tenants {
+        if tenant.rate_qps <= 0.0 || !tenant.rate_qps.is_finite() {
+            return Err(DynamapError::Config(format!(
+                "tenant '{}' rate must be a positive QPS figure, got {}",
+                tenant.model, tenant.rate_qps
+            )));
+        }
+        if tenant.requests == 0 {
+            return Err(DynamapError::Config(format!(
+                "tenant '{}' needs at least one request",
+                tenant.model
+            )));
+        }
+        dims.push(model_input_dims(&tenant.model)?);
+    }
+
+    // per-tenant Poisson schedules, merged into one timeline
+    let mut schedule: Vec<(Duration, usize, usize)> = Vec::new();
+    for (t, tenant) in cfg.tenants.iter().enumerate() {
+        let mut rng = Rng::new(tenant_seed(cfg.seed, t));
+        let mut at = 0.0f64;
+        for i in 0..tenant.requests {
+            at += -(1.0 - rng.f64()).ln() / tenant.rate_qps;
+            schedule.push((Duration::from_secs_f64(at), t, i));
+        }
+    }
+    schedule.sort(); // Duration is Ord; ties break by (tenant, index)
+
+    /// Per-tenant accounting, all under one mutex per tenant — the
+    /// worker touches it once per reply, never on the dispatch path.
+    #[derive(Default)]
+    struct Acc {
+        ok: Vec<f64>,
+        shed: Vec<f64>,
+        within: usize,
+        deadline_miss: usize,
+        errors: usize,
+    }
+    let accs: Vec<Mutex<Acc>> = cfg.tenants.iter().map(|_| Mutex::new(Acc::default())).collect();
+
+    let workers = cfg.workers.clamp(1, schedule.len());
+    let (tx, rx) = mpsc::channel::<(usize, usize, Duration)>();
+    let rx = Mutex::new(rx);
+    let start = Instant::now();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let job = rx.lock().unwrap_or_else(|p| p.into_inner()).recv();
+                let Ok((t, i, scheduled)) = job else { break };
+                let tenant = &cfg.tenants[t];
+                let input = open_loop_input(tenant_seed(cfg.seed, t), i, dims[t]);
+                let sent = Instant::now();
+                match target.infer_deadline(&tenant.model, &input, tenant.deadline) {
+                    Ok(_) => {
+                        let e2e = start.elapsed().saturating_sub(scheduled);
+                        let mut acc = accs[t].lock().unwrap_or_else(|p| p.into_inner());
+                        acc.ok.push(e2e.as_secs_f64() * 1e6);
+                        if tenant.slo.is_some_and(|slo| e2e <= slo) {
+                            acc.within += 1;
+                        }
+                    }
+                    Err(DynamapError::Overloaded { .. }) => {
+                        let us = sent.elapsed().as_secs_f64() * 1e6;
+                        accs[t].lock().unwrap_or_else(|p| p.into_inner()).shed.push(us);
+                    }
+                    Err(DynamapError::DeadlineExceeded { .. }) => {
+                        accs[t].lock().unwrap_or_else(|p| p.into_inner()).deadline_miss += 1;
+                    }
+                    Err(_) => {
+                        accs[t].lock().unwrap_or_else(|p| p.into_inner()).errors += 1;
+                    }
+                }
+            });
+        }
+        for (at, t, i) in &schedule {
+            let now = start.elapsed();
+            if *at > now {
+                std::thread::sleep(*at - now);
+            }
+            tx.send((*t, *i, *at)).expect("mixed open-loop worker pool died");
+        }
+        drop(tx);
+    });
+    let wall = start.elapsed();
+
+    let tenants = cfg
+        .tenants
+        .iter()
+        .zip(accs)
+        .map(|(tenant, acc)| {
+            let acc = acc.into_inner().unwrap_or_else(|p| p.into_inner());
+            let mut latency = LatencyStats::new();
+            for us in &acc.ok {
+                latency.push(*us);
+            }
+            let mut shed_latency = LatencyStats::new();
+            for us in &acc.shed {
+                shed_latency.push(*us);
+            }
+            let ok = latency.count();
+            TenantReport {
+                model: tenant.model.clone(),
+                slo: tenant.slo,
+                within_slo: acc.within,
+                report: OpenLoopReport {
+                    offered_qps: tenant.rate_qps,
+                    achieved_qps: if wall.as_secs_f64() > 0.0 {
+                        ok as f64 / wall.as_secs_f64()
+                    } else {
+                        0.0
+                    },
+                    sent: tenant.requests,
+                    ok,
+                    shed: shed_latency.count(),
+                    deadline_miss: acc.deadline_miss,
+                    errors: acc.errors,
+                    wall,
+                    latency,
+                    shed_latency,
+                },
+            }
+        })
+        .collect();
+    Ok(MixedReport { tenants, wall })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -542,5 +802,127 @@ mod tests {
         // invalid configs are typed, not panics
         assert!(open_loop(&target, &OpenLoopConfig { rate_qps: 0.0, ..cfg.clone() }).is_err());
         assert!(open_loop(&target, &OpenLoopConfig { requests: 0, ..cfg }).is_err());
+    }
+
+    #[test]
+    fn tenant_seeds_are_stable_and_distinct() {
+        assert_eq!(tenant_seed(99, 0), tenant_seed(99, 0));
+        assert_ne!(tenant_seed(99, 0), tenant_seed(99, 1));
+        assert_ne!(tenant_seed(99, 0), tenant_seed(100, 0));
+        // the payload contract tests and verifiers rely on
+        let a = open_loop_input(tenant_seed(99, 1), 5, (4, 16, 16));
+        let b = open_loop_input(tenant_seed(99, 1), 5, (4, 16, 16));
+        assert_eq!(a, b);
+    }
+
+    /// An always-OK echo target: replies instantly, so the mixed
+    /// report's accounting (not the server) is what's under test.
+    struct Echo;
+    impl InferTarget for Echo {
+        fn infer_once(
+            &self,
+            _model: &str,
+            input: &TensorBuf,
+        ) -> Result<TensorBuf, DynamapError> {
+            Ok(input.clone())
+        }
+    }
+
+    fn two_tenant_cfg() -> MixedConfig {
+        MixedConfig {
+            tenants: vec![
+                TenantLoad {
+                    model: "mini-inception".into(),
+                    rate_qps: 20_000.0,
+                    requests: 60,
+                    slo: Some(Duration::from_millis(250)),
+                    deadline: None,
+                },
+                TenantLoad {
+                    model: "mini-vgg".into(),
+                    rate_qps: 40_000.0,
+                    requests: 90,
+                    slo: None,
+                    deadline: None,
+                },
+            ],
+            seed: 99,
+            workers: 8,
+        }
+    }
+
+    #[test]
+    fn mixed_open_loop_accounts_per_tenant_and_replays() {
+        let cfg = two_tenant_cfg();
+        let r = open_loop_mixed(&Echo, &cfg).unwrap();
+        assert_eq!(r.tenants.len(), 2);
+        let hi = &r.tenants[0];
+        let bulk = &r.tenants[1];
+        assert_eq!(hi.report.sent, 60);
+        assert_eq!(hi.report.ok, 60, "echo target answers everything");
+        assert_eq!(bulk.report.sent, 90);
+        assert_eq!(bulk.report.ok, 90);
+        // an instant echo under a 250 ms SLO attains everything
+        assert_eq!(hi.within_slo, 60);
+        assert_eq!(bulk.within_slo, 0, "bulk tenants have no SLO to meet");
+        let (high, bulk_pct) = r.attainment();
+        assert!((high - 100.0).abs() < 1e-9);
+        assert!((bulk_pct - 100.0).abs() < 1e-9);
+        assert!(
+            r.summary().contains("slo attainment: high=100.0% bulk=100.0%"),
+            "{}",
+            r.summary()
+        );
+        assert!(r.summary().contains("mini-inception [slo 250ms"), "{}", r.summary());
+        assert!(r.summary().contains("mini-vgg [bulk]"), "{}", r.summary());
+
+        // same (seed, config) → identical accounting, replayed
+        let r2 = open_loop_mixed(&Echo, &cfg).unwrap();
+        for (a, b) in r.tenants.iter().zip(&r2.tenants) {
+            assert_eq!(a.report.ok, b.report.ok);
+            assert_eq!(a.report.sent, b.report.sent);
+            assert_eq!(a.within_slo, b.within_slo);
+        }
+    }
+
+    #[test]
+    fn mixed_open_loop_rejects_bad_configs() {
+        assert!(open_loop_mixed(&Echo, &MixedConfig::default()).is_err());
+        let mut cfg = two_tenant_cfg();
+        cfg.tenants[0].rate_qps = 0.0;
+        assert!(open_loop_mixed(&Echo, &cfg).is_err());
+        let mut cfg = two_tenant_cfg();
+        cfg.tenants[1].requests = 0;
+        assert!(open_loop_mixed(&Echo, &cfg).is_err());
+        let mut cfg = two_tenant_cfg();
+        cfg.tenants[0].model = "nope".into();
+        assert!(open_loop_mixed(&Echo, &cfg).is_err());
+    }
+
+    #[test]
+    fn mixed_schedules_merge_deterministically() {
+        // regenerate both tenants' schedules exactly as open_loop_mixed
+        // does and check the merged order is a pure function of inputs
+        let cfg = two_tenant_cfg();
+        let build = || {
+            let mut schedule: Vec<(Duration, usize, usize)> = Vec::new();
+            for (t, tenant) in cfg.tenants.iter().enumerate() {
+                let mut rng = Rng::new(tenant_seed(cfg.seed, t));
+                let mut at = 0.0f64;
+                for i in 0..tenant.requests {
+                    at += -(1.0 - rng.f64()).ln() / tenant.rate_qps;
+                    schedule.push((Duration::from_secs_f64(at), t, i));
+                }
+            }
+            schedule.sort();
+            schedule
+        };
+        let a = build();
+        assert_eq!(a, build());
+        assert_eq!(a.len(), 150);
+        // both tenants interleave rather than running back to back
+        let first_50_tenants: std::collections::BTreeSet<usize> =
+            a.iter().take(50).map(|(_, t, _)| *t).collect();
+        assert_eq!(first_50_tenants.len(), 2);
     }
 }

@@ -48,6 +48,17 @@ pub struct ModelMetrics {
     /// [`crate::api::DynamapError::Overloaded`] without touching the
     /// latency mutex on the (shed) submit path.
     ewma_us: AtomicU64,
+    /// This tenant's SLO latency target, µs (`0` = no SLO). Set once at
+    /// host time from [`crate::serve::sched::ModelSlo`]; every flushed
+    /// latency sample is compared against it so attainment is exact,
+    /// not re-derived from bucketed percentiles.
+    slo_target_us: AtomicU64,
+    /// Served requests whose end-to-end latency exceeded the SLO
+    /// target.
+    slo_miss: AtomicU64,
+    /// Best-effort flushes deferred because a high-priority tenant was
+    /// under SLO pressure.
+    deferrals: AtomicU64,
     inner: Mutex<Inner>,
 }
 
@@ -80,8 +91,37 @@ impl ModelMetrics {
             hedges_won: AtomicU64::new(0),
             panics: AtomicU64::new(0),
             ewma_us: AtomicU64::new(0),
+            slo_target_us: AtomicU64::new(0),
+            slo_miss: AtomicU64::new(0),
+            deferrals: AtomicU64::new(0),
             inner: Mutex::new(Inner::default()),
         }
+    }
+
+    /// Install this tenant's SLO latency target (µs, `0` disables).
+    /// Subsequent served requests count toward attainment against it.
+    pub fn set_slo_target_us(&self, us: u64) {
+        self.slo_target_us.store(us, Ordering::Relaxed);
+    }
+
+    /// The installed SLO latency target, µs (`0` = no SLO).
+    pub fn slo_target_us(&self) -> u64 {
+        self.slo_target_us.load(Ordering::Relaxed)
+    }
+
+    /// Served requests that exceeded the SLO target so far.
+    pub fn slo_miss(&self) -> u64 {
+        self.slo_miss.load(Ordering::Relaxed)
+    }
+
+    /// A best-effort flush was deferred under high-priority pressure.
+    pub fn record_deferral(&self) {
+        self.deferrals.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Best-effort flush deferrals so far.
+    pub fn deferrals(&self) -> u64 {
+        self.deferrals.load(Ordering::Relaxed)
     }
 
     /// Model this telemetry belongs to.
@@ -218,6 +258,15 @@ impl ModelMetrics {
             inner.latency.record(us);
         }
         drop(inner);
+        // exact SLO attainment: compare each served sample against the
+        // target outside the lock (target and counter are atomics)
+        let target = self.slo_target_us.load(Ordering::Relaxed);
+        if target > 0 {
+            let misses = e2e_us.iter().filter(|&&us| us > target as f64).count();
+            if misses > 0 {
+                self.slo_miss.fetch_add(misses as u64, Ordering::Relaxed);
+            }
+        }
         // blend the batch mean into the retry-hint EWMA (¾ old + ¼ new);
         // a lock-free store is fine — the hint is advisory, and a lost
         // race between two flushes loses one blend step, not the value
@@ -267,6 +316,9 @@ impl ModelMetrics {
             queue_depth: self.queue_depth(),
             max_queue_depth: self.max_depth.load(Ordering::Relaxed),
             swaps: self.swaps(),
+            slo_target_us: self.slo_target_us(),
+            slo_miss: self.slo_miss(),
+            deferrals: self.deferrals(),
             batch_hist: inner.batch_hist.clone(),
         }
     }
@@ -318,18 +370,46 @@ pub struct ModelSnapshot {
     pub max_queue_depth: usize,
     /// Plan hot-swaps applied by the tune loop.
     pub swaps: usize,
+    /// SLO latency target, µs (`0` = no SLO configured).
+    pub slo_target_us: u64,
+    /// Served requests that exceeded the SLO target.
+    pub slo_miss: u64,
+    /// Best-effort flushes deferred under high-priority pressure.
+    pub deferrals: u64,
     /// Flushed batch size → number of batches of that size.
     pub batch_hist: BTreeMap<usize, u64>,
 }
 
 impl ModelSnapshot {
+    /// Fraction of served requests that met the SLO target, percent —
+    /// `None` when no SLO is configured or nothing was served yet.
+    /// Shed/deadline-shed requests never ran, so they are accounted in
+    /// their own columns, not here.
+    pub fn slo_attainment_pct(&self) -> Option<f64> {
+        if self.slo_target_us == 0 || self.requests == 0 {
+            return None;
+        }
+        Some(100.0 * (1.0 - self.slo_miss as f64 / self.requests as f64))
+    }
+
     /// One-line human summary.
     pub fn summary(&self) -> String {
+        let slo = match self.slo_attainment_pct() {
+            Some(pct) => format!(
+                "  slo {}ms att {pct:.1}% ({} miss)",
+                self.slo_target_us / 1000,
+                self.slo_miss
+            ),
+            None if self.slo_target_us > 0 => {
+                format!("  slo {}ms att -", self.slo_target_us / 1000)
+            }
+            None => String::new(),
+        };
         format!(
             "{}: {} req ({} err, {} shed, {} dl-miss) {:.1} qps  e2e mean={:.0}µs \
              p50={:.0}µs p95={:.0}µs p99={:.0}µs p99.9={:.0}µs  {} batches (mean \
              {:.2}, hist {})  max depth {}  swaps {}  retries {}  hedges won {}  \
-             panics {}",
+             panics {}  deferrals {}{slo}",
             self.model,
             self.requests,
             self.errors,
@@ -348,7 +428,8 @@ impl ModelSnapshot {
             self.swaps,
             self.retries,
             self.hedges_won,
-            self.panics_recovered
+            self.panics_recovered,
+            self.deferrals
         )
     }
 
@@ -393,6 +474,9 @@ impl ModelSnapshot {
             ("queue_depth", Json::Num(self.queue_depth as f64)),
             ("max_queue_depth", Json::Num(self.max_queue_depth as f64)),
             ("swaps", Json::Num(self.swaps as f64)),
+            ("slo_target_us", Json::Num(self.slo_target_us as f64)),
+            ("slo_miss", Json::Num(self.slo_miss as f64)),
+            ("deferrals", Json::Num(self.deferrals as f64)),
             ("batch_hist", Json::Arr(batch_hist)),
         ])
     }
@@ -435,10 +519,25 @@ impl ServerMetrics {
             &[
                 "model", "req", "err", "shed", "dl miss", "qps", "mean µs", "p50 µs",
                 "p95 µs", "p99 µs", "p99.9 µs", "batches", "mean b", "depth max",
-                "swaps", "retries", "hedged", "panics", "batch hist",
+                "swaps", "retries", "hedged", "panics", "slo ms", "slo p99 µs",
+                "miss %", "defer", "batch hist",
             ],
         );
         for s in self.snapshots() {
+            // per-tenant SLO columns: target, attained p99 (only shown
+            // when a target exists, so SLO-free models stay visually
+            // quiet) and exact miss rate
+            let (slo_ms, slo_p99, miss_pct) = if s.slo_target_us > 0 {
+                (
+                    format!("{:.0}", s.slo_target_us as f64 / 1000.0),
+                    format!("{:.0}", s.p99_us),
+                    s.slo_attainment_pct()
+                        .map(|a| format!("{:.1}", 100.0 - a))
+                        .unwrap_or_else(|| "-".into()),
+                )
+            } else {
+                ("-".into(), "-".into(), "-".into())
+            };
             t.row(vec![
                 s.model.clone(),
                 s.requests.to_string(),
@@ -458,6 +557,10 @@ impl ServerMetrics {
                 s.retries.to_string(),
                 s.hedges_won.to_string(),
                 s.panics_recovered.to_string(),
+                slo_ms,
+                slo_p99,
+                miss_pct,
+                s.deferrals.to_string(),
                 s.hist_summary(),
             ]);
         }
@@ -655,6 +758,56 @@ mod tests {
         assert_eq!(hist.count(), 2);
         assert_eq!(hist.quantile(50.0), m.latency_histogram().quantile(50.0));
         assert_eq!(entry.get("mean_us").as_f64(), Some(200.0));
+    }
+
+    #[test]
+    fn slo_attainment_is_exact_and_exported() {
+        let m = ModelMetrics::new("slo");
+        // no target: attainment undefined, summary silent
+        m.record_requests(&[100.0]);
+        assert_eq!(m.snapshot().slo_attainment_pct(), None);
+        assert!(!m.snapshot().summary().contains("slo"), "{}", m.snapshot().summary());
+
+        m.set_slo_target_us(25_000);
+        assert_eq!(m.slo_target_us(), 25_000);
+        // 3 under target, 1 over: misses counted exactly, not bucketed
+        m.record_requests(&[1_000.0, 24_999.0, 25_001.0, 2_000.0]);
+        assert_eq!(m.slo_miss(), 1);
+        let s = m.snapshot();
+        assert_eq!(s.slo_target_us, 25_000);
+        assert_eq!(s.slo_miss, 1);
+        // 5 served total (1 pre-target), 1 miss → 80% attainment
+        assert!((s.slo_attainment_pct().unwrap() - 80.0).abs() < 1e-9);
+        assert!(s.summary().contains("slo 25ms att 80.0% (1 miss)"), "{}", s.summary());
+
+        m.record_deferral();
+        m.record_deferral();
+        assert_eq!(m.deferrals(), 2);
+        assert!(m.snapshot().summary().contains("deferrals 2"));
+    }
+
+    #[test]
+    fn slo_columns_land_in_report_and_stats_json() {
+        let sm = ServerMetrics::new();
+        let hi = sm.model("hi");
+        hi.set_slo_target_us(10_000);
+        hi.record_requests(&[5_000.0, 15_000.0]);
+        sm.model("bulk").record_requests(&[50_000.0]);
+        let report = sm.report();
+        assert!(report.contains("slo ms"), "{report}");
+        assert!(report.contains("slo p99 µs"), "{report}");
+        assert!(report.contains("miss %"), "{report}");
+        assert!(report.contains("defer"), "{report}");
+        assert!(report.contains("50.0"), "hi misses half: {report}");
+
+        let doc = Json::parse(&sm.to_json().to_string()).expect("stats JSON parses");
+        let entry = doc.get("models").at(1); // BTreeMap order: bulk, hi
+        assert_eq!(entry.get("model").as_str(), Some("hi"));
+        assert_eq!(entry.get("slo_target_us").as_u64(), Some(10_000));
+        assert_eq!(entry.get("slo_miss").as_u64(), Some(1));
+        assert_eq!(entry.get("deferrals").as_u64(), Some(0));
+        let bulk = doc.get("models").at(0);
+        assert_eq!(bulk.get("slo_target_us").as_u64(), Some(0));
     }
 
     #[test]

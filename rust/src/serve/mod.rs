@@ -51,6 +51,17 @@
 //!   [`crate::tune`] can hot-swap a re-mapped plan into a live model
 //!   ([`ModelRegistry::swap_state`]) without dropping, duplicating or
 //!   corrupting a single reply.
+//! * [`sched`] makes co-hosted models *tenants*: per-model SLOs
+//!   ([`RegistryConfig::slos`]), a deterministic thread-budget
+//!   partitioner over `priority × demand`, per-partition plan
+//!   re-solves through the fingerprint-keyed plan cache
+//!   ([`ModelRegistry::resolve_partition_plans`]), and priority-aware
+//!   flushes — best-effort batches defer (bounded, never dropped)
+//!   while a high-priority tenant's queue delay threatens its SLO.
+//!   Attainment (target / attained p99 / miss count) lands in
+//!   [`ServerMetrics`] and the wire `Stats` frame;
+//!   [`loadgen::open_loop_mixed`] drives seeded multi-tenant traffic
+//!   against it.
 //!
 //! ```no_run
 //! use dynamap::serve::{ModelRegistry, RegistryConfig};
@@ -72,12 +83,17 @@ pub mod loadgen;
 pub mod metrics;
 pub mod queue;
 pub mod registry;
+pub mod sched;
 
 pub use loadgen::{
-    open_loop, InferTarget, LoadReport, LoadgenConfig, OpenLoopConfig, OpenLoopReport,
+    open_loop, open_loop_mixed, tenant_seed, InferTarget, LoadReport, LoadgenConfig,
+    MixedConfig, MixedReport, OpenLoopConfig, OpenLoopReport, TenantLoad, TenantReport,
 };
 pub use metrics::{ModelMetrics, ModelSnapshot, ServerMetrics};
 pub use queue::{BatchConfig, BatchQueue};
 pub use registry::{
     synthesize_artifacts, ModelHost, ModelRegistry, RegistryConfig, StateCell,
+};
+pub use sched::{
+    partition_threads, ModelSlo, QueuePolicy, SchedCoordinator, SloTable, Tenant,
 };

@@ -33,6 +33,7 @@ use crate::runtime::TensorBuf;
 
 use super::metrics::ModelMetrics;
 use super::registry::StateCell;
+use super::sched::QueuePolicy;
 
 /// A request hit a queue whose scheduler has shut down (e.g. the model
 /// was evicted from the registry between lookup and submit) — the
@@ -88,13 +89,27 @@ pub struct BatchQueue {
 }
 
 impl BatchQueue {
-    /// Spawn the scheduler thread over `cell`'s model. The scheduler
+    /// Spawn the scheduler thread over `cell`'s model with the default
+    /// (inert) [`QueuePolicy`]: no SLO, no pressure coordination, no
+    /// flush thread cap — exactly the pre-sched behavior. The scheduler
     /// re-reads the cell at every flush, so hot-swapped states take
     /// effect without restarting the queue.
     pub fn new(
         cell: Arc<StateCell>,
         config: BatchConfig,
         metrics: Arc<ModelMetrics>,
+    ) -> BatchQueue {
+        BatchQueue::with_policy(cell, config, metrics, QueuePolicy::default())
+    }
+
+    /// [`BatchQueue::new`] as one tenant among many: `policy` carries
+    /// the model's SLO, the registry-wide pressure gauge and its live
+    /// thread-partition budget (see [`crate::serve::sched`]).
+    pub fn with_policy(
+        cell: Arc<StateCell>,
+        config: BatchConfig,
+        metrics: Arc<ModelMetrics>,
+        policy: QueuePolicy,
     ) -> BatchQueue {
         let state = cell.get();
         let model = state.model().to_string();
@@ -105,7 +120,7 @@ impl BatchQueue {
         let worker_metrics = metrics.clone();
         let worker = thread::Builder::new()
             .name(format!("dynamap-batch-{model}"))
-            .spawn(move || scheduler_loop(rx, cell, config, worker_metrics))
+            .spawn(move || scheduler_loop(rx, cell, config, worker_metrics, policy))
             .expect("spawn batch scheduler thread");
         BatchQueue {
             model,
@@ -241,11 +256,24 @@ impl Drop for BatchQueue {
 /// full or past the deadline, flush against the cell's *current*
 /// state, repeat. Exits when every sender is gone and the channel is
 /// drained.
+///
+/// Multi-tenant behavior (inert under the default [`QueuePolicy`]):
+/// an interactive tenant whose oldest queued request has waited ≥ ¼ of
+/// its latency target raises pressure on the shared
+/// [`crate::serve::sched::SchedCoordinator`] before flushing; a
+/// best-effort tenant parks an assembled batch while pressure holds —
+/// bounded to `8 × max_wait` so bulk traffic is deferred, never
+/// starved — and keeps absorbing arrivals while parked, then flushes
+/// the whole batch with its fan-out squeezed to one worker if pressure
+/// still holds. Deferral never drops or reorders a request: the batch
+/// that was assembled is the batch that flushes (plus any arrivals
+/// absorbed while parked), each caller still gets exactly one reply.
 fn scheduler_loop(
     rx: mpsc::Receiver<Request>,
     cell: Arc<StateCell>,
     config: BatchConfig,
     metrics: Arc<ModelMetrics>,
+    policy: QueuePolicy,
 ) {
     loop {
         let first = match rx.recv() {
@@ -289,10 +317,53 @@ fn scheduler_loop(
                 }
             }
         }
+        // SLO pressure: an interactive tenant about to flush a batch
+        // whose oldest request burned ≥ ¼ of the latency target on
+        // queue wait tells best-effort tenants to step aside for the
+        // next half-target window
+        if let (Some(coord), Some(target), false) =
+            (&policy.coordinator, policy.slo.latency_target, policy.slo.best_effort)
+        {
+            if batch[0].enqueued.elapsed() * 4 >= target {
+                coord.raise((target / 2).max(config.max_wait));
+            }
+        }
+        // best-effort deferral: park the assembled batch while pressure
+        // holds, still absorbing arrivals, for at most 8 × max_wait —
+        // bulk work yields the CPU to the pressured tenant but is never
+        // starved outright, and nothing is dropped
+        if policy.slo.best_effort && !disconnected {
+            if let Some(coord) = &policy.coordinator {
+                let park_until = Instant::now() + (config.max_wait * 8).max(Duration::from_millis(2));
+                let mut deferred = false;
+                while coord.pressured() && Instant::now() < park_until {
+                    deferred = true;
+                    while batch.len() < config.max_batch {
+                        match rx.try_recv() {
+                            Ok(r) => batch.push(r),
+                            Err(mpsc::TryRecvError::Empty) => break,
+                            Err(mpsc::TryRecvError::Disconnected) => {
+                                disconnected = true;
+                                break;
+                            }
+                        }
+                    }
+                    if disconnected {
+                        break;
+                    }
+                    thread::sleep(Duration::from_micros(200));
+                }
+                if deferred {
+                    metrics.record_deferral();
+                }
+            }
+        }
         // snapshot the serving state per flush: the whole batch runs on
-        // one plan, and a concurrent hot swap lands on the next batch
+        // one plan, and a concurrent hot swap lands on the next batch —
+        // deferral happens *before* this snapshot, so a parked batch
+        // can never mix plan epochs either
         let state = cell.get();
-        flush(&state, &metrics, batch);
+        flush(&state, &metrics, batch, policy.flush_threads());
         if disconnected {
             break;
         }
@@ -328,6 +399,7 @@ fn flush(
     state: &crate::api::session::NativeState,
     metrics: &ModelMetrics,
     batch: Vec<Request>,
+    thread_cap: usize,
 ) {
     use std::panic::{catch_unwind, AssertUnwindSafe};
 
@@ -372,11 +444,12 @@ fn flush(
     metrics.record_batch(inputs.len());
 
     // per-request compute with per-request blast radius: panics are
-    // caught inside the worker closure, so `parallel_map` never
-    // re-raises and the scheduler thread survives
+    // caught inside the worker closure, so the parallel map never
+    // re-raises and the scheduler thread survives. `thread_cap` is the
+    // tenant's live partition budget (0 = uncapped)
     let t_flush = Instant::now();
     let results: Vec<Result<(TensorBuf, InferMetrics), DynamapError>> =
-        crate::util::parallel::parallel_map(&inputs, |_, (input, trace)| {
+        crate::util::parallel::parallel_map_capped(&inputs, thread_cap, |_, (input, trace)| {
             catch_unwind(AssertUnwindSafe(|| state.infer_traced(input, *trace)))
                 .unwrap_or_else(|payload| {
                     Err(DynamapError::Serve(format!(

@@ -36,6 +36,7 @@ use crate::util::rng::Rng;
 
 use super::metrics::{ModelMetrics, ServerMetrics};
 use super::queue::{BatchConfig, BatchQueue};
+use super::sched::{partition_threads, ModelSlo, QueuePolicy, SchedCoordinator, SloTable, Tenant};
 
 /// Configuration for [`ModelRegistry`].
 #[derive(Debug, Clone)]
@@ -73,6 +74,13 @@ pub struct RegistryConfig {
     /// fits. Off by default (`serve --tune` and the adaptive bench
     /// turn it on); attaching a profiler never changes outputs.
     pub profile: bool,
+    /// Per-model SLOs keyed by model name (zoo aliases accepted).
+    /// An empty table — the default — disables multi-tenant scheduling
+    /// entirely: no pressure coordination, no thread partitioning, no
+    /// flush deferral, bit-for-bit the single-tenant behavior. A
+    /// non-empty table makes every hosted model a tenant: models
+    /// missing from the table serve under [`ModelSlo::default`].
+    pub slos: SloTable,
 }
 
 impl Default for RegistryConfig {
@@ -87,6 +95,7 @@ impl Default for RegistryConfig {
             batch: BatchConfig::default(),
             max_inflight: 0,
             profile: false,
+            slos: SloTable::new(),
         }
     }
 }
@@ -153,6 +162,13 @@ pub struct ModelHost {
     inflight: AtomicUsize,
     /// Admission budget ([`RegistryConfig::max_inflight`]; 0 = unbounded).
     max_inflight: usize,
+    /// This tenant's SLO (the default when the registry has no table
+    /// entry for the model).
+    slo: ModelSlo,
+    /// Live thread-partition budget, written by
+    /// [`ModelRegistry::repartition`] and read by the batch scheduler
+    /// at every flush (`0` = uncapped).
+    threads: Arc<AtomicUsize>,
 }
 
 /// RAII guard for one slot of a host's bounded in-flight budget;
@@ -229,6 +245,18 @@ impl ModelHost {
     /// Admission budget this host enforces (0 = unbounded).
     pub fn max_inflight(&self) -> usize {
         self.max_inflight
+    }
+
+    /// This tenant's SLO.
+    pub fn slo(&self) -> ModelSlo {
+        self.slo
+    }
+
+    /// The tenant's current thread-partition budget (`0` = uncapped —
+    /// the value before the first [`ModelRegistry::repartition`], and
+    /// always for SLO-free registries).
+    pub fn thread_budget(&self) -> usize {
+        self.threads.load(Ordering::Relaxed)
     }
 
     /// Submit one request to the model's batch queue and block for the
@@ -344,6 +372,10 @@ pub struct ModelRegistry {
     /// manifest or duplicate an expensive compile.
     build_lock: Mutex<()>,
     loads: AtomicUsize,
+    /// Pressure gauge shared by every hosted tenant's batch scheduler
+    /// (only wired into queues when [`RegistryConfig::slos`] is
+    /// non-empty).
+    coordinator: Arc<SchedCoordinator>,
 }
 
 impl ModelRegistry {
@@ -355,7 +387,14 @@ impl ModelRegistry {
             resident: Mutex::new(Vec::new()),
             build_lock: Mutex::new(()),
             loads: AtomicUsize::new(0),
+            coordinator: Arc::new(SchedCoordinator::new()),
         }
+    }
+
+    /// The registry-wide SLO pressure gauge (inert unless
+    /// [`RegistryConfig::slos`] is non-empty).
+    pub fn coordinator(&self) -> &Arc<SchedCoordinator> {
+        &self.coordinator
     }
 
     /// The configuration the registry was built with.
@@ -429,6 +468,10 @@ impl ModelRegistry {
         drop(build_guard);
         for old in evicted {
             old.shutdown();
+        }
+        // the tenant set changed: rebalance every resident budget
+        if !self.config.slos.is_empty() {
+            self.repartition();
         }
         Ok(host)
     }
@@ -596,6 +639,9 @@ impl ModelRegistry {
         match host {
             Some(h) => {
                 h.shutdown();
+                if !self.config.slos.is_empty() {
+                    self.repartition();
+                }
                 true
             }
             None => false,
@@ -609,6 +655,95 @@ impl ModelRegistry {
         for (_, host) in hosts {
             host.shutdown();
         }
+    }
+
+    /// Recompute every resident tenant's thread budget from the SLO
+    /// table and current measured demand (`qps + queue depth`, clamped
+    /// to ≥ 1 so an idle tenant still weighs its priority), and publish
+    /// the budgets into each host's live atomic — the batch schedulers
+    /// pick them up at their next flush without any coordination.
+    /// Returns the budgets by model name. Runs automatically whenever
+    /// the tenant set changes (host / evict); callers with fresher
+    /// demand signals (the serve CLI's stats tick, tests) may re-run it
+    /// any time — the computation is pure given its inputs, so
+    /// re-running with unchanged inputs is idempotent.
+    pub fn repartition(&self) -> std::collections::BTreeMap<String, usize> {
+        let total = crate::util::parallel::worker_count(usize::MAX);
+        let hosts: Vec<(String, Arc<ModelHost>)> = self.lock_resident().clone();
+        let tenants: Vec<Tenant> = hosts
+            .iter()
+            .map(|(name, host)| {
+                let snap = host.metrics.snapshot();
+                Tenant {
+                    model: name.clone(),
+                    priority: host.slo.priority,
+                    demand: (snap.qps + snap.queue_depth as f64).max(1.0),
+                }
+            })
+            .collect();
+        let budgets = partition_threads(total, &tenants);
+        for (name, host) in &hosts {
+            if let Some(budget) = budgets.get(name) {
+                host.threads.store(*budget, Ordering::Relaxed);
+            }
+        }
+        budgets
+    }
+
+    /// Re-solve every resident tenant's plan *under its thread
+    /// partition*: a tenant owning `b` of the host's `t` threads sees
+    /// per-layer latencies stretched by `t / b`, so its DSE re-runs
+    /// with [`crate::cost::DeviceCalibration::scaled`]`(t / b)` — which
+    /// changes the compiler fingerprint, so the shared plan cache keys
+    /// one entry per (model, partition) and a repeat resolve is
+    /// DSE-free. The re-solved state is published through the ordinary
+    /// [`ModelRegistry::swap_state`] hot-swap path (same model, same
+    /// weights, same input shape; only the algorithm map may differ),
+    /// so in-flight batches finish on their plan and replies stay
+    /// bitwise-correct throughout. Tenants owning the full host (or
+    /// not yet partitioned) are skipped — their hosting-time plan
+    /// already assumed every thread. Returns how many tenants were
+    /// re-solved.
+    pub fn resolve_partition_plans(&self) -> Result<usize, DynamapError> {
+        let total = crate::util::parallel::worker_count(usize::MAX);
+        let hosts: Vec<(String, Arc<ModelHost>)> = self.lock_resident().clone();
+        let mut swapped = 0;
+        for (name, host) in hosts {
+            let budget = host.thread_budget();
+            if budget == 0 || budget >= total {
+                continue;
+            }
+            let factor = total as f64 / budget as f64;
+            let calibration =
+                self.config.compiler.config().calibration.clone().scaled(factor);
+            let compiler = self.config.compiler.clone().calibration(calibration);
+            let dir = self.config.artifacts_root.join(&name);
+            let mut builder = Session::builder(dir.to_string_lossy().into_owned())
+                .backend(Backend::Native)
+                .compiler(compiler);
+            if let Some(cache) = &self.config.plan_cache {
+                builder = builder.plan_cache(cache);
+            }
+            let session = builder.build()?;
+            let plan_shape = session.plan().map(|a| (a.plan.p1, a.plan.p2));
+            let state = session.native_state().ok_or_else(|| {
+                DynamapError::Serve("native session produced no shareable state".into())
+            })?;
+            self.swap_state(&name, state, plan_shape)?;
+            swapped += 1;
+        }
+        Ok(swapped)
+    }
+
+    /// The SLO for `canonical`, resolving zoo aliases in the table's
+    /// keys ("mini" configures "mini-inception").
+    fn slo_for(&self, canonical: &str) -> ModelSlo {
+        for (name, slo) in &self.config.slos {
+            if zoo::canonical_name(name) == Some(canonical) || name.as_str() == canonical {
+                return *slo;
+            }
+        }
+        ModelSlo::default()
     }
 
     fn lock_resident(&self) -> std::sync::MutexGuard<'_, Vec<(String, Arc<ModelHost>)>> {
@@ -667,7 +802,25 @@ impl ModelRegistry {
         let input = state.input_dims();
         let metrics = self.metrics.model(canonical);
         let cell = Arc::new(StateCell::new(state));
-        let queue = BatchQueue::new(cell.clone(), self.config.batch.clone(), metrics.clone());
+        // tenant wiring: resolve the SLO, expose the target to the
+        // metrics (attainment counting starts with the first request)
+        // and hand the scheduler its policy — with the shared pressure
+        // gauge only when the registry actually has tenants, so
+        // SLO-free registries keep the exact single-tenant scheduler
+        let slo = self.slo_for(canonical);
+        metrics.set_slo_target_us(slo.target_us());
+        let threads = Arc::new(AtomicUsize::new(0));
+        let policy = QueuePolicy {
+            slo,
+            coordinator: (!self.config.slos.is_empty()).then(|| self.coordinator.clone()),
+            threads: threads.clone(),
+        };
+        let queue = BatchQueue::with_policy(
+            cell.clone(),
+            self.config.batch.clone(),
+            metrics.clone(),
+            policy,
+        );
         Ok(ModelHost {
             model: canonical.to_string(),
             cell,
@@ -679,6 +832,8 @@ impl ModelRegistry {
             plan_shape: Mutex::new(plan_shape),
             inflight: AtomicUsize::new(0),
             max_inflight: self.config.max_inflight,
+            slo,
+            threads,
         })
     }
 }

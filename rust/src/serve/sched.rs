@@ -1,0 +1,419 @@
+//! SLO-aware co-scheduling across hosted models (ROADMAP open item 2).
+//!
+//! DYNAMAP solves each CNN's per-layer algorithm mapping in isolation,
+//! but a serving host rarely runs one model: f-CNNx (PAPERS.md) showed
+//! that multi-CNN deployments need *joint* resource partitioning, and
+//! fpgaConvNet's partitioned toolflow re-solves each network under its
+//! slice of the device. This module is the CPU-overlay analogue:
+//!
+//! 1. **SLO table** — [`ModelSlo`] gives every hosted model a latency
+//!    target, an integer priority and an optional best-effort tier;
+//!    [`crate::serve::RegistryConfig::slos`] carries the table.
+//! 2. **Thread partitioner** — [`partition_threads`] splits the host's
+//!    `available_parallelism` across tenants proportionally to
+//!    `priority × measured demand` with a largest-remainder
+//!    apportionment. Invariants (property-tested in-module and in
+//!    `tests/sched.rs`): budgets sum to the available total (when it
+//!    covers one thread per tenant), every tenant gets ≥ 1 thread,
+//!    within one allocation a higher-priority tenant at equal demand
+//!    never receives fewer threads than a lower-priority one, and the
+//!    whole computation is pure — same inputs, same budgets, bit for
+//!    bit.
+//! 3. **Per-partition plan re-solve** — the registry re-runs the DSE
+//!    for each tenant under [`crate::cost::DeviceCalibration::scaled`]
+//!    `(total / budget)`, so the plan cache keys one artifact per
+//!    (model, partition) via the existing compiler fingerprint.
+//! 4. **Pressure coordination** — [`SchedCoordinator`] is a tiny
+//!    lock-free gauge between batch schedulers: a high-priority queue
+//!    whose oldest request has waited ≥ ¼ of its latency target raises
+//!    pressure; best-effort queues respond by *deferring* their next
+//!    flush (bounded, so bulk traffic is never starved outright) and
+//!    shrinking its fan-out to one worker thread. Deferral never drops
+//!    a request — a deferred batch keeps absorbing arrivals and always
+//!    flushes; every submitted request still gets exactly one typed
+//!    reply (`tests/sched.rs` proves the blast radius is zero).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Per-model service-level objective: what latency the tenant was
+/// promised and how hard the scheduler should fight for it.
+///
+/// The default SLO (no latency target, mid priority, not best-effort)
+/// reproduces pre-sched behavior exactly: no pressure is ever raised
+/// and no flush is ever deferred, so single-tenant deployments are
+/// untouched.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelSlo {
+    /// End-to-end latency target for this tenant (`None` = no SLO).
+    /// Attainment against it is tracked per model in
+    /// [`crate::serve::ModelMetrics`] and exported over the wire
+    /// `Stats` frame.
+    pub latency_target: Option<Duration>,
+    /// Relative weight in the thread partition (clamped to ≥ 1).
+    /// Doubling a tenant's priority roughly doubles its share.
+    pub priority: u32,
+    /// Best-effort tier: this tenant's flushes defer (bounded) and
+    /// shrink to one worker while any high-priority tenant is under
+    /// queue-delay pressure.
+    pub best_effort: bool,
+}
+
+impl Default for ModelSlo {
+    fn default() -> ModelSlo {
+        ModelSlo { latency_target: None, priority: 4, best_effort: false }
+    }
+}
+
+impl ModelSlo {
+    /// A high-priority interactive tenant with a latency target of
+    /// `ms` milliseconds (priority 8).
+    pub fn interactive_ms(ms: f64) -> ModelSlo {
+        ModelSlo {
+            latency_target: Some(Duration::from_secs_f64((ms.max(0.001)) / 1e3)),
+            priority: 8,
+            best_effort: false,
+        }
+    }
+
+    /// A bulk best-effort tenant: lowest priority, no latency target,
+    /// defers to pressured interactive tenants.
+    pub fn bulk() -> ModelSlo {
+        ModelSlo { latency_target: None, priority: 1, best_effort: true }
+    }
+
+    /// Builder-style: override the priority.
+    pub fn with_priority(mut self, priority: u32) -> ModelSlo {
+        self.priority = priority;
+        self
+    }
+
+    /// Builder-style: override the latency target (milliseconds).
+    pub fn with_target_ms(mut self, ms: f64) -> ModelSlo {
+        self.latency_target = Some(Duration::from_secs_f64(ms.max(0.001) / 1e3));
+        self
+    }
+
+    /// `true` for a tenant that both has a latency target and is not
+    /// best-effort — the only kind that raises pressure.
+    pub fn is_interactive(&self) -> bool {
+        self.latency_target.is_some() && !self.best_effort
+    }
+
+    /// The latency target in microseconds (`0` when unset) — the form
+    /// the metrics layer stores atomically.
+    pub fn target_us(&self) -> u64 {
+        self.latency_target.map(|d| d.as_micros() as u64).unwrap_or(0)
+    }
+}
+
+/// Per-model SLO table carried by `RegistryConfig` — keys are model
+/// names (zoo aliases are resolved at host time, like everywhere else
+/// in the registry).
+pub type SloTable = BTreeMap<String, ModelSlo>;
+
+/// One tenant's input to [`partition_threads`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tenant {
+    /// Model name (partition map key; also the deterministic
+    /// tie-breaker of last resort).
+    pub model: String,
+    /// SLO priority (clamped to ≥ 1).
+    pub priority: u32,
+    /// Measured demand — the registry feeds `qps + queue depth`,
+    /// clamped to ≥ 1 so an idle tenant still weighs its priority.
+    pub demand: f64,
+}
+
+/// Split `total` worker threads across `tenants` proportionally to
+/// `priority × demand`, largest-remainder style.
+///
+/// Guarantees (see module doc; property-tested under seed 99):
+/// * every tenant receives ≥ 1 thread, always;
+/// * the budgets sum to `max(total, tenants.len())` — i.e. exactly
+///   `total` whenever the host has at least one thread per tenant;
+/// * within one allocation, a tenant with strictly greater weight
+///   never receives fewer threads than a lighter one (ties broken by
+///   weight, then name, so the result is a pure function of the
+///   inputs);
+/// * no clocks, no RNG, no floats whose value depends on iteration
+///   order — the same inputs replay bit-for-bit on any host.
+pub fn partition_threads(total: usize, tenants: &[Tenant]) -> BTreeMap<String, usize> {
+    let mut budgets = BTreeMap::new();
+    if tenants.is_empty() {
+        return budgets;
+    }
+    let n = tenants.len();
+    let weight =
+        |t: &Tenant| (t.priority.max(1) as f64) * t.demand.max(1e-6);
+    let w_sum: f64 = tenants.iter().map(weight).sum();
+    // one reserved thread each keeps every queue live even when the
+    // host is smaller than the tenant count (budgets then exceed
+    // `total`, which the flush-time min with `worker_count` absorbs)
+    let spare = total.saturating_sub(n);
+    // integer shares of the spare pool plus the fractional remainder
+    // each tenant is owed
+    let mut shares: Vec<(usize, usize, f64)> = tenants
+        .iter()
+        .enumerate()
+        .map(|(i, t)| {
+            let exact = spare as f64 * weight(t) / w_sum;
+            let base = exact.floor() as usize;
+            (i, base, exact - base as f64)
+        })
+        .collect();
+    let assigned: usize = shares.iter().map(|(_, b, _)| *b).sum();
+    let mut leftover = spare.saturating_sub(assigned);
+    // hand the leftover threads to the largest remainders; break ties
+    // by weight (heavier first), then by name (lexicographic), so the
+    // allocation is deterministic and never prefers a lighter tenant
+    shares.sort_by(|a, b| {
+        b.2.partial_cmp(&a.2)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| {
+                weight(&tenants[b.0])
+                    .partial_cmp(&weight(&tenants[a.0]))
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .then_with(|| tenants[a.0].model.cmp(&tenants[b.0].model))
+    });
+    for (i, base, _) in shares {
+        let bonus = if leftover > 0 {
+            leftover -= 1;
+            1
+        } else {
+            0
+        };
+        budgets.insert(tenants[i].model.clone(), 1 + base + bonus);
+    }
+    budgets
+}
+
+/// Lock-free pressure gauge shared by every [`crate::serve::BatchQueue`]
+/// scheduler thread of one registry.
+///
+/// High-priority schedulers call [`SchedCoordinator::raise`] when their
+/// oldest queued request has waited long enough to threaten the SLO;
+/// best-effort schedulers poll [`SchedCoordinator::pressured`] before
+/// flushing. State is a single microsecond deadline measured against a
+/// shared epoch `Instant`, advanced with `fetch_max`, so concurrent
+/// raises compose and the gauge decays on its own — there is no
+/// "lower" call to forget.
+#[derive(Debug)]
+pub struct SchedCoordinator {
+    epoch: Instant,
+    pressure_until_us: AtomicU64,
+    raises: AtomicU64,
+}
+
+impl Default for SchedCoordinator {
+    fn default() -> SchedCoordinator {
+        SchedCoordinator::new()
+    }
+}
+
+impl SchedCoordinator {
+    /// A fresh gauge with no pressure.
+    pub fn new() -> SchedCoordinator {
+        SchedCoordinator {
+            epoch: Instant::now(),
+            pressure_until_us: AtomicU64::new(0),
+            raises: AtomicU64::new(0),
+        }
+    }
+
+    fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Signal SLO pressure for the next `hold` — best-effort flushes
+    /// defer until it expires (or their deferral bound trips).
+    pub fn raise(&self, hold: Duration) {
+        let until = self.now_us().saturating_add(hold.as_micros() as u64);
+        self.pressure_until_us.fetch_max(until, Ordering::AcqRel);
+        self.raises.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `true` while a raised pressure window is still open.
+    pub fn pressured(&self) -> bool {
+        self.now_us() < self.pressure_until_us.load(Ordering::Acquire)
+    }
+
+    /// How many times pressure was raised (tests assert the preemption
+    /// path actually ran).
+    pub fn raises(&self) -> u64 {
+        self.raises.load(Ordering::Relaxed)
+    }
+}
+
+/// Everything a [`crate::serve::BatchQueue`] scheduler needs to behave
+/// as one tenant among many: its SLO, the shared pressure gauge, and
+/// its live thread budget (written by the registry's repartitioner,
+/// read at every flush; `0` = uncapped).
+#[derive(Debug, Clone)]
+pub struct QueuePolicy {
+    /// This tenant's SLO.
+    pub slo: ModelSlo,
+    /// Shared pressure gauge (`None` for single-tenant registries —
+    /// the scheduler then never defers and never raises).
+    pub coordinator: Option<Arc<SchedCoordinator>>,
+    /// Live thread budget for this tenant's flush fan-out (`0` =
+    /// uncapped). An `Arc` so the registry repartitions without
+    /// touching the scheduler thread.
+    pub threads: Arc<AtomicUsize>,
+}
+
+impl Default for QueuePolicy {
+    fn default() -> QueuePolicy {
+        QueuePolicy {
+            slo: ModelSlo::default(),
+            coordinator: None,
+            threads: Arc::new(AtomicUsize::new(0)),
+        }
+    }
+}
+
+impl QueuePolicy {
+    /// The flush fan-out cap this tenant should use right now: its
+    /// partition budget, squeezed to a single worker while it is
+    /// best-effort under pressure (`0` = uncapped).
+    pub fn flush_threads(&self) -> usize {
+        let budget = self.threads.load(Ordering::Relaxed);
+        if self.slo.best_effort
+            && self.coordinator.as_ref().is_some_and(|c| c.pressured())
+        {
+            return 1;
+        }
+        budget
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tenants(specs: &[(&str, u32, f64)]) -> Vec<Tenant> {
+        specs
+            .iter()
+            .map(|(m, p, d)| Tenant { model: m.to_string(), priority: *p, demand: *d })
+            .collect()
+    }
+
+    #[test]
+    fn partition_sums_to_total_and_floors_at_one() {
+        let t = tenants(&[("a", 8, 100.0), ("b", 1, 1.0), ("c", 4, 10.0)]);
+        for total in 3..=64 {
+            let b = partition_threads(total, &t);
+            assert_eq!(b.values().sum::<usize>(), total, "total={total}");
+            assert!(b.values().all(|&v| v >= 1), "total={total}");
+        }
+        // host smaller than tenant count: everyone still gets one
+        let b = partition_threads(2, &t);
+        assert_eq!(b.values().sum::<usize>(), 3);
+        assert!(b.values().all(|&v| v == 1));
+        assert!(partition_threads(8, &[]).is_empty());
+    }
+
+    #[test]
+    fn partition_is_monotone_in_priority() {
+        // equal demand: the higher-priority tenant never gets fewer
+        // threads, across a seeded sweep of shapes
+        let mut rng = Rng::new(99);
+        for _ in 0..500 {
+            let demand = 1.0 + rng.f64() * 100.0;
+            let lo = 1 + (rng.next_u64() % 8) as u32;
+            let hi = lo + 1 + (rng.next_u64() % 8) as u32;
+            let total = 2 + (rng.next_u64() % 62) as usize;
+            let t = tenants(&[("high", hi, demand), ("low", lo, demand)]);
+            let b = partition_threads(total, &t);
+            assert!(
+                b["high"] >= b["low"],
+                "total={total} hi={hi} lo={lo} demand={demand}: {b:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn partition_replays_bit_for_bit() {
+        let mut rng = Rng::new(99);
+        for _ in 0..200 {
+            let n = 1 + (rng.next_u64() % 6) as usize;
+            let t: Vec<Tenant> = (0..n)
+                .map(|i| Tenant {
+                    model: format!("m{i}"),
+                    priority: 1 + (rng.next_u64() % 16) as u32,
+                    demand: rng.f64() * 1000.0,
+                })
+                .collect();
+            let total = n + (rng.next_u64() % 64) as usize;
+            assert_eq!(partition_threads(total, &t), partition_threads(total, &t));
+        }
+    }
+
+    #[test]
+    fn partition_weighs_demand() {
+        // equal priority, 9:1 demand split over 10 spare threads:
+        // the hot tenant owns the lion's share
+        let t = tenants(&[("hot", 4, 90.0), ("cold", 4, 10.0)]);
+        let b = partition_threads(12, &t);
+        assert_eq!(b.values().sum::<usize>(), 12);
+        assert!(b["hot"] >= 9, "{b:?}");
+        assert!(b["cold"] >= 1, "{b:?}");
+    }
+
+    #[test]
+    fn coordinator_pressure_raises_and_decays() {
+        let c = SchedCoordinator::new();
+        assert!(!c.pressured());
+        assert_eq!(c.raises(), 0);
+        c.raise(Duration::from_millis(50));
+        assert!(c.pressured());
+        assert_eq!(c.raises(), 1);
+        // a shorter concurrent raise never shrinks the window
+        c.raise(Duration::from_micros(1));
+        assert!(c.pressured());
+        std::thread::sleep(Duration::from_millis(60));
+        assert!(!c.pressured(), "pressure must decay on its own");
+    }
+
+    #[test]
+    fn policy_squeezes_best_effort_under_pressure() {
+        let coord = Arc::new(SchedCoordinator::new());
+        let be = QueuePolicy {
+            slo: ModelSlo::bulk(),
+            coordinator: Some(coord.clone()),
+            threads: Arc::new(AtomicUsize::new(6)),
+        };
+        let hi = QueuePolicy {
+            slo: ModelSlo::interactive_ms(25.0),
+            coordinator: Some(coord.clone()),
+            threads: Arc::new(AtomicUsize::new(2)),
+        };
+        assert_eq!(be.flush_threads(), 6);
+        assert_eq!(hi.flush_threads(), 2);
+        coord.raise(Duration::from_secs(5));
+        assert_eq!(be.flush_threads(), 1, "bulk squeezes to one worker");
+        assert_eq!(hi.flush_threads(), 2, "interactive keeps its budget");
+        // default policy is inert regardless of pressure
+        assert_eq!(QueuePolicy::default().flush_threads(), 0);
+    }
+
+    #[test]
+    fn slo_constructors() {
+        let i = ModelSlo::interactive_ms(25.0);
+        assert!(i.is_interactive());
+        assert_eq!(i.target_us(), 25_000);
+        assert_eq!(i.priority, 8);
+        let b = ModelSlo::bulk();
+        assert!(b.best_effort && !b.is_interactive());
+        assert_eq!(b.target_us(), 0);
+        let d = ModelSlo::default();
+        assert!(!d.is_interactive() && !d.best_effort);
+        let c = ModelSlo::bulk().with_priority(3).with_target_ms(10.0);
+        assert_eq!(c.priority, 3);
+        assert_eq!(c.target_us(), 10_000);
+    }
+}

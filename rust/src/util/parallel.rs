@@ -40,7 +40,26 @@ where
     R: Send,
     F: Fn(usize, &T) -> R + Sync,
 {
-    let workers = worker_count(items.len());
+    parallel_map_capped(items, 0, f)
+}
+
+/// [`parallel_map`] under an additional worker cap: at most `cap`
+/// threads carry the fan-out (`0` = uncapped, identical to
+/// `parallel_map`). This is how a multi-tenant batch flush honors its
+/// model's thread-partition budget ([`crate::serve::sched`]) — the
+/// global `DYNAMAP_THREADS` / `available_parallelism` ceiling still
+/// applies on top, so a stale over-sized budget can never oversubscribe
+/// the host.
+pub fn parallel_map_capped<T, R, F>(items: &[T], cap: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let mut workers = worker_count(items.len());
+    if cap > 0 {
+        workers = workers.min(cap);
+    }
     if workers <= 1 {
         return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
     }

@@ -76,6 +76,7 @@ fn registry(
         },
         max_inflight,
         profile: false,
+        slos: Default::default(),
     }))
 }
 

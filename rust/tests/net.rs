@@ -46,6 +46,7 @@ fn registry(
         },
         max_inflight,
         profile: false,
+        slos: Default::default(),
     }))
 }
 

@@ -52,6 +52,7 @@ fn registry(root: &PathBuf, max_batch: usize, max_wait_ms: u64) -> Arc<ModelRegi
         },
         max_inflight: 0,
         profile: false,
+        slos: Default::default(),
     }))
 }
 

@@ -1,0 +1,439 @@
+//! Multi-tenant co-scheduling integration tests (ROADMAP open item 2):
+//! the thread-budget partitioner's invariants under a seeded sweep, the
+//! TCP soak (an interactive tenant keeps its SLO while a saturating
+//! bulk tenant is shed, replies bitwise-equal to `Session::infer`), the
+//! pressure → deferral chain end to end, per-partition plan re-solves
+//! through the fingerprint-keyed plan cache, and the preemption blast
+//! radius: exactly one reply per submitted request across concurrent
+//! hot swaps and pressure raises. Everything runs on synthesized
+//! artifacts and loopback ephemeral ports — no PJRT, no fixed ports.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use dynamap::api::{Backend, Compiler, Device, Session};
+use dynamap::cost::DeviceCalibration;
+use dynamap::net::{Client, NetServer};
+use dynamap::runtime::TensorBuf;
+use dynamap::serve::loadgen::open_loop_input;
+use dynamap::serve::{
+    open_loop_mixed, partition_threads, tenant_seed, BatchConfig, MixedConfig, ModelRegistry,
+    ModelSlo, RegistryConfig, SloTable, Tenant, TenantLoad,
+};
+use dynamap::util::parallel::{parallel_run, worker_count};
+use dynamap::util::rng::Rng;
+
+fn temp_root(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("dynamap_sched_{}_{}", tag, std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+fn slo_table(entries: &[(&str, ModelSlo)]) -> SloTable {
+    entries.iter().map(|(m, s)| (m.to_string(), *s)).collect()
+}
+
+/// Registry over a temp root: small-edge device (fast DSE), shared plan
+/// cache, synthetic artifacts, per-model SLOs + batching + admission.
+fn registry(
+    root: &PathBuf,
+    slos: SloTable,
+    max_batch: usize,
+    max_wait_ms: u64,
+    max_inflight: usize,
+) -> Arc<ModelRegistry> {
+    Arc::new(ModelRegistry::new(RegistryConfig {
+        artifacts_root: root.join("zoo"),
+        plan_cache: Some(root.join("plans")),
+        capacity: 0,
+        synthesize_missing: true,
+        seed: 0xA11CE,
+        compiler: Compiler::new().device(Device::small_edge()),
+        batch: BatchConfig { max_batch, max_wait: Duration::from_millis(max_wait_ms) },
+        max_inflight,
+        profile: false,
+        slos,
+    }))
+}
+
+/// A sequential reference session over the same synthesized artifacts
+/// and plan cache as the registry (same plan, same weights — replies
+/// must be bitwise-equal).
+fn reference_session(root: &PathBuf, model: &str) -> Session {
+    let dir = root.join("zoo").join(model);
+    Session::builder(dir.to_str().unwrap().to_string())
+        .backend(Backend::Native)
+        .compiler(Compiler::new().device(Device::small_edge()))
+        .plan_cache(root.join("plans"))
+        .build()
+        .unwrap()
+}
+
+#[test]
+fn partitioner_invariants_hold_across_a_seeded_sweep() {
+    // shape invariants: ≥ 1 thread per tenant, budgets sum to
+    // max(total, tenants), bit-for-bit replay — over 300 seeded shapes
+    let mut rng = Rng::new(99);
+    for _ in 0..300 {
+        let n = 1 + (rng.next_u64() % 8) as usize;
+        let tenants: Vec<Tenant> = (0..n)
+            .map(|i| Tenant {
+                model: format!("m{i}"),
+                priority: 1 + (rng.next_u64() % 16) as u32,
+                demand: rng.f64() * 500.0,
+            })
+            .collect();
+        let total = (rng.next_u64() % 96) as usize;
+        let budgets = partition_threads(total, &tenants);
+        assert_eq!(budgets.len(), n);
+        assert!(budgets.values().all(|&b| b >= 1), "{budgets:?}");
+        assert_eq!(
+            budgets.values().sum::<usize>(),
+            total.max(n),
+            "total={total} n={n}: {budgets:?}"
+        );
+        assert_eq!(budgets, partition_threads(total, &tenants), "must replay bit-for-bit");
+    }
+    // priority monotonicity at equal demand: the heavier tenant never
+    // receives fewer threads
+    let mut rng = Rng::new(99);
+    for _ in 0..300 {
+        let demand = 1.0 + rng.f64() * 100.0;
+        let lo = 1 + (rng.next_u64() % 8) as u32;
+        let hi = lo + 1 + (rng.next_u64() % 8) as u32;
+        let total = 2 + (rng.next_u64() % 62) as usize;
+        let tenants = vec![
+            Tenant { model: "high".into(), priority: hi, demand },
+            Tenant { model: "low".into(), priority: lo, demand },
+        ];
+        let budgets = partition_threads(total, &tenants);
+        assert!(
+            budgets["high"] >= budgets["low"],
+            "total={total} hi={hi} lo={lo} demand={demand}: {budgets:?}"
+        );
+    }
+}
+
+#[test]
+fn tcp_soak_high_priority_keeps_slo_while_bulk_saturates() {
+    let root = temp_root("soak");
+    let slos = slo_table(&[
+        ("mini", ModelSlo::interactive_ms(400.0)),
+        ("mini-vgg", ModelSlo::bulk()),
+    ]);
+    // admission budget 16 per host: the bulk tenant's 4000 qps burst
+    // must shed against it instead of crowding the interactive tenant
+    let reg = registry(&root, slos, 4, 2, 16);
+    let hi = reg.host("mini").unwrap();
+    let bulk = reg.host("mini-vgg").unwrap();
+    assert!(hi.slo().is_interactive());
+    assert!(bulk.slo().best_effort);
+
+    // hosting with a non-empty SLO table partitioned the thread pool
+    let budgets = reg.repartition();
+    assert!(budgets.values().all(|&b| b >= 1), "{budgets:?}");
+    assert_eq!(budgets.values().sum::<usize>(), worker_count(usize::MAX).max(2));
+    assert!(hi.thread_budget() >= 1 && bulk.thread_budget() >= 1);
+
+    let mut server = NetServer::bind(reg.clone(), "127.0.0.1:0").unwrap();
+    let client = Client::connect(server.local_addr().to_string()).unwrap();
+    let cfg = MixedConfig {
+        tenants: vec![
+            TenantLoad {
+                model: "mini".into(),
+                rate_qps: 250.0,
+                requests: 80,
+                slo: Some(Duration::from_millis(400)),
+                deadline: None,
+            },
+            TenantLoad {
+                model: "mini-vgg".into(),
+                rate_qps: 4000.0,
+                requests: 240,
+                slo: None,
+                deadline: None,
+            },
+        ],
+        seed: 99,
+        workers: 64,
+    };
+    let report = open_loop_mixed(&client, &cfg).unwrap();
+
+    // every request of every tenant accounted, all sheds typed
+    for t in &report.tenants {
+        let r = &t.report;
+        assert_eq!(
+            r.ok + r.shed + r.deadline_miss + r.errors,
+            r.sent,
+            "{}: every request accounted",
+            t.model
+        );
+        assert_eq!(r.errors, 0, "{}: sheds must be typed, not generic", t.model);
+    }
+    let hi_rep = &report.tenants[0];
+    let bulk_rep = &report.tenants[1];
+    // interactive tenant: tail inside its (CI-generous) target, and the
+    // bulk storm never starved it outright
+    assert!(
+        hi_rep.report.ok * 2 >= hi_rep.report.sent,
+        "interactive tenant starved: {}",
+        hi_rep.report.summary()
+    );
+    let p99 = hi_rep.report.latency.percentiles(&[99.0])[0];
+    assert!(p99 <= 400_000.0, "high-priority p99 {p99:.0}µs blew the 400ms SLO");
+    // bulk tenant: overload observed as typed shedding
+    assert!(bulk_rep.report.shed >= 1, "bulk must shed: {}", bulk_rep.report.summary());
+    assert!(
+        report.summary().contains("slo attainment: high="),
+        "{}",
+        report.summary()
+    );
+
+    // SLO attainment threads into per-model metrics, the stats table
+    // and the wire Stats frame
+    let snap = hi.metrics().snapshot();
+    assert_eq!(snap.slo_target_us, 400_000);
+    assert!(snap.slo_attainment_pct().is_some());
+    let table = reg.metrics().report();
+    assert!(table.contains("slo ms") && table.contains("miss %"), "{table}");
+    let stats_json = client.server_stats().unwrap();
+    assert!(stats_json.contains("slo_target_us"), "stats frame must carry SLO fields");
+
+    // replies are bitwise-equal to sequential Session::infer over the
+    // same plans, for both tenants' exact request streams
+    let hi_dims = hi.input_dims();
+    let mut hi_ref = reference_session(&root, "mini-inception");
+    for i in 0..4 {
+        let input = open_loop_input(tenant_seed(99, 0), i, hi_dims);
+        let expected = hi_ref.infer(&input).unwrap().0;
+        let (got, _) = client.infer("mini", &input).unwrap();
+        assert_eq!(got, expected, "hi request {i}: reply != sequential Session::infer");
+    }
+    let bulk_dims = bulk.input_dims();
+    let mut bulk_ref = reference_session(&root, "mini-vgg");
+    for i in 0..4 {
+        let input = open_loop_input(tenant_seed(99, 1), i, bulk_dims);
+        let expected = bulk_ref.infer(&input).unwrap().0;
+        let (got, _) = client.infer("mini-vgg", &input).unwrap();
+        assert_eq!(got, expected, "bulk request {i}: reply != sequential Session::infer");
+    }
+
+    client.shutdown_server().unwrap();
+    server.shutdown();
+    reg.assert_quiesced(); // sheds and deferrals must not leak permits
+    reg.shutdown();
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn late_interactive_flush_raises_pressure() {
+    let root = temp_root("raise");
+    // a 4 ms target under a 200 ms batch window: the one queued request
+    // has waited ≥ ¼ of the target by flush time, so the scheduler must
+    // raise pressure, and the hold (max(target/2, max_wait) = 200 ms)
+    // outlives the flush by a wide margin
+    let slos = slo_table(&[("mini", ModelSlo::interactive_ms(4.0))]);
+    let reg = registry(&root, slos, 8, 200, 0);
+    let hi = reg.host("mini").unwrap();
+    let dims = hi.input_dims();
+
+    assert_eq!(reg.coordinator().raises(), 0);
+    assert!(!reg.coordinator().pressured());
+    reg.infer("mini", &open_loop_input(99, 0, dims)).unwrap();
+    assert!(
+        reg.coordinator().raises() >= 1,
+        "a flush whose oldest request threatened the SLO must raise pressure"
+    );
+    assert!(reg.coordinator().pressured(), "the pressure hold outlives the flush");
+
+    reg.assert_quiesced();
+    reg.shutdown();
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn bulk_flush_defers_bounded_under_pressure_and_never_drops() {
+    let root = temp_root("defer");
+    let slos = slo_table(&[
+        ("mini", ModelSlo::interactive_ms(50.0)),
+        ("mini-vgg", ModelSlo::bulk()),
+    ]);
+    // max_wait 10 ms → deferral bound (8 × max_wait) = 80 ms: a long
+    // pressure window cannot park bulk longer than that
+    let reg = registry(&root, slos, 8, 10, 0);
+    let bulk = reg.host("mini-vgg").unwrap();
+    let dims = bulk.input_dims();
+    let input = open_loop_input(7, 0, dims);
+    let expected = reference_session(&root, "mini-vgg").infer(&input).unwrap().0;
+
+    // pressure held far past the deferral bound: the bulk flush must
+    // park (counted once) and then flush anyway — bounded deferral,
+    // never starvation
+    reg.coordinator().raise(Duration::from_secs(5));
+    let t0 = Instant::now();
+    let (out, _) = reg.infer("mini-vgg", &input).unwrap();
+    let waited = t0.elapsed();
+    assert_eq!(out, expected, "deferred reply != sequential Session::infer");
+    assert!(
+        waited >= Duration::from_millis(70),
+        "the flush should have parked near the deferral bound, waited {waited:?}"
+    );
+    assert!(
+        waited < Duration::from_secs(4),
+        "deferral must be bounded well below the pressure window, waited {waited:?}"
+    );
+    let snap = bulk.metrics().snapshot();
+    assert!(snap.deferrals >= 1, "the deferral must be accounted");
+    assert_eq!(snap.requests, 1, "the deferred request was served, not dropped");
+
+    reg.assert_quiesced();
+    reg.shutdown();
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn partition_replans_key_the_cache_and_stay_bitwise_correct() {
+    let root = temp_root("replan");
+    let slos = slo_table(&[
+        ("mini", ModelSlo::interactive_ms(100.0)),
+        ("mini-vgg", ModelSlo::bulk()),
+    ]);
+    let reg = registry(&root, slos, 4, 2, 0);
+    let hi = reg.host("mini").unwrap();
+    let _bulk = reg.host("mini-vgg").unwrap();
+    let total = worker_count(usize::MAX);
+    if total < 2 {
+        // a single-thread host: every tenant owns the full pool, so no
+        // re-solve is needed (or possible)
+        assert_eq!(reg.resolve_partition_plans().unwrap(), 0);
+        reg.shutdown();
+        std::fs::remove_dir_all(&root).ok();
+        return;
+    }
+    let budgets = reg.repartition();
+    let epoch_before = hi.epoch();
+    // two tenants on ≥ 2 threads: both budgets are strict partitions,
+    // so both plans re-solve and publish through the hot-swap path
+    assert_eq!(reg.resolve_partition_plans().unwrap(), 2, "{budgets:?}");
+    assert!(hi.epoch() > epoch_before, "re-solve must publish via swap_state");
+
+    // the re-solved plan equals what a sequential session under the
+    // same scaled calibration compiles: same fingerprint → same cached
+    // plan → bitwise-identical replies
+    let dims = hi.input_dims();
+    let factor = total as f64 / hi.thread_budget() as f64;
+    let scaled_compiler = Compiler::new()
+        .device(Device::small_edge())
+        .calibration(DeviceCalibration::identity().scaled(factor));
+    let dir = root.join("zoo").join("mini-inception");
+    let mut reference = Session::builder(dir.to_str().unwrap().to_string())
+        .backend(Backend::Native)
+        .compiler(scaled_compiler)
+        .plan_cache(root.join("plans"))
+        .build()
+        .unwrap();
+    for i in 0..4 {
+        let input = open_loop_input(99, i, dims);
+        let expected = reference.infer(&input).unwrap().0;
+        let (got, _) = reg.infer("mini", &input).unwrap();
+        assert_eq!(got, expected, "request {i}: partitioned plan reply != reference");
+    }
+    // idempotent: a repeat resolve re-publishes from the cache without
+    // failing (the partition keys already exist)
+    assert_eq!(reg.resolve_partition_plans().unwrap(), 2);
+
+    reg.assert_quiesced();
+    reg.shutdown();
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn preemption_blast_radius_is_zero_across_swaps_and_pressure() {
+    let root = temp_root("blast");
+    let slos = slo_table(&[
+        ("mini", ModelSlo::interactive_ms(100.0)),
+        ("mini-vgg", ModelSlo::bulk()),
+    ]);
+    let reg = registry(&root, slos, 4, 2, 0);
+    let hi = reg.host("mini").unwrap();
+    let bulk = reg.host("mini-vgg").unwrap();
+    let hi_dims = hi.input_dims();
+    let bulk_dims = bulk.input_dims();
+
+    // sequential expectations over the same plans, computed up front
+    let mut hi_ref = reference_session(&root, "mini-inception");
+    let mut bulk_ref = reference_session(&root, "mini-vgg");
+    let hi_expected: Vec<TensorBuf> = (0..12)
+        .map(|i| hi_ref.infer(&open_loop_input(99, i, hi_dims)).unwrap().0)
+        .collect();
+    let bulk_expected: Vec<TensorBuf> = (0..12)
+        .map(|i| bulk_ref.infer(&open_loop_input(7, i, bulk_dims)).unwrap().0)
+        .collect();
+
+    let epoch_before = hi.epoch();
+    let results = std::thread::scope(|s| {
+        // chaos thread: hot-swap both tenants (same compiler + plan
+        // cache, so the very same plan) and raise pressure while the
+        // submitters are mid-flight — deferral must park batches whole,
+        // never mix plan epochs or drop a reply
+        let chaos = s.spawn(|| {
+            for _ in 0..4 {
+                for model in ["mini-inception", "mini-vgg"] {
+                    let dir = root.join("zoo").join(model);
+                    let session = Session::builder(dir.to_str().unwrap().to_string())
+                        .backend(Backend::Native)
+                        .compiler(Compiler::new().device(Device::small_edge()))
+                        .plan_cache(root.join("plans"))
+                        .build()
+                        .unwrap();
+                    let plan_shape = session.plan().map(|a| (a.plan.p1, a.plan.p2));
+                    let state = session.native_state().expect("native state");
+                    reg.swap_state(model, state, plan_shape).unwrap();
+                }
+                reg.coordinator().raise(Duration::from_millis(2));
+                std::thread::sleep(Duration::from_millis(3));
+            }
+        });
+        let results = parallel_run(8, |t| {
+            let mut replies = Vec::new();
+            for i in 0..12 {
+                if t % 2 == 0 {
+                    replies.push(("hi", i, reg.infer("mini", &open_loop_input(99, i, hi_dims))));
+                } else {
+                    replies.push((
+                        "bulk",
+                        i,
+                        reg.infer("mini-vgg", &open_loop_input(7, i, bulk_dims)),
+                    ));
+                }
+            }
+            replies
+        });
+        chaos.join().unwrap();
+        results
+    });
+
+    // exactly one reply per submitted request, every one bitwise-equal
+    // to the sequential reference — across 8 hot-swaps per model and
+    // repeated pressure raises
+    let mut replies = 0;
+    for thread_replies in &results {
+        for (kind, i, r) in thread_replies {
+            let (out, _) =
+                r.as_ref().unwrap_or_else(|e| panic!("{kind} request {i} failed: {e}"));
+            let expected =
+                if *kind == "hi" { &hi_expected[*i] } else { &bulk_expected[*i] };
+            assert_eq!(out, expected, "{kind} request {i}: reply corrupted across swaps");
+            replies += 1;
+        }
+    }
+    assert_eq!(replies, 8 * 12, "exactly one reply per submit");
+    assert!(hi.epoch() >= epoch_before + 4, "the swaps actually ran during the soak");
+    assert!(bulk.metrics().snapshot().requests + hi.metrics().snapshot().requests >= 96);
+
+    reg.assert_quiesced();
+    reg.shutdown();
+    std::fs::remove_dir_all(&root).ok();
+}

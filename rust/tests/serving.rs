@@ -36,6 +36,7 @@ fn registry(root: &PathBuf, capacity: usize, max_batch: usize, max_wait_ms: u64)
         },
         max_inflight: 0,
         profile: false,
+        slos: Default::default(),
     })
 }
 

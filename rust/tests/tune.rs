@@ -40,6 +40,7 @@ fn registry(root: &PathBuf, skew: DeviceCalibration, profile: bool) -> ModelRegi
         },
         max_inflight: 0,
         profile,
+        slos: Default::default(),
     })
 }
 
